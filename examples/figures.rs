@@ -1,0 +1,14 @@
+//! Regenerate every figure of the paper (2a–5b) as terminal plots.
+//!
+//! ```bash
+//! cargo run --release --example figures                 # paper-sized
+//! GEOMAP_FAST=1 cargo run --release --example figures   # CI-sized
+//! ```
+
+#[path = "figures_impl.rs"]
+mod figures_impl;
+
+fn main() -> anyhow::Result<()> {
+    let fast = std::env::var("GEOMAP_FAST").as_deref() == Ok("1");
+    figures_impl::run(42, fast)
+}

@@ -1,0 +1,147 @@
+//! Shared figures driver: regenerates every figure of the paper's
+//! evaluation (§6 + supplement §C) and prints them as terminal plots.
+//!
+//! Used by both `examples/figures.rs` and `geomap figures` so the two
+//! entry points cannot drift apart.
+//!
+//! | Paper artifact | Here |
+//! |---|---|
+//! | Fig 2a — synthetic discard histograms  | `== fig 2a ==` |
+//! | Fig 2b — synthetic recovery accuracy   | `== fig 2b ==` |
+//! | Fig 3a — MovieLens discard histograms  | `== fig 3a ==` |
+//! | Fig 3b — MovieLens recovery accuracy   | `== fig 3b ==` |
+//! | Fig 4a/4b — mean discard ± std         | `== fig 4 ==`  |
+//! | Fig 5a/5b — accuracy vs sparsity sweep | `== fig 5 ==`  |
+
+use anyhow::Result;
+use geomap::configx::SchemaConfig;
+use geomap::data::{gaussian_factors, MovieLensSynth};
+use geomap::evalx::{
+    accuracy_sparsity_sweep, render_bars, render_histogram, render_table,
+    Comparison, MethodResult,
+};
+use geomap::linalg::Matrix;
+use geomap::mf::AlsTrainer;
+use geomap::rng::Rng;
+
+/// Histogram bins over [0, 100] % discarded.
+const BINS: usize = 10;
+
+fn histograms(tag: &str, results: &[MethodResult]) {
+    println!("== fig {tag} — % items discarded per user ==");
+    for r in results {
+        print!(
+            "{}",
+            render_histogram(&format!("[{}]", r.label), &r.report.discard_histogram(BINS), 40)
+        );
+    }
+}
+
+fn accuracy_bars(tag: &str, results: &[MethodResult]) {
+    println!("== fig {tag} — recovery accuracy ==");
+    let rows: Vec<(String, f64, Option<f64>)> = results
+        .iter()
+        .map(|r| (r.label.clone(), r.report.mean_accuracy(), None))
+        .collect();
+    print!("{}", render_bars("", &rows, 40));
+    println!();
+}
+
+/// Run every figure; `fast` shrinks the workloads (CI-sized).
+pub fn run(seed: u64, fast: bool) -> Result<()> {
+    let mut rng = Rng::seeded(seed);
+
+    // ---------------- synthetic (§6.1, figs 2a/2b) -------------------
+    let (n_users, n_items, k) =
+        if fast { (96, 768, 16) } else { (512, 4096, 32) };
+    let users = gaussian_factors(&mut rng, n_users, k);
+    let items = gaussian_factors(&mut rng, n_items, k);
+    // operating points (EXPERIMENTS.md §Perf): the relative threshold is
+    // chosen per dataset so discard lands in the paper's ~70-80 % band.
+    let cmp_synth = Comparison { threshold: 1.5, seed, ..Default::default() };
+    let cmp = Comparison { seed, ..Default::default() };
+    let synth = cmp_synth.run(&users, &items)?;
+    histograms("2a", &synth);
+    accuracy_bars("2b", &synth);
+
+    // ---------------- MovieLens (§6.2, figs 3a/3b) -------------------
+    let ml = if fast { MovieLensSynth::small() } else { MovieLensSynth::default() };
+    let ratings = ml.generate(&mut rng);
+    let model = AlsTrainer { k: 16, ..Default::default() }
+        .train(&ratings, if fast { 4 } else { 8 }, seed);
+    println!(
+        "movielens-like: {} ratings, ALS k=16, train RMSE {:.3}\n",
+        ratings.len(),
+        model.rmse(&ratings)
+    );
+    let (mu, mi): (Matrix, Matrix) = (model.user_factors, model.item_factors);
+    // evaluate on a user sample to keep ground-truth brute force tractable
+    let sample = if fast { 64 } else { 256 };
+    let mu = mu.slice_rows(0, sample.min(mu.rows()));
+    let movielens = cmp.run(&mu, &mi)?;
+    histograms("3a", &movielens);
+    accuracy_bars("3b", &movielens);
+
+    // ---------------- fig 4: mean discard ± std ----------------------
+    println!("== fig 4 — mean % discarded across users (± std) ==");
+    for (name, results) in [("synthetic", &synth), ("movielens", &movielens)] {
+        let rows: Vec<(String, f64, Option<f64>)> = results
+            .iter()
+            .map(|r| {
+                (
+                    r.label.clone(),
+                    r.report.mean_discarded(),
+                    Some(r.report.std_discarded()),
+                )
+            })
+            .collect();
+        print!("{}", render_bars(&format!("[{name}]"), &rows, 40));
+    }
+    println!();
+
+    // ---------------- fig 5: accuracy vs sparsity --------------------
+    println!("== fig 5 — recovery accuracy vs achieved sparsity (ours) ==");
+    let thresholds = [0.0f32, 0.5, 0.8, 1.0, 1.2, 1.4, 1.6, 1.8];
+    for (name, u, v) in [
+        ("5a synthetic", &users, &items),
+        ("5b movielens", &mu, &mi),
+    ] {
+        let pts = accuracy_sparsity_sweep(
+            SchemaConfig::TernaryParseTree,
+            u,
+            v,
+            10,
+            &thresholds,
+        )?;
+        let rows: Vec<Vec<String>> = pts
+            .iter()
+            .map(|p| {
+                vec![
+                    format!("{:.2}", p.threshold),
+                    format!("{:.1}", p.mean_discarded * 100.0),
+                    format!("{:.3}", p.mean_accuracy),
+                ]
+            })
+            .collect();
+        println!("[{name}]");
+        print!(
+            "{}",
+            render_table(&["threshold", "discard %", "accuracy"], &rows)
+        );
+    }
+
+    // ---------------- summary table (headline claims) -----------------
+    println!("\n== §6 summary ==");
+    for (name, results) in [("synthetic", &synth), ("movielens", &movielens)] {
+        let rows: Vec<Vec<String>> = results.iter().map(|r| r.row()).collect();
+        println!("[{name}]");
+        print!(
+            "{}",
+            render_table(
+                &["method", "discard %", "± std", "accuracy", "speed-up"],
+                &rows
+            )
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,58 @@
+//! Quickstart: the paper's pipeline in ~40 lines.
+//!
+//! 1. draw factors on the unit sphere,
+//! 2. build the sparse map φ (ternary tessellation + parse-tree
+//!    permutation),
+//! 3. index φ(items) with an inverted index,
+//! 4. retrieve top-κ for a user via prune + exact rescoring, and
+//! 5. compare against brute force.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use geomap::prelude::*;
+
+fn main() -> anyhow::Result<()> {
+    let k = 32;
+    let n_items = 10_000;
+    let kappa = 10;
+
+    // 1. factors (synthetic Gaussian, as in paper §6.1)
+    let mut rng = Rng::seeded(7);
+    let items = gaussian_factors(&mut rng, n_items, k);
+    let user: Vec<f32> = (0..k).map(|_| rng.gaussian_f32()).collect();
+
+    // 2. the map φ = permute ∘ zero-pad ∘ tessellate (Algorithm 1)
+    let mapper = Mapper::new(TessellationKind::Ternary, PermutationKind::ParseTree, k);
+    println!("schema {}: k={k} → p={}", mapper.name(), mapper.p());
+    let phi_u = mapper.map(&user)?;
+    println!("φ(user) has {} non-zeros: {:?}...", phi_u.nnz(), &phi_u.indices()[..4]);
+
+    // 3 + 4. inverted index + prune + exact rescoring
+    let retriever = Retriever::build(mapper, items)?;
+    let candidates = retriever.candidates(&user)?;
+    let top = retriever.top_k(&user, kappa)?;
+
+    // 5. compare with brute force over all items
+    let brute = retriever.top_k_brute(&user, kappa);
+    let hits = top
+        .iter()
+        .filter(|s| brute.iter().any(|b| b.id == s.id))
+        .count();
+
+    println!(
+        "pruned {n_items} items → {} candidates ({:.1}% discarded, {:.1}x speed-up)",
+        candidates.len(),
+        100.0 * (1.0 - candidates.len() as f64 / n_items as f64),
+        n_items as f64 / candidates.len().max(1) as f64,
+    );
+    println!("recovered {hits}/{kappa} of the true top-{kappa}:");
+    for (g, b) in top.iter().zip(&brute) {
+        println!(
+            "  got item {:>5} score {:+.4}   | brute item {:>5} score {:+.4}",
+            g.id, g.score, b.id, b.score
+        );
+    }
+    Ok(())
+}

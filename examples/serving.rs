@@ -1,0 +1,134 @@
+//! End-to-end serving driver (the EXPERIMENTS.md validation run): start
+//! the full coordinator — admission → dynamic batcher → shard workers →
+//! inverted-index pruning → PJRT exact rescoring — over a realistic
+//! catalogue and drive it with concurrent clients, reporting throughput,
+//! latency percentiles, discard rate and the implied speed-up, plus a
+//! live factor hot-swap mid-run.
+//!
+//! ```bash
+//! cargo run --release --example serving            # PJRT (XLA) scorer
+//! GEOMAP_CPU=1 cargo run --release --example serving   # pure-rust scorer
+//! ```
+
+use geomap::configx::{SchemaConfig, ServeConfig};
+use geomap::coordinator::Coordinator;
+use geomap::data::gaussian_factors;
+use geomap::rng::Rng;
+use geomap::runtime::{cpu_scorer_factory, xla_scorer_factory};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let k = 32;
+    let n_items = 8192;
+    let n_requests: usize = std::env::var("GEOMAP_REQUESTS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(4000);
+    let clients = 8;
+    let use_cpu = std::env::var("GEOMAP_CPU").as_deref() == Ok("1");
+
+    let mut rng = Rng::seeded(1234);
+    let items = gaussian_factors(&mut rng, n_items, k);
+    let users = gaussian_factors(&mut rng, 1024, k);
+
+    let cfg = ServeConfig {
+        k,
+        kappa: 10,
+        schema: SchemaConfig::TernaryParseTree,
+        max_batch: 32,
+        max_wait_us: 300,
+        shards: 4,
+        queue_cap: 8192,
+        use_xla: !use_cpu,
+        artifacts_dir: "artifacts".into(),
+        threshold: 1.5, // k=32 operating point (EXPERIMENTS.md §Perf)
+    };
+    let factory = if use_cpu {
+        cpu_scorer_factory()
+    } else {
+        xla_scorer_factory(&cfg.artifacts_dir)
+    };
+    println!(
+        "coordinator: {n_items} items, k={k}, {} shards, batch<= {} / {}µs, scorer={}",
+        cfg.shards,
+        cfg.max_batch,
+        cfg.max_wait_us,
+        if use_cpu { "cpu" } else { "xla(pjrt)" }
+    );
+    let kappa = cfg.kappa;
+    let coord = Arc::new(Coordinator::start(cfg, items, factory)?);
+
+    // -------- drive an open-ish loop with a mid-run hot swap ----------
+    let done = AtomicU64::new(0);
+    let errors = AtomicU64::new(0);
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for c in 0..clients {
+            let coord = Arc::clone(&coord);
+            let users = &users;
+            let done = &done;
+            let errors = &errors;
+            scope.spawn(move || {
+                let mut rng = Rng::seeded(0xC11E17 + c as u64);
+                for _ in 0..n_requests / clients {
+                    let u = users.row(rng.below(users.rows())).to_vec();
+                    match coord.submit(u, kappa) {
+                        Ok(resp) => {
+                            assert!(resp.results.len() <= kappa);
+                            done.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Err(_) => {
+                            errors.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                }
+            });
+        }
+        // hot swap halfway through: new catalogue version, no downtime
+        let coord2 = Arc::clone(&coord);
+        scope.spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(200));
+            let mut rng = Rng::seeded(777);
+            let fresh = gaussian_factors(&mut rng, n_items, k);
+            let v = coord2.swap_items(fresh).expect("swap");
+            println!("  [t+200ms] hot-swapped catalogue → version {v}");
+        });
+    });
+    let elapsed = t0.elapsed();
+
+    let ok = done.load(Ordering::Relaxed);
+    println!(
+        "\n{ok} ok / {} errors in {:.2}s → {:.0} req/s",
+        errors.load(Ordering::Relaxed),
+        elapsed.as_secs_f64(),
+        ok as f64 / elapsed.as_secs_f64()
+    );
+    println!("\n{}", coord.metrics().report());
+
+    // -------- sanity: compare against single-threaded brute force ------
+    let m = coord.metrics();
+    let speedup = m.implied_speedup();
+    println!(
+        "\nheadline: mean discard {:.1}% → {speedup:.2}x fewer score computations",
+        m.mean_discard() * 100.0
+    );
+
+    // brute-force wall-clock reference on one thread
+    let mut rng = Rng::seeded(5);
+    let probe: Vec<usize> = (0..200).map(|_| rng.below(users.rows())).collect();
+    let catalogue = gaussian_factors(&mut Rng::seeded(777), n_items, k);
+    let tb = Instant::now();
+    for &u in &probe {
+        let _ = geomap::retrieval::brute_force_top_k(users.row(u), &catalogue, kappa);
+    }
+    let brute_per_req = tb.elapsed().as_secs_f64() / probe.len() as f64;
+    println!(
+        "reference: brute-force scan costs {:.1} µs/request on one core",
+        brute_per_req * 1e6
+    );
+
+    Arc::try_unwrap(coord).map_err(|_| ()).ok().map(Coordinator::shutdown);
+    Ok(())
+}

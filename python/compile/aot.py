@@ -1,0 +1,204 @@
+"""AOT compile path: lower the L2 model functions to HLO *text* artifacts.
+
+Run once via ``make artifacts`` (no-op when inputs are unchanged); the rust
+runtime (`rust/src/runtime/`) loads every entry listed in
+``artifacts/manifest.json`` with ``HloModuleProto::from_text_file``,
+compiles it on the PJRT CPU client, and executes it on the request path.
+
+Interchange is HLO **text**, not ``.serialize()``: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1
+rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Besides the HLO artifacts this also emits ``artifacts/golden/*.json`` —
+small input/output golden cases for each module so the rust test-suite can
+verify its PJRT execution end-to-end *and* cross-check its own pure-rust
+re-implementations of Algorithms 2/3 against the jax semantics.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+DTYPES = {"f32": jnp.float32}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype="f32"):
+    return jax.ShapeDtypeStruct(shape, DTYPES[dtype])
+
+
+def artifact_variants():
+    """Every AOT module the rust runtime may load.
+
+    Keyed by artifact name; each entry gives the jitted fn, example arg
+    specs, and metadata the rust side needs to pad/unpad correctly.
+    """
+    variants = []
+
+    def add(name, fn, specs, meta, outputs):
+        variants.append(
+            {
+                "name": name,
+                "fn": fn,
+                "specs": specs,
+                "meta": meta,
+                "outputs": outputs,
+            }
+        )
+
+    # --- scorers: (B,k) x (T,k) -> (B,T) ------------------------------
+    for b, k, t in [(32, 32, 2048), (8, 16, 1024)]:
+        add(
+            f"score_b{b}_k{k}_t{t}",
+            model.score_batch,
+            [spec((b, k)), spec((t, k))],
+            {"kind": "score", "b": b, "k": k, "t": t},
+            [{"shape": [b, t], "dtype": "f32"}],
+        )
+
+    # --- fused score+topk: -> ((B,κ) values, (B,κ) indices) -----------
+    for b, k, t, kappa in [(32, 32, 2048, 32), (8, 16, 1024, 32)]:
+        add(
+            f"score_topk_b{b}_k{k}_t{t}_kap{kappa}",
+            lambda u, v, _kappa=kappa: model.score_topk(u, v, kappa=_kappa),
+            [spec((b, k)), spec((t, k))],
+            {"kind": "score_topk", "b": b, "k": k, "t": t, "kappa": kappa},
+            [
+                {"shape": [b, kappa], "dtype": "f32"},
+                {"shape": [b, kappa], "dtype": "i32"},
+            ],
+        )
+
+    # --- masked scorers: (B,k) x (T,k) x (T,) -> (B,T) ----------------
+    # the fused "prune + score" path: candidate mask instead of a row
+    # gather (cheap on TPU where gathers are expensive); masked-out items
+    # score -1e30 so they never survive a top-k merge.
+    for b, k, t in [(32, 32, 2048), (8, 16, 1024)]:
+        add(
+            f"score_masked_b{b}_k{k}_t{t}",
+            model.score_batch_masked,
+            [spec((b, k)), spec((t, k)), spec((t,))],
+            {"kind": "score_masked", "b": b, "k": k, "t": t},
+            [{"shape": [b, t], "dtype": "f32"}],
+        )
+
+    # --- tessellations: (N,k) -> (N,k) --------------------------------
+    for n, k in [(256, 32), (256, 16)]:
+        add(
+            f"tess_ternary_n{n}_k{k}",
+            model.tess_ternary,
+            [spec((n, k))],
+            {"kind": "tess_ternary", "n": n, "k": k},
+            [{"shape": [n, k], "dtype": "f32"}],
+        )
+    for n, k, d in [(256, 32, 8)]:
+        add(
+            f"tess_dary_n{n}_k{k}_d{d}",
+            lambda z, _d=d: model.tess_dary(z, d=_d),
+            [spec((n, k))],
+            {"kind": "tess_dary", "n": n, "k": k, "d": d},
+            [{"shape": [n, k], "dtype": "f32"}],
+        )
+
+    return variants
+
+
+def emit_golden(outdir, name, fn, specs, n_cases=2, seed=0):
+    """Run fn on concrete random inputs; dump inputs+outputs as JSON."""
+    rng = np.random.default_rng(seed)
+    cases = []
+    for _ in range(n_cases):
+        # rank-1 inputs are candidate masks: draw proper 0/1 indicators
+        args = [
+            rng.integers(0, 2, s.shape).astype(np.float32)
+            if len(s.shape) == 1
+            else rng.standard_normal(s.shape, dtype=np.float32)
+            for s in specs
+        ]
+        outs = fn(*args)
+        if not isinstance(outs, (tuple, list)):
+            outs = (outs,)
+        cases.append(
+            {
+                "inputs": [a.ravel().tolist() for a in args],
+                "input_shapes": [list(a.shape) for a in args],
+                "outputs": [np.asarray(o).ravel().tolist() for o in outs],
+                "output_shapes": [list(np.asarray(o).shape) for o in outs],
+            }
+        )
+    path = os.path.join(outdir, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(cases, f)
+    return path
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--golden",
+        action="store_true",
+        default=True,
+        help="also emit golden input/output cases (small shapes only)",
+    )
+    ap.add_argument("--only", default=None, help="substring filter on names")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    golden_dir = os.path.join(args.out_dir, "golden")
+    os.makedirs(golden_dir, exist_ok=True)
+
+    manifest = {"format": "hlo-text-v1", "entries": []}
+    for var in artifact_variants():
+        if args.only and args.only not in var["name"]:
+            continue
+        jitted = jax.jit(var["fn"])
+        lowered = jitted.lower(*var["specs"])
+        text = to_hlo_text(lowered)
+        fname = f"{var['name']}.hlo.txt"
+        with open(os.path.join(args.out_dir, fname), "w") as f:
+            f.write(text)
+        entry = {
+            "name": var["name"],
+            "file": fname,
+            "meta": var["meta"],
+            "inputs": [
+                {"shape": list(s.shape), "dtype": "f32"} for s in var["specs"]
+            ],
+            "outputs": var["outputs"],
+        }
+        # golden cases only for cheap shapes (tessellation + small scorer)
+        small = var["meta"].get("b") == 8 or var["meta"]["kind"].startswith("tess")
+        if args.golden and small:
+            entry["golden"] = os.path.relpath(
+                emit_golden(golden_dir, var["name"], jitted, var["specs"]),
+                args.out_dir,
+            )
+        manifest["entries"].append(entry)
+        print(f"wrote {fname} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"manifest: {len(manifest['entries'])} entries")
+
+
+if __name__ == "__main__":
+    main()

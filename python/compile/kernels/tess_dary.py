@@ -1,0 +1,74 @@
+"""L1 Pallas kernel: D-ary directional tessellation (paper Alg. 3).
+
+Supplement Algorithm 3 (``TessVector-D``): round every coordinate of a
+factor to the nearest multiple of 1/D (the D-ary base set
+``B_D = {0, ±1/D, …, ±1}``) and renormalise the row.  This yields an
+ε-approximate closest tessellating vector with ε ~ O(k/D²) (Lemma 2).
+
+This is a pure element-wise + row-reduction op — a VPU kernel on TPU, not
+an MXU one.  We block along the batch (rows) axis; each grid step rounds a
+(RB, k) block and renormalises its rows in VMEM.
+
+Degenerate rows (all coordinates round to 0, i.e. every |z_j| < 1/(2D))
+are handled as the paper's exclusion of {0}^k requires: the largest-
+magnitude coordinate is snapped to ±1/D before normalisation.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_ROW_BLOCK = 128
+
+
+def _tess_dary_kernel(z_ref, o_ref, *, d: int):
+    z = z_ref[...]  # (RB, k)
+    dd = jnp.float32(d)
+    # Nearest grid point: Alg. 3 steps 5-11 collapse to round() since
+    # |Dz - ceil(Dz)| <= |Dz - floor(Dz)| picks the nearer of the two.
+    a = jnp.round(z * dd) / dd
+    # Exclude the all-zeros vector (A_D = B_D^k \ {0}^k): snap the max-|z|
+    # coordinate of any degenerate row to sign(z)*1/D.
+    row_zero = jnp.sum(jnp.abs(a), axis=1, keepdims=True) == 0.0
+    k = z.shape[1]
+    amax = jnp.argmax(jnp.abs(z), axis=1)  # (RB,)
+    onehot = jax.nn.one_hot(amax, k, dtype=z.dtype)  # (RB, k)
+    snap = jnp.where(jnp.signbit(z), -1.0, 1.0) / dd * onehot
+    a = jnp.where(row_zero, snap, a)
+    # Renormalise (Alg. 3 step 14).
+    norm = jnp.sqrt(jnp.sum(a * a, axis=1, keepdims=True))
+    o_ref[...] = a / norm
+
+
+@functools.partial(jax.jit, static_argnames=("d", "row_block"))
+def tess_dary(z, *, d: int = 8, row_block: int = DEFAULT_ROW_BLOCK):
+    """Batched D-ary tessellation: map each row of ``z`` to its ε-closest
+    tessellating vector on the unit sphere.
+
+    Args:
+      z: (N, k) factors (need not be normalised — Alg. 3 is scale-sensitive
+         only through the grid, so the rust caller pre-normalises rows; the
+         kernel itself just rounds + renormalises).
+      d: grid resolution D (ternary base set is d=1).
+      row_block: rows per grid step.
+
+    Returns:
+      (N, k) float32 unit-norm tessellating vectors.
+    """
+    n, k = z.shape
+    if n % row_block != 0:
+        raise ValueError(f"row count {n} not a multiple of block {row_block}")
+    grid = (n // row_block,)
+    kern = functools.partial(_tess_dary_kernel, d=d)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[pl.BlockSpec((row_block, k), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((row_block, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, k), jnp.float32),
+        interpret=True,
+    )(z)

@@ -1,0 +1,96 @@
+"""L2: the jax compute graph for the serving stack, calling L1 pallas kernels.
+
+Exports the functions that aot.py lowers to HLO text for the rust runtime:
+
+  * ``score_batch(u, v)``            — pallas blocked GEMM scorer
+  * ``score_batch_masked(u, v, m)``  — fused prune+score (candidate mask)
+  * ``score_topk(u, v, kappa)``      — scorer fused with lax.top_k so the
+                                        whole rescoring step is one module
+  * ``tess_ternary(z)``              — paper Algorithm 2, vectorised
+                                        (sort + scaled cumsum + argmax)
+  * ``tess_dary(z, d)``              — pallas D-ary tessellation (Alg. 3)
+
+All shapes are static (PJRT AOT); the rust coordinator pads to the
+artifact's shape and strips the padding after execution.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.scoring import score_batch, score_batch_masked  # noqa: F401
+from .kernels.tess_dary import tess_dary  # noqa: F401
+
+
+@functools.partial(jax.jit, static_argnames=("kappa",))
+def score_topk(u, v, *, kappa: int):
+    """Score a query batch against an item tile and return per-query top-κ.
+
+    The scorer is the pallas kernel; top-k is a full descending sort +
+    slice rather than ``lax.top_k``: jax lowers top_k to the dedicated
+    ``topk`` HLO instruction, whose text form the image's xla_extension
+    0.5.1 parser cannot read (it predates the op). ``lax.sort`` lowers to
+    the classic ``sort`` HLO which round-trips fine, XLA still fuses the
+    whole rescoring step into one executable, and for the tile sizes we
+    serve (T ≤ 2048) the sort-vs-select difference is noise next to the
+    GEMM.
+
+    Returns:
+      values:  (B, κ) float32, descending.
+      indices: (B, κ) int32 positions within the tile.
+    """
+    scores = score_batch(u, v)
+    t = scores.shape[-1]
+    iota = jax.lax.broadcasted_iota(jnp.int32, scores.shape, len(scores.shape) - 1)
+    # ascending sort of -scores == descending sort of scores
+    neg_sorted, indices = jax.lax.sort_key_val(-scores, iota, dimension=-1)
+    kappa = min(kappa, t)
+    return -neg_sorted[..., :kappa], indices[..., :kappa].astype(jnp.int32)
+
+
+@jax.jit
+def tess_ternary(z):
+    """Paper Algorithm 2, batched: exact closest ternary tessellating vector.
+
+    For each row z (any scale — the algorithm is scale-invariant, §5):
+      1. sort coordinates by |z| descending (permutation π),
+      2. scaled cumulative sums  z_s^ι = (Σ_{j<=ι} |z|_(j)) / sqrt(ι),
+      3. ι* = argmax_ι z_s^ι,
+      4. a^j = sign(z^j)/sqrt(ι*) on the top-ι* coordinates, else 0.
+
+    This is pure L2 jax (sort-based, no pallas): a data-dependent support
+    size does not map onto a fixed BlockSpec grid, but XLA's sort+cumsum
+    fusion is already optimal for this O(k log k) step.
+
+    Returns (N, k) float32 unit-norm tessellating vectors.
+    """
+    z = z.astype(jnp.float32)
+    n, k = z.shape
+    mags = jnp.abs(z)
+    # descending sort of magnitudes per row
+    sorted_mags = -jnp.sort(-mags, axis=1)
+    counts = jnp.arange(1, k + 1, dtype=jnp.float32)
+    zs = jnp.cumsum(sorted_mags, axis=1) / jnp.sqrt(counts)[None, :]
+    tstar = jnp.argmax(zs, axis=1) + 1  # (N,) support size in 1..k
+    # threshold: coordinate j is in the support iff |z_j| >= |z|_(t*)
+    # (stable w.r.t. ties: taking *all* tied coordinates can change t*, so
+    # instead rank coordinates and keep ranks < t*).
+    order = jnp.argsort(-mags, axis=1, stable=True)  # (N,k) indices
+    ranks = jnp.argsort(order, axis=1, stable=True)  # rank of each coord
+    in_support = ranks < tstar[:, None]
+    sgn = jnp.where(z < 0.0, -1.0, 1.0)  # sign(0) -> +
+    a = jnp.where(in_support, sgn, 0.0) / jnp.sqrt(
+        tstar.astype(jnp.float32)
+    )[:, None]
+    return a
+
+
+@jax.jit
+def angular_distance(x, y):
+    """Pairwise angular distance d(x,y) = 1 - cos(x,y) (paper §2)."""
+    xn = x / jnp.linalg.norm(x, axis=-1, keepdims=True)
+    yn = y / jnp.linalg.norm(y, axis=-1, keepdims=True)
+    return 1.0 - xn @ yn.T

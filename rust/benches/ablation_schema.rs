@@ -1,0 +1,178 @@
+//! Ablations over the design choices DESIGN.md calls out — each sweep
+//! isolates one knob of the schema on the synthetic workload:
+//!
+//! * permutation window δ (§4.2.2 general parse tree: accidental-overlap
+//!   suppression vs index-space size),
+//! * grid resolution D (§4.1.2: finer tessellation vs per-region items),
+//! * capped support t_max (supplement §B.1 non-uniform tessellation),
+//! * cluster-adaptive tessellation on clustered factors (paper §5's
+//!   named extension) vs its uniform endpoints,
+//! * min_overlap (retrieval rule: ≥1 is the paper's; ≥2 trades recall
+//!   for discard).
+//!
+//! ```bash
+//! cargo bench --bench ablation_schema
+//! ```
+
+mod common;
+
+use geomap::configx::SchemaConfig;
+use geomap::embedding::{Mapper, PermutationKind, TessellationKind};
+use geomap::evalx::render_table;
+use geomap::retrieval::{RecoveryReport, Retriever};
+
+const THRESHOLD: f32 = 1.3;
+const KAPPA: usize = 10;
+
+fn eval(
+    users: &geomap::linalg::Matrix,
+    items: &geomap::linalg::Matrix,
+    mut mapper: Mapper,
+    min_overlap: usize,
+) -> (f64, f64, usize) {
+    mapper.threshold = THRESHOLD;
+    let p = mapper.p();
+    let mut retriever = Retriever::build(mapper, items.clone()).expect("build");
+    retriever.min_overlap = min_overlap;
+    let report = RecoveryReport::evaluate(users, items, KAPPA, |_, u| {
+        retriever.candidates(u).expect("dims")
+    });
+    (report.mean_discarded(), report.mean_accuracy(), p)
+}
+
+fn main() {
+    let (users, items) = common::synthetic_workload();
+    let k = items.cols();
+    println!(
+        "ablation workload: {} users x {} items, k={k}, threshold {THRESHOLD}",
+        users.rows(),
+        items.rows()
+    );
+
+    // ---- (a) parse-tree window δ -------------------------------------
+    println!("\n== ablation (a): parse-tree window δ ==");
+    let rows: Vec<Vec<String>> = [1usize, 2, 3]
+        .iter()
+        .map(|&delta| {
+            let m = Mapper::new(
+                TessellationKind::Ternary,
+                PermutationKind::ParseTreeDelta { delta },
+                k,
+            );
+            let (d, a, p) = eval(&users, &items, m, 1);
+            vec![
+                format!("{delta}"),
+                format!("{p}"),
+                format!("{:.1}", d * 100.0),
+                format!("{a:.3}"),
+            ]
+        })
+        .collect();
+    print!("{}", render_table(&["δ", "p", "discard %", "accuracy"], &rows));
+
+    // ---- (b) grid resolution D (one-hot) -------------------------------
+    println!("\n== ablation (b): D-ary grid resolution (one-hot map) ==");
+    let rows: Vec<Vec<String>> = [1u32, 2, 4, 8]
+        .iter()
+        .map(|&d| {
+            let m = Mapper::from_config(SchemaConfig::DaryOneHot { d }, k, 0.0);
+            let (disc, a, p) = eval(&users, &items, m, 1);
+            vec![
+                format!("{d}"),
+                format!("{p}"),
+                format!("{:.1}", disc * 100.0),
+                format!("{a:.3}"),
+            ]
+        })
+        .collect();
+    print!("{}", render_table(&["D", "p", "discard %", "accuracy"], &rows));
+
+    // ---- (c) capped support (supp. B.1 non-uniform) ---------------------
+    println!("\n== ablation (c): capped-support ternary (supp. §B.1) ==");
+    let rows: Vec<Vec<String>> = [2usize, 4, 8, 16, k]
+        .iter()
+        .map(|&t_max| {
+            let m = Mapper::new(
+                TessellationKind::TernaryCapped { t_max },
+                PermutationKind::ParseTree,
+                k,
+            );
+            let (d, a, _) = eval(&users, &items, m, 1);
+            vec![
+                format!("{t_max}"),
+                format!("{:.1}", d * 100.0),
+                format!("{a:.3}"),
+            ]
+        })
+        .collect();
+    print!("{}", render_table(&["t_max", "discard %", "accuracy"], &rows));
+
+    // ---- (d) cluster-adaptive tessellation (paper §5 extension) --------
+    // on *clustered* factors: fine D-ary near k-means centres, ternary
+    // elsewhere, vs the two uniform endpoints.
+    println!("\n== ablation (d): cluster-adaptive tessellation (clustered data) ==");
+    {
+        use geomap::cluster::spherical_kmeans;
+        use geomap::data::clustered_factors;
+        use geomap::rng::Rng;
+        let mut rng = Rng::seeded(4242);
+        let (nc, spread) = (8, 0.25);
+        let citems = clustered_factors(&mut rng, items.rows(), k, nc, spread);
+        let cusers = clustered_factors(&mut rng, users.rows(), k, nc, spread);
+        let km = spherical_kmeans(&citems, nc, 15, &mut rng);
+        let candidates: Vec<(String, Mapper)> = vec![
+            (
+                "uniform ternary".into(),
+                Mapper::new(TessellationKind::Ternary, PermutationKind::OneHot, k),
+            ),
+            (
+                "uniform D=4".into(),
+                Mapper::new(TessellationKind::Dary { d: 4 }, PermutationKind::OneHot, k),
+            ),
+            (
+                "adaptive D=4 (r=0.35)".into(),
+                Mapper::cluster_adaptive(
+                    PermutationKind::OneHot,
+                    k,
+                    4,
+                    km.centres.clone(),
+                    0.35,
+                ),
+            ),
+        ];
+        let rows: Vec<Vec<String>> = candidates
+            .into_iter()
+            .map(|(label, m)| {
+                let (d, a, _) = eval(&cusers, &citems, m, 1);
+                vec![label, format!("{:.1}", d * 100.0), format!("{a:.3}")]
+            })
+            .collect();
+        print!(
+            "{}",
+            render_table(&["tessellation", "discard %", "accuracy"], &rows)
+        );
+    }
+
+    // ---- (e) retrieval rule min_overlap ---------------------------------
+    println!("\n== ablation (e): min support overlap (paper uses 1) ==");
+    let rows: Vec<Vec<String>> = [1usize, 2, 3]
+        .iter()
+        .map(|&m_ov| {
+            let m = Mapper::new(
+                TessellationKind::Ternary,
+                PermutationKind::ParseTree,
+                k,
+            );
+            let (d, a, _) = eval(&users, &items, m, m_ov);
+            vec![
+                format!("{m_ov}"),
+                format!("{:.1}", d * 100.0),
+                format!("{a:.3}"),
+            ]
+        })
+        .collect();
+    print!(
+        "{}",
+        render_table(&["min_overlap", "discard %", "accuracy"], &rows)
+    );
+}

@@ -1,0 +1,53 @@
+//! Shared helpers for the bench targets: workload construction and the
+//! figure-regeneration glue. Each `cargo bench` target reproduces one
+//! paper table/figure *and* times its pipeline stages.
+#![allow(dead_code)] // each bench target uses a subset of these helpers
+
+use geomap::data::{gaussian_factors, MovieLensSynth};
+use geomap::linalg::Matrix;
+use geomap::mf::AlsTrainer;
+use geomap::rng::Rng;
+
+/// True when `GEOMAP_BENCH_FAST=1` (CI-sized workloads).
+pub fn fast() -> bool {
+    std::env::var("GEOMAP_BENCH_FAST").as_deref() == Ok("1")
+}
+
+/// The §6.1 synthetic workload (fig 2): N(0,1) users/items.
+pub fn synthetic_workload() -> (Matrix, Matrix) {
+    let (n_users, n_items, k) =
+        if fast() { (64, 512, 16) } else { (512, 4096, 32) };
+    let mut rng = Rng::seeded(42);
+    (
+        gaussian_factors(&mut rng, n_users, k),
+        gaussian_factors(&mut rng, n_items, k),
+    )
+}
+
+/// The §6.2 MovieLens workload (fig 3): ALS k=16 factors from a
+/// 100k-shaped ratings log (or a scaled-down one under fast()).
+pub fn movielens_workload() -> (Matrix, Matrix) {
+    let ml = if fast() { MovieLensSynth::small() } else { MovieLensSynth::default() };
+    let mut rng = Rng::seeded(42);
+    let ratings = ml.generate(&mut rng);
+    let model = AlsTrainer { k: 16, ..Default::default() }
+        .train(&ratings, if fast() { 4 } else { 8 }, 42);
+    let sample = if fast() { 64 } else { 256 };
+    let users = model
+        .user_factors
+        .slice_rows(0, sample.min(model.user_factors.rows()));
+    (users, model.item_factors)
+}
+
+/// Print a method-comparison table (shared by fig benches).
+pub fn print_comparison(title: &str, results: &[geomap::evalx::MethodResult]) {
+    println!("\n== {title} ==");
+    let rows: Vec<Vec<String>> = results.iter().map(|r| r.row()).collect();
+    print!(
+        "{}",
+        geomap::evalx::render_table(
+            &["method", "discard %", "± std", "accuracy", "speed-up"],
+            &rows
+        )
+    );
+}

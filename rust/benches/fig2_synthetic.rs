@@ -1,0 +1,65 @@
+//! Figure 2 (paper §6.1): synthetic Gaussian factors — per-user discard
+//! histograms (2a) and recovery accuracy (2b) for ours vs all baselines,
+//! plus build/query timings for each method.
+//!
+//! ```bash
+//! cargo bench --bench fig2_synthetic
+//! GEOMAP_BENCH_FAST=1 cargo bench --bench fig2_synthetic   # CI-sized
+//! ```
+
+mod common;
+
+use geomap::bench::Bencher;
+use geomap::evalx::{render_histogram, Comparison};
+
+fn main() {
+    let (users, items) = common::synthetic_workload();
+    println!(
+        "fig 2 workload: {} users x {} items, k={}",
+        users.rows(),
+        items.rows(),
+        items.cols()
+    );
+
+    // synthetic operating point: ~78 % discard (EXPERIMENTS.md §Perf)
+    let cmp = Comparison { threshold: 1.5, ..Default::default() };
+    let results = cmp.run(&users, &items).expect("comparison");
+
+    // ---- fig 2a: discard histograms --------------------------------
+    println!("\n== fig 2a: % items discarded per user ==");
+    for r in &results {
+        print!(
+            "{}",
+            render_histogram(&format!("[{}]", r.label), &r.report.discard_histogram(10), 40)
+        );
+    }
+
+    // ---- fig 2b: recovery accuracy ---------------------------------
+    common::print_comparison("fig 2b: recovery accuracy (summary)", &results);
+
+    // ---- timings: per-user candidate retrieval per method -----------
+    let mut b = Bencher::from_env();
+    b.group("fig2 per-user candidate retrieval");
+    {
+        use geomap::embedding::Mapper;
+        use geomap::retrieval::Retriever;
+        let mapper =
+            Mapper::from_config(cmp.schema, items.cols(), cmp.threshold);
+        let retriever = Retriever::build(mapper, items.clone()).unwrap();
+        let mut u = 0usize;
+        b.bench("geomap candidates", 1, || {
+            let _ = retriever.candidates(users.row(u % users.rows()));
+            u += 1;
+        });
+        let mut u2 = 0usize;
+        b.bench("geomap top-k (prune+rescore)", 1, || {
+            let _ = retriever.top_k(users.row(u2 % users.rows()), cmp.kappa);
+            u2 += 1;
+        });
+        let mut u3 = 0usize;
+        b.bench("brute-force top-k", 1, || {
+            let _ = retriever.top_k_brute(users.row(u3 % users.rows()), cmp.kappa);
+            u3 += 1;
+        });
+    }
+}

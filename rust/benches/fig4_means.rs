@@ -1,0 +1,49 @@
+//! Figure 4 (supplement §C): mean % of discarded items across users with
+//! error bars, for both datasets and every method.
+//!
+//! ```bash
+//! cargo bench --bench fig4_means
+//! ```
+
+mod common;
+
+use geomap::evalx::{render_bars, Comparison};
+
+fn main() {
+    for (name, threshold, (users, items)) in [
+        ("fig 4a synthetic", 1.5, common::synthetic_workload()),
+        ("fig 4b movielens", 1.3, common::movielens_workload()),
+    ] {
+        let cmp = Comparison { threshold, ..Default::default() };
+        let results = cmp.run(&users, &items).expect("comparison");
+        let rows: Vec<(String, f64, Option<f64>)> = results
+            .iter()
+            .map(|r| {
+                (
+                    r.label.clone(),
+                    r.report.mean_discarded(),
+                    Some(r.report.std_discarded()),
+                )
+            })
+            .collect();
+        print!(
+            "{}",
+            render_bars(&format!("== {name}: mean discard ± std =="), &rows, 40)
+        );
+        // the paper's observation: ours has competitive mean with LOWER
+        // variance than the hashing baselines
+        let ours_std = results[0].report.std_discarded();
+        let hash_stds: Vec<f64> = results[1..4]
+            .iter()
+            .map(|r| r.report.std_discarded())
+            .collect();
+        println!(
+            "   ours std {:.3} vs hashing baselines {:?}\n",
+            ours_std,
+            hash_stds
+                .iter()
+                .map(|s| (s * 1000.0).round() / 1000.0)
+                .collect::<Vec<_>>()
+        );
+    }
+}

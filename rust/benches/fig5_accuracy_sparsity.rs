@@ -1,0 +1,49 @@
+//! Figure 5 (supplement §C): recovery accuracy against achieved sparsity
+//! for our method, traced by sweeping the pre-mapping threshold — on both
+//! the synthetic (5a) and MovieLens (5b) workloads, for the ternary and
+//! D-ary schemata.
+//!
+//! ```bash
+//! cargo bench --bench fig5_accuracy_sparsity
+//! ```
+
+mod common;
+
+use geomap::configx::SchemaConfig;
+use geomap::evalx::{accuracy_sparsity_sweep, render_table};
+
+fn main() {
+    let thresholds =
+        [0.0f32, 0.4, 0.6, 0.8, 1.0, 1.1, 1.2, 1.3, 1.4, 1.5, 1.6, 1.8];
+    for (name, (users, items)) in [
+        ("fig 5a synthetic", common::synthetic_workload()),
+        ("fig 5b movielens", common::movielens_workload()),
+    ] {
+        println!("\n== {name}: accuracy vs sparsity ==");
+        for schema in [
+            SchemaConfig::TernaryParseTree,
+            SchemaConfig::TernaryOneHot,
+            SchemaConfig::DaryOneHot { d: 4 },
+        ] {
+            let pts = accuracy_sparsity_sweep(
+                schema, &users, &items, 10, &thresholds,
+            )
+            .expect("sweep");
+            let rows: Vec<Vec<String>> = pts
+                .iter()
+                .map(|p| {
+                    vec![
+                        format!("{:.2}", p.threshold),
+                        format!("{:.1}", p.mean_discarded * 100.0),
+                        format!("{:.3}", p.mean_accuracy),
+                    ]
+                })
+                .collect();
+            println!("[schema {schema:?}]");
+            print!(
+                "{}",
+                render_table(&["threshold", "discard %", "accuracy"], &rows)
+            );
+        }
+    }
+}

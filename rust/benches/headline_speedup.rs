@@ -1,0 +1,118 @@
+//! §6 headline claim: the discard rate η implies a 1/(1-η)-fold retrieval
+//! speed-up (≈5× synthetic, >3× MovieLens). This bench verifies the
+//! analytic relation in *measured wall-clock*: brute-force scan vs
+//! index-pruned retrieval, single-threaded, plus the full coordinator
+//! (batched, sharded, PJRT or CPU rescoring) for the serving view.
+//!
+//! ```bash
+//! cargo bench --bench headline_speedup
+//! GEOMAP_BENCH_FAST=1 cargo bench --bench headline_speedup
+//! ```
+
+mod common;
+
+use geomap::bench::{black_box, Bencher};
+use geomap::configx::{SchemaConfig, ServeConfig};
+use geomap::coordinator::Coordinator;
+use geomap::embedding::Mapper;
+use geomap::retrieval::{RecoveryReport, Retriever};
+use geomap::rng::Rng;
+use geomap::runtime::{cpu_scorer_factory, xla_scorer_factory};
+use std::sync::Arc;
+
+fn main() {
+    for (name, threshold, (users, items)) in [
+        ("synthetic", 1.5f32, common::synthetic_workload()),
+        ("movielens", 1.3, common::movielens_workload()),
+    ] {
+        let k = items.cols();
+        let kappa = 10;
+        let mapper =
+            Mapper::from_config(SchemaConfig::TernaryParseTree, k, threshold);
+        let retriever = Retriever::build(mapper, items.clone()).unwrap();
+
+        // analytic speed-up from the measured discard rate
+        let report = RecoveryReport::evaluate(&users, &items, kappa, |_, u| {
+            retriever.candidates(u).unwrap()
+        });
+        let eta = report.mean_discarded();
+        println!(
+            "\n== {name}: {} items, k={k} — discard {:.1}% → analytic {:.2}x ==",
+            items.rows(),
+            eta * 100.0,
+            1.0 / (1.0 - eta)
+        );
+
+        // measured single-thread wall-clock
+        let mut b = Bencher::from_env();
+        let mut u1 = 0usize;
+        b.bench(&format!("{name}: brute-force top-k"), 1, || {
+            let r = retriever.top_k_brute(users.row(u1 % users.rows()), kappa);
+            black_box(r);
+            u1 += 1;
+        });
+        let mut u2 = 0usize;
+        b.bench(&format!("{name}: pruned top-k (ours)"), 1, || {
+            let r = retriever.top_k(users.row(u2 % users.rows()), kappa).unwrap();
+            black_box(r);
+            u2 += 1;
+        });
+        let brute_ns = b.results()[0].mean_ns();
+        let ours_ns = b.results()[1].mean_ns();
+        println!(
+            "   measured speed-up {:.2}x (analytic {:.2}x, accuracy {:.3})",
+            brute_ns / ours_ns,
+            1.0 / (1.0 - eta),
+            report.mean_accuracy()
+        );
+
+        // full coordinator throughput, CPU vs XLA scorer
+        for (scorer_name, factory, use_xla) in [
+            ("cpu", cpu_scorer_factory(), false),
+            ("xla", xla_scorer_factory("artifacts"), true),
+        ] {
+            let cfg = ServeConfig {
+                k,
+                kappa,
+                schema: SchemaConfig::TernaryParseTree,
+                max_batch: 32,
+                max_wait_us: 200,
+                shards: 2,
+                queue_cap: 8192,
+                use_xla,
+                artifacts_dir: "artifacts".into(),
+                threshold,
+            };
+            let coord =
+                Arc::new(Coordinator::start(cfg, items.clone(), factory).unwrap());
+            let n_requests = if common::fast() { 400 } else { 2000 };
+            let clients = 8;
+            let t0 = std::time::Instant::now();
+            std::thread::scope(|scope| {
+                for c in 0..clients {
+                    let coord = Arc::clone(&coord);
+                    let users = &users;
+                    scope.spawn(move || {
+                        let mut rng = Rng::seeded(1000 + c as u64);
+                        for _ in 0..n_requests / clients {
+                            let u =
+                                users.row(rng.below(users.rows())).to_vec();
+                            let _ = coord.submit(u, kappa);
+                        }
+                    });
+                }
+            });
+            let el = t0.elapsed().as_secs_f64();
+            let m = coord.metrics();
+            println!(
+                "   coordinator[{scorer_name}]: {:.0} req/s, p50 {} µs, p99 {} µs, \
+                 discard {:.1}%",
+                (n_requests / clients * clients) as f64 / el,
+                m.latency_us.quantile(0.5),
+                m.latency_us.quantile(0.99),
+                m.mean_discard() * 100.0
+            );
+            Arc::try_unwrap(coord).ok().map(Coordinator::shutdown);
+        }
+    }
+}

@@ -1,0 +1,148 @@
+//! Hot-path micro-benchmarks (§Perf in EXPERIMENTS.md): each stage of the
+//! request path in isolation —
+//!
+//! * φ mapping (tessellate + permute) per factor,
+//! * inverted-index query (allocation-free path),
+//! * exact rescoring GEMM (pure rust vs PJRT executable),
+//! * per-batch worker processing (prune + union + batched score),
+//! * shard top-κ merge.
+//!
+//! ```bash
+//! cargo bench --bench micro_hotpath
+//! ```
+
+mod common;
+
+use geomap::bench::{black_box, Bencher};
+use geomap::configx::SchemaConfig;
+use geomap::coordinator::{merge_topk, process_batch, FactorStore, WorkerScratch};
+use geomap::embedding::Mapper;
+use geomap::index::{InvertedIndex, QueryScratch};
+use geomap::linalg::Matrix;
+use geomap::retrieval::Scored;
+use geomap::rng::Rng;
+use geomap::runtime::{CpuScorer, Scorer, XlaScorer};
+
+fn main() {
+    let (users, items) = common::synthetic_workload();
+    let k = items.cols();
+    let mut b = Bencher::from_env();
+
+    // ---- L3: φ mapping ------------------------------------------------
+    b.group("mapping (phi per factor)");
+    for (label, schema) in [
+        ("ternary+parse-tree", SchemaConfig::TernaryParseTree),
+        ("ternary+one-hot", SchemaConfig::TernaryOneHot),
+        ("dary8+one-hot", SchemaConfig::DaryOneHot { d: 8 }),
+    ] {
+        let mapper = Mapper::from_config(schema, k, 1.3);
+        let mut i = 0usize;
+        b.bench(label, 1, || {
+            let phi = mapper.map(items.row(i % items.rows())).unwrap();
+            black_box(phi.nnz());
+            i += 1;
+        });
+    }
+    {
+        let mapper = Mapper::from_config(SchemaConfig::TernaryParseTree, k, 1.3);
+        b.bench("map_all (batch, all threads)", items.rows(), || {
+            let emb = mapper.map_all(&items, geomap::exec::default_threads());
+            black_box(emb.unwrap().nnz());
+        });
+    }
+
+    // ---- L3: index build + query ---------------------------------------
+    b.group("inverted index");
+    let mapper = Mapper::from_config(SchemaConfig::TernaryParseTree, k, 1.3);
+    let emb = mapper.map_all(&items, geomap::exec::default_threads()).unwrap();
+    b.bench("index build", items.rows(), || {
+        let idx = InvertedIndex::from_embeddings(&emb);
+        black_box(idx.total_postings());
+    });
+    let index = InvertedIndex::from_embeddings(&emb);
+    let queries: Vec<_> = (0..users.rows())
+        .map(|u| mapper.map(users.row(u)).unwrap())
+        .collect();
+    let mut scratch = QueryScratch::new(index.items());
+    let mut out = Vec::new();
+    let mut qi = 0usize;
+    b.bench("index query (scratch reuse)", 1, || {
+        index.query_into(&queries[qi % queries.len()], 1, &mut scratch, &mut out);
+        black_box(out.len());
+        qi += 1;
+    });
+
+    // ---- L2/L1: rescoring backends -------------------------------------
+    b.group("exact rescoring (B=32 tile=2048)");
+    let mut rng = Rng::seeded(9);
+    let ub = Matrix::gaussian(&mut rng, 32, k, 1.0);
+    let tile = Matrix::gaussian(&mut rng, 2048, k, 1.0);
+    b.bench("cpu gemm score", 32 * 2048, || {
+        let s = CpuScorer.score(&ub, &tile).unwrap();
+        black_box(s.as_slice()[0]);
+    });
+    match XlaScorer::load("artifacts") {
+        Ok(xla) => {
+            // warm the executable cache before timing
+            let _ = xla.score(&ub, &tile).unwrap();
+            b.bench("xla pjrt score", 32 * 2048, || {
+                let s = xla.score(&ub, &tile).unwrap();
+                black_box(s.as_slice()[0]);
+            });
+            b.bench("xla pjrt score+topk (tiled+host)", 32 * 2048, || {
+                let s = xla.score_topk(&ub, &tile, 10).unwrap();
+                black_box(s.len());
+            });
+            let mask: Vec<f32> =
+                (0..2048).map(|i| ((i % 4) == 0) as u32 as f32).collect();
+            let _ = xla.score_masked(&ub, &tile, &mask).unwrap();
+            b.bench("xla pjrt masked score (25% live)", 32 * 2048, || {
+                let s = xla.score_masked(&ub, &tile, &mask).unwrap();
+                black_box(s.as_slice()[0]);
+            });
+            if let Ok(first) = xla.score_topk_fused(&ub, &tile, 10) {
+                black_box(first.len());
+                b.bench("xla pjrt score+topk (AOT fused sort)", 32 * 2048, || {
+                    let s = xla.score_topk_fused(&ub, &tile, 10).unwrap();
+                    black_box(s.len());
+                });
+            }
+        }
+        Err(e) => println!("   (xla scorer unavailable: {e})"),
+    }
+    b.bench("cpu score+topk", 32 * 2048, || {
+        let s = CpuScorer.score_topk(&ub, &tile, 10).unwrap();
+        black_box(s.len());
+    });
+
+    // ---- L3: whole worker batch ----------------------------------------
+    b.group("worker process_batch (B=32)");
+    let store = FactorStore::build(
+        SchemaConfig::TernaryParseTree,
+        1.3,
+        items.clone(),
+        1,
+    )
+    .unwrap();
+    let snap = store.snapshot();
+    let shard = &snap.shards[0];
+    let mut wscratch = WorkerScratch::new(shard.items());
+    let ub32 = Matrix::gaussian(&mut rng, 32, k, 1.0);
+    b.bench("process_batch cpu", 32, || {
+        let p = process_batch(shard, &ub32, 10, &CpuScorer, &mut wscratch).unwrap();
+        black_box(p.per_request.len());
+    });
+
+    // ---- L3: merge -------------------------------------------------------
+    b.group("shard merge");
+    let parts: Vec<Vec<Scored>> = (0..4)
+        .map(|s| {
+            (0..10)
+                .map(|i| Scored { id: s * 100 + i, score: (i as f32) * -0.5 })
+                .collect()
+        })
+        .collect();
+    b.bench("merge_topk 4 shards kappa=10", 1, || {
+        black_box(merge_topk(&parts, 10).len());
+    });
+}

@@ -1,0 +1,39 @@
+//! Brute force "filter": returns the full catalogue (discards nothing).
+//! The reference point for recovery accuracy (always 1.0) and the
+//! denominator of every speed-up claim.
+
+use super::CandidateFilter;
+
+/// No pruning at all.
+pub struct BruteForce {
+    n_items: usize,
+}
+
+impl BruteForce {
+    /// Catalogue of `n_items` items.
+    pub fn new(n_items: usize) -> Self {
+        BruteForce { n_items }
+    }
+}
+
+impl CandidateFilter for BruteForce {
+    fn candidates(&self, _user: &[f32]) -> Vec<u32> {
+        (0..self.n_items as u32).collect()
+    }
+
+    fn label(&self) -> String {
+        "brute-force".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn returns_everything() {
+        let b = BruteForce::new(5);
+        assert_eq!(b.candidates(&[1.0]), vec![0, 1, 2, 3, 4]);
+        assert_eq!(b.label(), "brute-force");
+    }
+}

@@ -1,0 +1,210 @@
+//! Concomitant rank-order statistics LSH (Eshghi & Rajaram, KDD 2008) —
+//! the paper's baseline [10].
+//!
+//! Instead of per-hyperplane sign bits, each table draws `m` random
+//! Gaussian directions and hashes a factor to the *identities of the
+//! directions with the `l` largest projections* (the concomitant rank
+//! order). Two angularly close vectors agree on which random directions
+//! they align with most, so they land in the same bucket with high
+//! probability; the key is `l`-ary rather than binary.
+
+use super::{bucketize, coalesce, projections, CandidateFilter};
+use crate::linalg::Matrix;
+use crate::rng::Rng;
+use std::collections::HashMap;
+
+struct Table {
+    directions: Matrix, // m x k
+    buckets: HashMap<u64, Vec<u32>>,
+}
+
+/// Multi-table concomitant rank-order LSH candidate filter.
+pub struct ConcomitantLsh {
+    tables: Vec<Table>,
+    m: usize,
+    l: usize,
+}
+
+impl ConcomitantLsh {
+    /// Build over item factors: `m` random directions per table, keys are
+    /// the indices of the top-`l` projections, `tables` independent tables.
+    pub fn build(
+        items: &Matrix,
+        m: usize,
+        l: usize,
+        tables: usize,
+        rng: &mut Rng,
+    ) -> Self {
+        assert!(m >= 1 && m <= u16::MAX as usize, "m must be in 1..=65535");
+        let l = l.clamp(1, m.min(4)); // 4 u16 ids pack into the u64 key
+        let k = items.cols();
+        let tables = (0..tables.max(1))
+            .map(|_| {
+                let directions = Matrix::gaussian(rng, m, k, 1.0);
+                let buckets = bucketize((0..items.rows()).map(|i| {
+                    rank_key(&projections(&directions, items.row(i)), l)
+                }));
+                Table { directions, buckets }
+            })
+            .collect();
+        ConcomitantLsh { tables, m, l }
+    }
+
+    /// Random directions per table.
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    /// Rank-order depth l.
+    pub fn l(&self) -> usize {
+        self.l
+    }
+
+    /// Number of tables.
+    pub fn num_tables(&self) -> usize {
+        self.tables.len()
+    }
+}
+
+/// Indices of the `l` largest projections, in rank order, packed into a
+/// u64 key (16 bits per index, so l ≤ 4 and m ≤ 65535).
+pub(crate) fn rank_key(proj: &[f32], l: usize) -> u64 {
+    debug_assert!(l >= 1 && l <= 4 && proj.len() >= l);
+    // partial selection: track top-l (index, value) pairs in one pass
+    let mut top: [(usize, f32); 4] = [(usize::MAX, f32::NEG_INFINITY); 4];
+    for (i, &p) in proj.iter().enumerate() {
+        if p > top[l - 1].1 {
+            // insertion into the tiny sorted prefix
+            let mut j = l - 1;
+            while j > 0 && p > top[j - 1].1 {
+                top[j] = top[j - 1];
+                j -= 1;
+            }
+            top[j] = (i, p);
+        }
+    }
+    let mut key = 0u64;
+    for t in top.iter().take(l) {
+        key = (key << 16) | t.0 as u64;
+    }
+    key
+}
+
+impl CandidateFilter for ConcomitantLsh {
+    fn candidates(&self, user: &[f32]) -> Vec<u32> {
+        let lists = self
+            .tables
+            .iter()
+            .map(|t| {
+                let key = rank_key(&projections(&t.directions, user), self.l);
+                t.buckets.get(&key).cloned().unwrap_or_default()
+            })
+            .collect();
+        coalesce(lists)
+    }
+
+    fn label(&self) -> String {
+        format!("cros(m={},l={},L={})", self.m, self.l, self.tables.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geometry::normalize;
+
+    fn items(n: usize, k: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::seeded(seed);
+        let mut m = Matrix::gaussian(&mut rng, n, k, 1.0);
+        m.normalize_rows();
+        m
+    }
+
+    #[test]
+    fn rank_key_orders_top_indices() {
+        // projections: index 2 largest, then 0, then 3
+        let proj = [5.0f32, -1.0, 9.0, 3.0];
+        assert_eq!(rank_key(&proj, 1), 2);
+        assert_eq!(rank_key(&proj, 2), (2 << 16) | 0);
+        assert_eq!(rank_key(&proj, 3), (2 << 32) | (0 << 16) | 3);
+    }
+
+    #[test]
+    fn rank_key_matches_full_sort() {
+        crate::testing::prop(100, |g| {
+            let m = g.usize_in(4..=32);
+            let l = g.usize_in(1..=4);
+            let proj = g.vec_gaussian(m..=m);
+            let key = rank_key(&proj, l);
+            let mut order: Vec<usize> = (0..m).collect();
+            order.sort_by(|&a, &b| proj[b].partial_cmp(&proj[a]).unwrap());
+            let mut want = 0u64;
+            for &i in order.iter().take(l) {
+                want = (want << 16) | i as u64;
+            }
+            assert_eq!(key, want);
+        });
+    }
+
+    #[test]
+    fn item_is_its_own_candidate() {
+        let m = items(80, 8, 1);
+        let mut rng = Rng::seeded(2);
+        let lsh = ConcomitantLsh::build(&m, 16, 2, 3, &mut rng);
+        for i in (0..80).step_by(9) {
+            let c = lsh.candidates(m.row(i));
+            assert!(c.binary_search(&(i as u32)).is_ok(), "item {i} lost");
+        }
+    }
+
+    #[test]
+    fn near_vectors_collide_more_than_far() {
+        let mut rng = Rng::seeded(3);
+        let k = 16;
+        let mut near_hits = 0;
+        let mut far_hits = 0;
+        for _ in 0..200 {
+            let dirs = Matrix::gaussian(&mut rng, 12, k, 1.0);
+            let mut base: Vec<f32> = (0..k).map(|_| rng.gaussian_f32()).collect();
+            normalize(&mut base);
+            let mut near = base.clone();
+            for v in near.iter_mut() {
+                *v += 0.05 * rng.gaussian_f32();
+            }
+            normalize(&mut near);
+            let mut far: Vec<f32> = (0..k).map(|_| rng.gaussian_f32()).collect();
+            normalize(&mut far);
+            let kb = rank_key(&projections(&dirs, &base), 2);
+            if rank_key(&projections(&dirs, &near), 2) == kb {
+                near_hits += 1;
+            }
+            if rank_key(&projections(&dirs, &far), 2) == kb {
+                far_hits += 1;
+            }
+        }
+        assert!(
+            near_hits > far_hits + 50,
+            "near={near_hits} far={far_hits}"
+        );
+    }
+
+    #[test]
+    fn l_is_clamped_to_packable_range() {
+        let m = items(10, 4, 5);
+        let mut rng = Rng::seeded(6);
+        let lsh = ConcomitantLsh::build(&m, 8, 100, 1, &mut rng);
+        assert_eq!(lsh.l(), 4);
+        let lsh = ConcomitantLsh::build(&m, 8, 0, 1, &mut rng);
+        assert_eq!(lsh.l(), 1);
+    }
+
+    #[test]
+    fn label_mentions_params() {
+        let m = items(10, 4, 7);
+        let mut rng = Rng::seeded(8);
+        let lsh = ConcomitantLsh::build(&m, 12, 2, 3, &mut rng);
+        assert_eq!(lsh.label(), "cros(m=12,l=2,L=3)");
+        assert_eq!(lsh.m(), 12);
+        assert_eq!(lsh.num_tables(), 3);
+    }
+}

@@ -1,0 +1,82 @@
+//! Baseline candidate-pruning methods from the paper's evaluation (§5.1/§6):
+//! SRP-LSH, Superbit-LSH, concomitant rank-order statistics, PCA-tree, and
+//! exact brute force.
+//!
+//! All baselines implement [`CandidateFilter`], the same interface the
+//! geomap retriever exposes through `Retriever::candidates`, so the
+//! evaluation harness treats every method identically: build over the item
+//! factors, then per-user return the surviving candidate ids.
+//!
+//! As in the paper (footnote 7), hashing baselines are *boosted* by
+//! coalescing the candidates collected from several independent hash
+//! tables: an item survives if it matches the user's bucket in at least
+//! one table. Matching is exact-bucket (tree/table lookup), since scanning
+//! Hamming balls would defeat the purpose of avoiding per-item work.
+
+mod brute;
+mod cros;
+mod pca_tree;
+mod srp;
+mod superbit;
+
+pub use brute::BruteForce;
+pub use cros::ConcomitantLsh;
+pub use pca_tree::PcaTree;
+pub use srp::SrpLsh;
+pub use superbit::SuperbitLsh;
+
+use crate::linalg::Matrix;
+
+/// A method that prunes the item catalogue to a candidate set per user.
+pub trait CandidateFilter: Send + Sync {
+    /// Candidate item ids (sorted, unique) for a user factor.
+    fn candidates(&self, user: &[f32]) -> Vec<u32>;
+
+    /// Method label for reports.
+    fn label(&self) -> String;
+}
+
+/// Group items by a bucket key: `buckets[key] -> sorted item ids`.
+/// Shared helper for the hash-table baselines.
+pub(crate) fn bucketize(keys: impl Iterator<Item = u64>) -> std::collections::HashMap<u64, Vec<u32>> {
+    let mut map: std::collections::HashMap<u64, Vec<u32>> =
+        std::collections::HashMap::new();
+    for (id, key) in keys.enumerate() {
+        map.entry(key).or_default().push(id as u32);
+    }
+    map
+}
+
+/// Coalesce per-table candidate lists into one sorted unique list
+/// (footnote 7 boosting).
+pub(crate) fn coalesce(mut lists: Vec<Vec<u32>>) -> Vec<u32> {
+    let mut out: Vec<u32> = lists.drain(..).flatten().collect();
+    out.sort_unstable();
+    out.dedup();
+    out
+}
+
+/// Convenience used by several baselines: project `x` against rows of `h`.
+pub(crate) fn projections(h: &Matrix, x: &[f32]) -> Vec<f32> {
+    (0..h.rows()).map(|i| crate::linalg::ops::dot(h.row(i), x)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn coalesce_dedups_and_sorts() {
+        let got = coalesce(vec![vec![3, 1], vec![2, 3], vec![]]);
+        assert_eq!(got, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn bucketize_groups() {
+        let keys = [5u64, 7, 5, 9].into_iter();
+        let map = bucketize(keys);
+        assert_eq!(map[&5], vec![0, 2]);
+        assert_eq!(map[&7], vec![1]);
+        assert_eq!(map[&9], vec![3]);
+    }
+}

@@ -1,0 +1,244 @@
+//! PCA-tree (Verma, Kpotufe & Dasgupta, UAI 2009) — the paper's spatial
+//! partitioning baseline [27].
+//!
+//! A binary tree over the item factors: every internal node splits its
+//! point set at the *median projection onto the top principal direction*
+//! of the points it contains, recursing until leaves hold at most
+//! `max_leaf` items. A user descends to exactly one leaf and retrieves
+//! the items stored there — the rigid-boundary behaviour the paper
+//! contrasts with its soft overlapping regions.
+
+use super::CandidateFilter;
+use crate::linalg::{decomp::power_iteration, ops::dot, Matrix};
+use crate::rng::Rng;
+
+enum Node {
+    Leaf {
+        items: Vec<u32>,
+    },
+    Split {
+        /// Unit principal direction of the node's point set.
+        direction: Vec<f32>,
+        /// Median projection value — left subtree is `< threshold`.
+        threshold: f32,
+        left: Box<Node>,
+        right: Box<Node>,
+    },
+}
+
+/// PCA-tree candidate filter with median splits.
+pub struct PcaTree {
+    root: Node,
+    max_leaf: usize,
+    depth: usize,
+}
+
+/// Power-iteration steps per split (the covariance spectrum of factor
+/// data decays fast; 30 steps are plenty for a median split).
+const POWER_ITERS: usize = 30;
+
+impl PcaTree {
+    /// Build over item factors with at most `max_leaf` items per leaf.
+    pub fn build(items: &Matrix, max_leaf: usize, rng: &mut Rng) -> Self {
+        let max_leaf = max_leaf.max(1);
+        let ids: Vec<u32> = (0..items.rows() as u32).collect();
+        let mut depth = 0;
+        let root = Self::split(items, ids, max_leaf, rng, 0, &mut depth);
+        PcaTree { root, max_leaf, depth }
+    }
+
+    fn split(
+        items: &Matrix,
+        ids: Vec<u32>,
+        max_leaf: usize,
+        rng: &mut Rng,
+        level: usize,
+        depth: &mut usize,
+    ) -> Node {
+        *depth = (*depth).max(level);
+        if ids.len() <= max_leaf {
+            return Node::Leaf { items: ids };
+        }
+        let subset = items.gather_rows(
+            &ids.iter().map(|&i| i as usize).collect::<Vec<_>>(),
+        );
+        let direction = power_iteration(&subset, POWER_ITERS, rng);
+        let mut projs: Vec<f32> =
+            ids.iter().map(|&i| dot(&direction, items.row(i as usize))).collect();
+        let mid = projs.len() / 2;
+        let threshold = {
+            let mut sorted = projs.clone();
+            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            sorted[mid]
+        };
+        let mut left = Vec::with_capacity(mid);
+        let mut right = Vec::with_capacity(ids.len() - mid);
+        for (id, p) in ids.into_iter().zip(projs.drain(..)) {
+            if p < threshold {
+                left.push(id);
+            } else {
+                right.push(id);
+            }
+        }
+        // degenerate spectrum (all projections equal): stop splitting
+        if left.is_empty() || right.is_empty() {
+            let mut items = left;
+            items.extend(right);
+            return Node::Leaf { items };
+        }
+        Node::Split {
+            direction,
+            threshold,
+            left: Box::new(Self::split(items, left, max_leaf, rng, level + 1, depth)),
+            right: Box::new(Self::split(items, right, max_leaf, rng, level + 1, depth)),
+        }
+    }
+
+    /// Leaf-size bound used at build time.
+    pub fn max_leaf(&self) -> usize {
+        self.max_leaf
+    }
+
+    /// Depth of the deepest leaf.
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    /// Number of leaves.
+    pub fn leaves(&self) -> usize {
+        fn count(n: &Node) -> usize {
+            match n {
+                Node::Leaf { .. } => 1,
+                Node::Split { left, right, .. } => count(left) + count(right),
+            }
+        }
+        count(&self.root)
+    }
+}
+
+impl CandidateFilter for PcaTree {
+    fn candidates(&self, user: &[f32]) -> Vec<u32> {
+        let mut node = &self.root;
+        loop {
+            match node {
+                Node::Leaf { items } => {
+                    let mut out = items.clone();
+                    out.sort_unstable();
+                    return out;
+                }
+                Node::Split { direction, threshold, left, right } => {
+                    node = if dot(direction, user) < *threshold {
+                        left
+                    } else {
+                        right
+                    };
+                }
+            }
+        }
+    }
+
+    fn label(&self) -> String {
+        format!("pca-tree(leaf={})", self.max_leaf)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop;
+
+    fn items(n: usize, k: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::seeded(seed);
+        let mut m = Matrix::gaussian(&mut rng, n, k, 1.0);
+        m.normalize_rows();
+        m
+    }
+
+    #[test]
+    fn leaves_partition_the_catalogue() {
+        prop(20, |g| {
+            let n = g.usize_in(1..=200);
+            let k = g.usize_in(2..=12);
+            let m = items(n, k, g.case_seed);
+            let mut rng = Rng::seeded(g.case_seed ^ 1);
+            let tree = PcaTree::build(&m, g.usize_in(1..=32), &mut rng);
+            // every item appears in exactly one leaf
+            fn collect(n: &Node, out: &mut Vec<u32>) {
+                match n {
+                    Node::Leaf { items } => out.extend_from_slice(items),
+                    Node::Split { left, right, .. } => {
+                        collect(left, out);
+                        collect(right, out);
+                    }
+                }
+            }
+            let mut all = Vec::new();
+            collect(&tree.root, &mut all);
+            all.sort_unstable();
+            assert_eq!(all, (0..n as u32).collect::<Vec<_>>());
+        });
+    }
+
+    #[test]
+    fn leaf_sizes_respect_bound() {
+        let m = items(500, 8, 3);
+        let mut rng = Rng::seeded(4);
+        let tree = PcaTree::build(&m, 20, &mut rng);
+        fn check(n: &Node, bound: usize) {
+            match n {
+                Node::Leaf { items } => assert!(items.len() <= bound),
+                Node::Split { left, right, .. } => {
+                    check(left, bound);
+                    check(right, bound);
+                }
+            }
+        }
+        check(&tree.root, 20);
+        assert!(tree.leaves() >= 500 / 20);
+        assert!(tree.depth() >= 4, "500/20 needs >= 25 leaves");
+    }
+
+    #[test]
+    fn item_is_in_its_own_leaf() {
+        let m = items(200, 8, 5);
+        let mut rng = Rng::seeded(6);
+        let tree = PcaTree::build(&m, 16, &mut rng);
+        for i in (0..200).step_by(13) {
+            let c = tree.candidates(m.row(i));
+            assert!(c.binary_search(&(i as u32)).is_ok(), "item {i} lost");
+            assert!(c.len() <= 16);
+        }
+    }
+
+    #[test]
+    fn tiny_catalogue_is_single_leaf() {
+        let m = items(3, 4, 7);
+        let mut rng = Rng::seeded(8);
+        let tree = PcaTree::build(&m, 10, &mut rng);
+        assert_eq!(tree.leaves(), 1);
+        assert_eq!(tree.candidates(&[1.0, 0.0, 0.0, 0.0]), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn duplicate_points_terminate() {
+        // all-identical factors give a zero-variance split; the builder
+        // must not recurse forever.
+        let mut m = Matrix::zeros(50, 4);
+        for i in 0..50 {
+            m.row_mut(i).copy_from_slice(&[0.5, 0.5, 0.5, 0.5]);
+        }
+        let mut rng = Rng::seeded(9);
+        let tree = PcaTree::build(&m, 8, &mut rng);
+        let c = tree.candidates(&[0.5, 0.5, 0.5, 0.5]);
+        assert_eq!(c.len(), 50, "degenerate node becomes one leaf");
+    }
+
+    #[test]
+    fn label_mentions_leaf_bound() {
+        let m = items(10, 4, 10);
+        let mut rng = Rng::seeded(11);
+        let tree = PcaTree::build(&m, 4, &mut rng);
+        assert_eq!(tree.label(), "pca-tree(leaf=4)");
+        assert_eq!(tree.max_leaf(), 4);
+    }
+}

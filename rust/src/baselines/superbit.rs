@@ -1,0 +1,138 @@
+//! Superbit-LSH (Ji et al., NeurIPS 2012) — the paper's baseline [15].
+//!
+//! Identical to SRP-LSH except the random hyperplanes are orthogonalised
+//! in groups ("super-bits") via Gram–Schmidt before projection, which
+//! lowers the variance of the angle estimate and tightens buckets.
+
+use super::{bucketize, coalesce, projections, srp::sign_key, CandidateFilter};
+use crate::linalg::{decomp::gram_schmidt, Matrix};
+use crate::rng::Rng;
+use std::collections::HashMap;
+
+struct Table {
+    hyperplanes: Matrix, // bits x k, orthonormal in groups of <= k
+    buckets: HashMap<u64, Vec<u32>>,
+}
+
+/// Multi-table Superbit-LSH candidate filter.
+pub struct SuperbitLsh {
+    tables: Vec<Table>,
+    bits: usize,
+    depth: usize,
+}
+
+impl SuperbitLsh {
+    /// Build with `bits` hyperplanes per table orthogonalised in groups of
+    /// `depth` (`depth ≤ k`; the classic choice is depth = k).
+    pub fn build(
+        items: &Matrix,
+        bits: usize,
+        depth: usize,
+        tables: usize,
+        rng: &mut Rng,
+    ) -> Self {
+        let k = items.cols();
+        assert!(bits >= 1 && bits <= 64);
+        let depth = depth.clamp(1, k);
+        let tables = (0..tables.max(1))
+            .map(|_| {
+                let mut hyperplanes = Matrix::gaussian(rng, bits, k, 1.0);
+                // orthogonalise consecutive groups of `depth` rows
+                let mut row = 0;
+                while row < bits {
+                    let hi = (row + depth).min(bits);
+                    let mut block = hyperplanes.slice_rows(row, hi);
+                    gram_schmidt(&mut block, rng);
+                    for (off, r) in (row..hi).enumerate() {
+                        hyperplanes.row_mut(r).copy_from_slice(block.row(off));
+                    }
+                    row = hi;
+                }
+                let buckets = bucketize((0..items.rows()).map(|i| {
+                    sign_key(&projections(&hyperplanes, items.row(i)))
+                }));
+                Table { hyperplanes, buckets }
+            })
+            .collect();
+        SuperbitLsh { tables, bits, depth }
+    }
+}
+
+impl CandidateFilter for SuperbitLsh {
+    fn candidates(&self, user: &[f32]) -> Vec<u32> {
+        let lists = self
+            .tables
+            .iter()
+            .map(|t| {
+                let key = sign_key(&projections(&t.hyperplanes, user));
+                t.buckets.get(&key).cloned().unwrap_or_default()
+            })
+            .collect();
+        coalesce(lists)
+    }
+
+    fn label(&self) -> String {
+        format!(
+            "superbit-lsh(b={},d={},L={})",
+            self.bits,
+            self.depth,
+            self.tables.len()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::ops::dot;
+
+    #[test]
+    fn hyperplane_groups_are_orthonormal() {
+        let mut rng = Rng::seeded(11);
+        let items = Matrix::gaussian(&mut rng, 50, 8, 1.0);
+        let sb = SuperbitLsh::build(&items, 8, 8, 1, &mut rng);
+        let h = &sb.tables[0].hyperplanes;
+        for i in 0..8 {
+            assert!((dot(h.row(i), h.row(i)) - 1.0).abs() < 1e-4);
+            for j in 0..i {
+                assert!(dot(h.row(i), h.row(j)).abs() < 1e-4, "rows {i},{j}");
+            }
+        }
+    }
+
+    #[test]
+    fn groups_only_within_depth() {
+        let mut rng = Rng::seeded(12);
+        let items = Matrix::gaussian(&mut rng, 50, 4, 1.0);
+        // bits=8 > k=4 forces two groups of 4; within-group orthogonal
+        let sb = SuperbitLsh::build(&items, 8, 4, 1, &mut rng);
+        let h = &sb.tables[0].hyperplanes;
+        for g in [0usize, 4] {
+            for i in g..g + 4 {
+                for j in g..i {
+                    assert!(dot(h.row(i), h.row(j)).abs() < 1e-4);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn item_is_its_own_candidate() {
+        let mut rng = Rng::seeded(13);
+        let mut items = Matrix::gaussian(&mut rng, 80, 8, 1.0);
+        items.normalize_rows();
+        let sb = SuperbitLsh::build(&items, 8, 8, 2, &mut rng);
+        for i in (0..80).step_by(11) {
+            let c = sb.candidates(items.row(i));
+            assert!(c.binary_search(&(i as u32)).is_ok());
+        }
+    }
+
+    #[test]
+    fn label_format() {
+        let mut rng = Rng::seeded(14);
+        let items = Matrix::gaussian(&mut rng, 10, 4, 1.0);
+        let sb = SuperbitLsh::build(&items, 6, 4, 3, &mut rng);
+        assert_eq!(sb.label(), "superbit-lsh(b=6,d=4,L=3)");
+    }
+}

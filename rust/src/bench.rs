@@ -1,0 +1,214 @@
+//! Benchmark harness (criterion is unavailable offline — DESIGN.md §3).
+//!
+//! `cargo bench` targets use `harness = false` and drive this module:
+//! warm-up, timed iterations with adaptive batching, and a stats report
+//! (mean / p50 / p99 / throughput). Deliberately simple but honest:
+//! wall-clock monotonic timing, no outlier rejection.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    /// Case label.
+    pub name: String,
+    /// Samples, nanoseconds per iteration.
+    pub samples_ns: Vec<f64>,
+    /// Optional items-per-iteration for throughput reporting.
+    pub items_per_iter: Option<f64>,
+}
+
+impl BenchStats {
+    /// Mean ns/iter.
+    pub fn mean_ns(&self) -> f64 {
+        self.samples_ns.iter().sum::<f64>() / self.samples_ns.len().max(1) as f64
+    }
+
+    /// Quantile over samples (q in [0,1]).
+    pub fn quantile_ns(&self, q: f64) -> f64 {
+        if self.samples_ns.is_empty() {
+            return 0.0;
+        }
+        let mut xs = self.samples_ns.clone();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((xs.len() - 1) as f64 * q.clamp(0.0, 1.0)).round() as usize;
+        xs[idx]
+    }
+
+    /// Items/second if `items_per_iter` is set.
+    pub fn throughput(&self) -> Option<f64> {
+        self.items_per_iter.map(|n| n / (self.mean_ns() * 1e-9))
+    }
+
+    /// One formatted report line.
+    pub fn report_line(&self) -> String {
+        let mean = self.mean_ns();
+        let (scaled, unit) = scale_ns(mean);
+        let mut line = format!(
+            "{:<44} {:>9.3} {unit}/iter  p50 {:>9.3}  p99 {:>9.3}",
+            self.name,
+            scaled,
+            self.quantile_ns(0.5) / ns_div(unit),
+            self.quantile_ns(0.99) / ns_div(unit),
+        );
+        if let Some(tp) = self.throughput() {
+            line.push_str(&format!("  {:>12.0} items/s", tp));
+        }
+        line
+    }
+}
+
+fn scale_ns(ns: f64) -> (f64, &'static str) {
+    if ns >= 1e9 {
+        (ns / 1e9, "s ")
+    } else if ns >= 1e6 {
+        (ns / 1e6, "ms")
+    } else if ns >= 1e3 {
+        (ns / 1e3, "us")
+    } else {
+        (ns, "ns")
+    }
+}
+
+fn ns_div(unit: &str) -> f64 {
+    match unit {
+        "s " => 1e9,
+        "ms" => 1e6,
+        "us" => 1e3,
+        _ => 1.0,
+    }
+}
+
+/// Benchmark runner with shared settings.
+pub struct Bencher {
+    /// Warm-up duration before sampling.
+    pub warmup: Duration,
+    /// Total sampling budget per case.
+    pub measure: Duration,
+    /// Number of samples to collect.
+    pub samples: usize,
+    results: Vec<BenchStats>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_secs(2),
+            samples: 30,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    /// Quick-profile runner (used when `GEOMAP_BENCH_FAST=1`, e.g. CI).
+    pub fn from_env() -> Self {
+        let mut b = Bencher::default();
+        if std::env::var("GEOMAP_BENCH_FAST").as_deref() == Ok("1") {
+            b.warmup = Duration::from_millis(20);
+            b.measure = Duration::from_millis(200);
+            b.samples = 10;
+        }
+        b
+    }
+
+    /// Run one case: `f` is called repeatedly; it must do one logical
+    /// iteration per call. `items` is the per-iteration workload size for
+    /// throughput reporting (0 = none).
+    pub fn bench(&mut self, name: &str, items: usize, mut f: impl FnMut()) {
+        // warm-up
+        let start = Instant::now();
+        while start.elapsed() < self.warmup {
+            f();
+        }
+        // calibrate batch size so each sample is >= ~100µs
+        let t0 = Instant::now();
+        f();
+        let once = t0.elapsed().as_nanos().max(1) as f64;
+        let batch = ((100_000.0 / once).ceil() as usize).clamp(1, 1_000_000);
+
+        let mut samples_ns = Vec::with_capacity(self.samples);
+        let budget = Instant::now();
+        for _ in 0..self.samples {
+            if budget.elapsed() > self.measure {
+                break;
+            }
+            let t = Instant::now();
+            for _ in 0..batch {
+                f();
+            }
+            samples_ns.push(t.elapsed().as_nanos() as f64 / batch as f64);
+        }
+        if samples_ns.is_empty() {
+            samples_ns.push(once);
+        }
+        let stats = BenchStats {
+            name: name.to_string(),
+            samples_ns,
+            items_per_iter: if items > 0 { Some(items as f64) } else { None },
+        };
+        println!("{}", stats.report_line());
+        self.results.push(stats);
+    }
+
+    /// All collected results.
+    pub fn results(&self) -> &[BenchStats] {
+        &self.results
+    }
+
+    /// Print a header for a bench group.
+    pub fn group(&self, title: &str) {
+        println!("\n== {title} ==");
+    }
+}
+
+/// Prevent the optimiser from discarding a value (ptr read fence).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_samples() {
+        let mut b = Bencher {
+            warmup: Duration::from_millis(1),
+            measure: Duration::from_millis(50),
+            samples: 5,
+            results: Vec::new(),
+        };
+        let mut acc = 0u64;
+        b.bench("noop-ish", 10, || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        let r = &b.results()[0];
+        assert!(!r.samples_ns.is_empty());
+        assert!(r.mean_ns() > 0.0);
+        assert!(r.throughput().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn stats_quantiles_ordered() {
+        let s = BenchStats {
+            name: "x".into(),
+            samples_ns: vec![10.0, 20.0, 30.0, 40.0, 50.0],
+            items_per_iter: None,
+        };
+        assert!((s.mean_ns() - 30.0).abs() < 1e-9);
+        assert!(s.quantile_ns(0.0) <= s.quantile_ns(0.5));
+        assert!(s.quantile_ns(0.5) <= s.quantile_ns(1.0));
+        assert!(s.throughput().is_none());
+    }
+
+    #[test]
+    fn scale_units() {
+        assert_eq!(scale_ns(5e9).1, "s ");
+        assert_eq!(scale_ns(5e6).1, "ms");
+        assert_eq!(scale_ns(5e3).1, "us");
+        assert_eq!(scale_ns(5.0).1, "ns");
+    }
+}

@@ -1,0 +1,161 @@
+//! Spherical k-means substrate for the paper §5 extension: "for factors
+//! which are known to have clustered form, a simple extension of our
+//! algorithm would involve a non-uniform tessellation scheme with finer
+//! granularity near the cluster centres".
+//!
+//! Lloyd iterations under cosine similarity: assign each factor to its
+//! angularly-closest centre, recompute each centre as the normalised mean
+//! of its members. Factors and centres are treated scale-invariantly
+//! (everything is normalised up front), consistent with the angular
+//! metric the whole stack uses.
+
+use crate::geometry::normalize;
+use crate::linalg::ops::dot;
+use crate::linalg::Matrix;
+use crate::rng::Rng;
+
+/// Result of a spherical k-means run.
+pub struct KMeans {
+    /// Unit-norm cluster centres (c × k).
+    pub centres: Matrix,
+    /// Per-input cluster assignment.
+    pub assignment: Vec<u32>,
+    /// Mean cosine of each point to its centre (clustering quality).
+    pub mean_cosine: f32,
+}
+
+/// Spherical k-means with k-means++-style seeding (distance-weighted
+/// without replacement, which is enough at these scales).
+pub fn spherical_kmeans(
+    data: &Matrix,
+    c: usize,
+    iters: usize,
+    rng: &mut Rng,
+) -> KMeans {
+    assert!(c >= 1 && data.rows() >= c, "need at least c points");
+    let k = data.cols();
+    // normalise a working copy once
+    let mut pts = data.clone();
+    pts.normalize_rows();
+
+    // seeding: first centre uniform, rest proportional to (1 - cos)
+    let mut centres = Matrix::zeros(c, k);
+    centres.row_mut(0).copy_from_slice(pts.row(rng.below(pts.rows())));
+    let mut best_cos = vec![f32::NEG_INFINITY; pts.rows()];
+    for ci in 1..c {
+        for (i, row) in pts.iter_rows().enumerate() {
+            best_cos[i] = best_cos[i].max(dot(row, centres.row(ci - 1)));
+        }
+        let weights: Vec<f64> =
+            best_cos.iter().map(|&b| (1.0 - b as f64).max(1e-9)).collect();
+        let total: f64 = weights.iter().sum();
+        let mut u = rng.uniform() * total;
+        let mut pick = 0;
+        for (i, w) in weights.iter().enumerate() {
+            u -= w;
+            if u <= 0.0 {
+                pick = i;
+                break;
+            }
+        }
+        centres.row_mut(ci).copy_from_slice(pts.row(pick));
+    }
+
+    let mut assignment = vec![0u32; pts.rows()];
+    let mut mean_cosine = 0.0f32;
+    for _ in 0..iters.max(1) {
+        // assignment step
+        mean_cosine = 0.0;
+        for (i, row) in pts.iter_rows().enumerate() {
+            let mut best = (0u32, f32::NEG_INFINITY);
+            for ci in 0..c {
+                let cos = dot(row, centres.row(ci));
+                if cos > best.1 {
+                    best = (ci as u32, cos);
+                }
+            }
+            assignment[i] = best.0;
+            mean_cosine += best.1;
+        }
+        mean_cosine /= pts.rows() as f32;
+        // update step
+        let mut sums = Matrix::zeros(c, k);
+        let mut counts = vec![0usize; c];
+        for (i, row) in pts.iter_rows().enumerate() {
+            let ci = assignment[i] as usize;
+            counts[ci] += 1;
+            for (s, v) in sums.row_mut(ci).iter_mut().zip(row) {
+                *s += v;
+            }
+        }
+        for ci in 0..c {
+            if counts[ci] == 0 {
+                // dead centre: reseed on a random point
+                centres
+                    .row_mut(ci)
+                    .copy_from_slice(pts.row(rng.below(pts.rows())));
+                continue;
+            }
+            let row = sums.row(ci).to_vec();
+            let dst = centres.row_mut(ci);
+            dst.copy_from_slice(&row);
+            normalize(dst);
+        }
+    }
+    KMeans { centres, assignment, mean_cosine }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::clustered_factors;
+    use crate::geometry::angular_distance;
+
+    #[test]
+    fn recovers_well_separated_clusters() {
+        let mut rng = Rng::seeded(1);
+        let data = clustered_factors(&mut rng, 300, 16, 4, 0.1);
+        let km = spherical_kmeans(&data, 4, 20, &mut rng);
+        assert_eq!(km.centres.rows(), 4);
+        assert!(km.mean_cosine > 0.9, "tight clusters: {}", km.mean_cosine);
+        // every point is close to its assigned centre
+        for (i, row) in data.iter_rows().enumerate() {
+            let c = km.centres.row(km.assignment[i] as usize);
+            assert!(angular_distance(row, c) < 0.3);
+        }
+    }
+
+    #[test]
+    fn centres_are_unit_norm() {
+        let mut rng = Rng::seeded(2);
+        let data = clustered_factors(&mut rng, 100, 8, 3, 0.3);
+        let km = spherical_kmeans(&data, 3, 10, &mut rng);
+        for c in km.centres.iter_rows() {
+            let n: f32 = c.iter().map(|v| v * v).sum::<f32>().sqrt();
+            assert!((n - 1.0).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn single_cluster_degenerates_cleanly() {
+        let mut rng = Rng::seeded(3);
+        let data = clustered_factors(&mut rng, 50, 8, 1, 0.2);
+        let km = spherical_kmeans(&data, 1, 5, &mut rng);
+        assert!(km.assignment.iter().all(|&a| a == 0));
+        assert!(km.mean_cosine > 0.8);
+    }
+
+    #[test]
+    fn quality_improves_with_more_centres_on_clustered_data() {
+        let mut rng = Rng::seeded(4);
+        let data = clustered_factors(&mut rng, 400, 16, 6, 0.15);
+        let km1 = spherical_kmeans(&data, 1, 15, &mut rng);
+        let km6 = spherical_kmeans(&data, 6, 15, &mut rng);
+        assert!(
+            km6.mean_cosine > km1.mean_cosine + 0.05,
+            "{} vs {}",
+            km6.mean_cosine,
+            km1.mean_cosine
+        );
+    }
+}

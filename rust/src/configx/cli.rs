@@ -1,0 +1,250 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional args.
+//! Each binary declares its options up-front so `--help` is generated.
+
+use crate::error::{GeomapError, Result};
+use std::collections::BTreeMap;
+
+/// One declared option.
+#[derive(Clone, Debug)]
+struct OptSpec {
+    name: String,
+    help: String,
+    takes_value: bool,
+    default: Option<String>,
+}
+
+/// Declarative CLI parser.
+#[derive(Debug, Default)]
+pub struct Cli {
+    bin: String,
+    about: String,
+    specs: Vec<OptSpec>,
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+    positional: Vec<String>,
+}
+
+impl Cli {
+    /// New parser for binary `bin` with a one-line description.
+    pub fn new(bin: &str, about: &str) -> Self {
+        Cli { bin: bin.to_string(), about: about.to_string(), ..Default::default() }
+    }
+
+    /// Declare a `--key value` option with a default.
+    pub fn opt(mut self, name: &str, default: &str, help: &str) -> Self {
+        self.specs.push(OptSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            takes_value: true,
+            default: Some(default.to_string()),
+        });
+        self
+    }
+
+    /// Declare a boolean `--flag`.
+    pub fn flag(mut self, name: &str, help: &str) -> Self {
+        self.specs.push(OptSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            takes_value: false,
+            default: None,
+        });
+        self
+    }
+
+    /// Parse an explicit argv (without the program name).
+    pub fn parse_from(mut self, args: &[String]) -> Result<Cli> {
+        // seed defaults
+        for s in &self.specs {
+            if let Some(d) = &s.default {
+                self.values.insert(s.name.clone(), d.clone());
+            }
+            if !s.takes_value {
+                self.flags.insert(s.name.clone(), false);
+            }
+        }
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if a == "--help" || a == "-h" {
+                println!("{}", self.help_text());
+                std::process::exit(0);
+            }
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (key, inline) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == key)
+                    .ok_or_else(|| {
+                        GeomapError::Config(format!("unknown option --{key}"))
+                    })?
+                    .clone();
+                if spec.takes_value {
+                    let value = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            args.get(i)
+                                .cloned()
+                                .ok_or_else(|| {
+                                    GeomapError::Config(format!(
+                                        "--{key} requires a value"
+                                    ))
+                                })?
+                        }
+                    };
+                    self.values.insert(key, value);
+                } else {
+                    if inline.is_some() {
+                        return Err(GeomapError::Config(format!(
+                            "--{key} takes no value"
+                        )));
+                    }
+                    self.flags.insert(key, true);
+                }
+            } else {
+                self.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(self)
+    }
+
+    /// Parse the process arguments.
+    pub fn parse(self) -> Result<Cli> {
+        let args: Vec<String> = std::env::args().skip(1).collect();
+        self.parse_from(&args)
+    }
+
+    /// String value of an option (always present thanks to defaults).
+    pub fn get(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .unwrap_or_else(|| panic!("option --{name} was never declared"))
+    }
+
+    /// Typed accessors.
+    pub fn get_usize(&self, name: &str) -> Result<usize> {
+        self.get(name).parse().map_err(|_| {
+            GeomapError::Config(format!("--{name} expects an integer"))
+        })
+    }
+
+    /// f64 option.
+    pub fn get_f64(&self, name: &str) -> Result<f64> {
+        self.get(name).parse().map_err(|_| {
+            GeomapError::Config(format!("--{name} expects a number"))
+        })
+    }
+
+    /// u64 option.
+    pub fn get_u64(&self, name: &str) -> Result<u64> {
+        self.get(name).parse().map_err(|_| {
+            GeomapError::Config(format!("--{name} expects an integer"))
+        })
+    }
+
+    /// Boolean flag state.
+    pub fn is_set(&self, name: &str) -> bool {
+        *self
+            .flags
+            .get(name)
+            .unwrap_or_else(|| panic!("flag --{name} was never declared"))
+    }
+
+    /// Positional arguments in order.
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// Generated help text.
+    pub fn help_text(&self) -> String {
+        let mut s = format!("{} — {}\n\nOPTIONS:\n", self.bin, self.about);
+        for spec in &self.specs {
+            let head = if spec.takes_value {
+                format!("  --{} <v>", spec.name)
+            } else {
+                format!("  --{}", spec.name)
+            };
+            let default = spec
+                .default
+                .as_ref()
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            s.push_str(&format!("{head:<28}{}{default}\n", spec.help));
+        }
+        s.push_str("  --help                    print this help\n");
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    fn base() -> Cli {
+        Cli::new("t", "test")
+            .opt("n", "10", "count")
+            .opt("name", "abc", "label")
+            .flag("fast", "go fast")
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let c = base().parse_from(&argv(&[])).unwrap();
+        assert_eq!(c.get_usize("n").unwrap(), 10);
+        assert_eq!(c.get("name"), "abc");
+        assert!(!c.is_set("fast"));
+    }
+
+    #[test]
+    fn space_and_equals_forms() {
+        let c = base()
+            .parse_from(&argv(&["--n", "5", "--name=xyz", "--fast", "pos1"]))
+            .unwrap();
+        assert_eq!(c.get_usize("n").unwrap(), 5);
+        assert_eq!(c.get("name"), "xyz");
+        assert!(c.is_set("fast"));
+        assert_eq!(c.positional(), &["pos1".to_string()]);
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(base().parse_from(&argv(&["--nope"])).is_err());
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(base().parse_from(&argv(&["--n"])).is_err());
+    }
+
+    #[test]
+    fn flag_with_value_rejected() {
+        assert!(base().parse_from(&argv(&["--fast=1"])).is_err());
+    }
+
+    #[test]
+    fn bad_typed_values() {
+        let c = base().parse_from(&argv(&["--n", "xx"])).unwrap();
+        assert!(c.get_usize("n").is_err());
+        assert!(c.get_f64("n").is_err());
+    }
+
+    #[test]
+    fn help_text_mentions_options() {
+        let h = base().help_text();
+        assert!(h.contains("--n"));
+        assert!(h.contains("--fast"));
+        assert!(h.contains("default: 10"));
+    }
+}

@@ -1,0 +1,228 @@
+//! Configuration system: JSON substrate, CLI parsing, and the typed
+//! configuration structs consumed by the coordinator and experiments.
+
+pub mod cli;
+pub mod json;
+
+pub use cli::Cli;
+pub use json::{obj, Json};
+
+use crate::error::{GeomapError, Result};
+
+/// Which sparse-mapping schema the serving stack uses (paper §4).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SchemaConfig {
+    /// Ternary tessellation (Alg. 2) + one-hot permutation, p = 3k.
+    TernaryOneHot,
+    /// Ternary tessellation + parse-tree permutation (supp. B.2), p ~ O(k²).
+    TernaryParseTree,
+    /// D-ary tessellation (Alg. 3) + D-ary one-hot, p = (2D+1)k.
+    DaryOneHot { d: u32 },
+    /// Ternary tessellation + δ-window parse tree (§4.2.2 general form).
+    TernaryParseTreeDelta { delta: usize },
+}
+
+impl SchemaConfig {
+    /// Parse from CLI string form: `ternary-onehot`, `ternary-parsetree`,
+    /// `dary-onehot:D`.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "ternary-onehot" => Ok(SchemaConfig::TernaryOneHot),
+            "ternary-parsetree" => Ok(SchemaConfig::TernaryParseTree),
+            _ => {
+                if let Some(rest) = s.strip_prefix("ternary-parsetree:") {
+                    let delta: usize = rest.parse().map_err(|_| {
+                        GeomapError::Config(format!("bad δ in schema '{s}'"))
+                    })?;
+                    if delta == 0 {
+                        return Err(GeomapError::Config("δ must be >= 1".into()));
+                    }
+                    Ok(SchemaConfig::TernaryParseTreeDelta { delta })
+                } else if let Some(rest) = s.strip_prefix("dary-onehot:") {
+                    let d: u32 = rest.parse().map_err(|_| {
+                        GeomapError::Config(format!("bad D in schema '{s}'"))
+                    })?;
+                    if d == 0 {
+                        return Err(GeomapError::Config("D must be >= 1".into()));
+                    }
+                    Ok(SchemaConfig::DaryOneHot { d })
+                } else {
+                    Err(GeomapError::Config(format!(
+                        "unknown schema '{s}' (want ternary-onehot | \
+                         ternary-parsetree | dary-onehot:D)"
+                    )))
+                }
+            }
+        }
+    }
+}
+
+/// Coordinator serving configuration.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Factor dimensionality k.
+    pub k: usize,
+    /// Top-κ results per request.
+    pub kappa: usize,
+    /// Sparse-mapping schema.
+    pub schema: SchemaConfig,
+    /// Dynamic batcher: max requests per batch.
+    pub max_batch: usize,
+    /// Dynamic batcher: max wait before flushing a partial batch (µs).
+    pub max_wait_us: u64,
+    /// Number of index shards (worker threads).
+    pub shards: usize,
+    /// Bounded request-queue length for admission control.
+    pub queue_cap: usize,
+    /// Use the XLA runtime for rescoring (pure-rust fallback otherwise).
+    pub use_xla: bool,
+    /// Artifact directory (manifest.json + *.hlo.txt).
+    pub artifacts_dir: String,
+    /// Relative pre-mapping threshold in RMS-coordinate units (paper §6:
+    /// "after some thresholding"); 0 disables, ≈1.3 is the paper's
+    /// operating point.
+    pub threshold: f32,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            k: 32,
+            kappa: 10,
+            schema: SchemaConfig::TernaryParseTree,
+            max_batch: 32,
+            max_wait_us: 500,
+            shards: 2,
+            queue_cap: 4096,
+            use_xla: true,
+            artifacts_dir: "artifacts".to_string(),
+            threshold: 1.3,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Validate invariants; returns self for chaining.
+    pub fn validated(self) -> Result<Self> {
+        if self.k == 0 {
+            return Err(GeomapError::Config("k must be positive".into()));
+        }
+        if self.kappa == 0 {
+            return Err(GeomapError::Config("kappa must be positive".into()));
+        }
+        if self.max_batch == 0 {
+            return Err(GeomapError::Config("max_batch must be positive".into()));
+        }
+        if self.shards == 0 {
+            return Err(GeomapError::Config("shards must be positive".into()));
+        }
+        if self.queue_cap < self.max_batch {
+            return Err(GeomapError::Config(format!(
+                "queue_cap {} < max_batch {}",
+                self.queue_cap, self.max_batch
+            )));
+        }
+        if self.threshold < 0.0 {
+            return Err(GeomapError::Config("threshold must be >= 0".into()));
+        }
+        Ok(self)
+    }
+
+    /// Load overrides from a JSON object (missing keys keep defaults).
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let mut c = ServeConfig::default();
+        if let Some(v) = j.opt("k") {
+            c.k = v.as_usize()?;
+        }
+        if let Some(v) = j.opt("kappa") {
+            c.kappa = v.as_usize()?;
+        }
+        if let Some(v) = j.opt("schema") {
+            c.schema = SchemaConfig::parse(v.as_str()?)?;
+        }
+        if let Some(v) = j.opt("max_batch") {
+            c.max_batch = v.as_usize()?;
+        }
+        if let Some(v) = j.opt("max_wait_us") {
+            c.max_wait_us = v.as_usize()? as u64;
+        }
+        if let Some(v) = j.opt("shards") {
+            c.shards = v.as_usize()?;
+        }
+        if let Some(v) = j.opt("queue_cap") {
+            c.queue_cap = v.as_usize()?;
+        }
+        if let Some(v) = j.opt("use_xla") {
+            c.use_xla = v.as_bool()?;
+        }
+        if let Some(v) = j.opt("artifacts_dir") {
+            c.artifacts_dir = v.as_str()?.to_string();
+        }
+        if let Some(v) = j.opt("threshold") {
+            c.threshold = v.as_f64()? as f32;
+        }
+        c.validated()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schema_parse_forms() {
+        assert_eq!(
+            SchemaConfig::parse("ternary-onehot").unwrap(),
+            SchemaConfig::TernaryOneHot
+        );
+        assert_eq!(
+            SchemaConfig::parse("ternary-parsetree").unwrap(),
+            SchemaConfig::TernaryParseTree
+        );
+        assert_eq!(
+            SchemaConfig::parse("dary-onehot:4").unwrap(),
+            SchemaConfig::DaryOneHot { d: 4 }
+        );
+        assert_eq!(
+            SchemaConfig::parse("ternary-parsetree:2").unwrap(),
+            SchemaConfig::TernaryParseTreeDelta { delta: 2 }
+        );
+        assert!(SchemaConfig::parse("ternary-parsetree:0").is_err());
+        assert!(SchemaConfig::parse("dary-onehot:0").is_err());
+        assert!(SchemaConfig::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn default_config_is_valid() {
+        assert!(ServeConfig::default().validated().is_ok());
+    }
+
+    #[test]
+    fn validation_catches_bad_values() {
+        let mut c = ServeConfig::default();
+        c.kappa = 0;
+        assert!(c.validated().is_err());
+        let mut c = ServeConfig::default();
+        c.queue_cap = 1;
+        assert!(c.validated().is_err());
+    }
+
+    #[test]
+    fn from_json_overrides() {
+        let j = Json::parse(
+            r#"{"k": 16, "schema": "dary-onehot:8", "use_xla": false}"#,
+        )
+        .unwrap();
+        let c = ServeConfig::from_json(&j).unwrap();
+        assert_eq!(c.k, 16);
+        assert_eq!(c.schema, SchemaConfig::DaryOneHot { d: 8 });
+        assert!(!c.use_xla);
+        assert_eq!(c.kappa, 10); // default retained
+    }
+
+    #[test]
+    fn from_json_rejects_bad_types() {
+        let j = Json::parse(r#"{"k": "many"}"#).unwrap();
+        assert!(ServeConfig::from_json(&j).is_err());
+    }
+}

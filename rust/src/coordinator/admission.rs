@@ -1,0 +1,198 @@
+//! Admission control: a bounded MPMC queue with load shedding.
+//!
+//! Producers [`push`](BoundedQueue::push) and are rejected immediately
+//! when the queue is at capacity (overload sheds rather than building an
+//! unbounded backlog — the paper's motivation is *real-time*
+//! recommendation). The batcher consumes via
+//! [`pop_batch`](BoundedQueue::pop_batch), which blocks for the first
+//! element and then drains up to `max_batch` within the `max_wait`
+//! batching window.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Bounded MPMC queue (Mutex + Condvar; no external channel crates).
+pub struct BoundedQueue<T> {
+    inner: Mutex<Inner<T>>,
+    nonempty: Condvar,
+    cap: usize,
+}
+
+struct Inner<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// Why a push was refused.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PushError {
+    /// Queue at capacity — shed the request.
+    Full,
+    /// Queue closed — coordinator is shutting down.
+    Closed,
+}
+
+impl<T> BoundedQueue<T> {
+    /// Queue with the given capacity (≥ 1).
+    pub fn new(cap: usize) -> Self {
+        BoundedQueue {
+            inner: Mutex::new(Inner { items: VecDeque::new(), closed: false }),
+            nonempty: Condvar::new(),
+            cap: cap.max(1),
+        }
+    }
+
+    /// Enqueue or shed.
+    pub fn push(&self, item: T) -> Result<(), PushError> {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return Err(PushError::Closed);
+        }
+        if g.items.len() >= self.cap {
+            return Err(PushError::Full);
+        }
+        g.items.push_back(item);
+        drop(g);
+        self.nonempty.notify_one();
+        Ok(())
+    }
+
+    /// Current depth (diagnostics).
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().items.len()
+    }
+
+    /// True when empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Close the queue: pending items are still drained, new pushes fail,
+    /// and blocked consumers wake up.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.nonempty.notify_all();
+    }
+
+    /// Collect a batch: block until at least one item is available (or
+    /// the queue closes empty → `None`), then keep draining until either
+    /// `max_batch` items are collected or `max_wait` has elapsed since
+    /// the first item.
+    pub fn pop_batch(&self, max_batch: usize, max_wait: Duration) -> Option<Vec<T>> {
+        let mut g = self.inner.lock().unwrap();
+        // phase 1: wait for work
+        while g.items.is_empty() {
+            if g.closed {
+                return None;
+            }
+            g = self.nonempty.wait(g).unwrap();
+        }
+        let mut batch = Vec::with_capacity(max_batch.min(g.items.len()));
+        let deadline = Instant::now() + max_wait;
+        loop {
+            while batch.len() < max_batch {
+                match g.items.pop_front() {
+                    Some(x) => batch.push(x),
+                    None => break,
+                }
+            }
+            if batch.len() >= max_batch || g.closed {
+                break;
+            }
+            // phase 2: linger inside the batching window for stragglers
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (g2, timeout) =
+                self.nonempty.wait_timeout(g, deadline - now).unwrap();
+            g = g2;
+            if timeout.timed_out() && g.items.is_empty() {
+                break;
+            }
+        }
+        Some(batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn push_pop_roundtrip() {
+        let q = BoundedQueue::new(4);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        let b = q.pop_batch(10, Duration::from_millis(1)).unwrap();
+        assert_eq!(b, vec![1, 2]);
+    }
+
+    #[test]
+    fn full_queue_sheds() {
+        let q = BoundedQueue::new(2);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        assert_eq!(q.push(3), Err(PushError::Full));
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn closed_queue_rejects_push_and_drains() {
+        let q = BoundedQueue::new(4);
+        q.push(7).unwrap();
+        q.close();
+        assert_eq!(q.push(8), Err(PushError::Closed));
+        // pending item still drained
+        assert_eq!(q.pop_batch(4, Duration::ZERO).unwrap(), vec![7]);
+        // then consumers see shutdown
+        assert!(q.pop_batch(4, Duration::ZERO).is_none());
+    }
+
+    #[test]
+    fn batch_respects_max_batch() {
+        let q = BoundedQueue::new(16);
+        for i in 0..10 {
+            q.push(i).unwrap();
+        }
+        let b = q.pop_batch(4, Duration::from_millis(1)).unwrap();
+        assert_eq!(b, vec![0, 1, 2, 3]);
+        assert_eq!(q.len(), 6);
+    }
+
+    #[test]
+    fn batching_window_collects_stragglers() {
+        let q = Arc::new(BoundedQueue::new(16));
+        let q2 = Arc::clone(&q);
+        let producer = std::thread::spawn(move || {
+            q2.push(1).unwrap();
+            std::thread::sleep(Duration::from_millis(5));
+            q2.push(2).unwrap();
+        });
+        // window comfortably spans the straggler
+        let b = q.pop_batch(8, Duration::from_millis(200)).unwrap();
+        producer.join().unwrap();
+        assert!(b.contains(&1));
+        // straggler either in this batch (normal) or next (slow CI box)
+        if b.len() == 1 {
+            let b2 = q.pop_batch(8, Duration::from_millis(200)).unwrap();
+            assert_eq!(b2, vec![2]);
+        } else {
+            assert_eq!(b, vec![1, 2]);
+        }
+    }
+
+    #[test]
+    fn consumer_wakes_on_close() {
+        let q: Arc<BoundedQueue<u32>> = Arc::new(BoundedQueue::new(4));
+        let q2 = Arc::clone(&q);
+        let consumer = std::thread::spawn(move || {
+            q2.pop_batch(4, Duration::from_secs(5))
+        });
+        std::thread::sleep(Duration::from_millis(10));
+        q.close();
+        assert!(consumer.join().unwrap().is_none());
+    }
+}

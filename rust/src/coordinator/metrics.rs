@@ -1,0 +1,98 @@
+//! Serving metrics: counters + latency/batch/discard histograms.
+
+use crate::obs::Histogram;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Shared coordinator metrics (all methods are `&self`; everything is
+/// atomic so workers record without locks).
+#[derive(Default)]
+pub struct ServeMetrics {
+    /// Requests accepted into the queue.
+    pub accepted: AtomicU64,
+    /// Requests shed by admission control.
+    pub rejected: AtomicU64,
+    /// Responses delivered.
+    pub completed: AtomicU64,
+    /// Batches dispatched.
+    pub batches: AtomicU64,
+    /// End-to-end latency per request (µs).
+    pub latency_us: Histogram,
+    /// Time spent queued before batching (µs).
+    pub queue_wait_us: Histogram,
+    /// Requests per dispatched batch.
+    pub batch_size: Histogram,
+    /// Candidates surviving the index per request (pre-rescoring).
+    pub candidates: Histogram,
+    /// Catalogue discard per request, in basis points (0..=10000).
+    pub discard_bp: Histogram,
+}
+
+impl ServeMetrics {
+    /// Fresh metrics.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Mean fraction of the catalogue discarded (paper's η).
+    pub fn mean_discard(&self) -> f64 {
+        self.discard_bp.mean() / 10_000.0
+    }
+
+    /// Implied speed-up 1/(1-η) from the measured discard rate (§6).
+    pub fn implied_speedup(&self) -> f64 {
+        let eta = self.mean_discard();
+        if eta >= 1.0 {
+            f64::INFINITY
+        } else {
+            1.0 / (1.0 - eta)
+        }
+    }
+
+    /// Multi-line report for logs and examples.
+    pub fn report(&self) -> String {
+        let acc = self.accepted.load(Ordering::Relaxed);
+        let rej = self.rejected.load(Ordering::Relaxed);
+        let done = self.completed.load(Ordering::Relaxed);
+        let batches = self.batches.load(Ordering::Relaxed).max(1);
+        format!(
+            "requests: accepted {acc}, rejected {rej}, completed {done}\n\
+             batches:  {batches} (size {})\n\
+             latency:  {}\n\
+             queueing: {}\n\
+             pruning:  {} candidates; mean discard {:.1}% → {:.2}x speed-up",
+            self.batch_size.summary_with_unit(""),
+            self.latency_us.summary(),
+            self.queue_wait_us.summary(),
+            self.candidates.summary_with_unit(""),
+            self.mean_discard() * 100.0,
+            self.implied_speedup(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn discard_and_speedup_math() {
+        let m = ServeMetrics::new();
+        // 80% discarded for every request
+        for _ in 0..10 {
+            m.discard_bp.record(8_000);
+        }
+        assert!((m.mean_discard() - 0.8).abs() < 0.02);
+        assert!((m.implied_speedup() - 5.0).abs() < 0.5);
+    }
+
+    #[test]
+    fn report_mentions_counters() {
+        let m = ServeMetrics::new();
+        m.accepted.store(5, Ordering::Relaxed);
+        m.rejected.store(1, Ordering::Relaxed);
+        m.latency_us.record(100);
+        let r = m.report();
+        assert!(r.contains("accepted 5"));
+        assert!(r.contains("rejected 1"));
+    }
+}

@@ -1,0 +1,21 @@
+//! L3 serving coordinator (DESIGN.md §6): admission control, dynamic
+//! batching, shard routing, versioned factor state, batched exact
+//! rescoring through the runtime, and serving metrics.
+//!
+//! The paper's contribution — the geometry-aware sparse map + inverted
+//! index — lives on this data path as each shard's pruning step; the
+//! coordinator is the serving system a deployment would wrap around it.
+
+pub mod admission;
+pub mod metrics;
+pub mod router;
+pub mod server;
+pub mod state;
+pub mod worker;
+
+pub use admission::{BoundedQueue, PushError};
+pub use metrics::ServeMetrics;
+pub use router::merge_topk;
+pub use server::{Coordinator, Response};
+pub use state::{FactorStore, Shard, ShardSet};
+pub use worker::{process_batch, ShardPartial, WorkerScratch};

@@ -1,0 +1,101 @@
+//! Shard routing and result merging.
+//!
+//! Items are partitioned contiguously across shards (see
+//! [`state::FactorStore`](super::state::FactorStore)); every query is
+//! fanned out to all shards (candidates can live anywhere) and the
+//! per-shard top-κ lists are merged here. Merging two sorted κ-lists is
+//! O(κ), so the fan-in cost is negligible next to scoring.
+
+use crate::retrieval::Scored;
+
+/// Merge per-shard descending top-κ lists into one global top-κ.
+pub fn merge_topk(parts: &[Vec<Scored>], kappa: usize) -> Vec<Scored> {
+    // k-way merge by repeatedly taking the best head; shard counts are
+    // small (≤ tens), so the linear head scan beats a heap in practice.
+    let mut cursors = vec![0usize; parts.len()];
+    let mut out = Vec::with_capacity(kappa);
+    while out.len() < kappa {
+        let mut best: Option<(usize, f32)> = None;
+        for (s, part) in parts.iter().enumerate() {
+            if let Some(c) = part.get(cursors[s]) {
+                if best.map(|(_, bs)| c.score > bs).unwrap_or(true) {
+                    best = Some((s, c.score));
+                }
+            }
+        }
+        match best {
+            Some((s, _)) => {
+                out.push(parts[s][cursors[s]]);
+                cursors[s] += 1;
+            }
+            None => break, // all shards exhausted
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scored(pairs: &[(u32, f32)]) -> Vec<Scored> {
+        pairs.iter().map(|&(id, score)| Scored { id, score }).collect()
+    }
+
+    #[test]
+    fn merges_descending() {
+        let a = scored(&[(1, 9.0), (2, 5.0)]);
+        let b = scored(&[(3, 7.0), (4, 1.0)]);
+        let m = merge_topk(&[a, b], 3);
+        assert_eq!(
+            m.iter().map(|s| s.id).collect::<Vec<_>>(),
+            vec![1, 3, 2]
+        );
+    }
+
+    #[test]
+    fn kappa_truncates() {
+        let a = scored(&[(1, 3.0), (2, 2.0), (3, 1.0)]);
+        let m = merge_topk(&[a], 2);
+        assert_eq!(m.len(), 2);
+    }
+
+    #[test]
+    fn short_parts_exhaust_cleanly() {
+        let a = scored(&[(1, 3.0)]);
+        let b = scored(&[]);
+        let m = merge_topk(&[a, b], 5);
+        assert_eq!(m.len(), 1);
+    }
+
+    #[test]
+    fn merge_matches_global_sort_property() {
+        crate::testing::prop(50, |g| {
+            let shards = g.usize_in(1..=5);
+            let kappa = g.usize_in(1..=8);
+            let mut all = Vec::new();
+            let mut parts = Vec::new();
+            let mut next_id = 0u32;
+            for _ in 0..shards {
+                let n = g.usize_in(0..=10);
+                let mut p: Vec<Scored> = (0..n)
+                    .map(|_| {
+                        next_id += 1;
+                        Scored { id: next_id, score: g.gaussian() }
+                    })
+                    .collect();
+                p.sort_by(|x, y| y.score.partial_cmp(&x.score).unwrap());
+                p.truncate(kappa);
+                all.extend_from_slice(&p);
+                parts.push(p);
+            }
+            let merged = merge_topk(&parts, kappa);
+            all.sort_by(|x, y| y.score.partial_cmp(&x.score).unwrap());
+            all.truncate(kappa);
+            assert_eq!(
+                merged.iter().map(|s| s.id).collect::<Vec<_>>(),
+                all.iter().map(|s| s.id).collect::<Vec<_>>()
+            );
+        });
+    }
+}

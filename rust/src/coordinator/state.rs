@@ -1,0 +1,191 @@
+//! Versioned, hot-swappable factor store.
+//!
+//! The paper's motivating workloads (online news) have factors that change
+//! while serving. [`FactorStore`] keeps the current [`ShardSet`] behind an
+//! `RwLock<Arc<_>>`: readers take a cheap snapshot per batch; updates
+//! build a complete shadow shard set (map + index every new item factor)
+//! off the read path and swap it in atomically — no precomputed scores to
+//! invalidate, which is exactly the paper's argument for recomputing from
+//! factors at query time.
+
+use crate::configx::SchemaConfig;
+use crate::embedding::Mapper;
+use crate::error::Result;
+use crate::linalg::Matrix;
+use crate::retrieval::Retriever;
+use std::sync::{Arc, RwLock};
+
+/// One index shard: a contiguous slice of the catalogue with its own
+/// retriever (inverted index + dense factors).
+pub struct Shard {
+    /// Shard ordinal.
+    pub id: usize,
+    /// Global item id of local row 0 (rows are contiguous global ids).
+    pub base_id: u32,
+    /// Pruning + rescoring structures over this shard's items.
+    pub retriever: Retriever,
+}
+
+impl Shard {
+    /// Number of items in this shard.
+    pub fn items(&self) -> usize {
+        self.retriever.items()
+    }
+}
+
+/// An immutable snapshot of the full sharded catalogue.
+pub struct ShardSet {
+    /// Monotonic version (bumped on every swap).
+    pub version: u64,
+    /// The shards, in shard order.
+    pub shards: Vec<Arc<Shard>>,
+    /// Total items across shards.
+    pub total_items: usize,
+}
+
+/// Versioned store of mapped + indexed item factors.
+pub struct FactorStore {
+    schema: SchemaConfig,
+    threshold: f32,
+    n_shards: usize,
+    current: RwLock<Arc<ShardSet>>,
+}
+
+impl FactorStore {
+    /// Build the initial shard set from item factors.
+    pub fn build(
+        schema: SchemaConfig,
+        threshold: f32,
+        items: Matrix,
+        n_shards: usize,
+    ) -> Result<FactorStore> {
+        let n_shards = n_shards.max(1);
+        let set = Self::build_set(schema, threshold, items, n_shards, 1)?;
+        Ok(FactorStore {
+            schema,
+            threshold,
+            n_shards,
+            current: RwLock::new(Arc::new(set)),
+        })
+    }
+
+    fn build_set(
+        schema: SchemaConfig,
+        threshold: f32,
+        items: Matrix,
+        n_shards: usize,
+        version: u64,
+    ) -> Result<ShardSet> {
+        let total = items.rows();
+        let k = items.cols();
+        let per = total.div_ceil(n_shards).max(1);
+        let mut shards = Vec::with_capacity(n_shards);
+        for s in 0..n_shards {
+            let lo = (s * per).min(total);
+            let hi = ((s + 1) * per).min(total);
+            let slice = items.slice_rows(lo, hi);
+            let mapper = Mapper::from_config(schema, k, threshold);
+            shards.push(Arc::new(Shard {
+                id: s,
+                base_id: lo as u32,
+                retriever: Retriever::build(mapper, slice)?,
+            }));
+        }
+        Ok(ShardSet { version, shards, total_items: total })
+    }
+
+    /// Snapshot the current shard set (cheap: one Arc clone).
+    pub fn snapshot(&self) -> Arc<ShardSet> {
+        Arc::clone(&self.current.read().unwrap())
+    }
+
+    /// Replace the catalogue: build a shadow shard set from the new
+    /// factors, then swap atomically. Returns the new version. In-flight
+    /// batches keep serving their old snapshot until they finish.
+    pub fn swap_items(&self, items: Matrix) -> Result<u64> {
+        let version = self.snapshot().version + 1;
+        let set = Self::build_set(
+            self.schema,
+            self.threshold,
+            items,
+            self.n_shards,
+            version,
+        )?;
+        *self.current.write().unwrap() = Arc::new(set);
+        Ok(version)
+    }
+
+    /// Number of shards.
+    pub fn n_shards(&self) -> usize {
+        self.n_shards
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn items(n: usize, k: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::seeded(seed);
+        Matrix::gaussian(&mut rng, n, k, 1.0)
+    }
+
+    fn store(n: usize, shards: usize) -> FactorStore {
+        FactorStore::build(
+            SchemaConfig::TernaryParseTree,
+            0.0,
+            items(n, 8, 1),
+            shards,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn shards_cover_catalogue_contiguously() {
+        let s = store(103, 4);
+        let snap = s.snapshot();
+        assert_eq!(snap.shards.len(), 4);
+        assert_eq!(snap.total_items, 103);
+        let mut expect_base = 0u32;
+        for sh in &snap.shards {
+            assert_eq!(sh.base_id, expect_base);
+            expect_base += sh.items() as u32;
+        }
+        assert_eq!(expect_base, 103);
+    }
+
+    #[test]
+    fn swap_bumps_version_and_changes_items() {
+        let s = store(50, 2);
+        let v0 = s.snapshot().version;
+        let v1 = s.swap_items(items(80, 8, 2)).unwrap();
+        assert_eq!(v1, v0 + 1);
+        let snap = s.snapshot();
+        assert_eq!(snap.version, v1);
+        assert_eq!(snap.total_items, 80);
+    }
+
+    #[test]
+    fn old_snapshot_survives_swap() {
+        let s = store(50, 2);
+        let old = s.snapshot();
+        s.swap_items(items(10, 8, 3)).unwrap();
+        // the pre-swap snapshot still serves its 50 items
+        assert_eq!(old.total_items, 50);
+        assert_eq!(s.snapshot().total_items, 10);
+    }
+
+    #[test]
+    fn more_shards_than_items_degenerates_gracefully() {
+        let s = store(3, 8);
+        let snap = s.snapshot();
+        let nonempty: usize =
+            snap.shards.iter().filter(|sh| sh.items() > 0).count();
+        assert!(nonempty >= 1);
+        assert_eq!(
+            snap.shards.iter().map(|sh| sh.items()).sum::<usize>(),
+            3
+        );
+    }
+}

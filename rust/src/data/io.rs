@@ -1,0 +1,120 @@
+//! Factor-matrix persistence: a minimal self-describing binary format
+//! (`GMF1`: magic, dims, row-major f32 LE) so trained factors can move
+//! between the `train`, `map`, `eval` and `serve` CLI stages without
+//! retraining.
+
+use crate::error::{GeomapError, Result};
+use crate::linalg::Matrix;
+use std::io::{Read, Write};
+
+const MAGIC: &[u8; 4] = b"GMF1";
+
+/// Write a matrix to `path` in GMF1 format.
+pub fn save_matrix(path: &str, m: &Matrix) -> Result<()> {
+    let mut f = std::fs::File::create(path).map_err(|e| GeomapError::io(path, e))?;
+    let mut header = Vec::with_capacity(20);
+    header.extend_from_slice(MAGIC);
+    header.extend_from_slice(&(m.rows() as u64).to_le_bytes());
+    header.extend_from_slice(&(m.cols() as u64).to_le_bytes());
+    f.write_all(&header).map_err(|e| GeomapError::io(path, e))?;
+    // row-major f32 little-endian payload
+    let mut buf = Vec::with_capacity(m.as_slice().len() * 4);
+    for v in m.as_slice() {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+    f.write_all(&buf).map_err(|e| GeomapError::io(path, e))
+}
+
+/// Read a matrix from `path` (GMF1 format).
+pub fn load_matrix(path: &str) -> Result<Matrix> {
+    let mut f = std::fs::File::open(path).map_err(|e| GeomapError::io(path, e))?;
+    let mut header = [0u8; 20];
+    f.read_exact(&mut header).map_err(|e| GeomapError::io(path, e))?;
+    if &header[0..4] != MAGIC {
+        return Err(GeomapError::Artifact(format!(
+            "{path}: not a GMF1 factor file"
+        )));
+    }
+    let rows = u64::from_le_bytes(header[4..12].try_into().unwrap()) as usize;
+    let cols = u64::from_le_bytes(header[12..20].try_into().unwrap()) as usize;
+    let n = rows
+        .checked_mul(cols)
+        .filter(|&n| n <= (1 << 31))
+        .ok_or_else(|| {
+            GeomapError::Artifact(format!("{path}: implausible dims {rows}x{cols}"))
+        })?;
+    let mut buf = vec![0u8; n * 4];
+    f.read_exact(&mut buf).map_err(|e| GeomapError::io(path, e))?;
+    let data: Vec<f32> = buf
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    Matrix::from_vec(rows, cols, data)
+}
+
+/// Save user + item factors as `<stem>.users.gmf` / `<stem>.items.gmf`.
+pub fn save_factors(stem: &str, users: &Matrix, items: &Matrix) -> Result<()> {
+    save_matrix(&format!("{stem}.users.gmf"), users)?;
+    save_matrix(&format!("{stem}.items.gmf"), items)
+}
+
+/// Load a factor pair written by [`save_factors`].
+pub fn load_factors(stem: &str) -> Result<(Matrix, Matrix)> {
+    Ok((
+        load_matrix(&format!("{stem}.users.gmf"))?,
+        load_matrix(&format!("{stem}.items.gmf"))?,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn tmp(name: &str) -> String {
+        let dir = std::env::temp_dir().join("geomap-io-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name).to_string_lossy().into_owned()
+    }
+
+    #[test]
+    fn matrix_roundtrip_exact() {
+        let mut rng = Rng::seeded(1);
+        let m = Matrix::gaussian(&mut rng, 37, 11, 1.0);
+        let path = tmp("roundtrip.gmf");
+        save_matrix(&path, &m).unwrap();
+        let back = load_matrix(&path).unwrap();
+        assert_eq!(m, back);
+    }
+
+    #[test]
+    fn factor_pair_roundtrip() {
+        let mut rng = Rng::seeded(2);
+        let u = Matrix::gaussian(&mut rng, 5, 4, 1.0);
+        let v = Matrix::gaussian(&mut rng, 9, 4, 1.0);
+        let stem = tmp("pair");
+        save_factors(&stem, &u, &v).unwrap();
+        let (u2, v2) = load_factors(&stem).unwrap();
+        assert_eq!(u, u2);
+        assert_eq!(v, v2);
+    }
+
+    #[test]
+    fn rejects_garbage_files() {
+        let path = tmp("garbage.gmf");
+        std::fs::write(&path, b"definitely not a factor file").unwrap();
+        assert!(load_matrix(&path).is_err());
+        assert!(load_matrix(&tmp("missing.gmf")).is_err());
+    }
+
+    #[test]
+    fn rejects_truncated_payload() {
+        let mut rng = Rng::seeded(3);
+        let m = Matrix::gaussian(&mut rng, 8, 8, 1.0);
+        let path = tmp("trunc.gmf");
+        save_matrix(&path, &m).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 7]).unwrap();
+        assert!(load_matrix(&path).is_err());
+    }
+}

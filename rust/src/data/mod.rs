@@ -1,0 +1,120 @@
+//! Datasets for the paper's evaluation (§6): synthetic Gaussian factors
+//! (§6.1) and MovieLens-100k ratings (§6.2).
+//!
+//! The real MovieLens `u.data` file is loaded when present
+//! ([`Ratings::load_movielens`]); offline, [`MovieLensSynth`] generates a
+//! ratings log with the same shape (943 users × 1682 items, ~100k
+//! ratings, Zipf item popularity, clustered low-rank latent structure) —
+//! see the DESIGN.md §3 substitution table for why this preserves the
+//! experiment's geometry.
+
+mod io;
+mod movielens;
+
+pub use io::{load_factors, load_matrix, save_factors, save_matrix};
+pub use movielens::{MovieLensSynth, Rating, Ratings};
+
+use crate::linalg::Matrix;
+use crate::rng::Rng;
+
+/// i.i.d. N(0,1) factors — the paper's §6.1 synthetic setup.
+pub fn gaussian_factors(rng: &mut Rng, n: usize, k: usize) -> Matrix {
+    Matrix::gaussian(rng, n, k, 1.0)
+}
+
+/// Factors drawn from a mixture of `c` von-Mises–Fisher-like clusters on
+/// the sphere: cluster centres are random unit vectors, members are
+/// centre + N(0, spread²) noise, normalised.
+///
+/// Used by the non-uniform tessellation ablation (supp. §B.1 discusses
+/// clustered factor sets) and the MovieLens-like generator.
+pub fn clustered_factors(
+    rng: &mut Rng,
+    n: usize,
+    k: usize,
+    c: usize,
+    spread: f32,
+) -> Matrix {
+    assert!(c >= 1, "need at least one cluster");
+    let mut centres = Matrix::gaussian(rng, c, k, 1.0);
+    centres.normalize_rows();
+    let mut out = Matrix::zeros(n, k);
+    for i in 0..n {
+        let centre = centres.row(rng.below(c)).to_vec();
+        let row = out.row_mut(i);
+        for (j, v) in row.iter_mut().enumerate() {
+            *v = centre[j] + spread * rng.gaussian_f32();
+        }
+    }
+    out.normalize_rows();
+    out
+}
+
+/// The §6.1 synthetic experiment's inputs: user factors U, item factors V
+/// and the true rating matrix R = U Vᵀ is implied (never materialised —
+/// ground-truth top-κ is recomputed per user by the evaluation).
+pub struct SyntheticFactors {
+    /// User factors (n_users × k).
+    pub users: Matrix,
+    /// Item factors (n_items × k).
+    pub items: Matrix,
+}
+
+impl SyntheticFactors {
+    /// Generate the paper's §6.1 workload.
+    pub fn generate(rng: &mut Rng, n_users: usize, n_items: usize, k: usize) -> Self {
+        SyntheticFactors {
+            users: gaussian_factors(rng, n_users, k),
+            items: gaussian_factors(rng, n_items, k),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geometry::angular_distance;
+    use crate::linalg::ops::norm2;
+
+    #[test]
+    fn gaussian_factors_shape_and_moments() {
+        let mut rng = Rng::seeded(1);
+        let m = gaussian_factors(&mut rng, 200, 16);
+        assert_eq!(m.rows(), 200);
+        assert_eq!(m.cols(), 16);
+        let mean: f32 =
+            m.as_slice().iter().sum::<f32>() / (m.as_slice().len() as f32);
+        assert!(mean.abs() < 0.05, "mean={mean}");
+    }
+
+    #[test]
+    fn clustered_factors_are_unit_and_clustered() {
+        let mut rng = Rng::seeded(2);
+        let m = clustered_factors(&mut rng, 300, 16, 5, 0.2);
+        for r in m.iter_rows() {
+            assert!((norm2(r) - 1.0).abs() < 1e-4);
+        }
+        // clustered data: the average nearest-neighbour angular distance
+        // must be well below the ~1.0 expected for uniform random pairs.
+        let mut acc = 0.0f32;
+        for i in 0..50 {
+            let mut best = f32::MAX;
+            for j in 0..300 {
+                if i != j {
+                    best = best.min(angular_distance(m.row(i), m.row(j)));
+                }
+            }
+            acc += best;
+        }
+        assert!(acc / 50.0 < 0.3, "mean nn distance {}", acc / 50.0);
+    }
+
+    #[test]
+    fn synthetic_factors_dims() {
+        let mut rng = Rng::seeded(3);
+        let s = SyntheticFactors::generate(&mut rng, 10, 20, 8);
+        assert_eq!(s.users.rows(), 10);
+        assert_eq!(s.items.rows(), 20);
+        assert_eq!(s.users.cols(), 8);
+    }
+}

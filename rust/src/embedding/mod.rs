@@ -1,0 +1,359 @@
+//! The sparse map φ (paper Algorithm 1): tessellate → zero-pad → permute.
+//!
+//! [`Mapper`] composes a [`Tessellation`] and a [`PermutationMap`] into the
+//! map `φ : R^k → R^p`: factor coordinate `z^j` lands at index `τ_j` of a
+//! p-dimensional sparse vector. Factors that share a Voronoi tile get the
+//! same index map; factors in nearby tiles get overlapping maps.
+
+use crate::configx::SchemaConfig;
+use crate::error::{GeomapError, Result};
+use crate::exec::parallel_map_rows;
+use crate::geometry::threshold;
+use crate::linalg::Matrix;
+use crate::permutation::{OneHot, ParseTree, ParseTreeDelta, PermutationMap};
+use crate::sparse::{SparseMatrix, SparseVec};
+use crate::tessellation::{
+    CappedTernary, DaryTessellation, TernaryTessellation, TessVector, Tessellation,
+};
+
+/// Tessellation choices exposed at the API surface.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TessellationKind {
+    /// Exact ternary (Algorithm 2).
+    Ternary,
+    /// Non-uniform ternary with support capped at `t_max` (supp. §B.1).
+    TernaryCapped { t_max: usize },
+    /// ε-approximate D-ary grid (Algorithm 3).
+    Dary { d: u32 },
+}
+
+/// Permutation-map choices exposed at the API surface.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PermutationKind {
+    /// §4.2.1 one-hot: p = (2D+1)k.
+    OneHot,
+    /// §4.2.2 parse-tree counter scheme: p ~ O(k²).
+    ParseTree,
+    /// §4.2.2 general sliding-window parse tree (δ = 1 ≡ `ParseTree`).
+    ParseTreeDelta {
+        /// Window size δ ≥ 1.
+        delta: usize,
+    },
+}
+
+/// The composed sparse-mapping schema φ.
+pub struct Mapper {
+    tess: Box<dyn Tessellation>,
+    perm: Box<dyn PermutationMap>,
+    k: usize,
+    /// Relative threshold applied to factors before mapping (paper §6:
+    /// factors are fed "after some thresholding"). A coordinate is zeroed
+    /// when `|z_j| < threshold · ‖z‖₂ / √k`, i.e. the cutoff is expressed
+    /// in units of the factor's RMS coordinate magnitude — this keeps the
+    /// whole map scale-invariant (paper §5). `0` disables thresholding;
+    /// `≈1.3` reproduces the paper's ~70-80 % discard operating point on
+    /// both Gaussian and ALS-learned factors.
+    pub threshold: f32,
+}
+
+impl Mapper {
+    /// Build a mapper for k-dimensional factors.
+    pub fn new(tess: TessellationKind, perm: PermutationKind, k: usize) -> Self {
+        let tess: Box<dyn Tessellation> = match tess {
+            TessellationKind::Ternary => Box::new(TernaryTessellation::new(k)),
+            TessellationKind::TernaryCapped { t_max } => {
+                Box::new(CappedTernary::new(k, t_max))
+            }
+            TessellationKind::Dary { d } => Box::new(DaryTessellation::new(k, d)),
+        };
+        let d = tess.d();
+        let perm: Box<dyn PermutationMap> = match perm {
+            PermutationKind::OneHot => Box::new(OneHot::new(k, d)),
+            PermutationKind::ParseTree => Box::new(ParseTree::new(k, d)),
+            PermutationKind::ParseTreeDelta { delta } => {
+                Box::new(ParseTreeDelta::new(k, d, delta))
+            }
+        };
+        Mapper { tess, perm, k, threshold: 0.0 }
+    }
+
+    /// Build a cluster-adaptive mapper (paper §5 extension): fine D-ary
+    /// tessellation within `radius` of the given unit-norm `centres`,
+    /// ternary elsewhere; permutation map per `perm`.
+    pub fn cluster_adaptive(
+        perm: PermutationKind,
+        k: usize,
+        d: u32,
+        centres: crate::linalg::Matrix,
+        radius: f32,
+    ) -> Self {
+        let tess: Box<dyn Tessellation> =
+            Box::new(crate::tessellation::ClusterAdaptive::new(k, d, centres, radius));
+        let perm: Box<dyn PermutationMap> = match perm {
+            PermutationKind::OneHot => Box::new(OneHot::new(k, d)),
+            PermutationKind::ParseTree => Box::new(ParseTree::new(k, d)),
+            PermutationKind::ParseTreeDelta { delta } => {
+                Box::new(ParseTreeDelta::new(k, d, delta))
+            }
+        };
+        Mapper { tess, perm, k, threshold: 0.0 }
+    }
+
+    /// Build from a [`SchemaConfig`] (the config-system entry point).
+    pub fn from_config(schema: SchemaConfig, k: usize, thresh: f32) -> Self {
+        let mut m = match schema {
+            SchemaConfig::TernaryOneHot => {
+                Mapper::new(TessellationKind::Ternary, PermutationKind::OneHot, k)
+            }
+            SchemaConfig::TernaryParseTree => {
+                Mapper::new(TessellationKind::Ternary, PermutationKind::ParseTree, k)
+            }
+            SchemaConfig::DaryOneHot { d } => {
+                Mapper::new(TessellationKind::Dary { d }, PermutationKind::OneHot, k)
+            }
+            SchemaConfig::TernaryParseTreeDelta { delta } => Mapper::new(
+                TessellationKind::Ternary,
+                PermutationKind::ParseTreeDelta { delta },
+                k,
+            ),
+        };
+        m.threshold = thresh;
+        m
+    }
+
+    /// Factor dimensionality k.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Embedding dimensionality p.
+    pub fn p(&self) -> usize {
+        self.perm.p()
+    }
+
+    /// Schema name, e.g. `ternary+parse-tree`.
+    pub fn name(&self) -> String {
+        format!("{}+{}", self.tess.name(), self.perm.name())
+    }
+
+    /// Tessellate a factor (step I of ProcessFactors).
+    pub fn tessellate(&self, z: &[f32]) -> TessVector {
+        self.tess.assign(z)
+    }
+
+    /// Map one factor: φ(z) (steps I-III of ProcessFactors).
+    ///
+    /// Coordinates whose (post-threshold) value is exactly zero carry no
+    /// weight in any inner product, so they are omitted from the stored
+    /// sparse vector — the support of φ(z) is `{τ_j : z^j ≠ 0}`.
+    pub fn map(&self, z: &[f32]) -> Result<SparseVec> {
+        if z.len() != self.k {
+            return Err(GeomapError::Shape(format!(
+                "factor dim {} != k {}",
+                z.len(),
+                self.k
+            )));
+        }
+        let mut zt = z.to_vec();
+        let rms = crate::linalg::ops::norm2(z) / (self.k as f32).sqrt();
+        threshold(&mut zt, self.threshold * rms);
+        let tess = self.tess.assign(&zt);
+        let index_map = self.perm.index_map(&tess);
+        let pairs: Vec<(u32, f32)> = index_map
+            .into_iter()
+            .zip(zt.iter())
+            .filter(|(_, &v)| v != 0.0)
+            .map(|(i, &v)| (i, v))
+            .collect();
+        SparseVec::new(self.p(), pairs)
+    }
+
+    /// Map every row of a factor matrix, in parallel.
+    pub fn map_all(&self, z: &Matrix, threads: usize) -> Result<SparseMatrix> {
+        if z.cols() != self.k {
+            return Err(GeomapError::Shape(format!(
+                "factor dim {} != k {}",
+                z.cols(),
+                self.k
+            )));
+        }
+        let rows: Vec<&[f32]> = z.iter_rows().collect();
+        let mapped = parallel_map_rows(&rows, threads, |_, r| self.map(r));
+        let mut out = SparseMatrix::with_dim(self.p());
+        for m in mapped {
+            out.push(&m?)?;
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geometry::angular_distance;
+    use crate::rng::Rng;
+    use crate::testing::prop;
+
+    fn mapper(k: usize) -> Mapper {
+        Mapper::new(TessellationKind::Ternary, PermutationKind::ParseTree, k)
+    }
+
+    #[test]
+    fn map_preserves_values() {
+        // φ is a permutation of the zero-padded factor: same multiset of
+        // non-zero values, same ℓ2 norm.
+        prop(100, |g| {
+            let k = g.usize_in(2..=32);
+            let z = g.unit_vector(k);
+            let m = mapper(k);
+            let phi = m.map(&z).unwrap();
+            let mut original: Vec<f32> =
+                z.iter().copied().filter(|v| *v != 0.0).collect();
+            let mut mapped: Vec<f32> = phi.values().to_vec();
+            original.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            mapped.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            assert_eq!(original, mapped);
+        });
+    }
+
+    #[test]
+    fn same_region_same_pattern() {
+        // two factors in the same tile have identical index maps, so exact
+        // same sparsity pattern (when fully dense in k).
+        let k = 8;
+        let m = mapper(k);
+        let z1: Vec<f32> = (0..k).map(|i| 1.0 + 0.01 * i as f32).collect();
+        let z2: Vec<f32> = (0..k).map(|i| 1.0 + 0.005 * i as f32).collect();
+        assert_eq!(
+            m.tessellate(&z1).levels,
+            m.tessellate(&z2).levels,
+            "test premise: same tile"
+        );
+        let p1 = m.map(&z1).unwrap();
+        let p2 = m.map(&z2).unwrap();
+        assert_eq!(p1.indices(), p2.indices());
+    }
+
+    #[test]
+    fn inner_product_preserved_within_region() {
+        // permutation is orthogonal: φ(z1)·φ(z2) = z1·z2 when both factors
+        // share a tile (same permutation).
+        prop(60, |g| {
+            let k = g.usize_in(2..=16);
+            let m = mapper(k);
+            let z1 = g.unit_vector(k);
+            // small perturbation stays in the same tile often; only check
+            // when it does.
+            let mut z2 = z1.clone();
+            for v in z2.iter_mut() {
+                *v += g.f32_in(-0.01, 0.01);
+            }
+            if m.tessellate(&z1).levels == m.tessellate(&z2).levels {
+                let dot_orig: f32 = z1.iter().zip(&z2).map(|(a, b)| a * b).sum();
+                let dot_phi = m.map(&z1).unwrap().dot(&m.map(&z2).unwrap());
+                assert!((dot_orig - dot_phi).abs() < 1e-5);
+            }
+        });
+    }
+
+    #[test]
+    fn angularly_close_overlap_more_than_far() {
+        // the headline geometric property, checked in expectation over
+        // random triples: overlap(φ(z), φ(near)) >= overlap(φ(z), φ(far))
+        // on average.
+        let k = 16;
+        let m = mapper(k);
+        let mut rng = Rng::seeded(42);
+        let mut near_overlap = 0usize;
+        let mut far_overlap = 0usize;
+        let mut trials = 0usize;
+        for _ in 0..300 {
+            let mut z: Vec<f32> = (0..k).map(|_| rng.gaussian_f32()).collect();
+            crate::geometry::normalize(&mut z);
+            let mut near = z.clone();
+            for v in near.iter_mut() {
+                *v += 0.15 * rng.gaussian_f32();
+            }
+            let mut far: Vec<f32> = (0..k).map(|_| rng.gaussian_f32()).collect();
+            crate::geometry::normalize(&mut far);
+            if angular_distance(&z, &near) >= angular_distance(&z, &far) {
+                continue; // keep the premise clean
+            }
+            let pz = m.map(&z).unwrap();
+            near_overlap += pz.overlap(&m.map(&near).unwrap());
+            far_overlap += pz.overlap(&m.map(&far).unwrap());
+            trials += 1;
+        }
+        assert!(trials > 100, "premise filtered too much");
+        assert!(
+            near_overlap > far_overlap,
+            "near {near_overlap} vs far {far_overlap} over {trials} trials"
+        );
+    }
+
+    #[test]
+    fn threshold_shrinks_support() {
+        let k = 16;
+        let mut m = mapper(k);
+        let mut rng = Rng::seeded(7);
+        let z: Vec<f32> = (0..k).map(|_| rng.gaussian_f32() * 0.3).collect();
+        let full = m.map(&z).unwrap().nnz();
+        m.threshold = 1.0; // cutoff at the RMS coordinate magnitude
+        let thin = m.map(&z).unwrap().nnz();
+        assert!(thin <= full);
+        assert!(thin < k, "thresholding should drop something here");
+    }
+
+    #[test]
+    fn map_all_matches_map() {
+        let k = 8;
+        let m = mapper(k);
+        let mut rng = Rng::seeded(3);
+        let z = Matrix::gaussian(&mut rng, 20, k, 1.0);
+        let sm = m.map_all(&z, 4).unwrap();
+        assert_eq!(sm.rows(), 20);
+        for i in 0..20 {
+            let single = m.map(z.row(i)).unwrap();
+            let (idx, vals) = sm.row(i);
+            assert_eq!(idx, single.indices());
+            assert_eq!(vals, single.values());
+        }
+    }
+
+    #[test]
+    fn wrong_dim_rejected() {
+        let m = mapper(4);
+        assert!(m.map(&[1.0, 2.0]).is_err());
+        let z = Matrix::zeros(3, 7);
+        assert!(m.map_all(&z, 1).is_err());
+    }
+
+    #[test]
+    fn one_hot_schema_dims() {
+        let m = Mapper::new(TessellationKind::Ternary, PermutationKind::OneHot, 10);
+        assert_eq!(m.p(), 30);
+        let m = Mapper::new(
+            TessellationKind::Dary { d: 4 },
+            PermutationKind::OneHot,
+            10,
+        );
+        assert_eq!(m.p(), 90);
+    }
+
+    #[test]
+    fn from_config_builds_all_variants() {
+        for (cfg, name) in [
+            (SchemaConfig::TernaryOneHot, "ternary+one-hot"),
+            (SchemaConfig::TernaryParseTree, "ternary+parse-tree"),
+            (SchemaConfig::DaryOneHot { d: 4 }, "dary+one-hot"),
+            (
+                SchemaConfig::TernaryParseTreeDelta { delta: 2 },
+                "ternary+parse-tree-delta",
+            ),
+        ] {
+            let m = Mapper::from_config(cfg, 8, 0.1);
+            assert_eq!(m.name(), name);
+            assert_eq!(m.threshold, 0.1);
+        }
+    }
+}

@@ -1,0 +1,58 @@
+//! Crate-wide error type.
+//!
+//! Library modules return [`GeomapError`]; binaries wrap it in
+//! `anyhow::Error` at the edges.
+
+use thiserror::Error;
+
+/// Errors produced by the geomap library.
+#[derive(Debug, Error)]
+pub enum GeomapError {
+    /// Shape mismatch between operands (dims in the message).
+    #[error("shape mismatch: {0}")]
+    Shape(String),
+
+    /// A configuration value is out of range or inconsistent.
+    #[error("invalid config: {0}")]
+    Config(String),
+
+    /// JSON parsing failed (configx::json).
+    #[error("json parse error at byte {offset}: {message}")]
+    Json { offset: usize, message: String },
+
+    /// Artifact manifest / HLO loading problems.
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    /// PJRT / XLA runtime failure.
+    #[error("xla runtime error: {0}")]
+    Xla(String),
+
+    /// The coordinator rejected a request (queue full, shutdown, ...).
+    #[error("request rejected: {0}")]
+    Rejected(String),
+
+    /// I/O error with context.
+    #[error("io error on {path}: {source}")]
+    Io {
+        path: String,
+        #[source]
+        source: std::io::Error,
+    },
+}
+
+impl GeomapError {
+    /// Helper: build an Io error with the offending path attached.
+    pub fn io(path: impl Into<String>, source: std::io::Error) -> Self {
+        GeomapError::Io { path: path.into(), source }
+    }
+}
+
+impl From<xla::Error> for GeomapError {
+    fn from(e: xla::Error) -> Self {
+        GeomapError::Xla(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, GeomapError>;

@@ -1,0 +1,258 @@
+//! Experiment harness for the paper's evaluation (§6, figures 2–5).
+//!
+//! Runs the geomap retriever and every baseline [`CandidateFilter`] over
+//! the same user/item factors, collects [`RecoveryReport`]s, and renders
+//! the paper's artifacts: per-user discard histograms (figs 2a/3a),
+//! recovery-accuracy bars (figs 2b/3b), mean-discard ± std bars (fig 4),
+//! and the accuracy-vs-sparsity sweep (fig 5).
+
+mod render;
+
+pub use render::{render_bars, render_histogram, render_table};
+
+use crate::baselines::{
+    CandidateFilter, ConcomitantLsh, PcaTree, SrpLsh, SuperbitLsh,
+};
+use crate::configx::SchemaConfig;
+use crate::embedding::Mapper;
+use crate::error::Result;
+use crate::linalg::Matrix;
+use crate::retrieval::{RecoveryReport, Retriever};
+use crate::rng::Rng;
+
+/// One evaluated method: label + report.
+#[derive(Clone, Debug)]
+pub struct MethodResult {
+    /// Method label (e.g. `geomap(ternary+parse-tree)`).
+    pub label: String,
+    /// Per-user metrics.
+    pub report: RecoveryReport,
+}
+
+impl MethodResult {
+    /// One summary row: label, mean % discarded, std, mean accuracy,
+    /// implied speed-up.
+    pub fn row(&self) -> Vec<String> {
+        vec![
+            self.label.clone(),
+            format!("{:.1}", self.report.mean_discarded() * 100.0),
+            format!("{:.1}", self.report.std_discarded() * 100.0),
+            format!("{:.3}", self.report.mean_accuracy()),
+            format!("{:.2}x", self.report.implied_speedup()),
+        ]
+    }
+}
+
+/// Baseline hyper-parameters for a comparison run.
+///
+/// Defaults follow the boosting convention of footnote 7: enough tables
+/// that the baselines reach a discard rate comparable to ours, which is
+/// the regime figure 3 compares at.
+#[derive(Clone, Copy, Debug)]
+pub struct BaselineParams {
+    /// SRP-LSH: sign bits per table.
+    pub srp_bits: usize,
+    /// SRP-LSH: number of coalesced tables.
+    pub srp_tables: usize,
+    /// Superbit: bits per table (orthogonalised in groups of `depth`).
+    pub superbit_bits: usize,
+    /// Superbit: orthogonalisation depth.
+    pub superbit_depth: usize,
+    /// Superbit: number of coalesced tables.
+    pub superbit_tables: usize,
+    /// CROS: random directions per table.
+    pub cros_m: usize,
+    /// CROS: rank-order depth l.
+    pub cros_l: usize,
+    /// CROS: number of coalesced tables.
+    pub cros_tables: usize,
+    /// PCA-tree: max items per leaf, as a fraction of the catalogue.
+    pub pca_leaf_frac: f64,
+}
+
+impl Default for BaselineParams {
+    fn default() -> Self {
+        BaselineParams {
+            srp_bits: 3,
+            srp_tables: 2,
+            superbit_bits: 3,
+            superbit_depth: 3,
+            superbit_tables: 2,
+            cros_m: 12,
+            cros_l: 1,
+            cros_tables: 2,
+            pca_leaf_frac: 0.25,
+        }
+    }
+}
+
+/// Full §6 comparison configuration.
+#[derive(Clone, Debug)]
+pub struct Comparison {
+    /// Our schema.
+    pub schema: SchemaConfig,
+    /// Relative pre-mapping threshold (paper: "after some thresholding");
+    /// see [`Mapper::threshold`]. 1.3 is the paper's operating point.
+    pub threshold: f32,
+    /// Top-κ ground truth size.
+    pub kappa: usize,
+    /// Baseline hyper-parameters.
+    pub baselines: BaselineParams,
+    /// RNG seed for the randomised baselines.
+    pub seed: u64,
+}
+
+impl Default for Comparison {
+    fn default() -> Self {
+        Comparison {
+            schema: SchemaConfig::TernaryParseTree,
+            threshold: 1.3,
+            kappa: 10,
+            baselines: BaselineParams::default(),
+            seed: 0xEAA1,
+        }
+    }
+}
+
+impl Comparison {
+    /// Run our method and all four baselines on the given factors.
+    ///
+    /// The first result is always the geomap retriever.
+    pub fn run(&self, users: &Matrix, items: &Matrix) -> Result<Vec<MethodResult>> {
+        let k = items.cols();
+        let mapper = Mapper::from_config(self.schema, k, self.threshold);
+        let label = format!("geomap({})", mapper.name());
+        let retriever = Retriever::build(mapper, items.clone())?;
+        let mut results = vec![MethodResult {
+            label,
+            report: RecoveryReport::evaluate(users, items, self.kappa, |_, u| {
+                retriever.candidates(u).expect("dims match")
+            }),
+        }];
+
+        let p = self.baselines;
+        let mut rng = Rng::seeded(self.seed);
+        let max_leaf =
+            ((items.rows() as f64 * p.pca_leaf_frac).ceil() as usize).max(1);
+        let filters: Vec<Box<dyn CandidateFilter>> = vec![
+            Box::new(SrpLsh::build(items, p.srp_bits, p.srp_tables, &mut rng)),
+            Box::new(SuperbitLsh::build(
+                items,
+                p.superbit_bits,
+                p.superbit_depth,
+                p.superbit_tables,
+                &mut rng,
+            )),
+            Box::new(ConcomitantLsh::build(
+                items, p.cros_m, p.cros_l, p.cros_tables, &mut rng,
+            )),
+            Box::new(PcaTree::build(items, max_leaf, &mut rng)),
+        ];
+        for f in filters {
+            results.push(MethodResult {
+                label: f.label(),
+                report: RecoveryReport::evaluate(users, items, self.kappa, |_, u| {
+                    f.candidates(u)
+                }),
+            });
+        }
+        Ok(results)
+    }
+}
+
+/// One point of the fig-5 sweep: threshold → (sparsity achieved, accuracy).
+#[derive(Clone, Copy, Debug)]
+pub struct SweepPoint {
+    /// Threshold applied before mapping.
+    pub threshold: f32,
+    /// Mean fraction of items discarded.
+    pub mean_discarded: f64,
+    /// Mean recovery accuracy.
+    pub mean_accuracy: f64,
+}
+
+/// Fig 5: trace recovery accuracy against achieved sparsity by sweeping
+/// the pre-mapping threshold.
+pub fn accuracy_sparsity_sweep(
+    schema: SchemaConfig,
+    users: &Matrix,
+    items: &Matrix,
+    kappa: usize,
+    thresholds: &[f32],
+) -> Result<Vec<SweepPoint>> {
+    let k = items.cols();
+    let mut out = Vec::with_capacity(thresholds.len());
+    for &t in thresholds {
+        let mapper = Mapper::from_config(schema, k, t);
+        let retriever = Retriever::build(mapper, items.clone())?;
+        let report = RecoveryReport::evaluate(users, items, kappa, |_, u| {
+            retriever.candidates(u).expect("dims match")
+        });
+        out.push(SweepPoint {
+            threshold: t,
+            mean_discarded: report.mean_discarded(),
+            mean_accuracy: report.mean_accuracy(),
+        });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::gaussian_factors;
+
+    fn small_factors() -> (Matrix, Matrix) {
+        let mut rng = Rng::seeded(2);
+        (gaussian_factors(&mut rng, 30, 8), gaussian_factors(&mut rng, 200, 8))
+    }
+
+    #[test]
+    fn comparison_runs_all_methods() {
+        let (users, items) = small_factors();
+        let results = Comparison::default().run(&users, &items).unwrap();
+        assert_eq!(results.len(), 5);
+        assert!(results[0].label.starts_with("geomap("));
+        for r in &results {
+            assert_eq!(r.report.per_user.len(), 30, "{}", r.label);
+            let d = r.report.mean_discarded();
+            assert!((0.0..=1.0).contains(&d), "{}: {d}", r.label);
+        }
+    }
+
+    #[test]
+    fn geomap_discards_and_recovers() {
+        // the headline shape on synthetic gaussian data: meaningful
+        // discard rate at decent recovery accuracy.
+        let (users, items) = small_factors();
+        let results = Comparison::default().run(&users, &items).unwrap();
+        let ours = &results[0].report;
+        assert!(ours.mean_discarded() > 0.2, "{}", ours.mean_discarded());
+        assert!(ours.mean_accuracy() > 0.5, "{}", ours.mean_accuracy());
+    }
+
+    #[test]
+    fn sweep_is_monotone_in_threshold() {
+        let (users, items) = small_factors();
+        let pts = accuracy_sparsity_sweep(
+            SchemaConfig::TernaryParseTree,
+            &users,
+            &items,
+            5,
+            &[0.0, 0.3, 0.8],
+        )
+        .unwrap();
+        assert_eq!(pts.len(), 3);
+        // a larger threshold thins supports, so discard cannot decrease
+        assert!(pts[2].mean_discarded >= pts[0].mean_discarded - 1e-9);
+    }
+
+    #[test]
+    fn method_row_formats() {
+        let (users, items) = small_factors();
+        let results = Comparison::default().run(&users, &items).unwrap();
+        let row = results[0].row();
+        assert_eq!(row.len(), 5);
+        assert!(row[4].ends_with('x'));
+    }
+}

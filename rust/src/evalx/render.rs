@@ -1,0 +1,113 @@
+//! Terminal rendering for experiment reports: histograms (figs 2a/3a),
+//! bar charts (figs 2b/3b/4) and aligned tables.
+
+/// Render a histogram of per-user percentages (y-axis scaled to the
+/// largest bin, like the paper's "histogram y-axes scaled for
+/// uniformity"). `bins` are counts over equal slices of [0, 100].
+pub fn render_histogram(title: &str, bins: &[usize], width: usize) -> String {
+    let mut out = String::new();
+    out.push_str(title);
+    out.push('\n');
+    let max = bins.iter().copied().max().unwrap_or(0).max(1);
+    let lo_step = 100.0 / bins.len() as f64;
+    for (i, &c) in bins.iter().enumerate() {
+        let lo = lo_step * i as f64;
+        let hi = lo_step * (i + 1) as f64;
+        let bar = "#".repeat((c * width).div_ceil(max).min(width) * usize::from(c > 0));
+        out.push_str(&format!("  {lo:5.1}-{hi:5.1}% |{bar:<width$}| {c}\n"));
+    }
+    out
+}
+
+/// Render labelled horizontal bars for values in [0, 1] (accuracy /
+/// discard-fraction charts). Optional ± error column.
+pub fn render_bars(
+    title: &str,
+    rows: &[(String, f64, Option<f64>)],
+    width: usize,
+) -> String {
+    let mut out = String::new();
+    out.push_str(title);
+    out.push('\n');
+    let label_w = rows.iter().map(|(l, _, _)| l.len()).max().unwrap_or(0);
+    for (label, v, err) in rows {
+        let clamped = v.clamp(0.0, 1.0);
+        let filled = (clamped * width as f64).round() as usize;
+        let bar: String = "█".repeat(filled) + &"·".repeat(width - filled);
+        out.push_str(&format!("  {label:<label_w$} |{bar}| {v:.3}"));
+        if let Some(e) = err {
+            out.push_str(&format!(" ± {e:.3}"));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Render an aligned table with a header row.
+pub fn render_table(header: &[&str], rows: &[Vec<String>]) -> String {
+    let cols = header.len();
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate().take(cols) {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let mut out = String::new();
+    let fmt_row = |cells: Vec<&str>, widths: &[usize]| -> String {
+        let mut line = String::from("  ");
+        for (i, c) in cells.iter().enumerate() {
+            line.push_str(&format!("{c:<w$}  ", w = widths[i]));
+        }
+        line.trim_end().to_string() + "\n"
+    };
+    out.push_str(&fmt_row(header.to_vec(), &widths));
+    out.push_str(&fmt_row(
+        widths.iter().map(|_| "-").collect::<Vec<_>>(),
+        &widths,
+    ));
+    for row in rows {
+        out.push_str(&fmt_row(row.iter().map(|s| s.as_str()).collect(), &widths));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_has_one_line_per_bin() {
+        let s = render_histogram("h", &[0, 2, 5, 1], 20);
+        assert_eq!(s.lines().count(), 5);
+        assert!(s.contains("| 5"));
+        // empty bin renders an empty bar
+        let empty_line = s.lines().nth(1).unwrap();
+        assert!(!empty_line.contains('#'));
+    }
+
+    #[test]
+    fn bars_clamp_and_annotate() {
+        let rows = vec![
+            ("a".to_string(), 0.5, None),
+            ("bb".to_string(), 1.5, Some(0.1)),
+        ];
+        let s = render_bars("t", &rows, 10);
+        assert!(s.contains("± 0.100"));
+        assert!(s.contains("1.500")); // raw value still printed
+        let full_bar = "█".repeat(10);
+        assert!(s.contains(&full_bar), "over-1 values clamp the bar");
+    }
+
+    #[test]
+    fn table_aligns_columns() {
+        let s = render_table(
+            &["method", "x"],
+            &[vec!["longer-name".into(), "1".into()], vec!["m".into(), "22".into()]],
+        );
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        let col = lines[0].find('x').unwrap();
+        assert_eq!(&lines[2][col..col + 1], "1");
+        assert_eq!(&lines[3][col..col + 2], "22");
+    }
+}

@@ -1,0 +1,148 @@
+//! Execution substrate: a dependency-free thread pool and parallel
+//! iteration helpers (no rayon/tokio available offline — see DESIGN.md §3).
+//!
+//! The coordinator uses [`ThreadPool`] for its worker shards; batch mapping
+//! of factors uses [`parallel_chunks`].
+
+mod pool;
+
+pub use pool::ThreadPool;
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Apply `f(start, chunk)` over disjoint chunks of `items` on `threads`
+/// OS threads, where each invocation gets the chunk's start offset.
+///
+/// Results are written by the caller through interior indices, so `f` is
+/// `Fn(usize, &[T])` and must be side-effect-free except through its own
+/// captured synchronisation. For the common "map rows to rows" case use
+/// [`parallel_map_rows`] instead.
+pub fn parallel_chunks<T: Sync>(
+    items: &[T],
+    threads: usize,
+    chunk: usize,
+    f: impl Fn(usize, &[T]) + Sync,
+) {
+    assert!(chunk > 0, "chunk must be positive");
+    if items.is_empty() {
+        return;
+    }
+    let threads = threads.max(1).min(items.len().div_ceil(chunk));
+    if threads == 1 {
+        for start in (0..items.len()).step_by(chunk) {
+            let end = (start + chunk).min(items.len());
+            f(start, &items[start..end]);
+        }
+        return;
+    }
+    let cursor = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let start = cursor.fetch_add(chunk, Ordering::Relaxed);
+                if start >= items.len() {
+                    break;
+                }
+                let end = (start + chunk).min(items.len());
+                f(start, &items[start..end]);
+            });
+        }
+    });
+}
+
+/// Parallel map: `out[i] = f(i, &items[i])` with work-stealing via an
+/// atomic cursor. `out` must have the same length as `items`.
+pub fn parallel_map_rows<T: Sync, U: Send>(
+    items: &[T],
+    threads: usize,
+    f: impl Fn(usize, &T) -> U + Sync,
+) -> Vec<U> {
+    let n = items.len();
+    let mut out: Vec<Option<U>> = Vec::with_capacity(n);
+    out.resize_with(n, || None);
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = threads.max(1).min(n);
+    if threads == 1 {
+        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    // Hand out slots through a cursor; each thread owns disjoint indices so
+    // we can write through a raw pointer wrapper without locking.
+    struct SendPtr<U>(*mut Option<U>);
+    unsafe impl<U: Send> Send for SendPtr<U> {}
+    unsafe impl<U: Send> Sync for SendPtr<U> {}
+    let ptr = SendPtr(out.as_mut_ptr());
+    let ptr = Arc::new(ptr);
+    let cursor = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        let (f, cursor) = (&f, &cursor);
+        for _ in 0..threads {
+            let ptr = Arc::clone(&ptr);
+            scope.spawn(move || loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let v = f(i, &items[i]);
+                // SAFETY: index i is claimed exactly once via fetch_add, so
+                // no two threads write the same slot; the scope guarantees
+                // the buffer outlives the threads.
+                unsafe { ptr.0.add(i).write(Some(v)) };
+            });
+        }
+    });
+    out.into_iter().map(|o| o.expect("all slots filled")).collect()
+}
+
+/// Available parallelism with a safe fallback.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Mutex;
+
+    #[test]
+    fn parallel_chunks_covers_everything() {
+        let items: Vec<u32> = (0..1000).collect();
+        let seen = Mutex::new(vec![false; items.len()]);
+        parallel_chunks(&items, 4, 64, |start, chunk| {
+            let mut s = seen.lock().unwrap();
+            for (off, v) in chunk.iter().enumerate() {
+                assert_eq!(*v as usize, start + off);
+                assert!(!s[start + off], "double visit");
+                s[start + off] = true;
+            }
+        });
+        assert!(seen.into_inner().unwrap().iter().all(|&b| b));
+    }
+
+    #[test]
+    fn parallel_chunks_empty_ok() {
+        let items: Vec<u32> = vec![];
+        parallel_chunks(&items, 4, 8, |_, _| panic!("no work expected"));
+    }
+
+    #[test]
+    fn parallel_map_rows_matches_serial() {
+        let items: Vec<u64> = (0..523).collect();
+        let par = parallel_map_rows(&items, 4, |i, &x| x * 2 + i as u64);
+        let ser: Vec<u64> = items.iter().enumerate().map(|(i, &x)| x * 2 + i as u64).collect();
+        assert_eq!(par, ser);
+    }
+
+    #[test]
+    fn parallel_map_rows_single_thread_path() {
+        let items = vec![1, 2, 3];
+        assert_eq!(parallel_map_rows(&items, 1, |_, &x| x + 1), vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn default_threads_positive() {
+        assert!(default_threads() >= 1);
+    }
+}

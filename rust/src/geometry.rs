@@ -1,0 +1,129 @@
+//! Sphere geometry primitives (paper §2).
+//!
+//! The paper measures factor "compatibility" with the angular distance
+//! `d(x, y) = 1 - xᵀy / (‖x‖‖y‖)` — one minus cosine similarity — so every
+//! algorithm here is scale-invariant in both arguments.
+
+use crate::linalg::ops::{dot, norm2};
+
+/// Angular distance `1 - cos(x, y)` in [0, 2].
+///
+/// Zero vectors are treated as maximally distant (d = 1, the expected
+/// value against a random direction) rather than NaN.
+pub fn angular_distance(x: &[f32], y: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), y.len());
+    let nx = norm2(x);
+    let ny = norm2(y);
+    if nx == 0.0 || ny == 0.0 {
+        return 1.0;
+    }
+    1.0 - dot(x, y) / (nx * ny)
+}
+
+/// Cosine similarity (the paper's `r_ij` for unit factors).
+pub fn cosine(x: &[f32], y: &[f32]) -> f32 {
+    1.0 - angular_distance(x, y)
+}
+
+/// Normalise a vector to the unit sphere in place; returns the original
+/// norm. Zero vectors are left untouched (returns 0).
+pub fn normalize(x: &mut [f32]) -> f32 {
+    let n = norm2(x);
+    if n > 0.0 {
+        for v in x.iter_mut() {
+            *v /= n;
+        }
+    }
+    n
+}
+
+/// Apply |value| thresholding (paper §6: factors are fed "after some
+/// thresholding" so near-zero coordinates don't pollute the support).
+pub fn threshold(x: &mut [f32], eps: f32) {
+    if eps <= 0.0 {
+        return;
+    }
+    for v in x.iter_mut() {
+        if v.abs() < eps {
+            *v = 0.0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop;
+
+    #[test]
+    fn identical_vectors_distance_zero() {
+        let x = [1.0f32, 2.0, -3.0];
+        assert!(angular_distance(&x, &x).abs() < 1e-6);
+    }
+
+    #[test]
+    fn opposite_vectors_distance_two() {
+        let x = [1.0f32, 0.0];
+        let y = [-2.0f32, 0.0];
+        assert!((angular_distance(&x, &y) - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn orthogonal_vectors_distance_one() {
+        let x = [1.0f32, 0.0];
+        let y = [0.0f32, 5.0];
+        assert!((angular_distance(&x, &y) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn zero_vector_convention() {
+        let x = [0.0f32, 0.0];
+        let y = [1.0f32, 0.0];
+        assert_eq!(angular_distance(&x, &y), 1.0);
+    }
+
+    #[test]
+    fn scale_invariance_property() {
+        prop(100, |g| {
+            let k = g.usize_in(2..=32);
+            let x = g.unit_vector(k);
+            let y = g.unit_vector(k);
+            let s = g.f32_in(0.1, 50.0);
+            let xs: Vec<f32> = x.iter().map(|v| v * s).collect();
+            let d1 = angular_distance(&x, &y);
+            let d2 = angular_distance(&xs, &y);
+            assert!((d1 - d2).abs() < 1e-4, "{d1} vs {d2}");
+        });
+    }
+
+    #[test]
+    fn distance_in_range_property() {
+        prop(100, |g| {
+            let k = g.usize_in(1..=16);
+            let x = g.vec_gaussian(k..=k);
+            let y = g.vec_gaussian(k..=k);
+            let d = angular_distance(&x, &y);
+            assert!((-1e-5..=2.0 + 1e-5).contains(&d), "d={d}");
+        });
+    }
+
+    #[test]
+    fn normalize_roundtrip() {
+        let mut x = vec![3.0f32, 4.0];
+        let n = normalize(&mut x);
+        assert!((n - 5.0).abs() < 1e-6);
+        assert!((norm2(&x) - 1.0).abs() < 1e-6);
+        let mut z = vec![0.0f32; 3];
+        assert_eq!(normalize(&mut z), 0.0);
+    }
+
+    #[test]
+    fn threshold_zeroes_small_entries() {
+        let mut x = vec![0.05f32, -0.2, 0.009, 1.0];
+        threshold(&mut x, 0.01);
+        assert_eq!(x, vec![0.05, -0.2, 0.0, 1.0]);
+        let mut y = x.clone();
+        threshold(&mut y, 0.0);
+        assert_eq!(x, y);
+    }
+}

@@ -1,0 +1,311 @@
+//! Inverted index over sparse embeddings (paper §1.1).
+//!
+//! Each embedding dimension `i < p` owns a posting list of the item ids
+//! whose φ(v) is non-zero at `i`. A query walks the posting lists of the
+//! user's support and returns every item hit at least `min_overlap` times
+//! — the paper's retrieval rule with `min_overlap = 1`.
+//!
+//! Posting lists are stored in one contiguous delta-friendly arena (CSR
+//! layout) built in a single pass; the per-query scratch counter is reused
+//! across calls through [`QueryScratch`] so the hot path allocates nothing
+//! after warm-up.
+
+use crate::embedding::Mapper;
+use crate::error::Result;
+use crate::linalg::Matrix;
+use crate::sparse::{SparseMatrix, SparseVec};
+
+/// Immutable inverted index over a set of item embeddings.
+pub struct InvertedIndex {
+    /// posting arena offsets per dimension (len = p + 1)
+    offsets: Vec<u32>,
+    /// item ids, grouped by dimension
+    postings: Vec<u32>,
+    /// number of indexed items
+    items: usize,
+    /// ambient embedding dimension p
+    p: usize,
+}
+
+/// Reusable per-query scratch: overlap counters + touched-list.
+pub struct QueryScratch {
+    counts: Vec<u16>,
+    touched: Vec<u32>,
+}
+
+impl QueryScratch {
+    /// Scratch sized for an index with `items` items.
+    pub fn new(items: usize) -> Self {
+        QueryScratch { counts: vec![0; items], touched: Vec::with_capacity(1024) }
+    }
+}
+
+impl InvertedIndex {
+    /// Build from pre-mapped sparse embeddings.
+    pub fn from_embeddings(emb: &SparseMatrix) -> Self {
+        let p = emb.dim();
+        let n = emb.rows();
+        // counting pass
+        let mut counts = vec![0u32; p];
+        for r in 0..n {
+            for &i in emb.row(r).0 {
+                counts[i as usize] += 1;
+            }
+        }
+        let mut offsets = Vec::with_capacity(p + 1);
+        let mut acc = 0u32;
+        offsets.push(0);
+        for c in &counts {
+            acc += c;
+            offsets.push(acc);
+        }
+        // fill pass (cursor per dimension)
+        let mut cursor = offsets.clone();
+        let mut postings = vec![0u32; acc as usize];
+        for r in 0..n {
+            for &i in emb.row(r).0 {
+                let c = &mut cursor[i as usize];
+                postings[*c as usize] = r as u32;
+                *c += 1;
+            }
+        }
+        InvertedIndex { offsets, postings, items: n, p }
+    }
+
+    /// Convenience: map item factors with `mapper` then build.
+    pub fn build(mapper: &Mapper, items: &Matrix) -> Result<Self> {
+        let emb = mapper.map_all(items, crate::exec::default_threads())?;
+        Ok(Self::from_embeddings(&emb))
+    }
+
+    /// Number of indexed items.
+    pub fn items(&self) -> usize {
+        self.items
+    }
+
+    /// Ambient dimension p.
+    pub fn dim(&self) -> usize {
+        self.p
+    }
+
+    /// Posting list for dimension `i`.
+    pub fn posting(&self, i: usize) -> &[u32] {
+        let (lo, hi) = (self.offsets[i] as usize, self.offsets[i + 1] as usize);
+        &self.postings[lo..hi]
+    }
+
+    /// Total postings stored.
+    pub fn total_postings(&self) -> usize {
+        self.postings.len()
+    }
+
+    /// Candidate items whose sparsity pattern intersects the query support
+    /// in at least `min_overlap` dimensions. Results are sorted, unique.
+    ///
+    /// Allocation-free when reusing `scratch` (counts are reset via the
+    /// touched-list, not a full clear).
+    pub fn query_into(
+        &self,
+        query: &SparseVec,
+        min_overlap: usize,
+        scratch: &mut QueryScratch,
+        out: &mut Vec<u32>,
+    ) {
+        self.query_into_unordered(query, min_overlap, scratch, out);
+        out.sort_unstable();
+    }
+
+    /// [`query_into`] without the final sort — results are unique but in
+    /// posting-traversal order. The serving worker uses this (it unions
+    /// and re-sorts across the batch anyway); the sort shows up at ~15 %
+    /// of query cost on large candidate sets (EXPERIMENTS.md §Perf).
+    pub fn query_into_unordered(
+        &self,
+        query: &SparseVec,
+        min_overlap: usize,
+        scratch: &mut QueryScratch,
+        out: &mut Vec<u32>,
+    ) {
+        assert_eq!(query.dim(), self.p, "query dim mismatch");
+        assert!(scratch.counts.len() >= self.items, "scratch too small");
+        out.clear();
+        scratch.touched.clear();
+        let min = min_overlap.max(1) as u16;
+        for &dim in query.indices() {
+            for &item in self.posting(dim as usize) {
+                let c = &mut scratch.counts[item as usize];
+                if *c == 0 {
+                    scratch.touched.push(item);
+                }
+                *c += 1;
+            }
+        }
+        for &item in &scratch.touched {
+            if scratch.counts[item as usize] >= min {
+                out.push(item);
+            }
+            scratch.counts[item as usize] = 0;
+        }
+    }
+
+    /// Allocating convenience wrapper around [`query_into`].
+    pub fn query(&self, query: &SparseVec, min_overlap: usize) -> Vec<u32> {
+        let mut scratch = QueryScratch::new(self.items);
+        let mut out = Vec::new();
+        self.query_into(query, min_overlap, &mut scratch, &mut out);
+        out
+    }
+
+    /// Index statistics for reports.
+    pub fn stats(&self) -> IndexStats {
+        let nonempty = (0..self.p).filter(|&i| !self.posting(i).is_empty()).count();
+        let max_len = (0..self.p).map(|i| self.posting(i).len()).max().unwrap_or(0);
+        IndexStats {
+            items: self.items,
+            dims: self.p,
+            nonempty_dims: nonempty,
+            total_postings: self.postings.len(),
+            max_posting_len: max_len,
+        }
+    }
+}
+
+/// Summary statistics of an index.
+#[derive(Clone, Debug)]
+pub struct IndexStats {
+    /// Indexed items.
+    pub items: usize,
+    /// Ambient dimension p.
+    pub dims: usize,
+    /// Dimensions with at least one posting.
+    pub nonempty_dims: usize,
+    /// Sum of posting-list lengths (= total nnz of the embeddings).
+    pub total_postings: usize,
+    /// Longest posting list.
+    pub max_posting_len: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::embedding::{PermutationKind, TessellationKind};
+    use crate::rng::Rng;
+    use crate::sparse::SparseMatrix;
+    use crate::testing::prop;
+
+    fn toy_embeddings() -> SparseMatrix {
+        let mut m = SparseMatrix::with_dim(8);
+        let rows = [
+            vec![(0u32, 1.0f32), (3, 2.0)],
+            vec![(3, 1.0), (5, -1.0)],
+            vec![(6, 4.0)],
+        ];
+        for r in rows {
+            m.push(&SparseVec::new(8, r).unwrap()).unwrap();
+        }
+        m
+    }
+
+    #[test]
+    fn postings_match_embeddings() {
+        let idx = InvertedIndex::from_embeddings(&toy_embeddings());
+        assert_eq!(idx.items(), 3);
+        assert_eq!(idx.posting(0), &[0]);
+        assert_eq!(idx.posting(3), &[0, 1]);
+        assert_eq!(idx.posting(5), &[1]);
+        assert_eq!(idx.posting(6), &[2]);
+        assert_eq!(idx.posting(1), &[] as &[u32]);
+        assert_eq!(idx.total_postings(), 5);
+    }
+
+    #[test]
+    fn query_returns_overlapping_items() {
+        let idx = InvertedIndex::from_embeddings(&toy_embeddings());
+        let q = SparseVec::new(8, vec![(3, 1.0)]).unwrap();
+        assert_eq!(idx.query(&q, 1), vec![0, 1]);
+        let q = SparseVec::new(8, vec![(6, 1.0), (5, 1.0)]).unwrap();
+        assert_eq!(idx.query(&q, 1), vec![1, 2]);
+        let q = SparseVec::new(8, vec![(1, 1.0)]).unwrap();
+        assert!(idx.query(&q, 1).is_empty());
+    }
+
+    #[test]
+    fn min_overlap_filters() {
+        let idx = InvertedIndex::from_embeddings(&toy_embeddings());
+        let q = SparseVec::new(8, vec![(0, 1.0), (3, 1.0)]).unwrap();
+        assert_eq!(idx.query(&q, 1), vec![0, 1]);
+        assert_eq!(idx.query(&q, 2), vec![0]);
+        assert!(idx.query(&q, 3).is_empty());
+    }
+
+    #[test]
+    fn query_completeness_property() {
+        // every item whose embedding overlaps the query support in >= m
+        // dims is returned, and nothing else (cross-check vs brute force).
+        prop(60, |g| {
+            let k = g.usize_in(2..=12);
+            let n = g.usize_in(1..=60);
+            let mapper = crate::embedding::Mapper::new(
+                TessellationKind::Ternary,
+                PermutationKind::ParseTree,
+                k,
+            );
+            let mut rng = Rng::seeded(g.case_seed ^ 0xABCD);
+            let items = crate::linalg::Matrix::gaussian(&mut rng, n, k, 1.0);
+            let emb = mapper.map_all(&items, 1).unwrap();
+            let idx = InvertedIndex::from_embeddings(&emb);
+            let q = mapper.map(&g.unit_vector(k)).unwrap();
+            let m = g.usize_in(1..=3);
+            let got = idx.query(&q, m);
+            let mut want = Vec::new();
+            for r in 0..n {
+                let (ridx, rvals) = emb.row(r);
+                let rv = SparseVec::new(
+                    emb.dim(),
+                    ridx.iter().copied().zip(rvals.iter().copied()).collect(),
+                )
+                .unwrap();
+                if q.overlap(&rv) >= m {
+                    want.push(r as u32);
+                }
+            }
+            assert_eq!(got, want);
+        });
+    }
+
+    #[test]
+    fn scratch_reuse_is_clean() {
+        let idx = InvertedIndex::from_embeddings(&toy_embeddings());
+        let mut scratch = QueryScratch::new(idx.items());
+        let mut out = Vec::new();
+        let q1 = SparseVec::new(8, vec![(3, 1.0)]).unwrap();
+        idx.query_into(&q1, 1, &mut scratch, &mut out);
+        assert_eq!(out, vec![0, 1]);
+        // second query must not see stale counts
+        let q2 = SparseVec::new(8, vec![(6, 1.0)]).unwrap();
+        idx.query_into(&q2, 1, &mut scratch, &mut out);
+        assert_eq!(out, vec![2]);
+        let q3 = SparseVec::new(8, vec![(1, 1.0)]).unwrap();
+        idx.query_into(&q3, 1, &mut scratch, &mut out);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn stats_are_consistent() {
+        let idx = InvertedIndex::from_embeddings(&toy_embeddings());
+        let s = idx.stats();
+        assert_eq!(s.items, 3);
+        assert_eq!(s.dims, 8);
+        assert_eq!(s.nonempty_dims, 4);
+        assert_eq!(s.total_postings, 5);
+        assert_eq!(s.max_posting_len, 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "query dim mismatch")]
+    fn dim_mismatch_panics() {
+        let idx = InvertedIndex::from_embeddings(&toy_embeddings());
+        let q = SparseVec::new(9, vec![(3, 1.0)]).unwrap();
+        idx.query(&q, 1);
+    }
+}

@@ -1,0 +1,80 @@
+//! # geomap — Geometry Aware Mappings for High Dimensional Sparse Factors
+//!
+//! A production-grade reproduction of Bhowmik et al., *Geometry Aware
+//! Mappings for High Dimensional Sparse Factors* (AISTATS 2016), built as a
+//! three-layer rust + JAX + Pallas serving stack:
+//!
+//! * **L3 (this crate)** — the serving coordinator: request batching,
+//!   shard routing, the paper's tessellation + permutation sparse-mapping
+//!   pipeline, the inverted index that prunes the candidate set, and exact
+//!   rescoring through AOT-compiled XLA executables (PJRT CPU client).
+//! * **L2 (`python/compile/model.py`)** — the jax compute graph (batched
+//!   scoring, fused score+top-κ, Algorithm 2 tessellation) lowered once to
+//!   HLO text under `artifacts/`.
+//! * **L1 (`python/compile/kernels/`)** — pallas kernels for the scoring
+//!   GEMM and the D-ary tessellation, validated against pure-jnp oracles.
+//!
+//! Python never runs on the request path: `make artifacts` is build-time
+//! only and the `geomap` binary is self-contained afterwards.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use geomap::prelude::*;
+//!
+//! // 1. factors on the unit sphere
+//! let mut rng = Rng::seeded(7);
+//! let items = gaussian_factors(&mut rng, 1000, 32);
+//!
+//! // 2. the paper's map φ = permute ∘ zero-pad ∘ tessellate
+//! let mapper = Mapper::new(
+//!     TessellationKind::Ternary,
+//!     PermutationKind::ParseTree,
+//!     32,
+//! );
+//!
+//! // 3. inverted index over φ(items) + exact rescoring of survivors
+//! let retriever = Retriever::build(mapper, items).unwrap();
+//! let user = gaussian_factors(&mut rng, 1, 32);
+//! let top = retriever.top_k(user.row(0), 10).unwrap();
+//! # let _ = top;
+//! ```
+
+pub mod baselines;
+pub mod bench;
+pub mod cluster;
+pub mod configx;
+pub mod coordinator;
+pub mod data;
+pub mod embedding;
+pub mod error;
+pub mod evalx;
+pub mod exec;
+pub mod geometry;
+pub mod index;
+pub mod linalg;
+pub mod mf;
+pub mod obs;
+pub mod permutation;
+pub mod retrieval;
+pub mod rng;
+pub mod runtime;
+pub mod sparse;
+pub mod tessellation;
+pub mod testing;
+
+/// Convenience re-exports for examples and downstream users.
+pub mod prelude {
+    pub use crate::baselines::{
+        BruteForce, CandidateFilter, ConcomitantLsh, PcaTree, SrpLsh, SuperbitLsh,
+    };
+    pub use crate::data::{gaussian_factors, MovieLensSynth, Ratings};
+    pub use crate::embedding::{Mapper, PermutationKind, TessellationKind};
+    pub use crate::error::GeomapError;
+    pub use crate::index::InvertedIndex;
+    pub use crate::linalg::Matrix;
+    pub use crate::mf::{AlsTrainer, SgdTrainer};
+    pub use crate::retrieval::{RecoveryReport, Retriever};
+    pub use crate::rng::Rng;
+    pub use crate::sparse::SparseVec;
+}

@@ -1,0 +1,231 @@
+//! Decompositions: Gram–Schmidt (Superbit-LSH), power iteration with
+//! deflation (PCA-tree splits), and Cholesky solve (ALS normal equations).
+
+use super::ops::{axpy, dot, norm2, scale};
+use super::Matrix;
+use crate::error::{GeomapError, Result};
+use crate::rng::Rng;
+
+/// Modified Gram–Schmidt orthonormalisation of the rows of `m`, in place.
+///
+/// Rows that become (numerically) zero after projection are re-drawn from
+/// the caller's RNG and re-orthogonalised, so the output is always a full
+/// set of orthonormal rows — required by Superbit-LSH, which batches random
+/// hyperplanes into orthogonal groups.
+pub fn gram_schmidt(m: &mut Matrix, rng: &mut Rng) {
+    let k = m.cols();
+    assert!(m.rows() <= k, "cannot orthonormalise {} rows in R^{k}", m.rows());
+    for i in 0..m.rows() {
+        let mut guard = 0;
+        loop {
+            // project out earlier rows
+            for j in 0..i {
+                let (head, tail) = m.as_mut_slice().split_at_mut(i * k);
+                let qj = &head[j * k..(j + 1) * k];
+                let ri = &mut tail[..k];
+                let c = dot(qj, ri);
+                axpy(-c, qj, ri);
+            }
+            let n = norm2(m.row(i));
+            if n > 1e-6 {
+                scale(1.0 / n, m.row_mut(i));
+                break;
+            }
+            // degenerate: re-draw and retry
+            guard += 1;
+            assert!(guard < 100, "gram_schmidt failed to find independent row");
+            for v in m.row_mut(i).iter_mut() {
+                *v = rng.gaussian_f32();
+            }
+        }
+    }
+}
+
+/// Top principal direction of the rows of `x` (mean-centred) via power
+/// iteration on the covariance operator — without materialising the k×k
+/// covariance when k is small anyway, we just do the two GEMV passes.
+///
+/// Returns a unit vector. Used by the PCA-tree baseline's median splits.
+pub fn power_iteration(x: &Matrix, iters: usize, rng: &mut Rng) -> Vec<f32> {
+    let k = x.cols();
+    let n = x.rows().max(1);
+    // column means
+    let mut mu = vec![0.0f32; k];
+    for r in x.iter_rows() {
+        axpy(1.0, r, &mut mu);
+    }
+    scale(1.0 / n as f32, &mut mu);
+
+    let mut v: Vec<f32> = (0..k).map(|_| rng.gaussian_f32()).collect();
+    let nv = norm2(&v).max(1e-12);
+    scale(1.0 / nv, &mut v);
+
+    let mut w = vec![0.0f32; k];
+    for _ in 0..iters {
+        // w = sum_i (x_i - mu) <x_i - mu, v>  (covariance * v, unscaled)
+        w.iter_mut().for_each(|c| *c = 0.0);
+        for r in x.iter_rows() {
+            let mut proj = 0.0f32;
+            for j in 0..k {
+                proj += (r[j] - mu[j]) * v[j];
+            }
+            for j in 0..k {
+                w[j] += (r[j] - mu[j]) * proj;
+            }
+        }
+        let nw = norm2(&w);
+        if nw < 1e-12 {
+            break; // data has no variance; keep current v
+        }
+        for j in 0..k {
+            v[j] = w[j] / nw;
+        }
+    }
+    v
+}
+
+/// Solve the symmetric positive-definite system `A x = b` via Cholesky.
+///
+/// `a` is a k×k SPD matrix (row-major); consumed by value since we factor
+/// in place. Used for the per-row normal equations in ALS:
+/// `(VᵀV + λI) u_i = Vᵀ r_i`.
+pub fn cholesky_solve(mut a: Matrix, mut b: Vec<f32>) -> Result<Vec<f32>> {
+    let k = a.rows();
+    if a.cols() != k || b.len() != k {
+        return Err(GeomapError::Shape(format!(
+            "cholesky_solve: a is {}x{}, b len {}",
+            a.rows(),
+            a.cols(),
+            b.len()
+        )));
+    }
+    // in-place lower-triangular factorisation A = L Lᵀ
+    for i in 0..k {
+        for j in 0..=i {
+            let mut s = a.get(i, j);
+            for p in 0..j {
+                s -= a.get(i, p) * a.get(j, p);
+            }
+            if i == j {
+                if s <= 0.0 {
+                    return Err(GeomapError::Shape(format!(
+                        "cholesky: non-SPD pivot {s} at {i}"
+                    )));
+                }
+                a.set(i, j, s.sqrt());
+            } else {
+                a.set(i, j, s / a.get(j, j));
+            }
+        }
+    }
+    // forward solve L y = b
+    for i in 0..k {
+        let mut s = b[i];
+        for p in 0..i {
+            s -= a.get(i, p) * b[p];
+        }
+        b[i] = s / a.get(i, i);
+    }
+    // back solve Lᵀ x = y
+    for i in (0..k).rev() {
+        let mut s = b[i];
+        for p in i + 1..k {
+            s -= a.get(p, i) * b[p];
+        }
+        b[i] = s / a.get(i, i);
+    }
+    Ok(b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gram_schmidt_orthonormal() {
+        let mut rng = Rng::seeded(4);
+        let mut m = Matrix::gaussian(&mut rng, 6, 8, 1.0);
+        gram_schmidt(&mut m, &mut rng);
+        for i in 0..6 {
+            assert!((norm2(m.row(i)) - 1.0).abs() < 1e-4);
+            for j in 0..i {
+                assert!(dot(m.row(i), m.row(j)).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn gram_schmidt_handles_dependent_rows() {
+        let mut rng = Rng::seeded(5);
+        let mut m = Matrix::zeros(3, 4);
+        m.row_mut(0).copy_from_slice(&[1.0, 0.0, 0.0, 0.0]);
+        m.row_mut(1).copy_from_slice(&[2.0, 0.0, 0.0, 0.0]); // dependent
+        m.row_mut(2).copy_from_slice(&[0.0, 1.0, 0.0, 0.0]);
+        gram_schmidt(&mut m, &mut rng);
+        for i in 0..3 {
+            assert!((norm2(m.row(i)) - 1.0).abs() < 1e-4);
+            for j in 0..i {
+                assert!(dot(m.row(i), m.row(j)).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn power_iteration_finds_dominant_axis() {
+        let mut rng = Rng::seeded(6);
+        // data stretched 10x along axis 2
+        let mut x = Matrix::gaussian(&mut rng, 500, 5, 1.0);
+        for i in 0..x.rows() {
+            x.row_mut(i)[2] *= 10.0;
+        }
+        let v = power_iteration(&x, 50, &mut rng);
+        assert!(v[2].abs() > 0.98, "v={v:?}");
+    }
+
+    #[test]
+    fn power_iteration_zero_variance_is_finite() {
+        let x = Matrix::zeros(10, 4);
+        let mut rng = Rng::seeded(8);
+        let v = power_iteration(&x, 10, &mut rng);
+        assert!(v.iter().all(|a| a.is_finite()));
+        assert!((norm2(&v) - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn cholesky_solves_spd_system() {
+        // A = Mᵀ M + I  is SPD
+        let mut rng = Rng::seeded(7);
+        let m = Matrix::gaussian(&mut rng, 6, 6, 1.0);
+        let mut a = Matrix::zeros(6, 6);
+        for i in 0..6 {
+            for j in 0..6 {
+                let mut s = if i == j { 1.0 } else { 0.0 };
+                for p in 0..6 {
+                    s += m.get(p, i) * m.get(p, j);
+                }
+                a.set(i, j, s);
+            }
+        }
+        let x_true: Vec<f32> = (0..6).map(|i| i as f32 - 2.5).collect();
+        let mut b = vec![0.0f32; 6];
+        for i in 0..6 {
+            b[i] = (0..6).map(|j| a.get(i, j) * x_true[j]).sum();
+        }
+        let x = cholesky_solve(a, b).unwrap();
+        for (got, want) in x.iter().zip(&x_true) {
+            assert!((got - want).abs() < 1e-3, "{got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_non_spd() {
+        let a = Matrix::from_vec(2, 2, vec![0.0, 0.0, 0.0, 0.0]).unwrap();
+        assert!(cholesky_solve(a, vec![1.0, 1.0]).is_err());
+    }
+
+    #[test]
+    fn cholesky_rejects_bad_shapes() {
+        let a = Matrix::zeros(2, 3);
+        assert!(cholesky_solve(a, vec![1.0, 1.0]).is_err());
+    }
+}

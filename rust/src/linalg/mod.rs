@@ -1,0 +1,227 @@
+//! Dense linear-algebra substrate (no BLAS dependency).
+//!
+//! Provides the small set of dense ops the stack needs:
+//! row-major [`Matrix`], dot/axpy/GEMM ([`ops`]), and the decompositions
+//! used by ALS and the PCA-tree baseline ([`decomp`]).
+
+pub mod decomp;
+pub mod ops;
+
+pub use decomp::{cholesky_solve, gram_schmidt, power_iteration};
+pub use ops::{axpy, dot, gemm_nt, norm2};
+
+use crate::error::{GeomapError, Result};
+use crate::rng::Rng;
+
+/// Row-major dense f32 matrix.
+///
+/// The factor matrices `U` (users × k) and `V` (items × k) throughout the
+/// crate are `Matrix` values; a "factor" is a row.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl Matrix {
+    /// All-zeros matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Build from a flat row-major buffer.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Result<Self> {
+        if data.len() != rows * cols {
+            return Err(GeomapError::Shape(format!(
+                "buffer len {} != {rows}x{cols}",
+                data.len()
+            )));
+        }
+        Ok(Matrix { rows, cols, data })
+    }
+
+    /// Matrix with i.i.d. N(0, sigma²) entries.
+    pub fn gaussian(rng: &mut Rng, rows: usize, cols: usize, sigma: f32) -> Self {
+        let mut m = Matrix::zeros(rows, cols);
+        for v in m.data.iter_mut() {
+            *v = rng.gaussian_f32() * sigma;
+        }
+        m
+    }
+
+    /// Number of rows.
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Number of columns.
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Borrow row `i`.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        debug_assert!(i < self.rows);
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Mutably borrow row `i`.
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        debug_assert!(i < self.rows);
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Flat row-major view.
+    #[inline]
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Flat mutable view.
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Consume into the flat buffer.
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Element accessor (debug-checked).
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    /// Element setter (debug-checked).
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j] = v;
+    }
+
+    /// Normalise every row to unit ℓ2 norm (zero rows are left as-is).
+    pub fn normalize_rows(&mut self) {
+        for i in 0..self.rows {
+            let r = self.row_mut(i);
+            let n = norm2(r);
+            if n > 0.0 {
+                for v in r.iter_mut() {
+                    *v /= n;
+                }
+            }
+        }
+    }
+
+    /// Vertically stack two matrices with equal column counts.
+    pub fn vstack(top: &Matrix, bottom: &Matrix) -> Result<Matrix> {
+        if top.cols != bottom.cols {
+            return Err(GeomapError::Shape(format!(
+                "vstack cols {} != {}",
+                top.cols, bottom.cols
+            )));
+        }
+        let mut data = Vec::with_capacity((top.rows + bottom.rows) * top.cols);
+        data.extend_from_slice(&top.data);
+        data.extend_from_slice(&bottom.data);
+        Ok(Matrix { rows: top.rows + bottom.rows, cols: top.cols, data })
+    }
+
+    /// Copy a contiguous block of rows `[lo, hi)` into a new matrix.
+    pub fn slice_rows(&self, lo: usize, hi: usize) -> Matrix {
+        assert!(lo <= hi && hi <= self.rows);
+        Matrix {
+            rows: hi - lo,
+            cols: self.cols,
+            data: self.data[lo * self.cols..hi * self.cols].to_vec(),
+        }
+    }
+
+    /// Gather the given rows into a new matrix (candidate-tile assembly on
+    /// the serving hot path — kept allocation-lean).
+    pub fn gather_rows(&self, ids: &[usize]) -> Matrix {
+        let mut out = Matrix::zeros(ids.len(), self.cols);
+        for (dst, &src) in ids.iter().enumerate() {
+            out.row_mut(dst).copy_from_slice(self.row(src));
+        }
+        out
+    }
+
+    /// Iterate rows.
+    pub fn iter_rows(&self) -> impl Iterator<Item = &[f32]> {
+        self.data.chunks_exact(self.cols)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_set_get() {
+        let mut m = Matrix::zeros(2, 3);
+        assert_eq!(m.rows(), 2);
+        assert_eq!(m.cols(), 3);
+        m.set(1, 2, 5.0);
+        assert_eq!(m.get(1, 2), 5.0);
+        assert_eq!(m.row(1), &[0.0, 0.0, 5.0]);
+    }
+
+    #[test]
+    fn from_vec_validates_len() {
+        assert!(Matrix::from_vec(2, 2, vec![1.0; 3]).is_err());
+        assert!(Matrix::from_vec(2, 2, vec![1.0; 4]).is_ok());
+    }
+
+    #[test]
+    fn normalize_rows_unit_norm() {
+        let mut rng = Rng::seeded(3);
+        let mut m = Matrix::gaussian(&mut rng, 10, 8, 1.0);
+        m.normalize_rows();
+        for r in m.iter_rows() {
+            assert!((norm2(r) - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn normalize_rows_keeps_zero_rows() {
+        let mut m = Matrix::zeros(2, 4);
+        m.row_mut(0).copy_from_slice(&[3.0, 0.0, 4.0, 0.0]);
+        m.normalize_rows();
+        assert_eq!(m.row(0), &[0.6, 0.0, 0.8, 0.0]);
+        assert_eq!(m.row(1), &[0.0; 4]);
+    }
+
+    #[test]
+    fn vstack_concatenates() {
+        let a = Matrix::from_vec(1, 2, vec![1.0, 2.0]).unwrap();
+        let b = Matrix::from_vec(2, 2, vec![3.0, 4.0, 5.0, 6.0]).unwrap();
+        let c = Matrix::vstack(&a, &b).unwrap();
+        assert_eq!(c.rows(), 3);
+        assert_eq!(c.row(2), &[5.0, 6.0]);
+        assert!(Matrix::vstack(&a, &Matrix::zeros(1, 3)).is_err());
+    }
+
+    #[test]
+    fn gather_rows_picks_rows() {
+        let m = Matrix::from_vec(3, 2, vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0]).unwrap();
+        let g = m.gather_rows(&[2, 0]);
+        assert_eq!(g.row(0), &[4.0, 5.0]);
+        assert_eq!(g.row(1), &[0.0, 1.0]);
+    }
+
+    #[test]
+    fn slice_rows_block() {
+        let m = Matrix::from_vec(3, 2, vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0]).unwrap();
+        let s = m.slice_rows(1, 3);
+        assert_eq!(s.rows(), 2);
+        assert_eq!(s.row(0), &[2.0, 3.0]);
+    }
+}

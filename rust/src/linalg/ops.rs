@@ -1,0 +1,162 @@
+//! Dense kernels: dot, axpy, norms, and a cache-blocked GEMM.
+//!
+//! `gemm_nt` is the pure-rust fallback scorer (`S = U · Vᵀ`) used when the
+//! XLA runtime is disabled and by the brute-force baseline; the serving hot
+//! path normally dispatches the same contraction to the AOT pallas kernel.
+
+use super::Matrix;
+
+/// Inner product of two equal-length slices.
+///
+/// Written as four parallel accumulators so LLVM vectorises it without
+/// `-ffast-math`-style flags (float add is not associative; the explicit
+/// reassociation here is the deliberate, deterministic one).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let chunks = a.len() / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for i in 0..chunks {
+        let j = i * 4;
+        s0 += a[j] * b[j];
+        s1 += a[j + 1] * b[j + 1];
+        s2 += a[j + 2] * b[j + 2];
+        s3 += a[j + 3] * b[j + 3];
+    }
+    let mut tail = 0.0f32;
+    for j in chunks * 4..a.len() {
+        tail += a[j] * b[j];
+    }
+    (s0 + s1) + (s2 + s3) + tail
+}
+
+/// `y += alpha * x`.
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+        *yi += alpha * xi;
+    }
+}
+
+/// ℓ2 norm.
+#[inline]
+pub fn norm2(x: &[f32]) -> f32 {
+    dot(x, x).sqrt()
+}
+
+/// Scale in place: `x *= alpha`.
+#[inline]
+pub fn scale(alpha: f32, x: &mut [f32]) {
+    for v in x.iter_mut() {
+        *v *= alpha;
+    }
+}
+
+/// `C = A · Bᵀ` where A is (m × k) and B is (n × k); C is (m × n).
+///
+/// Both operands are row-major with contiguous k-vectors, so the "NT"
+/// layout needs no transposition: every C[i][j] is a `dot` of two rows.
+/// Blocked over j to keep a B-panel in L1/L2 while sweeping A rows.
+pub fn gemm_nt(a: &Matrix, b: &Matrix, c: &mut Matrix) {
+    assert_eq!(a.cols(), b.cols(), "gemm_nt inner dims");
+    assert_eq!(c.rows(), a.rows(), "gemm_nt out rows");
+    assert_eq!(c.cols(), b.rows(), "gemm_nt out cols");
+    const JB: usize = 64; // B rows per panel
+    let n = b.rows();
+    for j0 in (0..n).step_by(JB) {
+        let j1 = (j0 + JB).min(n);
+        for i in 0..a.rows() {
+            let ai = a.row(i);
+            let ci = c.row_mut(i);
+            for j in j0..j1 {
+                ci[j] = dot(ai, b.row(j));
+            }
+        }
+    }
+}
+
+/// Convenience: allocate and return `A · Bᵀ`.
+pub fn matmul_nt(a: &Matrix, b: &Matrix) -> Matrix {
+    let mut c = Matrix::zeros(a.rows(), b.rows());
+    gemm_nt(a, b, &mut c);
+    c
+}
+
+/// Mean of a slice (0 for empty).
+pub fn mean(xs: &[f32]) -> f32 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f32>() / xs.len() as f32
+}
+
+/// Population standard deviation.
+pub fn stddev(xs: &[f32]) -> f32 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f32>() / xs.len() as f32).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn naive_dot(a: &[f32], b: &[f32]) -> f32 {
+        a.iter().zip(b).map(|(x, y)| x * y).sum()
+    }
+
+    #[test]
+    fn dot_matches_naive_all_lengths() {
+        let mut rng = Rng::seeded(1);
+        for len in 0..40 {
+            let a: Vec<f32> = (0..len).map(|_| rng.gaussian_f32()).collect();
+            let b: Vec<f32> = (0..len).map(|_| rng.gaussian_f32()).collect();
+            let got = dot(&a, &b);
+            let want = naive_dot(&a, &b);
+            assert!((got - want).abs() < 1e-4, "len={len} got={got} want={want}");
+        }
+    }
+
+    #[test]
+    fn axpy_adds_scaled() {
+        let x = vec![1.0, 2.0, 3.0];
+        let mut y = vec![10.0, 10.0, 10.0];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, vec![12.0, 14.0, 16.0]);
+    }
+
+    #[test]
+    fn gemm_nt_matches_naive() {
+        let mut rng = Rng::seeded(2);
+        let a = Matrix::gaussian(&mut rng, 13, 7, 1.0);
+        let b = Matrix::gaussian(&mut rng, 129, 7, 1.0);
+        let c = matmul_nt(&a, &b);
+        for i in 0..a.rows() {
+            for j in 0..b.rows() {
+                let want = naive_dot(a.row(i), b.row(j));
+                assert!((c.get(i, j) - want).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn norm_and_scale() {
+        let mut x = vec![3.0, 4.0];
+        assert!((norm2(&x) - 5.0).abs() < 1e-6);
+        scale(2.0, &mut x);
+        assert_eq!(x, vec![6.0, 8.0]);
+    }
+
+    #[test]
+    fn mean_stddev() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&xs) - 5.0).abs() < 1e-6);
+        assert!((stddev(&xs) - 2.0).abs() < 1e-6);
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(stddev(&[1.0]), 0.0);
+    }
+}

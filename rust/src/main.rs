@@ -1,0 +1,344 @@
+//! `geomap` — the serving launcher and experiment driver.
+//!
+//! Subcommands:
+//!
+//! * `serve`   — start the coordinator over (synthetic or MovieLens-learned)
+//!               item factors and drive it with an open-loop client
+//!               workload; prints throughput/latency/discard metrics.
+//! * `map`     — map a factor set through φ and print embedding + index
+//!               statistics.
+//! * `train`   — learn MF factors (ALS or SGD) from a ratings log and
+//!               save them as `.gmf` files for `serve`/`eval`.
+//! * `eval`    — run the paper's §6 comparison (ours vs SRP/Superbit/
+//!               CROS/PCA-tree) on synthetic or MovieLens-like factors.
+//! * `figures` — regenerate every figure of the paper (2a–5b).
+//! * `selftest`— verify PJRT artifacts against their golden cases.
+//!
+//! Run `geomap <subcommand> --help` for per-command options.
+
+use anyhow::{bail, Context, Result};
+use geomap::configx::{Cli, SchemaConfig, ServeConfig};
+use geomap::coordinator::Coordinator;
+use geomap::data::{gaussian_factors, MovieLensSynth, Ratings};
+use geomap::embedding::Mapper;
+use geomap::evalx::{render_table, Comparison};
+use geomap::index::InvertedIndex;
+use geomap::linalg::Matrix;
+use geomap::mf::AlsTrainer;
+use geomap::rng::Rng;
+use geomap::runtime::{cpu_scorer_factory, xla_scorer_factory, XlaScorer};
+use std::time::Instant;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let rest = if args.is_empty() { &[][..] } else { &args[1..] };
+    match cmd {
+        "serve" => cmd_serve(rest),
+        "map" => cmd_map(rest),
+        "train" => cmd_train(rest),
+        "eval" => cmd_eval(rest),
+        "figures" => cmd_figures(rest),
+        "selftest" => cmd_selftest(rest),
+        "help" | "--help" | "-h" => {
+            print!("{}", USAGE);
+            Ok(())
+        }
+        other => bail!("unknown subcommand '{other}'\n{USAGE}"),
+    }
+}
+
+const USAGE: &str = "\
+geomap — Geometry Aware Mappings for High Dimensional Sparse Factors
+
+USAGE: geomap <serve|map|train|eval|figures|selftest> [options]
+Run `geomap <subcommand> --help` for options.
+";
+
+/// Shared dataset switch: synthetic Gaussian factors or MovieLens-like
+/// ALS-learned factors (real `u.data` if --movielens points at it).
+fn load_factors(
+    dataset: &str,
+    movielens_path: &str,
+    n_users: usize,
+    n_items: usize,
+    k: usize,
+    seed: u64,
+) -> Result<(Matrix, Matrix)> {
+    if let Some(stem) = dataset.strip_prefix("factors:") {
+        // pre-trained factors saved by `geomap train --out <stem>`
+        return geomap::data::load_factors(stem)
+            .with_context(|| format!("loading factor pair '{stem}.*.gmf'"));
+    }
+    match dataset {
+        "synthetic" => {
+            let mut rng = Rng::seeded(seed);
+            Ok((
+                gaussian_factors(&mut rng, n_users, k),
+                gaussian_factors(&mut rng, n_items, k),
+            ))
+        }
+        "movielens" => {
+            let ratings = if !movielens_path.is_empty() {
+                Ratings::load_movielens(movielens_path)
+                    .with_context(|| format!("loading {movielens_path}"))?
+            } else {
+                let mut rng = Rng::seeded(seed);
+                MovieLensSynth::default().generate(&mut rng)
+            };
+            let model = AlsTrainer { k, ..Default::default() }.train(&ratings, 8, seed);
+            Ok((model.user_factors, model.item_factors))
+        }
+        other => bail!(
+            "unknown dataset '{other}' (synthetic | movielens | factors:STEM)"
+        ),
+    }
+}
+
+fn cmd_serve(args: &[String]) -> Result<()> {
+    let cli = Cli::new("geomap serve", "serve top-κ retrieval over item factors")
+        .opt("dataset", "synthetic", "synthetic | movielens | factors:STEM")
+        .opt("movielens", "", "path to a real u.data (movielens dataset)")
+        .opt("users", "512", "synthetic user count (workload size)")
+        .opt("items", "4096", "catalogue size")
+        .opt("k", "32", "factor dimensionality")
+        .opt("kappa", "10", "top-κ per request")
+        .opt("schema", "ternary-parsetree", "sparse-map schema")
+        .opt("threshold", "1.3", "relative pre-mapping threshold (RMS units)")
+        .opt("shards", "2", "index shards (worker threads)")
+        .opt("max-batch", "32", "dynamic batch size cap")
+        .opt("max-wait-us", "500", "batching window (µs)")
+        .opt("requests", "2000", "requests to drive")
+        .opt("clients", "8", "concurrent client threads")
+        .opt("seed", "42", "rng seed")
+        .opt("artifacts", "artifacts", "AOT artifact directory")
+        .flag("cpu", "use the pure-rust scorer instead of PJRT")
+        .parse_from(args)?;
+
+    let k = cli.get_usize("k")?;
+    let seed = cli.get_u64("seed")?;
+    let (users, items) = load_factors(
+        cli.get("dataset"),
+        cli.get("movielens"),
+        cli.get_usize("users")?,
+        cli.get_usize("items")?,
+        k,
+        seed,
+    )?;
+    let k = items.cols();
+
+    let cfg = ServeConfig {
+        k,
+        kappa: cli.get_usize("kappa")?,
+        schema: SchemaConfig::parse(cli.get("schema"))?,
+        max_batch: cli.get_usize("max-batch")?,
+        max_wait_us: cli.get_u64("max-wait-us")?,
+        shards: cli.get_usize("shards")?,
+        queue_cap: 4096,
+        use_xla: !cli.is_set("cpu"),
+        artifacts_dir: cli.get("artifacts").to_string(),
+        threshold: cli.get_f64("threshold")? as f32,
+    };
+    let factory = if cfg.use_xla {
+        xla_scorer_factory(&cfg.artifacts_dir)
+    } else {
+        cpu_scorer_factory()
+    };
+    println!(
+        "starting coordinator: {} items, k={k}, {} shards, scorer={}",
+        items.rows(),
+        cfg.shards,
+        if cfg.use_xla { "xla" } else { "cpu" }
+    );
+    let kappa = cfg.kappa;
+    let coord = std::sync::Arc::new(Coordinator::start(cfg, items, factory)?);
+
+    let total_requests = cli.get_usize("requests")?;
+    let clients = cli.get_usize("clients")?.max(1);
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for c in 0..clients {
+            let coord = std::sync::Arc::clone(&coord);
+            let users = &users;
+            scope.spawn(move || {
+                let mut rng = Rng::seeded(seed ^ (c as u64) << 17);
+                let per = total_requests / clients;
+                for _ in 0..per {
+                    let u = users.row(rng.below(users.rows())).to_vec();
+                    let _ = coord.submit(u, kappa);
+                }
+            });
+        }
+    });
+    let elapsed = t0.elapsed();
+    let done = total_requests / clients * clients;
+    println!(
+        "\n{done} requests in {:.2}s → {:.0} req/s\n",
+        elapsed.as_secs_f64(),
+        done as f64 / elapsed.as_secs_f64()
+    );
+    println!("{}", coord.metrics().report());
+    std::sync::Arc::try_unwrap(coord)
+        .map_err(|_| ())
+        .ok()
+        .map(Coordinator::shutdown);
+    Ok(())
+}
+
+fn cmd_map(args: &[String]) -> Result<()> {
+    let cli = Cli::new("geomap map", "map factors through φ and report stats")
+        .opt("items", "4096", "factor count")
+        .opt("k", "32", "factor dimensionality")
+        .opt("schema", "ternary-parsetree", "sparse-map schema")
+        .opt("threshold", "1.3", "relative pre-mapping threshold (RMS units)")
+        .opt("seed", "7", "rng seed")
+        .parse_from(args)?;
+    let k = cli.get_usize("k")?;
+    let mut rng = Rng::seeded(cli.get_u64("seed")?);
+    let items = gaussian_factors(&mut rng, cli.get_usize("items")?, k);
+    let schema = SchemaConfig::parse(cli.get("schema"))?;
+    let mapper = Mapper::from_config(schema, k, cli.get_f64("threshold")? as f32);
+
+    let t0 = Instant::now();
+    let emb = mapper.map_all(&items, geomap::exec::default_threads())?;
+    let map_time = t0.elapsed();
+    let t1 = Instant::now();
+    let index = InvertedIndex::from_embeddings(&emb);
+    let index_time = t1.elapsed();
+
+    let s = index.stats();
+    println!("schema {}  k={k}  p={}", mapper.name(), mapper.p());
+    println!(
+        "mapped {} factors in {:.1} ms ({:.0}/s), indexed in {:.1} ms",
+        items.rows(),
+        map_time.as_secs_f64() * 1e3,
+        items.rows() as f64 / map_time.as_secs_f64(),
+        index_time.as_secs_f64() * 1e3,
+    );
+    println!(
+        "embeddings: mean nnz {:.1}; index: {} postings over {}/{} dims, \
+         max posting {}",
+        emb.mean_nnz(),
+        s.total_postings,
+        s.nonempty_dims,
+        s.dims,
+        s.max_posting_len
+    );
+    Ok(())
+}
+
+fn cmd_train(args: &[String]) -> Result<()> {
+    let cli = Cli::new("geomap train", "learn MF factors and save them")
+        .opt("movielens", "", "path to a real u.data (synthetic log otherwise)")
+        .opt("trainer", "als", "als | sgd")
+        .opt("k", "16", "latent dimensionality")
+        .opt("epochs", "8", "ALS sweeps / SGD epochs")
+        .opt("test-frac", "0.1", "held-out fraction for RMSE")
+        .opt("seed", "42", "rng seed")
+        .opt("out", "factors", "output stem (<out>.users.gmf / <out>.items.gmf)")
+        .parse_from(args)?;
+    let mut rng = Rng::seeded(cli.get_u64("seed")?);
+    let ratings = if cli.get("movielens").is_empty() {
+        println!("generating a synthetic MovieLens-100k-shaped log");
+        MovieLensSynth::default().generate(&mut rng)
+    } else {
+        Ratings::load_movielens(cli.get("movielens"))?
+    };
+    let (train, test) = ratings.split(cli.get_f64("test-frac")?, &mut rng);
+    let k = cli.get_usize("k")?;
+    let epochs = cli.get_usize("epochs")?;
+    let seed = cli.get_u64("seed")?;
+    let (model, curve) = match cli.get("trainer") {
+        "als" => geomap::mf::AlsTrainer { k, ..Default::default() }
+            .train_logged(&train, epochs, seed),
+        "sgd" => geomap::mf::SgdTrainer { k, ..Default::default() }
+            .train_logged(&train, epochs, seed),
+        other => bail!("unknown trainer '{other}' (als | sgd)"),
+    };
+    for s in &curve {
+        println!("  epoch {}: train rmse {:.4}", s.epoch, s.train_rmse);
+    }
+    println!(
+        "test rmse {:.4} over {} held-out ratings",
+        model.rmse(&test),
+        test.len()
+    );
+    let stem = cli.get("out");
+    geomap::data::save_factors(stem, &model.user_factors, &model.item_factors)?;
+    println!(
+        "saved {}x{k} user + {}x{k} item factors to {stem}.{{users,items}}.gmf          (use --dataset factors:{stem})",
+        model.user_factors.rows(),
+        model.item_factors.rows()
+    );
+    Ok(())
+}
+
+fn cmd_eval(args: &[String]) -> Result<()> {
+    let cli = Cli::new("geomap eval", "paper §6 comparison vs baselines")
+        .opt("dataset", "synthetic", "synthetic | movielens | factors:STEM")
+        .opt("movielens", "", "path to a real u.data")
+        .opt("users", "256", "user count")
+        .opt("items", "2048", "catalogue size")
+        .opt("k", "32", "factor dimensionality")
+        .opt("kappa", "10", "ground-truth top-κ")
+        .opt("schema", "ternary-parsetree", "our schema")
+        .opt("threshold", "1.3", "relative pre-mapping threshold (RMS units)")
+        .opt("seed", "42", "rng seed")
+        .parse_from(args)?;
+    let (users, items) = load_factors(
+        cli.get("dataset"),
+        cli.get("movielens"),
+        cli.get_usize("users")?,
+        cli.get_usize("items")?,
+        cli.get_usize("k")?,
+        cli.get_u64("seed")?,
+    )?;
+    let cmp = Comparison {
+        schema: SchemaConfig::parse(cli.get("schema"))?,
+        threshold: cli.get_f64("threshold")? as f32,
+        kappa: cli.get_usize("kappa")?,
+        seed: cli.get_u64("seed")?,
+        ..Default::default()
+    };
+    let results = cmp.run(&users, &items)?;
+    let rows: Vec<Vec<String>> = results.iter().map(|r| r.row()).collect();
+    println!(
+        "{}",
+        render_table(
+            &["method", "discard %", "± std", "accuracy", "speed-up"],
+            &rows
+        )
+    );
+    Ok(())
+}
+
+fn cmd_figures(args: &[String]) -> Result<()> {
+    // delegate to the figures driver (same code path as the example)
+    let cli = Cli::new("geomap figures", "regenerate the paper's figures 2-5")
+        .opt("seed", "42", "rng seed")
+        .flag("fast", "smaller workloads for quick runs")
+        .parse_from(args)?;
+    geomap_figures::run(cli.get_u64("seed")?, cli.is_set("fast"))
+}
+
+// The figures driver lives in the library-adjacent module shared with
+// examples/figures.rs so both stay in sync.
+#[path = "../../examples/figures_impl.rs"]
+mod geomap_figures;
+
+fn cmd_selftest(args: &[String]) -> Result<()> {
+    let cli = Cli::new("geomap selftest", "verify PJRT artifacts vs goldens")
+        .opt("artifacts", "artifacts", "artifact directory")
+        .parse_from(args)?;
+    let dir = cli.get("artifacts");
+    let scorer = XlaScorer::load(dir)
+        .with_context(|| format!("loading artifacts from {dir} (run `make artifacts`)"))?;
+    let n = scorer.prewarm()?;
+    println!(
+        "PJRT platform {}: compiled {n} scorer modules",
+        scorer.runtime().platform()
+    );
+    let checked = geomap::runtime::verify_goldens(scorer.runtime())?;
+    println!("verified {checked} golden cases — all outputs match");
+    Ok(())
+}

@@ -1,0 +1,167 @@
+//! Matrix-factorisation trainers (the paper's "learned factors" step, §6.2).
+//!
+//! The paper treats factor learning as a black box ("we use the
+//! MovieLens100k dataset to learn low dimensional factors U and V"); we
+//! implement the two standard trainers so the pipeline is end-to-end real:
+//!
+//! * [`SgdTrainer`] — biased SGD (Koren et al. [17]): per-rating updates of
+//!   `μ + b_u + b_i + uᵀv`.
+//! * [`AlsTrainer`] — alternating least squares on the same model, solving
+//!   per-row ridge normal equations `(XᵀX + λI) w = Xᵀ y` via Cholesky.
+//!
+//! Both produce a [`FactorModel`]; its `user_factors` / `item_factors` are
+//! what the geometry-aware mapping consumes (the biases only matter for
+//! RMSE, not for the angular geometry of the factors).
+
+mod als;
+mod sgd;
+
+pub use als::AlsTrainer;
+pub use sgd::SgdTrainer;
+
+use crate::data::Ratings;
+use crate::linalg::{ops::dot, Matrix};
+
+/// A trained biased-MF model `r̂ = μ + b_u + b_i + uᵀv`.
+#[derive(Clone, Debug)]
+pub struct FactorModel {
+    /// Global mean rating μ.
+    pub mu: f32,
+    /// Per-user bias.
+    pub user_bias: Vec<f32>,
+    /// Per-item bias.
+    pub item_bias: Vec<f32>,
+    /// User factors (n_users × k).
+    pub user_factors: Matrix,
+    /// Item factors (n_items × k).
+    pub item_factors: Matrix,
+}
+
+impl FactorModel {
+    /// Fresh model with small random factors (scaled so initial `uᵀv`
+    /// is well inside the rating range).
+    pub fn init(n_users: usize, n_items: usize, k: usize, mu: f32, seed: u64) -> Self {
+        let mut rng = crate::rng::Rng::seeded(seed);
+        let sigma = 1.0 / (k as f32).sqrt();
+        FactorModel {
+            mu,
+            user_bias: vec![0.0; n_users],
+            item_bias: vec![0.0; n_items],
+            user_factors: Matrix::gaussian(&mut rng, n_users, k, sigma),
+            item_factors: Matrix::gaussian(&mut rng, n_items, k, sigma),
+        }
+    }
+
+    /// Latent dimensionality k.
+    pub fn k(&self) -> usize {
+        self.user_factors.cols()
+    }
+
+    /// Predicted rating for (user, item).
+    pub fn predict(&self, user: usize, item: usize) -> f32 {
+        self.mu
+            + self.user_bias[user]
+            + self.item_bias[item]
+            + dot(self.user_factors.row(user), self.item_factors.row(item))
+    }
+
+    /// Root-mean-square error over a ratings log.
+    pub fn rmse(&self, ratings: &Ratings) -> f64 {
+        if ratings.is_empty() {
+            return 0.0;
+        }
+        let se: f64 = ratings
+            .triples
+            .iter()
+            .map(|r| {
+                let e = (self.predict(r.user as usize, r.item as usize)
+                    - r.value) as f64;
+                e * e
+            })
+            .sum();
+        (se / ratings.len() as f64).sqrt()
+    }
+}
+
+/// Shared epoch-loss record for training logs.
+#[derive(Clone, Copy, Debug)]
+pub struct EpochStats {
+    /// Epoch number (0-based).
+    pub epoch: usize,
+    /// Train RMSE after the epoch.
+    pub train_rmse: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::MovieLensSynth;
+    use crate::rng::Rng;
+
+    #[test]
+    fn init_has_right_shapes() {
+        let m = FactorModel::init(10, 20, 4, 3.5, 1);
+        assert_eq!(m.user_factors.rows(), 10);
+        assert_eq!(m.item_factors.rows(), 20);
+        assert_eq!(m.k(), 4);
+        assert_eq!(m.user_bias.len(), 10);
+        assert_eq!(m.item_bias.len(), 20);
+    }
+
+    #[test]
+    fn predict_includes_biases() {
+        let mut m = FactorModel::init(2, 2, 2, 3.0, 2);
+        m.user_bias[0] = 0.5;
+        m.item_bias[1] = -0.25;
+        m.user_factors.row_mut(0).copy_from_slice(&[1.0, 0.0]);
+        m.item_factors.row_mut(1).copy_from_slice(&[2.0, 0.0]);
+        assert!((m.predict(0, 1) - (3.0 + 0.5 - 0.25 + 2.0)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rmse_of_perfect_model_is_zero() {
+        let mut r = Ratings::default();
+        r.n_users = 1;
+        r.n_items = 1;
+        r.triples.push(crate::data::Rating { user: 0, item: 0, value: 3.0 });
+        let mut m = FactorModel::init(1, 1, 2, 3.0, 3);
+        m.user_factors.row_mut(0).copy_from_slice(&[0.0, 0.0]);
+        assert!(m.rmse(&r) < 1e-6);
+    }
+
+    #[test]
+    fn both_trainers_beat_the_mean_baseline() {
+        // a dense-enough log that generalisation clearly beats the global
+        // mean (the default 100k-shaped log is too sparse for a quick test
+        // to separate signal from the quantisation-noise floor).
+        let synth = MovieLensSynth {
+            n_users: 80,
+            n_items: 160,
+            n_ratings: 6_000,
+            noise: 0.3,
+            ..MovieLensSynth::small()
+        };
+        let mut rng = Rng::seeded(5);
+        let ratings = synth.generate(&mut rng);
+        let (train, test) = ratings.split(0.2, &mut rng);
+
+        // baseline: predict the global mean everywhere
+        let mean = train.mean();
+        let base_rmse = {
+            let se: f64 = test
+                .triples
+                .iter()
+                .map(|r| ((r.value - mean) as f64).powi(2))
+                .sum();
+            (se / test.len() as f64).sqrt()
+        };
+
+        let sgd = SgdTrainer { k: 8, reg: 0.08, ..Default::default() }
+            .train(&train, 15, 7);
+        let als = AlsTrainer { k: 8, reg: 0.15 }.train(&train, 6, 7);
+        let sgd_rmse = sgd.rmse(&test);
+        let als_rmse = als.rmse(&test);
+        assert!(sgd_rmse < base_rmse, "sgd {sgd_rmse} vs mean {base_rmse}");
+        assert!(als_rmse < base_rmse, "als {als_rmse} vs mean {base_rmse}");
+    }
+}

@@ -1,0 +1,131 @@
+//! Biased SGD matrix factorisation (Koren, Bell & Volinsky 2009 — the
+//! paper's reference [17] for how latent factors are learned).
+
+use super::{EpochStats, FactorModel};
+use crate::data::Ratings;
+use crate::rng::Rng;
+
+/// SGD trainer configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct SgdTrainer {
+    /// Latent dimensionality k.
+    pub k: usize,
+    /// Learning rate.
+    pub lr: f32,
+    /// L2 regularisation on factors and biases.
+    pub reg: f32,
+    /// Multiplicative learning-rate decay per epoch.
+    pub lr_decay: f32,
+}
+
+impl Default for SgdTrainer {
+    fn default() -> Self {
+        SgdTrainer { k: 16, lr: 0.02, reg: 0.05, lr_decay: 0.95 }
+    }
+}
+
+impl SgdTrainer {
+    /// Train for `epochs` passes over a shuffled log.
+    pub fn train(&self, ratings: &Ratings, epochs: usize, seed: u64) -> FactorModel {
+        self.train_logged(ratings, epochs, seed).0
+    }
+
+    /// Train and return per-epoch train RMSE (for learning-curve logs).
+    pub fn train_logged(
+        &self,
+        ratings: &Ratings,
+        epochs: usize,
+        seed: u64,
+    ) -> (FactorModel, Vec<EpochStats>) {
+        let mut model = FactorModel::init(
+            ratings.n_users,
+            ratings.n_items,
+            self.k,
+            ratings.mean(),
+            seed,
+        );
+        let mut rng = Rng::seeded(seed ^ 0x5D6_u64);
+        let mut order: Vec<usize> = (0..ratings.len()).collect();
+        let mut lr = self.lr;
+        let mut log = Vec::with_capacity(epochs);
+        for epoch in 0..epochs {
+            rng.shuffle(&mut order);
+            for &i in &order {
+                let r = ratings.triples[i];
+                let (u, v) = (r.user as usize, r.item as usize);
+                let err = r.value - model.predict(u, v);
+                model.user_bias[u] += lr * (err - self.reg * model.user_bias[u]);
+                model.item_bias[v] += lr * (err - self.reg * model.item_bias[v]);
+                let (uf, vf) = borrow_rows(&mut model, u, v);
+                for j in 0..uf.len() {
+                    let (pu, qv) = (uf[j], vf[j]);
+                    uf[j] += lr * (err * qv - self.reg * pu);
+                    vf[j] += lr * (err * pu - self.reg * qv);
+                }
+            }
+            lr *= self.lr_decay;
+            log.push(EpochStats { epoch, train_rmse: model.rmse(ratings) });
+        }
+        (model, log)
+    }
+}
+
+/// Borrow one user row and one item row mutably at the same time (they
+/// live in different matrices, so this is just a convenience split).
+fn borrow_rows<'m>(
+    model: &'m mut FactorModel,
+    u: usize,
+    v: usize,
+) -> (&'m mut [f32], &'m mut [f32]) {
+    (
+        // SAFETY-free: two disjoint fields of the same struct.
+        unsafe { &mut *(model.user_factors.row_mut(u) as *mut [f32]) },
+        model.item_factors.row_mut(v),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::MovieLensSynth;
+
+    fn tiny_log() -> Ratings {
+        let synth = MovieLensSynth {
+            n_users: 40,
+            n_items: 60,
+            n_ratings: 1500,
+            ..MovieLensSynth::small()
+        };
+        let mut rng = Rng::seeded(11);
+        synth.generate(&mut rng)
+    }
+
+    #[test]
+    fn loss_decreases_over_epochs() {
+        let log = tiny_log();
+        let (_, stats) = SgdTrainer::default().train_logged(&log, 10, 1);
+        assert_eq!(stats.len(), 10);
+        assert!(
+            stats.last().unwrap().train_rmse < stats[0].train_rmse,
+            "no learning: {:?}",
+            stats
+        );
+        assert!(stats.last().unwrap().train_rmse < 0.8);
+    }
+
+    #[test]
+    fn training_is_deterministic_per_seed() {
+        let log = tiny_log();
+        let a = SgdTrainer::default().train(&log, 3, 9);
+        let b = SgdTrainer::default().train(&log, 3, 9);
+        assert_eq!(a.user_factors, b.user_factors);
+        assert_eq!(a.item_factors, b.item_factors);
+    }
+
+    #[test]
+    fn k_is_respected() {
+        let log = tiny_log();
+        let m = SgdTrainer { k: 5, ..Default::default() }.train(&log, 1, 2);
+        assert_eq!(m.k(), 5);
+    }
+}

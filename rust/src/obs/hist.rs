@@ -1,0 +1,221 @@
+//! Lock-free log-bucketed histogram for latency tracking (HDR-lite).
+//!
+//! Values (µs) are bucketed as `(exponent, 1/16 sub-bucket)` giving ≤ ~6 %
+//! relative error on quantiles, with plain atomic counters so the serving
+//! hot path never takes a lock to record.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+const SUB_BITS: u32 = 4; // 16 sub-buckets per octave
+const SUB: usize = 1 << SUB_BITS;
+const OCTAVES: usize = 40; // covers up to ~2^40 µs
+const BUCKETS: usize = OCTAVES * SUB;
+
+/// Concurrent histogram of u64 samples (typically µs latencies).
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    /// Empty histogram.
+    pub fn new() -> Self {
+        let mut buckets = Vec::with_capacity(BUCKETS);
+        buckets.resize_with(BUCKETS, || AtomicU64::new(0));
+        Histogram {
+            buckets,
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    #[inline]
+    fn bucket_of(v: u64) -> usize {
+        if v < SUB as u64 {
+            return v as usize; // exact for tiny values
+        }
+        let exp = 63 - v.leading_zeros() as usize; // floor(log2 v) >= SUB_BITS
+        let sub = ((v >> (exp as u32 - SUB_BITS)) as usize) & (SUB - 1);
+        ((exp - SUB_BITS as usize + 1) * SUB + sub).min(BUCKETS - 1)
+    }
+
+    /// Representative (upper-edge) value of a bucket.
+    fn bucket_value(idx: usize) -> u64 {
+        if idx < SUB {
+            return idx as u64;
+        }
+        let oct = idx / SUB - 1 + SUB_BITS as usize;
+        let sub = idx % SUB;
+        ((SUB + sub) as u64) << (oct as u32 - SUB_BITS)
+    }
+
+    /// Record one sample.
+    #[inline]
+    pub fn record(&self, v: u64) {
+        self.buckets[Self::bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// Number of recorded samples.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Mean of samples (0 if empty).
+    pub fn mean(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            0.0
+        } else {
+            self.sum.load(Ordering::Relaxed) as f64 / c as f64
+        }
+    }
+
+    /// Maximum recorded sample.
+    pub fn max(&self) -> u64 {
+        self.max.load(Ordering::Relaxed)
+    }
+
+    /// Approximate quantile in [0, 1].
+    pub fn quantile(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((q.clamp(0.0, 1.0)) * (total as f64 - 1.0)).round() as u64;
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen > target {
+                return Self::bucket_value(i);
+            }
+        }
+        self.max()
+    }
+
+    /// p50/p99/max/mean one-line summary with a caller-supplied unit
+    /// suffix ("" for dimensionless counts).
+    pub fn summary_with_unit(&self, unit: &str) -> String {
+        format!(
+            "n={} mean={:.1}{unit} p50={}{unit} p99={}{unit} max={}{unit}",
+            self.count(),
+            self.mean(),
+            self.quantile(0.5),
+            self.quantile(0.99),
+            self.max()
+        )
+    }
+
+    /// p50/p99/max/mean one-line summary (µs units assumed).
+    pub fn summary(&self) -> String {
+        self.summary_with_unit("us")
+    }
+
+    /// Reset all counters (not atomic across buckets; use when quiesced).
+    pub fn reset(&self) {
+        for b in &self.buckets {
+            b.store(0, Ordering::Relaxed);
+        }
+        self.count.store(0, Ordering::Relaxed);
+        self.sum.store(0, Ordering::Relaxed);
+        self.max.store(0, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_histogram() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.quantile(0.5), 0);
+    }
+
+    #[test]
+    fn exact_small_values() {
+        let h = Histogram::new();
+        for v in 0..10u64 {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 10);
+        assert_eq!(h.max(), 9);
+        assert_eq!(h.quantile(0.0), 0);
+        assert_eq!(h.quantile(1.0), 9);
+    }
+
+    #[test]
+    fn quantiles_within_relative_error() {
+        let h = Histogram::new();
+        for v in 1..=100_000u64 {
+            h.record(v);
+        }
+        for (q, want) in [(0.5, 50_000.0), (0.9, 90_000.0), (0.99, 99_000.0)] {
+            let got = h.quantile(q) as f64;
+            let rel = (got - want).abs() / want;
+            assert!(rel < 0.08, "q={q} got={got} want={want} rel={rel}");
+        }
+    }
+
+    #[test]
+    fn mean_is_exact() {
+        let h = Histogram::new();
+        for v in [10u64, 20, 30] {
+            h.record(v);
+        }
+        assert!((h.mean() - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn concurrent_records() {
+        let h = std::sync::Arc::new(Histogram::new());
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let h = std::sync::Arc::clone(&h);
+                s.spawn(move || {
+                    for v in 0..1000u64 {
+                        h.record(v);
+                    }
+                });
+            }
+        });
+        assert_eq!(h.count(), 4000);
+    }
+
+    #[test]
+    fn reset_clears() {
+        let h = Histogram::new();
+        h.record(5);
+        h.reset();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.max(), 0);
+    }
+
+    #[test]
+    fn bucket_roundtrip_monotone() {
+        let mut last = 0;
+        for v in [0u64, 1, 15, 16, 17, 100, 1000, 123_456, 10_000_000] {
+            let b = Histogram::bucket_of(v);
+            assert!(b >= last, "buckets must be monotone in v");
+            last = b;
+            let rep = Histogram::bucket_value(b);
+            if v >= 16 {
+                let rel = (rep as f64 - v as f64).abs() / v as f64;
+                assert!(rel < 0.07, "v={v} rep={rep}");
+            }
+        }
+    }
+}

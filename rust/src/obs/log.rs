@@ -1,0 +1,97 @@
+//! Leveled stderr logger with per-module tags and a global level switch.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::{SystemTime, UNIX_EPOCH};
+
+/// Log severity.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Debug = 0,
+    Info = 1,
+    Warn = 2,
+    Error = 3,
+}
+
+static GLOBAL_LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+
+/// Set the global minimum level.
+pub fn set_level(level: Level) {
+    GLOBAL_LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+fn enabled(level: Level) -> bool {
+    level as u8 >= GLOBAL_LEVEL.load(Ordering::Relaxed)
+}
+
+/// A tagged logger handle (cheap to clone).
+#[derive(Clone, Debug)]
+pub struct Logger {
+    tag: &'static str,
+}
+
+impl Logger {
+    /// Create a logger with a static component tag.
+    pub const fn new(tag: &'static str) -> Self {
+        Logger { tag }
+    }
+
+    fn emit(&self, level: Level, msg: &str) {
+        if !enabled(level) {
+            return;
+        }
+        let t = SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .map(|d| d.as_millis())
+            .unwrap_or(0);
+        let lvl = match level {
+            Level::Debug => "DEBUG",
+            Level::Info => "INFO ",
+            Level::Warn => "WARN ",
+            Level::Error => "ERROR",
+        };
+        eprintln!("[{t}] {lvl} {}: {msg}", self.tag);
+    }
+
+    /// Debug-level message.
+    pub fn debug(&self, msg: impl AsRef<str>) {
+        self.emit(Level::Debug, msg.as_ref());
+    }
+
+    /// Info-level message.
+    pub fn info(&self, msg: impl AsRef<str>) {
+        self.emit(Level::Info, msg.as_ref());
+    }
+
+    /// Warning.
+    pub fn warn(&self, msg: impl AsRef<str>) {
+        self.emit(Level::Warn, msg.as_ref());
+    }
+
+    /// Error.
+    pub fn error(&self, msg: impl AsRef<str>) {
+        self.emit(Level::Error, msg.as_ref());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_ordering() {
+        assert!(Level::Debug < Level::Info);
+        assert!(Level::Info < Level::Warn);
+        assert!(Level::Warn < Level::Error);
+    }
+
+    #[test]
+    fn logging_does_not_panic() {
+        let log = Logger::new("test");
+        set_level(Level::Error); // silence output during tests
+        log.debug("d");
+        log.info("i");
+        log.warn("w");
+        log.error("e");
+        set_level(Level::Info);
+    }
+}

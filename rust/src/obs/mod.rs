@@ -1,0 +1,42 @@
+//! Observability substrate: leveled logging and latency histograms.
+
+mod hist;
+mod log;
+
+pub use hist::Histogram;
+pub use log::{set_level, Level, Logger};
+
+use std::time::Instant;
+
+/// RAII timer: records elapsed µs into a histogram on drop.
+pub struct Timer<'a> {
+    hist: &'a Histogram,
+    start: Instant,
+}
+
+impl<'a> Timer<'a> {
+    /// Start timing against `hist`.
+    pub fn start(hist: &'a Histogram) -> Self {
+        Timer { hist, start: Instant::now() }
+    }
+}
+
+impl Drop for Timer<'_> {
+    fn drop(&mut self) {
+        self.hist.record(self.start.elapsed().as_micros() as u64);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_records_on_drop() {
+        let h = Histogram::new();
+        {
+            let _t = Timer::start(&h);
+        }
+        assert_eq!(h.count(), 1);
+    }
+}

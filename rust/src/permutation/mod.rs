@@ -1,0 +1,62 @@
+//! Region-specific permutation maps (paper §4.2).
+//!
+//! A permutation map assigns, for a tessellating vector `a`, the target
+//! index `τ_j ∈ [0, p)` of each factor coordinate `j` — i.e. where
+//! `z^j` lands inside the p-dimensional sparse embedding `φ(z)`.
+//! Nearby tessellating vectors must get overlapping index maps and
+//! far-apart ones conflicting maps.
+//!
+//! * [`OneHot`] — §4.2.1: `p = (2D+1)·k`; coordinate `t` lands in slot
+//!   `(2D+1)·t + (level_t + D)`. For the ternary case this is exactly the
+//!   paper's `3t / 3t+1 / 3t+2` scheme, and the Kendall-tau distance of two
+//!   maps equals the ℓ1 grid distance of the tessellating vectors.
+//! * [`ParseTreeDelta`] — the general §4.2.2 construction with a sliding
+//!   window of size δ ≥ 1 (δ = 1 reduces to [`ParseTree`]).
+//! * [`ParseTree`] — §4.2.2 with the supplement §B.2 counter action
+//!   (δ = 1): `τ_j = k·j` on level +1, `τ_{j-1} + 1` on 0, `k(k+j)` on -1;
+//!   `p ~ O(k²)` but only k slots are ever occupied.
+//!
+//! Both are pure functions of `a` (paper §3.3: no storage of the `M`
+//! permutations, which would be super-exponential).
+
+mod one_hot;
+mod parse_tree;
+mod parse_tree_delta;
+
+pub use one_hot::OneHot;
+pub use parse_tree::ParseTree;
+pub use parse_tree_delta::ParseTreeDelta;
+
+use crate::tessellation::TessVector;
+
+/// Deterministic function-based permutation map.
+pub trait PermutationMap: Send + Sync {
+    /// Embedding dimensionality p.
+    fn p(&self) -> usize;
+
+    /// Target index τ_j for every factor coordinate j, given the
+    /// tessellating vector. Output has length k and all entries < p.
+    fn index_map(&self, tess: &TessVector) -> Vec<u32>;
+
+    /// Schema name for logs/reports.
+    fn name(&self) -> &'static str;
+}
+
+/// Shared validation helper for implementations and tests: an index map
+/// must be injective (it is a restriction of a permutation of [p]).
+pub fn is_injective(map: &[u32]) -> bool {
+    let mut seen = std::collections::HashSet::with_capacity(map.len());
+    map.iter().all(|&i| seen.insert(i))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn injectivity_helper() {
+        assert!(is_injective(&[0, 2, 5]));
+        assert!(!is_injective(&[0, 2, 2]));
+        assert!(is_injective(&[]));
+    }
+}

@@ -1,0 +1,196 @@
+//! One-hot permutation map — paper §4.2.1 (generalised to D-ary grids).
+//!
+//! For the ternary case (D = 1) this is verbatim the paper's scheme with
+//! p = 3k: coordinate `t` of `z` lands at `3t`, `3t+1`, or `3t+2`
+//! depending on `ã^t ∈ {1, 0, -1}`. For a D-ary grid each coordinate gets
+//! a `(2D+1)`-slot segment indexed by `level + D`.
+//!
+//! Properties the paper calls out (and our tests verify):
+//! * τ_j = τ'_j  ⇔  ã_j = ã'_j — overlap happens exactly on agreeing
+//!   coordinates, so the sparsity-pattern overlap of φ(z), φ(z') counts
+//!   the coordinates where the two regions agree.
+//! * the candidate slot list for coordinate j depends only on j, never on
+//!   `a` — no "accidental" cross-coordinate overlap.
+//! * Kendall-tau distance between two maps equals the ℓ1 distance between
+//!   the unnormalised tessellating vectors (for D = 1).
+
+use super::PermutationMap;
+use crate::tessellation::TessVector;
+
+/// One-hot encoding over a (2D+1)-ary alphabet.
+#[derive(Clone, Debug)]
+pub struct OneHot {
+    k: usize,
+    d: u32,
+}
+
+impl OneHot {
+    /// Map for k-dim factors on a D-grid. Ternary = `OneHot::new(k, 1)`.
+    pub fn new(k: usize, d: u32) -> Self {
+        assert!(k > 0 && d >= 1);
+        OneHot { k, d }
+    }
+
+    /// Slots per coordinate segment (= alphabet size 2D+1).
+    #[inline]
+    pub fn segment(&self) -> usize {
+        (2 * self.d + 1) as usize
+    }
+}
+
+impl PermutationMap for OneHot {
+    fn p(&self) -> usize {
+        self.segment() * self.k
+    }
+
+    fn index_map(&self, tess: &TessVector) -> Vec<u32> {
+        assert_eq!(tess.levels.len(), self.k, "tess k mismatch");
+        assert_eq!(tess.d, self.d, "tess grid mismatch");
+        let seg = self.segment() as u32;
+        let d = self.d as i32;
+        tess.levels
+            .iter()
+            .enumerate()
+            .map(|(t, &level)| {
+                debug_assert!((level as i32).abs() <= d);
+                // paper's ordering for ternary: level +1 → slot 0 ("3t"),
+                // 0 → slot 1, -1 → slot 2; generalised: slot = D - level.
+                let slot = (d - level as i32) as u32;
+                t as u32 * seg + slot
+            })
+            .collect()
+    }
+
+    fn name(&self) -> &'static str {
+        "one-hot"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::permutation::is_injective;
+    use crate::tessellation::{DaryTessellation, TernaryTessellation, Tessellation};
+    use crate::testing::prop;
+
+    fn tv(levels: Vec<i16>, d: u32) -> TessVector {
+        TessVector { levels, d }
+    }
+
+    #[test]
+    fn ternary_matches_paper_layout() {
+        // ã = [1, 0, -1] → slots [3t+0, 3t+1, 3t+2] = [0, 4, 8]
+        let map = OneHot::new(3, 1).index_map(&tv(vec![1, 0, -1], 1));
+        assert_eq!(map, vec![0, 4, 8]);
+    }
+
+    #[test]
+    fn p_is_3k_for_ternary() {
+        let oh = OneHot::new(8, 1);
+        assert_eq!(oh.p(), 24);
+        let oh = OneHot::new(8, 4);
+        assert_eq!(oh.p(), 72);
+    }
+
+    #[test]
+    fn always_injective_and_in_bounds() {
+        prop(100, |g| {
+            let k = g.usize_in(1..=32);
+            let d = *g.choose(&[1u32, 2, 8]);
+            let z = g.vec_gaussian(k..=k);
+            let tess = DaryTessellation::new(k, d).assign(&z);
+            let oh = OneHot::new(k, d);
+            let map = oh.index_map(&tess);
+            assert_eq!(map.len(), k);
+            assert!(map.iter().all(|&i| (i as usize) < oh.p()));
+            assert!(is_injective(&map));
+        });
+    }
+
+    #[test]
+    fn overlap_iff_levels_agree() {
+        // τ_j == τ'_j ⇔ ã_j == ã'_j (the paper's key uniformity property)
+        prop(100, |g| {
+            let k = g.usize_in(2..=16);
+            let tess = TernaryTessellation::new(k);
+            let z1 = g.unit_vector(k);
+            let z2 = g.unit_vector(k);
+            let a1 = tess.assign(&z1);
+            let a2 = tess.assign(&z2);
+            let oh = OneHot::new(k, 1);
+            let m1 = oh.index_map(&a1);
+            let m2 = oh.index_map(&a2);
+            for j in 0..k {
+                assert_eq!(
+                    m1[j] == m2[j],
+                    a1.levels[j] == a2.levels[j],
+                    "coordinate {j}"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn slot_list_depends_only_on_coordinate() {
+        // all possible τ_j live in segment j: [seg*j, seg*(j+1))
+        prop(60, |g| {
+            let k = g.usize_in(1..=16);
+            let z = g.vec_gaussian(k..=k);
+            let a = TernaryTessellation::new(k).assign(&z);
+            let oh = OneHot::new(k, 1);
+            for (j, &t) in oh.index_map(&a).iter().enumerate() {
+                assert!(t as usize >= 3 * j && (t as usize) < 3 * (j + 1));
+            }
+        });
+    }
+
+    #[test]
+    fn kendall_tau_equals_l1_grid_distance() {
+        // §4.2.1: Kendall-tau of the two full permutations == ℓ1(ã, ã').
+        // For the one-hot layout, swapping coordinate t's slot from level
+        // l to level l' requires exactly |l - l'| adjacent transpositions
+        // inside segment t, and segments are independent, so
+        // KT = Σ_t |l_t - l'_t| = ℓ1. Verify the segment-local claim by
+        // explicit inversion counting on the induced full permutation.
+        let k = 4;
+        let oh = OneHot::new(k, 1);
+        let a = tv(vec![1, -1, 0, 1], 1);
+        let b = tv(vec![0, -1, 1, -1], 1);
+        // Canonical completion of the index map to a full permutation of
+        // [0, p): within segment t, the identity [3t, 3t+1, 3t+2] with the
+        // first element bubbled right `slot` times (slot = where z_t goes).
+        // Each bubble step is one adjacent transposition of the same
+        // element, so segment perms lie on a Kendall-tau geodesic:
+        // KT(P(s), P(s')) = |s - s'|, and segments are independent.
+        let perm = |t: &TessVector| -> Vec<u32> {
+            let m = oh.index_map(t);
+            let mut out = Vec::new();
+            for j in 0..k {
+                let slot = (m[j] - 3 * j as u32) as usize;
+                let base = 3 * j as u32;
+                let mut seg: Vec<u32> = vec![base, base + 1, base + 2];
+                let first = seg.remove(0);
+                seg.insert(slot, first);
+                out.extend(seg);
+            }
+            out
+        };
+        let pa = perm(&a);
+        let pb = perm(&b);
+        // Kendall-tau between permutations pa, pb = inversions of pb ∘ pa⁻¹
+        let mut pos = vec![0usize; oh.p()];
+        for (i, &v) in pa.iter().enumerate() {
+            pos[v as usize] = i;
+        }
+        let seq: Vec<usize> = pb.iter().map(|&v| pos[v as usize]).collect();
+        let mut inversions = 0u32;
+        for i in 0..seq.len() {
+            for j in i + 1..seq.len() {
+                if seq[i] > seq[j] {
+                    inversions += 1;
+                }
+            }
+        }
+        assert_eq!(inversions, a.l1_grid_distance(&b));
+    }
+}

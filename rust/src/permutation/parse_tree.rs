@@ -1,0 +1,219 @@
+//! Parse-tree permutation map — paper §4.2.2 with the supplement §B.2
+//! counter action (the scheme the paper's experiments use).
+//!
+//! A counter τ walks the p-dimensional index space while a sliding window
+//! of size δ = 1 reads the unnormalised tessellating vector ã:
+//!
+//! ```text
+//!   τ_j = k·j          if ã^j = +1
+//!   τ_j = τ_{j-1} + 1  if ã^j =  0
+//!   τ_j = k·(k + j)    if ã^j = -1        (j = 1 … k, τ_0 = 0)
+//! ```
+//!
+//! The +1/-1 anchors jump to coordinate-specific bases while runs of zeros
+//! advance sequentially from the last anchor, so two factors share slot
+//! τ_j iff their tessellating vectors agree on the whole suffix
+//! `[a^{j-t}, …, a^j]` back to the most recent anchor — the supplement's
+//! "no accidental overlap" desideratum with t₀ ≥ δ. Dimensionality is
+//! p ~ O(k²) but only k slots are occupied, and with the inverted-index
+//! representation storage stays O(k log p) per factor.
+//!
+//! D-ary grids are handled by anchoring each non-zero level ℓ ∈ [-D, D]
+//! at base `k·((D + ℓ)·k̂ + j)` for a level-specific block (exactly the
+//! ternary rule when D = 1, since levels ±1 give blocks 0 and 2k̂).
+
+use super::PermutationMap;
+use crate::tessellation::TessVector;
+
+/// Parse-tree (counter) permutation map.
+#[derive(Clone, Debug)]
+pub struct ParseTree {
+    k: usize,
+    d: u32,
+}
+
+impl ParseTree {
+    /// Map for k-dim factors on a D-grid (D = 1 is the paper's scheme).
+    pub fn new(k: usize, d: u32) -> Self {
+        assert!(k > 0 && d >= 1);
+        ParseTree { k, d }
+    }
+
+    /// Level-block base for anchor level `l` (non-zero) at 1-indexed j.
+    #[inline]
+    fn anchor(&self, level: i16, j: usize) -> u32 {
+        debug_assert!(level != 0);
+        let k = self.k as u32;
+        // blocks indexed by (D + level) ∈ {0..2D} \ {D}; block b starts at
+        // b·k² and anchor j within a block is b·k² + k·j.
+        let block = (self.d as i32 + level as i32) as u32;
+        block * k * k + k * j as u32
+    }
+}
+
+impl PermutationMap for ParseTree {
+    fn p(&self) -> usize {
+        // max anchor: block 2D at j = k → 2D·k² + k²  = (2D+1)k²; zero runs
+        // after it add < k, so (2D+1)k² + k + 1 bounds every index.
+        let k = self.k;
+        (2 * self.d as usize + 1) * k * k + k + 1
+    }
+
+    fn index_map(&self, tess: &TessVector) -> Vec<u32> {
+        assert_eq!(tess.levels.len(), self.k, "tess k mismatch");
+        assert_eq!(tess.d, self.d, "tess grid mismatch");
+        let mut out = Vec::with_capacity(self.k);
+        let mut tau = 0u32; // τ_0
+        for (j0, &level) in tess.levels.iter().enumerate() {
+            let j = j0 + 1; // paper is 1-indexed
+            tau = if level == 0 { tau + 1 } else { self.anchor(level, j) };
+            out.push(tau);
+        }
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        "parse-tree"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::permutation::is_injective;
+    use crate::tessellation::{DaryTessellation, TernaryTessellation, Tessellation};
+    use crate::testing::prop;
+
+    fn tv(levels: Vec<i16>) -> TessVector {
+        TessVector { levels, d: 1 }
+    }
+
+    #[test]
+    fn matches_supplement_recurrence() {
+        // k = 4, ã = [1, 0, 0, -1]:
+        // τ1 = k·1 = 4, τ2 = 5, τ3 = 6, τ4 = k(k+4) = 32... with block form:
+        // level -1 → block 0? No: D=1, block = 1 + (-1) = 0 → 0·k² + k·j = k·j?
+        // That would collide with the +1 anchors. See block assignment:
+        // +1 → block 2 (2k² + kj), 0 run, -1 → block 0 (kj).
+        // The supplement's literal rule (kj for +1, k(k+j) for -1) is the
+        // same map with blocks swapped — a relabelling of slots, which
+        // preserves every overlap property.
+        let pt = ParseTree::new(4, 1);
+        let m = pt.index_map(&tv(vec![1, 0, 0, -1]));
+        // +1 at j=1: block 2 → 2·16 + 4 = 36; zeros: 37, 38; -1 at j=4:
+        // block 0 → 0 + 16 = 16.
+        assert_eq!(m, vec![36, 37, 38, 16]);
+    }
+
+    #[test]
+    fn p_bound_holds() {
+        prop(100, |g| {
+            let k = g.usize_in(1..=32);
+            let d = *g.choose(&[1u32, 2, 8]);
+            let z = g.vec_gaussian(k..=k);
+            let tess = DaryTessellation::new(k, d).assign(&z);
+            let pt = ParseTree::new(k, d);
+            let m = pt.index_map(&tess);
+            assert!(m.iter().all(|&i| (i as usize) < pt.p()));
+        });
+    }
+
+    #[test]
+    fn injective_within_vector() {
+        prop(150, |g| {
+            let k = g.usize_in(2..=32);
+            let z = g.vec_gaussian(k..=k);
+            let tess = TernaryTessellation::new(k).assign(&z);
+            let m = ParseTree::new(k, 1).index_map(&tess);
+            assert!(is_injective(&m), "collision in {m:?} for {:?}", tess.levels);
+        });
+    }
+
+    #[test]
+    fn overlap_iff_suffix_agrees() {
+        // τ_j = τ'_j ⇔ ã agrees on [last-anchor..j] — verify the ⇔ against
+        // a direct suffix comparison.
+        prop(150, |g| {
+            let k = g.usize_in(2..=12);
+            let tess = TernaryTessellation::new(k);
+            let a1 = tess.assign(&g.unit_vector(k));
+            let a2 = tess.assign(&g.unit_vector(k));
+            let pt = ParseTree::new(k, 1);
+            let m1 = pt.index_map(&a1);
+            let m2 = pt.index_map(&a2);
+            for j in 0..k {
+                // suffix back to the most recent non-zero (anchor) in a1
+                let mut anchor = j;
+                while anchor > 0 && a1.levels[anchor] == 0 {
+                    anchor -= 1;
+                }
+                let same_suffix = a1.levels[anchor..=j] == a2.levels[anchor..=j]
+                    // anchor structure must line up too: a2 must not have a
+                    // later anchor inside the window
+                    && (anchor == 0
+                        || a2.levels[anchor] != 0
+                        || a1.levels[anchor] != 0);
+                let agree = m1[j] == m2[j];
+                if same_suffix && a1.levels[anchor] != 0 {
+                    assert!(agree, "suffix agreed but slots differ at {j}");
+                }
+                if agree {
+                    // slots equal ⇒ levels along the suffix equal
+                    assert_eq!(
+                        a1.levels[anchor..=j],
+                        a2.levels[anchor..=j],
+                        "slots equal but suffixes differ at {j}"
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn zero_prefix_walks_from_origin() {
+        // leading zeros count up from τ_0 = 0; the +1 anchor at j = 3 jumps
+        // to its block-2 base (2k² + k·j = 44, see matches_supplement_
+        // recurrence for the block relabelling) and the trailing zero
+        // resumes the walk from there.
+        let pt = ParseTree::new(4, 1);
+        let m = pt.index_map(&tv(vec![0, 0, 1, 0]));
+        assert_eq!(m, vec![1, 2, 44, 45]);
+    }
+
+    #[test]
+    fn anchors_are_coordinate_unique() {
+        // the possible τ_j for coordinate j depend only on j (supplement
+        // B.2): anchors are {k·j, 2k²+k·j} plus zero-runs; check two
+        // different vectors can't put *different* coordinates in one slot.
+        prop(100, |g| {
+            let k = g.usize_in(2..=10);
+            let tess = TernaryTessellation::new(k);
+            let a1 = tess.assign(&g.unit_vector(k));
+            let a2 = tess.assign(&g.unit_vector(k));
+            let pt = ParseTree::new(k, 1);
+            let m1 = pt.index_map(&a1);
+            let m2 = pt.index_map(&a2);
+            for (j1, &s1) in m1.iter().enumerate() {
+                for (j2, &s2) in m2.iter().enumerate() {
+                    if s1 == s2 {
+                        assert_eq!(j1, j2, "slot {s1} shared across coordinates");
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn dary_parse_tree_valid() {
+        prop(80, |g| {
+            let k = g.usize_in(2..=16);
+            let d = *g.choose(&[2u32, 4]);
+            let z = g.vec_gaussian(k..=k);
+            let tess = DaryTessellation::new(k, d).assign(&z);
+            let pt = ParseTree::new(k, d);
+            let m = pt.index_map(&tess);
+            assert!(is_injective(&m));
+            assert!(m.iter().all(|&i| (i as usize) < pt.p()));
+        });
+    }
+}

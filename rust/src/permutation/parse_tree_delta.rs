@@ -1,0 +1,191 @@
+//! General sliding-window parse-tree map — paper §4.2.2 with window size
+//! δ ≥ 1 (the δ = 1 case is exactly [`ParseTree`](super::ParseTree)).
+//!
+//! At step j the counter action reads the last δ levels of the
+//! unnormalised tessellating vector, `ã_δ^j = [ã^{j-δ+1}, …, ã^j]`
+//! (out-of-range positions read as level 0, matching the paper's
+//! "initialise by mapping the first δ−1 coordinates" convention), and
+//! jumps to a window-specific anchor when the current level is non-zero:
+//!
+//! ```text
+//!   block(j) = Σ_{i=0}^{δ-1} (ã^{j-i} + D) · (2D+1)^i
+//!   τ_j = block(j)·k² + k·j    if ã^j ≠ 0        (anchor)
+//!   τ_j = τ_{j-1} + 1          if ã^j = 0        (zero-run)
+//! ```
+//!
+//! Two factors share slot τ_j iff their tessellating vectors agree on the
+//! whole window (anchor case) or on the suffix back to the most recent
+//! anchor (zero-run case) — the supplement's desideratum with t₀ ≥ δ.
+//! Larger δ suppresses more "accidental" overlap at the cost of a larger
+//! index space, `p = (2D+1)^δ·k² + k + 1`; occupied slots stay at k per
+//! factor, so inverted-index storage is unchanged.
+
+use super::PermutationMap;
+use crate::tessellation::TessVector;
+
+/// δ-window parse-tree permutation map.
+#[derive(Clone, Debug)]
+pub struct ParseTreeDelta {
+    k: usize,
+    d: u32,
+    delta: usize,
+}
+
+impl ParseTreeDelta {
+    /// Map for k-dim factors on a D-grid with window size `delta ≥ 1`.
+    ///
+    /// Panics if the block space `(2D+1)^δ·k²` overflows `u32` (the index
+    /// type of the sparse embeddings) — δ is a small constant in practice
+    /// (the paper uses δ = 1).
+    pub fn new(k: usize, d: u32, delta: usize) -> Self {
+        assert!(k > 0 && d >= 1 && delta >= 1);
+        let base = (2 * d as u64 + 1).checked_pow(delta as u32).expect("δ too large");
+        let p = base * (k as u64) * (k as u64) + k as u64 + 1;
+        assert!(p <= u32::MAX as u64, "index space exceeds u32: δ={delta}");
+        ParseTreeDelta { k, d, delta }
+    }
+
+    /// Window size δ.
+    pub fn delta(&self) -> usize {
+        self.delta
+    }
+
+    /// Block id for the window ending at 0-indexed position `j0`.
+    #[inline]
+    fn block(&self, levels: &[i16], j0: usize) -> u64 {
+        let base = 2 * self.d as u64 + 1;
+        let mut b = 0u64;
+        // most recent level is the lowest digit (i = 0)
+        for i in 0..self.delta {
+            let lev = if j0 >= i { levels[j0 - i] } else { 0 };
+            let digit = (self.d as i64 + lev as i64) as u64;
+            b += digit * base.pow(i as u32);
+        }
+        b
+    }
+}
+
+impl PermutationMap for ParseTreeDelta {
+    fn p(&self) -> usize {
+        let base = (2 * self.d as usize + 1).pow(self.delta as u32);
+        base * self.k * self.k + self.k + 1
+    }
+
+    fn index_map(&self, tess: &TessVector) -> Vec<u32> {
+        assert_eq!(tess.levels.len(), self.k, "tess k mismatch");
+        assert_eq!(tess.d, self.d, "tess grid mismatch");
+        let k = self.k as u64;
+        let mut out = Vec::with_capacity(self.k);
+        let mut tau = 0u64; // τ_0
+        for (j0, &level) in tess.levels.iter().enumerate() {
+            let j = (j0 + 1) as u64; // paper is 1-indexed
+            tau = if level == 0 {
+                tau + 1
+            } else {
+                self.block(&tess.levels, j0) * k * k + k * j
+            };
+            out.push(tau as u32);
+        }
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        "parse-tree-delta"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::permutation::{is_injective, ParseTree};
+    use crate::tessellation::{Tessellation, TernaryTessellation};
+    use crate::testing::prop;
+
+    fn tv(levels: Vec<i16>) -> TessVector {
+        TessVector { levels, d: 1 }
+    }
+
+    #[test]
+    fn delta_one_equals_parse_tree() {
+        prop(100, |g| {
+            let k = g.usize_in(2..=16);
+            let tess = TernaryTessellation::new(k).assign(&g.unit_vector(k));
+            let a = ParseTree::new(k, 1).index_map(&tess);
+            let b = ParseTreeDelta::new(k, 1, 1).index_map(&tess);
+            assert_eq!(a, b);
+        });
+    }
+
+    #[test]
+    fn maps_are_injective() {
+        prop(100, |g| {
+            let k = g.usize_in(2..=12);
+            let delta = g.usize_in(1..=3);
+            let tess = TernaryTessellation::new(k).assign(&g.unit_vector(k));
+            let pt = ParseTreeDelta::new(k, 1, delta);
+            let m = pt.index_map(&tess);
+            assert!(is_injective(&m), "δ={delta} map {m:?}");
+            assert!(m.iter().all(|&i| (i as usize) < pt.p()));
+        });
+    }
+
+    #[test]
+    fn window_agreement_governs_slot_sharing() {
+        // anchor slots agree iff the δ-windows agree (paper's t₀ ≥ δ).
+        let k = 6;
+        let pt = ParseTreeDelta::new(k, 1, 2);
+        let a = tv(vec![1, 1, 0, -1, 0, 1]);
+        let b = tv(vec![0, 1, 0, -1, 0, 1]); // differs at coord 0 only
+        let (ma, mb) = (pt.index_map(&a), pt.index_map(&b));
+        // coord 1: window (a^0, a^1) differs -> different slots under δ=2
+        assert_ne!(ma[1], mb[1]);
+        // coord 3 anchor: window (a^2, a^3) = (0, -1) identical -> shared
+        assert_eq!(ma[3], mb[3]);
+        // under δ=1 coord 1 WOULD share (same level +1 at same position)
+        let pt1 = ParseTreeDelta::new(k, 1, 1);
+        assert_eq!(pt1.index_map(&a)[1], pt1.index_map(&b)[1]);
+    }
+
+    #[test]
+    fn larger_delta_shares_fewer_slots() {
+        // across random pairs, the number of shared anchor slots is
+        // non-increasing in δ (longer suffixes must agree).
+        let k = 12;
+        let tess = TernaryTessellation::new(k);
+        let shared = std::sync::Mutex::new([0usize; 3]);
+        prop(200, |g| {
+            let z1 = g.unit_vector(k);
+            let z2 = g.unit_vector(k);
+            let (a1, a2) = (tess.assign(&z1), tess.assign(&z2));
+            for (di, delta) in [1usize, 2, 3].into_iter().enumerate() {
+                let pt = ParseTreeDelta::new(k, 1, delta);
+                let (m1, m2) = (pt.index_map(&a1), pt.index_map(&a2));
+                let s = m1.iter().filter(|i| m2.contains(i)).count();
+                shared.lock().unwrap()[di] += s;
+            }
+        });
+        let shared = shared.into_inner().unwrap();
+        assert!(
+            shared[0] >= shared[1] && shared[1] >= shared[2],
+            "sharing must not increase with δ: {shared:?}"
+        );
+        assert!(shared[0] > 0, "δ=1 must share something over 200 pairs");
+    }
+
+    #[test]
+    fn zero_runs_walk_from_anchor() {
+        let pt = ParseTreeDelta::new(5, 1, 2);
+        let m = pt.index_map(&tv(vec![0, 1, 0, 0, 0]));
+        // prefix zero: τ_1 = 1; anchor at j=2; then run +1 each
+        assert_eq!(m[0], 1);
+        assert_eq!(m[2], m[1] + 1);
+        assert_eq!(m[3], m[1] + 2);
+        assert_eq!(m[4], m[1] + 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "index space exceeds u32")]
+    fn oversized_delta_rejected() {
+        let _ = ParseTreeDelta::new(1000, 8, 6);
+    }
+}

@@ -1,0 +1,348 @@
+//! Retrieval pipeline: inverted-index pruning + exact rescoring (paper §6).
+//!
+//! [`Retriever`] owns the mapped item index and the dense item factors;
+//! `top_k` prunes with the index then rescores the survivors exactly.
+//! [`RecoveryReport`] implements the paper's two evaluation metrics:
+//! per-user **% items discarded** and **recovery accuracy** (fraction of
+//! the true top-κ that survives pruning).
+
+mod topk;
+
+pub use topk::TopK;
+
+use crate::embedding::Mapper;
+use crate::error::Result;
+use crate::index::{InvertedIndex, QueryScratch};
+use crate::linalg::ops::dot;
+use crate::linalg::Matrix;
+
+/// A scored retrieval result.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Scored {
+    /// Item id.
+    pub id: u32,
+    /// Exact inner-product score.
+    pub score: f32,
+}
+
+/// Index-pruned retriever with exact rescoring.
+pub struct Retriever {
+    mapper: Mapper,
+    index: InvertedIndex,
+    items: Matrix,
+    /// Minimum support overlap for a candidate (paper uses 1).
+    pub min_overlap: usize,
+}
+
+impl Retriever {
+    /// Map `items` with `mapper`, build the index, and take ownership.
+    pub fn build(mapper: Mapper, items: Matrix) -> Result<Self> {
+        let index = InvertedIndex::build(&mapper, &items)?;
+        Ok(Retriever { mapper, index, items, min_overlap: 1 })
+    }
+
+    /// Number of items served.
+    pub fn items(&self) -> usize {
+        self.items.rows()
+    }
+
+    /// The underlying inverted index.
+    pub fn index(&self) -> &InvertedIndex {
+        &self.index
+    }
+
+    /// The mapper (schema) in use.
+    pub fn mapper(&self) -> &Mapper {
+        &self.mapper
+    }
+
+    /// Dense item factors.
+    pub fn item_factors(&self) -> &Matrix {
+        &self.items
+    }
+
+    /// Candidate ids for a user factor (pruning only, no scores).
+    pub fn candidates(&self, user: &[f32]) -> Result<Vec<u32>> {
+        let phi = self.mapper.map(user)?;
+        Ok(self.index.query(&phi, self.min_overlap))
+    }
+
+    /// Allocation-lean candidate retrieval into caller buffers.
+    pub fn candidates_into(
+        &self,
+        user: &[f32],
+        scratch: &mut QueryScratch,
+        out: &mut Vec<u32>,
+    ) -> Result<()> {
+        let phi = self.mapper.map(user)?;
+        self.index.query_into(&phi, self.min_overlap, scratch, out);
+        Ok(())
+    }
+
+    /// Hot-path variant of [`candidates_into`]: unique ids, unsorted
+    /// (posting-traversal order). Used by the batch worker, which unions
+    /// and sorts across the whole batch anyway.
+    pub fn candidates_into_unordered(
+        &self,
+        user: &[f32],
+        scratch: &mut QueryScratch,
+        out: &mut Vec<u32>,
+    ) -> Result<()> {
+        let phi = self.mapper.map(user)?;
+        self.index.query_into_unordered(&phi, self.min_overlap, scratch, out);
+        Ok(())
+    }
+
+    /// Top-κ via prune + exact rescore.
+    pub fn top_k(&self, user: &[f32], kappa: usize) -> Result<Vec<Scored>> {
+        let cands = self.candidates(user)?;
+        let mut heap = TopK::new(kappa);
+        for &id in &cands {
+            let s = dot(user, self.items.row(id as usize));
+            heap.push(id, s);
+        }
+        Ok(heap.into_sorted())
+    }
+
+    /// Brute-force top-κ over every item (the baseline the paper speeds up).
+    pub fn top_k_brute(&self, user: &[f32], kappa: usize) -> Vec<Scored> {
+        brute_force_top_k(user, &self.items, kappa)
+    }
+}
+
+/// Exact top-κ by scanning all items.
+pub fn brute_force_top_k(user: &[f32], items: &Matrix, kappa: usize) -> Vec<Scored> {
+    let mut heap = TopK::new(kappa);
+    for id in 0..items.rows() {
+        heap.push(id as u32, dot(user, items.row(id)));
+    }
+    heap.into_sorted()
+}
+
+/// Per-user evaluation record.
+#[derive(Clone, Copy, Debug)]
+pub struct UserEval {
+    /// Fraction of the catalogue discarded by pruning, in [0, 1].
+    pub discarded: f64,
+    /// |retrieved ∩ true top-κ| / κ.
+    pub accuracy: f64,
+}
+
+/// Aggregated evaluation over a user set (paper figures 2-5).
+#[derive(Clone, Debug, Default)]
+pub struct RecoveryReport {
+    /// Per-user records, in user order.
+    pub per_user: Vec<UserEval>,
+}
+
+impl RecoveryReport {
+    /// Evaluate a candidate-set producer against ground-truth top-κ.
+    ///
+    /// `candidates(u)` returns the surviving item ids for user row `u`;
+    /// ground truth is the exact top-κ under dense inner product — the
+    /// paper's "relevant items" for both synthetic (true rating matrix
+    /// R = UVᵀ) and MovieLens (learned-factor scores).
+    pub fn evaluate(
+        users: &Matrix,
+        items: &Matrix,
+        kappa: usize,
+        mut candidates: impl FnMut(usize, &[f32]) -> Vec<u32>,
+    ) -> Self {
+        let n_items = items.rows();
+        let mut per_user = Vec::with_capacity(users.rows());
+        for u in 0..users.rows() {
+            let uf = users.row(u);
+            let truth = brute_force_top_k(uf, items, kappa);
+            let cands = candidates(u, uf);
+            let mut cand_set = vec![false; n_items];
+            for &c in &cands {
+                cand_set[c as usize] = true;
+            }
+            let hit = truth.iter().filter(|s| cand_set[s.id as usize]).count();
+            per_user.push(UserEval {
+                discarded: 1.0 - cands.len() as f64 / n_items as f64,
+                accuracy: hit as f64 / truth.len().max(1) as f64,
+            });
+        }
+        RecoveryReport { per_user }
+    }
+
+    /// Mean fraction discarded.
+    pub fn mean_discarded(&self) -> f64 {
+        mean(self.per_user.iter().map(|e| e.discarded))
+    }
+
+    /// Std-dev of fraction discarded (fig 4 error bars).
+    pub fn std_discarded(&self) -> f64 {
+        std(self.per_user.iter().map(|e| e.discarded))
+    }
+
+    /// Mean recovery accuracy.
+    pub fn mean_accuracy(&self) -> f64 {
+        mean(self.per_user.iter().map(|e| e.accuracy))
+    }
+
+    /// Histogram of % discarded over users with `bins` equal bins on
+    /// [0, 100] — the paper's figures 2a/3a.
+    pub fn discard_histogram(&self, bins: usize) -> Vec<usize> {
+        let mut h = vec![0usize; bins];
+        for e in &self.per_user {
+            let pct = (e.discarded * 100.0).clamp(0.0, 100.0);
+            let b = ((pct / 100.0) * bins as f64) as usize;
+            h[b.min(bins - 1)] += 1;
+        }
+        h
+    }
+
+    /// Speed-up implied by the mean discard rate: 1 / (1 - η) (paper §6).
+    pub fn implied_speedup(&self) -> f64 {
+        let eta = self.mean_discarded();
+        if eta >= 1.0 {
+            f64::INFINITY
+        } else {
+            1.0 / (1.0 - eta)
+        }
+    }
+}
+
+fn mean(xs: impl Iterator<Item = f64>) -> f64 {
+    let (mut s, mut n) = (0.0, 0usize);
+    for x in xs {
+        s += x;
+        n += 1;
+    }
+    if n == 0 {
+        0.0
+    } else {
+        s / n as f64
+    }
+}
+
+fn std(xs: impl Iterator<Item = f64>) -> f64 {
+    let v: Vec<f64> = xs.collect();
+    if v.len() < 2 {
+        return 0.0;
+    }
+    let m = v.iter().sum::<f64>() / v.len() as f64;
+    (v.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / v.len() as f64).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::embedding::{PermutationKind, TessellationKind};
+    use crate::rng::Rng;
+    use crate::testing::prop;
+
+    fn retriever(k: usize, n: usize, seed: u64) -> Retriever {
+        let mapper =
+            Mapper::new(TessellationKind::Ternary, PermutationKind::ParseTree, k);
+        let mut rng = Rng::seeded(seed);
+        let items = Matrix::gaussian(&mut rng, n, k, 1.0);
+        Retriever::build(mapper, items).unwrap()
+    }
+
+    #[test]
+    fn top_k_scores_are_exact_and_sorted() {
+        let r = retriever(8, 200, 11);
+        let mut rng = Rng::seeded(5);
+        let user: Vec<f32> = (0..8).map(|_| rng.gaussian_f32()).collect();
+        let got = r.top_k(&user, 10).unwrap();
+        assert!(got.len() <= 10);
+        for w in got.windows(2) {
+            assert!(w[0].score >= w[1].score);
+        }
+        for s in &got {
+            let exact = dot(&user, r.item_factors().row(s.id as usize));
+            assert!((s.score - exact).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn retrieved_topk_is_topk_of_candidates() {
+        prop(30, |g| {
+            let k = g.usize_in(2..=10);
+            let n = g.usize_in(10..=100);
+            let r = retriever(k, n, g.case_seed);
+            let user = g.unit_vector(k);
+            let kappa = g.usize_in(1..=10);
+            let cands = r.candidates(&user).unwrap();
+            let got = r.top_k(&user, kappa).unwrap();
+            // recompute expected: sort candidate scores desc
+            let mut exp: Vec<Scored> = cands
+                .iter()
+                .map(|&id| Scored {
+                    id,
+                    score: dot(&user, r.item_factors().row(id as usize)),
+                })
+                .collect();
+            exp.sort_by(|a, b| b.score.partial_cmp(&a.score).unwrap());
+            exp.truncate(kappa);
+            assert_eq!(got.len(), exp.len());
+            for (g1, e1) in got.iter().zip(&exp) {
+                assert!((g1.score - e1.score).abs() < 1e-6);
+            }
+        });
+    }
+
+    #[test]
+    fn brute_force_is_ground_truth() {
+        let r = retriever(6, 50, 3);
+        let mut rng = Rng::seeded(9);
+        let user: Vec<f32> = (0..6).map(|_| rng.gaussian_f32()).collect();
+        let brute = r.top_k_brute(&user, 5);
+        assert_eq!(brute.len(), 5);
+        // the true max must be brute[0]
+        let max = (0..50)
+            .map(|i| dot(&user, r.item_factors().row(i)))
+            .fold(f32::NEG_INFINITY, f32::max);
+        assert!((brute[0].score - max).abs() < 1e-6);
+    }
+
+    #[test]
+    fn report_metrics_bounds() {
+        let k = 8;
+        let r = retriever(k, 300, 21);
+        let mut rng = Rng::seeded(17);
+        let users = Matrix::gaussian(&mut rng, 40, k, 1.0);
+        let rep = RecoveryReport::evaluate(&users, r.item_factors(), 10, |_, u| {
+            r.candidates(u).unwrap()
+        });
+        assert_eq!(rep.per_user.len(), 40);
+        for e in &rep.per_user {
+            assert!((0.0..=1.0).contains(&e.discarded));
+            assert!((0.0..=1.0).contains(&e.accuracy));
+        }
+        assert!(rep.mean_discarded() > 0.0, "should discard something");
+        assert!(rep.mean_accuracy() > 0.3, "should recover a fair share");
+        assert!(rep.implied_speedup() >= 1.0);
+        let h = rep.discard_histogram(10);
+        assert_eq!(h.iter().sum::<usize>(), 40);
+    }
+
+    #[test]
+    fn all_candidates_means_perfect_accuracy() {
+        let k = 4;
+        let r = retriever(k, 60, 31);
+        let mut rng = Rng::seeded(1);
+        let users = Matrix::gaussian(&mut rng, 10, k, 1.0);
+        let rep = RecoveryReport::evaluate(&users, r.item_factors(), 5, |_, _| {
+            (0..60u32).collect()
+        });
+        assert!((rep.mean_accuracy() - 1.0).abs() < 1e-12);
+        assert!(rep.mean_discarded().abs() < 1e-12);
+        assert!((rep.implied_speedup() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_candidates_zero_accuracy() {
+        let k = 4;
+        let r = retriever(k, 60, 37);
+        let mut rng = Rng::seeded(2);
+        let users = Matrix::gaussian(&mut rng, 5, k, 1.0);
+        let rep =
+            RecoveryReport::evaluate(&users, r.item_factors(), 5, |_, _| vec![]);
+        assert_eq!(rep.mean_accuracy(), 0.0);
+        assert_eq!(rep.mean_discarded(), 1.0);
+    }
+}

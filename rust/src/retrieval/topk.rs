@@ -1,0 +1,193 @@
+//! Bounded top-κ accumulator (min-heap of size κ).
+
+use super::Scored;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Wrapper giving `Scored` a *reverse* (min-heap) ordering by score, with
+/// id as a deterministic tie-break.
+#[derive(Clone, Copy, Debug, PartialEq)]
+struct MinScored(Scored);
+
+impl Eq for MinScored {}
+
+impl Ord for MinScored {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // reversed: smaller score = "greater" for the max-heap ⇒ min-heap
+        other
+            .0
+            .score
+            .partial_cmp(&self.0.score)
+            .unwrap_or(Ordering::Equal)
+            .then(other.0.id.cmp(&self.0.id))
+    }
+}
+
+impl PartialOrd for MinScored {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Keeps the κ highest-scoring entries seen so far.
+pub struct TopK {
+    kappa: usize,
+    heap: BinaryHeap<MinScored>,
+}
+
+impl TopK {
+    /// Accumulator for the top `kappa` entries (kappa ≥ 1 recommended;
+    /// kappa = 0 yields an always-empty result).
+    pub fn new(kappa: usize) -> Self {
+        TopK { kappa, heap: BinaryHeap::with_capacity(kappa + 1) }
+    }
+
+    /// Offer one scored item.
+    #[inline]
+    pub fn push(&mut self, id: u32, score: f32) {
+        if self.kappa == 0 {
+            return;
+        }
+        if self.heap.len() < self.kappa {
+            self.heap.push(MinScored(Scored { id, score }));
+        } else if let Some(min) = self.heap.peek() {
+            if score > min.0.score {
+                self.heap.pop();
+                self.heap.push(MinScored(Scored { id, score }));
+            }
+        }
+    }
+
+    /// Current number of kept entries.
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// True when nothing has been kept.
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Smallest kept score (threshold for admission once full).
+    pub fn threshold(&self) -> Option<f32> {
+        self.heap.peek().map(|m| m.0.score)
+    }
+
+    /// Extract results sorted by descending score (ties: ascending id).
+    pub fn into_sorted(self) -> Vec<Scored> {
+        let mut v: Vec<Scored> = self.heap.into_iter().map(|m| m.0).collect();
+        v.sort_by(|a, b| {
+            b.score
+                .partial_cmp(&a.score)
+                .unwrap_or(Ordering::Equal)
+                .then(a.id.cmp(&b.id))
+        });
+        v
+    }
+
+    /// Merge another accumulator into this one (shard fan-in).
+    pub fn merge(&mut self, other: TopK) {
+        for m in other.heap {
+            self.push(m.0.id, m.0.score);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop;
+
+    #[test]
+    fn keeps_top_k() {
+        let mut t = TopK::new(3);
+        for (id, s) in [(0, 1.0), (1, 5.0), (2, 3.0), (3, 4.0), (4, 2.0)] {
+            t.push(id, s);
+        }
+        let out = t.into_sorted();
+        assert_eq!(
+            out.iter().map(|s| s.id).collect::<Vec<_>>(),
+            vec![1, 3, 2]
+        );
+    }
+
+    #[test]
+    fn fewer_items_than_kappa() {
+        let mut t = TopK::new(10);
+        t.push(7, 1.5);
+        let out = t.into_sorted();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].id, 7);
+    }
+
+    #[test]
+    fn kappa_zero_is_empty() {
+        let mut t = TopK::new(0);
+        t.push(1, 10.0);
+        assert!(t.is_empty());
+        assert!(t.into_sorted().is_empty());
+    }
+
+    #[test]
+    fn matches_full_sort_property() {
+        prop(100, |g| {
+            let n = g.usize_in(0..=200);
+            let kappa = g.usize_in(1..=20);
+            let scores: Vec<f32> = (0..n).map(|_| g.gaussian()).collect();
+            let mut t = TopK::new(kappa);
+            for (i, &s) in scores.iter().enumerate() {
+                t.push(i as u32, s);
+            }
+            let got = t.into_sorted();
+            let mut want: Vec<(usize, f32)> =
+                scores.iter().copied().enumerate().collect();
+            want.sort_by(|a, b| {
+                b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0))
+            });
+            want.truncate(kappa);
+            assert_eq!(got.len(), want.len());
+            for (g1, w1) in got.iter().zip(&want) {
+                assert_eq!(g1.id as usize, w1.0);
+            }
+        });
+    }
+
+    #[test]
+    fn merge_equals_combined_stream() {
+        prop(50, |g| {
+            let kappa = g.usize_in(1..=8);
+            let a: Vec<f32> = g.vec_gaussian(0..=50);
+            let b: Vec<f32> = g.vec_gaussian(0..=50);
+            let mut ta = TopK::new(kappa);
+            for (i, &s) in a.iter().enumerate() {
+                ta.push(i as u32, s);
+            }
+            let mut tb = TopK::new(kappa);
+            for (i, &s) in b.iter().enumerate() {
+                tb.push((1000 + i) as u32, s);
+            }
+            ta.merge(tb);
+            let merged = ta.into_sorted();
+            let mut tc = TopK::new(kappa);
+            for (i, &s) in a.iter().enumerate() {
+                tc.push(i as u32, s);
+            }
+            for (i, &s) in b.iter().enumerate() {
+                tc.push((1000 + i) as u32, s);
+            }
+            let direct = tc.into_sorted();
+            assert_eq!(merged, direct);
+        });
+    }
+
+    #[test]
+    fn threshold_tracks_min() {
+        let mut t = TopK::new(2);
+        assert_eq!(t.threshold(), None);
+        t.push(0, 5.0);
+        t.push(1, 3.0);
+        assert_eq!(t.threshold(), Some(3.0));
+        t.push(2, 4.0);
+        assert_eq!(t.threshold(), Some(4.0));
+    }
+}

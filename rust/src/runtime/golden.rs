@@ -1,0 +1,110 @@
+//! Golden-case verification: run every artifact that ships golden
+//! input/output JSON (emitted by `aot.py`) through the PJRT runtime and
+//! compare against the jax-computed outputs.
+//!
+//! This is the end-to-end proof that the L2/L1 python build path and the
+//! L3 rust execution path agree on numerics.
+
+use super::XlaRuntime;
+use crate::configx::Json;
+use crate::error::{GeomapError, Result};
+
+/// One golden case: concrete inputs and expected outputs (flat buffers).
+pub struct GoldenCase {
+    /// Flat row-major f32 inputs, in argument order.
+    pub inputs: Vec<Vec<f32>>,
+    /// Flat expected outputs (both f32 and i32 outputs are stored as f64
+    /// in JSON; compare via [`verify_goldens`]).
+    pub outputs: Vec<Vec<f64>>,
+}
+
+/// Parse a golden JSON file (a list of cases).
+pub fn load_golden(path: &str) -> Result<Vec<GoldenCase>> {
+    let j = Json::from_file(path)?;
+    let mut cases = Vec::new();
+    for c in j.as_arr()? {
+        let inputs = c
+            .get("inputs")?
+            .as_arr()?
+            .iter()
+            .map(|a| a.as_f32_vec())
+            .collect::<Result<Vec<_>>>()?;
+        let outputs = c
+            .get("outputs")?
+            .as_arr()?
+            .iter()
+            .map(|a| {
+                a.as_arr()?
+                    .iter()
+                    .map(|v| v.as_f64())
+                    .collect::<Result<Vec<f64>>>()
+            })
+            .collect::<Result<Vec<_>>>()?;
+        cases.push(GoldenCase { inputs, outputs });
+    }
+    Ok(cases)
+}
+
+/// Run every golden case in the runtime's manifest; returns the number of
+/// cases checked. Errors carry the artifact name and mismatch position.
+pub fn verify_goldens(runtime: &XlaRuntime) -> Result<usize> {
+    let entries: Vec<(String, String)> = runtime
+        .manifest
+        .entries
+        .iter()
+        .filter_map(|e| {
+            e.golden
+                .as_ref()
+                .map(|g| (e.name.clone(), format!("{}/{g}", runtime.manifest.dir)))
+        })
+        .collect();
+    let mut checked = 0usize;
+    for (name, golden_path) in entries {
+        let module = runtime.module(&name)?;
+        let cases = load_golden(&golden_path)?;
+        for (ci, case) in cases.iter().enumerate() {
+            let input_refs: Vec<&[f32]> =
+                case.inputs.iter().map(Vec::as_slice).collect();
+            let outs = module.run_f32(&input_refs)?;
+            if outs.len() != case.outputs.len() {
+                return Err(GeomapError::Artifact(format!(
+                    "{name} case {ci}: {} outputs, golden has {}",
+                    outs.len(),
+                    case.outputs.len()
+                )));
+            }
+            for (oi, (lit, want)) in outs.iter().zip(&case.outputs).enumerate() {
+                let spec = &module.entry.outputs[oi];
+                let got: Vec<f64> = match spec.dtype.as_str() {
+                    "i32" => lit
+                        .to_vec::<i32>()?
+                        .into_iter()
+                        .map(|v| v as f64)
+                        .collect(),
+                    _ => lit
+                        .to_vec::<f32>()?
+                        .into_iter()
+                        .map(|v| v as f64)
+                        .collect(),
+                };
+                if got.len() != want.len() {
+                    return Err(GeomapError::Artifact(format!(
+                        "{name} case {ci} out {oi}: len {} != {}",
+                        got.len(),
+                        want.len()
+                    )));
+                }
+                for (pos, (g, w)) in got.iter().zip(want).enumerate() {
+                    let tol = 1e-4 * w.abs().max(1.0);
+                    if (g - w).abs() > tol {
+                        return Err(GeomapError::Artifact(format!(
+                            "{name} case {ci} out {oi} pos {pos}: {g} != {w}"
+                        )));
+                    }
+                }
+            }
+            checked += 1;
+        }
+    }
+    Ok(checked)
+}

@@ -1,0 +1,258 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! rust runtime.
+//!
+//! `artifacts/manifest.json` lists every AOT-lowered module with its HLO
+//! text file, static input/output shapes, and (for small modules) a golden
+//! input/output JSON used by the integration tests.
+
+use crate::configx::Json;
+use crate::error::{GeomapError, Result};
+
+/// What a module computes (mirrors `meta.kind` in aot.py).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kind {
+    /// `(B,k) x (T,k) -> (B,T)` scores.
+    Score,
+    /// `(B,k) x (T,k) -> ((B,κ), (B,κ))` fused score + top-κ.
+    ScoreTopk,
+    /// `(B,k) x (T,k) x (T,) -> (B,T)` masked scores (-1e30 where mask=0).
+    ScoreMasked,
+    /// `(N,k) -> (N,k)` Algorithm 2 tessellation.
+    TessTernary,
+    /// `(N,k) -> (N,k)` Algorithm 3 D-ary tessellation.
+    TessDary,
+}
+
+impl Kind {
+    fn parse(s: &str) -> Result<Kind> {
+        match s {
+            "score" => Ok(Kind::Score),
+            "score_topk" => Ok(Kind::ScoreTopk),
+            "score_masked" => Ok(Kind::ScoreMasked),
+            "tess_ternary" => Ok(Kind::TessTernary),
+            "tess_dary" => Ok(Kind::TessDary),
+            _ => Err(GeomapError::Artifact(format!("unknown kind '{s}'"))),
+        }
+    }
+}
+
+/// A tensor shape + dtype declaration.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TensorSpec {
+    /// Dimensions.
+    pub shape: Vec<usize>,
+    /// `f32` or `i32`.
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    fn from_json(j: &Json) -> Result<TensorSpec> {
+        Ok(TensorSpec {
+            shape: j.get("shape")?.as_usize_vec()?,
+            dtype: j.get("dtype")?.as_str()?.to_string(),
+        })
+    }
+
+    /// Total element count.
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT module in the manifest.
+#[derive(Clone, Debug)]
+pub struct Entry {
+    /// Module name (artifact stem).
+    pub name: String,
+    /// HLO text filename relative to the artifact dir.
+    pub file: String,
+    /// Module kind.
+    pub kind: Kind,
+    /// Static meta dims: b/k/t/kappa/n/d as present for the kind.
+    pub meta: MetaDims,
+    /// Input tensor specs, in argument order.
+    pub inputs: Vec<TensorSpec>,
+    /// Output tensor specs, in tuple order.
+    pub outputs: Vec<TensorSpec>,
+    /// Relative path of the golden-cases JSON, if emitted.
+    pub golden: Option<String>,
+}
+
+/// Static dimensions from `meta` (zero when absent for the kind).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct MetaDims {
+    /// Query batch B.
+    pub b: usize,
+    /// Factor dim k.
+    pub k: usize,
+    /// Item tile T.
+    pub t: usize,
+    /// Top-κ width.
+    pub kappa: usize,
+    /// Row count N (tessellation modules).
+    pub n: usize,
+    /// Grid resolution D (D-ary tessellation).
+    pub d: usize,
+}
+
+/// The parsed artifact manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    /// Artifact directory the manifest was loaded from.
+    pub dir: String,
+    /// All modules.
+    pub entries: Vec<Entry>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &str) -> Result<Manifest> {
+        let path = format!("{dir}/manifest.json");
+        let j = Json::from_file(&path)?;
+        Self::from_json(dir, &j)
+    }
+
+    /// Parse from an already-loaded JSON document.
+    pub fn from_json(dir: &str, j: &Json) -> Result<Manifest> {
+        let format = j.get("format")?.as_str()?;
+        if format != "hlo-text-v1" {
+            return Err(GeomapError::Artifact(format!(
+                "unsupported manifest format '{format}'"
+            )));
+        }
+        let mut entries = Vec::new();
+        for e in j.get("entries")?.as_arr()? {
+            let meta = e.get("meta")?;
+            let dim = |key: &str| -> usize {
+                meta.opt(key).and_then(|v| v.as_usize().ok()).unwrap_or(0)
+            };
+            entries.push(Entry {
+                name: e.get("name")?.as_str()?.to_string(),
+                file: e.get("file")?.as_str()?.to_string(),
+                kind: Kind::parse(meta.get("kind")?.as_str()?)?,
+                meta: MetaDims {
+                    b: dim("b"),
+                    k: dim("k"),
+                    t: dim("t"),
+                    kappa: dim("kappa"),
+                    n: dim("n"),
+                    d: dim("d"),
+                },
+                inputs: e
+                    .get("inputs")?
+                    .as_arr()?
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect::<Result<_>>()?,
+                outputs: e
+                    .get("outputs")?
+                    .as_arr()?
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect::<Result<_>>()?,
+                golden: e
+                    .opt("golden")
+                    .map(|g| g.as_str().map(str::to_string))
+                    .transpose()?,
+            });
+        }
+        Ok(Manifest { dir: dir.to_string(), entries })
+    }
+
+    /// Look up an entry by name.
+    pub fn entry(&self, name: &str) -> Result<&Entry> {
+        self.entries.iter().find(|e| e.name == name).ok_or_else(|| {
+            GeomapError::Artifact(format!("no artifact named '{name}'"))
+        })
+    }
+
+    /// Entries of a given kind.
+    pub fn of_kind(&self, kind: Kind) -> impl Iterator<Item = &Entry> {
+        self.entries.iter().filter(move |e| e.kind == kind)
+    }
+
+    /// The smallest `score` entry whose k matches and whose (B, T) fit
+    /// the requested batch/tile (the runtime pads up to it).
+    pub fn best_scorer(&self, k: usize, b: usize, t: usize) -> Option<&Entry> {
+        self.of_kind(Kind::Score)
+            .filter(|e| e.meta.k == k && e.meta.b >= b && e.meta.t >= t)
+            .min_by_key(|e| e.meta.b * e.meta.t)
+    }
+
+    /// Absolute path of an entry's HLO file.
+    pub fn hlo_path(&self, entry: &Entry) -> String {
+        format!("{}/{}", self.dir, entry.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": "hlo-text-v1",
+      "entries": [
+        {"name": "score_b8_k16_t1024", "file": "score_b8_k16_t1024.hlo.txt",
+         "meta": {"kind": "score", "b": 8, "k": 16, "t": 1024},
+         "inputs": [{"shape": [8,16], "dtype": "f32"}, {"shape": [1024,16], "dtype": "f32"}],
+         "outputs": [{"shape": [8,1024], "dtype": "f32"}],
+         "golden": "golden/score_b8_k16_t1024.json"},
+        {"name": "tess_ternary_n256_k16", "file": "t.hlo.txt",
+         "meta": {"kind": "tess_ternary", "n": 256, "k": 16},
+         "inputs": [{"shape": [256,16], "dtype": "f32"}],
+         "outputs": [{"shape": [256,16], "dtype": "f32"}]}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_entries_and_meta() {
+        let j = Json::parse(SAMPLE).unwrap();
+        let m = Manifest::from_json("arts", &j).unwrap();
+        assert_eq!(m.entries.len(), 2);
+        let e = m.entry("score_b8_k16_t1024").unwrap();
+        assert_eq!(e.kind, Kind::Score);
+        assert_eq!(e.meta.b, 8);
+        assert_eq!(e.meta.t, 1024);
+        assert_eq!(e.inputs[1].shape, vec![1024, 16]);
+        assert_eq!(e.inputs[1].elements(), 1024 * 16);
+        assert_eq!(e.golden.as_deref(), Some("golden/score_b8_k16_t1024.json"));
+        let t = m.entry("tess_ternary_n256_k16").unwrap();
+        assert_eq!(t.kind, Kind::TessTernary);
+        assert_eq!(t.meta.n, 256);
+        assert!(t.golden.is_none());
+        assert_eq!(m.hlo_path(e), "arts/score_b8_k16_t1024.hlo.txt");
+    }
+
+    #[test]
+    fn best_scorer_selects_smallest_fit() {
+        let j = Json::parse(SAMPLE).unwrap();
+        let m = Manifest::from_json("arts", &j).unwrap();
+        assert!(m.best_scorer(16, 8, 1024).is_some());
+        assert!(m.best_scorer(16, 9, 10).is_none(), "batch too large");
+        assert!(m.best_scorer(32, 1, 1).is_none(), "no such k");
+    }
+
+    #[test]
+    fn unknown_entry_is_error() {
+        let j = Json::parse(SAMPLE).unwrap();
+        let m = Manifest::from_json("arts", &j).unwrap();
+        assert!(m.entry("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_format() {
+        let j = Json::parse(r#"{"format": "v999", "entries": []}"#).unwrap();
+        assert!(Manifest::from_json("arts", &j).is_err());
+    }
+
+    #[test]
+    fn loads_real_artifacts_when_present() {
+        if !std::path::Path::new("artifacts/manifest.json").exists() {
+            return; // `make artifacts` not run yet
+        }
+        let m = Manifest::load("artifacts").unwrap();
+        assert!(m.of_kind(Kind::Score).count() >= 1);
+        assert!(m.of_kind(Kind::ScoreTopk).count() >= 1);
+        assert!(m.of_kind(Kind::TessTernary).count() >= 1);
+    }
+}

@@ -1,0 +1,151 @@
+//! L3 ↔ L2 bridge: load AOT artifacts (HLO text) and execute them on the
+//! PJRT CPU client from the serving hot path.
+//!
+//! The interchange format is HLO *text* (see `python/compile/aot.py` and
+//! DESIGN.md §2): `HloModuleProto::from_text_file` → `XlaComputation` →
+//! `client.compile` once per module, then `execute` per batch.
+//!
+//! `PjRtClient` is `Rc`-based (not `Send`), so an [`XlaRuntime`] must stay
+//! on the thread that created it. The coordinator hands each worker a
+//! [`ScorerFactory`] and every worker builds its own scorer; see
+//! `coordinator/worker.rs`.
+
+mod golden;
+mod manifest;
+mod scorer;
+
+pub use golden::{load_golden, verify_goldens, GoldenCase};
+pub use manifest::{Entry, Kind, Manifest, MetaDims, TensorSpec};
+pub use scorer::{
+    cpu_scorer_factory, xla_scorer_factory, CpuScorer, Scorer, ScorerFactory,
+    TopkResult, XlaScorer, MASKED_SCORE,
+};
+
+use crate::error::{GeomapError, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+/// A compiled AOT module bound to its manifest entry.
+pub struct CompiledModule {
+    exe: xla::PjRtLoadedExecutable,
+    /// The manifest entry this module was compiled from.
+    pub entry: Entry,
+}
+
+impl CompiledModule {
+    /// Execute with positional f32 inputs given as flat row-major buffers
+    /// (shapes taken from the entry). Returns the output tuple as
+    /// literals, in declaration order.
+    pub fn run_f32(&self, inputs: &[&[f32]]) -> Result<Vec<xla::Literal>> {
+        if inputs.len() != self.entry.inputs.len() {
+            return Err(GeomapError::Shape(format!(
+                "module {} wants {} inputs, got {}",
+                self.entry.name,
+                self.entry.inputs.len(),
+                inputs.len()
+            )));
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (buf, spec) in inputs.iter().zip(&self.entry.inputs) {
+            if buf.len() != spec.elements() {
+                return Err(GeomapError::Shape(format!(
+                    "module {}: input buffer {} != {:?}",
+                    self.entry.name,
+                    buf.len(),
+                    spec.shape
+                )));
+            }
+            let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+            literals.push(xla::Literal::vec1(buf).reshape(&dims)?);
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: always a tuple, even for
+        // single-output modules.
+        Ok(result.to_tuple()?)
+    }
+}
+
+/// PJRT CPU client + per-thread compile cache over an artifact manifest.
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+    /// The loaded manifest.
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<CompiledModule>>>,
+}
+
+impl XlaRuntime {
+    /// Create a CPU PJRT client and load `<dir>/manifest.json`.
+    pub fn load(dir: &str) -> Result<XlaRuntime> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(XlaRuntime { client, manifest, cache: RefCell::new(HashMap::new()) })
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) the named module.
+    pub fn module(&self, name: &str) -> Result<Rc<CompiledModule>> {
+        if let Some(m) = self.cache.borrow().get(name) {
+            return Ok(Rc::clone(m));
+        }
+        let entry = self.manifest.entry(name)?.clone();
+        let path = self.manifest.hlo_path(&entry);
+        let proto = xla::HloModuleProto::from_text_file(&path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        let module = Rc::new(CompiledModule { exe, entry });
+        self.cache.borrow_mut().insert(name.to_string(), Rc::clone(&module));
+        Ok(module)
+    }
+
+    /// Number of modules compiled so far.
+    pub fn compiled_count(&self) -> usize {
+        self.cache.borrow().len()
+    }
+}
+
+/// Copy a (rows × cols) row-major buffer into a zero-padded
+/// (pad_rows × pad_cols) buffer. Used to fit dynamic batch/tile sizes
+/// into the static AOT shapes.
+pub fn pad_rows(
+    src: &[f32],
+    rows: usize,
+    cols: usize,
+    pad_rows: usize,
+    pad_cols: usize,
+) -> Vec<f32> {
+    debug_assert_eq!(src.len(), rows * cols);
+    debug_assert!(pad_rows >= rows && pad_cols >= cols);
+    let mut out = vec![0.0f32; pad_rows * pad_cols];
+    for r in 0..rows {
+        out[r * pad_cols..r * pad_cols + cols]
+            .copy_from_slice(&src[r * cols..(r + 1) * cols]);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pad_rows_pads_both_axes() {
+        let src = [1.0, 2.0, 3.0, 4.0]; // 2x2
+        let out = pad_rows(&src, 2, 2, 3, 4);
+        assert_eq!(out.len(), 12);
+        assert_eq!(&out[0..4], &[1.0, 2.0, 0.0, 0.0]);
+        assert_eq!(&out[4..8], &[3.0, 4.0, 0.0, 0.0]);
+        assert_eq!(&out[8..12], &[0.0; 4]);
+    }
+
+    #[test]
+    fn pad_rows_identity_when_exact() {
+        let src = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(pad_rows(&src, 2, 2, 2, 2), src.to_vec());
+    }
+}

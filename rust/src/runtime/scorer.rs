@@ -1,0 +1,454 @@
+//! Exact rescoring backends: [`XlaScorer`] (PJRT executables from the AOT
+//! artifacts) and [`CpuScorer`] (pure-rust GEMM fallback). Both implement
+//! [`Scorer`]: score a query batch against an item tile and return
+//! per-query top-κ (positions within the tile).
+
+use super::{pad_rows, Kind, XlaRuntime};
+use crate::error::{GeomapError, Result};
+use crate::linalg::{ops::dot, Matrix};
+use crate::retrieval::TopK;
+
+/// Per-query top-κ over a tile: (tile position, exact score), descending.
+pub type TopkResult = Vec<Vec<(u32, f32)>>;
+
+/// Sentinel for masked-out columns (matches the L1 kernel's `-1e30`).
+pub const MASKED_SCORE: f32 = -1e30;
+
+/// A rescoring backend.
+pub trait Scorer {
+    /// Full score matrix `users · itemsᵀ` (B × T) for arbitrary B/T —
+    /// backends tile internally as needed. This is what the coordinator's
+    /// batched candidate-union path consumes.
+    fn score(&self, users: &Matrix, items: &Matrix) -> Result<Matrix>;
+
+    /// Whether the backend wants the worker's candidate-**union** batch
+    /// GEMM (`true`: one big dispatch amortises per-call overhead — the
+    /// XLA/PJRT case) or per-request candidate dots (`false`: host dots
+    /// are cheapest and the union wastes flops once diverse candidate
+    /// sets saturate the tile — the pure-CPU case). See EXPERIMENTS.md
+    /// §Perf for the measurement behind the split.
+    fn prefers_union_batching(&self) -> bool {
+        true
+    }
+
+    /// Masked scoring: `S[i,j] = uᵢ·vⱼ` where `mask[j] != 0`, else a
+    /// large negative sentinel (so masked columns never survive top-κ).
+    /// The fused prune+score alternative to gathering candidate rows —
+    /// cheap where row gathers are expensive (TPU). Default: full score
+    /// + host-side mask application.
+    fn score_masked(
+        &self,
+        users: &Matrix,
+        items: &Matrix,
+        mask: &[f32],
+    ) -> Result<Matrix> {
+        if mask.len() != items.rows() {
+            return Err(GeomapError::Shape(format!(
+                "mask len {} != item count {}",
+                mask.len(),
+                items.rows()
+            )));
+        }
+        let mut s = self.score(users, items)?;
+        for r in 0..s.rows() {
+            for (v, m) in s.row_mut(r).iter_mut().zip(mask) {
+                if *m == 0.0 {
+                    *v = MASKED_SCORE;
+                }
+            }
+        }
+        Ok(s)
+    }
+
+    /// For each query row of `users` (B × k), the top-κ items within the
+    /// `items` tile (T × k) by inner product.
+    fn score_topk(&self, users: &Matrix, items: &Matrix, kappa: usize)
+        -> Result<TopkResult>;
+
+    /// Backend label for logs and reports.
+    fn label(&self) -> String;
+}
+
+/// Builds a scorer on the calling thread (PJRT clients are not `Send`,
+/// so each coordinator worker constructs its own backend).
+pub type ScorerFactory = std::sync::Arc<dyn Fn() -> Result<Box<dyn Scorer>> + Send + Sync>;
+
+/// Factory for the pure-rust backend.
+pub fn cpu_scorer_factory() -> ScorerFactory {
+    std::sync::Arc::new(|| Ok(Box::new(CpuScorer)))
+}
+
+/// Factory for the PJRT backend over an artifact directory. Scorer
+/// modules are compiled eagerly at construction (worker start-up) so the
+/// first request batch does not pay the XLA compile latency.
+pub fn xla_scorer_factory(artifacts_dir: &str) -> ScorerFactory {
+    let dir = artifacts_dir.to_string();
+    std::sync::Arc::new(move || {
+        let scorer = XlaScorer::load(&dir)?;
+        scorer.prewarm()?;
+        Ok(Box::new(scorer))
+    })
+}
+
+/// Pure-rust rescoring: row-by-row dot products + a bounded heap.
+pub struct CpuScorer;
+
+impl Scorer for CpuScorer {
+    fn score(&self, users: &Matrix, items: &Matrix) -> Result<Matrix> {
+        if users.cols() != items.cols() {
+            return Err(GeomapError::Shape(format!(
+                "user k {} != item k {}",
+                users.cols(),
+                items.cols()
+            )));
+        }
+        Ok(crate::linalg::ops::matmul_nt(users, items))
+    }
+
+    fn prefers_union_batching(&self) -> bool {
+        false
+    }
+
+    fn score_topk(
+        &self,
+        users: &Matrix,
+        items: &Matrix,
+        kappa: usize,
+    ) -> Result<TopkResult> {
+        if users.cols() != items.cols() {
+            return Err(GeomapError::Shape(format!(
+                "user k {} != item k {}",
+                users.cols(),
+                items.cols()
+            )));
+        }
+        let mut out = Vec::with_capacity(users.rows());
+        for u in users.iter_rows() {
+            let mut heap = TopK::new(kappa);
+            for (t, v) in items.iter_rows().enumerate() {
+                heap.push(t as u32, dot(u, v));
+            }
+            out.push(heap.into_sorted().into_iter().map(|s| (s.id, s.score)).collect());
+        }
+        Ok(out)
+    }
+
+    fn label(&self) -> String {
+        "cpu".to_string()
+    }
+}
+
+/// PJRT rescoring through the AOT `score` / `score_topk` artifacts.
+///
+/// Dynamic (B, T) requests are zero-padded up to the smallest artifact
+/// whose static shape fits (`Manifest::best_scorer`). Zero-padded query
+/// rows produce all-zero score rows that are sliced away; zero-padded
+/// item rows are excluded by doing the final top-κ selection in rust over
+/// the first T_real columns only. When the tile exactly matches a fused
+/// `score_topk` artifact (and κ fits), the fused module is used instead —
+/// one executable, no (B,T) scores materialised on the host.
+pub struct XlaScorer {
+    runtime: XlaRuntime,
+}
+
+impl XlaScorer {
+    /// Load the artifact manifest and create the PJRT client.
+    pub fn load(artifacts_dir: &str) -> Result<XlaScorer> {
+        Ok(XlaScorer { runtime: XlaRuntime::load(artifacts_dir)? })
+    }
+
+    /// Access the underlying runtime (diagnostics, prewarming).
+    pub fn runtime(&self) -> &XlaRuntime {
+        &self.runtime
+    }
+
+    /// Compile every scorer module ahead of the first request.
+    pub fn prewarm(&self) -> Result<usize> {
+        let names: Vec<String> = self
+            .runtime
+            .manifest
+            .entries
+            .iter()
+            .filter(|e| {
+                matches!(e.kind, Kind::Score | Kind::ScoreTopk | Kind::ScoreMasked)
+            })
+            .map(|e| e.name.clone())
+            .collect();
+        for n in &names {
+            self.runtime.module(n)?;
+        }
+        Ok(names.len())
+    }
+
+    /// Fused score+top-κ through the AOT `score_topk` artifact (exact
+    /// tile-shape match required). Exposed for benches/tests; the default
+    /// [`Scorer::score_topk`] path uses tiled scoring + host selection
+    /// instead — on CPU PJRT the artifact's sort-based selection measures
+    /// ~10× slower than the GEMM (EXPERIMENTS.md §Perf), while on a real
+    /// TPU the fusion avoids the (B,T) HBM round-trip and would win.
+    pub fn score_topk_fused(
+        &self,
+        users: &Matrix,
+        items: &Matrix,
+        kappa: usize,
+    ) -> Result<TopkResult> {
+        let name = self
+            .fused_entry(users.rows(), users.cols(), items.rows(), kappa)
+            .ok_or_else(|| {
+                GeomapError::Artifact(format!(
+                    "no fused score_topk artifact for B={} k={} T={} κ={kappa}",
+                    users.rows(),
+                    users.cols(),
+                    items.rows()
+                ))
+            })?;
+        self.run_fused(&name, users, items, kappa)
+    }
+
+    /// The fused path: exact-shape match against a `score_topk` artifact.
+    fn fused_entry(&self, b: usize, k: usize, t: usize, kappa: usize) -> Option<String> {
+        self.runtime
+            .manifest
+            .of_kind(Kind::ScoreTopk)
+            .find(|e| {
+                e.meta.k == k && e.meta.t == t && e.meta.b >= b && e.meta.kappa >= kappa
+            })
+            .map(|e| e.name.clone())
+    }
+
+    fn run_fused(
+        &self,
+        name: &str,
+        users: &Matrix,
+        items: &Matrix,
+        kappa: usize,
+    ) -> Result<TopkResult> {
+        let module = self.runtime.module(name)?;
+        let m = module.entry.meta;
+        let u = pad_rows(users.as_slice(), users.rows(), users.cols(), m.b, m.k);
+        let outs = module.run_f32(&[&u, items.as_slice()])?;
+        let values = outs[0].to_vec::<f32>()?;
+        let indices = outs[1].to_vec::<i32>()?;
+        let width = m.kappa;
+        let mut result = Vec::with_capacity(users.rows());
+        for b in 0..users.rows() {
+            let row: Vec<(u32, f32)> = (0..kappa.min(width))
+                .map(|j| {
+                    (indices[b * width + j] as u32, values[b * width + j])
+                })
+                .collect();
+            result.push(row);
+        }
+        Ok(result)
+    }
+
+    /// Masked scoring through the AOT `score_masked` artifact, tiled for
+    /// arbitrary (B, T). Falls back to the trait default (score + host
+    /// mask) when no masked artifact matches this k.
+    fn score_masked_xla(
+        &self,
+        users: &Matrix,
+        items: &Matrix,
+        mask: &[f32],
+    ) -> Result<Option<Matrix>> {
+        let (b, k, t) = (users.rows(), users.cols(), items.rows());
+        let entry = match self
+            .runtime
+            .manifest
+            .of_kind(Kind::ScoreMasked)
+            .filter(|e| e.meta.k == k)
+            .max_by_key(|e| e.meta.b * e.meta.t)
+        {
+            Some(e) => e.name.clone(),
+            None => return Ok(None),
+        };
+        let module = self.runtime.module(&entry)?;
+        let m = module.entry.meta;
+        let mut out = Matrix::zeros(b, t);
+        for b0 in (0..b).step_by(m.b) {
+            let b1 = (b0 + m.b).min(b);
+            let ublock = users.slice_rows(b0, b1);
+            let u = pad_rows(ublock.as_slice(), b1 - b0, k, m.b, m.k);
+            for t0 in (0..t).step_by(m.t) {
+                let t1 = (t0 + m.t).min(t);
+                let vblock = items.slice_rows(t0, t1);
+                let v = pad_rows(vblock.as_slice(), t1 - t0, k, m.t, m.k);
+                let mut mk = vec![0.0f32; m.t];
+                mk[..t1 - t0].copy_from_slice(&mask[t0..t1]);
+                let outs = module.run_f32(&[&u, &v, &mk])?;
+                let scores = outs[0].to_vec::<f32>()?;
+                for r in b0..b1 {
+                    let src = &scores[(r - b0) * m.t..(r - b0) * m.t + (t1 - t0)];
+                    out.row_mut(r)[t0..t1].copy_from_slice(src);
+                }
+            }
+        }
+        Ok(Some(out))
+    }
+
+    fn run_padded(
+        &self,
+        users: &Matrix,
+        items: &Matrix,
+        kappa: usize,
+    ) -> Result<TopkResult> {
+        // the tiled full-score path handles any (B, T); top-κ selection
+        // over the exact scores happens host-side.
+        let scores = self.score(users, items)?;
+        let mut result = Vec::with_capacity(users.rows());
+        for row in 0..users.rows() {
+            let mut heap = TopK::new(kappa);
+            for (col, &s) in scores.row(row).iter().enumerate() {
+                heap.push(col as u32, s);
+            }
+            result.push(
+                heap.into_sorted().into_iter().map(|s| (s.id, s.score)).collect(),
+            );
+        }
+        Ok(result)
+    }
+}
+
+impl Scorer for XlaScorer {
+    fn score(&self, users: &Matrix, items: &Matrix) -> Result<Matrix> {
+        let (b, k, t) = (users.rows(), users.cols(), items.rows());
+        if k != items.cols() {
+            return Err(GeomapError::Shape(format!(
+                "user k {k} != item k {}",
+                items.cols()
+            )));
+        }
+        // the largest score artifact for this k defines the tile grid
+        let entry = self
+            .runtime
+            .manifest
+            .of_kind(Kind::Score)
+            .filter(|e| e.meta.k == k)
+            .max_by_key(|e| e.meta.b * e.meta.t)
+            .ok_or_else(|| {
+                GeomapError::Artifact(format!("no score artifact for k={k}"))
+            })?
+            .name
+            .clone();
+        let module = self.runtime.module(&entry)?;
+        let m = module.entry.meta;
+        let mut out = Matrix::zeros(b, t);
+        for b0 in (0..b).step_by(m.b) {
+            let b1 = (b0 + m.b).min(b);
+            let ublock = users.slice_rows(b0, b1);
+            let u = pad_rows(ublock.as_slice(), b1 - b0, k, m.b, m.k);
+            for t0 in (0..t).step_by(m.t) {
+                let t1 = (t0 + m.t).min(t);
+                let vblock = items.slice_rows(t0, t1);
+                let v = pad_rows(vblock.as_slice(), t1 - t0, k, m.t, m.k);
+                let outs = module.run_f32(&[&u, &v])?;
+                let scores = outs[0].to_vec::<f32>()?;
+                for r in b0..b1 {
+                    let src = &scores[(r - b0) * m.t..(r - b0) * m.t + (t1 - t0)];
+                    out.row_mut(r)[t0..t1].copy_from_slice(src);
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    fn score_masked(
+        &self,
+        users: &Matrix,
+        items: &Matrix,
+        mask: &[f32],
+    ) -> Result<Matrix> {
+        if mask.len() != items.rows() {
+            return Err(GeomapError::Shape(format!(
+                "mask len {} != item count {}",
+                mask.len(),
+                items.rows()
+            )));
+        }
+        if let Some(s) = self.score_masked_xla(users, items, mask)? {
+            return Ok(s);
+        }
+        // no masked artifact for this k: trait-default path
+        let mut s = self.score(users, items)?;
+        for r in 0..s.rows() {
+            for (v, m) in s.row_mut(r).iter_mut().zip(mask) {
+                if *m == 0.0 {
+                    *v = MASKED_SCORE;
+                }
+            }
+        }
+        Ok(s)
+    }
+
+    fn score_topk(
+        &self,
+        users: &Matrix,
+        items: &Matrix,
+        kappa: usize,
+    ) -> Result<TopkResult> {
+        if users.cols() != items.cols() {
+            return Err(GeomapError::Shape(format!(
+                "user k {} != item k {}",
+                users.cols(),
+                items.cols()
+            )));
+        }
+        // tiled GEMM + host-side selection; see score_topk_fused for the
+        // AOT-fused alternative and the §Perf measurement behind this
+        // default.
+        self.run_padded(users, items, kappa)
+    }
+
+    fn label(&self) -> String {
+        format!("xla({})", self.runtime.platform())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn factors(rows: usize, k: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::seeded(seed);
+        Matrix::gaussian(&mut rng, rows, k, 1.0)
+    }
+
+    #[test]
+    fn cpu_scorer_matches_brute_force() {
+        let users = factors(4, 8, 1);
+        let items = factors(50, 8, 2);
+        let got = CpuScorer.score_topk(&users, &items, 5).unwrap();
+        assert_eq!(got.len(), 4);
+        for (u, row) in got.iter().enumerate() {
+            assert_eq!(row.len(), 5);
+            let brute = crate::retrieval::brute_force_top_k(
+                users.row(u),
+                &items,
+                5,
+            );
+            for (g, b) in row.iter().zip(&brute) {
+                assert_eq!(g.0, b.id);
+                assert!((g.1 - b.score).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn cpu_scorer_rejects_dim_mismatch() {
+        let users = factors(2, 8, 3);
+        let items = factors(10, 4, 4);
+        assert!(CpuScorer.score_topk(&users, &items, 3).is_err());
+    }
+
+    #[test]
+    fn kappa_larger_than_tile_is_truncated() {
+        let users = factors(1, 4, 5);
+        let items = factors(3, 4, 6);
+        let got = CpuScorer.score_topk(&users, &items, 10).unwrap();
+        assert_eq!(got[0].len(), 3);
+    }
+
+    // XlaScorer end-to-end tests live in rust/tests/xla_runtime.rs (they
+    // need the artifacts directory built by `make artifacts`).
+}

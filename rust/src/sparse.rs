@@ -1,0 +1,268 @@
+//! Sparse-vector substrate.
+//!
+//! [`SparseVec`] is the output type of the paper's map φ: a p-dimensional
+//! vector stored as sorted (index, value) pairs — the "inverted index
+//! representation" costs O(k log p) per factor (paper §4.2.2) because only
+//! the k non-zeros are kept.
+
+use crate::error::{GeomapError, Result};
+
+/// Sparse vector in `R^p`: sorted unique indices + parallel values.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SparseVec {
+    dim: usize,
+    indices: Vec<u32>,
+    values: Vec<f32>,
+}
+
+impl SparseVec {
+    /// Build from parallel arrays; sorts by index and validates.
+    pub fn new(dim: usize, mut pairs: Vec<(u32, f32)>) -> Result<Self> {
+        pairs.sort_unstable_by_key(|&(i, _)| i);
+        for w in pairs.windows(2) {
+            if w[0].0 == w[1].0 {
+                return Err(GeomapError::Shape(format!(
+                    "duplicate sparse index {}",
+                    w[0].0
+                )));
+            }
+        }
+        if let Some(&(last, _)) = pairs.last() {
+            if last as usize >= dim {
+                return Err(GeomapError::Shape(format!(
+                    "index {last} out of bounds for dim {dim}"
+                )));
+            }
+        }
+        let (indices, values) = pairs.into_iter().unzip();
+        Ok(SparseVec { dim, indices, values })
+    }
+
+    /// Build from a dense slice, keeping entries with |x| > `eps`.
+    pub fn from_dense(x: &[f32], eps: f32) -> Self {
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        for (i, &v) in x.iter().enumerate() {
+            if v.abs() > eps {
+                indices.push(i as u32);
+                values.push(v);
+            }
+        }
+        SparseVec { dim: x.len(), indices, values }
+    }
+
+    /// Ambient dimensionality p.
+    #[inline]
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Number of stored non-zeros.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Sorted non-zero indices (the sparsity pattern / support).
+    #[inline]
+    pub fn indices(&self) -> &[u32] {
+        &self.indices
+    }
+
+    /// Values parallel to [`indices`](Self::indices).
+    #[inline]
+    pub fn values(&self) -> &[f32] {
+        &self.values
+    }
+
+    /// Iterate `(index, value)` pairs in index order.
+    pub fn iter(&self) -> impl Iterator<Item = (u32, f32)> + '_ {
+        self.indices.iter().copied().zip(self.values.iter().copied())
+    }
+
+    /// Sparse–sparse dot product (merge join over sorted indices).
+    pub fn dot(&self, other: &SparseVec) -> f32 {
+        let (mut i, mut j) = (0usize, 0usize);
+        let mut acc = 0.0f32;
+        while i < self.indices.len() && j < other.indices.len() {
+            match self.indices[i].cmp(&other.indices[j]) {
+                std::cmp::Ordering::Less => i += 1,
+                std::cmp::Ordering::Greater => j += 1,
+                std::cmp::Ordering::Equal => {
+                    acc += self.values[i] * other.values[j];
+                    i += 1;
+                    j += 1;
+                }
+            }
+        }
+        acc
+    }
+
+    /// Size of the support intersection with `other`.
+    pub fn overlap(&self, other: &SparseVec) -> usize {
+        let (mut i, mut j) = (0usize, 0usize);
+        let mut n = 0usize;
+        while i < self.indices.len() && j < other.indices.len() {
+            match self.indices[i].cmp(&other.indices[j]) {
+                std::cmp::Ordering::Less => i += 1,
+                std::cmp::Ordering::Greater => j += 1,
+                std::cmp::Ordering::Equal => {
+                    n += 1;
+                    i += 1;
+                    j += 1;
+                }
+            }
+        }
+        n
+    }
+
+    /// True iff the two sparsity patterns are disjoint ("conflicting",
+    /// paper footnote 1).
+    pub fn conflicts_with(&self, other: &SparseVec) -> bool {
+        self.overlap(other) == 0
+    }
+
+    /// Materialise as a dense vector (tests / debugging only).
+    pub fn to_dense(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.dim];
+        for (i, v) in self.iter() {
+            out[i as usize] = v;
+        }
+        out
+    }
+
+    /// ℓ2 norm of the stored values.
+    pub fn norm(&self) -> f32 {
+        self.values.iter().map(|v| v * v).sum::<f32>().sqrt()
+    }
+}
+
+/// Compressed sparse row collection of [`SparseVec`]s with a shared
+/// ambient dimension — the natural container for φ(Z).
+#[derive(Clone, Debug, Default)]
+pub struct SparseMatrix {
+    dim: usize,
+    /// row start offsets, len = rows + 1
+    offsets: Vec<usize>,
+    indices: Vec<u32>,
+    values: Vec<f32>,
+}
+
+impl SparseMatrix {
+    /// Empty collection with ambient dimension `dim`.
+    pub fn with_dim(dim: usize) -> Self {
+        SparseMatrix { dim, offsets: vec![0], indices: Vec::new(), values: Vec::new() }
+    }
+
+    /// Append one row.
+    pub fn push(&mut self, row: &SparseVec) -> Result<()> {
+        if row.dim() != self.dim {
+            return Err(GeomapError::Shape(format!(
+                "row dim {} != matrix dim {}",
+                row.dim(),
+                self.dim
+            )));
+        }
+        self.indices.extend_from_slice(row.indices());
+        self.values.extend_from_slice(row.values());
+        self.offsets.push(self.indices.len());
+        Ok(())
+    }
+
+    /// Number of rows.
+    pub fn rows(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// Ambient dimension p.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Borrow row `r` as (indices, values).
+    pub fn row(&self, r: usize) -> (&[u32], &[f32]) {
+        let (lo, hi) = (self.offsets[r], self.offsets[r + 1]);
+        (&self.indices[lo..hi], &self.values[lo..hi])
+    }
+
+    /// Total stored non-zeros.
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Mean non-zeros per row.
+    pub fn mean_nnz(&self) -> f64 {
+        if self.rows() == 0 {
+            0.0
+        } else {
+            self.nnz() as f64 / self.rows() as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(dim: usize, pairs: &[(u32, f32)]) -> SparseVec {
+        SparseVec::new(dim, pairs.to_vec()).unwrap()
+    }
+
+    #[test]
+    fn new_sorts_and_validates() {
+        let v = sv(10, &[(5, 1.0), (2, 2.0)]);
+        assert_eq!(v.indices(), &[2, 5]);
+        assert_eq!(v.values(), &[2.0, 1.0]);
+        assert!(SparseVec::new(10, vec![(3, 1.0), (3, 2.0)]).is_err());
+        assert!(SparseVec::new(3, vec![(3, 1.0)]).is_err());
+    }
+
+    #[test]
+    fn from_dense_thresholds() {
+        let v = SparseVec::from_dense(&[0.0, 0.5, -0.001, 2.0], 0.01);
+        assert_eq!(v.indices(), &[1, 3]);
+        assert_eq!(v.nnz(), 2);
+        assert_eq!(v.dim(), 4);
+    }
+
+    #[test]
+    fn dot_matches_dense() {
+        let a = sv(8, &[(0, 1.0), (3, 2.0), (7, -1.0)]);
+        let b = sv(8, &[(3, 4.0), (6, 1.0), (7, 2.0)]);
+        let dense: f32 = a
+            .to_dense()
+            .iter()
+            .zip(b.to_dense().iter())
+            .map(|(x, y)| x * y)
+            .sum();
+        assert!((a.dot(&b) - dense).abs() < 1e-6);
+        assert_eq!(a.dot(&b), 8.0 - 2.0);
+    }
+
+    #[test]
+    fn overlap_and_conflict_semantics() {
+        // paper footnote 1 example: [9,0,8,0,0] vs [0,6,0,7,3]
+        let a = SparseVec::from_dense(&[9.0, 0.0, 8.0, 0.0, 0.0], 0.0);
+        let b = SparseVec::from_dense(&[0.0, 6.0, 0.0, 7.0, 3.0], 0.0);
+        assert_eq!(a.overlap(&b), 0);
+        assert!(a.conflicts_with(&b));
+        let c = SparseVec::from_dense(&[1.0, 6.0, 0.0, 0.0, 0.0], 0.0);
+        assert_eq!(a.overlap(&c), 1);
+        assert!(!a.conflicts_with(&c));
+    }
+
+    #[test]
+    fn sparse_matrix_roundtrip() {
+        let mut m = SparseMatrix::with_dim(16);
+        let r0 = sv(16, &[(1, 1.0), (4, -2.0)]);
+        let r1 = sv(16, &[(0, 3.0)]);
+        m.push(&r0).unwrap();
+        m.push(&r1).unwrap();
+        assert_eq!(m.rows(), 2);
+        assert_eq!(m.nnz(), 3);
+        assert_eq!(m.row(0), (&[1u32, 4u32][..], &[1.0f32, -2.0f32][..]));
+        assert_eq!(m.row(1), (&[0u32][..], &[3.0f32][..]));
+        assert!((m.mean_nnz() - 1.5).abs() < 1e-9);
+        assert!(m.push(&sv(8, &[(0, 1.0)])).is_err());
+    }
+}

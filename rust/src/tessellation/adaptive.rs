@@ -1,0 +1,189 @@
+//! Cluster-adaptive non-uniform tessellation — the extension named in
+//! paper §5: "for factors which are known to have clustered form, a
+//! simple extension of our algorithm would involve a non-uniform
+//! tessellation scheme with finer granularity near the cluster centres".
+//!
+//! Realised as the supplement §B.1 *drop-list* construction over the
+//! D-ary grid: the schema is the full Γ_D, but factors **far** from every
+//! cluster centre are snapped to the ternary sub-grid {−D, 0, +D}ᵏ ⊂ Γ_D
+//! (i.e. the intermediate grid vectors are dropped in sparse regions of
+//! the sphere). Near a centre the full `O(k/D²)`-resolution assignment
+//! applies. Everything stays a deterministic function of `z` (plus the
+//! fixed centre set), so the §3.3 no-storage requirement still holds, and
+//! because both regimes emit levels on the *same* D-grid the downstream
+//! permutation maps compose unchanged.
+
+use super::{DaryTessellation, TernaryTessellation, TessVector, Tessellation};
+use crate::geometry::angular_distance;
+use crate::linalg::Matrix;
+
+/// Non-uniform tessellation: D-ary near cluster centres, ternary
+/// (scaled onto the D-grid) elsewhere.
+pub struct ClusterAdaptive {
+    centres: Matrix,
+    /// Angular radius within which the fine grid applies.
+    pub radius: f32,
+    fine: DaryTessellation,
+    coarse: TernaryTessellation,
+    d: u32,
+}
+
+impl ClusterAdaptive {
+    /// Build for k-dim factors with fine resolution `d` near the given
+    /// unit-norm `centres` (angular `radius`).
+    pub fn new(k: usize, d: u32, centres: Matrix, radius: f32) -> Self {
+        assert_eq!(centres.cols(), k, "centre dim mismatch");
+        assert!(centres.rows() >= 1, "need at least one centre");
+        assert!(d >= 1 && radius >= 0.0);
+        ClusterAdaptive {
+            centres,
+            radius,
+            fine: DaryTessellation::new(k, d),
+            coarse: TernaryTessellation::new(k),
+            d,
+        }
+    }
+
+    /// The cluster centres.
+    pub fn centres(&self) -> &Matrix {
+        &self.centres
+    }
+
+    /// True when `z` is within the fine-grid radius of some centre.
+    pub fn is_near_centre(&self, z: &[f32]) -> bool {
+        self.centres
+            .iter_rows()
+            .any(|c| angular_distance(c, z) <= self.radius)
+    }
+}
+
+impl Tessellation for ClusterAdaptive {
+    fn k(&self) -> usize {
+        self.coarse.k()
+    }
+
+    fn d(&self) -> u32 {
+        self.d
+    }
+
+    fn assign(&self, z: &[f32]) -> TessVector {
+        if self.is_near_centre(z) {
+            self.fine.assign(z)
+        } else {
+            // coarse regime: ternary levels lifted onto the D-grid so the
+            // permutation maps see one consistent grid.
+            let t = self.coarse.assign(z);
+            TessVector {
+                levels: t.levels.iter().map(|&l| l * self.d as i16).collect(),
+                d: self.d,
+            }
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "cluster-adaptive"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::spherical_kmeans;
+    use crate::data::clustered_factors;
+    use crate::geometry::normalize;
+    use crate::rng::Rng;
+    use crate::testing::prop;
+
+    fn fixture(seed: u64) -> (Matrix, ClusterAdaptive) {
+        let mut rng = Rng::seeded(seed);
+        let data = clustered_factors(&mut rng, 200, 16, 4, 0.15);
+        let km = spherical_kmeans(&data, 4, 15, &mut rng);
+        let tess = ClusterAdaptive::new(16, 8, km.centres, 0.4);
+        (data, tess)
+    }
+
+    #[test]
+    fn near_centre_factors_get_fine_levels() {
+        let (data, tess) = fixture(1);
+        let mut near = 0usize;
+        let mut fine = 0usize;
+        for row in data.iter_rows() {
+            if !tess.is_near_centre(row) {
+                continue; // cluster tails may fall outside the radius
+            }
+            near += 1;
+            let t = tess.assign(row);
+            assert_eq!(t.d, 8);
+            // fine assignment uses intermediate grid levels somewhere
+            if t.levels.iter().any(|&l| l != 0 && l.abs() != 8) {
+                fine += 1;
+            }
+        }
+        assert!(near * 10 > data.rows() * 9, "most members are near: {near}");
+        assert!(fine > near / 2, "fine grid unused: {fine}/{near}");
+    }
+
+    #[test]
+    fn far_factors_get_ternary_levels_on_the_d_grid() {
+        let (_, tess) = fixture(2);
+        let mut rng = Rng::seeded(3);
+        let mut far = 0usize;
+        for _ in 0..100 {
+            let mut z: Vec<f32> = (0..16).map(|_| rng.gaussian_f32()).collect();
+            normalize(&mut z);
+            if tess.is_near_centre(&z) {
+                continue;
+            }
+            far += 1;
+            let t = tess.assign(&z);
+            assert_eq!(t.d, 8);
+            assert!(
+                t.levels.iter().all(|&l| l == 0 || l.abs() == 8),
+                "coarse regime must stay on the ternary sub-grid: {:?}",
+                t.levels
+            );
+        }
+        assert!(far > 20, "random directions should usually be far");
+    }
+
+    #[test]
+    fn assignment_is_scale_invariant() {
+        let (_, tess) = fixture(4);
+        prop(50, |g| {
+            let z = g.unit_vector(16);
+            let s = g.f32_in(0.1, 20.0);
+            let zs: Vec<f32> = z.iter().map(|v| v * s).collect();
+            assert_eq!(tess.assign(&z).levels, tess.assign(&zs).levels);
+        });
+    }
+
+    #[test]
+    fn composes_with_permutation_maps() {
+        // the adaptive tessellation emits a consistent D-grid, so the
+        // standard maps accept its output.
+        use crate::permutation::{OneHot, ParseTree, PermutationMap};
+        let (data, tess) = fixture(5);
+        let one_hot = OneHot::new(16, 8);
+        let pt = ParseTree::new(16, 8);
+        for row in data.iter_rows().take(20) {
+            let t = tess.assign(row);
+            let m1 = one_hot.index_map(&t);
+            let m2 = pt.index_map(&t);
+            assert!(crate::permutation::is_injective(&m1));
+            assert!(crate::permutation::is_injective(&m2));
+        }
+    }
+
+    #[test]
+    fn radius_zero_is_all_coarse() {
+        let mut rng = Rng::seeded(6);
+        let data = clustered_factors(&mut rng, 50, 8, 2, 0.2);
+        let km = spherical_kmeans(&data, 2, 5, &mut rng);
+        let tess = ClusterAdaptive::new(8, 4, km.centres, 0.0);
+        let mut z: Vec<f32> = (0..8).map(|_| rng.gaussian_f32()).collect();
+        normalize(&mut z);
+        let t = tess.assign(&z);
+        // almost surely not exactly on a centre → coarse sub-grid
+        assert!(t.levels.iter().all(|&l| l == 0 || l.abs() == 4));
+    }
+}

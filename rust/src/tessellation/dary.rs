@@ -1,0 +1,200 @@
+//! D-ary directional tessellation — paper §4.1.2, supplement Algorithm 3.
+//!
+//! The base set is `B_D = {0, ±1/D, ±2/D, …, ±1}`; Γ_D is all non-zero
+//! grid vectors, normalised. Exact projection is hard, but rounding each
+//! coordinate to the nearest grid level and renormalising (TessVector-D)
+//! gives an ε-approximation with `d(a_z, a*_z) ~ O(k/D²)` (Lemma 2) in
+//! O(k) time — no sort needed.
+//!
+//! The rust implementation matches the pallas kernel
+//! `python/compile/kernels/tess_dary.py` bit-for-bit on the golden files
+//! (see `rust/tests/golden.rs`), which is how L3 and L1 are pinned to the
+//! same semantics.
+
+use super::{TessVector, Tessellation};
+use crate::geometry::normalize;
+
+/// ε-approximate D-ary tessellation (Algorithm 3).
+#[derive(Clone, Debug)]
+pub struct DaryTessellation {
+    k: usize,
+    d: u32,
+}
+
+impl DaryTessellation {
+    /// Tessellation over the D-ary grid. `d = 1` degenerates to rounding on
+    /// the ternary grid (note: *not* identical to Algorithm 2, which is the
+    /// exact search; see `approx_vs_exact_gap` test).
+    pub fn new(k: usize, d: u32) -> Self {
+        assert!(k > 0, "k must be positive");
+        assert!(d >= 1, "D must be >= 1");
+        DaryTessellation { k, d }
+    }
+}
+
+impl Tessellation for DaryTessellation {
+    fn k(&self) -> usize {
+        self.k
+    }
+
+    fn d(&self) -> u32 {
+        self.d
+    }
+
+    fn assign(&self, z: &[f32]) -> TessVector {
+        assert_eq!(z.len(), self.k, "factor dim {} != k {}", z.len(), self.k);
+        // Alg. 3 assumes z ∈ S^k; normalise a copy so the schema is
+        // scale-invariant like the rest of the stack (paper §5).
+        let mut zn = z.to_vec();
+        let norm = normalize(&mut zn);
+        let d = self.d as f32;
+        let mut levels = vec![0i16; self.k];
+        if norm == 0.0 {
+            // degenerate zero factor: put it on the first axis
+            levels[0] = 1;
+            return TessVector { levels, d: self.d };
+        }
+        let mut all_zero = true;
+        for (li, &zi) in levels.iter_mut().zip(zn.iter()) {
+            // steps 5-11: |Dz - ceil| vs |Dz - floor| == round-half-up;
+            // f32::round (half away from zero) matches jnp.round on the
+            // golden set within grid tolerance.
+            let l = (zi * d).round() as i32;
+            *li = l.clamp(-(self.d as i32), self.d as i32) as i16;
+            if *li != 0 {
+                all_zero = false;
+            }
+        }
+        if all_zero {
+            // A_D excludes {0}^k: snap the max-|z| coordinate to ±1 level
+            // (same rule as the pallas kernel).
+            let (idx, _) = zn
+                .iter()
+                .enumerate()
+                .max_by(|(_, a), (_, b)| {
+                    a.abs().partial_cmp(&b.abs()).unwrap_or(std::cmp::Ordering::Equal)
+                })
+                .expect("k > 0");
+            levels[idx] = if zn[idx].is_sign_negative() { -1 } else { 1 };
+        }
+        TessVector { levels, d: self.d }
+    }
+
+    fn name(&self) -> &'static str {
+        "dary"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geometry::angular_distance;
+    use crate::tessellation::{brute_force_assign, TernaryTessellation};
+    use crate::testing::prop;
+
+    #[test]
+    fn epsilon_bound_lemma2() {
+        // ‖z - ã_z‖ ≤ √k / D before normalisation ⇒ d(a_z, z) small; check
+        // the end-to-end angular gap vs the brute-force optimum is O(k/D²)
+        // with a conservative constant.
+        prop(60, |g| {
+            let k = g.usize_in(2..=4);
+            let d = *g.choose(&[2u32, 3, 4]);
+            let z = g.unit_vector(k);
+            let approx = DaryTessellation::new(k, d).assign(&z);
+            let exact = brute_force_assign(&z, d);
+            let d_approx = angular_distance(&approx.to_unit(), &z);
+            let d_exact = angular_distance(&exact.to_unit(), &z);
+            let eps = 8.0 * k as f32 / (d * d) as f32; // constant from Lemma 2 proof
+            assert!(
+                d_approx - d_exact <= eps,
+                "gap {} > eps {eps} (k={k}, D={d})",
+                d_approx - d_exact
+            );
+        });
+    }
+
+    #[test]
+    fn levels_within_grid_bounds() {
+        prop(100, |g| {
+            let k = g.usize_in(1..=32);
+            let d = *g.choose(&[1u32, 2, 4, 8, 16]);
+            let z = g.vec_gaussian(k..=k);
+            let t = DaryTessellation::new(k, d).assign(&z);
+            assert!(t.levels.iter().all(|&l| l.unsigned_abs() as u32 <= d));
+            assert!(t.support() >= 1, "output must be in Γ (non-zero)");
+        });
+    }
+
+    #[test]
+    fn scale_invariance() {
+        prop(60, |g| {
+            let k = g.usize_in(2..=16);
+            let d = *g.choose(&[2u32, 8]);
+            let z = g.unit_vector(k);
+            let s = g.f32_in(0.05, 30.0);
+            let zs: Vec<f32> = z.iter().map(|v| v * s).collect();
+            let tess = DaryTessellation::new(k, d);
+            assert_eq!(tess.assign(&z).levels, tess.assign(&zs).levels);
+        });
+    }
+
+    #[test]
+    fn zero_factor_gets_axis() {
+        let t = DaryTessellation::new(4, 8).assign(&[0.0; 4]);
+        assert_eq!(t.levels, vec![1, 0, 0, 0]);
+    }
+
+    #[test]
+    fn tiny_coordinates_snap_max() {
+        // all |z_i| < 1/(2D) after normalisation is impossible for unit z
+        // (‖z‖=1 forces a coordinate ≥ 1/√k ≥ 1/(2D) when D ≥ √k/2), so
+        // exercise the snap path via the unnormalised degenerate input.
+        let z = [1e-4f32, -3e-4, 2e-4, 1e-4];
+        // normalised this is fine; force the snap by using D=1 and a vector
+        // whose normalised coords are all < 0.5 in magnitude:
+        let z2 = [0.45f32, -0.45, 0.45, 0.45, 0.45]; // norm ≈ 1.006
+        let t = DaryTessellation::new(5, 1).assign(&z2);
+        assert!(t.support() >= 1);
+        let t2 = DaryTessellation::new(4, 8).assign(&z);
+        assert!(t2.support() >= 1);
+    }
+
+    #[test]
+    fn finer_grid_is_closer() {
+        // increasing D must not increase the angular distance (statistically;
+        // we assert on the mean over many draws).
+        let mut gap2 = 0.0f64;
+        let mut gap16 = 0.0f64;
+        let mut g = crate::rng::Rng::seeded(99);
+        for _ in 0..200 {
+            let mut z: Vec<f32> = (0..8).map(|_| g.gaussian_f32()).collect();
+            crate::geometry::normalize(&mut z);
+            gap2 += angular_distance(
+                &DaryTessellation::new(8, 2).assign(&z).to_unit(),
+                &z,
+            ) as f64;
+            gap16 += angular_distance(
+                &DaryTessellation::new(8, 16).assign(&z).to_unit(),
+                &z,
+            ) as f64;
+        }
+        assert!(gap16 < gap2, "finer grid should be closer: {gap16} vs {gap2}");
+    }
+
+    #[test]
+    fn dary1_close_to_exact_ternary() {
+        // D=1 rounding is the approximate version of Algorithm 2; the
+        // angular gap must stay within the Lemma-2 envelope.
+        prop(60, |g| {
+            let k = g.usize_in(2..=8);
+            let z = g.unit_vector(k);
+            let approx = DaryTessellation::new(k, 1).assign(&z);
+            let exact = TernaryTessellation::new(k).assign(&z);
+            let da = angular_distance(&approx.to_unit(), &z);
+            let de = angular_distance(&exact.to_unit(), &z);
+            assert!(da + 1e-6 >= de, "exact must be at least as close");
+            assert!(da - de <= 8.0 * k as f32, "sanity envelope");
+        });
+    }
+}

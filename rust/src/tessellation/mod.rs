@@ -1,0 +1,190 @@
+//! Tessellations of the unit sphere (paper §4.1).
+//!
+//! A tessellation assigns every factor `z ∈ R^k` to its closest (in angular
+//! distance) tessellating vector `a ∈ Γ` — without ever materialising Γ,
+//! which has `|Γ| = 3^k - 1` (ternary) or `(2D+1)^k - 1` (D-ary) elements.
+//!
+//! * [`TernaryTessellation`] — paper Algorithm 2: exact in O(k log k).
+//! * [`DaryTessellation`] — supplement Algorithm 3: ε-approximate in O(k)
+//!   with ε ~ O(k/D²) (Lemma 2).
+//! * [`ClusterAdaptive`] — the paper §5 clustered-data extension: D-ary
+//!   resolution near cluster centres, ternary elsewhere (a §B.1 drop-list
+//!   over Γ_D).
+//! * [`CappedTernary`] — the supplement §B.1 non-uniform variant obtained
+//!   by *dropping* tessellating vectors (here: all vectors with support
+//!   larger than `t_max`), still exact over the retained set.
+//! * [`brute_force_assign`] — test oracle that enumerates Γ for small k.
+
+mod adaptive;
+mod dary;
+mod ternary;
+
+pub use adaptive::ClusterAdaptive;
+pub use dary::DaryTessellation;
+pub use ternary::{CappedTernary, TernaryTessellation};
+
+use crate::geometry::normalize;
+
+/// An (unnormalised) tessellating vector ã: integer levels in units of
+/// `1/d`, so the represented vector is `levels / d`, normalised.
+///
+/// Ternary vectors are the `d = 1` case with levels in {-1, 0, 1}.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct TessVector {
+    /// Per-coordinate level; level ∈ [-d, d].
+    pub levels: Vec<i16>,
+    /// Grid resolution D (≥ 1).
+    pub d: u32,
+}
+
+impl TessVector {
+    /// Support size (number of non-zero levels) — `t` in the paper.
+    pub fn support(&self) -> usize {
+        self.levels.iter().filter(|&&l| l != 0).count()
+    }
+
+    /// The normalised tessellating vector `a = ã / ‖ã‖` as dense f32.
+    pub fn to_unit(&self) -> Vec<f32> {
+        let mut v: Vec<f32> =
+            self.levels.iter().map(|&l| l as f32 / self.d as f32).collect();
+        normalize(&mut v);
+        v
+    }
+
+    /// A stable 64-bit region id (FNV-1a over levels + d). Two factors in
+    /// the same Voronoi tile share a region id.
+    pub fn region_id(&self) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        let mut mix = |b: u8| {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x1000_0000_01b3);
+        };
+        for b in self.d.to_le_bytes() {
+            mix(b);
+        }
+        for &l in &self.levels {
+            for b in l.to_le_bytes() {
+                mix(b);
+            }
+        }
+        h
+    }
+
+    /// ℓ1 distance between unnormalised vectors, in grid units — the
+    /// quantity that §4.2.1 ties to Kendall-tau distance of the
+    /// corresponding permutations.
+    pub fn l1_grid_distance(&self, other: &TessVector) -> u32 {
+        assert_eq!(self.d, other.d, "grid resolutions differ");
+        assert_eq!(self.levels.len(), other.levels.len());
+        self.levels
+            .iter()
+            .zip(&other.levels)
+            .map(|(&a, &b)| (a as i32 - b as i32).unsigned_abs())
+            .sum()
+    }
+}
+
+/// A deterministic function-based tessellation schema (paper §3.3: no
+/// explicit storage of Γ, assignment is a function of `z` alone).
+pub trait Tessellation: Send + Sync {
+    /// Factor dimensionality k.
+    fn k(&self) -> usize;
+
+    /// Grid resolution D of the produced [`TessVector`]s.
+    fn d(&self) -> u32;
+
+    /// Closest (or ε-closest) tessellating vector for `z`.
+    ///
+    /// Scale-invariant in `z` (paper §5). `z.len()` must equal `self.k()`.
+    fn assign(&self, z: &[f32]) -> TessVector;
+
+    /// Human-readable schema name for logs/reports.
+    fn name(&self) -> &'static str;
+}
+
+/// Test oracle: exact argmax over the full tessellating set Γ_D by
+/// enumeration — `(2d+1)^k - 1` candidates, so only usable for tiny k/d.
+///
+/// Returns the unnormalised levels of the argmax of `cos(a, z)`.
+pub fn brute_force_assign(z: &[f32], d: u32) -> TessVector {
+    let k = z.len();
+    let base = (2 * d + 1) as u64;
+    let total = base.checked_pow(k as u32).expect("enumeration overflow");
+    assert!(total <= 1 << 26, "brute force too large: {total}");
+    let mut best: Option<(f64, Vec<i16>)> = None;
+    let mut levels = vec![0i16; k];
+    // code 0 decodes to all-(-d), NOT the all-zero vector — the zero
+    // vector is skipped by the explicit guard below, so enumerate from 0.
+    for code in 0..total {
+        // decode mixed-radix representation
+        let mut c = code;
+        for l in levels.iter_mut() {
+            *l = (c % base) as i16 - d as i16;
+            c /= base;
+        }
+        if levels.iter().all(|&l| l == 0) {
+            continue;
+        }
+        let mut dot = 0.0f64;
+        let mut nrm = 0.0f64;
+        for (zi, &li) in z.iter().zip(levels.iter()) {
+            let a = li as f64 / d as f64;
+            dot += a * *zi as f64;
+            nrm += a * a;
+        }
+        let cos = dot / nrm.sqrt();
+        if best.as_ref().map(|(b, _)| cos > *b).unwrap_or(true) {
+            best = Some((cos, levels.clone()));
+        }
+    }
+    TessVector { levels: best.expect("nonempty Γ").1, d }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tess_vector_support_and_unit() {
+        let t = TessVector { levels: vec![1, 0, -1, 1], d: 1 };
+        assert_eq!(t.support(), 3);
+        let u = t.to_unit();
+        let inv = 1.0 / 3.0f32.sqrt();
+        assert!((u[0] - inv).abs() < 1e-6);
+        assert!((u[2] + inv).abs() < 1e-6);
+        assert_eq!(u[1], 0.0);
+    }
+
+    #[test]
+    fn region_ids_differ_for_different_levels() {
+        let a = TessVector { levels: vec![1, 0, 1], d: 1 };
+        let b = TessVector { levels: vec![1, 1, 0], d: 1 };
+        let c = TessVector { levels: vec![1, 0, 1], d: 2 };
+        assert_ne!(a.region_id(), b.region_id());
+        assert_ne!(a.region_id(), c.region_id());
+        assert_eq!(a.region_id(), a.clone().region_id());
+    }
+
+    #[test]
+    fn l1_grid_distance_counts_level_changes() {
+        let a = TessVector { levels: vec![1, 0, -1], d: 1 };
+        let b = TessVector { levels: vec![0, 0, 1], d: 1 };
+        assert_eq!(a.l1_grid_distance(&b), 3);
+        assert_eq!(a.l1_grid_distance(&a), 0);
+    }
+
+    #[test]
+    fn brute_force_prefers_aligned_vector() {
+        // z along axis 1 → best ternary vector is e1
+        let z = [0.05f32, 0.98, -0.02];
+        let t = brute_force_assign(&z, 1);
+        assert_eq!(t.levels, vec![0, 1, 0]);
+    }
+
+    #[test]
+    fn brute_force_uniform_vector_full_support() {
+        let z = [0.5f32, 0.5, 0.5, 0.5];
+        let t = brute_force_assign(&z, 1);
+        assert_eq!(t.levels, vec![1, 1, 1, 1]);
+    }
+}

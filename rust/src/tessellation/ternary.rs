@@ -1,0 +1,286 @@
+//! Ternary directional tessellation — paper §4.1.1, Algorithm 2.
+//!
+//! Γ is the set of normalised non-zero vectors over the base set
+//! {-1, 0, 1}; `|Γ| = 3^k - 1`. Algorithm 2 finds the *exact* closest
+//! tessellating vector in O(k log k): the footnote warns that naïve
+//! per-coordinate thresholding at ±0.5 is NOT exact under angular
+//! distance, which is why the scaled-cumsum search over support sizes is
+//! needed.
+
+use super::{TessVector, Tessellation};
+
+/// Exact ternary tessellation (Algorithm 2).
+#[derive(Clone, Debug)]
+pub struct TernaryTessellation {
+    k: usize,
+}
+
+impl TernaryTessellation {
+    /// Tessellation for k-dimensional factors.
+    pub fn new(k: usize) -> Self {
+        assert!(k > 0, "k must be positive");
+        TernaryTessellation { k }
+    }
+}
+
+/// Core of Algorithm 2, shared with [`CappedTernary`]: find the optimal
+/// support size `t* ≤ t_max` and return the corresponding levels.
+///
+/// Steps (paper numbering):
+///  2-3. sort coordinates by |z| descending (stable ⇒ deterministic ties);
+///  4-7. scaled cumulative sums  z_s^ι = (Σ_{j≤ι} |z|_(j)) / √ι;
+///  8.   ι* = argmax_ι z_s^ι  (restricted to ι ≤ t_max);
+///  9-10. support = top-ι* coordinates, levels = sign(z) there.
+fn assign_capped(z: &[f32], t_max: usize) -> TessVector {
+    let k = z.len();
+    debug_assert!(t_max >= 1 && t_max <= k);
+    // sort indices by |z| descending; stable tie-break on index keeps the
+    // map deterministic for equal magnitudes.
+    let mut order: Vec<u32> = (0..k as u32).collect();
+    order.sort_by(|&a, &b| {
+        let ma = z[a as usize].abs();
+        let mb = z[b as usize].abs();
+        mb.partial_cmp(&ma).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
+    });
+    // scaled cumsum argmax in f64 for stability on large k
+    let mut best_t = 1usize;
+    let mut best_score = f64::NEG_INFINITY;
+    let mut acc = 0.0f64;
+    for (i, &idx) in order.iter().take(t_max).enumerate() {
+        acc += z[idx as usize].abs() as f64;
+        let score = acc / ((i + 1) as f64).sqrt();
+        if score > best_score {
+            best_score = score;
+            best_t = i + 1;
+        }
+    }
+    let mut levels = vec![0i16; k];
+    for &idx in order.iter().take(best_t) {
+        // sign(0) → +1: a zero coordinate can only enter the support when
+        // the whole vector is zero; +1 keeps the output in Γ (non-zero).
+        levels[idx as usize] = if z[idx as usize] < 0.0 { -1 } else { 1 };
+    }
+    TessVector { levels, d: 1 }
+}
+
+impl Tessellation for TernaryTessellation {
+    fn k(&self) -> usize {
+        self.k
+    }
+
+    fn d(&self) -> u32 {
+        1
+    }
+
+    fn assign(&self, z: &[f32]) -> TessVector {
+        assert_eq!(z.len(), self.k, "factor dim {} != k {}", z.len(), self.k);
+        assign_capped(z, self.k)
+    }
+
+    fn name(&self) -> &'static str {
+        "ternary"
+    }
+}
+
+/// Non-uniform tessellation (supplement §B.1): the ternary schema with all
+/// tessellating vectors of support > `t_max` *dropped*.
+///
+/// Dropping dense-support vectors coarsens the tessellation near orthant
+/// centres (where §B.1 shows Γ is most densely packed) while keeping full
+/// resolution along the axes — the "drop some tessellating vectors"
+/// construction, realised deterministically. Algorithm 2 restricted to
+/// ι ≤ t_max remains *exact* over the retained set because the optimal
+/// support for any fixed size is still the top-|z| prefix.
+#[derive(Clone, Debug)]
+pub struct CappedTernary {
+    k: usize,
+    t_max: usize,
+}
+
+impl CappedTernary {
+    /// Ternary tessellation retaining only vectors with support ≤ `t_max`.
+    pub fn new(k: usize, t_max: usize) -> Self {
+        assert!(k > 0 && (1..=k).contains(&t_max), "need 1 <= t_max <= k");
+        CappedTernary { k, t_max }
+    }
+}
+
+impl Tessellation for CappedTernary {
+    fn k(&self) -> usize {
+        self.k
+    }
+
+    fn d(&self) -> u32 {
+        1
+    }
+
+    fn assign(&self, z: &[f32]) -> TessVector {
+        assert_eq!(z.len(), self.k, "factor dim {} != k {}", z.len(), self.k);
+        assign_capped(z, self.t_max)
+    }
+
+    fn name(&self) -> &'static str {
+        "ternary-capped"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geometry::angular_distance;
+    use crate::tessellation::brute_force_assign;
+    use crate::testing::prop;
+
+    #[test]
+    fn exactness_vs_brute_force_small_k() {
+        // Lemma 1: Algorithm 2 solves eq. (1) exactly.
+        prop(150, |g| {
+            let k = g.usize_in(2..=7);
+            let z = g.unit_vector(k);
+            let tess = TernaryTessellation::new(k);
+            let fast = tess.assign(&z);
+            let brute = brute_force_assign(&z, 1);
+            let d_fast = angular_distance(&fast.to_unit(), &z);
+            let d_brute = angular_distance(&brute.to_unit(), &z);
+            assert!(
+                d_fast <= d_brute + 1e-5,
+                "fast {:?} (d={d_fast}) worse than brute {:?} (d={d_brute}) for {z:?}",
+                fast.levels,
+                brute.levels
+            );
+        });
+    }
+
+    #[test]
+    fn naive_thresholding_is_not_exact() {
+        // The paper's footnote 5: thresholding each coordinate at ±0.5 is
+        // not the angular-distance argmin. Exhibit a witness.
+        let z = [0.6f32, 0.45, 0.45, 0.45];
+        let tess = TernaryTessellation::new(4);
+        let ours = tess.assign(&z);
+        // naive: [1,0,0,0] (only 0.6 > 0.5)
+        let naive = TessVector { levels: vec![1, 0, 0, 0], d: 1 };
+        let d_ours = angular_distance(&ours.to_unit(), &z);
+        let d_naive = angular_distance(&naive.to_unit(), &z);
+        assert!(d_ours < d_naive, "ours {d_ours} naive {d_naive}");
+        assert_eq!(ours.levels, vec![1, 1, 1, 1]);
+    }
+
+    #[test]
+    fn scale_invariance() {
+        prop(100, |g| {
+            let k = g.usize_in(2..=32);
+            let z = g.unit_vector(k);
+            let s = g.f32_in(0.05, 20.0);
+            let zs: Vec<f32> = z.iter().map(|v| v * s).collect();
+            let tess = TernaryTessellation::new(k);
+            assert_eq!(tess.assign(&z).levels, tess.assign(&zs).levels);
+        });
+    }
+
+    #[test]
+    fn signs_match_input() {
+        prop(100, |g| {
+            let k = g.usize_in(2..=16);
+            let z = g.unit_vector(k);
+            let t = TernaryTessellation::new(k).assign(&z);
+            for (zi, &li) in z.iter().zip(&t.levels) {
+                if li != 0 {
+                    assert!(
+                        (*zi >= 0.0 && li > 0) || (*zi <= 0.0 && li < 0),
+                        "level sign disagrees with coordinate"
+                    );
+                }
+            }
+            assert!(t.support() >= 1);
+        });
+    }
+
+    #[test]
+    fn support_is_top_magnitude_prefix() {
+        prop(100, |g| {
+            let k = g.usize_in(2..=16);
+            let z = g.unit_vector(k);
+            let t = TernaryTessellation::new(k).assign(&z);
+            let min_in = z
+                .iter()
+                .zip(&t.levels)
+                .filter(|(_, &l)| l != 0)
+                .map(|(v, _)| v.abs())
+                .fold(f32::INFINITY, f32::min);
+            let max_out = z
+                .iter()
+                .zip(&t.levels)
+                .filter(|(_, &l)| l == 0)
+                .map(|(v, _)| v.abs())
+                .fold(0.0f32, f32::max);
+            assert!(min_in >= max_out - 1e-6);
+        });
+    }
+
+    #[test]
+    fn dominant_axis_gets_singleton_support() {
+        let z = [0.99f32, 0.01, 0.0, -0.01];
+        let t = TernaryTessellation::new(4).assign(&z);
+        assert_eq!(t.levels, vec![1, 0, 0, 0]);
+    }
+
+    #[test]
+    fn capped_limits_support() {
+        prop(100, |g| {
+            let k = g.usize_in(3..=16);
+            let t_max = g.usize_in(1..=k);
+            let z = g.unit_vector(k);
+            let t = CappedTernary::new(k, t_max).assign(&z);
+            assert!(t.support() <= t_max);
+            assert!(t.support() >= 1);
+        });
+    }
+
+    #[test]
+    fn capped_with_full_cap_equals_uncapped() {
+        prop(50, |g| {
+            let k = g.usize_in(2..=12);
+            let z = g.unit_vector(k);
+            let a = TernaryTessellation::new(k).assign(&z);
+            let b = CappedTernary::new(k, k).assign(&z);
+            assert_eq!(a.levels, b.levels);
+        });
+    }
+
+    #[test]
+    fn capped_is_exact_over_retained_set() {
+        // brute force restricted to support <= t_max must not beat it
+        prop(80, |g| {
+            let k = g.usize_in(2..=6);
+            let t_max = g.usize_in(1..=k);
+            let z = g.unit_vector(k);
+            let ours = CappedTernary::new(k, t_max).assign(&z);
+            let d_ours = angular_distance(&ours.to_unit(), &z);
+            // enumerate retained Γ
+            let mut best = f32::INFINITY;
+            let mut levels = vec![0i16; k];
+            let total = 3u64.pow(k as u32);
+            for code in 1..total {
+                let mut c = code;
+                for l in levels.iter_mut() {
+                    *l = (c % 3) as i16 - 1;
+                    c /= 3;
+                }
+                let sup = levels.iter().filter(|&&l| l != 0).count();
+                if sup == 0 || sup > t_max {
+                    continue;
+                }
+                let t = TessVector { levels: levels.clone(), d: 1 };
+                best = best.min(angular_distance(&t.to_unit(), &z));
+            }
+            assert!(d_ours <= best + 1e-5, "capped not exact: {d_ours} vs {best}");
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "factor dim")]
+    fn dim_mismatch_panics() {
+        TernaryTessellation::new(4).assign(&[1.0, 2.0]);
+    }
+}

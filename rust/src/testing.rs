@@ -1,0 +1,167 @@
+//! Property-testing support (proptest is unavailable offline — DESIGN.md §3).
+//!
+//! A deliberately small, seeded property runner:
+//!
+//! ```no_run
+//! use geomap::testing::{prop, Gen};
+//! prop(200, |g: &mut Gen| {
+//!     let xs = g.vec_f32(1..=32, -1.0, 1.0);
+//!     let sum: f32 = xs.iter().sum();
+//!     let sum2: f32 = xs.iter().rev().sum();
+//!     assert!((sum - sum2).abs() < 1e-3);
+//! });
+//! ```
+//!
+//! On failure the panic message includes the case seed; re-run a single
+//! case with [`prop_seeded`]. No shrinking — cases are kept small instead.
+
+use crate::rng::Rng;
+
+/// Random-input generator handed to property bodies.
+pub struct Gen {
+    rng: Rng,
+    /// Seed of the current case (embedded in failure messages).
+    pub case_seed: u64,
+}
+
+impl Gen {
+    /// Integer in the inclusive range.
+    pub fn usize_in(&mut self, range: std::ops::RangeInclusive<usize>) -> usize {
+        let (lo, hi) = (*range.start(), *range.end());
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    /// f32 uniform in [lo, hi).
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.range_f64(lo as f64, hi as f64) as f32
+    }
+
+    /// Standard normal f32.
+    pub fn gaussian(&mut self) -> f32 {
+        self.rng.gaussian_f32()
+    }
+
+    /// Vector of uniform f32s with random length from `len`.
+    pub fn vec_f32(
+        &mut self,
+        len: std::ops::RangeInclusive<usize>,
+        lo: f32,
+        hi: f32,
+    ) -> Vec<f32> {
+        let n = self.usize_in(len);
+        (0..n).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    /// Vector of standard normals with random length.
+    pub fn vec_gaussian(&mut self, len: std::ops::RangeInclusive<usize>) -> Vec<f32> {
+        let n = self.usize_in(len);
+        (0..n).map(|_| self.gaussian()).collect()
+    }
+
+    /// Unit-norm gaussian direction in R^k (rejects near-zero draws).
+    pub fn unit_vector(&mut self, k: usize) -> Vec<f32> {
+        loop {
+            let v: Vec<f32> = (0..k).map(|_| self.gaussian()).collect();
+            let n = v.iter().map(|x| x * x).sum::<f32>().sqrt();
+            if n > 1e-3 {
+                return v.into_iter().map(|x| x / n).collect();
+            }
+        }
+    }
+
+    /// Bernoulli(p).
+    pub fn bool_with(&mut self, p: f64) -> bool {
+        self.rng.uniform() < p
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len())]
+    }
+
+    /// Access the underlying RNG for custom generation.
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Run `body` on `cases` random inputs derived from a fixed master seed
+/// (deterministic across runs; override with env `GEOMAP_PROP_SEED`).
+pub fn prop(cases: usize, body: impl Fn(&mut Gen)) {
+    let master = std::env::var("GEOMAP_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE_u64);
+    let mut seeder = Rng::seeded(master);
+    for case in 0..cases {
+        let case_seed = seeder.next_u64();
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut g = Gen { rng: Rng::seeded(case_seed), case_seed };
+            body(&mut g);
+        }));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| e.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!(
+                "property failed at case {case}/{cases} (seed {case_seed:#x}): {msg}\n\
+                 reproduce with geomap::testing::prop_seeded({case_seed:#x}, body)"
+            );
+        }
+    }
+}
+
+/// Re-run a single failing case by seed.
+pub fn prop_seeded(case_seed: u64, body: impl Fn(&mut Gen)) {
+    let mut g = Gen { rng: Rng::seeded(case_seed), case_seed };
+    body(&mut g);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prop_passes_trivial_property() {
+        prop(50, |g| {
+            let n = g.usize_in(1..=10);
+            assert!((1..=10).contains(&n));
+        });
+    }
+
+    #[test]
+    fn prop_reports_seed_on_failure() {
+        let r = std::panic::catch_unwind(|| {
+            prop(10, |g| {
+                let v = g.usize_in(0..=100);
+                assert!(v < 1000, "impossible");
+                panic!("forced failure {v}");
+            })
+        });
+        let err = r.unwrap_err();
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("seed"), "{msg}");
+    }
+
+    #[test]
+    fn unit_vector_is_unit() {
+        prop(50, |g| {
+            let k = g.usize_in(1..=64);
+            let v = g.unit_vector(k);
+            let n = v.iter().map(|x| x * x).sum::<f32>().sqrt();
+            assert!((n - 1.0).abs() < 1e-4);
+        });
+    }
+
+    #[test]
+    fn prop_is_deterministic() {
+        use std::sync::Mutex;
+        let seen1 = Mutex::new(Vec::new());
+        prop(5, |g| seen1.lock().unwrap().push(g.case_seed));
+        let seen2 = Mutex::new(Vec::new());
+        prop(5, |g| seen2.lock().unwrap().push(g.case_seed));
+        assert_eq!(*seen1.lock().unwrap(), *seen2.lock().unwrap());
+    }
+}

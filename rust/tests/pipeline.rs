@@ -1,0 +1,190 @@
+//! Whole-pipeline integration tests: data → (mf) → map → index →
+//! retrieve → evaluate, plus reproducibility and the paper's qualitative
+//! claims at test scale.
+
+use geomap::configx::SchemaConfig;
+use geomap::data::{gaussian_factors, MovieLensSynth};
+use geomap::embedding::{Mapper, PermutationKind, TessellationKind};
+use geomap::evalx::{accuracy_sparsity_sweep, Comparison};
+use geomap::mf::AlsTrainer;
+use geomap::retrieval::{RecoveryReport, Retriever};
+use geomap::rng::Rng;
+use geomap::tessellation::{brute_force_assign, Tessellation, TernaryTessellation};
+
+/// Same seed → bit-identical evaluation report.
+#[test]
+fn full_pipeline_is_deterministic() {
+    let run = || {
+        let mut rng = Rng::seeded(77);
+        let users = gaussian_factors(&mut rng, 24, 8);
+        let items = gaussian_factors(&mut rng, 160, 8);
+        let results = Comparison::default().run(&users, &items).unwrap();
+        results
+            .iter()
+            .map(|r| {
+                (
+                    r.label.clone(),
+                    r.report.mean_discarded(),
+                    r.report.mean_accuracy(),
+                )
+            })
+            .collect::<Vec<_>>()
+    };
+    assert_eq!(run(), run());
+}
+
+/// The geometric core property at pipeline level: items angularly close
+/// to the user are far more likely to survive pruning than far items.
+#[test]
+fn pruning_is_geometry_aware() {
+    let k = 16;
+    let mut rng = Rng::seeded(3);
+    let items = gaussian_factors(&mut rng, 800, k);
+    let mapper = Mapper::from_config(SchemaConfig::TernaryParseTree, k, 1.0);
+    let retriever = Retriever::build(mapper, items).unwrap();
+
+    let mut near_survive = 0usize;
+    let mut far_survive = 0usize;
+    let mut near_total = 0usize;
+    let mut far_total = 0usize;
+    for _ in 0..40 {
+        let user: Vec<f32> = (0..k).map(|_| rng.gaussian_f32()).collect();
+        let cands = retriever.candidates(&user).unwrap();
+        let mut is_cand = vec![false; retriever.items()];
+        for &c in &cands {
+            is_cand[c as usize] = true;
+        }
+        // rank items by angular distance; compare survival in the top and
+        // bottom deciles
+        let mut by_dist: Vec<(usize, f32)> = (0..retriever.items())
+            .map(|i| {
+                (
+                    i,
+                    geomap::geometry::angular_distance(
+                        &user,
+                        retriever.item_factors().row(i),
+                    ),
+                )
+            })
+            .collect();
+        by_dist.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        let decile = retriever.items() / 10;
+        for &(i, _) in &by_dist[..decile] {
+            near_total += 1;
+            near_survive += is_cand[i] as usize;
+        }
+        for &(i, _) in &by_dist[by_dist.len() - decile..] {
+            far_total += 1;
+            far_survive += is_cand[i] as usize;
+        }
+    }
+    let near_rate = near_survive as f64 / near_total as f64;
+    let far_rate = far_survive as f64 / far_total as f64;
+    assert!(
+        near_rate > 2.0 * far_rate,
+        "near {near_rate:.3} vs far {far_rate:.3}"
+    );
+}
+
+/// Rust Algorithm 2 equals exhaustive search over Γ for small k — the
+/// paper's Lemma 1 at integration level (module test covers unit level).
+#[test]
+fn ternary_assignment_is_exact_lemma1() {
+    let mut rng = Rng::seeded(5);
+    for k in [2usize, 3, 4, 5, 6] {
+        let tess = TernaryTessellation::new(k);
+        for _ in 0..50 {
+            let z: Vec<f32> = (0..k).map(|_| rng.gaussian_f32()).collect();
+            let fast = tess.assign(&z);
+            let brute = brute_force_assign(&z, 1);
+            // compare achieved cosine, not the raw levels (ties can pick
+            // different but equally good vectors)
+            let cos = |t: &geomap::tessellation::TessVector| {
+                let a = t.to_unit();
+                let num: f32 = a.iter().zip(&z).map(|(x, y)| x * y).sum();
+                let nz: f32 = z.iter().map(|v| v * v).sum::<f32>().sqrt();
+                num / nz
+            };
+            assert!(
+                (cos(&fast) - cos(&brute)).abs() < 1e-5,
+                "k={k} z={z:?}: fast {} vs brute {}",
+                cos(&fast),
+                cos(&brute)
+            );
+        }
+    }
+}
+
+/// MF factors flow through the sparse map end to end: the learned-factor
+/// retrieval keeps meaningful accuracy at meaningful discard.
+#[test]
+fn learned_factors_pipeline_end_to_end() {
+    let synth = MovieLensSynth {
+        n_users: 80,
+        n_items: 200,
+        n_ratings: 5_000,
+        ..MovieLensSynth::small()
+    };
+    let mut rng = Rng::seeded(11);
+    let ratings = synth.generate(&mut rng);
+    let model = AlsTrainer { k: 8, ..Default::default() }.train(&ratings, 5, 11);
+
+    let mapper = Mapper::from_config(SchemaConfig::TernaryParseTree, 8, 1.2);
+    let retriever = Retriever::build(mapper, model.item_factors.clone()).unwrap();
+    let users = model.user_factors.slice_rows(0, 40);
+    let report = RecoveryReport::evaluate(
+        &users,
+        &model.item_factors,
+        10,
+        |_, u| retriever.candidates(u).unwrap(),
+    );
+    assert!(
+        report.mean_discarded() > 0.3,
+        "discard {}",
+        report.mean_discarded()
+    );
+    assert!(
+        report.mean_accuracy() > 0.6,
+        "accuracy {}",
+        report.mean_accuracy()
+    );
+}
+
+/// Fig-5 shape: discard grows monotonically with the threshold while
+/// accuracy falls monotonically (within noise).
+#[test]
+fn sweep_tradeoff_shape() {
+    let mut rng = Rng::seeded(13);
+    let users = gaussian_factors(&mut rng, 32, 16);
+    let items = gaussian_factors(&mut rng, 400, 16);
+    let pts = accuracy_sparsity_sweep(
+        SchemaConfig::TernaryParseTree,
+        &users,
+        &items,
+        5,
+        &[0.0, 0.6, 1.0, 1.4, 1.8],
+    )
+    .unwrap();
+    for w in pts.windows(2) {
+        assert!(w[1].mean_discarded >= w[0].mean_discarded - 1e-9);
+        assert!(w[1].mean_accuracy <= w[0].mean_accuracy + 0.02);
+    }
+    assert!(pts[0].mean_accuracy > 0.99, "no thresholding → near-perfect");
+}
+
+/// One-hot and parse-tree maps agree on the retrieval *semantics* even
+/// though their index spaces differ: same tessellation → overlapping
+/// supports behave equivalently for same-region queries.
+#[test]
+fn schemas_agree_for_identical_factors() {
+    let k = 12;
+    let mut rng = Rng::seeded(17);
+    let z: Vec<f32> = (0..k).map(|_| rng.gaussian_f32()).collect();
+    for kind in [PermutationKind::OneHot, PermutationKind::ParseTree] {
+        let mapper = Mapper::new(TessellationKind::Ternary, kind, k);
+        let a = mapper.map(&z).unwrap();
+        let b = mapper.map(&z).unwrap();
+        assert_eq!(a.indices(), b.indices());
+        assert_eq!(a.nnz(), z.iter().filter(|v| **v != 0.0).count());
+    }
+}

@@ -1,0 +1,305 @@
+//! End-to-end coordinator tests: correctness under concurrency, overload
+//! shedding, hot swaps under load, and the XLA-vs-CPU scorer equivalence
+//! through the full serving path.
+
+use geomap::configx::{SchemaConfig, ServeConfig};
+use geomap::coordinator::Coordinator;
+use geomap::data::gaussian_factors;
+use geomap::embedding::Mapper;
+use geomap::linalg::Matrix;
+use geomap::retrieval::Retriever;
+use geomap::rng::Rng;
+use geomap::runtime::{cpu_scorer_factory, xla_scorer_factory};
+use std::sync::Arc;
+
+fn cfg(k: usize, shards: usize, threshold: f32) -> ServeConfig {
+    ServeConfig {
+        k,
+        kappa: 10,
+        schema: SchemaConfig::TernaryParseTree,
+        max_batch: 16,
+        max_wait_us: 200,
+        shards,
+        queue_cap: 1024,
+        use_xla: false,
+        artifacts_dir: "artifacts".into(),
+        threshold,
+    }
+}
+
+fn items(n: usize, k: usize, seed: u64) -> Matrix {
+    let mut rng = Rng::seeded(seed);
+    gaussian_factors(&mut rng, n, k)
+}
+
+/// The coordinator (batched, sharded) must return exactly what the
+/// single-threaded Retriever returns for every query.
+#[test]
+fn coordinator_equals_single_thread_retriever() {
+    let k = 16;
+    let catalogue = items(500, k, 1);
+    let threshold = 1.0;
+    let coord = Coordinator::start(
+        cfg(k, 3, threshold),
+        catalogue.clone(),
+        cpu_scorer_factory(),
+    )
+    .unwrap();
+    let mapper = Mapper::from_config(SchemaConfig::TernaryParseTree, k, threshold);
+    let reference = Retriever::build(mapper, catalogue).unwrap();
+
+    let mut rng = Rng::seeded(2);
+    for _ in 0..25 {
+        let user: Vec<f32> = (0..k).map(|_| rng.gaussian_f32()).collect();
+        let got = coord.submit(user.clone(), 10).unwrap();
+        let want = reference.top_k(&user, 10).unwrap();
+        assert_eq!(
+            got.results.iter().map(|s| s.id).collect::<Vec<_>>(),
+            want.iter().map(|s| s.id).collect::<Vec<_>>(),
+        );
+        for (g, w) in got.results.iter().zip(&want) {
+            assert!((g.score - w.score).abs() < 1e-4);
+        }
+        let want_cands = reference.candidates(&user).unwrap().len();
+        assert_eq!(got.candidates, want_cands);
+    }
+    coord.shutdown();
+}
+
+/// Same check through the PJRT scorer (skipped without artifacts).
+#[test]
+fn coordinator_with_xla_scorer_equals_reference() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let k = 16;
+    let catalogue = items(600, k, 3);
+    let threshold = 1.0;
+    let mut c = cfg(k, 2, threshold);
+    c.use_xla = true;
+    let coord = Coordinator::start(
+        c,
+        catalogue.clone(),
+        xla_scorer_factory("artifacts"),
+    )
+    .unwrap();
+    let mapper = Mapper::from_config(SchemaConfig::TernaryParseTree, k, threshold);
+    let reference = Retriever::build(mapper, catalogue).unwrap();
+    let mut rng = Rng::seeded(4);
+    for _ in 0..10 {
+        let user: Vec<f32> = (0..k).map(|_| rng.gaussian_f32()).collect();
+        let got = coord.submit(user.clone(), 10).unwrap();
+        let want = reference.top_k(&user, 10).unwrap();
+        assert_eq!(got.results.len(), want.len());
+        for (g, w) in got.results.iter().zip(&want) {
+            assert!(
+                (g.score - w.score).abs() < 1e-3,
+                "{} vs {}",
+                g.score,
+                w.score
+            );
+        }
+    }
+    coord.shutdown();
+}
+
+/// Overload: a tiny queue must shed rather than block forever; accepted
+/// requests still complete.
+#[test]
+fn overload_sheds_and_recovers() {
+    let k = 8;
+    let mut c = cfg(k, 1, 0.0);
+    c.queue_cap = 16;
+    c.max_batch = 4;
+    let coord =
+        Arc::new(Coordinator::start(c, items(2000, k, 5), cpu_scorer_factory()).unwrap());
+    let mut handles = Vec::new();
+    for t in 0..32 {
+        let coord = Arc::clone(&coord);
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::seeded(50 + t);
+            let mut ok = 0;
+            let mut shed = 0;
+            for _ in 0..20 {
+                let u: Vec<f32> = (0..k).map(|_| rng.gaussian_f32()).collect();
+                match coord.submit(u, 5) {
+                    Ok(_) => ok += 1,
+                    Err(_) => shed += 1,
+                }
+            }
+            (ok, shed)
+        }));
+    }
+    let (mut total_ok, mut total_shed) = (0, 0);
+    for h in handles {
+        let (ok, shed) = h.join().unwrap();
+        total_ok += ok;
+        total_shed += shed;
+    }
+    assert_eq!(total_ok + total_shed, 32 * 20);
+    assert!(total_ok > 0, "some requests must get through");
+    // after the burst the system still serves
+    let mut rng = Rng::seeded(99);
+    let u: Vec<f32> = (0..k).map(|_| rng.gaussian_f32()).collect();
+    assert!(Arc::clone(&coord).submit(u, 5).is_ok());
+    let m = coord.metrics();
+    assert_eq!(
+        m.accepted.load(std::sync::atomic::Ordering::Relaxed) as usize,
+        total_ok + 1
+    );
+    Arc::try_unwrap(coord).ok().map(Coordinator::shutdown);
+}
+
+/// Hot swap while clients hammer the coordinator: every response must be
+/// internally consistent with *some* catalogue version.
+#[test]
+fn hot_swap_under_load_is_consistent() {
+    let k = 8;
+    let coord = Arc::new(
+        Coordinator::start(cfg(k, 2, 0.0), items(300, k, 6), cpu_scorer_factory())
+            .unwrap(),
+    );
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let swapper = {
+        let coord = Arc::clone(&coord);
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            let mut seed = 7;
+            let mut sizes = Vec::new();
+            while !stop.load(std::sync::atomic::Ordering::Acquire) {
+                seed += 1;
+                let n = 200 + (seed as usize % 3) * 100;
+                sizes.push(n);
+                coord.swap_items(items(n, k, seed)).unwrap();
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+            sizes
+        })
+    };
+    let mut rng = Rng::seeded(8);
+    for _ in 0..200 {
+        let u: Vec<f32> = (0..k).map(|_| rng.gaussian_f32()).collect();
+        let resp = Arc::clone(&coord).submit(u, 5).unwrap();
+        // consistency: candidate count within the response's own catalogue
+        assert!(resp.candidates <= resp.total_items);
+        assert!([200, 300, 400].contains(&resp.total_items));
+        for s in &resp.results {
+            assert!((s.id as usize) < resp.total_items);
+        }
+    }
+    stop.store(true, std::sync::atomic::Ordering::Release);
+    let sizes = swapper.join().unwrap();
+    assert!(!sizes.is_empty(), "swapper must have swapped at least once");
+    Arc::try_unwrap(coord).ok().map(Coordinator::shutdown);
+}
+
+/// Mixed kappas within one batch are honoured per request.
+#[test]
+fn per_request_kappa_is_respected() {
+    let k = 8;
+    let coord = Arc::new(
+        Coordinator::start(cfg(k, 1, 0.0), items(400, k, 9), cpu_scorer_factory())
+            .unwrap(),
+    );
+    let mut handles = Vec::new();
+    for t in 0..8u64 {
+        let coord = Arc::clone(&coord);
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::seeded(60 + t);
+            let kappa = 1 + (t as usize % 7);
+            let u: Vec<f32> = (0..k).map(|_| rng.gaussian_f32()).collect();
+            let resp = coord.submit(u, kappa).unwrap();
+            assert!(resp.results.len() <= kappa, "kappa {kappa}");
+            (kappa, resp.results.len())
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    Arc::try_unwrap(coord).ok().map(Coordinator::shutdown);
+}
+
+/// Failure injection: a backend whose construction fails must surface a
+/// clean per-request error (no hang, no panic), and the coordinator must
+/// still shut down.
+#[test]
+fn broken_scorer_factory_fails_requests_cleanly() {
+    use geomap::error::GeomapError;
+    use geomap::runtime::ScorerFactory;
+    let factory: ScorerFactory = Arc::new(|| {
+        Err(GeomapError::Xla("injected: backend unavailable".into()))
+    });
+    let k = 8;
+    let coord = Coordinator::start(cfg(k, 2, 0.0), items(50, k, 20), factory)
+        .unwrap();
+    let mut rng = Rng::seeded(21);
+    for _ in 0..5 {
+        let u: Vec<f32> = (0..k).map(|_| rng.gaussian_f32()).collect();
+        let err = coord.submit(u, 3).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("backend unavailable"), "{msg}");
+    }
+    coord.shutdown();
+}
+
+/// Failure injection: a backend that errors on *every call* after
+/// construction also fails requests cleanly.
+#[test]
+fn scorer_runtime_errors_propagate() {
+    use geomap::error::{GeomapError, Result as GResult};
+    use geomap::linalg::Matrix as M;
+    use geomap::runtime::{Scorer, ScorerFactory, TopkResult};
+
+    struct Exploding;
+    impl Scorer for Exploding {
+        fn score(&self, _u: &M, _v: &M) -> GResult<M> {
+            Err(GeomapError::Xla("injected: score failed".into()))
+        }
+        fn score_topk(&self, _u: &M, _v: &M, _k: usize) -> GResult<TopkResult> {
+            Err(GeomapError::Xla("injected: score failed".into()))
+        }
+        fn label(&self) -> String {
+            "exploding".into()
+        }
+    }
+    let factory: ScorerFactory = Arc::new(|| Ok(Box::new(Exploding)));
+    let k = 8;
+    // threshold 0 guarantees non-empty candidates, forcing a score call
+    let coord =
+        Coordinator::start(cfg(k, 1, 0.0), items(100, k, 22), factory).unwrap();
+    let mut rng = Rng::seeded(23);
+    let u: Vec<f32> = (0..k).map(|_| rng.gaussian_f32()).collect();
+    let err = coord.submit(u, 3).unwrap_err();
+    assert!(err.to_string().contains("score failed"), "{err}");
+    coord.shutdown();
+}
+
+/// Shutdown with requests still queued: pending clients get errors, not
+/// hangs.
+#[test]
+fn shutdown_drains_without_hanging() {
+    let k = 8;
+    let mut c = cfg(k, 1, 0.0);
+    c.max_wait_us = 50_000; // slow batcher so requests queue up
+    c.max_batch = 64;
+    let coord = Arc::new(
+        Coordinator::start(c, items(100, k, 24), cpu_scorer_factory()).unwrap(),
+    );
+    let mut handles = Vec::new();
+    for t in 0..4u64 {
+        let coord = Arc::clone(&coord);
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::seeded(70 + t);
+            let u: Vec<f32> = (0..k).map(|_| rng.gaussian_f32()).collect();
+            // either a normal response (drained) or a clean rejection
+            let _ = coord.submit(u, 3);
+        }));
+    }
+    std::thread::sleep(std::time::Duration::from_millis(5));
+    // drop our handle concurrently with in-flight submits
+    drop(Arc::try_unwrap(coord).map(Coordinator::shutdown));
+    for h in handles {
+        h.join().unwrap(); // must terminate
+    }
+}

@@ -1,0 +1,213 @@
+//! Integration tests across the AOT boundary: artifacts built by
+//! `python/compile/aot.py` (L2 jax + L1 pallas) loaded and executed by
+//! the rust runtime (L3) on the PJRT CPU client.
+//!
+//! Requires `make artifacts` (the Makefile test target guarantees it).
+
+use geomap::linalg::Matrix;
+use geomap::rng::Rng;
+use geomap::runtime::{
+    verify_goldens, CpuScorer, Kind, Scorer, XlaRuntime, XlaScorer,
+};
+use geomap::tessellation::{TernaryTessellation, Tessellation};
+
+fn artifacts_available() -> bool {
+    std::path::Path::new("artifacts/manifest.json").exists()
+}
+
+#[test]
+fn golden_cases_all_match() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let rt = XlaRuntime::load("artifacts").unwrap();
+    let checked = verify_goldens(&rt).unwrap();
+    assert!(checked >= 8, "expected >=8 golden cases, got {checked}");
+}
+
+#[test]
+fn xla_scorer_matches_cpu_scorer_padded_path() {
+    if !artifacts_available() {
+        return;
+    }
+    let xla = XlaScorer::load("artifacts").unwrap();
+    let mut rng = Rng::seeded(11);
+    // deliberately ragged shapes so the runtime must pad (B=5 < 8, T=700 < 1024)
+    let users = Matrix::gaussian(&mut rng, 5, 16, 1.0);
+    let items = Matrix::gaussian(&mut rng, 700, 16, 1.0);
+    let a = xla.score(&users, &items).unwrap();
+    let b = CpuScorer.score(&users, &items).unwrap();
+    assert_eq!(a.rows(), 5);
+    assert_eq!(a.cols(), 700);
+    for r in 0..5 {
+        for c in 0..700 {
+            assert!(
+                (a.get(r, c) - b.get(r, c)).abs() < 1e-3,
+                "({r},{c}): {} vs {}",
+                a.get(r, c),
+                b.get(r, c)
+            );
+        }
+    }
+}
+
+#[test]
+fn xla_scorer_matches_cpu_scorer_tiled_path() {
+    if !artifacts_available() {
+        return;
+    }
+    let xla = XlaScorer::load("artifacts").unwrap();
+    let mut rng = Rng::seeded(13);
+    // larger than any single artifact tile: forces the (B,T) tiling loop
+    let users = Matrix::gaussian(&mut rng, 40, 32, 1.0);
+    let items = Matrix::gaussian(&mut rng, 3000, 32, 1.0);
+    let a = xla.score(&users, &items).unwrap();
+    let b = CpuScorer.score(&users, &items).unwrap();
+    let mut max_err = 0.0f32;
+    for (x, y) in a.as_slice().iter().zip(b.as_slice()) {
+        max_err = max_err.max((x - y).abs());
+    }
+    assert!(max_err < 1e-3, "max abs err {max_err}");
+}
+
+#[test]
+fn xla_topk_matches_cpu_topk() {
+    if !artifacts_available() {
+        return;
+    }
+    let xla = XlaScorer::load("artifacts").unwrap();
+    let mut rng = Rng::seeded(17);
+    for (b, t, k) in [(8, 1024, 16), (3, 500, 16), (32, 2048, 32)] {
+        let users = Matrix::gaussian(&mut rng, b, k, 1.0);
+        let items = Matrix::gaussian(&mut rng, t, k, 1.0);
+        let xr = xla.score_topk(&users, &items, 10).unwrap();
+        let cr = CpuScorer.score_topk(&users, &items, 10).unwrap();
+        assert_eq!(xr.len(), b);
+        for (row_x, row_c) in xr.iter().zip(&cr) {
+            assert_eq!(row_x.len(), row_c.len());
+            for (x, c) in row_x.iter().zip(row_c) {
+                // ids may differ on exact ties; scores must agree
+                assert!(
+                    (x.1 - c.1).abs() < 1e-3,
+                    "score {} vs {} (B={b},T={t})",
+                    x.1,
+                    c.1
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn jax_tessellation_agrees_with_rust_algorithm2() {
+    // cross-layer check: the L2 jax implementation of Algorithm 2
+    // (tess_ternary artifact) and the independent rust implementation
+    // must produce the same tessellating vectors.
+    if !artifacts_available() {
+        return;
+    }
+    let rt = XlaRuntime::load("artifacts").unwrap();
+    let entry = rt
+        .manifest
+        .of_kind(Kind::TessTernary)
+        .find(|e| e.meta.k == 16)
+        .expect("tess_ternary_k16 artifact")
+        .name
+        .clone();
+    let module = rt.module(&entry).unwrap();
+    let (n, k) = (module.entry.meta.n, module.entry.meta.k);
+
+    let mut rng = Rng::seeded(23);
+    let z = Matrix::gaussian(&mut rng, n, k, 1.0);
+    let outs = module.run_f32(&[z.as_slice()]).unwrap();
+    let jax_a = outs[0].to_vec::<f32>().unwrap();
+
+    let tess = TernaryTessellation::new(k);
+    for r in 0..n {
+        let rust_a = tess.assign(z.row(r)).to_unit();
+        for j in 0..k {
+            let jx = jax_a[r * k + j];
+            assert!(
+                (jx - rust_a[j]).abs() < 1e-5,
+                "row {r} coord {j}: jax {jx} vs rust {}",
+                rust_a[j]
+            );
+        }
+    }
+}
+
+#[test]
+fn module_cache_compiles_once() {
+    if !artifacts_available() {
+        return;
+    }
+    let rt = XlaRuntime::load("artifacts").unwrap();
+    let name = &rt.manifest.entries[0].name.clone();
+    let a = rt.module(name).unwrap();
+    let b = rt.module(name).unwrap();
+    assert!(std::rc::Rc::ptr_eq(&a, &b));
+    assert_eq!(rt.compiled_count(), 1);
+}
+
+#[test]
+fn bad_input_shapes_are_rejected() {
+    if !artifacts_available() {
+        return;
+    }
+    let rt = XlaRuntime::load("artifacts").unwrap();
+    let name = rt.manifest.entries[0].name.clone();
+    let module = rt.module(&name).unwrap();
+    let wrong = vec![0.0f32; 3];
+    assert!(module.run_f32(&[&wrong]).is_err());
+    assert!(module.run_f32(&[]).is_err());
+}
+
+#[test]
+fn xla_masked_scoring_matches_host_masking() {
+    if !artifacts_available() {
+        return;
+    }
+    let xla = XlaScorer::load("artifacts").unwrap();
+    let mut rng = Rng::seeded(31);
+    // ragged shapes force padding + tiling of the masked artifact
+    let users = Matrix::gaussian(&mut rng, 5, 16, 1.0);
+    let items = Matrix::gaussian(&mut rng, 1500, 16, 1.0);
+    let mask: Vec<f32> = (0..1500)
+        .map(|i| if (i * 7) % 3 == 0 { 1.0 } else { 0.0 })
+        .collect();
+    let a = xla.score_masked(&users, &items, &mask).unwrap();
+    // reference: CPU default (score + host-side mask)
+    let b = CpuScorer.score_masked(&users, &items, &mask).unwrap();
+    for r in 0..5 {
+        for c in 0..1500 {
+            if mask[c] == 0.0 {
+                assert!(
+                    a.get(r, c) <= geomap::runtime::MASKED_SCORE / 2.0,
+                    "({r},{c}) should be masked: {}",
+                    a.get(r, c)
+                );
+            } else {
+                assert!(
+                    (a.get(r, c) - b.get(r, c)).abs() < 1e-3,
+                    "({r},{c}): {} vs {}",
+                    a.get(r, c),
+                    b.get(r, c)
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn masked_mask_length_is_validated() {
+    if !artifacts_available() {
+        return;
+    }
+    let xla = XlaScorer::load("artifacts").unwrap();
+    let mut rng = Rng::seeded(33);
+    let users = Matrix::gaussian(&mut rng, 2, 16, 1.0);
+    let items = Matrix::gaussian(&mut rng, 10, 16, 1.0);
+    assert!(xla.score_masked(&users, &items, &[1.0; 3]).is_err());
+    assert!(CpuScorer.score_masked(&users, &items, &[1.0; 3]).is_err());
+}
