@@ -1,10 +1,14 @@
-//! Quickstart: the paper's pipeline in ~40 lines.
+//! Quickstart: the paper's pipeline through the unified `Engine` API in
+//! ~40 lines.
 //!
 //! 1. draw factors on the unit sphere,
-//! 2. build the sparse map φ (ternary tessellation + parse-tree
-//!    permutation),
-//! 3. index φ(items) with an inverted index,
-//! 4. retrieve top-κ for a user via prune + exact rescoring, and
+//! 2. build an [`Engine`] with the geomap backend — the sparse map φ
+//!    (ternary tessellation + parse-tree permutation) plus an inverted
+//!    index over φ(items); swap `Backend::Geomap` for `Backend::Srp`,
+//!    `Superbit`, `Cros`, `PcaTree` or `Brute` to A/B any baseline
+//!    behind the same API,
+//! 3. retrieve top-κ for a user via prune + exact rescoring,
+//! 4. mutate the catalogue incrementally (upsert + remove), and
 //! 5. compare against brute force.
 //!
 //! ```bash
@@ -12,6 +16,7 @@
 //! ```
 
 use geomap::prelude::*;
+use geomap::retrieval::brute_force_top_k;
 
 fn main() -> anyhow::Result<()> {
     let k = 32;
@@ -23,19 +28,31 @@ fn main() -> anyhow::Result<()> {
     let items = gaussian_factors(&mut rng, n_items, k);
     let user: Vec<f32> = (0..k).map(|_| rng.gaussian_f32()).collect();
 
-    // 2. the map φ = permute ∘ zero-pad ∘ tessellate (Algorithm 1)
-    let mapper = Mapper::new(TessellationKind::Ternary, PermutationKind::ParseTree, k);
-    println!("schema {}: k={k} → p={}", mapper.name(), mapper.p());
-    let phi_u = mapper.map(&user)?;
-    println!("φ(user) has {} non-zeros: {:?}...", phi_u.nnz(), &phi_u.indices()[..4]);
+    // 2. the engine: φ = permute ∘ zero-pad ∘ tessellate (Algorithm 1)
+    //    + inverted index + exact rescoring, behind one API
+    let mut engine = Engine::builder()
+        .schema(SchemaConfig::TernaryParseTree)
+        .backend(Backend::Geomap)
+        .build(items.clone())?;
+    println!("engine {}: {} items, k={k}", engine.label(), engine.len());
 
-    // 3 + 4. inverted index + prune + exact rescoring
-    let retriever = Retriever::build(mapper, items)?;
-    let candidates = retriever.candidates(&user)?;
-    let top = retriever.top_k(&user, kappa)?;
+    // 3. prune + exact rescoring
+    let candidates = engine.candidates(&user)?;
+    let top = engine.top_k(&user, kappa)?;
+
+    // 4. incremental mutation: append one item, remove another — no
+    //    index rebuild (delta segment + tombstones, merged on demand)
+    let fresh: Vec<f32> = (0..k).map(|_| rng.gaussian_f32()).collect();
+    engine.upsert(n_items as u32, &fresh)?;
+    engine.remove(17)?;
+    let s = engine.stats();
+    println!(
+        "after churn: {} live items, {} pending delta rows, {} tombstones",
+        s.live, s.pending, s.tombstones
+    );
 
     // 5. compare with brute force over all items
-    let brute = retriever.top_k_brute(&user, kappa);
+    let brute = brute_force_top_k(&user, &items, kappa);
     let hits = top
         .iter()
         .filter(|s| brute.iter().any(|b| b.id == s.id))

@@ -1,16 +1,24 @@
 //! End-to-end serving driver (the EXPERIMENTS.md validation run): start
 //! the full coordinator — admission → dynamic batcher → shard workers →
-//! inverted-index pruning → PJRT exact rescoring — over a realistic
-//! catalogue and drive it with concurrent clients, reporting throughput,
-//! latency percentiles, discard rate and the implied speed-up, plus a
-//! live factor hot-swap mid-run.
+//! engine pruning (`ServeConfig::backend`, geomap by default) → PJRT
+//! exact rescoring — over a realistic catalogue and drive it with
+//! concurrent clients, reporting throughput, latency percentiles,
+//! discard rate and the implied speed-up. Mid-run the catalogue churns
+//! two ways:
+//!
+//! * a **hot swap** rebuilds every shard from a fresh factor matrix
+//!   (`Coordinator::swap_items`), and
+//! * **incremental mutation** streams point upserts/removals through the
+//!   geomap delta + tombstone path (`Coordinator::upsert` / `remove`) —
+//!   no rebuild, merges fire off the read path once the per-shard delta
+//!   crosses `MutationConfig::max_delta`.
 //!
 //! ```bash
 //! cargo run --release --example serving            # PJRT (XLA) scorer
 //! GEOMAP_CPU=1 cargo run --release --example serving   # pure-rust scorer
 //! ```
 
-use geomap::configx::{SchemaConfig, ServeConfig};
+use geomap::configx::{Backend, MutationConfig, SchemaConfig, ServeConfig};
 use geomap::coordinator::Coordinator;
 use geomap::data::gaussian_factors;
 use geomap::rng::Rng;
@@ -44,6 +52,8 @@ fn main() -> anyhow::Result<()> {
         use_xla: !use_cpu,
         artifacts_dir: "artifacts".into(),
         threshold: 1.5, // k=32 operating point (EXPERIMENTS.md §Perf)
+        backend: Backend::Geomap, // any Backend::* serves via config
+        mutation: MutationConfig { max_delta: 256 },
     };
     let factory = if use_cpu {
         cpu_scorer_factory()
@@ -94,6 +104,29 @@ fn main() -> anyhow::Result<()> {
             let fresh = gaussian_factors(&mut rng, n_items, k);
             let v = coord2.swap_items(fresh).expect("swap");
             println!("  [t+200ms] hot-swapped catalogue → version {v}");
+            // then stream incremental churn through the delta path:
+            // upsert replacements + appends, remove a few ids — all
+            // while clients keep reading the previous snapshots.
+            let mut upserts = 0u32;
+            let mut removed = 0u32;
+            for i in 0..200u32 {
+                let f: Vec<f32> = (0..k).map(|_| rng.gaussian_f32()).collect();
+                let total = coord2.total_items() as u32;
+                let id = if i % 4 == 0 { total } else { rng.below(total as usize) as u32 };
+                if coord2.upsert(id, &f).is_ok() {
+                    upserts += 1;
+                }
+                if i % 10 == 0 {
+                    let victim = rng.below(coord2.total_items()) as u32;
+                    if matches!(coord2.remove(victim), Ok((_, true))) {
+                        removed += 1;
+                    }
+                }
+            }
+            println!(
+                "  [churn] {upserts} incremental upserts, {removed} removals \
+                 (delta merges at 256 pending)"
+            );
         });
     });
     let elapsed = t0.elapsed();

@@ -82,6 +82,7 @@ fn main() {
                 use_xla,
                 artifacts_dir: "artifacts".into(),
                 threshold,
+                ..ServeConfig::default()
             };
             let coord =
                 Arc::new(Coordinator::start(cfg, items.clone(), factory).unwrap());

@@ -3,9 +3,18 @@
 //!
 //! * φ mapping (tessellate + permute) per factor,
 //! * inverted-index query (allocation-free path),
+//! * engine candidate retrieval (geomap + baselines through the unified
+//!   `CandidateSource` scratch API),
 //! * exact rescoring GEMM (pure rust vs PJRT executable),
-//! * per-batch worker processing (prune + union + batched score),
+//! * per-batch worker processing (prune + union + batched score), and
 //! * shard top-κ merge.
+//!
+//! A counting global allocator audits the serving hot path: after
+//! warm-up, the raw inverted-index query and the baseline
+//! `candidates_into` paths must allocate **nothing** (asserted outside
+//! the timed loops, so the check is live even in release builds), and
+//! the per-query allocation count of every path is reported (the φ map
+//! itself still allocates its sparse output; the index walk does not).
 //!
 //! ```bash
 //! cargo bench --bench micro_hotpath
@@ -14,14 +23,47 @@
 mod common;
 
 use geomap::bench::{black_box, Bencher};
-use geomap::configx::SchemaConfig;
+use geomap::configx::{Backend, SchemaConfig};
 use geomap::coordinator::{merge_topk, process_batch, FactorStore, WorkerScratch};
 use geomap::embedding::Mapper;
+use geomap::engine::{Engine, SourceScratch};
 use geomap::index::{InvertedIndex, QueryScratch};
 use geomap::linalg::Matrix;
 use geomap::retrieval::Scored;
 use geomap::rng::Rng;
 use geomap::runtime::{CpuScorer, Scorer, XlaScorer};
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Global allocator that counts allocation events (alloc + realloc), so
+/// the bench can debug-assert the hot path stays allocation-free after
+/// warm-up.
+struct CountingAlloc;
+
+static ALLOC_EVENTS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_EVENTS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_EVENTS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn alloc_events() -> u64 {
+    ALLOC_EVENTS.load(Ordering::Relaxed)
+}
 
 fn main() {
     let (users, items) = common::synthetic_workload();
@@ -72,6 +114,79 @@ fn main() {
         qi += 1;
     });
 
+    // allocation audit: after warm-up, the index walk allocates nothing
+    {
+        for q in &queries {
+            index.query_into(q, 1, &mut scratch, &mut out);
+        }
+        let before = alloc_events();
+        for q in &queries {
+            index.query_into(q, 1, &mut scratch, &mut out);
+            black_box(out.len());
+        }
+        let delta = alloc_events() - before;
+        println!(
+            "   [alloc audit] index query: {delta} allocation events over \
+             {} warm queries",
+            queries.len()
+        );
+        // live assert (not debug_assert): cargo bench builds with
+        // debug-assertions off, and the audit is outside the timed loops
+        assert_eq!(
+            delta, 0,
+            "inverted-index hot path must be allocation-free after warm-up"
+        );
+    }
+
+    // ---- L3: unified engine candidate retrieval ------------------------
+    b.group("engine candidates_into (scratch reuse)");
+    for backend in [
+        Backend::Geomap,
+        Backend::Srp { bits: 3, tables: 2 },
+        Backend::PcaTree { leaf_frac: 0.25 },
+    ] {
+        let engine = Engine::builder()
+            .schema(SchemaConfig::TernaryParseTree)
+            .threshold(1.3)
+            .backend(backend)
+            .build(items.clone())
+            .unwrap();
+        let mut scratch = SourceScratch::new();
+        let mut cand = Vec::new();
+        // warm-up, then audit per-query allocations
+        for u in 0..users.rows() {
+            engine
+                .candidates_into(users.row(u), &mut scratch, &mut cand)
+                .unwrap();
+        }
+        let before = alloc_events();
+        for u in 0..users.rows() {
+            engine
+                .candidates_into(users.row(u), &mut scratch, &mut cand)
+                .unwrap();
+            black_box(cand.len());
+        }
+        let audit_events = alloc_events() - before;
+        let per_query = audit_events as f64 / users.rows() as f64;
+        let mut ui = 0usize;
+        b.bench(&format!("{} candidates", engine.label()), 1, || {
+            engine
+                .candidates_into(users.row(ui % users.rows()), &mut scratch, &mut cand)
+                .unwrap();
+            black_box(cand.len());
+            ui += 1;
+        });
+        println!("   [alloc audit] {:.1} allocation events/query", per_query);
+        if matches!(backend, Backend::Srp { .. } | Backend::PcaTree { .. }) {
+            // baselines do no φ mapping: their pruning walk must be
+            // allocation-free after warm-up (live assert — see above)
+            assert_eq!(
+                audit_events, 0,
+                "baseline candidates_into must be allocation-free"
+            );
+        }
+    }
+
     // ---- L2/L1: rescoring backends -------------------------------------
     b.group("exact rescoring (B=32 tile=2048)");
     let mut rng = Rng::seeded(9);
@@ -117,13 +232,10 @@ fn main() {
 
     // ---- L3: whole worker batch ----------------------------------------
     b.group("worker process_batch (B=32)");
-    let store = FactorStore::build(
-        SchemaConfig::TernaryParseTree,
-        1.3,
-        items.clone(),
-        1,
-    )
-    .unwrap();
+    let spec = Engine::builder()
+        .schema(SchemaConfig::TernaryParseTree)
+        .threshold(1.3);
+    let store = FactorStore::build(spec, items.clone(), 1).unwrap();
     let snap = store.snapshot();
     let shard = &snap.shards[0];
     let mut wscratch = WorkerScratch::new(shard.items());

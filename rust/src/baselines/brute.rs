@@ -2,7 +2,7 @@
 //! The reference point for recovery accuracy (always 1.0) and the
 //! denominator of every speed-up claim.
 
-use super::CandidateFilter;
+use super::{CandidateFilter, FilterScratch};
 
 /// No pruning at all.
 pub struct BruteForce {
@@ -17,8 +17,14 @@ impl BruteForce {
 }
 
 impl CandidateFilter for BruteForce {
-    fn candidates(&self, _user: &[f32]) -> Vec<u32> {
-        (0..self.n_items as u32).collect()
+    fn candidates_into(
+        &self,
+        _user: &[f32],
+        _scratch: &mut FilterScratch,
+        out: &mut Vec<u32>,
+    ) {
+        out.clear();
+        out.extend(0..self.n_items as u32);
     }
 
     fn label(&self) -> String {

@@ -8,7 +8,10 @@
 //! they align with most, so they land in the same bucket with high
 //! probability; the key is `l`-ary rather than binary.
 
-use super::{bucketize, coalesce, projections, CandidateFilter};
+use super::{
+    bucketize, finish_candidates, projections_into, table_bytes, CandidateFilter,
+    FilterScratch,
+};
 use crate::linalg::Matrix;
 use crate::rng::Rng;
 use std::collections::HashMap;
@@ -91,26 +94,36 @@ pub(crate) fn rank_key(proj: &[f32], l: usize) -> u64 {
 }
 
 impl CandidateFilter for ConcomitantLsh {
-    fn candidates(&self, user: &[f32]) -> Vec<u32> {
-        let lists = self
-            .tables
-            .iter()
-            .map(|t| {
-                let key = rank_key(&projections(&t.directions, user), self.l);
-                t.buckets.get(&key).cloned().unwrap_or_default()
-            })
-            .collect();
-        coalesce(lists)
+    fn candidates_into(
+        &self,
+        user: &[f32],
+        scratch: &mut FilterScratch,
+        out: &mut Vec<u32>,
+    ) {
+        out.clear();
+        for t in &self.tables {
+            projections_into(&t.directions, user, &mut scratch.proj);
+            let key = rank_key(&scratch.proj, self.l);
+            if let Some(bucket) = t.buckets.get(&key) {
+                out.extend_from_slice(bucket);
+            }
+        }
+        finish_candidates(out);
     }
 
     fn label(&self) -> String {
         format!("cros(m={},l={},L={})", self.m, self.l, self.tables.len())
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.tables.iter().map(|t| table_bytes(&t.directions, &t.buckets)).sum()
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::baselines::projections;
     use crate::geometry::normalize;
 
     fn items(n: usize, k: usize, seed: u64) -> Matrix {

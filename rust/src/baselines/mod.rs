@@ -2,10 +2,11 @@
 //! SRP-LSH, Superbit-LSH, concomitant rank-order statistics, PCA-tree, and
 //! exact brute force.
 //!
-//! All baselines implement [`CandidateFilter`], the same interface the
-//! geomap retriever exposes through `Retriever::candidates`, so the
-//! evaluation harness treats every method identically: build over the item
-//! factors, then per-user return the surviving candidate ids.
+//! All baselines implement [`CandidateFilter`]; the engine layer adapts
+//! any filter into a [`crate::engine::CandidateSource`], so the serving
+//! coordinator and the evaluation harness treat every method
+//! identically: build over the item factors, then per-user return the
+//! surviving candidate ids.
 //!
 //! As in the paper (footnote 7), hashing baselines are *boosted* by
 //! coalescing the candidates collected from several independent hash
@@ -30,10 +31,41 @@ use crate::linalg::Matrix;
 /// A method that prunes the item catalogue to a candidate set per user.
 pub trait CandidateFilter: Send + Sync {
     /// Candidate item ids (sorted, unique) for a user factor.
-    fn candidates(&self, user: &[f32]) -> Vec<u32>;
+    fn candidates(&self, user: &[f32]) -> Vec<u32> {
+        let mut scratch = FilterScratch::default();
+        let mut out = Vec::new();
+        self.candidates_into(user, &mut scratch, &mut out);
+        out
+    }
+
+    /// Allocation-lean variant of [`candidates`](Self::candidates):
+    /// results go into `out` (cleared first), per-query temporaries live
+    /// in `scratch`. After warm-up (buffers grown to their steady-state
+    /// size) a query allocates nothing.
+    fn candidates_into(
+        &self,
+        user: &[f32],
+        scratch: &mut FilterScratch,
+        out: &mut Vec<u32>,
+    );
 
     /// Method label for reports.
     fn label(&self) -> String;
+
+    /// Approximate resident bytes of the pruning structure (not counting
+    /// the dense item factors).
+    fn memory_bytes(&self) -> usize {
+        0
+    }
+}
+
+/// Reusable per-query scratch shared by every baseline filter: one
+/// projection buffer is all the hash-based methods need, and the tree
+/// baseline needs nothing.
+#[derive(Debug, Default)]
+pub struct FilterScratch {
+    /// Projection values of the user factor against one table's rows.
+    pub proj: Vec<f32>,
 }
 
 /// Group items by a bucket key: `buckets[key] -> sorted item ids`.
@@ -47,18 +79,36 @@ pub(crate) fn bucketize(keys: impl Iterator<Item = u64>) -> std::collections::Ha
     map
 }
 
-/// Coalesce per-table candidate lists into one sorted unique list
-/// (footnote 7 boosting).
-pub(crate) fn coalesce(mut lists: Vec<Vec<u32>>) -> Vec<u32> {
-    let mut out: Vec<u32> = lists.drain(..).flatten().collect();
-    out.sort_unstable();
-    out.dedup();
+/// Convenience used by several baselines: project `x` against rows of `h`.
+pub(crate) fn projections(h: &Matrix, x: &[f32]) -> Vec<f32> {
+    let mut out = Vec::new();
+    projections_into(h, x, &mut out);
     out
 }
 
-/// Convenience used by several baselines: project `x` against rows of `h`.
-pub(crate) fn projections(h: &Matrix, x: &[f32]) -> Vec<f32> {
-    (0..h.rows()).map(|i| crate::linalg::ops::dot(h.row(i), x)).collect()
+/// Allocation-free form of [`projections`]: reuses `out`.
+pub(crate) fn projections_into(h: &Matrix, x: &[f32], out: &mut Vec<f32>) {
+    out.clear();
+    out.extend((0..h.rows()).map(|i| crate::linalg::ops::dot(h.row(i), x)));
+}
+
+/// Sort + dedup a candidate buffer in place — the footnote-7 coalescing
+/// step, run by the multi-table filters after extending `out` from each
+/// matching bucket.
+pub(crate) fn finish_candidates(out: &mut Vec<u32>) {
+    out.sort_unstable();
+    out.dedup();
+}
+
+/// Approximate resident bytes of one hash table: projection matrix plus
+/// bucket map. Shared by the `memory_bytes` accounting of every
+/// hash-table baseline.
+pub(crate) fn table_bytes(
+    proj: &Matrix,
+    buckets: &std::collections::HashMap<u64, Vec<u32>>,
+) -> usize {
+    proj.rows() * proj.cols() * 4
+        + buckets.values().map(|b| b.len() * 4 + 8).sum::<usize>()
 }
 
 #[cfg(test)]
@@ -66,9 +116,10 @@ mod tests {
     use super::*;
 
     #[test]
-    fn coalesce_dedups_and_sorts() {
-        let got = coalesce(vec![vec![3, 1], vec![2, 3], vec![]]);
-        assert_eq!(got, vec![1, 2, 3]);
+    fn finish_candidates_dedups_and_sorts() {
+        let mut out = vec![3, 1, 2, 3];
+        finish_candidates(&mut out);
+        assert_eq!(out, vec![1, 2, 3]);
     }
 
     #[test]

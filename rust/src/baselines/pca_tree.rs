@@ -8,7 +8,7 @@
 //! the items stored there — the rigid-boundary behaviour the paper
 //! contrasts with its soft overlapping regions.
 
-use super::CandidateFilter;
+use super::{CandidateFilter, FilterScratch};
 use crate::linalg::{decomp::power_iteration, ops::dot, Matrix};
 use crate::rng::Rng;
 
@@ -117,14 +117,20 @@ impl PcaTree {
 }
 
 impl CandidateFilter for PcaTree {
-    fn candidates(&self, user: &[f32]) -> Vec<u32> {
+    fn candidates_into(
+        &self,
+        user: &[f32],
+        _scratch: &mut FilterScratch,
+        out: &mut Vec<u32>,
+    ) {
+        out.clear();
         let mut node = &self.root;
         loop {
             match node {
                 Node::Leaf { items } => {
-                    let mut out = items.clone();
+                    out.extend_from_slice(items);
                     out.sort_unstable();
-                    return out;
+                    return;
                 }
                 Node::Split { direction, threshold, left, right } => {
                     node = if dot(direction, user) < *threshold {
@@ -139,6 +145,18 @@ impl CandidateFilter for PcaTree {
 
     fn label(&self) -> String {
         format!("pca-tree(leaf={})", self.max_leaf)
+    }
+
+    fn memory_bytes(&self) -> usize {
+        fn bytes(n: &Node) -> usize {
+            match n {
+                Node::Leaf { items } => items.len() * 4,
+                Node::Split { direction, left, right, .. } => {
+                    direction.len() * 4 + bytes(left) + bytes(right)
+                }
+            }
+        }
+        bytes(&self.root)
     }
 }
 

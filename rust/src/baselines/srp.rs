@@ -5,7 +5,10 @@
 //! an item's key is the sign pattern of its projections. A user retrieves
 //! the items in its exact bucket, coalesced across tables (footnote 7).
 
-use super::{bucketize, coalesce, projections, CandidateFilter};
+use super::{
+    bucketize, finish_candidates, projections_into, table_bytes, CandidateFilter,
+    FilterScratch,
+};
 use crate::linalg::Matrix;
 use crate::rng::Rng;
 use std::collections::HashMap;
@@ -63,26 +66,36 @@ pub(crate) fn sign_key(proj: &[f32]) -> u64 {
 }
 
 impl CandidateFilter for SrpLsh {
-    fn candidates(&self, user: &[f32]) -> Vec<u32> {
-        let lists = self
-            .tables
-            .iter()
-            .map(|t| {
-                let key = sign_key(&projections(&t.hyperplanes, user));
-                t.buckets.get(&key).cloned().unwrap_or_default()
-            })
-            .collect();
-        coalesce(lists)
+    fn candidates_into(
+        &self,
+        user: &[f32],
+        scratch: &mut FilterScratch,
+        out: &mut Vec<u32>,
+    ) {
+        out.clear();
+        for t in &self.tables {
+            projections_into(&t.hyperplanes, user, &mut scratch.proj);
+            let key = sign_key(&scratch.proj);
+            if let Some(bucket) = t.buckets.get(&key) {
+                out.extend_from_slice(bucket);
+            }
+        }
+        finish_candidates(out);
     }
 
     fn label(&self) -> String {
         format!("srp-lsh(b={},L={})", self.bits, self.tables.len())
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.tables.iter().map(|t| table_bytes(&t.hyperplanes, &t.buckets)).sum()
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::baselines::projections;
     use crate::geometry::normalize;
 
     fn items(n: usize, k: usize, seed: u64) -> Matrix {

@@ -4,7 +4,10 @@
 //! in groups ("super-bits") via Gram–Schmidt before projection, which
 //! lowers the variance of the angle estimate and tightens buckets.
 
-use super::{bucketize, coalesce, projections, srp::sign_key, CandidateFilter};
+use super::{
+    bucketize, finish_candidates, projections_into, srp::sign_key, table_bytes,
+    CandidateFilter, FilterScratch,
+};
 use crate::linalg::{decomp::gram_schmidt, Matrix};
 use crate::rng::Rng;
 use std::collections::HashMap;
@@ -59,16 +62,21 @@ impl SuperbitLsh {
 }
 
 impl CandidateFilter for SuperbitLsh {
-    fn candidates(&self, user: &[f32]) -> Vec<u32> {
-        let lists = self
-            .tables
-            .iter()
-            .map(|t| {
-                let key = sign_key(&projections(&t.hyperplanes, user));
-                t.buckets.get(&key).cloned().unwrap_or_default()
-            })
-            .collect();
-        coalesce(lists)
+    fn candidates_into(
+        &self,
+        user: &[f32],
+        scratch: &mut FilterScratch,
+        out: &mut Vec<u32>,
+    ) {
+        out.clear();
+        for t in &self.tables {
+            projections_into(&t.hyperplanes, user, &mut scratch.proj);
+            let key = sign_key(&scratch.proj);
+            if let Some(bucket) = t.buckets.get(&key) {
+                out.extend_from_slice(bucket);
+            }
+        }
+        finish_candidates(out);
     }
 
     fn label(&self) -> String {
@@ -78,6 +86,10 @@ impl CandidateFilter for SuperbitLsh {
             self.depth,
             self.tables.len()
         )
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.tables.iter().map(|t| table_bytes(&t.hyperplanes, &t.buckets)).sum()
     }
 }
 

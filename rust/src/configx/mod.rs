@@ -57,6 +57,146 @@ impl SchemaConfig {
     }
 }
 
+/// Which candidate-pruning backend serves retrieval (engine subsystem).
+///
+/// `Geomap` is the paper's inverted index; the rest are the §5.1/§6
+/// comparison baselines, all constructible through `Engine::builder()`
+/// and servable through the coordinator, selected purely by config.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Backend {
+    /// Geometry-aware sparse map + inverted index (the paper's method).
+    /// The only backend supporting incremental catalogue mutation.
+    Geomap,
+    /// Sign-random-projection LSH, coalesced over `tables` tables.
+    Srp {
+        /// Sign bits per table.
+        bits: usize,
+        /// Independent hash tables.
+        tables: usize,
+    },
+    /// Superbit LSH (group-orthogonalised hyperplanes).
+    Superbit {
+        /// Bits per table.
+        bits: usize,
+        /// Orthogonalisation group size.
+        depth: usize,
+        /// Independent hash tables.
+        tables: usize,
+    },
+    /// Concomitant rank-order statistics LSH.
+    Cros {
+        /// Random directions per table.
+        m: usize,
+        /// Rank-order depth (1..=4).
+        l: usize,
+        /// Independent hash tables.
+        tables: usize,
+    },
+    /// PCA-tree with median splits.
+    PcaTree {
+        /// Max leaf size as a fraction of the catalogue, in (0, 1].
+        leaf_frac: f64,
+    },
+    /// No pruning (exact brute force; the speed-up denominator).
+    Brute,
+}
+
+impl Backend {
+    /// Parse from CLI/JSON string form. Bare names take the §6 defaults;
+    /// parameters ride behind a colon, comma-separated:
+    /// `geomap`, `brute`, `srp[:BITS,TABLES]`,
+    /// `superbit[:BITS,DEPTH,TABLES]`, `cros[:M,L,TABLES]`,
+    /// `pca-tree[:LEAF_FRAC]`.
+    pub fn parse(s: &str) -> Result<Self> {
+        fn ints(spec: &str, rest: &str, n: usize) -> Result<Vec<usize>> {
+            let parts: Vec<&str> = rest.split(',').collect();
+            if parts.len() != n {
+                return Err(GeomapError::Config(format!(
+                    "backend '{spec}' wants {n} comma-separated parameters"
+                )));
+            }
+            parts
+                .iter()
+                .map(|p| {
+                    p.trim().parse::<usize>().map_err(|_| {
+                        GeomapError::Config(format!(
+                            "bad integer '{p}' in backend '{spec}'"
+                        ))
+                    })
+                })
+                .collect()
+        }
+        let (name, rest) = match s.split_once(':') {
+            Some((n, r)) => (n, Some(r)),
+            None => (s, None),
+        };
+        match (name, rest) {
+            ("geomap", None) => Ok(Backend::Geomap),
+            ("brute", None) => Ok(Backend::Brute),
+            ("srp", None) => Ok(Backend::Srp { bits: 3, tables: 2 }),
+            ("srp", Some(r)) => {
+                let v = ints(s, r, 2)?;
+                Ok(Backend::Srp { bits: v[0], tables: v[1] })
+            }
+            ("superbit", None) => {
+                Ok(Backend::Superbit { bits: 3, depth: 3, tables: 2 })
+            }
+            ("superbit", Some(r)) => {
+                let v = ints(s, r, 3)?;
+                Ok(Backend::Superbit { bits: v[0], depth: v[1], tables: v[2] })
+            }
+            ("cros", None) => Ok(Backend::Cros { m: 12, l: 1, tables: 2 }),
+            ("cros", Some(r)) => {
+                let v = ints(s, r, 3)?;
+                Ok(Backend::Cros { m: v[0], l: v[1], tables: v[2] })
+            }
+            ("pca-tree", None) => Ok(Backend::PcaTree { leaf_frac: 0.25 }),
+            ("pca-tree", Some(r)) => {
+                let leaf_frac: f64 = r.trim().parse().map_err(|_| {
+                    GeomapError::Config(format!("bad leaf fraction in '{s}'"))
+                })?;
+                if !(leaf_frac > 0.0 && leaf_frac <= 1.0) {
+                    return Err(GeomapError::Config(
+                        "pca-tree leaf fraction must be in (0, 1]".into(),
+                    ));
+                }
+                Ok(Backend::PcaTree { leaf_frac })
+            }
+            _ => Err(GeomapError::Config(format!(
+                "unknown backend '{s}' (want geomap | srp[:b,L] | \
+                 superbit[:b,d,L] | cros[:m,l,L] | pca-tree[:frac] | brute)"
+            ))),
+        }
+    }
+
+    /// Short backend name (no parameters).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::Geomap => "geomap",
+            Backend::Srp { .. } => "srp",
+            Backend::Superbit { .. } => "superbit",
+            Backend::Cros { .. } => "cros",
+            Backend::PcaTree { .. } => "pca-tree",
+            Backend::Brute => "brute",
+        }
+    }
+}
+
+/// Incremental catalogue-mutation policy (geomap backend only).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MutationConfig {
+    /// Pending mutations (delta rows + base tombstones) that trigger a
+    /// merge of the delta segment into the immutable base index.
+    /// `0` disables automatic merging (explicit `merge()` only).
+    pub max_delta: usize,
+}
+
+impl Default for MutationConfig {
+    fn default() -> Self {
+        MutationConfig { max_delta: 1024 }
+    }
+}
+
 /// Coordinator serving configuration.
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
@@ -82,6 +222,10 @@ pub struct ServeConfig {
     /// "after some thresholding"); 0 disables, ≈1.3 is the paper's
     /// operating point.
     pub threshold: f32,
+    /// Candidate-pruning backend served by every shard.
+    pub backend: Backend,
+    /// Incremental-mutation policy (geomap backend only).
+    pub mutation: MutationConfig,
 }
 
 impl Default for ServeConfig {
@@ -97,6 +241,8 @@ impl Default for ServeConfig {
             use_xla: true,
             artifacts_dir: "artifacts".to_string(),
             threshold: 1.3,
+            backend: Backend::Geomap,
+            mutation: MutationConfig::default(),
         }
     }
 }
@@ -161,6 +307,12 @@ impl ServeConfig {
         if let Some(v) = j.opt("threshold") {
             c.threshold = v.as_f64()? as f32;
         }
+        if let Some(v) = j.opt("backend") {
+            c.backend = Backend::parse(v.as_str()?)?;
+        }
+        if let Some(v) = j.opt("max_delta") {
+            c.mutation.max_delta = v.as_usize()?;
+        }
         c.validated()
     }
 }
@@ -224,5 +376,57 @@ mod tests {
     fn from_json_rejects_bad_types() {
         let j = Json::parse(r#"{"k": "many"}"#).unwrap();
         assert!(ServeConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn backend_parse_forms() {
+        assert_eq!(Backend::parse("geomap").unwrap(), Backend::Geomap);
+        assert_eq!(Backend::parse("brute").unwrap(), Backend::Brute);
+        assert_eq!(
+            Backend::parse("srp").unwrap(),
+            Backend::Srp { bits: 3, tables: 2 }
+        );
+        assert_eq!(
+            Backend::parse("srp:8,4").unwrap(),
+            Backend::Srp { bits: 8, tables: 4 }
+        );
+        assert_eq!(
+            Backend::parse("superbit:6,3,2").unwrap(),
+            Backend::Superbit { bits: 6, depth: 3, tables: 2 }
+        );
+        assert_eq!(
+            Backend::parse("cros:16,2,3").unwrap(),
+            Backend::Cros { m: 16, l: 2, tables: 3 }
+        );
+        assert_eq!(
+            Backend::parse("pca-tree:0.1").unwrap(),
+            Backend::PcaTree { leaf_frac: 0.1 }
+        );
+        assert!(Backend::parse("srp:8").is_err());
+        assert!(Backend::parse("pca-tree:0").is_err());
+        assert!(Backend::parse("pca-tree:1.5").is_err());
+        assert!(Backend::parse("geomap:1").is_err());
+        assert!(Backend::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn backend_names() {
+        assert_eq!(Backend::Geomap.name(), "geomap");
+        assert_eq!(Backend::parse("superbit").unwrap().name(), "superbit");
+        assert_eq!(Backend::Brute.name(), "brute");
+    }
+
+    #[test]
+    fn from_json_backend_and_mutation() {
+        let j = Json::parse(
+            r#"{"backend": "cros:12,1,2", "max_delta": 64}"#,
+        )
+        .unwrap();
+        let c = ServeConfig::from_json(&j).unwrap();
+        assert_eq!(c.backend, Backend::Cros { m: 12, l: 1, tables: 2 });
+        assert_eq!(c.mutation.max_delta, 64);
+        // defaults otherwise
+        assert_eq!(ServeConfig::default().backend, Backend::Geomap);
+        assert_eq!(ServeConfig::default().mutation.max_delta, 1024);
     }
 }

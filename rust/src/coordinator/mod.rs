@@ -3,8 +3,12 @@
 //! rescoring through the runtime, and serving metrics.
 //!
 //! The paper's contribution — the geometry-aware sparse map + inverted
-//! index — lives on this data path as each shard's pruning step; the
-//! coordinator is the serving system a deployment would wrap around it.
+//! index — lives on this data path as each shard's pruning step, behind
+//! the backend-agnostic [`Engine`](crate::engine::Engine) API: any
+//! [`Backend`](crate::configx::Backend) (geomap or a §5.1 baseline)
+//! serves through the same coordinator, selected purely by config, and
+//! the geomap backend additionally supports incremental catalogue
+//! mutation (delta segment + tombstones + threshold-triggered merge).
 
 pub mod admission;
 pub mod metrics;

@@ -9,8 +9,12 @@
 //!
 //! The dispatcher and every worker are OS threads; request/response
 //! plumbing is std `mpsc` (no tokio offline — DESIGN.md §3). Factor
-//! updates go through [`Coordinator::swap_items`]: in-flight batches
-//! finish on their old snapshot, new batches see the new version.
+//! updates go through [`Coordinator::swap_items`] (whole catalogue) or
+//! [`Coordinator::upsert`] / [`Coordinator::remove`] (incremental, geomap
+//! backend): in-flight batches finish on their old snapshot, new batches
+//! see the new version. The pruning backend is selected purely by config
+//! (`ServeConfig::backend`) — every shard serves the same
+//! [`Engine`](crate::engine::Engine) spec.
 
 use super::admission::{BoundedQueue, PushError};
 use super::metrics::ServeMetrics;
@@ -18,6 +22,7 @@ use super::router::merge_topk;
 use super::state::{FactorStore, Shard};
 use super::worker::{process_batch, ShardPartial, WorkerScratch};
 use crate::configx::ServeConfig;
+use crate::engine::Engine;
 use crate::error::{GeomapError, Result};
 use crate::linalg::Matrix;
 use crate::retrieval::Scored;
@@ -82,12 +87,12 @@ impl Coordinator {
                 cfg.k
             )));
         }
-        let store = Arc::new(FactorStore::build(
-            cfg.schema,
-            cfg.threshold,
-            items,
-            cfg.shards,
-        )?);
+        let spec = Engine::builder()
+            .schema(cfg.schema)
+            .threshold(cfg.threshold)
+            .backend(cfg.backend)
+            .mutation(cfg.mutation);
+        let store = Arc::new(FactorStore::build(spec, items, cfg.shards)?);
         let queue = Arc::new(BoundedQueue::new(cfg.queue_cap));
         let metrics = Arc::new(ServeMetrics::new());
         let closing = Arc::new(AtomicBool::new(false));
@@ -172,6 +177,26 @@ impl Coordinator {
             )));
         }
         self.store.swap_items(items)
+    }
+
+    /// Incrementally insert or replace one item (geomap backend only).
+    /// `id == total_items()` appends. Returns the new catalogue version;
+    /// in-flight batches finish on their old snapshot.
+    pub fn upsert(&self, id: u32, factor: &[f32]) -> Result<u64> {
+        if factor.len() != self.cfg.k {
+            return Err(GeomapError::Shape(format!(
+                "factor dim {} != k {}",
+                factor.len(),
+                self.cfg.k
+            )));
+        }
+        self.store.upsert(id, factor)
+    }
+
+    /// Incrementally remove one item (geomap backend only). Returns the
+    /// catalogue version and whether the id was live.
+    pub fn remove(&self, id: u32) -> Result<(u64, bool)> {
+        self.store.remove(id)
     }
 
     /// Serving metrics.
@@ -370,6 +395,7 @@ mod tests {
             use_xla: false,
             artifacts_dir: "artifacts".into(),
             threshold: 0.0,
+            ..ServeConfig::default()
         }
     }
 
@@ -456,6 +482,69 @@ mod tests {
         assert_eq!(r2.total_items, 250);
         assert_eq!(r2.version, v);
         assert!(r2.version > r1.version);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn incremental_mutation_through_coordinator() {
+        let k = 8;
+        let coord = Coordinator::start(
+            test_cfg(k, 2),
+            items(100, k, 30),
+            cpu_scorer_factory(),
+        )
+        .unwrap();
+        let mut rng = Rng::seeded(31);
+        let user: Vec<f32> = (0..k).map(|_| rng.gaussian_f32()).collect();
+        let v0 = coord.submit(user.clone(), 5).unwrap().version;
+        // remove an id: it must never be served again
+        let (v1, live) = coord.remove(42).unwrap();
+        assert!(live);
+        assert!(v1 > v0);
+        for _ in 0..10 {
+            let resp = coord.submit(user.clone(), 100).unwrap();
+            assert!(
+                resp.results.iter().all(|s| s.id != 42),
+                "removed id served"
+            );
+        }
+        // append one item: catalogue grows without a rebuild
+        let f: Vec<f32> = (0..k).map(|_| rng.gaussian_f32()).collect();
+        let v2 = coord.upsert(100, &f).unwrap();
+        assert!(v2 > v1);
+        let resp = coord.submit(user, 5).unwrap();
+        assert_eq!(resp.total_items, 101);
+        // dim mismatch rejected at the facade
+        assert!(coord.upsert(0, &[1.0; 3]).is_err());
+        coord.shutdown();
+    }
+
+    #[test]
+    fn backend_selected_by_config() {
+        use crate::configx::Backend;
+        let k = 8;
+        let mut cfg = test_cfg(k, 1);
+        cfg.backend = Backend::Brute;
+        let coord = Coordinator::start(
+            cfg,
+            items(60, k, 32),
+            cpu_scorer_factory(),
+        )
+        .unwrap();
+        let mut rng = Rng::seeded(33);
+        let user: Vec<f32> = (0..k).map(|_| rng.gaussian_f32()).collect();
+        let resp = coord.submit(user.clone(), 5).unwrap();
+        // brute backend: nothing discarded, exact top-κ of everything
+        assert_eq!(resp.candidates, 60);
+        let brute = brute_force_top_k(&user, &items(60, k, 32), 5);
+        assert_eq!(
+            resp.results.iter().map(|s| s.id).collect::<Vec<_>>(),
+            brute.iter().map(|s| s.id).collect::<Vec<_>>()
+        );
+        // immutable backend rejects incremental mutation but swaps fine
+        let f0 = vec![0.0; k];
+        assert!(coord.upsert(0, &f0).is_err());
+        assert!(coord.swap_items(items(30, k, 34)).is_ok());
         coord.shutdown();
     }
 

@@ -1,94 +1,106 @@
-//! Versioned, hot-swappable factor store.
+//! Versioned, hot-swappable engine store.
 //!
 //! The paper's motivating workloads (online news) have factors that change
 //! while serving. [`FactorStore`] keeps the current [`ShardSet`] behind an
 //! `RwLock<Arc<_>>`: readers take a cheap snapshot per batch; updates
-//! build a complete shadow shard set (map + index every new item factor)
-//! off the read path and swap it in atomically — no precomputed scores to
-//! invalidate, which is exactly the paper's argument for recomputing from
-//! factors at query time.
+//! build replacement state off the read path and swap it in atomically —
+//! no precomputed scores to invalidate, which is exactly the paper's
+//! argument for recomputing from factors at query time.
+//!
+//! Two update granularities exist:
+//!
+//! * [`swap_items`](FactorStore::swap_items) — replace the whole
+//!   catalogue: build a complete shadow shard set (map + index every new
+//!   item factor), then swap.
+//! * [`upsert`](FactorStore::upsert) / [`remove`](FactorStore::remove) —
+//!   incremental mutation: clone the owning shard's engine, apply the
+//!   mutation to its delta segment / tombstone set, and swap in a shard
+//!   set that replaces only that shard. The clone shares the immutable
+//!   base index via `Arc` but deep-copies the delta and the tombstone
+//!   bitmap, so a mutation costs O(pending + shard_items) — bounded by
+//!   `MutationConfig::max_delta`, which caps how large the delta grows
+//!   before a merge resets it. Once pending mutations cross that
+//!   threshold the engine merges its delta into a fresh base — still off
+//!   the read path: in-flight batches keep serving the pre-merge
+//!   snapshot until the atomic swap.
 
-use crate::configx::SchemaConfig;
-use crate::embedding::Mapper;
-use crate::error::Result;
+use crate::engine::{Engine, EngineBuilder};
+use crate::error::{GeomapError, Result};
 use crate::linalg::Matrix;
-use crate::retrieval::Retriever;
-use std::sync::{Arc, RwLock};
+use std::sync::{Arc, Mutex, RwLock};
 
-/// One index shard: a contiguous slice of the catalogue with its own
-/// retriever (inverted index + dense factors).
+/// One index shard: a contiguous slice of the catalogue served by its
+/// own [`Engine`] (pruning structure + dense factors).
 pub struct Shard {
     /// Shard ordinal.
     pub id: usize,
-    /// Global item id of local row 0 (rows are contiguous global ids).
+    /// Global item id of local id 0 (local ids are contiguous global ids).
     pub base_id: u32,
-    /// Pruning + rescoring structures over this shard's items.
-    pub retriever: Retriever,
+    /// The candidate engine over this shard's items.
+    pub engine: Engine,
 }
 
 impl Shard {
-    /// Number of items in this shard.
+    /// Addressable local ids in this shard (includes unmerged holes).
     pub fn items(&self) -> usize {
-        self.retriever.items()
+        self.engine.len()
     }
 }
 
 /// An immutable snapshot of the full sharded catalogue.
 pub struct ShardSet {
-    /// Monotonic version (bumped on every swap).
+    /// Monotonic version (bumped on every swap or mutation).
     pub version: u64,
     /// The shards, in shard order.
     pub shards: Vec<Arc<Shard>>,
-    /// Total items across shards.
+    /// Total addressable ids across shards.
     pub total_items: usize,
 }
 
 /// Versioned store of mapped + indexed item factors.
 pub struct FactorStore {
-    schema: SchemaConfig,
-    threshold: f32,
+    spec: EngineBuilder,
     n_shards: usize,
     current: RwLock<Arc<ShardSet>>,
+    /// Serialises read-modify-write updates (mutations and swaps);
+    /// readers never take this.
+    update: Mutex<()>,
 }
 
 impl FactorStore {
     /// Build the initial shard set from item factors.
     pub fn build(
-        schema: SchemaConfig,
-        threshold: f32,
+        spec: EngineBuilder,
         items: Matrix,
         n_shards: usize,
     ) -> Result<FactorStore> {
         let n_shards = n_shards.max(1);
-        let set = Self::build_set(schema, threshold, items, n_shards, 1)?;
+        let set = Self::build_set(spec, items, n_shards, 1)?;
         Ok(FactorStore {
-            schema,
-            threshold,
+            spec,
             n_shards,
             current: RwLock::new(Arc::new(set)),
+            update: Mutex::new(()),
         })
     }
 
     fn build_set(
-        schema: SchemaConfig,
-        threshold: f32,
+        spec: EngineBuilder,
         items: Matrix,
         n_shards: usize,
         version: u64,
     ) -> Result<ShardSet> {
         let total = items.rows();
-        let k = items.cols();
         let per = total.div_ceil(n_shards).max(1);
         let mut shards = Vec::with_capacity(n_shards);
         for s in 0..n_shards {
             let lo = (s * per).min(total);
             let hi = ((s + 1) * per).min(total);
             let slice = items.slice_rows(lo, hi);
-            let mapper = Mapper::from_config(schema, k, threshold);
             shards.push(Arc::new(Shard {
                 id: s,
                 base_id: lo as u32,
-                retriever: Retriever::build(mapper, slice)?,
+                engine: spec.build(slice)?,
             }));
         }
         Ok(ShardSet { version, shards, total_items: total })
@@ -103,16 +115,92 @@ impl FactorStore {
     /// factors, then swap atomically. Returns the new version. In-flight
     /// batches keep serving their old snapshot until they finish.
     pub fn swap_items(&self, items: Matrix) -> Result<u64> {
+        let _g = self.update.lock().unwrap();
         let version = self.snapshot().version + 1;
-        let set = Self::build_set(
-            self.schema,
-            self.threshold,
-            items,
-            self.n_shards,
-            version,
-        )?;
+        let set = Self::build_set(self.spec, items, self.n_shards, version)?;
         *self.current.write().unwrap() = Arc::new(set);
         Ok(version)
+    }
+
+    /// Which shard owns global id `id`; `allow_append` additionally
+    /// accepts `id == total` (the append slot on the last shard).
+    fn route(
+        snap: &ShardSet,
+        id: u32,
+        allow_append: bool,
+    ) -> Result<usize> {
+        let total = snap.total_items as u32;
+        if id < total {
+            for (s, shard) in snap.shards.iter().enumerate() {
+                let lo = shard.base_id;
+                if id >= lo && ((id - lo) as usize) < shard.items() {
+                    return Ok(s);
+                }
+            }
+        }
+        if allow_append && id == total {
+            return Ok(snap.shards.len() - 1);
+        }
+        Err(GeomapError::Config(format!(
+            "item id {id} outside the catalogue (total {total}; ids append \
+             contiguously)"
+        )))
+    }
+
+    /// Swap in a shard set that replaces shard `s` with `shard`.
+    fn replace_shard(&self, snap: &ShardSet, s: usize, shard: Shard) -> u64 {
+        let version = snap.version + 1;
+        let mut shards = snap.shards.clone();
+        shards[s] = Arc::new(shard);
+        let total_items = shards.iter().map(|sh| sh.items()).sum();
+        *self.current.write().unwrap() =
+            Arc::new(ShardSet { version, shards, total_items });
+        version
+    }
+
+    /// Clone the engine of the shard owning `id` (copy-on-write).
+    fn cow_engine(
+        &self,
+        snap: &ShardSet,
+        s: usize,
+    ) -> Result<Engine> {
+        snap.shards[s].engine.try_clone().ok_or_else(|| {
+            GeomapError::Config(format!(
+                "backend '{}' does not support incremental mutation \
+                 (use swap_items)",
+                snap.shards[s].engine.backend().name()
+            ))
+        })
+    }
+
+    /// Incrementally insert or replace one item. `id == total` appends.
+    /// Returns the new catalogue version.
+    pub fn upsert(&self, id: u32, factor: &[f32]) -> Result<u64> {
+        let _g = self.update.lock().unwrap();
+        let snap = self.snapshot();
+        let s = Self::route(&snap, id, true)?;
+        let mut engine = self.cow_engine(&snap, s)?;
+        engine.upsert(id - snap.shards[s].base_id, factor)?;
+        let shard =
+            Shard { id: s, base_id: snap.shards[s].base_id, engine };
+        Ok(self.replace_shard(&snap, s, shard))
+    }
+
+    /// Incrementally remove one item. Returns the new catalogue version
+    /// and whether the id was live (a dead id is a no-op that does not
+    /// bump the version).
+    pub fn remove(&self, id: u32) -> Result<(u64, bool)> {
+        let _g = self.update.lock().unwrap();
+        let snap = self.snapshot();
+        let s = Self::route(&snap, id, false)?;
+        let mut engine = self.cow_engine(&snap, s)?;
+        let was_live = engine.remove(id - snap.shards[s].base_id)?;
+        if !was_live {
+            return Ok((snap.version, false));
+        }
+        let shard =
+            Shard { id: s, base_id: snap.shards[s].base_id, engine };
+        Ok((self.replace_shard(&snap, s, shard), true))
     }
 
     /// Number of shards.
@@ -124,6 +212,8 @@ impl FactorStore {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::configx::{Backend, MutationConfig, SchemaConfig};
+    use crate::engine::Engine;
     use crate::rng::Rng;
 
     fn items(n: usize, k: usize, seed: u64) -> Matrix {
@@ -131,14 +221,14 @@ mod tests {
         Matrix::gaussian(&mut rng, n, k, 1.0)
     }
 
+    fn spec() -> EngineBuilder {
+        Engine::builder()
+            .schema(SchemaConfig::TernaryParseTree)
+            .threshold(0.0)
+    }
+
     fn store(n: usize, shards: usize) -> FactorStore {
-        FactorStore::build(
-            SchemaConfig::TernaryParseTree,
-            0.0,
-            items(n, 8, 1),
-            shards,
-        )
-        .unwrap()
+        FactorStore::build(spec(), items(n, 8, 1), shards).unwrap()
     }
 
     #[test]
@@ -183,9 +273,68 @@ mod tests {
         let nonempty: usize =
             snap.shards.iter().filter(|sh| sh.items() > 0).count();
         assert!(nonempty >= 1);
-        assert_eq!(
-            snap.shards.iter().map(|sh| sh.items()).sum::<usize>(),
-            3
-        );
+        assert_eq!(snap.shards.iter().map(|sh| sh.items()).sum::<usize>(), 3);
+    }
+
+    #[test]
+    fn upsert_replaces_and_appends() {
+        let s = store(40, 2);
+        let old = s.snapshot();
+        let f = vec![0.5f32; 8];
+        // replace an item owned by shard 1
+        let v1 = s.upsert(30, &f).unwrap();
+        assert_eq!(v1, old.version + 1);
+        let snap = s.snapshot();
+        assert_eq!(snap.total_items, 40);
+        assert_eq!(snap.shards[1].engine.factor(30 - 20).unwrap(), &f[..]);
+        // the pre-mutation snapshot still serves the old factor
+        assert_ne!(old.shards[1].engine.factor(30 - 20).unwrap(), &f[..]);
+        // append grows the last shard
+        let v2 = s.upsert(40, &f).unwrap();
+        assert_eq!(v2, v1 + 1);
+        assert_eq!(s.snapshot().total_items, 41);
+        // beyond the edge is rejected
+        assert!(s.upsert(99, &f).is_err());
+    }
+
+    #[test]
+    fn remove_tombstones_and_reports_liveness() {
+        let s = store(40, 2);
+        let (v1, live) = s.remove(5).unwrap();
+        assert!(live);
+        let (v2, live2) = s.remove(5).unwrap();
+        assert!(!live2, "second remove is a no-op");
+        assert_eq!(v2, v1, "no-op must not bump the version");
+        // address space unchanged; the id is just dead
+        let snap = s.snapshot();
+        assert_eq!(snap.total_items, 40);
+        assert_eq!(snap.shards[0].engine.factor(5), None);
+        assert!(s.remove(400).is_err(), "out of range");
+    }
+
+    #[test]
+    fn immutable_backend_rejects_mutation() {
+        let spec = Engine::builder().backend(Backend::Brute);
+        let s = FactorStore::build(spec, items(20, 8, 4), 1).unwrap();
+        assert!(s.upsert(3, &[0.0; 8]).is_err());
+        assert!(s.remove(3).is_err());
+        // whole-catalogue swap still works
+        assert!(s.swap_items(items(10, 8, 5)).is_ok());
+    }
+
+    #[test]
+    fn merge_threshold_applies_per_shard() {
+        let spec = spec().mutation(MutationConfig { max_delta: 3 });
+        let s = FactorStore::build(spec, items(30, 8, 6), 1).unwrap();
+        for i in 0..5u32 {
+            let f = [0.1 * (i as f32 + 1.0); 8];
+            s.upsert(30 + i, &f).unwrap();
+        }
+        let snap = s.snapshot();
+        assert_eq!(snap.total_items, 35);
+        // the threshold fired at least once, so fewer than 5 pending
+        let stats = snap.shards[0].engine.stats();
+        assert!(stats.pending < 5, "pending {} never merged", stats.pending);
+        assert_eq!(stats.live, 35);
     }
 }

@@ -1,10 +1,11 @@
-//! Shard workers: index pruning + batched exact rescoring.
+//! Shard workers: backend-agnostic pruning + batched exact rescoring.
 //!
 //! Each worker owns one shard ordinal and its own [`Scorer`] (PJRT
 //! clients are not `Send`, so the scorer is built *on* the worker thread
 //! from a [`ScorerFactory`]). Per batch the worker:
 //!
-//! 1. queries the shard's inverted index per request (candidate local ids),
+//! 1. queries the shard's [`Engine`](crate::engine::Engine) per request
+//!    (candidate local ids — any backend behind one call),
 //! 2. takes the **union** of the batch's candidates as one item tile,
 //! 3. scores the whole batch against the tile in a single backend call
 //!    (B × U GEMM — this is where dynamic batching pays), and
@@ -15,8 +16,8 @@
 //! selection time.
 
 use super::state::Shard;
+use crate::engine::SourceScratch;
 use crate::error::Result;
-use crate::index::QueryScratch;
 use crate::linalg::Matrix;
 use crate::retrieval::{Scored, TopK};
 use crate::runtime::Scorer;
@@ -29,19 +30,22 @@ pub struct ShardPartial {
     pub candidates: Vec<usize>,
 }
 
-/// Reusable per-worker buffers.
+/// Reusable per-worker buffers. The engine-specific query scratch is
+/// opaque and self-healing, so one `WorkerScratch` survives catalogue
+/// swaps, incremental mutations, and even backend changes.
 pub struct WorkerScratch {
-    query: QueryScratch,
+    query: SourceScratch,
     union: Vec<u32>,
     cand: Vec<Vec<u32>>,
     pos_of: Vec<u32>,
 }
 
 impl WorkerScratch {
-    /// Scratch sized for shards of at most `max_items` items.
+    /// Scratch with capacity hints for shards of `max_items` items
+    /// (buffers still grow on demand).
     pub fn new(max_items: usize) -> Self {
         WorkerScratch {
-            query: QueryScratch::new(max_items),
+            query: SourceScratch::new(),
             union: Vec::new(),
             cand: Vec::new(),
             pos_of: vec![u32::MAX; max_items],
@@ -62,7 +66,6 @@ pub fn process_batch(
     let n_local = shard.items();
     if scratch.pos_of.len() < n_local {
         scratch.pos_of.resize(n_local, u32::MAX);
-        scratch.query = QueryScratch::new(n_local);
     }
     // 1. prune per request
     scratch.cand.resize_with(b, Vec::new);
@@ -72,7 +75,7 @@ pub fn process_batch(
         let _ = head;
         let out = &mut tail[0];
         shard
-            .retriever
+            .engine
             .candidates_into_unordered(users.row(r), &mut scratch.query, out)?;
         scratch.union.extend_from_slice(out);
     }
@@ -83,16 +86,13 @@ pub fn process_batch(
     // catalogue (1 - (1-s)^B → 1), so the union GEMM degenerates to
     // brute force; direct dots do exactly Σ c_i · k flops instead.
     if !scorer.prefers_union_batching() {
-        let items = shard.retriever.item_factors();
         let mut per_request = Vec::with_capacity(b);
         for r in 0..b {
             let user = users.row(r);
             let mut heap = TopK::new(kappa);
             for &c in &scratch.cand[r] {
-                heap.push(
-                    shard.base_id + c,
-                    crate::linalg::ops::dot(user, items.row(c as usize)),
-                );
+                let f = shard.engine.factor(c).expect("candidate ids are live");
+                heap.push(shard.base_id + c, crate::linalg::ops::dot(user, f));
             }
             per_request.push(heap.into_sorted());
         }
@@ -110,20 +110,21 @@ pub fn process_batch(
         });
     }
 
-    // 3. one batched scoring call. When the union saturates the shard
-    // (common at realistic batch sizes: coverage is 1-(1-s)^B), scoring
-    // the *full* item tile skips both the row gather and the pos_of
+    // 3. one batched scoring call. When the engine exposes a dense
+    // id-aligned factor matrix and the union saturates the shard (common
+    // at realistic batch sizes: coverage is 1-(1-s)^B), scoring the
+    // *full* item tile skips both the row gather and the pos_of
     // indirection — columns are local ids directly. Otherwise gather the
     // union rows into a compact tile.
-    let full_tile = union.len() * 2 >= n_local;
+    let dense = shard.engine.dense_factors();
+    let full_tile = dense.is_some() && union.len() * 2 >= n_local;
     let scores = if full_tile {
-        scorer.score(users, shard.retriever.item_factors())?
+        scorer.score(users, dense.unwrap())?
     } else {
         for (pos, &id) in union.iter().enumerate() {
             scratch.pos_of[id as usize] = pos as u32;
         }
-        let ids: Vec<usize> = union.iter().map(|&i| i as usize).collect();
-        let tile = shard.retriever.item_factors().gather_rows(&ids);
+        let tile = shard.engine.gather(union);
         scorer.score(users, &tile)?
     };
 
@@ -155,8 +156,9 @@ pub fn process_batch(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::configx::SchemaConfig;
+    use crate::configx::{Backend, SchemaConfig};
     use crate::coordinator::state::FactorStore;
+    use crate::engine::Engine;
     use crate::linalg::ops::dot;
     use crate::rng::Rng;
     use crate::runtime::CpuScorer;
@@ -164,7 +166,10 @@ mod tests {
     fn shard_fixture(n: usize, k: usize, seed: u64) -> FactorStore {
         let mut rng = Rng::seeded(seed);
         let items = Matrix::gaussian(&mut rng, n, k, 1.0);
-        FactorStore::build(SchemaConfig::TernaryParseTree, 0.0, items, 1).unwrap()
+        let spec = Engine::builder()
+            .schema(SchemaConfig::TernaryParseTree)
+            .threshold(0.0);
+        FactorStore::build(spec, items, 1).unwrap()
     }
 
     #[test]
@@ -179,7 +184,7 @@ mod tests {
             process_batch(shard, &users, 5, &CpuScorer, &mut scratch).unwrap();
         assert_eq!(partial.per_request.len(), 6);
         for r in 0..6 {
-            let single = shard.retriever.top_k(users.row(r), 5).unwrap();
+            let single = shard.engine.top_k(users.row(r), 5).unwrap();
             let batch = &partial.per_request[r];
             assert_eq!(batch.len(), single.len(), "request {r}");
             for (bres, sres) in batch.iter().zip(&single) {
@@ -188,7 +193,7 @@ mod tests {
             }
             assert_eq!(
                 partial.candidates[r],
-                shard.retriever.candidates(users.row(r)).unwrap().len()
+                shard.engine.candidates(users.row(r)).unwrap().len()
             );
         }
     }
@@ -205,9 +210,9 @@ mod tests {
             process_batch(shard, &users, 4, &CpuScorer, &mut scratch).unwrap();
         for r in 0..3 {
             for s in &partial.per_request[r] {
-                let local = (s.id - shard.base_id) as usize;
+                let local = s.id - shard.base_id;
                 let exact =
-                    dot(users.row(r), shard.retriever.item_factors().row(local));
+                    dot(users.row(r), shard.engine.factor(local).unwrap());
                 assert!((s.score - exact).abs() < 1e-5);
             }
         }
@@ -249,5 +254,63 @@ mod tests {
             process_batch(shard, &users, 3, &CpuScorer, &mut scratch).unwrap();
         assert!(partial.per_request.iter().all(Vec::is_empty));
         assert_eq!(partial.candidates, vec![0, 0]);
+    }
+
+    #[test]
+    fn baseline_backends_serve_through_the_worker() {
+        let mut rng = Rng::seeded(8);
+        let items = Matrix::gaussian(&mut rng, 200, 8, 1.0);
+        let users = Matrix::gaussian(&mut rng, 4, 8, 1.0);
+        for backend in [
+            Backend::Srp { bits: 3, tables: 2 },
+            Backend::Superbit { bits: 3, depth: 3, tables: 2 },
+            Backend::Cros { m: 12, l: 1, tables: 2 },
+            Backend::PcaTree { leaf_frac: 0.25 },
+            Backend::Brute,
+        ] {
+            let spec = Engine::builder().backend(backend);
+            let store = FactorStore::build(spec, items.clone(), 1).unwrap();
+            let snap = store.snapshot();
+            let shard = &snap.shards[0];
+            let mut scratch = WorkerScratch::new(shard.items());
+            let partial =
+                process_batch(shard, &users, 5, &CpuScorer, &mut scratch)
+                    .unwrap();
+            for r in 0..4 {
+                let single = shard.engine.top_k(users.row(r), 5).unwrap();
+                let got: Vec<u32> =
+                    partial.per_request[r].iter().map(|s| s.id).collect();
+                let want: Vec<u32> = single.iter().map(|s| s.id).collect();
+                assert_eq!(got, want, "{:?} request {r}", backend);
+            }
+        }
+    }
+
+    #[test]
+    fn mutated_shard_serves_through_the_worker() {
+        // tombstones + delta rows flow through the batched path: removed
+        // ids never appear, upserted ids score with their new factor.
+        let store = shard_fixture(120, 8, 9);
+        store.remove(7).unwrap();
+        let f = [0.25f32; 8];
+        store.upsert(11, &f).unwrap();
+        store.upsert(120, &f).unwrap(); // append
+        let snap = store.snapshot();
+        let shard = &snap.shards[0];
+        let mut rng = Rng::seeded(10);
+        let users = Matrix::gaussian(&mut rng, 5, 8, 1.0);
+        let mut scratch = WorkerScratch::new(shard.items());
+        let partial =
+            process_batch(shard, &users, 121, &CpuScorer, &mut scratch).unwrap();
+        for r in 0..5 {
+            for s in &partial.per_request[r] {
+                assert_ne!(s.id, 7, "removed id served");
+                let exact = dot(
+                    users.row(r),
+                    shard.engine.factor(s.id - shard.base_id).unwrap(),
+                );
+                assert!((s.score - exact).abs() < 1e-5);
+            }
+        }
     }
 }

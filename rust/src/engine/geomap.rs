@@ -1,0 +1,579 @@
+//! Mutable geomap candidate source: an immutable CSR base index plus a
+//! small delta segment and tombstone set, with a threshold-triggered
+//! merge — the segment/merge idiom of inverted-index serving systems.
+//!
+//! * **Base** — the bulk of the catalogue, mapped through φ and held in
+//!   the contiguous-arena [`InvertedIndex`]. Never mutated in place.
+//! * **Delta** — recent upserts: raw factors plus per-dimension posting
+//!   lists in growable form. Queried alongside the base.
+//! * **Tombstones** — one flag per base row; marks removed items and
+//!   base copies superseded by an upsert. Dead rows are filtered from
+//!   every query result.
+//! * **Merge** — once `pending() >= MutationConfig::max_delta`, the live
+//!   items are re-mapped into a fresh base and the delta/tombstones
+//!   reset. Ids are preserved across merges, so retrieval results (ids
+//!   *and* exact scores) are identical before and after.
+//!
+//! Item ids are stable handles: the base keeps an id ↔ row mapping, so a
+//! removal leaves a hole in the id space instead of shifting later ids.
+
+use super::{CandidateSource, MutableCatalogue, SourceScratch, SourceStats};
+use crate::configx::MutationConfig;
+use crate::embedding::Mapper;
+use crate::error::{GeomapError, Result};
+use crate::index::{InvertedIndex, QueryScratch};
+use crate::linalg::Matrix;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// Immutable merged segment, shared across copy-on-write clones.
+struct BaseSegment {
+    index: InvertedIndex,
+    /// Dense factors, row order (row `r` holds item `ids[r]`).
+    items: Matrix,
+    /// Row → global id (strictly increasing).
+    ids: Vec<u32>,
+    /// Global id → row, `u32::MAX` for ids with no base row.
+    row_of: Vec<u32>,
+    /// True when `ids[r] == r` for every row (no holes): enables the
+    /// dense-factor fast path.
+    identity: bool,
+}
+
+/// Growable segment of recent upserts.
+#[derive(Clone)]
+struct DeltaSegment {
+    k: usize,
+    /// Flattened factors: delta row `r` lives at `[r*k, (r+1)*k)`.
+    factors: Vec<f32>,
+    /// Delta row → global id.
+    ids: Vec<u32>,
+    /// Delta row liveness (an id upserted twice leaves a dead first row).
+    alive: Vec<bool>,
+    /// Embedding dimension → delta rows whose φ support contains it.
+    postings: HashMap<u32, Vec<u32>>,
+    /// Live global id → delta row.
+    row_of: HashMap<u32, u32>,
+    /// Total φ support size across delta rows (memory accounting).
+    nnz: usize,
+}
+
+impl DeltaSegment {
+    fn new(k: usize) -> Self {
+        DeltaSegment {
+            k,
+            factors: Vec::new(),
+            ids: Vec::new(),
+            alive: Vec::new(),
+            postings: HashMap::new(),
+            row_of: HashMap::new(),
+            nnz: 0,
+        }
+    }
+
+    fn row(&self, dr: u32) -> &[f32] {
+        let r = dr as usize;
+        &self.factors[r * self.k..(r + 1) * self.k]
+    }
+}
+
+/// Per-query scratch: base-index counters plus delta overlap counters.
+struct GeomapScratch {
+    query: QueryScratch,
+    delta_counts: Vec<u16>,
+    delta_touched: Vec<u32>,
+}
+
+/// The geomap [`CandidateSource`]: inverted-index pruning with
+/// incremental catalogue mutation (see module docs).
+#[derive(Clone)]
+pub struct GeomapEngine {
+    mapper: Arc<Mapper>,
+    base: Arc<BaseSegment>,
+    /// Tombstones per base row (removed or superseded by an upsert).
+    base_dead: Vec<bool>,
+    dead_rows: usize,
+    delta: DeltaSegment,
+    live: usize,
+    /// Address space: every id ever assigned is `< addr`.
+    addr: usize,
+    min_overlap: usize,
+    mutation: MutationConfig,
+}
+
+impl GeomapEngine {
+    /// Map `items` with `mapper`, build the base index, take ownership.
+    /// Row `r` of `items` becomes item id `r`.
+    pub fn build(
+        mapper: Mapper,
+        items: Matrix,
+        min_overlap: usize,
+        mutation: MutationConfig,
+    ) -> Result<GeomapEngine> {
+        let n = items.rows();
+        let k = mapper.k();
+        let index = InvertedIndex::build(&mapper, &items)?;
+        let base = Arc::new(BaseSegment {
+            index,
+            items,
+            ids: (0..n as u32).collect(),
+            row_of: (0..n as u32).collect(),
+            identity: true,
+        });
+        Ok(GeomapEngine {
+            mapper: Arc::new(mapper),
+            base,
+            base_dead: vec![false; n],
+            dead_rows: 0,
+            delta: DeltaSegment::new(k),
+            live: n,
+            addr: n,
+            min_overlap: min_overlap.max(1),
+            mutation,
+        })
+    }
+
+    /// Minimum support overlap for a candidate.
+    pub fn min_overlap(&self) -> usize {
+        self.min_overlap
+    }
+
+    /// The base inverted index (pre-delta; diagnostics only).
+    pub fn index(&self) -> &InvertedIndex {
+        &self.base.index
+    }
+
+    /// Tombstone any live copy of `id`; returns whether one existed.
+    fn kill(&mut self, id: u32) -> bool {
+        if let Some(dr) = self.delta.row_of.remove(&id) {
+            self.delta.alive[dr as usize] = false;
+            return true;
+        }
+        if let Some(&row) = self.base.row_of.get(id as usize) {
+            if row != u32::MAX && !self.base_dead[row as usize] {
+                self.base_dead[row as usize] = true;
+                self.dead_rows += 1;
+                return true;
+            }
+        }
+        false
+    }
+
+    fn maybe_merge(&mut self) -> Result<()> {
+        let max = self.mutation.max_delta;
+        if max > 0 && self.delta.ids.len() + self.dead_rows >= max {
+            MutableCatalogue::merge(self)?;
+        }
+        Ok(())
+    }
+}
+
+impl MutableCatalogue for GeomapEngine {
+    fn upsert(&mut self, id: u32, factor: &[f32]) -> Result<()> {
+        let k = self.mapper.k();
+        if factor.len() != k {
+            return Err(GeomapError::Shape(format!(
+                "factor dim {} != k {k}",
+                factor.len()
+            )));
+        }
+        if (id as usize) > self.addr {
+            return Err(GeomapError::Config(format!(
+                "upsert id {id} beyond catalogue edge {} (ids append \
+                 contiguously)",
+                self.addr
+            )));
+        }
+        // map first so an error leaves the catalogue untouched
+        let phi = self.mapper.map(factor)?;
+        let was_live = self.kill(id);
+        let dr = self.delta.ids.len() as u32;
+        self.delta.factors.extend_from_slice(factor);
+        self.delta.ids.push(id);
+        self.delta.alive.push(true);
+        self.delta.row_of.insert(id, dr);
+        for &dim in phi.indices() {
+            self.delta.postings.entry(dim).or_default().push(dr);
+        }
+        self.delta.nnz += phi.nnz();
+        if (id as usize) == self.addr {
+            self.addr += 1;
+        }
+        if !was_live {
+            self.live += 1;
+        }
+        self.maybe_merge()
+    }
+
+    fn remove(&mut self, id: u32) -> Result<bool> {
+        let was_live = self.kill(id);
+        if was_live {
+            self.live -= 1;
+            self.maybe_merge()?;
+        }
+        Ok(was_live)
+    }
+
+    fn pending(&self) -> usize {
+        self.delta.ids.len() + self.dead_rows
+    }
+
+    fn merge(&mut self) -> Result<()> {
+        if self.delta.ids.is_empty() && self.dead_rows == 0 {
+            return Ok(());
+        }
+        let k = self.mapper.k();
+        // live (id, factor) pairs in id order — ids stay stable
+        let mut rows: Vec<(u32, &[f32])> = Vec::with_capacity(self.live);
+        for (r, &id) in self.base.ids.iter().enumerate() {
+            if !self.base_dead[r] {
+                rows.push((id, self.base.items.row(r)));
+            }
+        }
+        for (dr, &id) in self.delta.ids.iter().enumerate() {
+            if self.delta.alive[dr] {
+                rows.push((id, self.delta.row(dr as u32)));
+            }
+        }
+        rows.sort_unstable_by_key(|&(id, _)| id);
+        let mut items = Matrix::zeros(rows.len(), k);
+        let mut ids = Vec::with_capacity(rows.len());
+        for (r, &(id, f)) in rows.iter().enumerate() {
+            items.row_mut(r).copy_from_slice(f);
+            ids.push(id);
+        }
+        drop(rows);
+        let mut row_of = vec![u32::MAX; self.addr];
+        for (r, &id) in ids.iter().enumerate() {
+            row_of[id as usize] = r as u32;
+        }
+        // sorted unique ids < addr fill the space exactly iff no holes
+        let identity = ids.len() == self.addr;
+        let index = InvertedIndex::build(&self.mapper, &items)?;
+        let n = ids.len();
+        self.base = Arc::new(BaseSegment { index, items, ids, row_of, identity });
+        self.base_dead = vec![false; n];
+        self.dead_rows = 0;
+        self.delta = DeltaSegment::new(k);
+        Ok(())
+    }
+}
+
+impl CandidateSource for GeomapEngine {
+    fn label(&self) -> String {
+        format!("geomap({})", self.mapper.name())
+    }
+
+    fn len(&self) -> usize {
+        self.addr
+    }
+
+    fn dim(&self) -> usize {
+        self.mapper.k()
+    }
+
+    fn candidates_into(
+        &self,
+        user: &[f32],
+        scratch: &mut SourceScratch,
+        out: &mut Vec<u32>,
+    ) -> Result<()> {
+        self.candidates_into_unordered(user, scratch, out)?;
+        out.sort_unstable();
+        Ok(())
+    }
+
+    fn candidates_into_unordered(
+        &self,
+        user: &[f32],
+        scratch: &mut SourceScratch,
+        out: &mut Vec<u32>,
+    ) -> Result<()> {
+        let phi = self.mapper.map(user)?;
+        let base_items = self.base.index.items();
+        let s = scratch.get_or_insert_with(|| GeomapScratch {
+            query: QueryScratch::new(base_items),
+            delta_counts: Vec::new(),
+            delta_touched: Vec::with_capacity(64),
+        });
+        // base segment (rows → global ids, tombstones dropped in place)
+        self.base
+            .index
+            .query_into_unordered(&phi, self.min_overlap, &mut s.query, out);
+        let mut w = 0;
+        for i in 0..out.len() {
+            let row = out[i] as usize;
+            if !self.base_dead[row] {
+                out[w] = self.base.ids[row];
+                w += 1;
+            }
+        }
+        out.truncate(w);
+        // delta segment
+        if !self.delta.ids.is_empty() {
+            if s.delta_counts.len() < self.delta.ids.len() {
+                s.delta_counts.resize(self.delta.ids.len(), 0);
+            }
+            s.delta_touched.clear();
+            let min = self.min_overlap.min(u16::MAX as usize) as u16;
+            for &dim in phi.indices() {
+                if let Some(drs) = self.delta.postings.get(&dim) {
+                    for &dr in drs {
+                        let c = &mut s.delta_counts[dr as usize];
+                        if *c == 0 {
+                            s.delta_touched.push(dr);
+                        }
+                        *c += 1;
+                    }
+                }
+            }
+            for &dr in &s.delta_touched {
+                if s.delta_counts[dr as usize] >= min
+                    && self.delta.alive[dr as usize]
+                {
+                    out.push(self.delta.ids[dr as usize]);
+                }
+                s.delta_counts[dr as usize] = 0;
+            }
+        }
+        Ok(())
+    }
+
+    fn factor(&self, id: u32) -> Option<&[f32]> {
+        if let Some(&dr) = self.delta.row_of.get(&id) {
+            return Some(self.delta.row(dr));
+        }
+        let row = *self.base.row_of.get(id as usize)?;
+        if row == u32::MAX || self.base_dead[row as usize] {
+            return None;
+        }
+        Some(self.base.items.row(row as usize))
+    }
+
+    fn dense_factors(&self) -> Option<&Matrix> {
+        if self.base.identity && self.delta.ids.is_empty() && self.dead_rows == 0
+        {
+            Some(&self.base.items)
+        } else {
+            None
+        }
+    }
+
+    fn memory_bytes(&self) -> usize {
+        let b = &self.base;
+        b.items.rows() * b.items.cols() * 4
+            + b.index.total_postings() * 4
+            + (b.index.dim() + 1) * 4
+            + b.ids.len() * 4
+            + b.row_of.len() * 4
+            + self.base_dead.len()
+            + self.delta.factors.len() * 4
+            + self.delta.nnz * 4
+            + self.delta.ids.len() * 9
+    }
+
+    fn stats(&self) -> SourceStats {
+        SourceStats {
+            label: self.label(),
+            len: self.addr,
+            live: self.live,
+            pending: self.delta.ids.len(),
+            tombstones: self.dead_rows,
+            memory_bytes: self.memory_bytes(),
+        }
+    }
+
+    fn is_mutable(&self) -> bool {
+        true
+    }
+
+    fn as_mutable(&mut self) -> Option<&mut dyn MutableCatalogue> {
+        Some(self)
+    }
+
+    fn clone_box(&self) -> Option<Box<dyn CandidateSource>> {
+        Some(Box::new(self.clone()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::configx::SchemaConfig;
+    use crate::linalg::ops::dot;
+    use crate::retrieval::Retriever;
+    use crate::rng::Rng;
+
+    fn mapper(k: usize) -> Mapper {
+        Mapper::from_config(SchemaConfig::TernaryParseTree, k, 0.0)
+    }
+
+    fn items(n: usize, k: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::seeded(seed);
+        Matrix::gaussian(&mut rng, n, k, 1.0)
+    }
+
+    fn engine(n: usize, k: usize, seed: u64, max_delta: usize) -> GeomapEngine {
+        GeomapEngine::build(
+            mapper(k),
+            items(n, k, seed),
+            1,
+            MutationConfig { max_delta },
+        )
+        .unwrap()
+    }
+
+    fn user(k: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::seeded(seed);
+        (0..k).map(|_| rng.gaussian_f32()).collect()
+    }
+
+    #[test]
+    fn fresh_engine_matches_retriever_candidates() {
+        let k = 8;
+        let its = items(200, k, 1);
+        let e = GeomapEngine::build(
+            mapper(k),
+            its.clone(),
+            1,
+            MutationConfig::default(),
+        )
+        .unwrap();
+        let r = Retriever::build(mapper(k), its).unwrap();
+        for s in 0..10u64 {
+            let u = user(k, 100 + s);
+            let mut scratch = SourceScratch::new();
+            let mut got = Vec::new();
+            e.candidates_into(&u, &mut scratch, &mut got).unwrap();
+            assert_eq!(got, r.candidates(&u).unwrap());
+        }
+    }
+
+    #[test]
+    fn upsert_is_retrievable_before_and_after_merge() {
+        let k = 8;
+        let mut e = engine(50, k, 2, 0); // manual merge only
+        let f = user(k, 3);
+        e.upsert(12, &f).unwrap(); // replace an existing item
+        e.upsert(50, &f).unwrap(); // append a new item
+        assert_eq!(e.len(), 51);
+        assert_eq!(e.stats().live, 51);
+        assert_eq!(e.pending(), 2 + 1); // 2 delta rows + 1 superseded base row
+        // both copies retrievable from the delta with the new factor
+        assert_eq!(e.factor(12).unwrap(), &f[..]);
+        assert_eq!(e.factor(50).unwrap(), &f[..]);
+        let u = user(k, 4);
+        let mut scratch = SourceScratch::new();
+        let mut cands = Vec::new();
+        e.candidates_into(&u, &mut scratch, &mut cands).unwrap();
+        let score_before: Vec<(u32, f32)> = cands
+            .iter()
+            .map(|&id| (id, dot(&u, e.factor(id).unwrap())))
+            .collect();
+        MutableCatalogue::merge(&mut e).unwrap();
+        assert_eq!(e.pending(), 0);
+        assert_eq!(e.factor(12).unwrap(), &f[..]);
+        let mut cands_after = Vec::new();
+        e.candidates_into(&u, &mut scratch, &mut cands_after).unwrap();
+        assert_eq!(cands, cands_after, "merge must not change candidates");
+        for (id, s) in score_before {
+            let after = dot(&u, e.factor(id).unwrap());
+            assert_eq!(s, after, "id {id}: score changed across merge");
+        }
+    }
+
+    #[test]
+    fn removed_id_never_returned() {
+        let k = 8;
+        let mut e = engine(80, k, 5, 0);
+        assert!(e.remove(17).unwrap());
+        assert!(!e.remove(17).unwrap(), "second remove is a no-op");
+        assert_eq!(e.factor(17), None);
+        assert_eq!(e.stats().live, 79);
+        let mut scratch = SourceScratch::new();
+        let mut out = Vec::new();
+        for s in 0..20u64 {
+            let u = user(k, 200 + s);
+            e.candidates_into(&u, &mut scratch, &mut out).unwrap();
+            assert!(!out.contains(&17), "tombstoned id resurfaced");
+        }
+        MutableCatalogue::merge(&mut e).unwrap();
+        assert_eq!(e.factor(17), None);
+        for s in 0..20u64 {
+            let u = user(k, 200 + s);
+            e.candidates_into(&u, &mut scratch, &mut out).unwrap();
+            assert!(!out.contains(&17), "removed id returned after merge");
+        }
+        // a later upsert revives the id with a new factor
+        let f = user(k, 9);
+        e.upsert(17, &f).unwrap();
+        assert_eq!(e.factor(17).unwrap(), &f[..]);
+        assert_eq!(e.stats().live, 80);
+    }
+
+    #[test]
+    fn threshold_triggers_automatic_merge() {
+        let k = 8;
+        let mut e = engine(40, k, 6, 4);
+        for i in 0..3 {
+            e.upsert(40 + i, &user(k, 300 + i as u64)).unwrap();
+            assert_eq!(e.pending(), i as usize + 1);
+        }
+        // fourth pending mutation crosses max_delta = 4 and merges
+        e.upsert(43, &user(k, 303)).unwrap();
+        assert_eq!(e.pending(), 0, "merge should have fired");
+        assert_eq!(e.len(), 44);
+        assert!(e.dense_factors().is_some(), "no holes → identity base");
+    }
+
+    #[test]
+    fn dense_factors_gate() {
+        let k = 8;
+        let mut e = engine(30, k, 7, 0);
+        assert!(e.dense_factors().is_some());
+        e.remove(3).unwrap();
+        assert!(e.dense_factors().is_none(), "tombstone blocks fast path");
+        MutableCatalogue::merge(&mut e).unwrap();
+        assert!(
+            e.dense_factors().is_none(),
+            "hole at id 3 keeps ids ≠ rows after merge"
+        );
+        // refilling the hole restores identity after the next merge
+        e.upsert(3, &user(k, 8)).unwrap();
+        MutableCatalogue::merge(&mut e).unwrap();
+        assert!(e.dense_factors().is_some());
+    }
+
+    #[test]
+    fn upsert_beyond_edge_rejected() {
+        let k = 4;
+        let mut e = engine(10, k, 9, 0);
+        assert!(e.upsert(11, &[0.0; 4]).is_err());
+        assert!(e.upsert(10, &[0.0; 3]).is_err(), "wrong factor dim");
+        // state unchanged by the failures
+        assert_eq!(e.len(), 10);
+        assert_eq!(e.pending(), 0);
+    }
+
+    #[test]
+    fn double_upsert_keeps_single_live_copy() {
+        let k = 8;
+        let mut e = engine(20, k, 11, 0);
+        let f1 = user(k, 12);
+        let f2 = user(k, 13);
+        e.upsert(5, &f1).unwrap();
+        e.upsert(5, &f2).unwrap();
+        assert_eq!(e.factor(5).unwrap(), &f2[..]);
+        assert_eq!(e.stats().live, 20);
+        let mut scratch = SourceScratch::new();
+        let mut out = Vec::new();
+        for s in 0..10u64 {
+            e.candidates_into(&user(k, 400 + s), &mut scratch, &mut out)
+                .unwrap();
+            assert!(
+                out.iter().filter(|&&id| id == 5).count() <= 1,
+                "id 5 must appear at most once"
+            );
+        }
+    }
+}

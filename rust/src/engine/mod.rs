@@ -1,0 +1,609 @@
+//! Unified retrieval engine: one backend-agnostic candidate-source API.
+//!
+//! Historically the geomap path (`Retriever`) and the §5.1/§6 baselines
+//! (`CandidateFilter`) lived behind two incompatible call surfaces, so the
+//! serving stack could only ever serve the geomap backend. This module is
+//! the single public retrieval API that unifies them:
+//!
+//! * [`CandidateSource`] — the pruning contract: allocation-lean
+//!   `candidates_into` with per-engine opaque scratch ([`SourceScratch`]),
+//!   factor access for exact rescoring, and memory/stats reporting.
+//!   Implemented by the geomap index (mutable, [`GeomapEngine`]), by the
+//!   immutable [`Retriever`](crate::retrieval::Retriever), and by every
+//!   baseline through [`FilterSource`].
+//! * [`Engine`] — the facade owning prune → exact-rescore → top-κ,
+//!   constructed with a builder:
+//!
+//!   ```no_run
+//!   use geomap::configx::{Backend, SchemaConfig};
+//!   use geomap::engine::Engine;
+//!   use geomap::linalg::Matrix;
+//!   # let items = Matrix::zeros(10, 8);
+//!   let engine = Engine::builder()
+//!       .schema(SchemaConfig::TernaryParseTree)
+//!       .backend(Backend::Geomap)
+//!       .threshold(1.3)
+//!       .build(items)
+//!       .unwrap();
+//!   let top = engine.top_k(&[0.0; 8], 10).unwrap();
+//!   # let _ = top;
+//!   ```
+//!
+//! * [`MutableCatalogue`] — incremental mutation (`upsert` / `remove`)
+//!   realised for the geomap backend as a delta segment plus tombstone
+//!   set over the immutable CSR inverted index, with a threshold-triggered
+//!   merge that rebuilds the base off the read path. See `docs/ENGINE.md`
+//!   for the contracts and the old-API migration table.
+
+mod geomap;
+mod sources;
+
+pub use self::geomap::GeomapEngine;
+pub use self::sources::FilterSource;
+
+use crate::configx::{Backend, MutationConfig, SchemaConfig};
+use crate::error::{GeomapError, Result};
+use crate::linalg::ops::dot;
+use crate::linalg::Matrix;
+use crate::retrieval::{Scored, TopK};
+use std::any::Any;
+
+/// Opaque per-engine query scratch.
+///
+/// Each [`CandidateSource`] stores whatever reusable buffers it needs
+/// behind this type-erased wrapper; callers only keep one scratch per
+/// worker and pass it to every query. A scratch is lazily (re)initialised
+/// by the source itself, so it survives backend swaps and catalogue
+/// growth: a stale or foreign scratch is simply replaced on first use.
+#[derive(Default)]
+pub struct SourceScratch(Option<Box<dyn Any + Send>>);
+
+impl SourceScratch {
+    /// An empty scratch; the first query initialises it.
+    pub fn new() -> Self {
+        SourceScratch(None)
+    }
+
+    /// Downcast to the engine's concrete scratch type, (re)initialising
+    /// with `init` when empty or when a different engine type used it
+    /// last.
+    pub fn get_or_insert_with<T: Any + Send>(
+        &mut self,
+        init: impl FnOnce() -> T,
+    ) -> &mut T {
+        let stale = match &self.0 {
+            Some(b) => !b.is::<T>(),
+            None => true,
+        };
+        if stale {
+            self.0 = Some(Box::new(init()));
+        }
+        self.0.as_mut().unwrap().downcast_mut::<T>().unwrap()
+    }
+}
+
+/// Summary statistics of a candidate source.
+#[derive(Clone, Debug)]
+pub struct SourceStats {
+    /// Source label (backend + parameters).
+    pub label: String,
+    /// Addressable id space: every candidate id is `< len`.
+    pub len: usize,
+    /// Retrievable (live) items; `len` minus removed ids.
+    pub live: usize,
+    /// Delta rows awaiting a merge (0 for immutable backends).
+    pub pending: usize,
+    /// Tombstoned base entries awaiting a merge.
+    pub tombstones: usize,
+    /// Approximate resident bytes (index structures + owned factors).
+    pub memory_bytes: usize,
+}
+
+/// A pruning method that maps a user factor to the candidate item ids
+/// worth rescoring exactly — the backend-agnostic retrieval contract.
+///
+/// Ids are stable: an id keeps addressing the same logical item across
+/// upserts and merges, and a removed id is never returned. Every id a
+/// source returns must be live, i.e. `factor(id)` is `Some`.
+pub trait CandidateSource: Send + Sync {
+    /// Source label for reports, e.g. `geomap(ternary+parse-tree)`.
+    fn label(&self) -> String;
+
+    /// Addressable id space (candidate ids are `< len`). This counts
+    /// removed-but-unmerged ids too; see [`SourceStats::live`].
+    fn len(&self) -> usize;
+
+    /// True when no item is addressable.
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Factor dimensionality k.
+    fn dim(&self) -> usize;
+
+    /// Candidate ids (sorted, unique, live) for a user factor.
+    /// Allocation-lean: buffers persist in `scratch` and `out`.
+    fn candidates_into(
+        &self,
+        user: &[f32],
+        scratch: &mut SourceScratch,
+        out: &mut Vec<u32>,
+    ) -> Result<()>;
+
+    /// [`candidates_into`](Self::candidates_into) without the sorted
+    /// guarantee (ids are still unique and live). Sources with a cheaper
+    /// unsorted traversal override this; batch callers that union and
+    /// re-sort anyway should prefer it.
+    fn candidates_into_unordered(
+        &self,
+        user: &[f32],
+        scratch: &mut SourceScratch,
+        out: &mut Vec<u32>,
+    ) -> Result<()> {
+        self.candidates_into(user, scratch, out)
+    }
+
+    /// Dense factor of a live id; `None` for removed or out-of-range ids.
+    fn factor(&self, id: u32) -> Option<&[f32]>;
+
+    /// The full factor matrix when ids map 1:1 onto rows (no holes, no
+    /// delta) — enables the worker's full-tile GEMM fast path.
+    fn dense_factors(&self) -> Option<&Matrix> {
+        None
+    }
+
+    /// Approximate resident bytes.
+    fn memory_bytes(&self) -> usize;
+
+    /// Stats for reports.
+    fn stats(&self) -> SourceStats {
+        SourceStats {
+            label: self.label(),
+            len: self.len(),
+            live: self.len(),
+            pending: 0,
+            tombstones: 0,
+            memory_bytes: self.memory_bytes(),
+        }
+    }
+
+    /// Whether [`as_mutable`](Self::as_mutable) returns a catalogue.
+    fn is_mutable(&self) -> bool {
+        false
+    }
+
+    /// Incremental-mutation capability, when the backend has one.
+    fn as_mutable(&mut self) -> Option<&mut dyn MutableCatalogue> {
+        None
+    }
+
+    /// Cheap structural clone for copy-on-write catalogues (the factor
+    /// store clones a shard's source, mutates the copy, then swaps it
+    /// in). `None` when the backend does not support it.
+    fn clone_box(&self) -> Option<Box<dyn CandidateSource>> {
+        None
+    }
+}
+
+/// Incremental catalogue mutation: point upserts and removals without a
+/// full index rebuild.
+///
+/// The geomap realisation keeps the bulk of the catalogue in an immutable
+/// CSR inverted index (the *base*) and routes mutations into a small
+/// *delta* segment plus a tombstone set; once pending work crosses the
+/// configured threshold the delta is merged into a fresh base. Retrieval
+/// results are identical before and after a merge.
+pub trait MutableCatalogue {
+    /// Insert or replace the item at `id`. `id == len()` appends a new
+    /// item; `id > len()` is rejected (ids stay contiguous at the edge).
+    fn upsert(&mut self, id: u32, factor: &[f32]) -> Result<()>;
+
+    /// Remove an item. Returns whether it was live. The id is never
+    /// returned by queries again (until a future upsert revives it).
+    fn remove(&mut self, id: u32) -> Result<bool>;
+
+    /// Pending mutations (delta rows + tombstones) awaiting a merge.
+    fn pending(&self) -> usize;
+
+    /// Merge the delta segment into a fresh immutable base now.
+    fn merge(&mut self) -> Result<()>;
+}
+
+/// Builder-style construction of an [`Engine`]; see [`Engine::builder`].
+#[derive(Clone, Copy, Debug)]
+pub struct EngineBuilder {
+    schema: SchemaConfig,
+    threshold: f32,
+    backend: Backend,
+    min_overlap: usize,
+    seed: u64,
+    mutation: MutationConfig,
+}
+
+impl Default for EngineBuilder {
+    fn default() -> Self {
+        EngineBuilder {
+            schema: SchemaConfig::TernaryParseTree,
+            threshold: 0.0,
+            backend: Backend::Geomap,
+            min_overlap: 1,
+            seed: 0xE0A1,
+            mutation: MutationConfig::default(),
+        }
+    }
+}
+
+impl EngineBuilder {
+    /// Sparse-mapping schema (geomap backend).
+    pub fn schema(mut self, schema: SchemaConfig) -> Self {
+        self.schema = schema;
+        self
+    }
+
+    /// Relative pre-mapping threshold in RMS units (geomap backend).
+    pub fn threshold(mut self, threshold: f32) -> Self {
+        self.threshold = threshold;
+        self
+    }
+
+    /// Candidate-pruning backend.
+    pub fn backend(mut self, backend: Backend) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    /// Minimum support overlap for a geomap candidate (paper uses 1).
+    pub fn min_overlap(mut self, min_overlap: usize) -> Self {
+        self.min_overlap = min_overlap.max(1);
+        self
+    }
+
+    /// RNG seed for the randomised baselines.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Incremental-mutation policy (geomap backend).
+    pub fn mutation(mut self, mutation: MutationConfig) -> Self {
+        self.mutation = mutation;
+        self
+    }
+
+    /// Build the engine over an item-factor catalogue (row = item id).
+    pub fn build(self, items: Matrix) -> Result<Engine> {
+        use crate::baselines::{
+            BruteForce, ConcomitantLsh, PcaTree, SrpLsh, SuperbitLsh,
+        };
+        use crate::embedding::Mapper;
+        use crate::rng::Rng;
+
+        let k = items.cols();
+        let source: Box<dyn CandidateSource> = match self.backend {
+            Backend::Geomap => Box::new(GeomapEngine::build(
+                Mapper::from_config(self.schema, k, self.threshold),
+                items,
+                self.min_overlap,
+                self.mutation,
+            )?),
+            Backend::Srp { bits, tables } => {
+                let mut rng = Rng::seeded(self.seed);
+                let filter = SrpLsh::build(&items, bits, tables, &mut rng);
+                Box::new(FilterSource::new(Box::new(filter), items))
+            }
+            Backend::Superbit { bits, depth, tables } => {
+                let mut rng = Rng::seeded(self.seed);
+                let filter =
+                    SuperbitLsh::build(&items, bits, depth, tables, &mut rng);
+                Box::new(FilterSource::new(Box::new(filter), items))
+            }
+            Backend::Cros { m, l, tables } => {
+                let mut rng = Rng::seeded(self.seed);
+                let filter = ConcomitantLsh::build(&items, m, l, tables, &mut rng);
+                Box::new(FilterSource::new(Box::new(filter), items))
+            }
+            Backend::PcaTree { leaf_frac } => {
+                if !(leaf_frac > 0.0 && leaf_frac <= 1.0) {
+                    return Err(GeomapError::Config(
+                        "pca-tree leaf fraction must be in (0, 1]".into(),
+                    ));
+                }
+                let max_leaf = ((items.rows() as f64 * leaf_frac).ceil()
+                    as usize)
+                    .max(1);
+                let mut rng = Rng::seeded(self.seed);
+                let filter = PcaTree::build(&items, max_leaf, &mut rng);
+                Box::new(FilterSource::new(Box::new(filter), items))
+            }
+            Backend::Brute => {
+                let filter = BruteForce::new(items.rows());
+                Box::new(FilterSource::new(Box::new(filter), items))
+            }
+        };
+        Ok(Engine { source, backend: self.backend })
+    }
+}
+
+/// The unified retrieval facade: prune through any [`CandidateSource`],
+/// rescore survivors exactly, return the top-κ.
+pub struct Engine {
+    source: Box<dyn CandidateSource>,
+    backend: Backend,
+}
+
+impl Engine {
+    /// Start building an engine (geomap backend, paper defaults).
+    pub fn builder() -> EngineBuilder {
+        EngineBuilder::default()
+    }
+
+    /// The configured backend.
+    pub fn backend(&self) -> Backend {
+        self.backend
+    }
+
+    /// Source label for reports.
+    pub fn label(&self) -> String {
+        self.source.label()
+    }
+
+    /// Addressable id space (candidate ids are `< len`).
+    pub fn len(&self) -> usize {
+        self.source.len()
+    }
+
+    /// True when no item is addressable.
+    pub fn is_empty(&self) -> bool {
+        self.source.is_empty()
+    }
+
+    /// Factor dimensionality k.
+    pub fn dim(&self) -> usize {
+        self.source.dim()
+    }
+
+    /// Source statistics (live items, pending mutations, memory).
+    pub fn stats(&self) -> SourceStats {
+        self.source.stats()
+    }
+
+    /// Approximate resident bytes.
+    pub fn memory_bytes(&self) -> usize {
+        self.source.memory_bytes()
+    }
+
+    /// Candidate ids (sorted, unique, live) for a user factor.
+    pub fn candidates_into(
+        &self,
+        user: &[f32],
+        scratch: &mut SourceScratch,
+        out: &mut Vec<u32>,
+    ) -> Result<()> {
+        self.source.candidates_into(user, scratch, out)
+    }
+
+    /// Unsorted-variant of [`candidates_into`](Self::candidates_into)
+    /// for batch callers that union and re-sort anyway.
+    pub fn candidates_into_unordered(
+        &self,
+        user: &[f32],
+        scratch: &mut SourceScratch,
+        out: &mut Vec<u32>,
+    ) -> Result<()> {
+        self.source.candidates_into_unordered(user, scratch, out)
+    }
+
+    /// Allocating convenience wrapper around
+    /// [`candidates_into`](Self::candidates_into).
+    pub fn candidates(&self, user: &[f32]) -> Result<Vec<u32>> {
+        let mut scratch = SourceScratch::new();
+        let mut out = Vec::new();
+        self.candidates_into(user, &mut scratch, &mut out)?;
+        Ok(out)
+    }
+
+    /// Dense factor of a live id.
+    pub fn factor(&self, id: u32) -> Option<&[f32]> {
+        self.source.factor(id)
+    }
+
+    /// The full factor matrix when ids map 1:1 onto rows.
+    pub fn dense_factors(&self) -> Option<&Matrix> {
+        self.source.dense_factors()
+    }
+
+    /// Gather the factors of live `ids` into a dense tile (row order
+    /// follows `ids`). Panics on a dead id — callers pass candidate ids,
+    /// which are live by contract.
+    pub fn gather(&self, ids: &[u32]) -> Matrix {
+        let k = self.dim();
+        let mut tile = Matrix::zeros(ids.len(), k);
+        for (r, &id) in ids.iter().enumerate() {
+            let f = self.factor(id).expect("candidate ids are live");
+            tile.row_mut(r).copy_from_slice(f);
+        }
+        tile
+    }
+
+    /// Top-κ via prune + exact rescore, reusing caller buffers.
+    pub fn top_k_with(
+        &self,
+        user: &[f32],
+        kappa: usize,
+        scratch: &mut SourceScratch,
+        cand: &mut Vec<u32>,
+    ) -> Result<Vec<Scored>> {
+        self.candidates_into(user, scratch, cand)?;
+        let mut heap = TopK::new(kappa);
+        for &id in cand.iter() {
+            let f = self.factor(id).expect("candidate ids are live");
+            heap.push(id, dot(user, f));
+        }
+        Ok(heap.into_sorted())
+    }
+
+    /// Top-κ via prune + exact rescore (allocating convenience).
+    pub fn top_k(&self, user: &[f32], kappa: usize) -> Result<Vec<Scored>> {
+        let mut scratch = SourceScratch::new();
+        let mut cand = Vec::new();
+        self.top_k_with(user, kappa, &mut scratch, &mut cand)
+    }
+
+    /// Whether this backend supports incremental mutation.
+    pub fn supports_mutation(&self) -> bool {
+        self.source.is_mutable()
+    }
+
+    /// Pending mutations awaiting a merge (0 for immutable backends).
+    pub fn pending(&self) -> usize {
+        let s = self.source.stats();
+        s.pending + s.tombstones
+    }
+
+    fn mutable(&mut self) -> Result<&mut dyn MutableCatalogue> {
+        let backend = self.backend;
+        self.source.as_mutable().ok_or_else(|| {
+            GeomapError::Config(format!(
+                "backend '{}' does not support incremental mutation",
+                backend.name()
+            ))
+        })
+    }
+
+    /// Insert or replace the item at `id` (see [`MutableCatalogue`]).
+    pub fn upsert(&mut self, id: u32, factor: &[f32]) -> Result<()> {
+        self.mutable()?.upsert(id, factor)
+    }
+
+    /// Remove an item; returns whether it was live.
+    pub fn remove(&mut self, id: u32) -> Result<bool> {
+        self.mutable()?.remove(id)
+    }
+
+    /// Merge pending mutations into a fresh immutable base now.
+    pub fn merge(&mut self) -> Result<()> {
+        self.mutable()?.merge()
+    }
+
+    /// Cheap structural clone for copy-on-write mutation; `None` when the
+    /// backend does not support it.
+    pub fn try_clone(&self) -> Option<Engine> {
+        Some(Engine { source: self.source.clone_box()?, backend: self.backend })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn items(n: usize, k: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::seeded(seed);
+        Matrix::gaussian(&mut rng, n, k, 1.0)
+    }
+
+    #[test]
+    fn scratch_self_heals_across_types() {
+        let mut s = SourceScratch::new();
+        *s.get_or_insert_with(|| 1u32) = 7;
+        assert_eq!(*s.get_or_insert_with(|| 1u32), 7, "kept across calls");
+        // a different type evicts the old payload
+        assert_eq!(*s.get_or_insert_with(|| vec![9usize]), vec![9]);
+        // and going back re-initialises
+        assert_eq!(*s.get_or_insert_with(|| 1u32), 1);
+    }
+
+    #[test]
+    fn all_backends_build_and_prune() {
+        let its = items(120, 8, 1);
+        let mut rng = Rng::seeded(2);
+        let user: Vec<f32> = (0..8).map(|_| rng.gaussian_f32()).collect();
+        for backend in [
+            Backend::Geomap,
+            Backend::Srp { bits: 3, tables: 2 },
+            Backend::Superbit { bits: 3, depth: 3, tables: 2 },
+            Backend::Cros { m: 12, l: 1, tables: 2 },
+            Backend::PcaTree { leaf_frac: 0.25 },
+            Backend::Brute,
+        ] {
+            let engine = Engine::builder()
+                .backend(backend)
+                .threshold(0.5)
+                .build(its.clone())
+                .unwrap();
+            assert_eq!(engine.len(), 120, "{}", engine.label());
+            assert_eq!(engine.dim(), 8);
+            let cands = engine.candidates(&user).unwrap();
+            assert!(cands.windows(2).all(|w| w[0] < w[1]), "sorted unique");
+            assert!(cands.iter().all(|&c| (c as usize) < 120));
+            // every candidate is live, with the factor of its row
+            for &c in &cands {
+                assert_eq!(engine.factor(c).unwrap(), its.row(c as usize));
+            }
+            let top = engine.top_k(&user, 5).unwrap();
+            assert!(top.len() <= 5);
+            for w in top.windows(2) {
+                assert!(w[0].score >= w[1].score);
+            }
+            let stats = engine.stats();
+            assert_eq!(stats.len, 120);
+            assert_eq!(stats.live, 120);
+            assert_eq!(engine.backend(), backend);
+        }
+    }
+
+    #[test]
+    fn brute_backend_returns_everything() {
+        let engine = Engine::builder()
+            .backend(Backend::Brute)
+            .build(items(30, 4, 3))
+            .unwrap();
+        let cands = engine.candidates(&[1.0, 0.0, 0.0, 0.0]).unwrap();
+        assert_eq!(cands, (0..30u32).collect::<Vec<_>>());
+        assert_eq!(engine.label(), "brute-force");
+    }
+
+    #[test]
+    fn immutable_backends_reject_mutation() {
+        let mut engine = Engine::builder()
+            .backend(Backend::Srp { bits: 3, tables: 2 })
+            .build(items(20, 4, 4))
+            .unwrap();
+        assert!(!engine.supports_mutation());
+        assert!(engine.upsert(0, &[0.0; 4]).is_err());
+        assert!(engine.remove(0).is_err());
+        assert!(engine.merge().is_err());
+        assert!(engine.try_clone().is_none());
+        assert_eq!(engine.pending(), 0);
+    }
+
+    #[test]
+    fn gather_matches_factors() {
+        let its = items(15, 6, 5);
+        let engine =
+            Engine::builder().backend(Backend::Brute).build(its.clone()).unwrap();
+        let tile = engine.gather(&[3, 7, 11]);
+        assert_eq!(tile.rows(), 3);
+        assert_eq!(tile.row(0), its.row(3));
+        assert_eq!(tile.row(1), its.row(7));
+        assert_eq!(tile.row(2), its.row(11));
+    }
+
+    #[test]
+    fn top_k_with_reuses_buffers() {
+        let engine = Engine::builder().build(items(80, 8, 6)).unwrap();
+        let mut scratch = SourceScratch::new();
+        let mut cand = Vec::new();
+        let mut rng = Rng::seeded(7);
+        for _ in 0..4 {
+            let user: Vec<f32> = (0..8).map(|_| rng.gaussian_f32()).collect();
+            let a = engine.top_k_with(&user, 5, &mut scratch, &mut cand).unwrap();
+            let b = engine.top_k(&user, 5).unwrap();
+            assert_eq!(a.len(), b.len());
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.id, y.id);
+                assert_eq!(x.score, y.score);
+            }
+        }
+    }
+}

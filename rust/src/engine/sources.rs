@@ -1,0 +1,188 @@
+//! Immutable [`CandidateSource`] adapters: every baseline
+//! [`CandidateFilter`] plus the classic [`Retriever`].
+//!
+//! [`FilterSource`] pairs a pruning filter with the dense item factors it
+//! was built over, which is all the engine facade needs to rescore
+//! survivors exactly. These sources are append-only snapshots: they do
+//! not implement [`MutableCatalogue`](super::MutableCatalogue) — swap the
+//! whole engine to change their catalogue.
+
+use super::{CandidateSource, SourceScratch, SourceStats};
+use crate::baselines::{CandidateFilter, FilterScratch};
+use crate::error::Result;
+use crate::index::QueryScratch;
+use crate::linalg::Matrix;
+use crate::retrieval::Retriever;
+
+/// A baseline [`CandidateFilter`] plus the factors it prunes over.
+pub struct FilterSource {
+    filter: Box<dyn CandidateFilter>,
+    items: Matrix,
+}
+
+impl FilterSource {
+    /// Wrap a filter built over `items` (row = item id).
+    pub fn new(filter: Box<dyn CandidateFilter>, items: Matrix) -> Self {
+        FilterSource { filter, items }
+    }
+
+    /// The wrapped filter.
+    pub fn filter(&self) -> &dyn CandidateFilter {
+        self.filter.as_ref()
+    }
+}
+
+impl CandidateSource for FilterSource {
+    fn label(&self) -> String {
+        self.filter.label()
+    }
+
+    fn len(&self) -> usize {
+        self.items.rows()
+    }
+
+    fn dim(&self) -> usize {
+        self.items.cols()
+    }
+
+    fn candidates_into(
+        &self,
+        user: &[f32],
+        scratch: &mut SourceScratch,
+        out: &mut Vec<u32>,
+    ) -> Result<()> {
+        let s = scratch.get_or_insert_with(FilterScratch::default);
+        self.filter.candidates_into(user, s, out);
+        Ok(())
+    }
+
+    fn factor(&self, id: u32) -> Option<&[f32]> {
+        if (id as usize) < self.items.rows() {
+            Some(self.items.row(id as usize))
+        } else {
+            None
+        }
+    }
+
+    fn dense_factors(&self) -> Option<&Matrix> {
+        Some(&self.items)
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.items.rows() * self.items.cols() * 4 + self.filter.memory_bytes()
+    }
+}
+
+/// The immutable geomap [`Retriever`] is itself a candidate source, so
+/// existing retrievers drop into any engine-shaped harness unchanged.
+impl CandidateSource for Retriever {
+    fn label(&self) -> String {
+        format!("geomap({})", self.mapper().name())
+    }
+
+    fn len(&self) -> usize {
+        self.items()
+    }
+
+    fn dim(&self) -> usize {
+        self.mapper().k()
+    }
+
+    fn candidates_into(
+        &self,
+        user: &[f32],
+        scratch: &mut SourceScratch,
+        out: &mut Vec<u32>,
+    ) -> Result<()> {
+        let items = self.items();
+        let qs = scratch.get_or_insert_with(|| QueryScratch::new(items));
+        Retriever::candidates_into(self, user, qs, out)
+    }
+
+    fn candidates_into_unordered(
+        &self,
+        user: &[f32],
+        scratch: &mut SourceScratch,
+        out: &mut Vec<u32>,
+    ) -> Result<()> {
+        let items = self.items();
+        let qs = scratch.get_or_insert_with(|| QueryScratch::new(items));
+        Retriever::candidates_into_unordered(self, user, qs, out)
+    }
+
+    fn factor(&self, id: u32) -> Option<&[f32]> {
+        if (id as usize) < self.item_factors().rows() {
+            Some(self.item_factors().row(id as usize))
+        } else {
+            None
+        }
+    }
+
+    fn dense_factors(&self) -> Option<&Matrix> {
+        Some(self.item_factors())
+    }
+
+    fn memory_bytes(&self) -> usize {
+        let idx = self.index();
+        self.item_factors().rows() * self.item_factors().cols() * 4
+            + idx.total_postings() * 4
+            + (idx.dim() + 1) * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::SrpLsh;
+    use crate::configx::SchemaConfig;
+    use crate::embedding::Mapper;
+    use crate::rng::Rng;
+
+    fn items(n: usize, k: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::seeded(seed);
+        Matrix::gaussian(&mut rng, n, k, 1.0)
+    }
+
+    #[test]
+    fn filter_source_matches_filter() {
+        let its = items(100, 8, 1);
+        let mut rng = Rng::seeded(2);
+        let filter = SrpLsh::build(&its, 4, 2, &mut rng);
+        let mut rng2 = Rng::seeded(2);
+        let src = FilterSource::new(
+            Box::new(SrpLsh::build(&its, 4, 2, &mut rng2)),
+            its.clone(),
+        );
+        let mut scratch = SourceScratch::new();
+        let mut out = Vec::new();
+        for s in 0..5u64 {
+            let mut rng = Rng::seeded(10 + s);
+            let u: Vec<f32> = (0..8).map(|_| rng.gaussian_f32()).collect();
+            src.candidates_into(&u, &mut scratch, &mut out).unwrap();
+            assert_eq!(out, filter.candidates(&u));
+        }
+        assert_eq!(src.len(), 100);
+        assert_eq!(src.dim(), 8);
+        assert!(src.dense_factors().is_some());
+        assert!(src.memory_bytes() > 100 * 8 * 4);
+    }
+
+    #[test]
+    fn retriever_is_a_candidate_source() {
+        let k = 8;
+        let its = items(150, k, 3);
+        let mapper = Mapper::from_config(SchemaConfig::TernaryParseTree, k, 0.0);
+        let r = Retriever::build(mapper, its.clone()).unwrap();
+        let src: &dyn CandidateSource = &r;
+        assert_eq!(src.len(), 150);
+        assert!(src.label().starts_with("geomap("));
+        let mut scratch = SourceScratch::new();
+        let mut out = Vec::new();
+        let mut rng = Rng::seeded(4);
+        let u: Vec<f32> = (0..k).map(|_| rng.gaussian_f32()).collect();
+        src.candidates_into(&u, &mut scratch, &mut out).unwrap();
+        assert_eq!(out, r.candidates(&u).unwrap());
+        assert_eq!(src.factor(3).unwrap(), its.row(3));
+        assert!(src.factor(150).is_none());
+    }
+}

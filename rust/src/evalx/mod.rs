@@ -1,24 +1,21 @@
 //! Experiment harness for the paper's evaluation (§6, figures 2–5).
 //!
-//! Runs the geomap retriever and every baseline [`CandidateFilter`] over
-//! the same user/item factors, collects [`RecoveryReport`]s, and renders
-//! the paper's artifacts: per-user discard histograms (figs 2a/3a),
-//! recovery-accuracy bars (figs 2b/3b), mean-discard ± std bars (fig 4),
-//! and the accuracy-vs-sparsity sweep (fig 5).
+//! Runs the geomap engine and every baseline backend through the unified
+//! [`Engine`] API over the same user/item factors, collects
+//! [`RecoveryReport`]s, and renders the paper's artifacts: per-user
+//! discard histograms (figs 2a/3a), recovery-accuracy bars (figs 2b/3b),
+//! mean-discard ± std bars (fig 4), and the accuracy-vs-sparsity sweep
+//! (fig 5).
 
 mod render;
 
 pub use render::{render_bars, render_histogram, render_table};
 
-use crate::baselines::{
-    CandidateFilter, ConcomitantLsh, PcaTree, SrpLsh, SuperbitLsh,
-};
-use crate::configx::SchemaConfig;
-use crate::embedding::Mapper;
+use crate::configx::{Backend, SchemaConfig};
+use crate::engine::Engine;
 use crate::error::Result;
 use crate::linalg::Matrix;
-use crate::retrieval::{RecoveryReport, Retriever};
-use crate::rng::Rng;
+use crate::retrieval::RecoveryReport;
 
 /// One evaluated method: label + report.
 #[derive(Clone, Debug)]
@@ -92,7 +89,8 @@ pub struct Comparison {
     /// Our schema.
     pub schema: SchemaConfig,
     /// Relative pre-mapping threshold (paper: "after some thresholding");
-    /// see [`Mapper::threshold`]. 1.3 is the paper's operating point.
+    /// see [`crate::embedding::Mapper::threshold`]. 1.3 is the paper's
+    /// operating point.
     pub threshold: f32,
     /// Top-κ ground truth size.
     pub kappa: usize,
@@ -115,44 +113,40 @@ impl Default for Comparison {
 }
 
 impl Comparison {
-    /// Run our method and all four baselines on the given factors.
-    ///
-    /// The first result is always the geomap retriever.
-    pub fn run(&self, users: &Matrix, items: &Matrix) -> Result<Vec<MethodResult>> {
-        let k = items.cols();
-        let mapper = Mapper::from_config(self.schema, k, self.threshold);
-        let label = format!("geomap({})", mapper.name());
-        let retriever = Retriever::build(mapper, items.clone())?;
-        let mut results = vec![MethodResult {
-            label,
-            report: RecoveryReport::evaluate(users, items, self.kappa, |_, u| {
-                retriever.candidates(u).expect("dims match")
-            }),
-        }];
-
+    /// The backend list this comparison evaluates, in report order
+    /// (geomap first, then the paper's four baselines).
+    pub fn backends(&self) -> Vec<Backend> {
         let p = self.baselines;
-        let mut rng = Rng::seeded(self.seed);
-        let max_leaf =
-            ((items.rows() as f64 * p.pca_leaf_frac).ceil() as usize).max(1);
-        let filters: Vec<Box<dyn CandidateFilter>> = vec![
-            Box::new(SrpLsh::build(items, p.srp_bits, p.srp_tables, &mut rng)),
-            Box::new(SuperbitLsh::build(
-                items,
-                p.superbit_bits,
-                p.superbit_depth,
-                p.superbit_tables,
-                &mut rng,
-            )),
-            Box::new(ConcomitantLsh::build(
-                items, p.cros_m, p.cros_l, p.cros_tables, &mut rng,
-            )),
-            Box::new(PcaTree::build(items, max_leaf, &mut rng)),
-        ];
-        for f in filters {
+        vec![
+            Backend::Geomap,
+            Backend::Srp { bits: p.srp_bits, tables: p.srp_tables },
+            Backend::Superbit {
+                bits: p.superbit_bits,
+                depth: p.superbit_depth,
+                tables: p.superbit_tables,
+            },
+            Backend::Cros { m: p.cros_m, l: p.cros_l, tables: p.cros_tables },
+            Backend::PcaTree { leaf_frac: p.pca_leaf_frac },
+        ]
+    }
+
+    /// Run our method and all four baselines on the given factors,
+    /// every backend constructed through the unified `Engine::builder()`.
+    ///
+    /// The first result is always the geomap engine.
+    pub fn run(&self, users: &Matrix, items: &Matrix) -> Result<Vec<MethodResult>> {
+        let mut results = Vec::with_capacity(5);
+        for (i, backend) in self.backends().into_iter().enumerate() {
+            let engine = Engine::builder()
+                .schema(self.schema)
+                .threshold(self.threshold)
+                .backend(backend)
+                .seed(self.seed.wrapping_add(i as u64))
+                .build(items.clone())?;
             results.push(MethodResult {
-                label: f.label(),
+                label: engine.label(),
                 report: RecoveryReport::evaluate(users, items, self.kappa, |_, u| {
-                    f.candidates(u)
+                    engine.candidates(u).expect("dims match")
                 }),
             });
         }
@@ -180,13 +174,14 @@ pub fn accuracy_sparsity_sweep(
     kappa: usize,
     thresholds: &[f32],
 ) -> Result<Vec<SweepPoint>> {
-    let k = items.cols();
     let mut out = Vec::with_capacity(thresholds.len());
     for &t in thresholds {
-        let mapper = Mapper::from_config(schema, k, t);
-        let retriever = Retriever::build(mapper, items.clone())?;
+        let engine = Engine::builder()
+            .schema(schema)
+            .threshold(t)
+            .build(items.clone())?;
         let report = RecoveryReport::evaluate(users, items, kappa, |_, u| {
-            retriever.candidates(u).expect("dims match")
+            engine.candidates(u).expect("dims match")
         });
         out.push(SweepPoint {
             threshold: t,
@@ -201,6 +196,7 @@ pub fn accuracy_sparsity_sweep(
 mod tests {
     use super::*;
     use crate::data::gaussian_factors;
+    use crate::rng::Rng;
 
     fn small_factors() -> (Matrix, Matrix) {
         let mut rng = Rng::seeded(2);

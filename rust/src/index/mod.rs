@@ -35,8 +35,21 @@ pub struct QueryScratch {
 
 impl QueryScratch {
     /// Scratch sized for an index with `items` items.
+    ///
+    /// Sizing is a capacity hint, not a contract: `query_into` grows the
+    /// scratch on demand, so one scratch can serve a catalogue that is
+    /// hot-swapped to a larger item set (the counters are zeroed via the
+    /// touched-list, so grown tails start clean).
     pub fn new(items: usize) -> Self {
         QueryScratch { counts: vec![0; items], touched: Vec::with_capacity(1024) }
+    }
+
+    /// Grow the counter table to cover `items` ids (no-op when large
+    /// enough). New entries are zero, preserving the reuse invariant.
+    pub fn ensure(&mut self, items: usize) {
+        if self.counts.len() < items {
+            self.counts.resize(items, 0);
+        }
     }
 }
 
@@ -127,7 +140,7 @@ impl InvertedIndex {
         out: &mut Vec<u32>,
     ) {
         assert_eq!(query.dim(), self.p, "query dim mismatch");
-        assert!(scratch.counts.len() >= self.items, "scratch too small");
+        scratch.ensure(self.items);
         out.clear();
         scratch.touched.clear();
         let min = min_overlap.max(1) as u16;
@@ -288,6 +301,22 @@ mod tests {
         let q3 = SparseVec::new(8, vec![(1, 1.0)]).unwrap();
         idx.query_into(&q3, 1, &mut scratch, &mut out);
         assert!(out.is_empty());
+    }
+
+    #[test]
+    fn undersized_scratch_grows_on_query() {
+        // a scratch sized for a small index keeps working after the
+        // catalogue grows (the hot-swap case): no panic, clean counters.
+        let idx = InvertedIndex::from_embeddings(&toy_embeddings());
+        let mut scratch = QueryScratch::new(1); // deliberately too small
+        let mut out = Vec::new();
+        let q = SparseVec::new(8, vec![(3, 1.0)]).unwrap();
+        idx.query_into(&q, 1, &mut scratch, &mut out);
+        assert_eq!(out, vec![0, 1]);
+        // and reuse stays clean after the grow
+        let q2 = SparseVec::new(8, vec![(6, 1.0)]).unwrap();
+        idx.query_into(&q2, 1, &mut scratch, &mut out);
+        assert_eq!(out, vec![2]);
     }
 
     #[test]

@@ -26,17 +26,22 @@
 //! let mut rng = Rng::seeded(7);
 //! let items = gaussian_factors(&mut rng, 1000, 32);
 //!
-//! // 2. the paper's map φ = permute ∘ zero-pad ∘ tessellate
-//! let mapper = Mapper::new(
-//!     TessellationKind::Ternary,
-//!     PermutationKind::ParseTree,
-//!     32,
-//! );
+//! // 2. the unified engine: the paper's map φ + inverted index behind
+//! //    the backend-agnostic retrieval API (any Backend::* plugs in)
+//! let mut engine = Engine::builder()
+//!     .schema(SchemaConfig::TernaryParseTree)
+//!     .backend(Backend::Geomap)
+//!     .threshold(1.3)
+//!     .build(items)
+//!     .unwrap();
 //!
-//! // 3. inverted index over φ(items) + exact rescoring of survivors
-//! let retriever = Retriever::build(mapper, items).unwrap();
+//! // 3. prune + exact rescoring of survivors
 //! let user = gaussian_factors(&mut rng, 1, 32);
-//! let top = retriever.top_k(user.row(0), 10).unwrap();
+//! let top = engine.top_k(user.row(0), 10).unwrap();
+//!
+//! // 4. incremental catalogue mutation (geomap backend)
+//! engine.upsert(1000, user.row(0)).unwrap();
+//! engine.remove(3).unwrap();
 //! # let _ = top;
 //! ```
 
@@ -47,6 +52,7 @@ pub mod configx;
 pub mod coordinator;
 pub mod data;
 pub mod embedding;
+pub mod engine;
 pub mod error;
 pub mod evalx;
 pub mod exec;
@@ -68,8 +74,12 @@ pub mod prelude {
     pub use crate::baselines::{
         BruteForce, CandidateFilter, ConcomitantLsh, PcaTree, SrpLsh, SuperbitLsh,
     };
+    pub use crate::configx::{Backend, MutationConfig, SchemaConfig};
     pub use crate::data::{gaussian_factors, MovieLensSynth, Ratings};
     pub use crate::embedding::{Mapper, PermutationKind, TessellationKind};
+    pub use crate::engine::{
+        CandidateSource, Engine, MutableCatalogue, SourceScratch,
+    };
     pub use crate::error::GeomapError;
     pub use crate::index::InvertedIndex;
     pub use crate::linalg::Matrix;

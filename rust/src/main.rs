@@ -17,7 +17,7 @@
 //! Run `geomap <subcommand> --help` for per-command options.
 
 use anyhow::{bail, Context, Result};
-use geomap::configx::{Cli, SchemaConfig, ServeConfig};
+use geomap::configx::{Backend, Cli, MutationConfig, SchemaConfig, ServeConfig};
 use geomap::coordinator::Coordinator;
 use geomap::data::{gaussian_factors, MovieLensSynth, Ratings};
 use geomap::embedding::Mapper;
@@ -105,6 +105,17 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         .opt("kappa", "10", "top-κ per request")
         .opt("schema", "ternary-parsetree", "sparse-map schema")
         .opt("threshold", "1.3", "relative pre-mapping threshold (RMS units)")
+        .opt(
+            "backend",
+            "geomap",
+            "pruning backend: geomap | srp[:b,L] | superbit[:b,d,L] | \
+             cros[:m,l,L] | pca-tree[:frac] | brute",
+        )
+        .opt(
+            "max-delta",
+            "1024",
+            "pending mutations per shard before a delta merge (0 = manual)",
+        )
         .opt("shards", "2", "index shards (worker threads)")
         .opt("max-batch", "32", "dynamic batch size cap")
         .opt("max-wait-us", "500", "batching window (µs)")
@@ -138,6 +149,8 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         use_xla: !cli.is_set("cpu"),
         artifacts_dir: cli.get("artifacts").to_string(),
         threshold: cli.get_f64("threshold")? as f32,
+        backend: Backend::parse(cli.get("backend"))?,
+        mutation: MutationConfig { max_delta: cli.get_usize("max-delta")? },
     };
     let factory = if cfg.use_xla {
         xla_scorer_factory(&cfg.artifacts_dir)
@@ -145,9 +158,10 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         cpu_scorer_factory()
     };
     println!(
-        "starting coordinator: {} items, k={k}, {} shards, scorer={}",
+        "starting coordinator: {} items, k={k}, {} shards, backend={}, scorer={}",
         items.rows(),
         cfg.shards,
+        cfg.backend.name(),
         if cfg.use_xla { "xla" } else { "cpu" }
     );
     let kappa = cfg.kappa;

@@ -5,6 +5,12 @@
 //! [`RecoveryReport`] implements the paper's two evaluation metrics:
 //! per-user **% items discarded** and **recovery accuracy** (fraction of
 //! the true top-κ that survives pruning).
+//!
+//! New code should prefer the backend-agnostic [`crate::engine::Engine`]
+//! facade (the `Retriever` also implements
+//! [`crate::engine::CandidateSource`], and the geomap engine adds
+//! incremental catalogue mutation); this immutable retriever remains the
+//! minimal single-backend reference implementation.
 
 mod topk;
 

@@ -1,0 +1,321 @@
+//! Engine-API acceptance tests: old-vs-new equivalence, all six backends
+//! behind the coordinator by config, incremental mutation vs from-scratch
+//! rebuild, `min_overlap > 1` semantics, and scratch survival across
+//! catalogue growth.
+
+use geomap::configx::{Backend, MutationConfig, SchemaConfig, ServeConfig};
+use geomap::coordinator::Coordinator;
+use geomap::embedding::Mapper;
+use geomap::engine::Engine;
+use geomap::linalg::ops::dot;
+use geomap::linalg::Matrix;
+use geomap::retrieval::Retriever;
+use geomap::rng::Rng;
+use geomap::runtime::cpu_scorer_factory;
+
+fn items(n: usize, k: usize, seed: u64) -> Matrix {
+    let mut rng = Rng::seeded(seed);
+    Matrix::gaussian(&mut rng, n, k, 1.0)
+}
+
+fn user(k: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::seeded(seed);
+    (0..k).map(|_| rng.gaussian_f32()).collect()
+}
+
+fn serve_cfg(k: usize, shards: usize, backend: Backend) -> ServeConfig {
+    ServeConfig {
+        k,
+        kappa: 10,
+        schema: SchemaConfig::TernaryParseTree,
+        max_batch: 8,
+        max_wait_us: 200,
+        shards,
+        queue_cap: 256,
+        use_xla: false,
+        artifacts_dir: "artifacts".into(),
+        threshold: 0.0,
+        backend,
+        mutation: MutationConfig::default(),
+    }
+}
+
+/// cros-style equivalence: `Engine` top-κ over the geomap backend matches
+/// the pre-redesign `Retriever::top_k` exactly — ids and bit-exact
+/// scores — including with `min_overlap > 1`.
+#[test]
+fn engine_topk_matches_retriever_exactly() {
+    let k = 8;
+    let catalogue = items(300, k, 1);
+    for (threshold, min_overlap) in [(0.0f32, 1usize), (1.0, 1), (0.5, 2)] {
+        let engine = Engine::builder()
+            .schema(SchemaConfig::TernaryParseTree)
+            .threshold(threshold)
+            .min_overlap(min_overlap)
+            .build(catalogue.clone())
+            .unwrap();
+        let mapper =
+            Mapper::from_config(SchemaConfig::TernaryParseTree, k, threshold);
+        let mut retriever = Retriever::build(mapper, catalogue.clone()).unwrap();
+        retriever.min_overlap = min_overlap;
+        for s in 0..30u64 {
+            let u = user(k, 100 + s);
+            assert_eq!(
+                engine.candidates(&u).unwrap(),
+                retriever.candidates(&u).unwrap(),
+                "threshold {threshold} min_overlap {min_overlap}"
+            );
+            let got = engine.top_k(&u, 10).unwrap();
+            let want = retriever.top_k(&u, 10).unwrap();
+            assert_eq!(got.len(), want.len());
+            for (g, w) in got.iter().zip(&want) {
+                assert_eq!(g.id, w.id);
+                assert_eq!(g.score, w.score, "scores must match exactly");
+            }
+        }
+    }
+}
+
+/// `min_overlap > 1` retrieval semantics at the engine level: exactly the
+/// items whose φ-support overlaps the user's in ≥ m dimensions survive,
+/// and raising m only shrinks the candidate set.
+#[test]
+fn min_overlap_semantics() {
+    let k = 10;
+    let catalogue = items(120, k, 2);
+    let mapper = Mapper::from_config(SchemaConfig::TernaryParseTree, k, 0.0);
+    let engines: Vec<Engine> = (1..=3)
+        .map(|m| {
+            Engine::builder()
+                .schema(SchemaConfig::TernaryParseTree)
+                .threshold(0.0)
+                .min_overlap(m)
+                .build(catalogue.clone())
+                .unwrap()
+        })
+        .collect();
+    for s in 0..15u64 {
+        let u = user(k, 200 + s);
+        let phi_u = mapper.map(&u).unwrap();
+        let mut prev: Option<Vec<u32>> = None;
+        for (mi, engine) in engines.iter().enumerate() {
+            let m = mi + 1;
+            let got = engine.candidates(&u).unwrap();
+            // brute-force expectation from the φ embeddings
+            let mut want = Vec::new();
+            for r in 0..catalogue.rows() {
+                let phi_i = mapper.map(catalogue.row(r)).unwrap();
+                if phi_u.overlap(&phi_i) >= m {
+                    want.push(r as u32);
+                }
+            }
+            assert_eq!(got, want, "min_overlap {m}");
+            if let Some(p) = &prev {
+                assert!(
+                    got.iter().all(|id| p.binary_search(id).is_ok()),
+                    "raising min_overlap must only shrink the set"
+                );
+            }
+            prev = Some(got);
+        }
+    }
+}
+
+/// All six backends are constructible through `Engine::builder()` and
+/// servable through the coordinator, selected purely by config.
+#[test]
+fn six_backends_serve_through_coordinator_by_config() {
+    let k = 8;
+    let catalogue = items(240, k, 3);
+    for backend in [
+        Backend::Geomap,
+        Backend::Srp { bits: 3, tables: 2 },
+        Backend::Superbit { bits: 3, depth: 3, tables: 2 },
+        Backend::Cros { m: 12, l: 1, tables: 2 },
+        Backend::PcaTree { leaf_frac: 0.25 },
+        Backend::Brute,
+    ] {
+        let coord = Coordinator::start(
+            serve_cfg(k, 2, backend),
+            catalogue.clone(),
+            cpu_scorer_factory(),
+        )
+        .unwrap();
+        for s in 0..8u64 {
+            let u = user(k, 300 + s);
+            let resp = coord.submit(u.clone(), 5).unwrap();
+            assert!(resp.results.len() <= 5, "{backend:?}");
+            assert!(resp.candidates <= 240);
+            assert_eq!(resp.total_items, 240);
+            for w in resp.results.windows(2) {
+                assert!(w[0].score >= w[1].score);
+            }
+            // scores are exact inner products against the catalogue
+            for r in &resp.results {
+                let exact = dot(&u, catalogue.row(r.id as usize));
+                assert!(
+                    (r.score - exact).abs() < 1e-5,
+                    "{backend:?}: inexact score"
+                );
+            }
+        }
+        coord.shutdown();
+    }
+}
+
+/// Incremental mutation equivalence: a churned engine (upserts, appends,
+/// removals) returns exactly what a from-scratch rebuild over the same
+/// live items returns — before *and* after the delta merge.
+#[test]
+fn mutation_matches_from_scratch_rebuild() {
+    let k = 8;
+    let n0 = 120usize;
+    let base = items(n0, k, 4);
+    let spec = Engine::builder()
+        .schema(SchemaConfig::TernaryParseTree)
+        .threshold(0.0)
+        .mutation(MutationConfig { max_delta: 0 }); // manual merge only
+    let mut engine = spec.build(base.clone()).unwrap();
+
+    // mirror of the live catalogue: id -> factor
+    let mut truth: Vec<Option<Vec<f32>>> =
+        (0..n0).map(|r| Some(base.row(r).to_vec())).collect();
+
+    // churn: replacements, appends, removals (incl. remove-after-upsert)
+    let apply_upsert = |engine: &mut Engine,
+                            truth: &mut Vec<Option<Vec<f32>>>,
+                            id: usize,
+                            seed: u64| {
+        let f = user(k, seed);
+        engine.upsert(id as u32, &f).unwrap();
+        if id == truth.len() {
+            truth.push(Some(f));
+        } else {
+            truth[id] = Some(f);
+        }
+    };
+    apply_upsert(&mut engine, &mut truth, 5, 1000);
+    apply_upsert(&mut engine, &mut truth, 17, 1001);
+    apply_upsert(&mut engine, &mut truth, 63, 1002);
+    apply_upsert(&mut engine, &mut truth, 120, 1003);
+    apply_upsert(&mut engine, &mut truth, 121, 1004);
+    for id in [9u32, 17, 50] {
+        assert!(engine.remove(id).unwrap());
+        truth[id as usize] = None;
+    }
+    assert!(engine.pending() > 0, "churn must leave pending work");
+
+    // from-scratch reference over the live items, with id -> rank map
+    let live: Vec<(u32, &Vec<f32>)> = truth
+        .iter()
+        .enumerate()
+        .filter_map(|(id, f)| f.as_ref().map(|f| (id as u32, f)))
+        .collect();
+    let mut dense = Matrix::zeros(live.len(), k);
+    let mut rank = vec![u32::MAX; truth.len()];
+    for (r, (id, f)) in live.iter().enumerate() {
+        dense.row_mut(r).copy_from_slice(f);
+        rank[*id as usize] = r as u32;
+    }
+    let reference = spec.build(dense).unwrap();
+
+    let check = |engine: &Engine, phase: &str| {
+        for s in 0..25u64 {
+            let u = user(k, 400 + s);
+            let got = engine.candidates(&u).unwrap();
+            // removed ids never surface
+            assert!(got.iter().all(|&id| truth[id as usize].is_some()), "{phase}");
+            // candidate sets agree through the id -> rank bijection
+            let mapped: Vec<u32> =
+                got.iter().map(|&id| rank[id as usize]).collect();
+            assert_eq!(mapped, reference.candidates(&u).unwrap(), "{phase}");
+            // top-κ agrees: same items, bit-exact scores
+            let a = engine.top_k(&u, 7).unwrap();
+            let b = reference.top_k(&u, 7).unwrap();
+            assert_eq!(a.len(), b.len(), "{phase}");
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(rank[x.id as usize], y.id, "{phase}");
+                assert_eq!(x.score, y.score, "{phase}: score drift");
+            }
+        }
+    };
+
+    check(&engine, "before merge");
+    engine.merge().unwrap();
+    assert_eq!(engine.pending(), 0);
+    check(&engine, "after merge");
+}
+
+/// Regression (scratch hardening): a coordinator whose worker scratch was
+/// warmed on a small catalogue keeps serving correctly after a hot swap
+/// to a much larger item matrix.
+#[test]
+fn worker_scratch_survives_swap_to_larger_catalogue() {
+    let k = 8;
+    let coord = Coordinator::start(
+        serve_cfg(k, 1, Backend::Geomap),
+        items(40, k, 7),
+        cpu_scorer_factory(),
+    )
+    .unwrap();
+    // warm the worker scratch on the small catalogue
+    for s in 0..4u64 {
+        let resp = coord.submit(user(k, 500 + s), 5).unwrap();
+        assert_eq!(resp.total_items, 40);
+    }
+    // grow the catalogue 20x and keep serving through the same workers
+    let big = items(800, k, 8);
+    coord.swap_items(big.clone()).unwrap();
+    let mapper = Mapper::from_config(SchemaConfig::TernaryParseTree, k, 0.0);
+    let reference = Retriever::build(mapper, big).unwrap();
+    for s in 0..10u64 {
+        let u = user(k, 600 + s);
+        let resp = coord.submit(u.clone(), 5).unwrap();
+        assert_eq!(resp.total_items, 800);
+        let want = reference.top_k(&u, 5).unwrap();
+        assert_eq!(
+            resp.results.iter().map(|r| r.id).collect::<Vec<_>>(),
+            want.iter().map(|w| w.id).collect::<Vec<_>>()
+        );
+        assert_eq!(resp.candidates, reference.candidates(&u).unwrap().len());
+    }
+    coord.shutdown();
+}
+
+/// Incremental mutation through the serving facade: upserted items are
+/// served with their new factors before any merge; removed ids never
+/// appear; an append is immediately retrievable.
+#[test]
+fn coordinator_serves_mutations_live() {
+    let k = 8;
+    let coord = Coordinator::start(
+        serve_cfg(k, 2, Backend::Geomap),
+        items(100, k, 9),
+        cpu_scorer_factory(),
+    )
+    .unwrap();
+    // make id 3 the best match for a probe user by construction
+    let probe = user(k, 700);
+    let mut boosted = probe.clone();
+    for v in boosted.iter_mut() {
+        *v *= 10.0;
+    }
+    coord.upsert(3, &boosted).unwrap();
+    let resp = coord.submit(probe.clone(), 3).unwrap();
+    assert_eq!(resp.results[0].id, 3, "upserted factor must win");
+    let exact = dot(&probe, &boosted);
+    assert!((resp.results[0].score - exact).abs() < 1e-4);
+    // removing it takes it out of every later response
+    assert!(coord.remove(3).unwrap().1);
+    for _ in 0..5 {
+        let resp = coord.submit(probe.clone(), 100).unwrap();
+        assert!(resp.results.iter().all(|r| r.id != 3));
+    }
+    // append at the current edge
+    let v = coord.upsert(100, &boosted).unwrap();
+    assert!(v > 0);
+    let resp = coord.submit(probe, 3).unwrap();
+    assert_eq!(resp.total_items, 101);
+    assert_eq!(resp.results[0].id, 100, "appended item must be served");
+    coord.shutdown();
+}

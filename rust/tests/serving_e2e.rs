@@ -24,6 +24,7 @@ fn cfg(k: usize, shards: usize, threshold: f32) -> ServeConfig {
         use_xla: false,
         artifacts_dir: "artifacts".into(),
         threshold,
+        ..ServeConfig::default()
     }
 }
 
