@@ -13,6 +13,11 @@
 //!   no rebuild, merges fire off the read path once the per-shard delta
 //!   crosses `MutationConfig::max_delta`.
 //!
+//! The run ends with the PR-2 warm-start path: the mutated catalogue is
+//! checkpointed to a `GSNP` snapshot and a second coordinator cold-starts
+//! from it in milliseconds — no re-mapping, same results, catalogue
+//! version preserved.
+//!
 //! ```bash
 //! cargo run --release --example serving            # PJRT (XLA) scorer
 //! GEOMAP_CPU=1 cargo run --release --example serving   # pure-rust scorer
@@ -54,6 +59,7 @@ fn main() -> anyhow::Result<()> {
         threshold: 1.5, // k=32 operating point (EXPERIMENTS.md §Perf)
         backend: Backend::Geomap, // any Backend::* serves via config
         mutation: MutationConfig { max_delta: 256 },
+        checkpoint: None,
     };
     let factory = if use_cpu {
         cpu_scorer_factory()
@@ -68,7 +74,10 @@ fn main() -> anyhow::Result<()> {
         if use_cpu { "cpu" } else { "xla(pjrt)" }
     );
     let kappa = cfg.kappa;
-    let coord = Arc::new(Coordinator::start(cfg, items, factory)?);
+    let t_cold = Instant::now();
+    let coord = Arc::new(Coordinator::start(cfg.clone(), items, factory)?);
+    let cold_ms = t_cold.elapsed().as_secs_f64() * 1e3;
+    println!("  cold start (full build): {cold_ms:.1} ms");
 
     // -------- drive an open-ish loop with a mid-run hot swap ----------
     let done = AtomicU64::new(0);
@@ -162,6 +171,40 @@ fn main() -> anyhow::Result<()> {
         brute_per_req * 1e6
     );
 
+    // -------- warm start: snapshot the mutated catalogue, restart ------
+    let snap_dir = std::env::temp_dir().join("geomap-serving-example");
+    std::fs::create_dir_all(&snap_dir)?;
+    let snap_path = snap_dir.join("catalogue.gsnp");
+    let snap_path = snap_path.to_string_lossy();
+    let version = coord.save_snapshot(&snap_path)?;
+    println!(
+        "\nsnapshotted catalogue v{version} ({} items, delta + tombstones \
+         included) → {snap_path}",
+        coord.total_items()
+    );
     Arc::try_unwrap(coord).map_err(|_| ()).ok().map(Coordinator::shutdown);
+
+    let factory = if use_cpu {
+        cpu_scorer_factory()
+    } else {
+        xla_scorer_factory(&cfg.artifacts_dir)
+    };
+    let t_warm = Instant::now();
+    let warm = Coordinator::start_from_snapshot(cfg, &snap_path, factory)?;
+    let warm_ms = t_warm.elapsed().as_secs_f64() * 1e3;
+    println!(
+        "warm start from snapshot: {warm_ms:.1} ms (cold was {cold_ms:.1} ms \
+         → {:.1}x faster), serving v{} again",
+        cold_ms / warm_ms.max(1e-9),
+        warm.version()
+    );
+    let mut rng = Rng::seeded(99);
+    for _ in 0..16 {
+        let u = users.row(rng.below(users.rows())).to_vec();
+        let resp = warm.submit(u, kappa)?;
+        assert!(resp.results.len() <= kappa);
+    }
+    println!("warm-started coordinator answered 16 probe queries");
+    warm.shutdown();
     Ok(())
 }

@@ -1,0 +1,91 @@
+//! Snapshot warm-start vs rebuild-from-factors (docs/SNAPSHOT.md).
+//!
+//! The acceptance bar for the snapshot subsystem: loading a built engine
+//! from a `GSNP` file must beat rebuilding it from raw factors by >= 10x
+//! on the default bench catalogue, with byte-identical top-k results.
+//! Measures the one-shot wall-clock (build / save / load) per backend
+//! and workload, then uses the shared `Bencher` for a steady-state view
+//! of repeated loads.
+//!
+//! ```bash
+//! cargo bench --bench snapshot_warmstart
+//! GEOMAP_BENCH_FAST=1 cargo bench --bench snapshot_warmstart
+//! ```
+
+mod common;
+
+use geomap::bench::{black_box, Bencher};
+use geomap::configx::Backend;
+use geomap::engine::Engine;
+use geomap::evalx::{measure_warmstart, render_table, WarmstartReport};
+
+fn tmp(name: &str) -> String {
+    let dir = std::env::temp_dir().join("geomap-bench-warmstart");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name).to_string_lossy().into_owned()
+}
+
+fn main() {
+    let mut failures = Vec::new();
+    for (workload, threshold, (_, items)) in [
+        ("synthetic", 1.5f32, common::synthetic_workload()),
+        ("movielens", 1.3, common::movielens_workload()),
+    ] {
+        println!(
+            "\n== {workload}: {} items, k={} ==",
+            items.rows(),
+            items.cols()
+        );
+        let mut reports: Vec<WarmstartReport> = Vec::new();
+        for (name, backend) in [
+            ("geomap", Backend::Geomap),
+            ("srp", Backend::Srp { bits: 3, tables: 2 }),
+            ("brute", Backend::Brute),
+        ] {
+            let spec = Engine::builder().backend(backend).threshold(threshold);
+            let path = tmp(&format!("{workload}-{name}.gsnp"));
+            let (engine, report) =
+                measure_warmstart(spec, &items, &path, 8).expect(name);
+            // the 10x acceptance gate is judged on the default bench
+            // catalogue; the CI fast profile is too small for the ratio
+            // to be meaningful, so there it only reports
+            if backend == Backend::Geomap
+                && !common::fast()
+                && report.speedup() < 10.0
+            {
+                failures.push(format!(
+                    "{workload}/geomap warm start only {:.1}x (target 10x)",
+                    report.speedup()
+                ));
+            }
+            reports.push(report);
+
+            // steady-state load cost (repeated warm starts, e.g. a fleet
+            // of replicas cold-starting from the same checkpoint)
+            if backend == Backend::Geomap {
+                let mut b = Bencher::from_env();
+                b.bench(&format!("{workload}: snapshot load"), engine.len(), || {
+                    let e = Engine::builder().from_snapshot(&path).unwrap();
+                    black_box(e.len());
+                });
+            }
+        }
+        let rows: Vec<Vec<String>> =
+            reports.iter().map(WarmstartReport::row).collect();
+        print!("{}", render_table(&WarmstartReport::header(), &rows));
+    }
+    if failures.is_empty() {
+        if common::fast() {
+            println!("\nfast profile: timings reported, 10x gate not judged");
+        } else {
+            println!(
+                "\nwarm-start target met: geomap load >= 10x faster than rebuild"
+            );
+        }
+    } else {
+        for f in &failures {
+            eprintln!("WARM-START TARGET MISSED: {f}");
+        }
+        std::process::exit(1);
+    }
+}

@@ -417,18 +417,37 @@ impl<'a> Parser<'a> {
         }
     }
 
+    /// Consume a run of ASCII digits, returning how many were read.
+    fn digits(&mut self) -> usize {
+        let start = self.pos;
+        while matches!(self.peek(), Some(b'0'..=b'9')) {
+            self.pos += 1;
+        }
+        self.pos - start
+    }
+
+    /// Strict JSON number grammar (RFC 8259 §6): `-?int frac? exp?` with
+    /// no leading zeros, a digit required on each side of `.`, and at
+    /// least one exponent digit. Rust's permissive `f64::from_str` would
+    /// otherwise accept `01`, `-`, `1.`, `.5` and `1e` — forms the
+    /// snapshot config round-trip must reject, not normalise.
     fn number(&mut self) -> Result<Json> {
         let start = self.pos;
         if self.peek() == Some(b'-') {
             self.pos += 1;
         }
-        while matches!(self.peek(), Some(b'0'..=b'9')) {
-            self.pos += 1;
+        let int_start = self.pos;
+        match self.digits() {
+            0 => return Err(self.err("expected digit in number")),
+            n if n > 1 && self.bytes[int_start] == b'0' => {
+                return Err(self.err("leading zeros are not allowed"));
+            }
+            _ => {}
         }
         if self.peek() == Some(b'.') {
             self.pos += 1;
-            while matches!(self.peek(), Some(b'0'..=b'9')) {
-                self.pos += 1;
+            if self.digits() == 0 {
+                return Err(self.err("expected digit after '.'"));
             }
         }
         if matches!(self.peek(), Some(b'e') | Some(b'E')) {
@@ -436,15 +455,20 @@ impl<'a> Parser<'a> {
             if matches!(self.peek(), Some(b'+') | Some(b'-')) {
                 self.pos += 1;
             }
-            while matches!(self.peek(), Some(b'0'..=b'9')) {
-                self.pos += 1;
+            if self.digits() == 0 {
+                return Err(self.err("expected digit in exponent"));
             }
         }
         let text = std::str::from_utf8(&self.bytes[start..self.pos])
             .map_err(|_| self.err("bad number"))?;
-        text.parse::<f64>()
-            .map(Json::Num)
-            .map_err(|_| self.err("bad number"))
+        let n: f64 =
+            text.parse().map_err(|_| self.err("bad number"))?;
+        if !n.is_finite() {
+            // e.g. 1e999: syntactically valid but unrepresentable, and a
+            // non-finite Num would serialise to invalid JSON
+            return Err(self.err("number overflows f64"));
+        }
+        Ok(Json::Num(n))
     }
 }
 
@@ -479,6 +503,34 @@ mod tests {
         assert!(Json::parse("nul").is_err());
         assert!(Json::parse("1 2").is_err());
         assert!(Json::parse("{\"a\" 1}").is_err());
+    }
+
+    #[test]
+    fn strict_number_grammar() {
+        // regression tests for the snapshot-config round-trip: forms that
+        // Rust's f64 parser tolerates but the JSON grammar forbids
+        for bad in [
+            "-", "-x", "01", "-01", "007", "1.", "-2.", ".5", "-.5", "1e",
+            "1e+", "1e-", "1.e3", "+1", "0x10", "1_000",
+        ] {
+            assert!(Json::parse(bad).is_err(), "'{bad}' must not parse");
+        }
+        // exponent overflow: syntactically fine, unrepresentable as f64
+        assert!(Json::parse("1e999").is_err());
+        assert!(Json::parse("-1e999").is_err());
+        assert!(Json::parse("[1, 1e400]").is_err());
+        // the valid forms around those edges still parse
+        assert_eq!(Json::parse("0").unwrap(), Json::Num(0.0));
+        assert_eq!(Json::parse("-0").unwrap(), Json::Num(-0.0));
+        assert_eq!(Json::parse("0.5").unwrap(), Json::Num(0.5));
+        assert_eq!(Json::parse("0e0").unwrap(), Json::Num(0.0));
+        assert_eq!(Json::parse("10").unwrap(), Json::Num(10.0));
+        assert_eq!(Json::parse("1e3").unwrap(), Json::Num(1000.0));
+        assert_eq!(Json::parse("1E+2").unwrap(), Json::Num(100.0));
+        assert_eq!(Json::parse("1e-2").unwrap(), Json::Num(0.01));
+        // underflow quietly rounds to zero, which is representable
+        assert_eq!(Json::parse("1e-999").unwrap(), Json::Num(0.0));
+        assert_eq!(Json::parse("-12.75e1").unwrap(), Json::Num(-127.5));
     }
 
     #[test]

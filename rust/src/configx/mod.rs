@@ -55,6 +55,19 @@ impl SchemaConfig {
             }
         }
     }
+
+    /// Canonical string form; `SchemaConfig::parse(s.spec())` always
+    /// round-trips (the snapshot config section relies on this).
+    pub fn spec(&self) -> String {
+        match self {
+            SchemaConfig::TernaryOneHot => "ternary-onehot".to_string(),
+            SchemaConfig::TernaryParseTree => "ternary-parsetree".to_string(),
+            SchemaConfig::DaryOneHot { d } => format!("dary-onehot:{d}"),
+            SchemaConfig::TernaryParseTreeDelta { delta } => {
+                format!("ternary-parsetree:{delta}")
+            }
+        }
+    }
 }
 
 /// Which candidate-pruning backend serves retrieval (engine subsystem).
@@ -169,6 +182,21 @@ impl Backend {
         }
     }
 
+    /// Canonical string form with parameters; `Backend::parse(b.spec())`
+    /// always round-trips (the snapshot config section relies on this).
+    pub fn spec(&self) -> String {
+        match self {
+            Backend::Geomap => "geomap".to_string(),
+            Backend::Srp { bits, tables } => format!("srp:{bits},{tables}"),
+            Backend::Superbit { bits, depth, tables } => {
+                format!("superbit:{bits},{depth},{tables}")
+            }
+            Backend::Cros { m, l, tables } => format!("cros:{m},{l},{tables}"),
+            Backend::PcaTree { leaf_frac } => format!("pca-tree:{leaf_frac}"),
+            Backend::Brute => "brute".to_string(),
+        }
+    }
+
     /// Short backend name (no parameters).
     pub fn name(&self) -> &'static str {
         match self {
@@ -194,6 +222,44 @@ pub struct MutationConfig {
 impl Default for MutationConfig {
     fn default() -> Self {
         MutationConfig { max_delta: 1024 }
+    }
+}
+
+/// Background snapshot-checkpointing policy (see `docs/SNAPSHOT.md`).
+///
+/// When configured, the coordinator writes a `GSNP` snapshot of the
+/// current shard set to `dir` whenever the catalogue version changed
+/// since the last checkpoint, atomically (tmp file + rename), and prunes
+/// all but the newest `keep_last` files.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CheckpointConfig {
+    /// Directory receiving `snapshot-v*.gsnp` files (created on demand).
+    pub dir: String,
+    /// Checkpoint cadence in milliseconds.
+    pub every_ms: u64,
+    /// Snapshots retained after pruning (>= 1).
+    pub keep_last: usize,
+}
+
+impl CheckpointConfig {
+    /// Validate invariants.
+    pub fn validated(self) -> Result<Self> {
+        if self.dir.is_empty() {
+            return Err(GeomapError::Config(
+                "checkpoint dir must be non-empty".into(),
+            ));
+        }
+        if self.every_ms == 0 {
+            return Err(GeomapError::Config(
+                "checkpoint_every_ms must be positive".into(),
+            ));
+        }
+        if self.keep_last == 0 {
+            return Err(GeomapError::Config(
+                "checkpoint_keep must be >= 1".into(),
+            ));
+        }
+        Ok(self)
     }
 }
 
@@ -226,6 +292,8 @@ pub struct ServeConfig {
     pub backend: Backend,
     /// Incremental-mutation policy (geomap backend only).
     pub mutation: MutationConfig,
+    /// Background snapshot checkpointing (`None` disables it).
+    pub checkpoint: Option<CheckpointConfig>,
 }
 
 impl Default for ServeConfig {
@@ -243,13 +311,14 @@ impl Default for ServeConfig {
             threshold: 1.3,
             backend: Backend::Geomap,
             mutation: MutationConfig::default(),
+            checkpoint: None,
         }
     }
 }
 
 impl ServeConfig {
     /// Validate invariants; returns self for chaining.
-    pub fn validated(self) -> Result<Self> {
+    pub fn validated(mut self) -> Result<Self> {
         if self.k == 0 {
             return Err(GeomapError::Config("k must be positive".into()));
         }
@@ -270,6 +339,9 @@ impl ServeConfig {
         }
         if self.threshold < 0.0 {
             return Err(GeomapError::Config("threshold must be >= 0".into()));
+        }
+        if let Some(ck) = self.checkpoint.take() {
+            self.checkpoint = Some(ck.validated()?);
         }
         Ok(self)
     }
@@ -312,6 +384,32 @@ impl ServeConfig {
         }
         if let Some(v) = j.opt("max_delta") {
             c.mutation.max_delta = v.as_usize()?;
+        }
+        if let Some(v) = j.opt("checkpoint_dir") {
+            let mut ck = CheckpointConfig {
+                dir: v.as_str()?.to_string(),
+                every_ms: 30_000,
+                keep_last: 3,
+            };
+            if let Some(v) = j.opt("checkpoint_every_ms") {
+                ck.every_ms = v.as_usize()? as u64;
+            }
+            if let Some(v) = j.opt("checkpoint_keep") {
+                ck.keep_last = v.as_usize()?;
+            }
+            c.checkpoint = Some(ck);
+        } else if j.opt("checkpoint_every_ms").is_some()
+            || j.opt("checkpoint_keep").is_some()
+        {
+            // an orphaned tuning key almost certainly means a typo'd
+            // checkpoint_dir — silently disabling checkpointing here
+            // would lose data the operator believes is durable
+            return Err(GeomapError::Config(
+                "checkpoint_every_ms/checkpoint_keep are set but \
+                 checkpoint_dir is missing — checkpointing would be \
+                 silently disabled"
+                    .into(),
+            ));
         }
         c.validated()
     }
@@ -414,6 +512,65 @@ mod tests {
         assert_eq!(Backend::Geomap.name(), "geomap");
         assert_eq!(Backend::parse("superbit").unwrap().name(), "superbit");
         assert_eq!(Backend::Brute.name(), "brute");
+    }
+
+    #[test]
+    fn spec_strings_roundtrip() {
+        for schema in [
+            SchemaConfig::TernaryOneHot,
+            SchemaConfig::TernaryParseTree,
+            SchemaConfig::DaryOneHot { d: 4 },
+            SchemaConfig::TernaryParseTreeDelta { delta: 3 },
+        ] {
+            assert_eq!(SchemaConfig::parse(&schema.spec()).unwrap(), schema);
+        }
+        for backend in [
+            Backend::Geomap,
+            Backend::Brute,
+            Backend::Srp { bits: 7, tables: 3 },
+            Backend::Superbit { bits: 6, depth: 3, tables: 2 },
+            Backend::Cros { m: 12, l: 2, tables: 4 },
+            Backend::PcaTree { leaf_frac: 0.125 },
+        ] {
+            assert_eq!(Backend::parse(&backend.spec()).unwrap(), backend);
+        }
+    }
+
+    #[test]
+    fn checkpoint_config_from_json_and_validation() {
+        let j = Json::parse(
+            r#"{"checkpoint_dir": "snaps", "checkpoint_every_ms": 500,
+                "checkpoint_keep": 2}"#,
+        )
+        .unwrap();
+        let c = ServeConfig::from_json(&j).unwrap();
+        let ck = c.checkpoint.unwrap();
+        assert_eq!(ck.dir, "snaps");
+        assert_eq!(ck.every_ms, 500);
+        assert_eq!(ck.keep_last, 2);
+        // defaults when only the dir is given
+        let j = Json::parse(r#"{"checkpoint_dir": "snaps"}"#).unwrap();
+        let ck = ServeConfig::from_json(&j).unwrap().checkpoint.unwrap();
+        assert_eq!(ck.every_ms, 30_000);
+        assert_eq!(ck.keep_last, 3);
+        // invalid values rejected
+        assert!(CheckpointConfig { dir: "".into(), every_ms: 1, keep_last: 1 }
+            .validated()
+            .is_err());
+        assert!(CheckpointConfig { dir: "d".into(), every_ms: 0, keep_last: 1 }
+            .validated()
+            .is_err());
+        assert!(CheckpointConfig { dir: "d".into(), every_ms: 1, keep_last: 0 }
+            .validated()
+            .is_err());
+        // no checkpointing by default
+        assert!(ServeConfig::default().checkpoint.is_none());
+        // orphaned tuning keys without a dir must not silently disable
+        // checkpointing
+        let j = Json::parse(r#"{"checkpoint_every_ms": 5000}"#).unwrap();
+        assert!(ServeConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"checkpoint_keep": 5}"#).unwrap();
+        assert!(ServeConfig::from_json(&j).is_err());
     }
 
     #[test]

@@ -9,6 +9,13 @@
 //! serves through the same coordinator, selected purely by config, and
 //! the geomap backend additionally supports incremental catalogue
 //! mutation (delta segment + tombstones + threshold-triggered merge).
+//!
+//! The built state is durable: [`Coordinator::save_snapshot`] persists
+//! every shard engine to a `GSNP` snapshot,
+//! [`Coordinator::start_from_snapshot`] warm-starts from one without
+//! re-mapping the catalogue, and `ServeConfig::checkpoint` enables the
+//! background checkpointer (atomic writes, keep-last-N retention) — see
+//! `docs/SNAPSHOT.md`.
 
 pub mod admission;
 pub mod metrics;

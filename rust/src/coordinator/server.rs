@@ -22,11 +22,12 @@ use super::router::merge_topk;
 use super::state::{FactorStore, Shard};
 use super::worker::{process_batch, ShardPartial, WorkerScratch};
 use crate::configx::ServeConfig;
-use crate::engine::Engine;
+use crate::engine::{explicit, Engine};
 use crate::error::{GeomapError, Result};
 use crate::linalg::Matrix;
 use crate::retrieval::Scored;
 use crate::runtime::ScorerFactory;
+use crate::snapshot::Checkpointer;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
@@ -70,9 +71,19 @@ pub struct Coordinator {
     closing: Arc<AtomicBool>,
     dispatcher: Option<std::thread::JoinHandle<()>>,
     workers: Vec<std::thread::JoinHandle<()>>,
+    checkpointer: Option<Checkpointer>,
 }
 
 impl Coordinator {
+    /// The engine spec implied by a serving configuration.
+    fn spec_of(cfg: &ServeConfig) -> crate::engine::EngineBuilder {
+        Engine::builder()
+            .schema(cfg.schema)
+            .threshold(cfg.threshold)
+            .backend(cfg.backend)
+            .mutation(cfg.mutation)
+    }
+
     /// Build the factor store, spawn shard workers and the dispatcher.
     pub fn start(
         cfg: ServeConfig,
@@ -87,12 +98,68 @@ impl Coordinator {
                 cfg.k
             )));
         }
-        let spec = Engine::builder()
-            .schema(cfg.schema)
-            .threshold(cfg.threshold)
-            .backend(cfg.backend)
-            .mutation(cfg.mutation);
-        let store = Arc::new(FactorStore::build(spec, items, cfg.shards)?);
+        let store =
+            Arc::new(FactorStore::build(Self::spec_of(&cfg), items, cfg.shards)?);
+        Self::start_with_store(cfg, store, factory)
+    }
+
+    /// Warm-start from a `GSNP` snapshot written by
+    /// [`Coordinator::save_snapshot`] (or the background checkpointer):
+    /// every shard engine is reassembled from its serialised state — no
+    /// index rebuild — and serving resumes at the snapshotted catalogue
+    /// version.
+    ///
+    /// The snapshot is the source of truth for the engine state; a
+    /// `cfg` that *disagrees* with it (backend, schema, threshold,
+    /// max_delta, shard count, or k) is an explicit error, never a
+    /// silent override — pass a matching config or rebuild from factors.
+    pub fn start_from_snapshot(
+        cfg: ServeConfig,
+        path: &str,
+        factory: ScorerFactory,
+    ) -> Result<Coordinator> {
+        let cfg = cfg.validated()?;
+        let store = Arc::new(FactorStore::from_snapshot(path)?);
+        let snap_spec = store.spec();
+        // compare only the spec fields a ServeConfig can express — the
+        // snapshot's seed/min_overlap are not serving config and stay
+        // authoritative (future rebuilds use the store's spec anyway)
+        let mask = explicit::SCHEMA
+            | explicit::THRESHOLD
+            | explicit::BACKEND
+            | explicit::MUTATION;
+        let conflicts =
+            Self::spec_of(&cfg).conflicts_with(&snap_spec, mask, "config");
+        if !conflicts.is_empty() {
+            return Err(GeomapError::Config(format!(
+                "snapshot '{path}' conflicts with the serving config: {}; \
+                 align the config or rebuild from factors",
+                conflicts.join(", ")
+            )));
+        }
+        if store.n_shards() != cfg.shards {
+            return Err(GeomapError::Config(format!(
+                "snapshot '{path}' holds {} shards but the config wants {}; \
+                 re-sharding needs a rebuild from factors",
+                store.n_shards(),
+                cfg.shards
+            )));
+        }
+        let dim = store.snapshot().shards[0].engine.dim();
+        if dim != cfg.k {
+            return Err(GeomapError::Shape(format!(
+                "snapshot item dim {dim} != configured k {}",
+                cfg.k
+            )));
+        }
+        Self::start_with_store(cfg, store, factory)
+    }
+
+    fn start_with_store(
+        cfg: ServeConfig,
+        store: Arc<FactorStore>,
+        factory: ScorerFactory,
+    ) -> Result<Coordinator> {
         let queue = Arc::new(BoundedQueue::new(cfg.queue_cap));
         let metrics = Arc::new(ServeMetrics::new());
         let closing = Arc::new(AtomicBool::new(false));
@@ -124,6 +191,28 @@ impl Coordinator {
                 .expect("spawn dispatcher")
         };
 
+        let checkpointer = match cfg.checkpoint.clone() {
+            Some(ck) => {
+                // version continuity with a reused checkpoint dir: a cold
+                // start resets versions to 1, which would let a previous
+                // incarnation's higher-numbered snapshots outrank (and on
+                // the next warm start roll back) everything we write
+                if let Some(latest) =
+                    crate::snapshot::latest_snapshot(&ck.dir)?
+                {
+                    if let Some(v) =
+                        crate::snapshot::checkpoint::version_of(&latest)
+                    {
+                        if store.snapshot().version < v {
+                            store.ensure_version_at_least(v + 1);
+                        }
+                    }
+                }
+                Some(Checkpointer::spawn(ck, Arc::clone(&store)))
+            }
+            None => None,
+        };
+
         Ok(Coordinator {
             cfg,
             store,
@@ -132,6 +221,7 @@ impl Coordinator {
             closing,
             dispatcher: Some(dispatcher),
             workers,
+            checkpointer,
         })
     }
 
@@ -214,8 +304,24 @@ impl Coordinator {
         self.store.snapshot().total_items
     }
 
-    /// Drain and stop all threads.
-    pub fn shutdown(mut self) {
+    /// Current catalogue version.
+    pub fn version(&self) -> u64 {
+        self.store.snapshot().version
+    }
+
+    /// Snapshot the serving catalogue to `path` now (atomic tmp-file +
+    /// rename, off the read path). Returns the saved catalogue version.
+    /// Warm-start it later with [`Coordinator::start_from_snapshot`].
+    pub fn save_snapshot(&self, path: &str) -> Result<u64> {
+        self.store.save_snapshot(path)
+    }
+
+    fn stop_threads(&mut self) {
+        // the checkpointer first: it takes a final snapshot of the
+        // still-consistent store before anything is torn down
+        if let Some(ck) = self.checkpointer.take() {
+            ck.stop();
+        }
         self.closing.store(true, Ordering::Release);
         self.queue.close();
         if let Some(d) = self.dispatcher.take() {
@@ -225,18 +331,17 @@ impl Coordinator {
             let _ = w.join();
         }
     }
+
+    /// Drain and stop all threads (final checkpoint included when
+    /// background checkpointing is configured).
+    pub fn shutdown(mut self) {
+        self.stop_threads();
+    }
 }
 
 impl Drop for Coordinator {
     fn drop(&mut self) {
-        self.closing.store(true, Ordering::Release);
-        self.queue.close();
-        if let Some(d) = self.dispatcher.take() {
-            let _ = d.join();
-        }
-        for w in self.workers.drain(..) {
-            let _ = w.join();
-        }
+        self.stop_threads();
     }
 }
 
@@ -569,6 +674,105 @@ mod tests {
             cpu_scorer_factory()
         )
         .is_err());
+    }
+
+    #[test]
+    fn warm_start_serves_identically_and_rejects_conflicts() {
+        let dir = std::env::temp_dir().join("geomap-server-warmstart");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("coord.gsnp").to_string_lossy().into_owned();
+        let k = 8;
+        let coord = Coordinator::start(
+            test_cfg(k, 2),
+            items(150, k, 40),
+            cpu_scorer_factory(),
+        )
+        .unwrap();
+        // leave mutation state in the snapshot
+        coord.remove(7).unwrap();
+        let f: Vec<f32> = vec![0.25; k];
+        coord.upsert(150, &f).unwrap();
+        let saved = coord.save_snapshot(&path).unwrap();
+        assert_eq!(saved, coord.version());
+
+        let mut rng = Rng::seeded(41);
+        let users: Vec<Vec<f32>> = (0..8)
+            .map(|_| (0..k).map(|_| rng.gaussian_f32()).collect())
+            .collect();
+        let want: Vec<_> =
+            users.iter().map(|u| coord.submit(u.clone(), 6).unwrap()).collect();
+        coord.shutdown();
+
+        let warm = Coordinator::start_from_snapshot(
+            test_cfg(k, 2),
+            &path,
+            cpu_scorer_factory(),
+        )
+        .unwrap();
+        assert_eq!(warm.total_items(), 151);
+        assert_eq!(warm.version(), saved);
+        for (u, w) in users.iter().zip(&want) {
+            let got = warm.submit(u.clone(), 6).unwrap();
+            assert_eq!(got.candidates, w.candidates);
+            assert_eq!(
+                got.results.iter().map(|s| (s.id, s.score)).collect::<Vec<_>>(),
+                w.results.iter().map(|s| (s.id, s.score)).collect::<Vec<_>>(),
+                "warm-started engine must serve byte-identical results"
+            );
+        }
+        warm.shutdown();
+
+        // conflicting config is an explicit error, not a silent override
+        let mut wrong = test_cfg(k, 2);
+        wrong.threshold = 0.9;
+        let err = Coordinator::start_from_snapshot(
+            wrong,
+            &path,
+            cpu_scorer_factory(),
+        )
+        .map(|c| c.shutdown())
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("conflicts"), "{err}");
+        let wrong_shards = test_cfg(k, 3);
+        assert!(Coordinator::start_from_snapshot(
+            wrong_shards,
+            &path,
+            cpu_scorer_factory()
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn checkpointer_runs_through_coordinator() {
+        let dir = std::env::temp_dir()
+            .join("geomap-server-ckpt")
+            .join(format!("{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let dir_s = dir.to_string_lossy().into_owned();
+        let k = 8;
+        let mut cfg = test_cfg(k, 1);
+        cfg.checkpoint = Some(crate::configx::CheckpointConfig {
+            dir: dir_s.clone(),
+            every_ms: 10,
+            keep_last: 2,
+        });
+        let coord = Coordinator::start(
+            cfg.clone(),
+            items(60, k, 50),
+            cpu_scorer_factory(),
+        )
+        .unwrap();
+        coord.upsert(60, &vec![0.5; k]).unwrap();
+        let v = coord.version();
+        coord.shutdown(); // takes the final checkpoint
+        let latest = crate::snapshot::latest_snapshot(&dir_s).unwrap().unwrap();
+        let warm =
+            Coordinator::start_from_snapshot(cfg, &latest, cpu_scorer_factory())
+                .unwrap();
+        assert_eq!(warm.version(), v);
+        assert_eq!(warm.total_items(), 61);
+        warm.shutdown();
     }
 
     #[test]

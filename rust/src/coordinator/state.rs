@@ -207,6 +207,82 @@ impl FactorStore {
     pub fn n_shards(&self) -> usize {
         self.n_shards
     }
+
+    /// The engine build spec every shard is constructed with.
+    pub fn spec(&self) -> EngineBuilder {
+        self.spec
+    }
+
+    /// Raise the catalogue version to at least `floor` (no-op when
+    /// already there). Used at startup for version continuity with a
+    /// reused checkpoint directory: a cold start resets versions to 1,
+    /// and without the bump a previous incarnation's higher-numbered
+    /// snapshots would outrank — and on the next warm start roll back —
+    /// everything the new incarnation writes.
+    pub(crate) fn ensure_version_at_least(&self, floor: u64) {
+        let _g = self.update.lock().unwrap();
+        let snap = self.snapshot();
+        if snap.version >= floor {
+            return;
+        }
+        let set = ShardSet {
+            version: floor,
+            shards: snap.shards.clone(),
+            total_items: snap.total_items,
+        };
+        *self.current.write().unwrap() = Arc::new(set);
+    }
+
+    /// Persist the current shard set as a `GSNP` snapshot at `path`
+    /// (atomic tmp-file + rename). Readers are not blocked: the snapshot
+    /// is taken from an `Arc` clone of the current set, exactly like a
+    /// serving batch. Returns the catalogue version that was saved.
+    pub fn save_snapshot(&self, path: &str) -> Result<u64> {
+        let snap = self.snapshot();
+        let shards: Vec<(u32, &Engine)> =
+            snap.shards.iter().map(|s| (s.base_id, &s.engine)).collect();
+        crate::snapshot::save_engines(path, &shards, snap.version)?;
+        Ok(snap.version)
+    }
+
+    /// Warm-start a factor store from a snapshot written by
+    /// [`save_snapshot`](FactorStore::save_snapshot): every shard engine
+    /// is reassembled from its serialised state (no φ re-mapping) and
+    /// the catalogue version continues where the snapshot left off.
+    pub fn from_snapshot(path: &str) -> Result<FactorStore> {
+        let loaded = crate::snapshot::load_engines(path)?;
+        let spec = loaded.shards[0].1.spec();
+        let mut shards = Vec::with_capacity(loaded.shards.len());
+        let mut expect_base = 0u32;
+        for (id, (base_id, engine)) in loaded.shards.into_iter().enumerate() {
+            if base_id != expect_base {
+                return Err(GeomapError::Artifact(format!(
+                    "{path}: shard {id} starts at id {base_id}, expected \
+                     {expect_base} (shards must tile the catalogue)"
+                )));
+            }
+            if !engine.spec().same_spec(&spec) {
+                return Err(GeomapError::Artifact(format!(
+                    "{path}: shard {id} was built with a different engine \
+                     spec than shard 0"
+                )));
+            }
+            expect_base += engine.len() as u32;
+            shards.push(Arc::new(Shard { id, base_id, engine }));
+        }
+        let n_shards = shards.len();
+        let set = ShardSet {
+            version: loaded.catalogue_version,
+            shards,
+            total_items: expect_base as usize,
+        };
+        Ok(FactorStore {
+            spec,
+            n_shards,
+            current: RwLock::new(Arc::new(set)),
+            update: Mutex::new(()),
+        })
+    }
 }
 
 #[cfg(test)]
@@ -320,6 +396,38 @@ mod tests {
         assert!(s.remove(3).is_err());
         // whole-catalogue swap still works
         assert!(s.swap_items(items(10, 8, 5)).is_ok());
+    }
+
+    #[test]
+    fn snapshot_roundtrips_sharded_store() {
+        let dir = std::env::temp_dir().join("geomap-state-snap");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("store.gsnp").to_string_lossy().into_owned();
+        let s = store(103, 4);
+        // leave some mutation state pending so the delta path is exercised
+        s.upsert(5, &[0.25; 8]).unwrap();
+        s.remove(40).unwrap();
+        let saved_version = s.save_snapshot(&path).unwrap();
+        assert_eq!(saved_version, s.snapshot().version);
+
+        let restored = FactorStore::from_snapshot(&path).unwrap();
+        assert_eq!(restored.n_shards(), 4);
+        assert!(restored.spec().same_spec(&s.spec()));
+        let (a, b) = (s.snapshot(), restored.snapshot());
+        assert_eq!(b.version, a.version);
+        assert_eq!(b.total_items, a.total_items);
+        for (sa, sb) in a.shards.iter().zip(&b.shards) {
+            assert_eq!(sb.base_id, sa.base_id);
+            assert_eq!(sb.items(), sa.items());
+            let (stats_a, stats_b) = (sa.engine.stats(), sb.engine.stats());
+            assert_eq!(stats_b.live, stats_a.live);
+            assert_eq!(stats_b.pending, stats_a.pending);
+            assert_eq!(stats_b.tombstones, stats_a.tombstones);
+        }
+        // the restored store keeps mutating from the restored version
+        assert_eq!(restored.snapshot().shards[1].engine.factor(40 - 26), None);
+        let v = restored.upsert(103, &[0.5; 8]).unwrap();
+        assert_eq!(v, saved_version + 1);
     }
 
     #[test]

@@ -2,14 +2,42 @@
 //! (`GMF1`: magic, dims, row-major f32 LE) so trained factors can move
 //! between the `train`, `map`, `eval` and `serve` CLI stages without
 //! retraining.
+//!
+//! Integrity shares the snapshot subsystem's CRC-32 helper: every file
+//! written by this build carries a 4-byte CRC footer over the payload,
+//! and the loader verifies it. Footer-less files written by older builds
+//! still load (the footer is strictly additive). Malformed headers —
+//! dimension overflow, implausible sizes, truncated payloads — are
+//! rejected with a clear [`GeomapError::Artifact`] instead of a panic or
+//! a short read.
 
 use crate::error::{GeomapError, Result};
 use crate::linalg::Matrix;
+use crate::snapshot::format::{cast_f32s, crc32, push_f32s};
 use std::io::{Read, Write};
 
 const MAGIC: &[u8; 4] = b"GMF1";
 
-/// Write a matrix to `path` in GMF1 format.
+/// Hard cap on stored elements (2^31 f32s = 8 GiB) — anything larger is
+/// treated as a corrupt header, not an allocation request.
+const MAX_ELEMS: usize = 1 << 31;
+
+/// Only an `UnexpectedEof` is evidence of a truncated *file*; any other
+/// read failure is a real I/O error and must keep its kind, or the
+/// operator ends up debugging nonexistent corruption on a flaky disk.
+fn short_read(
+    path: &str,
+    e: std::io::Error,
+    msg: impl FnOnce() -> String,
+) -> GeomapError {
+    if e.kind() == std::io::ErrorKind::UnexpectedEof {
+        GeomapError::Artifact(msg())
+    } else {
+        GeomapError::io(path, e)
+    }
+}
+
+/// Write a matrix to `path` in GMF1 format (with CRC footer).
 pub fn save_matrix(path: &str, m: &Matrix) -> Result<()> {
     let mut f = std::fs::File::create(path).map_err(|e| GeomapError::io(path, e))?;
     let mut header = Vec::with_capacity(20);
@@ -17,11 +45,11 @@ pub fn save_matrix(path: &str, m: &Matrix) -> Result<()> {
     header.extend_from_slice(&(m.rows() as u64).to_le_bytes());
     header.extend_from_slice(&(m.cols() as u64).to_le_bytes());
     f.write_all(&header).map_err(|e| GeomapError::io(path, e))?;
-    // row-major f32 little-endian payload
-    let mut buf = Vec::with_capacity(m.as_slice().len() * 4);
-    for v in m.as_slice() {
-        buf.extend_from_slice(&v.to_le_bytes());
-    }
+    // row-major f32 little-endian payload + CRC-32 footer
+    let mut buf = Vec::with_capacity(m.as_slice().len() * 4 + 4);
+    push_f32s(&mut buf, m.as_slice());
+    let crc = crc32(&buf);
+    buf.extend_from_slice(&crc.to_le_bytes());
     f.write_all(&buf).map_err(|e| GeomapError::io(path, e))
 }
 
@@ -29,27 +57,59 @@ pub fn save_matrix(path: &str, m: &Matrix) -> Result<()> {
 pub fn load_matrix(path: &str) -> Result<Matrix> {
     let mut f = std::fs::File::open(path).map_err(|e| GeomapError::io(path, e))?;
     let mut header = [0u8; 20];
-    f.read_exact(&mut header).map_err(|e| GeomapError::io(path, e))?;
+    f.read_exact(&mut header).map_err(|e| short_read(path, e, || {
+        format!("{path}: too short for a GMF1 header (20 bytes)")
+    }))?;
     if &header[0..4] != MAGIC {
         return Err(GeomapError::Artifact(format!(
             "{path}: not a GMF1 factor file"
         )));
     }
-    let rows = u64::from_le_bytes(header[4..12].try_into().unwrap()) as usize;
-    let cols = u64::from_le_bytes(header[12..20].try_into().unwrap()) as usize;
-    let n = rows
-        .checked_mul(cols)
-        .filter(|&n| n <= (1 << 31))
+    let rows = u64::from_le_bytes(header[4..12].try_into().unwrap());
+    let cols = u64::from_le_bytes(header[12..20].try_into().unwrap());
+    let n = usize::try_from(rows)
+        .ok()
+        .zip(usize::try_from(cols).ok())
+        .and_then(|(r, c)| r.checked_mul(c))
+        .filter(|&n| n <= MAX_ELEMS)
         .ok_or_else(|| {
-            GeomapError::Artifact(format!("{path}: implausible dims {rows}x{cols}"))
+            GeomapError::Artifact(format!(
+                "{path}: implausible dims {rows}x{cols} (corrupt header?)"
+            ))
         })?;
-    let mut buf = vec![0u8; n * 4];
-    f.read_exact(&mut buf).map_err(|e| GeomapError::io(path, e))?;
-    let data: Vec<f32> = buf
-        .chunks_exact(4)
-        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
-        .collect();
-    Matrix::from_vec(rows, cols, data)
+    let want = n * 4;
+    let mut buf = vec![0u8; want];
+    f.read_exact(&mut buf).map_err(|e| short_read(path, e, || {
+        format!(
+            "{path}: truncated payload (want {want} bytes for \
+             {rows}x{cols} f32s)"
+        )
+    }))?;
+    // optional CRC-32 footer (absent in files from older builds)
+    let mut footer = Vec::with_capacity(4);
+    f.take(8)
+        .read_to_end(&mut footer)
+        .map_err(|e| GeomapError::io(path, e))?;
+    match footer.len() {
+        0 => {} // legacy file: no footer to verify
+        4 => {
+            let want_crc = u32::from_le_bytes(footer[..].try_into().unwrap());
+            let got_crc = crc32(&buf);
+            if got_crc != want_crc {
+                return Err(GeomapError::Artifact(format!(
+                    "{path}: payload CRC mismatch (stored {want_crc:#010x}, \
+                     computed {got_crc:#010x}) — corrupt factor file"
+                )));
+            }
+        }
+        k => {
+            return Err(GeomapError::Artifact(format!(
+                "{path}: {k} trailing bytes after the payload (neither a \
+                 CRC footer nor a clean end)"
+            )));
+        }
+    }
+    Matrix::from_vec(rows as usize, cols as usize, cast_f32s(&buf)?)
 }
 
 /// Save user + item factors as `<stem>.users.gmf` / `<stem>.items.gmf`.
@@ -108,13 +168,82 @@ mod tests {
     }
 
     #[test]
-    fn rejects_truncated_payload() {
+    fn rejects_truncated_payload_with_artifact_error() {
         let mut rng = Rng::seeded(3);
         let m = Matrix::gaussian(&mut rng, 8, 8, 1.0);
         let path = tmp("trunc.gmf");
         save_matrix(&path, &m).unwrap();
         let bytes = std::fs::read(&path).unwrap();
-        std::fs::write(&path, &bytes[..bytes.len() - 7]).unwrap();
-        assert!(load_matrix(&path).is_err());
+        std::fs::write(&path, &bytes[..bytes.len() - 11]).unwrap();
+        let err = load_matrix(&path).unwrap_err();
+        assert!(
+            matches!(err, GeomapError::Artifact(_)),
+            "want Artifact, got {err}"
+        );
+        assert!(err.to_string().contains("truncated"), "{err}");
+    }
+
+    #[test]
+    fn rejects_dim_overflow_header() {
+        // rows * cols overflows u64 multiplication into a small value if
+        // done unchecked; the loader must reject it from the header alone
+        let path = tmp("overflow.gmf");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&(u64::MAX / 2).to_le_bytes());
+        bytes.extend_from_slice(&8u64.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load_matrix(&path).unwrap_err();
+        assert!(
+            matches!(err, GeomapError::Artifact(_)),
+            "want Artifact, got {err}"
+        );
+        assert!(err.to_string().contains("implausible dims"), "{err}");
+        // and a product that stays in range but is absurdly large
+        let path2 = tmp("huge.gmf");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&(1u64 << 20).to_le_bytes());
+        bytes.extend_from_slice(&(1u64 << 20).to_le_bytes());
+        std::fs::write(&path2, &bytes).unwrap();
+        assert!(load_matrix(&path2).is_err());
+    }
+
+    #[test]
+    fn rejects_corrupt_payload_via_crc() {
+        let mut rng = Rng::seeded(4);
+        let m = Matrix::gaussian(&mut rng, 6, 5, 1.0);
+        let path = tmp("crc.gmf");
+        save_matrix(&path, &m).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[24] ^= 0x40; // flip a payload bit
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load_matrix(&path).unwrap_err().to_string();
+        assert!(err.contains("CRC mismatch"), "{err}");
+    }
+
+    #[test]
+    fn legacy_files_without_footer_still_load() {
+        let mut rng = Rng::seeded(5);
+        let m = Matrix::gaussian(&mut rng, 4, 3, 1.0);
+        let path = tmp("legacy.gmf");
+        save_matrix(&path, &m).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        // strip the 4-byte footer: exactly what an old-build file looks like
+        std::fs::write(&path, &bytes[..bytes.len() - 4]).unwrap();
+        assert_eq!(load_matrix(&path).unwrap(), m);
+    }
+
+    #[test]
+    fn rejects_odd_trailing_bytes() {
+        let mut rng = Rng::seeded(6);
+        let m = Matrix::gaussian(&mut rng, 3, 3, 1.0);
+        let path = tmp("trailing.gmf");
+        save_matrix(&path, &m).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes.truncate(bytes.len() - 2); // footer cut in half
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load_matrix(&path).unwrap_err().to_string();
+        assert!(err.contains("trailing"), "{err}");
     }
 }

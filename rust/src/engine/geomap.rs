@@ -27,39 +27,42 @@ use std::collections::HashMap;
 use std::sync::Arc;
 
 /// Immutable merged segment, shared across copy-on-write clones.
-struct BaseSegment {
-    index: InvertedIndex,
+///
+/// Fields are crate-visible so the `snapshot` codec can serialise and
+/// reassemble the exact state without re-mapping.
+pub(crate) struct BaseSegment {
+    pub(crate) index: InvertedIndex,
     /// Dense factors, row order (row `r` holds item `ids[r]`).
-    items: Matrix,
+    pub(crate) items: Matrix,
     /// Row → global id (strictly increasing).
-    ids: Vec<u32>,
+    pub(crate) ids: Vec<u32>,
     /// Global id → row, `u32::MAX` for ids with no base row.
-    row_of: Vec<u32>,
+    pub(crate) row_of: Vec<u32>,
     /// True when `ids[r] == r` for every row (no holes): enables the
     /// dense-factor fast path.
-    identity: bool,
+    pub(crate) identity: bool,
 }
 
 /// Growable segment of recent upserts.
 #[derive(Clone)]
-struct DeltaSegment {
-    k: usize,
+pub(crate) struct DeltaSegment {
+    pub(crate) k: usize,
     /// Flattened factors: delta row `r` lives at `[r*k, (r+1)*k)`.
-    factors: Vec<f32>,
+    pub(crate) factors: Vec<f32>,
     /// Delta row → global id.
-    ids: Vec<u32>,
+    pub(crate) ids: Vec<u32>,
     /// Delta row liveness (an id upserted twice leaves a dead first row).
-    alive: Vec<bool>,
+    pub(crate) alive: Vec<bool>,
     /// Embedding dimension → delta rows whose φ support contains it.
-    postings: HashMap<u32, Vec<u32>>,
+    pub(crate) postings: HashMap<u32, Vec<u32>>,
     /// Live global id → delta row.
-    row_of: HashMap<u32, u32>,
+    pub(crate) row_of: HashMap<u32, u32>,
     /// Total φ support size across delta rows (memory accounting).
-    nnz: usize,
+    pub(crate) nnz: usize,
 }
 
 impl DeltaSegment {
-    fn new(k: usize) -> Self {
+    pub(crate) fn new(k: usize) -> Self {
         DeltaSegment {
             k,
             factors: Vec::new(),
@@ -71,7 +74,7 @@ impl DeltaSegment {
         }
     }
 
-    fn row(&self, dr: u32) -> &[f32] {
+    pub(crate) fn row(&self, dr: u32) -> &[f32] {
         let r = dr as usize;
         &self.factors[r * self.k..(r + 1) * self.k]
     }
@@ -88,17 +91,17 @@ struct GeomapScratch {
 /// incremental catalogue mutation (see module docs).
 #[derive(Clone)]
 pub struct GeomapEngine {
-    mapper: Arc<Mapper>,
-    base: Arc<BaseSegment>,
+    pub(crate) mapper: Arc<Mapper>,
+    pub(crate) base: Arc<BaseSegment>,
     /// Tombstones per base row (removed or superseded by an upsert).
-    base_dead: Vec<bool>,
-    dead_rows: usize,
-    delta: DeltaSegment,
-    live: usize,
+    pub(crate) base_dead: Vec<bool>,
+    pub(crate) dead_rows: usize,
+    pub(crate) delta: DeltaSegment,
+    pub(crate) live: usize,
     /// Address space: every id ever assigned is `< addr`.
-    addr: usize,
-    min_overlap: usize,
-    mutation: MutationConfig,
+    pub(crate) addr: usize,
+    pub(crate) min_overlap: usize,
+    pub(crate) mutation: MutationConfig,
 }
 
 impl GeomapEngine {
@@ -393,6 +396,10 @@ impl CandidateSource for GeomapEngine {
 
     fn clone_box(&self) -> Option<Box<dyn CandidateSource>> {
         Some(Box::new(self.clone()))
+    }
+
+    fn as_any(&self) -> Option<&dyn std::any::Any> {
+        Some(self)
     }
 }
 

@@ -39,6 +39,7 @@ mod geomap;
 mod sources;
 
 pub use self::geomap::GeomapEngine;
+pub(crate) use self::geomap::{BaseSegment, DeltaSegment};
 pub use self::sources::FilterSource;
 
 use crate::configx::{Backend, MutationConfig, SchemaConfig};
@@ -183,6 +184,13 @@ pub trait CandidateSource: Send + Sync {
     fn clone_box(&self) -> Option<Box<dyn CandidateSource>> {
         None
     }
+
+    /// Concrete-type escape hatch for the snapshot codec (sources whose
+    /// internal state is persisted override this). `None` means the
+    /// source is reconstructed from factors + config alone.
+    fn as_any(&self) -> Option<&dyn Any> {
+        None
+    }
 }
 
 /// Incremental catalogue mutation: point upserts and removals without a
@@ -209,15 +217,29 @@ pub trait MutableCatalogue {
     fn merge(&mut self) -> Result<()>;
 }
 
+/// Explicit-setting bits for [`EngineBuilder`] fields, so
+/// [`EngineBuilder::from_snapshot`] can tell a deliberate override from
+/// an untouched default and refuse the conflict loudly.
+pub(crate) mod explicit {
+    pub const SCHEMA: u8 = 1 << 0;
+    pub const THRESHOLD: u8 = 1 << 1;
+    pub const BACKEND: u8 = 1 << 2;
+    pub const MIN_OVERLAP: u8 = 1 << 3;
+    pub const SEED: u8 = 1 << 4;
+    pub const MUTATION: u8 = 1 << 5;
+}
+
 /// Builder-style construction of an [`Engine`]; see [`Engine::builder`].
 #[derive(Clone, Copy, Debug)]
 pub struct EngineBuilder {
-    schema: SchemaConfig,
-    threshold: f32,
-    backend: Backend,
-    min_overlap: usize,
-    seed: u64,
-    mutation: MutationConfig,
+    pub(crate) schema: SchemaConfig,
+    pub(crate) threshold: f32,
+    pub(crate) backend: Backend,
+    pub(crate) min_overlap: usize,
+    pub(crate) seed: u64,
+    pub(crate) mutation: MutationConfig,
+    /// Bitmask of fields the caller set explicitly (see [`explicit`]).
+    pub(crate) explicit: u8,
 }
 
 impl Default for EngineBuilder {
@@ -229,6 +251,7 @@ impl Default for EngineBuilder {
             min_overlap: 1,
             seed: 0xE0A1,
             mutation: MutationConfig::default(),
+            explicit: 0,
         }
     }
 }
@@ -237,37 +260,133 @@ impl EngineBuilder {
     /// Sparse-mapping schema (geomap backend).
     pub fn schema(mut self, schema: SchemaConfig) -> Self {
         self.schema = schema;
+        self.explicit |= explicit::SCHEMA;
         self
     }
 
     /// Relative pre-mapping threshold in RMS units (geomap backend).
     pub fn threshold(mut self, threshold: f32) -> Self {
         self.threshold = threshold;
+        self.explicit |= explicit::THRESHOLD;
         self
     }
 
     /// Candidate-pruning backend.
     pub fn backend(mut self, backend: Backend) -> Self {
         self.backend = backend;
+        self.explicit |= explicit::BACKEND;
         self
     }
 
     /// Minimum support overlap for a geomap candidate (paper uses 1).
     pub fn min_overlap(mut self, min_overlap: usize) -> Self {
         self.min_overlap = min_overlap.max(1);
+        self.explicit |= explicit::MIN_OVERLAP;
         self
     }
 
     /// RNG seed for the randomised baselines.
     pub fn seed(mut self, seed: u64) -> Self {
         self.seed = seed;
+        self.explicit |= explicit::SEED;
         self
     }
 
     /// Incremental-mutation policy (geomap backend).
     pub fn mutation(mut self, mutation: MutationConfig) -> Self {
         self.mutation = mutation;
+        self.explicit |= explicit::MUTATION;
         self
+    }
+
+    /// True when both builders describe the same engine spec (the
+    /// explicit-setting mask is ignored).
+    pub fn same_spec(&self, other: &EngineBuilder) -> bool {
+        self.conflicts_with(other, u8::MAX, "a").is_empty()
+    }
+
+    /// Field-by-field conflict report against a snapshot spec,
+    /// restricted to the fields selected by `mask` (see [`explicit`]);
+    /// `ours` labels this side in the messages ("builder", "config").
+    /// The single source of truth for every warm-start conflict check,
+    /// so the entry points cannot drift apart.
+    pub(crate) fn conflicts_with(
+        &self,
+        other: &EngineBuilder,
+        mask: u8,
+        ours: &str,
+    ) -> Vec<String> {
+        let mut out = Vec::new();
+        if mask & explicit::SCHEMA != 0 && self.schema != other.schema {
+            out.push(format!(
+                "schema ({ours} {}, snapshot {})",
+                self.schema.spec(),
+                other.schema.spec()
+            ));
+        }
+        if mask & explicit::THRESHOLD != 0 && self.threshold != other.threshold
+        {
+            out.push(format!(
+                "threshold ({ours} {}, snapshot {})",
+                self.threshold, other.threshold
+            ));
+        }
+        if mask & explicit::BACKEND != 0 && self.backend != other.backend {
+            out.push(format!(
+                "backend ({ours} {}, snapshot {})",
+                self.backend.spec(),
+                other.backend.spec()
+            ));
+        }
+        if mask & explicit::MIN_OVERLAP != 0
+            && self.min_overlap != other.min_overlap
+        {
+            out.push(format!(
+                "min_overlap ({ours} {}, snapshot {})",
+                self.min_overlap, other.min_overlap
+            ));
+        }
+        if mask & explicit::SEED != 0 && self.seed != other.seed {
+            out.push(format!(
+                "seed ({ours} {}, snapshot {})",
+                self.seed, other.seed
+            ));
+        }
+        if mask & explicit::MUTATION != 0 && self.mutation != other.mutation {
+            out.push(format!(
+                "max_delta ({ours} {}, snapshot {})",
+                self.mutation.max_delta, other.mutation.max_delta
+            ));
+        }
+        out
+    }
+
+    /// Load a built engine back from a `GSNP` snapshot file instead of
+    /// rebuilding it from factors (see `docs/SNAPSHOT.md`).
+    ///
+    /// The snapshot carries the full build spec, which round-trips
+    /// through `configx` — it is the source of truth. Builder fields
+    /// left at their defaults are simply replaced; a field the caller
+    /// *explicitly* set to a conflicting value is an error, never a
+    /// silent override:
+    ///
+    /// ```no_run
+    /// use geomap::engine::Engine;
+    /// let engine = Engine::builder().from_snapshot("catalogue.gsnp")?;
+    /// # Ok::<(), geomap::error::GeomapError>(())
+    /// ```
+    pub fn from_snapshot(self, path: &str) -> Result<Engine> {
+        let engine = crate::snapshot::load_engine(path)?;
+        let snap = engine.spec();
+        let conflicts = self.conflicts_with(&snap, self.explicit, "builder");
+        if !conflicts.is_empty() {
+            return Err(GeomapError::Config(format!(
+                "snapshot '{path}' conflicts with explicit builder settings: \
+                 {}; drop the overrides or rebuild from factors",
+                conflicts.join(", ")
+            )));
+        }
+        Ok(engine)
     }
 
     /// Build the engine over an item-factor catalogue (row = item id).
@@ -320,7 +439,7 @@ impl EngineBuilder {
                 Box::new(FilterSource::new(Box::new(filter), items))
             }
         };
-        Ok(Engine { source, backend: self.backend })
+        Ok(Engine { source, spec: self })
     }
 }
 
@@ -328,7 +447,7 @@ impl EngineBuilder {
 /// rescore survivors exactly, return the top-κ.
 pub struct Engine {
     source: Box<dyn CandidateSource>,
-    backend: Backend,
+    spec: EngineBuilder,
 }
 
 impl Engine {
@@ -337,9 +456,36 @@ impl Engine {
         EngineBuilder::default()
     }
 
+    /// Reassemble an engine from a deserialised source (snapshot path).
+    pub(crate) fn from_parts(
+        spec: EngineBuilder,
+        source: Box<dyn CandidateSource>,
+    ) -> Engine {
+        Engine { source, spec }
+    }
+
+    /// The full build spec this engine was constructed with.
+    pub fn spec(&self) -> EngineBuilder {
+        self.spec
+    }
+
     /// The configured backend.
     pub fn backend(&self) -> Backend {
-        self.backend
+        self.spec.backend
+    }
+
+    /// Persist the complete built state (index + factors + mutation
+    /// state + config) to a `GSNP` snapshot at `path`, atomically
+    /// (tmp file + rename). Returns the snapshot size in bytes.
+    ///
+    /// Load it back with [`EngineBuilder::from_snapshot`].
+    pub fn save_snapshot(&self, path: &str) -> Result<u64> {
+        crate::snapshot::save_engine(path, self)
+    }
+
+    /// Concrete geomap source, when that is the backend (snapshot codec).
+    pub(crate) fn geomap_source(&self) -> Option<&GeomapEngine> {
+        self.source.as_any()?.downcast_ref::<GeomapEngine>()
     }
 
     /// Source label for reports.
@@ -461,7 +607,7 @@ impl Engine {
     }
 
     fn mutable(&mut self) -> Result<&mut dyn MutableCatalogue> {
-        let backend = self.backend;
+        let backend = self.spec.backend;
         self.source.as_mutable().ok_or_else(|| {
             GeomapError::Config(format!(
                 "backend '{}' does not support incremental mutation",
@@ -488,7 +634,7 @@ impl Engine {
     /// Cheap structural clone for copy-on-write mutation; `None` when the
     /// backend does not support it.
     pub fn try_clone(&self) -> Option<Engine> {
-        Some(Engine { source: self.source.clone_box()?, backend: self.backend })
+        Some(Engine { source: self.source.clone_box()?, spec: self.spec })
     }
 }
 

@@ -8,8 +8,10 @@
 //! (fig 5).
 
 mod render;
+mod warmstart;
 
 pub use render::{render_bars, render_histogram, render_table};
+pub use warmstart::{measure_warmstart, verify_equivalent, WarmstartReport};
 
 use crate::configx::{Backend, SchemaConfig};
 use crate::engine::Engine;

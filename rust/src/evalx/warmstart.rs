@@ -1,0 +1,171 @@
+//! Warm-start evaluation: snapshot load vs rebuild-from-factors.
+//!
+//! The snapshot subsystem's claim is economic — the expensive offline
+//! build (map φ over the catalogue, materialise the inverted index) is
+//! paid once and cold starts become a file read. This module measures
+//! that claim the same way `evalx` measures the paper's discard/accuracy
+//! claims: build, save, load, verify equivalence, report wall-clock.
+
+use crate::engine::{Engine, EngineBuilder};
+use crate::error::{GeomapError, Result};
+use crate::linalg::Matrix;
+use crate::rng::Rng;
+use std::time::Instant;
+
+/// Timing report of one build → save → load cycle.
+#[derive(Clone, Debug)]
+pub struct WarmstartReport {
+    /// Engine label (backend + parameters).
+    pub label: String,
+    /// Catalogue size.
+    pub items: usize,
+    /// Rebuild-from-factors wall-clock (ms).
+    pub build_ms: f64,
+    /// Snapshot write wall-clock (ms).
+    pub save_ms: f64,
+    /// Snapshot load wall-clock (ms).
+    pub load_ms: f64,
+    /// Snapshot size on disk (bytes).
+    pub file_bytes: u64,
+}
+
+impl WarmstartReport {
+    /// How many times faster a warm start is than a rebuild.
+    pub fn speedup(&self) -> f64 {
+        if self.load_ms > 0.0 {
+            self.build_ms / self.load_ms
+        } else {
+            f64::INFINITY
+        }
+    }
+
+    /// One table row: label, build, save, load, size, speed-up.
+    pub fn row(&self) -> Vec<String> {
+        vec![
+            self.label.clone(),
+            format!("{:.1}", self.build_ms),
+            format!("{:.1}", self.save_ms),
+            format!("{:.2}", self.load_ms),
+            format!("{:.1}", self.file_bytes as f64 / 1024.0),
+            format!("{:.1}x", self.speedup()),
+        ]
+    }
+
+    /// Table header matching [`row`](WarmstartReport::row).
+    pub fn header() -> [&'static str; 6] {
+        ["engine", "build ms", "save ms", "load ms", "KiB", "warm-start"]
+    }
+}
+
+/// Build an engine from `items`, snapshot it to `path`, load it back,
+/// and verify the loaded engine serves *identical* top-k results on
+/// `probes` seeded queries. Returns the loaded engine and the timings.
+pub fn measure_warmstart(
+    spec: EngineBuilder,
+    items: &Matrix,
+    path: &str,
+    probes: usize,
+) -> Result<(Engine, WarmstartReport)> {
+    let t = Instant::now();
+    let built = spec.build(items.clone())?;
+    let build_ms = t.elapsed().as_secs_f64() * 1e3;
+
+    let t = Instant::now();
+    let file_bytes = built.save_snapshot(path)?;
+    let save_ms = t.elapsed().as_secs_f64() * 1e3;
+
+    let t = Instant::now();
+    let loaded = Engine::builder().from_snapshot(path)?;
+    let load_ms = t.elapsed().as_secs_f64() * 1e3;
+
+    verify_equivalent(&built, &loaded, probes)?;
+    let report = WarmstartReport {
+        label: built.label(),
+        items: built.len(),
+        build_ms,
+        save_ms,
+        load_ms,
+        file_bytes,
+    };
+    Ok((loaded, report))
+}
+
+/// Check that two engines return byte-identical top-10 results (ids and
+/// exact scores) for `probes` seeded Gaussian users.
+pub fn verify_equivalent(a: &Engine, b: &Engine, probes: usize) -> Result<()> {
+    if a.len() != b.len() || a.dim() != b.dim() {
+        return Err(GeomapError::Artifact(format!(
+            "engines disagree on shape: {}x{} vs {}x{}",
+            a.len(),
+            a.dim(),
+            b.len(),
+            b.dim()
+        )));
+    }
+    let k = a.dim();
+    let mut rng = Rng::seeded(0x5EED_CAFE);
+    for probe in 0..probes {
+        let user: Vec<f32> = (0..k).map(|_| rng.gaussian_f32()).collect();
+        let ra = a.top_k(&user, 10)?;
+        let rb = b.top_k(&user, 10)?;
+        let same = ra.len() == rb.len()
+            && ra
+                .iter()
+                .zip(&rb)
+                .all(|(x, y)| x.id == y.id && x.score == y.score);
+        if !same {
+            return Err(GeomapError::Artifact(format!(
+                "probe {probe}: top-k diverged between rebuilt and loaded \
+                 engines ({} results vs {})",
+                ra.len(),
+                rb.len()
+            )));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::configx::Backend;
+
+    fn tmp(name: &str) -> String {
+        let dir = std::env::temp_dir().join("geomap-warmstart");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name).to_string_lossy().into_owned()
+    }
+
+    #[test]
+    fn measure_roundtrips_and_reports() {
+        let mut rng = Rng::seeded(9);
+        let items = Matrix::gaussian(&mut rng, 200, 8, 1.0);
+        let (engine, report) = measure_warmstart(
+            Engine::builder().threshold(0.5),
+            &items,
+            &tmp("measure.gsnp"),
+            6,
+        )
+        .unwrap();
+        assert_eq!(engine.len(), 200);
+        assert_eq!(report.items, 200);
+        assert!(report.build_ms >= 0.0 && report.load_ms >= 0.0);
+        assert!(report.file_bytes > 0);
+        assert_eq!(report.row().len(), WarmstartReport::header().len());
+    }
+
+    #[test]
+    fn verify_catches_divergence() {
+        let mut rng = Rng::seeded(10);
+        let a = Engine::builder()
+            .backend(Backend::Brute)
+            .build(Matrix::gaussian(&mut rng, 50, 6, 1.0))
+            .unwrap();
+        let b = Engine::builder()
+            .backend(Backend::Brute)
+            .build(Matrix::gaussian(&mut rng, 50, 6, 1.0))
+            .unwrap();
+        assert!(verify_equivalent(&a, &a, 3).is_ok());
+        assert!(verify_equivalent(&a, &b, 3).is_err(), "different factors");
+    }
+}

@@ -91,6 +91,48 @@ impl InvertedIndex {
         Ok(Self::from_embeddings(&emb))
     }
 
+    /// Reassemble an index from its raw CSR arenas (the snapshot
+    /// warm-start path): `offsets` has `p + 1` monotone entries ending at
+    /// `postings.len()`, and every posting is an item id `< items`.
+    /// Shapes are fully validated so a corrupt or hand-rolled snapshot
+    /// fails here instead of panicking at query time.
+    pub fn from_raw_parts(
+        offsets: Vec<u32>,
+        postings: Vec<u32>,
+        items: usize,
+        p: usize,
+    ) -> Result<Self> {
+        use crate::error::GeomapError;
+        if offsets.len() != p + 1 {
+            return Err(GeomapError::Artifact(format!(
+                "index offsets len {} != p + 1 = {}",
+                offsets.len(),
+                p + 1
+            )));
+        }
+        if offsets.first() != Some(&0)
+            || *offsets.last().unwrap() as usize != postings.len()
+        {
+            return Err(GeomapError::Artifact(format!(
+                "index offsets must span [0, {}], got [{:?}, {:?}]",
+                postings.len(),
+                offsets.first(),
+                offsets.last()
+            )));
+        }
+        if offsets.windows(2).any(|w| w[0] > w[1]) {
+            return Err(GeomapError::Artifact(
+                "index offsets are not monotone".into(),
+            ));
+        }
+        if postings.iter().any(|&r| r as usize >= items) {
+            return Err(GeomapError::Artifact(format!(
+                "index posting references an item >= {items}"
+            )));
+        }
+        Ok(InvertedIndex { offsets, postings, items, p })
+    }
+
     /// Number of indexed items.
     pub fn items(&self) -> usize {
         self.items
@@ -99,6 +141,18 @@ impl InvertedIndex {
     /// Ambient dimension p.
     pub fn dim(&self) -> usize {
         self.p
+    }
+
+    /// The raw CSR offset arena (len = p + 1); with
+    /// [`postings_arena`](Self::postings_arena) this is the exact state
+    /// [`from_raw_parts`](Self::from_raw_parts) consumes.
+    pub fn offsets_arena(&self) -> &[u32] {
+        &self.offsets
+    }
+
+    /// The raw postings arena (item ids grouped by dimension).
+    pub fn postings_arena(&self) -> &[u32] {
+        &self.postings
     }
 
     /// Posting list for dimension `i`.
@@ -328,6 +382,44 @@ mod tests {
         assert_eq!(s.nonempty_dims, 4);
         assert_eq!(s.total_postings, 5);
         assert_eq!(s.max_posting_len, 2);
+    }
+
+    #[test]
+    fn raw_parts_roundtrip_and_validation() {
+        let idx = InvertedIndex::from_embeddings(&toy_embeddings());
+        let back = InvertedIndex::from_raw_parts(
+            idx.offsets_arena().to_vec(),
+            idx.postings_arena().to_vec(),
+            idx.items(),
+            idx.dim(),
+        )
+        .unwrap();
+        assert_eq!(back.posting(3), idx.posting(3));
+        assert_eq!(back.total_postings(), idx.total_postings());
+        // malformed shapes are rejected, not UB at query time
+        assert!(InvertedIndex::from_raw_parts(vec![0, 1], vec![0], 1, 8).is_err());
+        assert!(
+            InvertedIndex::from_raw_parts(vec![0; 9], vec![0], 3, 8).is_err(),
+            "offsets must end at postings.len()"
+        );
+        let mut offs = idx.offsets_arena().to_vec();
+        offs[2] = offs[3] + 1; // non-monotone
+        assert!(InvertedIndex::from_raw_parts(
+            offs,
+            idx.postings_arena().to_vec(),
+            idx.items(),
+            idx.dim()
+        )
+        .is_err());
+        assert!(
+            InvertedIndex::from_raw_parts(
+                idx.offsets_arena().to_vec(),
+                idx.postings_arena().to_vec(),
+                1, // postings reference ids >= 1
+                idx.dim()
+            )
+            .is_err()
+        );
     }
 
     #[test]

@@ -65,6 +65,7 @@ pub mod permutation;
 pub mod retrieval;
 pub mod rng;
 pub mod runtime;
+pub mod snapshot;
 pub mod sparse;
 pub mod tessellation;
 pub mod testing;
@@ -86,5 +87,6 @@ pub mod prelude {
     pub use crate::mf::{AlsTrainer, SgdTrainer};
     pub use crate::retrieval::{RecoveryReport, Retriever};
     pub use crate::rng::Rng;
+    pub use crate::snapshot::{load_engine, save_engine, SnapshotInfo};
     pub use crate::sparse::SparseVec;
 }

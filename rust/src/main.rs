@@ -13,6 +13,9 @@
 //!               CROS/PCA-tree) on synthetic or MovieLens-like factors.
 //! * `figures` — regenerate every figure of the paper (2a–5b).
 //! * `selftest`— verify PJRT artifacts against their golden cases.
+//! * `snapshot`— persist built engines: `save` a catalogue to a `GSNP`
+//!               snapshot, `inspect` its header/sections, `load` it back
+//!               with a load-vs-rebuild timing comparison.
 //!
 //! Run `geomap <subcommand> --help` for per-command options.
 
@@ -40,6 +43,7 @@ fn main() -> Result<()> {
         "eval" => cmd_eval(rest),
         "figures" => cmd_figures(rest),
         "selftest" => cmd_selftest(rest),
+        "snapshot" => cmd_snapshot(rest),
         "help" | "--help" | "-h" => {
             print!("{}", USAGE);
             Ok(())
@@ -51,7 +55,7 @@ fn main() -> Result<()> {
 const USAGE: &str = "\
 geomap — Geometry Aware Mappings for High Dimensional Sparse Factors
 
-USAGE: geomap <serve|map|train|eval|figures|selftest> [options]
+USAGE: geomap <serve|map|train|eval|figures|selftest|snapshot> [options]
 Run `geomap <subcommand> --help` for options.
 ";
 
@@ -151,6 +155,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         threshold: cli.get_f64("threshold")? as f32,
         backend: Backend::parse(cli.get("backend"))?,
         mutation: MutationConfig { max_delta: cli.get_usize("max-delta")? },
+        checkpoint: None,
     };
     let factory = if cfg.use_xla {
         xla_scorer_factory(&cfg.artifacts_dir)
@@ -339,6 +344,147 @@ fn cmd_figures(args: &[String]) -> Result<()> {
 // examples/figures.rs so both stay in sync.
 #[path = "../../examples/figures_impl.rs"]
 mod geomap_figures;
+
+fn cmd_snapshot(args: &[String]) -> Result<()> {
+    let verb = args.first().map(String::as_str).unwrap_or("");
+    let rest = if args.is_empty() { &[][..] } else { &args[1..] };
+    match verb {
+        "save" => cmd_snapshot_save(rest),
+        "inspect" => cmd_snapshot_inspect(rest),
+        "load" => cmd_snapshot_load(rest),
+        other => bail!(
+            "unknown snapshot verb '{other}'\n\
+             USAGE: geomap snapshot <save|inspect|load> [options]"
+        ),
+    }
+}
+
+fn cmd_snapshot_save(args: &[String]) -> Result<()> {
+    let cli = Cli::new(
+        "geomap snapshot save",
+        "build an engine over item factors and persist it as a GSNP snapshot",
+    )
+    .opt("out", "catalogue.gsnp", "output snapshot path")
+    .opt("dataset", "synthetic", "synthetic | movielens | factors:STEM")
+    .opt("movielens", "", "path to a real u.data (movielens dataset)")
+    .opt("items", "4096", "catalogue size (synthetic)")
+    .opt("k", "32", "factor dimensionality (synthetic)")
+    .opt("schema", "ternary-parsetree", "sparse-map schema")
+    .opt("threshold", "1.3", "relative pre-mapping threshold (RMS units)")
+    .opt(
+        "backend",
+        "geomap",
+        "pruning backend: geomap | srp[:b,L] | superbit[:b,d,L] | \
+         cros[:m,l,L] | pca-tree[:frac] | brute",
+    )
+    .opt("max-delta", "1024", "pending mutations before a delta merge")
+    .opt("seed", "42", "rng seed")
+    .parse_from(args)?;
+    let (_, items) = load_factors(
+        cli.get("dataset"),
+        cli.get("movielens"),
+        1,
+        cli.get_usize("items")?,
+        cli.get_usize("k")?,
+        cli.get_u64("seed")?,
+    )?;
+    let spec = geomap::engine::Engine::builder()
+        .schema(SchemaConfig::parse(cli.get("schema"))?)
+        .threshold(cli.get_f64("threshold")? as f32)
+        .backend(Backend::parse(cli.get("backend"))?)
+        .mutation(MutationConfig { max_delta: cli.get_usize("max-delta")? })
+        .seed(cli.get_u64("seed")?);
+    let t = Instant::now();
+    let engine = spec.build(items)?;
+    let build_ms = t.elapsed().as_secs_f64() * 1e3;
+    let out = cli.get("out");
+    let t = Instant::now();
+    let bytes = engine.save_snapshot(out)?;
+    println!(
+        "built {} over {} items in {build_ms:.1} ms; wrote {bytes} bytes to \
+         {out} in {:.1} ms",
+        engine.label(),
+        engine.len(),
+        t.elapsed().as_secs_f64() * 1e3
+    );
+    Ok(())
+}
+
+fn snapshot_path_arg(cli: &geomap::configx::Cli, what: &str) -> Result<String> {
+    match cli.positional() {
+        [path] => Ok(path.clone()),
+        _ => bail!("USAGE: geomap snapshot {what} <file.gsnp>"),
+    }
+}
+
+fn cmd_snapshot_inspect(args: &[String]) -> Result<()> {
+    let cli = Cli::new(
+        "geomap snapshot inspect",
+        "print a snapshot's header, sections, CRC status and config",
+    )
+    .parse_from(args)?;
+    let path = snapshot_path_arg(&cli, "inspect")?;
+    let info = geomap::snapshot::inspect(&path)
+        .with_context(|| format!("inspecting {path}"))?;
+    print!("{}", info.render());
+    if !info.intact() {
+        bail!("{path}: one or more sections failed CRC verification");
+    }
+    Ok(())
+}
+
+fn cmd_snapshot_load(args: &[String]) -> Result<()> {
+    let cli = Cli::new(
+        "geomap snapshot load",
+        "load a snapshot and time warm start vs rebuild-from-factors",
+    )
+    .opt("probes", "16", "verification queries against the rebuilt engine")
+    .flag("no-rebuild", "skip the rebuild-from-factors comparison")
+    .parse_from(args)?;
+    let path = snapshot_path_arg(&cli, "load")?;
+    let t = Instant::now();
+    let engine = geomap::engine::Engine::builder()
+        .from_snapshot(&path)
+        .with_context(|| format!("loading {path}"))?;
+    let load_ms = t.elapsed().as_secs_f64() * 1e3;
+    let stats = engine.stats();
+    println!(
+        "loaded {} in {load_ms:.2} ms: {} items ({} live, {} pending, \
+         {} tombstones), ~{:.1} MiB resident",
+        stats.label,
+        stats.len,
+        stats.live,
+        stats.pending,
+        stats.tombstones,
+        stats.memory_bytes as f64 / (1024.0 * 1024.0)
+    );
+    if cli.is_set("no-rebuild") {
+        return Ok(());
+    }
+    match engine.dense_factors() {
+        Some(factors) => {
+            let t = Instant::now();
+            let rebuilt = engine.spec().build(factors.clone())?;
+            let build_ms = t.elapsed().as_secs_f64() * 1e3;
+            geomap::evalx::verify_equivalent(
+                &rebuilt,
+                &engine,
+                cli.get_usize("probes")?,
+            )?;
+            println!(
+                "rebuild-from-factors took {build_ms:.1} ms → warm start is \
+                 {:.1}x faster (top-k verified identical on {} probes)",
+                build_ms / load_ms.max(1e-9),
+                cli.get_usize("probes")?
+            );
+        }
+        None => println!(
+            "catalogue has pending mutations or holes — rebuild comparison \
+             skipped (state is not reachable from factors alone)"
+        ),
+    }
+    Ok(())
+}
 
 fn cmd_selftest(args: &[String]) -> Result<()> {
     let cli = Cli::new("geomap selftest", "verify PJRT artifacts vs goldens")

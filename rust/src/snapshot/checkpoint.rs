@@ -1,0 +1,272 @@
+//! Background checkpointing of a serving catalogue.
+//!
+//! A [`Checkpointer`] thread periodically snapshots a
+//! [`FactorStore`](crate::coordinator::FactorStore) when — and only
+//! when — its catalogue version changed since the last checkpoint.
+//! Writes are crash-safe (the store writes `<path>.tmp` and renames into
+//! place, so a reader never observes a half-written file) and retention
+//! is bounded: after every successful checkpoint all but the newest
+//! `keep_last` snapshots are pruned. A final checkpoint is taken on
+//! clean [`stop`](Checkpointer::stop), so shutdown never loses acked
+//! mutations.
+//!
+//! Snapshot files are named `snapshot-v<version>.gsnp` with the version
+//! zero-padded, so lexicographic and version order agree.
+
+use crate::configx::CheckpointConfig;
+use crate::coordinator::FactorStore;
+use crate::error::{GeomapError, Result};
+use crate::obs::Logger;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+static LOG: Logger = Logger::new("checkpoint");
+
+/// File name of the checkpoint for catalogue version `v`.
+pub fn snapshot_file(dir: &str, version: u64) -> String {
+    format!("{dir}/snapshot-v{version:020}.gsnp")
+}
+
+fn parse_version(name: &str) -> Option<u64> {
+    name.strip_prefix("snapshot-v")?.strip_suffix(".gsnp")?.parse().ok()
+}
+
+/// Catalogue version encoded in a checkpoint path, if it is one.
+pub fn version_of(path: &str) -> Option<u64> {
+    parse_version(path.rsplit('/').next()?)
+}
+
+/// Newest checkpoint in `dir` (by catalogue version), if any.
+pub fn latest_snapshot(dir: &str) -> Result<Option<String>> {
+    let entries = match std::fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+        Err(e) => return Err(GeomapError::io(dir, e)),
+    };
+    let mut best: Option<(u64, String)> = None;
+    for entry in entries {
+        let entry = entry.map_err(|e| GeomapError::io(dir, e))?;
+        let name = entry.file_name().to_string_lossy().into_owned();
+        if let Some(v) = parse_version(&name) {
+            let path = format!("{dir}/{name}");
+            if best.as_ref().map_or(true, |(bv, _)| v > *bv) {
+                best = Some((v, path));
+            }
+        }
+    }
+    Ok(best.map(|(_, p)| p))
+}
+
+/// Delete all but the newest `keep_last` checkpoints in `dir`, plus any
+/// `snapshot-v*.gsnp.tmp` left behind by a failed or interrupted write
+/// (the writer is single-threaded, so no checkpoint write is in flight
+/// while pruning runs).
+fn prune(dir: &str, keep_last: usize) {
+    let Ok(entries) = std::fs::read_dir(dir) else { return };
+    let mut versions: Vec<(u64, String)> = Vec::new();
+    for e in entries.flatten() {
+        let name = e.file_name().to_string_lossy().into_owned();
+        if let Some(v) = parse_version(&name) {
+            versions.push((v, format!("{dir}/{name}")));
+        } else if name.starts_with("snapshot-")
+            && (name.ends_with(".gsnp.tmp") || name == "snapshot-inflight.gsnp")
+        {
+            // leftovers of a write that crashed before publishing
+            if let Err(e) = std::fs::remove_file(format!("{dir}/{name}")) {
+                LOG.warn(format!("removing stale {name} failed: {e}"));
+            }
+        }
+    }
+    versions.sort_unstable_by(|a, b| b.0.cmp(&a.0));
+    for (v, path) in versions.into_iter().skip(keep_last) {
+        if let Err(e) = std::fs::remove_file(&path) {
+            LOG.warn(format!("pruning snapshot v{v} failed: {e}"));
+        }
+    }
+}
+
+fn checkpoint_if_changed(
+    cfg: &CheckpointConfig,
+    store: &FactorStore,
+    last_saved: &mut Option<u64>,
+) {
+    let version = store.snapshot().version;
+    if *last_saved == Some(version) {
+        return;
+    }
+    // the save re-snapshots the store, so a mutation landing after the
+    // version probe would make a pre-computed file name lie about the
+    // content: write under a provisional name first, then rename to the
+    // version the save actually captured
+    let provisional = format!("{}/snapshot-inflight.gsnp", cfg.dir);
+    match store.save_snapshot(&provisional) {
+        Ok(saved) => {
+            let path = snapshot_file(&cfg.dir, saved);
+            if let Err(e) = std::fs::rename(&provisional, &path) {
+                LOG.error(format!("publishing checkpoint v{saved} failed: {e}"));
+                return;
+            }
+            LOG.info(format!("checkpointed catalogue v{saved} → {path}"));
+            *last_saved = Some(saved);
+            prune(&cfg.dir, cfg.keep_last);
+        }
+        Err(e) => LOG.error(format!("checkpoint of v{version} failed: {e}")),
+    }
+}
+
+/// Handle of the background checkpoint thread.
+pub struct Checkpointer {
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Checkpointer {
+    /// Spawn the checkpoint thread over `store` with policy `cfg`.
+    pub fn spawn(cfg: CheckpointConfig, store: Arc<FactorStore>) -> Checkpointer {
+        let stop = Arc::new(AtomicBool::new(false));
+        let flag = Arc::clone(&stop);
+        let handle = std::thread::Builder::new()
+            .name("geomap-checkpoint".into())
+            .spawn(move || {
+                // seed from the newest on-disk checkpoint so a
+                // warm-started coordinator does not immediately rewrite
+                // the very snapshot it just loaded
+                let mut last_saved: Option<u64> = latest_snapshot(&cfg.dir)
+                    .ok()
+                    .flatten()
+                    .and_then(|p| parse_version(p.rsplit('/').next()?));
+                let tick = Duration::from_millis(cfg.every_ms.min(20).max(1));
+                let mut waited = Duration::ZERO;
+                while !flag.load(Ordering::Acquire) {
+                    std::thread::sleep(tick);
+                    waited += tick;
+                    if waited.as_millis() as u64 >= cfg.every_ms {
+                        waited = Duration::ZERO;
+                        checkpoint_if_changed(&cfg, &store, &mut last_saved);
+                    }
+                }
+                // final checkpoint so a clean shutdown loses nothing
+                checkpoint_if_changed(&cfg, &store, &mut last_saved);
+            })
+            .expect("spawn checkpointer");
+        Checkpointer { stop, handle: Some(handle) }
+    }
+
+    fn stop_inner(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+
+    /// Stop the thread after one final checkpoint (blocking).
+    pub fn stop(mut self) {
+        self.stop_inner();
+    }
+}
+
+impl Drop for Checkpointer {
+    fn drop(&mut self) {
+        self.stop_inner();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::Engine;
+    use crate::linalg::Matrix;
+    use crate::rng::Rng;
+
+    fn unique_dir(name: &str) -> String {
+        let dir = std::env::temp_dir()
+            .join("geomap-checkpoint-tests")
+            .join(format!("{name}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.to_string_lossy().into_owned()
+    }
+
+    fn store(n: usize) -> Arc<FactorStore> {
+        let mut rng = Rng::seeded(11);
+        let items = Matrix::gaussian(&mut rng, n, 8, 1.0);
+        Arc::new(FactorStore::build(Engine::builder(), items, 2).unwrap())
+    }
+
+    #[test]
+    fn naming_roundtrip_and_latest() {
+        let dir = unique_dir("naming");
+        assert_eq!(parse_version("snapshot-v00000000000000000042.gsnp"), Some(42));
+        assert_eq!(parse_version("other.gsnp"), None);
+        assert_eq!(latest_snapshot(&dir).unwrap(), None);
+        assert_eq!(latest_snapshot("/definitely/missing/dir").unwrap(), None);
+        let s = store(40);
+        s.save_snapshot(&snapshot_file(&dir, 1)).unwrap();
+        s.save_snapshot(&snapshot_file(&dir, 12)).unwrap();
+        s.save_snapshot(&snapshot_file(&dir, 3)).unwrap();
+        assert_eq!(
+            latest_snapshot(&dir).unwrap().unwrap(),
+            snapshot_file(&dir, 12)
+        );
+    }
+
+    #[test]
+    fn prune_keeps_newest() {
+        let dir = unique_dir("prune");
+        let s = store(30);
+        for v in [1u64, 2, 3, 4, 5] {
+            s.save_snapshot(&snapshot_file(&dir, v)).unwrap();
+        }
+        // a failed write's leftover must be reclaimed too
+        std::fs::write(format!("{dir}/snapshot-v9.gsnp.tmp"), b"junk").unwrap();
+        prune(&dir, 2);
+        let mut left: Vec<String> = std::fs::read_dir(&dir)
+            .unwrap()
+            .flatten()
+            .map(|e| e.file_name().to_string_lossy().into_owned())
+            .collect();
+        left.sort();
+        assert_eq!(
+            left,
+            vec![
+                "snapshot-v00000000000000000004.gsnp".to_string(),
+                "snapshot-v00000000000000000005.gsnp".to_string(),
+            ]
+        );
+    }
+
+    #[test]
+    fn checkpointer_saves_on_change_and_on_stop() {
+        let dir = unique_dir("ckpt");
+        let s = store(50);
+        let ck = Checkpointer::spawn(
+            CheckpointConfig { dir: dir.clone(), every_ms: 10, keep_last: 2 },
+            Arc::clone(&s),
+        );
+        // wait for the first periodic checkpoint (version 1)
+        let mut waited = 0;
+        while latest_snapshot(&dir).unwrap().is_none() && waited < 2000 {
+            std::thread::sleep(Duration::from_millis(10));
+            waited += 10;
+        }
+        assert!(
+            latest_snapshot(&dir).unwrap().is_some(),
+            "no checkpoint within 2s"
+        );
+        // mutate, then stop: the final checkpoint must capture the new
+        // version even if the periodic timer never fired again
+        s.upsert(50, &[0.5; 8]).unwrap();
+        let v = s.snapshot().version;
+        ck.stop();
+        let latest = latest_snapshot(&dir).unwrap().unwrap();
+        assert_eq!(latest, snapshot_file(&dir, v));
+        // retention: at most keep_last files remain
+        let count = std::fs::read_dir(&dir).unwrap().flatten().count();
+        assert!(count <= 2, "{count} snapshots left, want <= 2");
+        // and it restores
+        let restored = FactorStore::from_snapshot(&latest).unwrap();
+        assert_eq!(restored.snapshot().version, v);
+        assert_eq!(restored.snapshot().total_items, 51);
+    }
+}

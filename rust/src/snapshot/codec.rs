@@ -1,0 +1,475 @@
+//! Engine ⇄ snapshot-section codec.
+//!
+//! One engine serialises to a group of sections sharing a shard ordinal:
+//!
+//! * `config`   — the full [`EngineBuilder`] spec as JSON (round-trips
+//!   through `configx::Backend::parse` / `SchemaConfig::parse`).
+//! * `factors`  — the dense catalogue factors (for the geomap backend,
+//!   the *base segment* factors in row order).
+//! * `index` / `base-map` / `delta` — geomap backend only: the CSR
+//!   inverted index, the id ↔ row mapping with its tombstone bitmap, and
+//!   the pending-mutation delta segment.
+//!
+//! Loading a geomap engine reassembles this state directly — no φ
+//! re-mapping, no per-posting parsing — which is the snapshot
+//! subsystem's whole point: the expensive offline work is paid once.
+//! Baseline backends (SRP/Superbit/CROS/PCA-tree/brute) are rebuilt
+//! deterministically from factors + the stored seed, so a loaded engine
+//! is bit-identical to a rebuilt one for every backend.
+//!
+//! All decoded shapes are cross-validated; a corrupt section that
+//! somehow passes its CRC still fails loudly here.
+
+use super::format::{
+    cast_f32s, cast_u32s, push_f32s, push_u32s, Cursor, Reader, SectionKind,
+    Writer,
+};
+use crate::configx::{obj, Backend, Json, MutationConfig, SchemaConfig};
+use crate::embedding::Mapper;
+use crate::engine::{BaseSegment, DeltaSegment, Engine, EngineBuilder, GeomapEngine};
+use crate::error::{GeomapError, Result};
+use crate::index::InvertedIndex;
+use crate::linalg::Matrix;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+// ------------------------------------------------------------ spec json
+
+/// Serialise a build spec to the `config` section JSON.
+pub fn spec_to_json(spec: &EngineBuilder) -> Json {
+    obj(vec![
+        ("backend", Json::from(spec.backend.spec())),
+        ("schema", Json::from(spec.schema.spec())),
+        ("threshold", Json::from(spec.threshold as f64)),
+        ("min_overlap", Json::from(spec.min_overlap)),
+        // the seed is a full u64; JSON numbers are f64, so keep it exact
+        // as a decimal string
+        ("seed", Json::from(spec.seed.to_string())),
+        ("max_delta", Json::from(spec.mutation.max_delta)),
+    ])
+}
+
+/// Parse a `config` section back into a build spec.
+pub fn spec_from_json(j: &Json) -> Result<EngineBuilder> {
+    let backend = Backend::parse(j.get("backend")?.as_str()?)?;
+    let schema = SchemaConfig::parse(j.get("schema")?.as_str()?)?;
+    let threshold = j.get("threshold")?.as_f64()? as f32;
+    let min_overlap = j.get("min_overlap")?.as_usize()?;
+    let seed: u64 = j.get("seed")?.as_str()?.parse().map_err(|_| {
+        GeomapError::Artifact("snapshot config has a malformed seed".into())
+    })?;
+    let max_delta = j.get("max_delta")?.as_usize()?;
+    Ok(Engine::builder()
+        .backend(backend)
+        .schema(schema)
+        .threshold(threshold)
+        .min_overlap(min_overlap)
+        .seed(seed)
+        .mutation(MutationConfig { max_delta }))
+}
+
+// -------------------------------------------------------------- bitmaps
+
+fn push_bitmap(buf: &mut Vec<u8>, bits: &[bool]) {
+    let mut byte = 0u8;
+    for (i, &b) in bits.iter().enumerate() {
+        if b {
+            byte |= 1 << (i % 8);
+        }
+        if i % 8 == 7 {
+            buf.push(byte);
+            byte = 0;
+        }
+    }
+    if bits.len() % 8 != 0 {
+        buf.push(byte);
+    }
+}
+
+fn read_bitmap(bytes: &[u8], n: usize) -> Vec<bool> {
+    (0..n).map(|i| bytes[i / 8] & (1 << (i % 8)) != 0).collect()
+}
+
+// --------------------------------------------------------------- encode
+
+/// Write one engine as the section group of shard ordinal `shard`.
+pub fn write_engine(w: &mut Writer, shard: u16, engine: &Engine) -> Result<()> {
+    let spec = engine.spec();
+    let buf = w.begin();
+    buf.extend_from_slice(spec_to_json(&spec).to_string_compact().as_bytes());
+    w.end(SectionKind::Config, shard)?;
+
+    if let Some(g) = engine.geomap_source() {
+        write_geomap(w, shard, g)
+    } else {
+        let factors = engine.dense_factors().ok_or_else(|| {
+            GeomapError::Config(format!(
+                "backend '{}' exposes no dense factors to snapshot",
+                spec.backend.spec()
+            ))
+        })?;
+        write_factors(w, shard, factors)
+    }
+}
+
+fn write_factors(w: &mut Writer, shard: u16, m: &Matrix) -> Result<()> {
+    let buf = w.begin();
+    buf.extend_from_slice(&(m.rows() as u64).to_le_bytes());
+    buf.extend_from_slice(&(m.cols() as u64).to_le_bytes());
+    push_f32s(buf, m.as_slice());
+    w.end(SectionKind::Factors, shard)
+}
+
+fn write_geomap(w: &mut Writer, shard: u16, g: &GeomapEngine) -> Result<()> {
+    let base = &g.base;
+    write_factors(w, shard, &base.items)?;
+
+    // index: the CSR arenas verbatim
+    let idx = &base.index;
+    let buf = w.begin();
+    buf.extend_from_slice(&(idx.items() as u64).to_le_bytes());
+    buf.extend_from_slice(&(idx.dim() as u64).to_le_bytes());
+    buf.extend_from_slice(&(idx.offsets_arena().len() as u64).to_le_bytes());
+    buf.extend_from_slice(&(idx.postings_arena().len() as u64).to_le_bytes());
+    push_u32s(buf, idx.offsets_arena());
+    push_u32s(buf, idx.postings_arena());
+    w.end(SectionKind::Index, shard)?;
+
+    // base map: id mapping + liveness. `base.row_of` only spans the
+    // address space as of the last merge; ids appended since then live
+    // in the delta, so the serialised map is padded to `addr` entries
+    // (the pad value, u32::MAX, means "no base row" — exactly what the
+    // runtime lookup concludes for an out-of-range id).
+    let buf = w.begin();
+    buf.extend_from_slice(&(g.addr as u64).to_le_bytes());
+    buf.extend_from_slice(&(base.ids.len() as u64).to_le_bytes());
+    buf.extend_from_slice(&(g.live as u64).to_le_bytes());
+    buf.extend_from_slice(&(g.dead_rows as u64).to_le_bytes());
+    buf.push(base.identity as u8);
+    buf.extend_from_slice(&[0u8; 7]);
+    push_u32s(buf, &base.ids);
+    push_u32s(buf, &base.row_of);
+    for _ in base.row_of.len()..g.addr {
+        push_u32s(buf, &[u32::MAX]);
+    }
+    push_bitmap(buf, &g.base_dead);
+    w.end(SectionKind::BaseMap, shard)?;
+
+    // delta segment: pending upserts (+ per-dimension posting pairs,
+    // dims sorted for deterministic bytes, row order preserved)
+    let d = &g.delta;
+    let mut dims: Vec<u32> = d.postings.keys().copied().collect();
+    dims.sort_unstable();
+    let n_pairs: usize = d.postings.values().map(Vec::len).sum();
+    let buf = w.begin();
+    buf.extend_from_slice(&(d.k as u64).to_le_bytes());
+    buf.extend_from_slice(&(d.ids.len() as u64).to_le_bytes());
+    buf.extend_from_slice(&(d.nnz as u64).to_le_bytes());
+    buf.extend_from_slice(&(n_pairs as u64).to_le_bytes());
+    push_f32s(buf, &d.factors);
+    push_u32s(buf, &d.ids);
+    for dim in dims {
+        for &dr in &d.postings[&dim] {
+            push_u32s(buf, &[dim, dr]);
+        }
+    }
+    push_bitmap(buf, &d.alive);
+    w.end(SectionKind::Delta, shard)
+}
+
+// --------------------------------------------------------------- decode
+
+/// Read the `config` section of `shard` as a build spec.
+pub fn read_spec(r: &Reader, shard: u16) -> Result<EngineBuilder> {
+    let bytes = r.section(SectionKind::Config, shard)?;
+    let text = std::str::from_utf8(bytes).map_err(|_| {
+        GeomapError::Artifact("snapshot config section is not UTF-8".into())
+    })?;
+    spec_from_json(&Json::parse(text)?)
+}
+
+/// Reassemble the engine of shard ordinal `shard`.
+pub fn read_engine(r: &Reader, shard: u16) -> Result<Engine> {
+    let spec = read_spec(r, shard)?;
+    let factors = read_factors(r, shard)?;
+    if spec.backend != Backend::Geomap {
+        // baselines rebuild deterministically from factors + stored seed
+        return spec.build(factors);
+    }
+    let g = read_geomap(r, shard, &spec, factors)?;
+    Ok(Engine::from_parts(spec, Box::new(g)))
+}
+
+fn read_factors(r: &Reader, shard: u16) -> Result<Matrix> {
+    let bytes = r.section(SectionKind::Factors, shard)?;
+    let mut c = Cursor::new(bytes, "factors");
+    let rows = c.count("row")?;
+    let cols = c.count("col")?;
+    let n = rows.checked_mul(cols).and_then(|n| n.checked_mul(4)).ok_or_else(
+        || {
+            GeomapError::Artifact(format!(
+                "factors section dims {rows}x{cols} overflow"
+            ))
+        },
+    )?;
+    let data = cast_f32s(c.take(n)?)?;
+    c.done()?;
+    Matrix::from_vec(rows, cols, data)
+}
+
+fn read_geomap(
+    r: &Reader,
+    shard: u16,
+    spec: &EngineBuilder,
+    items: Matrix,
+) -> Result<GeomapEngine> {
+    let k = items.cols();
+    let mapper = Mapper::from_config(spec.schema, k, spec.threshold);
+
+    // index
+    let bytes = r.section(SectionKind::Index, shard)?;
+    let mut c = Cursor::new(bytes, "index");
+    let idx_items = c.count("item")?;
+    let p = c.count("dimension")?;
+    let n_offsets = c.count("offset")?;
+    let n_postings = c.count("posting")?;
+    let offsets = cast_u32s(c.take(n_offsets * 4)?)?;
+    let postings = cast_u32s(c.take(n_postings * 4)?)?;
+    c.done()?;
+    if idx_items != items.rows() {
+        return Err(GeomapError::Artifact(format!(
+            "index covers {idx_items} items but factors have {}",
+            items.rows()
+        )));
+    }
+    if p != mapper.p() {
+        return Err(GeomapError::Artifact(format!(
+            "index dimension {p} does not match schema '{}' (p = {})",
+            spec.schema.spec(),
+            mapper.p()
+        )));
+    }
+    let index = InvertedIndex::from_raw_parts(offsets, postings, idx_items, p)?;
+
+    // base map
+    let bytes = r.section(SectionKind::BaseMap, shard)?;
+    let mut c = Cursor::new(bytes, "base-map");
+    let addr = c.count("address")?;
+    let n_rows = c.count("base row")?;
+    let live = c.count("live item")?;
+    let dead_rows = c.count("tombstone")?;
+    let identity = c.u8()? != 0;
+    c.take(7)?; // padding
+    let ids = cast_u32s(c.take(n_rows * 4)?)?;
+    let row_of = cast_u32s(c.take(addr * 4)?)?;
+    let base_dead = read_bitmap(c.take(n_rows.div_ceil(8))?, n_rows);
+    c.done()?;
+
+    if n_rows != items.rows() {
+        return Err(GeomapError::Artifact(format!(
+            "base map covers {n_rows} rows but factors have {}",
+            items.rows()
+        )));
+    }
+    for (row, w) in ids.windows(2).enumerate() {
+        if w[0] >= w[1] {
+            return Err(GeomapError::Artifact(format!(
+                "base ids not strictly increasing at row {row}"
+            )));
+        }
+    }
+    for (row, &id) in ids.iter().enumerate() {
+        if (id as usize) >= addr || row_of[id as usize] != row as u32 {
+            return Err(GeomapError::Artifact(format!(
+                "base id {id} / row {row} mapping is inconsistent"
+            )));
+        }
+    }
+    // identity (the dense-factor fast-path gate) asserts base row r
+    // holds id r with no holes as of the last merge. Appends since then
+    // raise `addr` without touching the base, and trailing removals can
+    // legitimately clear the flag while ids still read 0..len — so the
+    // flag is validated one-directionally here (true ⇒ ids are 0..len)
+    // and against the delta below (true ⇒ every id past the base is a
+    // pending append). A cleared flag is conservative and safe.
+    if identity && !ids.iter().enumerate().all(|(row, &id)| id as usize == row)
+    {
+        return Err(GeomapError::Artifact(
+            "base identity flag disagrees with the id map".into(),
+        ));
+    }
+    let mapped = row_of.iter().filter(|&&r| r != u32::MAX).count();
+    if mapped != ids.len() {
+        return Err(GeomapError::Artifact(format!(
+            "base row map addresses {mapped} rows but {} exist",
+            ids.len()
+        )));
+    }
+    if base_dead.iter().filter(|&&d| d).count() != dead_rows {
+        return Err(GeomapError::Artifact(
+            "tombstone bitmap disagrees with the stored tombstone count".into(),
+        ));
+    }
+
+    // delta segment
+    let bytes = r.section(SectionKind::Delta, shard)?;
+    let mut c = Cursor::new(bytes, "delta");
+    let dk = c.count("factor dim")?;
+    let d_rows = c.count("delta row")?;
+    let nnz = c.count("non-zero")?;
+    let n_pairs = c.count("posting pair")?;
+    let d_bytes = d_rows
+        .checked_mul(dk)
+        .and_then(|n| n.checked_mul(4))
+        .ok_or_else(|| {
+            GeomapError::Artifact("delta factor payload overflows".into())
+        })?;
+    let d_factors = cast_f32s(c.take(d_bytes)?)?;
+    let d_ids = cast_u32s(c.take(d_rows * 4)?)?;
+    let pairs = cast_u32s(c.take(n_pairs * 8)?)?;
+    let alive = read_bitmap(c.take(d_rows.div_ceil(8))?, d_rows);
+    c.done()?;
+
+    if dk != k {
+        return Err(GeomapError::Artifact(format!(
+            "delta factor dim {dk} != catalogue dim {k}"
+        )));
+    }
+    if d_ids.iter().any(|&id| id as usize >= addr) {
+        return Err(GeomapError::Artifact(
+            "delta references an id beyond the address space".into(),
+        ));
+    }
+    if nnz != n_pairs {
+        return Err(GeomapError::Artifact(format!(
+            "delta nnz {nnz} disagrees with its {n_pairs} posting pairs"
+        )));
+    }
+    let mut d_postings: HashMap<u32, Vec<u32>> = HashMap::new();
+    for pair in pairs.chunks_exact(2) {
+        let (dim, dr) = (pair[0], pair[1]);
+        if dim as usize >= p || dr as usize >= d_rows {
+            return Err(GeomapError::Artifact(format!(
+                "delta posting ({dim}, {dr}) is out of bounds"
+            )));
+        }
+        let rows = d_postings.entry(dim).or_default();
+        // rows are created in increasing order and each row's support
+        // lists a dimension once, so per-dim rows are strictly
+        // increasing; a duplicate would double-count overlap at query
+        // time and must be rejected
+        if rows.last().is_some_and(|&prev| prev >= dr) {
+            return Err(GeomapError::Artifact(format!(
+                "delta posting list for dim {dim} is not strictly \
+                 increasing at row {dr}"
+            )));
+        }
+        rows.push(dr);
+    }
+    let mut d_row_of: HashMap<u32, u32> = HashMap::new();
+    for (dr, (&id, &is_alive)) in d_ids.iter().zip(&alive).enumerate() {
+        if is_alive && d_row_of.insert(id, dr as u32).is_some() {
+            return Err(GeomapError::Artifact(format!(
+                "delta has two live rows for id {id}"
+            )));
+        }
+    }
+    let alive_count = d_row_of.len();
+    if live != (n_rows - dead_rows) + alive_count {
+        return Err(GeomapError::Artifact(format!(
+            "live count {live} disagrees with segments \
+             ({n_rows} base - {dead_rows} dead + {alive_count} delta)"
+        )));
+    }
+    // a live delta row supersedes any base copy of the same id, so the
+    // base row must be tombstoned
+    for &id in d_row_of.keys() {
+        if let Some(&row) = row_of.get(id as usize) {
+            if row != u32::MAX && !base_dead[row as usize] {
+                return Err(GeomapError::Artifact(format!(
+                    "id {id} is live in both the base and the delta"
+                )));
+            }
+        }
+    }
+    // identity accounting across segments: with the flag set, every id
+    // beyond the base must be a pending append (present in the delta) —
+    // otherwise the dense fast path could address missing rows
+    if identity && n_rows < addr {
+        let delta_ids: std::collections::HashSet<u32> =
+            d_ids.iter().copied().collect();
+        for id in n_rows as u32..addr as u32 {
+            if !delta_ids.contains(&id) {
+                return Err(GeomapError::Artifact(format!(
+                    "identity base is missing id {id}, which is not a \
+                     pending append either"
+                )));
+            }
+        }
+    }
+
+    let delta = DeltaSegment {
+        k,
+        factors: d_factors,
+        ids: d_ids,
+        alive,
+        postings: d_postings,
+        row_of: d_row_of,
+        nnz,
+    };
+    Ok(GeomapEngine {
+        mapper: Arc::new(mapper),
+        base: Arc::new(BaseSegment { index, items, ids, row_of, identity }),
+        base_dead,
+        dead_rows,
+        delta,
+        live,
+        addr,
+        min_overlap: spec.min_overlap,
+        mutation: spec.mutation,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_json_roundtrips_every_field() {
+        let spec = Engine::builder()
+            .backend(Backend::Superbit { bits: 5, depth: 2, tables: 3 })
+            .schema(SchemaConfig::DaryOneHot { d: 4 })
+            .threshold(1.25)
+            .min_overlap(2)
+            .seed(u64::MAX - 7)
+            .mutation(MutationConfig { max_delta: 77 });
+        let j = spec_to_json(&spec);
+        let text = j.to_string_compact();
+        let back = spec_from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert!(back.same_spec(&spec));
+    }
+
+    #[test]
+    fn bitmap_roundtrip() {
+        for n in [0usize, 1, 7, 8, 9, 64, 65] {
+            let bits: Vec<bool> = (0..n).map(|i| i % 3 == 0).collect();
+            let mut buf = Vec::new();
+            push_bitmap(&mut buf, &bits);
+            assert_eq!(buf.len(), n.div_ceil(8));
+            assert_eq!(read_bitmap(&buf, n), bits);
+        }
+    }
+
+    #[test]
+    fn malformed_spec_rejected() {
+        let j = Json::parse(r#"{"backend": "geomap"}"#).unwrap();
+        assert!(spec_from_json(&j).is_err(), "missing keys");
+        let j = Json::parse(
+            r#"{"backend": "geomap", "schema": "ternary-parsetree",
+                "threshold": 0.5, "min_overlap": 1, "seed": "not a number",
+                "max_delta": 8}"#,
+        )
+        .unwrap();
+        assert!(spec_from_json(&j).is_err(), "bad seed");
+    }
+}

@@ -1,0 +1,736 @@
+//! The `GSNP` on-disk container (format layer, no engine knowledge).
+//!
+//! A snapshot file is a self-describing binary container:
+//!
+//! ```text
+//! ┌────────────────────────────────────────────────────────────────┐
+//! │ header (64 B): magic "GSNP", version, section count,           │
+//! │                table offset, file length, table CRC32          │
+//! ├────────────────────────────────────────────────────────────────┤
+//! │ payload 0   (64-byte aligned, zero-padded gap before it)       │
+//! │ payload 1   ...                                                │
+//! ├────────────────────────────────────────────────────────────────┤
+//! │ section table (32 B/entry): kind, shard, offset, len, CRC32    │
+//! └────────────────────────────────────────────────────────────────┘
+//! ```
+//!
+//! Everything is little-endian. The table sits at the *end* so the
+//! [`Writer`] can stream payloads through one reusable buffer in a
+//! single pass and patch the fixed-size header afterwards. Payload
+//! offsets are 64-byte aligned and the [`Reader`] holds the whole file
+//! in an 8-byte-aligned buffer, so `u32`/`f32` arrays are reconstructed
+//! by reinterpreting the payload bytes in place — one memcpy per owning
+//! vector, no per-element re-parse (see [`cast_u32s`] / [`cast_f32s`]).
+//!
+//! Versioning policy (docs/SNAPSHOT.md): readers accept exactly the
+//! versions they know; an unknown *version* is an error, an unknown
+//! *section kind* within a known version is skipped (forward-compatible
+//! additions).
+
+use crate::error::{GeomapError, Result};
+use std::fs::File;
+use std::io::{Read, Seek, SeekFrom, Write as _};
+
+/// File magic, first four bytes of every snapshot.
+pub const MAGIC: [u8; 4] = *b"GSNP";
+/// Container format version this build writes and reads.
+pub const VERSION: u16 = 1;
+/// Payload alignment in bytes.
+pub const ALIGN: usize = 64;
+/// Fixed header size in bytes.
+pub const HEADER_LEN: usize = 64;
+/// Section-table entry size in bytes.
+pub const ENTRY_LEN: usize = 32;
+/// Shard ordinal reserved for file-global sections.
+pub const GLOBAL_SHARD: u16 = u16::MAX;
+
+/// Section kinds of format version 1.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SectionKind {
+    /// Engine/build configuration as JSON (round-trips through configx).
+    Config,
+    /// Dense factor matrix (rows, cols, row-major f32).
+    Factors,
+    /// CSR inverted index (offsets + postings arenas).
+    Index,
+    /// Base-segment id mapping + tombstone bitmap.
+    BaseMap,
+    /// Delta segment (pending upserts) of the mutation state.
+    Delta,
+}
+
+impl SectionKind {
+    /// Wire code.
+    pub fn code(self) -> u16 {
+        match self {
+            SectionKind::Config => 1,
+            SectionKind::Factors => 2,
+            SectionKind::Index => 3,
+            SectionKind::BaseMap => 4,
+            SectionKind::Delta => 5,
+        }
+    }
+
+    /// Decode a wire code (`None` for kinds this build does not know).
+    pub fn from_code(code: u16) -> Option<SectionKind> {
+        match code {
+            1 => Some(SectionKind::Config),
+            2 => Some(SectionKind::Factors),
+            3 => Some(SectionKind::Index),
+            4 => Some(SectionKind::BaseMap),
+            5 => Some(SectionKind::Delta),
+            _ => None,
+        }
+    }
+
+    /// Human-readable name (inspect output).
+    pub fn name(self) -> &'static str {
+        match self {
+            SectionKind::Config => "config",
+            SectionKind::Factors => "factors",
+            SectionKind::Index => "index",
+            SectionKind::BaseMap => "base-map",
+            SectionKind::Delta => "delta",
+        }
+    }
+}
+
+// ---------------------------------------------------------------- crc32
+
+const fn crc32_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static CRC_TABLE: [u32; 256] = crc32_table();
+
+/// CRC-32 (IEEE, the zlib/zip polynomial) of `bytes`.
+///
+/// Shared integrity primitive for the snapshot container *and* the GMF1
+/// factor files (`data::io`).
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    !c
+}
+
+// ------------------------------------------------------- aligned buffer
+
+/// A byte buffer whose base address is 8-byte aligned (backed by
+/// `Vec<u64>`), so any 64-byte-aligned file offset is at least 8-byte
+/// aligned in memory and `u32`/`f32` payloads can be cast in place.
+pub struct AlignedBuf {
+    words: Vec<u64>,
+    len: usize,
+}
+
+impl AlignedBuf {
+    /// Read an entire file.
+    pub fn read_file(path: &str) -> Result<AlignedBuf> {
+        let mut f = File::open(path).map_err(|e| GeomapError::io(path, e))?;
+        let len = f
+            .metadata()
+            .map_err(|e| GeomapError::io(path, e))?
+            .len() as usize;
+        let mut buf = AlignedBuf { words: vec![0u64; len.div_ceil(8)], len };
+        f.read_exact(buf.bytes_mut()).map_err(|e| GeomapError::io(path, e))?;
+        Ok(buf)
+    }
+
+    /// The file bytes.
+    pub fn bytes(&self) -> &[u8] {
+        // SAFETY: words owns at least `len` initialised bytes and u8 has
+        // no alignment or validity requirements.
+        unsafe {
+            std::slice::from_raw_parts(self.words.as_ptr() as *const u8, self.len)
+        }
+    }
+
+    fn bytes_mut(&mut self) -> &mut [u8] {
+        // SAFETY: as above, and we hold &mut self.
+        unsafe {
+            std::slice::from_raw_parts_mut(
+                self.words.as_mut_ptr() as *mut u8,
+                self.len,
+            )
+        }
+    }
+}
+
+// ------------------------------------------------------- cast helpers
+
+/// Reinterpret a little-endian byte payload as `u32`s: a single memcpy
+/// when the slice is 4-byte aligned on a little-endian host, an explicit
+/// per-element decode otherwise.
+pub fn cast_u32s(bytes: &[u8]) -> Result<Vec<u32>> {
+    if bytes.len() % 4 != 0 {
+        return Err(GeomapError::Artifact(format!(
+            "u32 payload length {} is not a multiple of 4",
+            bytes.len()
+        )));
+    }
+    #[cfg(target_endian = "little")]
+    {
+        // SAFETY: any bit pattern is a valid u32.
+        let (pre, mid, post) = unsafe { bytes.align_to::<u32>() };
+        if pre.is_empty() && post.is_empty() {
+            return Ok(mid.to_vec());
+        }
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+/// [`cast_u32s`] for `f32` payloads.
+pub fn cast_f32s(bytes: &[u8]) -> Result<Vec<f32>> {
+    if bytes.len() % 4 != 0 {
+        return Err(GeomapError::Artifact(format!(
+            "f32 payload length {} is not a multiple of 4",
+            bytes.len()
+        )));
+    }
+    #[cfg(target_endian = "little")]
+    {
+        // SAFETY: any bit pattern is a valid f32 (NaNs included).
+        let (pre, mid, post) = unsafe { bytes.align_to::<f32>() };
+        if pre.is_empty() && post.is_empty() {
+            return Ok(mid.to_vec());
+        }
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+/// Append `xs` to `buf` as little-endian bytes (one memcpy on LE hosts).
+pub fn push_u32s(buf: &mut Vec<u8>, xs: &[u32]) {
+    #[cfg(target_endian = "little")]
+    {
+        // SAFETY: reading a u32 slice as bytes is always valid.
+        let raw = unsafe {
+            std::slice::from_raw_parts(xs.as_ptr() as *const u8, xs.len() * 4)
+        };
+        buf.extend_from_slice(raw);
+        return;
+    }
+    #[cfg(not(target_endian = "little"))]
+    for &x in xs {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// [`push_u32s`] for `f32` values.
+pub fn push_f32s(buf: &mut Vec<u8>, xs: &[f32]) {
+    #[cfg(target_endian = "little")]
+    {
+        // SAFETY: reading an f32 slice as bytes is always valid.
+        let raw = unsafe {
+            std::slice::from_raw_parts(xs.as_ptr() as *const u8, xs.len() * 4)
+        };
+        buf.extend_from_slice(raw);
+        return;
+    }
+    #[cfg(not(target_endian = "little"))]
+    for &x in xs {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+// ------------------------------------------------------------- cursor
+
+/// Bounds-checked sequential decoder over one section payload; every
+/// short read is a clear `Artifact` error instead of a panic.
+pub struct Cursor<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+    what: &'static str,
+}
+
+impl<'a> Cursor<'a> {
+    /// Decode `bytes` of a section named `what` (for error messages).
+    pub fn new(bytes: &'a [u8], what: &'static str) -> Self {
+        Cursor { bytes, pos: 0, what }
+    }
+
+    /// Take the next `n` bytes.
+    pub fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.bytes.len() - self.pos < n {
+            return Err(GeomapError::Artifact(format!(
+                "{} section truncated: need {n} bytes at offset {} of {}",
+                self.what,
+                self.pos,
+                self.bytes.len()
+            )));
+        }
+        let s = &self.bytes[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    /// Next `u64` (LE).
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// Next `u64` that must fit a `usize` count.
+    pub fn count(&mut self, what: &str) -> Result<usize> {
+        let v = self.u64()?;
+        usize::try_from(v).ok().filter(|&n| n <= (1usize << 40)).ok_or_else(
+            || {
+                GeomapError::Artifact(format!(
+                    "{}: implausible {what} count {v}",
+                    self.what
+                ))
+            },
+        )
+    }
+
+    /// Next `u8`.
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    /// All remaining bytes.
+    pub fn rest(mut self) -> &'a [u8] {
+        let s = &self.bytes[self.pos..];
+        self.pos = self.bytes.len();
+        s
+    }
+
+    /// Assert the payload was fully consumed.
+    pub fn done(&self) -> Result<()> {
+        if self.pos != self.bytes.len() {
+            return Err(GeomapError::Artifact(format!(
+                "{} section has {} trailing bytes",
+                self.what,
+                self.bytes.len() - self.pos
+            )));
+        }
+        Ok(())
+    }
+}
+
+// ------------------------------------------------------------- writer
+
+/// One section-table entry.
+#[derive(Clone, Debug)]
+pub struct SectionEntry {
+    /// Raw wire code (kept raw so unknown kinds survive inspect).
+    pub kind: u16,
+    /// Owning shard ordinal, or [`GLOBAL_SHARD`].
+    pub shard: u16,
+    /// Payload offset from file start (64-byte aligned).
+    pub offset: u64,
+    /// Payload length in bytes (unpadded).
+    pub len: u64,
+    /// CRC-32 of the payload bytes.
+    pub crc: u32,
+}
+
+/// Streaming snapshot writer: payloads pass through one reusable buffer
+/// and hit the file once; the section table and header are written at
+/// [`finish`](Writer::finish).
+pub struct Writer {
+    file: File,
+    path: String,
+    buf: Vec<u8>,
+    entries: Vec<SectionEntry>,
+    pos: u64,
+}
+
+impl Writer {
+    /// Create (truncate) `path` and reserve the header.
+    pub fn create(path: &str) -> Result<Writer> {
+        let mut file = File::create(path).map_err(|e| GeomapError::io(path, e))?;
+        file.write_all(&[0u8; HEADER_LEN])
+            .map_err(|e| GeomapError::io(path, e))?;
+        Ok(Writer {
+            file,
+            path: path.to_string(),
+            buf: Vec::new(),
+            entries: Vec::new(),
+            pos: HEADER_LEN as u64,
+        })
+    }
+
+    /// Start a section: returns the cleared reusable payload buffer.
+    pub fn begin(&mut self) -> &mut Vec<u8> {
+        self.buf.clear();
+        &mut self.buf
+    }
+
+    /// Commit the buffered payload as a `(kind, shard)` section.
+    pub fn end(&mut self, kind: SectionKind, shard: u16) -> Result<()> {
+        let offset = self.pad_to_align()?;
+        let path = &self.path;
+        self.file
+            .write_all(&self.buf)
+            .map_err(|e| GeomapError::io(path, e))?;
+        self.entries.push(SectionEntry {
+            kind: kind.code(),
+            shard,
+            offset,
+            len: self.buf.len() as u64,
+            crc: crc32(&self.buf),
+        });
+        self.pos = offset + self.buf.len() as u64;
+        Ok(())
+    }
+
+    fn pad_to_align(&mut self) -> Result<u64> {
+        let rem = (self.pos % ALIGN as u64) as usize;
+        if rem != 0 {
+            let zeros = [0u8; ALIGN];
+            let path = &self.path;
+            self.file
+                .write_all(&zeros[..ALIGN - rem])
+                .map_err(|e| GeomapError::io(path, e))?;
+            self.pos += (ALIGN - rem) as u64;
+        }
+        Ok(self.pos)
+    }
+
+    /// Write the section table, patch the header, sync. Returns the
+    /// final file length in bytes.
+    pub fn finish(mut self) -> Result<u64> {
+        let table_offset = self.pad_to_align()?;
+        let mut table = Vec::with_capacity(self.entries.len() * ENTRY_LEN);
+        for e in &self.entries {
+            table.extend_from_slice(&e.kind.to_le_bytes());
+            table.extend_from_slice(&e.shard.to_le_bytes());
+            table.extend_from_slice(&0u32.to_le_bytes());
+            table.extend_from_slice(&e.offset.to_le_bytes());
+            table.extend_from_slice(&e.len.to_le_bytes());
+            table.extend_from_slice(&e.crc.to_le_bytes());
+            table.extend_from_slice(&0u32.to_le_bytes());
+        }
+        let file_len = table_offset + table.len() as u64;
+
+        let mut header = [0u8; HEADER_LEN];
+        header[0..4].copy_from_slice(&MAGIC);
+        header[4..6].copy_from_slice(&VERSION.to_le_bytes());
+        header[6..8].copy_from_slice(&0u16.to_le_bytes()); // flags
+        header[8..12].copy_from_slice(&(self.entries.len() as u32).to_le_bytes());
+        header[12..20].copy_from_slice(&table_offset.to_le_bytes());
+        header[20..28].copy_from_slice(&file_len.to_le_bytes());
+        header[28..32].copy_from_slice(&crc32(&table).to_le_bytes());
+
+        let Writer { mut file, path, .. } = self;
+        file.write_all(&table).map_err(|e| GeomapError::io(path.as_str(), e))?;
+        file.seek(SeekFrom::Start(0)).map_err(|e| GeomapError::io(path.as_str(), e))?;
+        file.write_all(&header).map_err(|e| GeomapError::io(path.as_str(), e))?;
+        file.sync_all().map_err(|e| GeomapError::io(path.as_str(), e))?;
+        Ok(file_len)
+    }
+}
+
+// ------------------------------------------------------------- reader
+
+/// Parsed snapshot: the whole file plus its validated section table.
+pub struct Reader {
+    buf: AlignedBuf,
+    entries: Vec<SectionEntry>,
+    version: u16,
+    /// Per-entry payload CRC status (filled by [`Reader::open`]).
+    crc_ok: Vec<bool>,
+}
+
+impl Reader {
+    /// Open and fully validate: header, table CRC, per-section bounds
+    /// and payload CRCs. Any mismatch is an error.
+    pub fn open(path: &str) -> Result<Reader> {
+        let r = Self::open_tolerant(path)?;
+        for (i, ok) in r.crc_ok.iter().enumerate() {
+            if !ok {
+                let e = &r.entries[i];
+                return Err(GeomapError::Artifact(format!(
+                    "{path}: section {}/{} payload CRC mismatch (corrupt \
+                     snapshot)",
+                    section_name(e.kind),
+                    e.shard
+                )));
+            }
+        }
+        Ok(r)
+    }
+
+    /// Open validating the header and table, but record (rather than
+    /// reject) payload CRC mismatches — the `inspect` path.
+    pub fn open_tolerant(path: &str) -> Result<Reader> {
+        let buf = AlignedBuf::read_file(path)?;
+        let bytes = buf.bytes();
+        if bytes.len() < HEADER_LEN {
+            return Err(GeomapError::Artifact(format!(
+                "{path}: {} bytes is too short for a GSNP snapshot",
+                bytes.len()
+            )));
+        }
+        if bytes[0..4] != MAGIC {
+            return Err(GeomapError::Artifact(format!(
+                "{path}: not a GSNP snapshot (bad magic)"
+            )));
+        }
+        let version = u16::from_le_bytes(bytes[4..6].try_into().unwrap());
+        if version != VERSION {
+            return Err(GeomapError::Artifact(format!(
+                "{path}: unsupported snapshot version {version} (this build \
+                 reads version {VERSION})"
+            )));
+        }
+        let count =
+            u32::from_le_bytes(bytes[8..12].try_into().unwrap()) as usize;
+        let table_offset =
+            u64::from_le_bytes(bytes[12..20].try_into().unwrap()) as usize;
+        let file_len = u64::from_le_bytes(bytes[20..28].try_into().unwrap());
+        let table_crc = u32::from_le_bytes(bytes[28..32].try_into().unwrap());
+        if file_len != bytes.len() as u64 {
+            return Err(GeomapError::Artifact(format!(
+                "{path}: truncated snapshot (header says {file_len} bytes, \
+                 file has {})",
+                bytes.len()
+            )));
+        }
+        let table_len = count
+            .checked_mul(ENTRY_LEN)
+            .filter(|&l| {
+                table_offset >= HEADER_LEN
+                    && table_offset.checked_add(l).is_some_and(|end| {
+                        end as u64 <= file_len
+                    })
+            })
+            .ok_or_else(|| {
+                GeomapError::Artifact(format!(
+                    "{path}: section table out of bounds"
+                ))
+            })?;
+        let table = &bytes[table_offset..table_offset + table_len];
+        if crc32(table) != table_crc {
+            return Err(GeomapError::Artifact(format!(
+                "{path}: section table CRC mismatch (corrupt snapshot)"
+            )));
+        }
+        let mut entries = Vec::with_capacity(count);
+        for chunk in table.chunks_exact(ENTRY_LEN) {
+            let e = SectionEntry {
+                kind: u16::from_le_bytes(chunk[0..2].try_into().unwrap()),
+                shard: u16::from_le_bytes(chunk[2..4].try_into().unwrap()),
+                offset: u64::from_le_bytes(chunk[8..16].try_into().unwrap()),
+                len: u64::from_le_bytes(chunk[16..24].try_into().unwrap()),
+                crc: u32::from_le_bytes(chunk[24..28].try_into().unwrap()),
+            };
+            if e.offset % ALIGN as u64 != 0
+                || e.offset.checked_add(e.len).map_or(true, |end| end > file_len)
+            {
+                return Err(GeomapError::Artifact(format!(
+                    "{path}: section {}/{} payload out of bounds",
+                    section_name(e.kind),
+                    e.shard
+                )));
+            }
+            entries.push(e);
+        }
+        let crc_ok = entries
+            .iter()
+            .map(|e| {
+                let lo = e.offset as usize;
+                crc32(&bytes[lo..lo + e.len as usize]) == e.crc
+            })
+            .collect();
+        Ok(Reader { buf, entries, version, crc_ok })
+    }
+
+    /// Container version.
+    pub fn version(&self) -> u16 {
+        self.version
+    }
+
+    /// All table entries, file order.
+    pub fn entries(&self) -> &[SectionEntry] {
+        &self.entries
+    }
+
+    /// Payload CRC status parallel to [`entries`](Reader::entries).
+    pub fn crc_status(&self) -> &[bool] {
+        &self.crc_ok
+    }
+
+    /// Payload of the `(kind, shard)` section, if present.
+    pub fn opt_section(&self, kind: SectionKind, shard: u16) -> Option<&[u8]> {
+        let e = self
+            .entries
+            .iter()
+            .find(|e| e.kind == kind.code() && e.shard == shard)?;
+        let lo = e.offset as usize;
+        Some(&self.buf.bytes()[lo..lo + e.len as usize])
+    }
+
+    /// Payload of a required `(kind, shard)` section.
+    pub fn section(&self, kind: SectionKind, shard: u16) -> Result<&[u8]> {
+        self.opt_section(kind, shard).ok_or_else(|| {
+            GeomapError::Artifact(format!(
+                "snapshot is missing the {}/{shard} section",
+                kind.name()
+            ))
+        })
+    }
+
+    /// Shard ordinals present in the file (sorted, unique, the global
+    /// pseudo-shard excluded).
+    pub fn shard_ids(&self) -> Vec<u16> {
+        let mut ids: Vec<u16> = self
+            .entries
+            .iter()
+            .map(|e| e.shard)
+            .filter(|&s| s != GLOBAL_SHARD)
+            .collect();
+        ids.sort_unstable();
+        ids.dedup();
+        ids
+    }
+}
+
+/// Name of a (possibly unknown) section code.
+pub fn section_name(code: u16) -> String {
+    match SectionKind::from_code(code) {
+        Some(k) => k.name().to_string(),
+        None => format!("unknown({code})"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> String {
+        let dir = std::env::temp_dir().join("geomap-snapshot-format");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name).to_string_lossy().into_owned()
+    }
+
+    #[test]
+    fn crc32_known_vectors() {
+        // standard test vector for CRC-32/IEEE
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn container_roundtrip() {
+        let path = tmp("roundtrip.gsnp");
+        let mut w = Writer::create(&path).unwrap();
+        w.begin().extend_from_slice(b"{\"a\":1}");
+        w.end(SectionKind::Config, GLOBAL_SHARD).unwrap();
+        let buf = w.begin();
+        push_u32s(buf, &[1, 2, 3, 500_000]);
+        w.end(SectionKind::Index, 0).unwrap();
+        let buf = w.begin();
+        push_f32s(buf, &[0.5, -1.25]);
+        w.end(SectionKind::Factors, 0).unwrap();
+        let len = w.finish().unwrap();
+        assert_eq!(len, std::fs::metadata(&path).unwrap().len());
+
+        let r = Reader::open(&path).unwrap();
+        assert_eq!(r.version(), VERSION);
+        assert_eq!(r.entries().len(), 3);
+        assert_eq!(
+            r.section(SectionKind::Config, GLOBAL_SHARD).unwrap(),
+            b"{\"a\":1}"
+        );
+        let idx = r.section(SectionKind::Index, 0).unwrap();
+        assert_eq!(cast_u32s(idx).unwrap(), vec![1, 2, 3, 500_000]);
+        let f = r.section(SectionKind::Factors, 0).unwrap();
+        assert_eq!(cast_f32s(f).unwrap(), vec![0.5, -1.25]);
+        assert_eq!(r.shard_ids(), vec![0]);
+        // payloads are aligned
+        for e in r.entries() {
+            assert_eq!(e.offset % ALIGN as u64, 0);
+        }
+        assert!(r.opt_section(SectionKind::Delta, 0).is_none());
+        assert!(r.section(SectionKind::Delta, 0).is_err());
+    }
+
+    #[test]
+    fn corrupt_payload_rejected_but_inspectable() {
+        let path = tmp("corrupt.gsnp");
+        let mut w = Writer::create(&path).unwrap();
+        w.begin().extend_from_slice(b"payload payload payload");
+        w.end(SectionKind::Config, GLOBAL_SHARD).unwrap();
+        w.finish().unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[HEADER_LEN + 3] ^= 0xFF; // flip a payload byte
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(Reader::open(&path).is_err());
+        let r = Reader::open_tolerant(&path).unwrap();
+        assert_eq!(r.crc_status(), &[false]);
+    }
+
+    #[test]
+    fn truncation_and_bad_magic_rejected() {
+        let path = tmp("trunc.gsnp");
+        let mut w = Writer::create(&path).unwrap();
+        w.begin().extend_from_slice(&[7u8; 100]);
+        w.end(SectionKind::Factors, 0).unwrap();
+        w.finish().unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 9]).unwrap();
+        assert!(Reader::open(&path).is_err());
+
+        let magic = tmp("magic.gsnp");
+        std::fs::write(&magic, b"not a snapshot at all........................")
+            .unwrap();
+        let err = Reader::open(&magic).unwrap_err().to_string();
+        assert!(err.contains("magic"), "{err}");
+    }
+
+    #[test]
+    fn future_version_rejected() {
+        let path = tmp("version.gsnp");
+        let mut w = Writer::create(&path).unwrap();
+        w.begin().extend_from_slice(b"x");
+        w.end(SectionKind::Config, GLOBAL_SHARD).unwrap();
+        w.finish().unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[4] = 99; // version low byte
+        std::fs::write(&path, &bytes).unwrap();
+        let err = Reader::open(&path).unwrap_err().to_string();
+        assert!(err.contains("version 99"), "{err}");
+    }
+
+    #[test]
+    fn cursor_reads_and_reports_truncation() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&7u64.to_le_bytes());
+        buf.push(1);
+        buf.extend_from_slice(b"tail");
+        let mut c = Cursor::new(&buf, "test");
+        assert_eq!(c.u64().unwrap(), 7);
+        assert_eq!(c.u8().unwrap(), 1);
+        assert_eq!(c.rest(), b"tail");
+        let mut c2 = Cursor::new(&buf[..3], "test");
+        let err = c2.u64().unwrap_err().to_string();
+        assert!(err.contains("truncated"), "{err}");
+    }
+
+    #[test]
+    fn cast_rejects_ragged_lengths() {
+        assert!(cast_u32s(&[1, 2, 3]).is_err());
+        assert!(cast_f32s(&[1, 2, 3, 4, 5]).is_err());
+        assert_eq!(cast_u32s(&[]).unwrap(), Vec::<u32>::new());
+    }
+}

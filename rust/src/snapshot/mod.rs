@@ -1,0 +1,394 @@
+//! Snapshot subsystem: versioned zero-copy persistence and warm-start
+//! for built engines (`docs/SNAPSHOT.md`).
+//!
+//! The paper's economics put all the expensive work offline —
+//! tessellating the sphere, building the permutation maps, materialising
+//! the inverted index — so serving stays cheap. Before this subsystem
+//! only raw factor matrices persisted (`GMF1`), and every process start
+//! re-paid the entire build. A snapshot persists the *built* engine
+//! state instead, so a coordinator cold-starts by reinterpreting aligned
+//! bytes rather than re-mapping the catalogue:
+//!
+//! * [`format`] — the `GSNP` container: versioned header, CRC32-guarded
+//!   section table, 64-byte-aligned little-endian payloads.
+//! * [`save_engine`] / [`load_engine`] — single-engine persistence
+//!   (`Engine::save_snapshot` / `EngineBuilder::from_snapshot` are the
+//!   ergonomic entry points).
+//! * [`save_engines`] / [`load_engines`] — multi-shard persistence used
+//!   by the coordinator's `FactorStore` for checkpoints and warm starts.
+//! * [`checkpoint`] — the background checkpointer: atomic tmp+rename
+//!   writes, keep-last-N retention, final checkpoint on shutdown.
+//! * [`inspect`] — header/section/config report without reconstruction.
+
+pub mod checkpoint;
+mod codec;
+pub mod format;
+
+pub use checkpoint::{latest_snapshot, Checkpointer};
+pub use format::crc32;
+
+use crate::configx::{obj, Json};
+use crate::engine::Engine;
+use crate::error::{GeomapError, Result};
+use format::{Reader, SectionKind, Writer, GLOBAL_SHARD};
+
+/// A loaded multi-shard snapshot.
+pub struct LoadedSnapshot {
+    /// Catalogue version at save time (restored by the factor store).
+    pub catalogue_version: u64,
+    /// `(base_id, engine)` per shard, shard order.
+    pub shards: Vec<(u32, Engine)>,
+}
+
+/// Persist a sharded engine set to `path`, atomically (the file is
+/// written as `<path>.tmp` and renamed into place). `shards` pairs each
+/// engine with the global item id of its local id 0. Returns the file
+/// size in bytes.
+pub fn save_engines(
+    path: &str,
+    shards: &[(u32, &Engine)],
+    catalogue_version: u64,
+) -> Result<u64> {
+    if shards.is_empty() {
+        return Err(GeomapError::Config(
+            "cannot snapshot an empty shard set".into(),
+        ));
+    }
+    if shards.len() >= GLOBAL_SHARD as usize {
+        return Err(GeomapError::Config(format!(
+            "{} shards exceed the snapshot shard limit",
+            shards.len()
+        )));
+    }
+    if let Some(parent) = std::path::Path::new(path).parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)
+                .map_err(|e| GeomapError::io(path, e))?;
+        }
+    }
+    let tmp = format!("{path}.tmp");
+    let mut w = Writer::create(&tmp)?;
+    let total_items: usize = shards.iter().map(|(_, e)| e.len()).sum();
+    let global = obj(vec![
+        ("format", Json::from(format::VERSION as usize)),
+        ("shards", Json::from(shards.len())),
+        ("total_items", Json::from(total_items)),
+        ("version", Json::from(catalogue_version.to_string())),
+        (
+            "base_ids",
+            Json::from(
+                shards.iter().map(|&(b, _)| b as usize).collect::<Vec<_>>(),
+            ),
+        ),
+    ]);
+    w.begin().extend_from_slice(global.to_string_compact().as_bytes());
+    w.end(SectionKind::Config, GLOBAL_SHARD)?;
+    for (ordinal, &(_, engine)) in shards.iter().enumerate() {
+        codec::write_engine(&mut w, ordinal as u16, engine)?;
+    }
+    let bytes = w.finish()?;
+    std::fs::rename(&tmp, path).map_err(|e| GeomapError::io(path, e))?;
+    Ok(bytes)
+}
+
+/// Persist one engine (shard 0, base id 0) to `path`.
+pub fn save_engine(path: &str, engine: &Engine) -> Result<u64> {
+    save_engines(path, &[(0, engine)], 0)
+}
+
+fn read_global(r: &Reader) -> Result<(usize, u64, Vec<u32>)> {
+    let bytes = r.section(SectionKind::Config, GLOBAL_SHARD)?;
+    let text = std::str::from_utf8(bytes).map_err(|_| {
+        GeomapError::Artifact("snapshot global config is not UTF-8".into())
+    })?;
+    let j = Json::parse(text)?;
+    let shards = j.get("shards")?.as_usize()?;
+    let version: u64 =
+        j.get("version")?.as_str()?.parse().map_err(|_| {
+            GeomapError::Artifact(
+                "snapshot global config has a malformed version".into(),
+            )
+        })?;
+    let base_ids: Vec<u32> = j
+        .get("base_ids")?
+        .as_usize_vec()?
+        .into_iter()
+        .map(|b| b as u32)
+        .collect();
+    if base_ids.len() != shards {
+        return Err(GeomapError::Artifact(format!(
+            "snapshot lists {shards} shards but {} base ids",
+            base_ids.len()
+        )));
+    }
+    Ok((shards, version, base_ids))
+}
+
+/// Load every shard engine from `path`, fully verifying section CRCs
+/// and cross-validating the reconstructed state.
+pub fn load_engines(path: &str) -> Result<LoadedSnapshot> {
+    let r = Reader::open(path)?;
+    let (n_shards, catalogue_version, base_ids) = read_global(&r)?;
+    if n_shards == 0 {
+        return Err(GeomapError::Artifact(format!(
+            "{path}: snapshot declares zero shards"
+        )));
+    }
+    let present = r.shard_ids();
+    if present.len() != n_shards
+        || present.iter().enumerate().any(|(i, &s)| s as usize != i)
+    {
+        return Err(GeomapError::Artifact(format!(
+            "{path}: snapshot announces {n_shards} shards but holds \
+             sections for {:?}",
+            present
+        )));
+    }
+    let mut shards = Vec::with_capacity(n_shards);
+    for (ordinal, &base_id) in base_ids.iter().enumerate() {
+        let engine = codec::read_engine(&r, ordinal as u16)?;
+        shards.push((base_id, engine));
+    }
+    Ok(LoadedSnapshot { catalogue_version, shards })
+}
+
+/// Load a single-engine snapshot (the `Engine::save_snapshot` shape).
+pub fn load_engine(path: &str) -> Result<Engine> {
+    let mut loaded = load_engines(path)?;
+    if loaded.shards.len() != 1 {
+        return Err(GeomapError::Config(format!(
+            "{path} holds a {}-shard coordinator snapshot; warm-start it \
+             through Coordinator::start_from_snapshot",
+            loaded.shards.len()
+        )));
+    }
+    Ok(loaded.shards.pop().unwrap().1)
+}
+
+/// One section row of an [`inspect`] report.
+#[derive(Clone, Debug)]
+pub struct SectionInfo {
+    /// Section kind name (unknown codes render as `unknown(n)`).
+    pub kind: String,
+    /// Owning shard ordinal; `None` for file-global sections.
+    pub shard: Option<u16>,
+    /// Payload offset in the file.
+    pub offset: u64,
+    /// Payload length in bytes.
+    pub len: u64,
+    /// Whether the payload matches its recorded CRC32.
+    pub crc_ok: bool,
+}
+
+/// Header + section + config report of a snapshot file.
+#[derive(Clone, Debug)]
+pub struct SnapshotInfo {
+    /// Container format version.
+    pub format_version: u16,
+    /// Total file size in bytes.
+    pub file_len: u64,
+    /// Shard count.
+    pub shards: usize,
+    /// Catalogue version recorded at save time.
+    pub catalogue_version: u64,
+    /// Engine build spec of shard 0 (config section JSON).
+    pub spec: Json,
+    /// All sections, file order.
+    pub sections: Vec<SectionInfo>,
+}
+
+impl SnapshotInfo {
+    /// True when every payload CRC verified.
+    pub fn intact(&self) -> bool {
+        self.sections.iter().all(|s| s.crc_ok)
+    }
+
+    /// Multi-line human-readable report (CLI `snapshot inspect`).
+    pub fn render(&self) -> String {
+        use std::fmt::Write as _;
+        let mut s = String::new();
+        let _ = writeln!(
+            s,
+            "GSNP v{}  {} bytes  {} shard(s)  catalogue version {}  {}",
+            self.format_version,
+            self.file_len,
+            self.shards,
+            self.catalogue_version,
+            if self.intact() { "intact" } else { "CORRUPT" },
+        );
+        let _ = writeln!(s, "spec: {}", self.spec.to_string_compact());
+        let _ = writeln!(
+            s,
+            "{:<12} {:>6} {:>12} {:>12}  crc",
+            "section", "shard", "offset", "bytes"
+        );
+        for sec in &self.sections {
+            let shard = match sec.shard {
+                Some(x) => x.to_string(),
+                None => "-".to_string(),
+            };
+            let _ = writeln!(
+                s,
+                "{:<12} {:>6} {:>12} {:>12}  {}",
+                sec.kind,
+                shard,
+                sec.offset,
+                sec.len,
+                if sec.crc_ok { "ok" } else { "MISMATCH" }
+            );
+        }
+        s
+    }
+}
+
+/// Report a snapshot's header, sections and config without rebuilding
+/// any engine. Payload CRC mismatches are *reported*, not fatal, so a
+/// damaged file can still be diagnosed.
+pub fn inspect(path: &str) -> Result<SnapshotInfo> {
+    let r = Reader::open_tolerant(path)?;
+    // a corrupt global config must not kill the report — the per-section
+    // CRC column is exactly what diagnoses it
+    let (shards, catalogue_version) = match read_global(&r) {
+        Ok((shards, version, _)) => (shards, version),
+        Err(_) => (0, 0),
+    };
+    let spec = match r.opt_section(SectionKind::Config, 0) {
+        Some(bytes) => std::str::from_utf8(bytes)
+            .ok()
+            .and_then(|t| Json::parse(t).ok())
+            .unwrap_or(Json::Null),
+        None => Json::Null,
+    };
+    let sections = r
+        .entries()
+        .iter()
+        .zip(r.crc_status())
+        .map(|(e, &ok)| SectionInfo {
+            kind: format::section_name(e.kind),
+            shard: (e.shard != GLOBAL_SHARD).then_some(e.shard),
+            offset: e.offset,
+            len: e.len,
+            crc_ok: ok,
+        })
+        .collect();
+    let file_len = std::fs::metadata(path)
+        .map(|m| m.len())
+        .map_err(|e| GeomapError::io(path, e))?;
+    Ok(SnapshotInfo {
+        format_version: r.version(),
+        file_len,
+        shards,
+        catalogue_version,
+        spec,
+        sections,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::configx::{Backend, MutationConfig, SchemaConfig};
+    use crate::linalg::Matrix;
+    use crate::rng::Rng;
+
+    fn tmp(name: &str) -> String {
+        let dir = std::env::temp_dir().join("geomap-snapshot-mod");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name).to_string_lossy().into_owned()
+    }
+
+    fn items(n: usize, k: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::seeded(seed);
+        Matrix::gaussian(&mut rng, n, k, 1.0)
+    }
+
+    #[test]
+    fn engine_save_load_inspect() {
+        let path = tmp("engine.gsnp");
+        let engine = Engine::builder()
+            .schema(SchemaConfig::TernaryParseTree)
+            .threshold(0.5)
+            .mutation(MutationConfig { max_delta: 16 })
+            .build(items(120, 8, 1))
+            .unwrap();
+        let bytes = save_engine(&path, &engine).unwrap();
+        assert_eq!(bytes, std::fs::metadata(&path).unwrap().len());
+
+        let loaded = load_engine(&path).unwrap();
+        assert_eq!(loaded.len(), engine.len());
+        assert_eq!(loaded.dim(), engine.dim());
+        assert_eq!(loaded.label(), engine.label());
+        assert!(loaded.spec().same_spec(&engine.spec()));
+
+        let info = inspect(&path).unwrap();
+        assert!(info.intact());
+        assert_eq!(info.shards, 1);
+        assert_eq!(info.catalogue_version, 0);
+        assert_eq!(
+            info.spec.get("backend").unwrap().as_str().unwrap(),
+            "geomap"
+        );
+        let kinds: Vec<&str> =
+            info.sections.iter().map(|s| s.kind.as_str()).collect();
+        for want in ["config", "factors", "index", "base-map", "delta"] {
+            assert!(kinds.contains(&want), "missing {want} in {kinds:?}");
+        }
+        assert!(info.render().contains("intact"));
+    }
+
+    #[test]
+    fn multi_shard_snapshot_is_not_a_single_engine() {
+        let path = tmp("two-shards.gsnp");
+        let a = Engine::builder().build(items(30, 4, 2)).unwrap();
+        let b = Engine::builder().build(items(20, 4, 3)).unwrap();
+        save_engines(&path, &[(0, &a), (30, &b)], 7).unwrap();
+        let loaded = load_engines(&path).unwrap();
+        assert_eq!(loaded.catalogue_version, 7);
+        assert_eq!(loaded.shards.len(), 2);
+        assert_eq!(loaded.shards[1].0, 30);
+        assert!(load_engine(&path).is_err(), "single-engine loader refuses");
+    }
+
+    #[test]
+    fn baseline_engine_roundtrips_via_factors() {
+        let path = tmp("baseline.gsnp");
+        let its = items(60, 6, 4);
+        let engine = Engine::builder()
+            .backend(Backend::Srp { bits: 3, tables: 2 })
+            .seed(99)
+            .build(its.clone())
+            .unwrap();
+        save_engine(&path, &engine).unwrap();
+        let loaded = load_engine(&path).unwrap();
+        assert_eq!(loaded.backend(), engine.backend());
+        // deterministic rebuild: same candidates for the same user
+        let mut rng = Rng::seeded(5);
+        let u: Vec<f32> = (0..6).map(|_| rng.gaussian_f32()).collect();
+        assert_eq!(
+            loaded.candidates(&u).unwrap(),
+            engine.candidates(&u).unwrap()
+        );
+        assert_eq!(loaded.dense_factors().unwrap(), &its);
+    }
+
+    #[test]
+    fn empty_shard_set_rejected() {
+        assert!(save_engines(&tmp("none.gsnp"), &[], 0).is_err());
+    }
+
+    #[test]
+    fn zero_shard_file_rejected_without_panic() {
+        // a hand-rolled file whose global config declares zero shards
+        // must fail loudly, not index-panic downstream
+        let path = tmp("zero-shards.gsnp");
+        let mut w = format::Writer::create(&path).unwrap();
+        w.begin().extend_from_slice(
+            br#"{"format":1,"shards":0,"total_items":0,"version":"0","base_ids":[]}"#,
+        );
+        w.end(SectionKind::Config, GLOBAL_SHARD).unwrap();
+        w.finish().unwrap();
+        let err = load_engines(&path).unwrap_err().to_string();
+        assert!(err.contains("zero shards"), "{err}");
+        assert!(crate::coordinator::FactorStore::from_snapshot(&path).is_err());
+    }
+}

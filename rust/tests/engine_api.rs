@@ -37,6 +37,7 @@ fn serve_cfg(k: usize, shards: usize, backend: Backend) -> ServeConfig {
         threshold: 0.0,
         backend,
         mutation: MutationConfig::default(),
+        checkpoint: None,
     }
 }
 

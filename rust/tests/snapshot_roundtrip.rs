@@ -1,0 +1,267 @@
+//! End-to-end snapshot coverage (ISSUE 2 acceptance):
+//!
+//! * build → save → load → *exact* top-k equivalence on every backend;
+//! * mutate (upsert / remove / merge) → save → load equivalence, and
+//!   mutability surviving the round trip;
+//! * corrupted / truncated / version-bumped files rejected loudly;
+//! * explicit builder overrides conflict by error, never silently;
+//! * coordinator warm start + background checkpointing.
+
+use geomap::configx::{Backend, CheckpointConfig, MutationConfig, SchemaConfig, ServeConfig};
+use geomap::coordinator::Coordinator;
+use geomap::engine::Engine;
+use geomap::linalg::Matrix;
+use geomap::rng::Rng;
+use geomap::runtime::cpu_scorer_factory;
+use geomap::snapshot;
+
+fn tmp(name: &str) -> String {
+    let dir = std::env::temp_dir()
+        .join("geomap-snapshot-e2e")
+        .join(format!("p{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name).to_string_lossy().into_owned()
+}
+
+fn items(n: usize, k: usize, seed: u64) -> Matrix {
+    let mut rng = Rng::seeded(seed);
+    Matrix::gaussian(&mut rng, n, k, 1.0)
+}
+
+fn users(n: usize, k: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::seeded(seed);
+    (0..n).map(|_| (0..k).map(|_| rng.gaussian_f32()).collect()).collect()
+}
+
+/// Exact equality of candidates and scored top-k between two engines.
+fn assert_identical(a: &Engine, b: &Engine, k: usize, seed: u64) {
+    assert_eq!(a.len(), b.len());
+    assert_eq!(a.dim(), b.dim());
+    assert_eq!(a.label(), b.label());
+    for u in users(12, k, seed) {
+        assert_eq!(
+            a.candidates(&u).unwrap(),
+            b.candidates(&u).unwrap(),
+            "candidate sets diverged"
+        );
+        let (ta, tb) = (a.top_k(&u, 10).unwrap(), b.top_k(&u, 10).unwrap());
+        assert_eq!(ta.len(), tb.len());
+        for (x, y) in ta.iter().zip(&tb) {
+            assert_eq!(x.id, y.id, "top-k ids diverged");
+            assert_eq!(
+                x.score.to_bits(),
+                y.score.to_bits(),
+                "top-k scores are not byte-exact"
+            );
+        }
+    }
+}
+
+#[test]
+fn every_backend_roundtrips_byte_exact() {
+    let k = 8;
+    let its = items(180, k, 1);
+    for backend in [
+        Backend::Geomap,
+        Backend::Srp { bits: 3, tables: 2 },
+        Backend::Superbit { bits: 3, depth: 3, tables: 2 },
+        Backend::Cros { m: 12, l: 1, tables: 2 },
+        Backend::PcaTree { leaf_frac: 0.25 },
+        Backend::Brute,
+    ] {
+        let built = Engine::builder()
+            .backend(backend)
+            .threshold(0.5)
+            .seed(0xBEEF)
+            .build(its.clone())
+            .unwrap();
+        let path = tmp(&format!("backend-{}.gsnp", backend.name()));
+        built.save_snapshot(&path).unwrap();
+        let loaded = Engine::builder().from_snapshot(&path).unwrap();
+        assert_eq!(loaded.backend(), backend);
+        assert!(loaded.spec().same_spec(&built.spec()));
+        assert_identical(&built, &loaded, k, 100);
+    }
+}
+
+#[test]
+fn mutated_engine_roundtrips_and_stays_mutable() {
+    let k = 8;
+    let mut built = Engine::builder()
+        .threshold(0.4)
+        .mutation(MutationConfig { max_delta: 0 }) // manual merges only
+        .build(items(90, k, 2))
+        .unwrap();
+    // upsert-replace, append, remove — all pending in the delta
+    let f1 = users(1, k, 3).pop().unwrap();
+    let f2 = users(1, k, 4).pop().unwrap();
+    built.upsert(17, &f1).unwrap();
+    built.upsert(90, &f2).unwrap();
+    built.remove(33).unwrap();
+    assert!(built.pending() > 0);
+
+    let path = tmp("mutated.gsnp");
+    built.save_snapshot(&path).unwrap();
+    let mut loaded = Engine::builder().from_snapshot(&path).unwrap();
+    let stats = loaded.stats();
+    assert_eq!(stats.live, built.stats().live);
+    assert_eq!(stats.pending, built.stats().pending);
+    assert_eq!(stats.tombstones, built.stats().tombstones);
+    assert_eq!(loaded.factor(17).unwrap(), &f1[..]);
+    assert_eq!(loaded.factor(90).unwrap(), &f2[..]);
+    assert_eq!(loaded.factor(33), None);
+    assert_identical(&built, &loaded, k, 200);
+
+    // merging both gives identical results again
+    built.merge().unwrap();
+    loaded.merge().unwrap();
+    assert_eq!(loaded.pending(), 0);
+    assert_identical(&built, &loaded, k, 300);
+
+    // post-merge snapshot (holes in the id space) also round-trips
+    let path2 = tmp("merged.gsnp");
+    built.save_snapshot(&path2).unwrap();
+    let mut reloaded = Engine::builder().from_snapshot(&path2).unwrap();
+    assert_identical(&built, &reloaded, k, 400);
+    // and the loaded engine keeps accepting mutations
+    let f3 = users(1, k, 5).pop().unwrap();
+    reloaded.upsert(33, &f3).unwrap();
+    assert_eq!(reloaded.factor(33).unwrap(), &f3[..]);
+}
+
+#[test]
+fn explicit_builder_overrides_conflict_by_error() {
+    let k = 6;
+    let engine = Engine::builder()
+        .schema(SchemaConfig::TernaryParseTree)
+        .threshold(1.25)
+        .build(items(40, k, 6))
+        .unwrap();
+    let path = tmp("conflict.gsnp");
+    engine.save_snapshot(&path).unwrap();
+
+    // untouched defaults: the snapshot config simply applies
+    let loaded = Engine::builder().from_snapshot(&path).unwrap();
+    assert!(loaded.spec().same_spec(&engine.spec()));
+
+    // matching explicit settings are fine
+    assert!(Engine::builder()
+        .threshold(1.25)
+        .schema(SchemaConfig::TernaryParseTree)
+        .from_snapshot(&path)
+        .is_ok());
+
+    // conflicting explicit settings fail loudly instead of silently
+    // winning or losing
+    let err = Engine::builder()
+        .threshold(0.7)
+        .from_snapshot(&path)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("conflicts"), "{err}");
+    assert!(err.contains("threshold"), "{err}");
+    let err = Engine::builder()
+        .backend(Backend::Brute)
+        .from_snapshot(&path)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("backend"), "{err}");
+}
+
+#[test]
+fn damaged_files_are_rejected() {
+    let engine = Engine::builder().build(items(50, 6, 7)).unwrap();
+    let path = tmp("damage-base.gsnp");
+    engine.save_snapshot(&path).unwrap();
+    let pristine = std::fs::read(&path).unwrap();
+
+    // payload corruption → CRC error (byte 70 sits inside the first
+    // payload, the global config JSON at offset 64)
+    let corrupt = tmp("damage-crc.gsnp");
+    let mut bytes = pristine.clone();
+    bytes[70] ^= 0xA5;
+    std::fs::write(&corrupt, &bytes).unwrap();
+    let err = Engine::builder().from_snapshot(&corrupt).unwrap_err().to_string();
+    assert!(err.to_lowercase().contains("crc"), "{err}");
+    // ...but inspect still reports the damage instead of dying
+    let info = snapshot::inspect(&corrupt).unwrap();
+    assert!(!info.intact());
+
+    // truncation → length error
+    let short = tmp("damage-short.gsnp");
+    std::fs::write(&short, &pristine[..pristine.len() - 21]).unwrap();
+    let err = Engine::builder().from_snapshot(&short).unwrap_err().to_string();
+    assert!(err.contains("truncated"), "{err}");
+
+    // version bump → unsupported-version error
+    let vbump = tmp("damage-version.gsnp");
+    let mut bytes = pristine.clone();
+    bytes[4] = 0x7F;
+    std::fs::write(&vbump, &bytes).unwrap();
+    let err = Engine::builder().from_snapshot(&vbump).unwrap_err().to_string();
+    assert!(err.contains("version"), "{err}");
+
+    // wrong magic → immediate rejection
+    let magic = tmp("damage-magic.gsnp");
+    let mut bytes = pristine;
+    bytes[0..4].copy_from_slice(b"NOPE");
+    std::fs::write(&magic, &bytes).unwrap();
+    assert!(Engine::builder().from_snapshot(&magic).is_err());
+}
+
+#[test]
+fn coordinator_checkpoint_and_warm_start_serve_identically() {
+    let k = 8;
+    let dir = tmp("ckpt-dir");
+    let cfg = ServeConfig {
+        k,
+        kappa: 5,
+        schema: SchemaConfig::TernaryParseTree,
+        max_batch: 8,
+        max_wait_us: 200,
+        shards: 2,
+        queue_cap: 64,
+        use_xla: false,
+        artifacts_dir: "artifacts".into(),
+        threshold: 0.0,
+        checkpoint: Some(CheckpointConfig {
+            dir: dir.clone(),
+            every_ms: 10_000, // periodic timer will not fire; rely on the
+            keep_last: 2,     // final checkpoint at shutdown
+        }),
+        ..ServeConfig::default()
+    };
+    let coord = Coordinator::start(
+        cfg.clone(),
+        items(200, k, 8),
+        cpu_scorer_factory(),
+    )
+    .unwrap();
+    coord.remove(11).unwrap();
+    let extra = users(1, k, 9).pop().unwrap();
+    coord.upsert(200, &extra).unwrap();
+    let version = coord.version();
+    let probe_users = users(6, k, 10);
+    let want: Vec<_> = probe_users
+        .iter()
+        .map(|u| coord.submit(u.clone(), 5).unwrap())
+        .collect();
+    coord.shutdown(); // final checkpoint fires here
+
+    let latest = snapshot::latest_snapshot(&dir).unwrap().expect("checkpoint");
+    let warm =
+        Coordinator::start_from_snapshot(cfg, &latest, cpu_scorer_factory())
+            .unwrap();
+    assert_eq!(warm.version(), version);
+    assert_eq!(warm.total_items(), 201);
+    for (u, w) in probe_users.iter().zip(&want) {
+        let got = warm.submit(u.clone(), 5).unwrap();
+        assert_eq!(got.candidates, w.candidates);
+        assert_eq!(
+            got.results.iter().map(|s| (s.id, s.score.to_bits())).collect::<Vec<_>>(),
+            w.results.iter().map(|s| (s.id, s.score.to_bits())).collect::<Vec<_>>(),
+        );
+        assert!(got.results.iter().all(|s| s.id != 11), "tombstone leaked");
+    }
+    warm.shutdown();
+}
