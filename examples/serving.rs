@@ -59,7 +59,7 @@ fn main() -> anyhow::Result<()> {
         threshold: 1.5, // k=32 operating point (EXPERIMENTS.md §Perf)
         backend: Backend::Geomap, // any Backend::* serves via config
         mutation: MutationConfig { max_delta: 256 },
-        checkpoint: None,
+        ..ServeConfig::default()
     };
     let factory = if use_cpu {
         cpu_scorer_factory()

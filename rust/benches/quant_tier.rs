@@ -1,0 +1,214 @@
+//! Compressed serving tier: memory / recall / throughput trade-offs
+//! (docs/QUANT.md).
+//!
+//! The acceptance bars for the quant subsystem, judged on the synthetic
+//! workload at the default profile:
+//!
+//! * `int8+packed` reports ≥ 3× smaller scan-tier `memory_bytes` than
+//!   `f32+raw`;
+//! * recall@10 of the quantized tier stays within 1% of the exact
+//!   engine over the same candidates.
+//!
+//! Both axes are measured independently (`f32/int8` × `raw/packed`) on
+//! the synthetic and MovieLens workloads, with per-config scan/rescore
+//! throughput from the shared `Bencher`. The one-hot schema (p = 3k)
+//! is used deliberately: its posting lists are long and dense — the
+//! regime delta + bit-packing is built for. (The parse-tree schema
+//! spreads postings over O(k²) near-singleton dimensions, where block
+//! metadata cancels the packing win; see docs/QUANT.md "when to
+//! enable".)
+//!
+//! ```bash
+//! cargo bench --bench quant_tier
+//! GEOMAP_BENCH_FAST=1 cargo bench --bench quant_tier
+//! ```
+
+mod common;
+
+use geomap::bench::{black_box, Bencher};
+use geomap::configx::{PostingsMode, QuantMode, SchemaConfig};
+use geomap::engine::{Engine, SourceScratch};
+use geomap::evalx::render_table;
+use geomap::linalg::Matrix;
+
+const KAPPA: usize = 10;
+
+struct ConfigResult {
+    name: &'static str,
+    scan_bytes: usize,
+    refine_bytes: usize,
+    recall: f64,
+}
+
+impl ConfigResult {
+    fn row(&self) -> Vec<String> {
+        vec![
+            self.name.to_string(),
+            format!("{:.1}", self.scan_bytes as f64 / 1024.0),
+            format!("{:.1}", self.refine_bytes as f64 / 1024.0),
+            format!("{:.4}", self.recall),
+        ]
+    }
+}
+
+fn top_ids(engine: &Engine, user: &[f32]) -> Vec<u32> {
+    engine
+        .top_k(user, KAPPA)
+        .expect("top_k")
+        .iter()
+        .map(|s| s.id)
+        .collect()
+}
+
+fn run_workload(
+    workload: &str,
+    threshold: f32,
+    users: &Matrix,
+    items: &Matrix,
+    failures: &mut Vec<String>,
+) {
+    println!(
+        "\n== {workload}: {} items, k={} (schema ternary-onehot, \
+         threshold {threshold}) ==",
+        items.rows(),
+        items.cols()
+    );
+    let configs: [(&'static str, QuantMode, PostingsMode); 4] = [
+        ("f32+raw", QuantMode::Off, PostingsMode::Raw),
+        ("int8+raw", QuantMode::Int8 { refine: 4 }, PostingsMode::Raw),
+        ("f32+packed", QuantMode::Off, PostingsMode::Packed),
+        (
+            "int8+packed",
+            QuantMode::Int8 { refine: 4 },
+            PostingsMode::Packed,
+        ),
+    ];
+    let engines: Vec<Engine> = configs
+        .iter()
+        .map(|&(name, quant, postings)| {
+            Engine::builder()
+                .schema(SchemaConfig::TernaryOneHot)
+                .threshold(threshold)
+                .quant(quant)
+                .postings(postings)
+                .build(items.clone())
+                .expect(name)
+        })
+        .collect();
+
+    let probes =
+        (if common::fast() { 24 } else { 64 }).min(users.rows());
+    // the reference for recall@10 is the exact f32 engine over the same
+    // candidate sets, so the metric isolates quantization loss from
+    // pruning loss
+    let reference: Vec<Vec<u32>> =
+        (0..probes).map(|r| top_ids(&engines[0], users.row(r))).collect();
+
+    let mut results = Vec::new();
+    let mut bencher = Bencher::from_env();
+    for (cfg, engine) in configs.iter().zip(&engines) {
+        let (mut hits, mut total) = (0usize, 0usize);
+        for (r, want) in reference.iter().enumerate() {
+            let got = top_ids(engine, users.row(r));
+            total += want.len();
+            hits += want.iter().filter(|id| got.contains(id)).count();
+        }
+        let recall = if total == 0 { 1.0 } else { hits as f64 / total as f64 };
+        let stats = engine.stats();
+        results.push(ConfigResult {
+            name: cfg.0,
+            scan_bytes: stats.memory_bytes,
+            refine_bytes: stats.refine_bytes,
+            recall,
+        });
+
+        // scan/rescore throughput: prune + (quantized or exact) rescore
+        // per query, reusing warm buffers (query scratch, candidate
+        // list, quantized-query codes) exactly like the serving worker
+        let mut scratch = SourceScratch::new();
+        let mut cand = Vec::new();
+        let mut qbuf = Vec::new();
+        let mut r = 0usize;
+        bencher.bench(
+            &format!("{workload}: top-{KAPPA} {}", cfg.0),
+            1,
+            || {
+                let user = users.row(r);
+                engine
+                    .candidates_into(user, &mut scratch, &mut cand)
+                    .expect("candidates");
+                let top = engine.rescore_into(user, &cand, KAPPA, &mut qbuf);
+                black_box(top.len());
+                r = (r + 1) % probes;
+            },
+        );
+    }
+
+    let rows: Vec<Vec<String>> = results.iter().map(ConfigResult::row).collect();
+    print!(
+        "{}",
+        render_table(
+            &["config", "scan KiB", "refine KiB", "recall@10"],
+            &rows
+        )
+    );
+    let f32_raw = &results[0];
+    let int8_packed = &results[3];
+    println!(
+        "memory: f32+raw {:.1} KiB vs int8+packed {:.1} KiB → {:.2}x \
+         smaller; recall@10 {:.4}",
+        f32_raw.scan_bytes as f64 / 1024.0,
+        int8_packed.scan_bytes as f64 / 1024.0,
+        f32_raw.scan_bytes as f64 / int8_packed.scan_bytes as f64,
+        int8_packed.recall,
+    );
+
+    // acceptance gates, judged on the synthetic workload at the default
+    // profile (the CI fast profile is too small to be meaningful)
+    if workload == "synthetic" && !common::fast() {
+        let ratio =
+            f32_raw.scan_bytes as f64 / int8_packed.scan_bytes as f64;
+        if ratio < 3.0 {
+            failures.push(format!(
+                "int8+packed only {ratio:.2}x smaller than f32+raw (target 3x)"
+            ));
+        }
+        if int8_packed.recall < 0.99 {
+            failures.push(format!(
+                "int8+packed recall@10 {:.4} below 0.99",
+                int8_packed.recall
+            ));
+        }
+        if results[2].recall < 1.0 {
+            failures.push(format!(
+                "f32+packed recall@10 {:.4} — packing must not change \
+                 results at all",
+                results[2].recall
+            ));
+        }
+    }
+}
+
+fn main() {
+    let mut failures = Vec::new();
+    let (users, items) = common::synthetic_workload();
+    run_workload("synthetic", 1.5, &users, &items, &mut failures);
+    let (users, items) = common::movielens_workload();
+    run_workload("movielens", 1.3, &users, &items, &mut failures);
+
+    if failures.is_empty() {
+        if common::fast() {
+            println!("\nfast profile: measurements reported, gates not judged");
+        } else {
+            println!(
+                "\ncompressed-tier targets met: ≥3x smaller scan tier, \
+                 recall@10 within 1%"
+            );
+        }
+    } else {
+        for f in &failures {
+            eprintln!("QUANT TIER TARGET MISSED: {f}");
+        }
+        std::process::exit(1);
+    }
+}

@@ -210,6 +210,102 @@ impl Backend {
     }
 }
 
+/// Item-factor quantization for the serving tier (`quant` knob).
+///
+/// `Int8` stores symmetric per-item int8 codes + one f32 scale per item
+/// and rescores candidates with a fixed-point i8×i8→i32 kernel; the top
+/// `refine · κ` survivors are re-ranked with exact f32 inner products so
+/// the accuracy loss is bounded by the item quantization error alone
+/// (see `docs/QUANT.md`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QuantMode {
+    /// Full-precision f32 rescoring (the default).
+    Off,
+    /// Symmetric per-item int8 scalar quantization.
+    Int8 {
+        /// Exact-rescore multiplier: the top `refine · κ` candidates by
+        /// quantized score are re-ranked in f32 (≥ 1).
+        refine: usize,
+    },
+}
+
+impl QuantMode {
+    /// The default exact-refinement multiplier for `int8`.
+    pub const DEFAULT_REFINE: usize = 4;
+
+    /// Parse from CLI/JSON string form: `off`, `int8`, `int8:R`.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "off" => Ok(QuantMode::Off),
+            "int8" => Ok(QuantMode::Int8 { refine: Self::DEFAULT_REFINE }),
+            _ => {
+                if let Some(rest) = s.strip_prefix("int8:") {
+                    let refine: usize = rest.parse().map_err(|_| {
+                        GeomapError::Config(format!(
+                            "bad refine multiplier in quant '{s}'"
+                        ))
+                    })?;
+                    if refine == 0 {
+                        return Err(GeomapError::Config(
+                            "quant refine multiplier must be >= 1".into(),
+                        ));
+                    }
+                    Ok(QuantMode::Int8 { refine })
+                } else {
+                    Err(GeomapError::Config(format!(
+                        "unknown quant mode '{s}' (want off | int8[:R])"
+                    )))
+                }
+            }
+        }
+    }
+
+    /// Canonical string form; `QuantMode::parse(m.spec())` always
+    /// round-trips (the snapshot config section relies on this).
+    pub fn spec(&self) -> String {
+        match self {
+            QuantMode::Off => "off".to_string(),
+            QuantMode::Int8 { refine } => format!("int8:{refine}"),
+        }
+    }
+
+    /// True when quantization is enabled.
+    pub fn is_on(&self) -> bool {
+        !matches!(self, QuantMode::Off)
+    }
+}
+
+/// Posting-list storage for the geomap inverted index (`postings` knob).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PostingsMode {
+    /// Raw u32 CSR arenas (the default).
+    Raw,
+    /// Delta-encoded, block bit-packed arenas (128-entry blocks with
+    /// per-block max-id skip entries); see `docs/QUANT.md`.
+    Packed,
+}
+
+impl PostingsMode {
+    /// Parse from CLI/JSON string form: `raw`, `packed`.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "raw" => Ok(PostingsMode::Raw),
+            "packed" => Ok(PostingsMode::Packed),
+            _ => Err(GeomapError::Config(format!(
+                "unknown postings mode '{s}' (want raw | packed)"
+            ))),
+        }
+    }
+
+    /// Canonical string form (`parse(m.spec())` round-trips).
+    pub fn spec(&self) -> String {
+        match self {
+            PostingsMode::Raw => "raw".to_string(),
+            PostingsMode::Packed => "packed".to_string(),
+        }
+    }
+}
+
 /// Incremental catalogue-mutation policy (geomap backend only).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct MutationConfig {
@@ -292,6 +388,10 @@ pub struct ServeConfig {
     pub backend: Backend,
     /// Incremental-mutation policy (geomap backend only).
     pub mutation: MutationConfig,
+    /// Item-factor quantization of the rescoring tier.
+    pub quant: QuantMode,
+    /// Posting-list storage of the geomap inverted index.
+    pub postings: PostingsMode,
     /// Background snapshot checkpointing (`None` disables it).
     pub checkpoint: Option<CheckpointConfig>,
 }
@@ -311,6 +411,8 @@ impl Default for ServeConfig {
             threshold: 1.3,
             backend: Backend::Geomap,
             mutation: MutationConfig::default(),
+            quant: QuantMode::Off,
+            postings: PostingsMode::Raw,
             checkpoint: None,
         }
     }
@@ -339,6 +441,14 @@ impl ServeConfig {
         }
         if self.threshold < 0.0 {
             return Err(GeomapError::Config("threshold must be >= 0".into()));
+        }
+        if self.postings == PostingsMode::Packed
+            && !matches!(self.backend, Backend::Geomap)
+        {
+            return Err(GeomapError::Config(format!(
+                "postings=packed requires the geomap backend (got '{}')",
+                self.backend.name()
+            )));
         }
         if let Some(ck) = self.checkpoint.take() {
             self.checkpoint = Some(ck.validated()?);
@@ -384,6 +494,12 @@ impl ServeConfig {
         }
         if let Some(v) = j.opt("max_delta") {
             c.mutation.max_delta = v.as_usize()?;
+        }
+        if let Some(v) = j.opt("quant") {
+            c.quant = QuantMode::parse(v.as_str()?)?;
+        }
+        if let Some(v) = j.opt("postings") {
+            c.postings = PostingsMode::parse(v.as_str()?)?;
         }
         if let Some(v) = j.opt("checkpoint_dir") {
             let mut ck = CheckpointConfig {
@@ -570,6 +686,56 @@ mod tests {
         let j = Json::parse(r#"{"checkpoint_every_ms": 5000}"#).unwrap();
         assert!(ServeConfig::from_json(&j).is_err());
         let j = Json::parse(r#"{"checkpoint_keep": 5}"#).unwrap();
+        assert!(ServeConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn quant_and_postings_parse_forms() {
+        assert_eq!(QuantMode::parse("off").unwrap(), QuantMode::Off);
+        assert_eq!(
+            QuantMode::parse("int8").unwrap(),
+            QuantMode::Int8 { refine: QuantMode::DEFAULT_REFINE }
+        );
+        assert_eq!(
+            QuantMode::parse("int8:8").unwrap(),
+            QuantMode::Int8 { refine: 8 }
+        );
+        assert!(QuantMode::parse("int8:0").is_err());
+        assert!(QuantMode::parse("int4").is_err());
+        assert_eq!(PostingsMode::parse("raw").unwrap(), PostingsMode::Raw);
+        assert_eq!(PostingsMode::parse("packed").unwrap(), PostingsMode::Packed);
+        assert!(PostingsMode::parse("pforest").is_err());
+        for q in [
+            QuantMode::Off,
+            QuantMode::Int8 { refine: 4 },
+            QuantMode::Int8 { refine: 13 },
+        ] {
+            assert_eq!(QuantMode::parse(&q.spec()).unwrap(), q);
+        }
+        for p in [PostingsMode::Raw, PostingsMode::Packed] {
+            assert_eq!(PostingsMode::parse(&p.spec()).unwrap(), p);
+        }
+        assert!(!QuantMode::Off.is_on());
+        assert!(QuantMode::Int8 { refine: 2 }.is_on());
+    }
+
+    #[test]
+    fn from_json_quant_and_postings() {
+        let j = Json::parse(
+            r#"{"quant": "int8:6", "postings": "packed"}"#,
+        )
+        .unwrap();
+        let c = ServeConfig::from_json(&j).unwrap();
+        assert_eq!(c.quant, QuantMode::Int8 { refine: 6 });
+        assert_eq!(c.postings, PostingsMode::Packed);
+        // defaults otherwise
+        assert_eq!(ServeConfig::default().quant, QuantMode::Off);
+        assert_eq!(ServeConfig::default().postings, PostingsMode::Raw);
+        // packed postings only make sense on the geomap index
+        let j = Json::parse(
+            r#"{"backend": "brute", "postings": "packed"}"#,
+        )
+        .unwrap();
         assert!(ServeConfig::from_json(&j).is_err());
     }
 

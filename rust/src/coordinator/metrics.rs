@@ -48,22 +48,32 @@ impl ServeMetrics {
         }
     }
 
-    /// Multi-line report for logs and examples.
+    /// Multi-line report for logs and examples. Latency, queueing,
+    /// batch-size and candidate lines carry full p50/p95/p99 quantiles
+    /// from the underlying histograms; the discard line adds the same
+    /// quantile view next to the mean the speed-up is derived from.
     pub fn report(&self) -> String {
         let acc = self.accepted.load(Ordering::Relaxed);
         let rej = self.rejected.load(Ordering::Relaxed);
         let done = self.completed.load(Ordering::Relaxed);
         let batches = self.batches.load(Ordering::Relaxed).max(1);
+        let (d50, d95, d99) = self.discard_bp.percentiles();
+        let bp = |x: u64| x as f64 / 100.0; // basis points → percent
         format!(
             "requests: accepted {acc}, rejected {rej}, completed {done}\n\
              batches:  {batches} (size {})\n\
              latency:  {}\n\
              queueing: {}\n\
-             pruning:  {} candidates; mean discard {:.1}% → {:.2}x speed-up",
+             pruning:  {} candidates\n\
+             discard:  p50 {:.1}% p95 {:.1}% p99 {:.1}%; mean {:.1}% → \
+             {:.2}x speed-up",
             self.batch_size.summary_with_unit(""),
             self.latency_us.summary(),
             self.queue_wait_us.summary(),
             self.candidates.summary_with_unit(""),
+            bp(d50),
+            bp(d95),
+            bp(d99),
             self.mean_discard() * 100.0,
             self.implied_speedup(),
         )
@@ -94,5 +104,27 @@ mod tests {
         let r = m.report();
         assert!(r.contains("accepted 5"));
         assert!(r.contains("rejected 1"));
+    }
+
+    #[test]
+    fn report_surfaces_quantiles() {
+        let m = ServeMetrics::new();
+        // a skewed discard distribution: p50 ≈ 90%, tail down at 50%
+        for _ in 0..90 {
+            m.discard_bp.record(9_000);
+        }
+        for _ in 0..10 {
+            m.discard_bp.record(5_000);
+        }
+        m.latency_us.record(120);
+        let r = m.report();
+        assert!(r.contains("discard:"), "{r}");
+        assert!(r.contains("p50") && r.contains("p95") && r.contains("p99"), "{r}");
+        // latency line carries the p95 quantile too (log-bucketed ≤ ~6%
+        // relative error, so only presence is asserted)
+        assert!(r.matches("p95").count() >= 2, "{r}");
+        let (d50, d95, d99) = m.discard_bp.percentiles();
+        assert!(d50 <= d95 && d95 <= d99, "quantiles must be monotone");
+        assert!(d50 > 8_000, "p50 sits in the 90% mass, got {d50}");
     }
 }

@@ -82,6 +82,8 @@ impl Coordinator {
             .threshold(cfg.threshold)
             .backend(cfg.backend)
             .mutation(cfg.mutation)
+            .quant(cfg.quant)
+            .postings(cfg.postings)
     }
 
     /// Build the factor store, spawn shard workers and the dispatcher.
@@ -127,7 +129,9 @@ impl Coordinator {
         let mask = explicit::SCHEMA
             | explicit::THRESHOLD
             | explicit::BACKEND
-            | explicit::MUTATION;
+            | explicit::MUTATION
+            | explicit::QUANT
+            | explicit::POSTINGS;
         let conflicts =
             Self::spec_of(&cfg).conflicts_with(&snap_spec, mask, "config");
         if !conflicts.is_empty() {

@@ -38,6 +38,8 @@ pub struct WorkerScratch {
     union: Vec<u32>,
     cand: Vec<Vec<u32>>,
     pos_of: Vec<u32>,
+    /// Quantized query codes (engines with `quant = int8`).
+    qbuf: Vec<i8>,
 }
 
 impl WorkerScratch {
@@ -49,6 +51,7 @@ impl WorkerScratch {
             union: Vec::new(),
             cand: Vec::new(),
             pos_of: vec![u32::MAX; max_items],
+            qbuf: Vec::new(),
         }
     }
 }
@@ -81,20 +84,26 @@ pub fn process_batch(
     }
     let candidates: Vec<usize> = scratch.cand[..b].iter().map(Vec::len).collect();
 
-    // CPU-style backends: per-request dots over each request's own
-    // candidates. With diverse users the candidate union saturates the
+    // CPU-style backends: per-request rescoring over each request's own
+    // candidates through the engine's rescore tier — exact f32 dots, or
+    // the int8 fixed-point scan + exact refinement when the engine is
+    // quantized. With diverse users the candidate union saturates the
     // catalogue (1 - (1-s)^B → 1), so the union GEMM degenerates to
-    // brute force; direct dots do exactly Σ c_i · k flops instead.
+    // brute force; direct rescoring does exactly Σ c_i · k work instead.
     if !scorer.prefers_union_batching() {
         let mut per_request = Vec::with_capacity(b);
         for r in 0..b {
             let user = users.row(r);
-            let mut heap = TopK::new(kappa);
-            for &c in &scratch.cand[r] {
-                let f = shard.engine.factor(c).expect("candidate ids are live");
-                heap.push(shard.base_id + c, crate::linalg::ops::dot(user, f));
+            let mut top = shard.engine.rescore_into(
+                user,
+                &scratch.cand[r],
+                kappa,
+                &mut scratch.qbuf,
+            );
+            for s in &mut top {
+                s.id += shard.base_id;
             }
-            per_request.push(heap.into_sorted());
+            per_request.push(top);
         }
         return Ok(ShardPartial { per_request, candidates });
     }

@@ -18,7 +18,7 @@
 //! removal leaves a hole in the id space instead of shifting later ids.
 
 use super::{CandidateSource, MutableCatalogue, SourceScratch, SourceStats};
-use crate::configx::MutationConfig;
+use crate::configx::{MutationConfig, PostingsMode};
 use crate::embedding::Mapper;
 use crate::error::{GeomapError, Result};
 use crate::index::{InvertedIndex, QueryScratch};
@@ -30,17 +30,57 @@ use std::sync::Arc;
 ///
 /// Fields are crate-visible so the `snapshot` codec can serialise and
 /// reassemble the exact state without re-mapping.
+///
+/// When the segment is an *identity* base (`ids[r] == r` for every row,
+/// no holes — true for every fresh build and for merges that left no
+/// gaps), the two id maps are not materialised at all: `ids` and
+/// `row_of` stay empty and [`id_of`](BaseSegment::id_of) /
+/// [`row_of_id`](BaseSegment::row_of_id) synthesise the mapping. That
+/// saves 8 bytes per item on the dominant no-mutation case, which the
+/// compressed serving tier counts against its memory budget.
 pub(crate) struct BaseSegment {
     pub(crate) index: InvertedIndex,
     /// Dense factors, row order (row `r` holds item `ids[r]`).
     pub(crate) items: Matrix,
-    /// Row → global id (strictly increasing).
+    /// Row → global id (strictly increasing). Empty when `identity`.
     pub(crate) ids: Vec<u32>,
-    /// Global id → row, `u32::MAX` for ids with no base row.
+    /// Global id → row, `u32::MAX` for ids with no base row. Empty when
+    /// `identity`.
     pub(crate) row_of: Vec<u32>,
     /// True when `ids[r] == r` for every row (no holes): enables the
-    /// dense-factor fast path.
+    /// dense-factor fast path and the implicit id maps.
     pub(crate) identity: bool,
+}
+
+impl BaseSegment {
+    /// Base rows (= indexed items).
+    pub(crate) fn rows(&self) -> usize {
+        self.items.rows()
+    }
+
+    /// Global id of base row `row`.
+    #[inline]
+    pub(crate) fn id_of(&self, row: u32) -> u32 {
+        if self.identity {
+            row
+        } else {
+            self.ids[row as usize]
+        }
+    }
+
+    /// Base row of global id `id`, `u32::MAX` when it has none.
+    #[inline]
+    pub(crate) fn row_of_id(&self, id: u32) -> u32 {
+        if self.identity {
+            if (id as usize) < self.rows() {
+                id
+            } else {
+                u32::MAX
+            }
+        } else {
+            self.row_of.get(id as usize).copied().unwrap_or(u32::MAX)
+        }
+    }
 }
 
 /// Growable segment of recent upserts.
@@ -102,25 +142,33 @@ pub struct GeomapEngine {
     pub(crate) addr: usize,
     pub(crate) min_overlap: usize,
     pub(crate) mutation: MutationConfig,
+    /// Posting-arena representation the base index (re)builds with.
+    pub(crate) postings: PostingsMode,
 }
 
 impl GeomapEngine {
     /// Map `items` with `mapper`, build the base index, take ownership.
-    /// Row `r` of `items` becomes item id `r`.
+    /// Row `r` of `items` becomes item id `r`. `postings` selects the
+    /// base posting arena (raw CSR or bit-packed) — candidates are
+    /// identical either way.
     pub fn build(
         mapper: Mapper,
         items: Matrix,
         min_overlap: usize,
         mutation: MutationConfig,
+        postings: PostingsMode,
     ) -> Result<GeomapEngine> {
         let n = items.rows();
         let k = mapper.k();
-        let index = InvertedIndex::build(&mapper, &items)?;
+        let mut index = InvertedIndex::build(&mapper, &items)?;
+        if postings == PostingsMode::Packed {
+            index = index.into_packed();
+        }
         let base = Arc::new(BaseSegment {
             index,
             items,
-            ids: (0..n as u32).collect(),
-            row_of: (0..n as u32).collect(),
+            ids: Vec::new(),    // implicit: identity base
+            row_of: Vec::new(), // implicit: identity base
             identity: true,
         });
         Ok(GeomapEngine {
@@ -133,6 +181,7 @@ impl GeomapEngine {
             addr: n,
             min_overlap: min_overlap.max(1),
             mutation,
+            postings,
         })
     }
 
@@ -152,12 +201,11 @@ impl GeomapEngine {
             self.delta.alive[dr as usize] = false;
             return true;
         }
-        if let Some(&row) = self.base.row_of.get(id as usize) {
-            if row != u32::MAX && !self.base_dead[row as usize] {
-                self.base_dead[row as usize] = true;
-                self.dead_rows += 1;
-                return true;
-            }
+        let row = self.base.row_of_id(id);
+        if row != u32::MAX && !self.base_dead[row as usize] {
+            self.base_dead[row as usize] = true;
+            self.dead_rows += 1;
+            return true;
         }
         false
     }
@@ -228,9 +276,9 @@ impl MutableCatalogue for GeomapEngine {
         let k = self.mapper.k();
         // live (id, factor) pairs in id order — ids stay stable
         let mut rows: Vec<(u32, &[f32])> = Vec::with_capacity(self.live);
-        for (r, &id) in self.base.ids.iter().enumerate() {
+        for r in 0..self.base.rows() {
             if !self.base_dead[r] {
-                rows.push((id, self.base.items.row(r)));
+                rows.push((self.base.id_of(r as u32), self.base.items.row(r)));
             }
         }
         for (dr, &id) in self.delta.ids.iter().enumerate() {
@@ -246,14 +294,22 @@ impl MutableCatalogue for GeomapEngine {
             ids.push(id);
         }
         drop(rows);
-        let mut row_of = vec![u32::MAX; self.addr];
-        for (r, &id) in ids.iter().enumerate() {
-            row_of[id as usize] = r as u32;
-        }
         // sorted unique ids < addr fill the space exactly iff no holes
         let identity = ids.len() == self.addr;
-        let index = InvertedIndex::build(&self.mapper, &items)?;
-        let n = ids.len();
+        let (ids, row_of) = if identity {
+            (Vec::new(), Vec::new()) // implicit maps
+        } else {
+            let mut row_of = vec![u32::MAX; self.addr];
+            for (r, &id) in ids.iter().enumerate() {
+                row_of[id as usize] = r as u32;
+            }
+            (ids, row_of)
+        };
+        let mut index = InvertedIndex::build(&self.mapper, &items)?;
+        if self.postings == PostingsMode::Packed {
+            index = index.into_packed();
+        }
+        let n = items.rows();
         self.base = Arc::new(BaseSegment { index, items, ids, row_of, identity });
         self.base_dead = vec![false; n];
         self.dead_rows = 0;
@@ -305,9 +361,9 @@ impl CandidateSource for GeomapEngine {
             .query_into_unordered(&phi, self.min_overlap, &mut s.query, out);
         let mut w = 0;
         for i in 0..out.len() {
-            let row = out[i] as usize;
-            if !self.base_dead[row] {
-                out[w] = self.base.ids[row];
+            let row = out[i];
+            if !self.base_dead[row as usize] {
+                out[w] = self.base.id_of(row);
                 w += 1;
             }
         }
@@ -346,7 +402,7 @@ impl CandidateSource for GeomapEngine {
         if let Some(&dr) = self.delta.row_of.get(&id) {
             return Some(self.delta.row(dr));
         }
-        let row = *self.base.row_of.get(id as usize)?;
+        let row = self.base.row_of_id(id);
         if row == u32::MAX || self.base_dead[row as usize] {
             return None;
         }
@@ -364,15 +420,18 @@ impl CandidateSource for GeomapEngine {
 
     fn memory_bytes(&self) -> usize {
         let b = &self.base;
-        b.items.rows() * b.items.cols() * 4
-            + b.index.total_postings() * 4
-            + (b.index.dim() + 1) * 4
+        self.factor_bytes()
+            + b.index.memory_bytes()
             + b.ids.len() * 4
             + b.row_of.len() * 4
             + self.base_dead.len()
-            + self.delta.factors.len() * 4
             + self.delta.nnz * 4
             + self.delta.ids.len() * 9
+    }
+
+    fn factor_bytes(&self) -> usize {
+        self.base.items.rows() * self.base.items.cols() * 4
+            + self.delta.factors.len() * 4
     }
 
     fn stats(&self) -> SourceStats {
@@ -383,6 +442,8 @@ impl CandidateSource for GeomapEngine {
             pending: self.delta.ids.len(),
             tombstones: self.dead_rows,
             memory_bytes: self.memory_bytes(),
+            factor_bytes: self.factor_bytes(),
+            refine_bytes: 0,
         }
     }
 
@@ -426,6 +487,7 @@ mod tests {
             items(n, k, seed),
             1,
             MutationConfig { max_delta },
+            PostingsMode::Raw,
         )
         .unwrap()
     }
@@ -444,6 +506,7 @@ mod tests {
             its.clone(),
             1,
             MutationConfig::default(),
+            PostingsMode::Raw,
         )
         .unwrap();
         let r = Retriever::build(mapper(k), its).unwrap();
@@ -560,6 +623,48 @@ mod tests {
         // state unchanged by the failures
         assert_eq!(e.len(), 10);
         assert_eq!(e.pending(), 0);
+    }
+
+    #[test]
+    fn packed_base_tracks_raw_twin_through_mutation_and_merge() {
+        let k = 8;
+        let its = items(60, k, 21);
+        let build = |postings| {
+            GeomapEngine::build(
+                mapper(k),
+                its.clone(),
+                1,
+                MutationConfig { max_delta: 0 },
+                postings,
+            )
+            .unwrap()
+        };
+        let mut raw = build(PostingsMode::Raw);
+        let mut packed = build(PostingsMode::Packed);
+        assert!(packed.index().is_packed());
+        assert!(!raw.index().is_packed());
+        let check = |raw: &GeomapEngine, packed: &GeomapEngine, tag: &str| {
+            let mut s1 = SourceScratch::new();
+            let mut s2 = SourceScratch::new();
+            let (mut a, mut b) = (Vec::new(), Vec::new());
+            for seed in 0..10u64 {
+                let u = user(k, 500 + seed);
+                raw.candidates_into(&u, &mut s1, &mut a).unwrap();
+                packed.candidates_into(&u, &mut s2, &mut b).unwrap();
+                assert_eq!(a, b, "{tag}: candidates diverge");
+            }
+        };
+        check(&raw, &packed, "fresh");
+        for e in [&mut raw, &mut packed] {
+            e.upsert(12, &user(k, 600)).unwrap();
+            e.upsert(60, &user(k, 601)).unwrap();
+            e.remove(3).unwrap();
+        }
+        check(&raw, &packed, "pending mutations");
+        MutableCatalogue::merge(&mut raw).unwrap();
+        MutableCatalogue::merge(&mut packed).unwrap();
+        assert!(packed.index().is_packed(), "merge must stay packed");
+        check(&raw, &packed, "post-merge");
     }
 
     #[test]

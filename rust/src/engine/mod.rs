@@ -42,10 +42,13 @@ pub use self::geomap::GeomapEngine;
 pub(crate) use self::geomap::{BaseSegment, DeltaSegment};
 pub use self::sources::FilterSource;
 
-use crate::configx::{Backend, MutationConfig, SchemaConfig};
+use crate::configx::{
+    Backend, MutationConfig, PostingsMode, QuantMode, SchemaConfig,
+};
 use crate::error::{GeomapError, Result};
 use crate::linalg::ops::dot;
 use crate::linalg::Matrix;
+use crate::quant::{quantize_into, QuantizedFactorStore};
 use crate::retrieval::{Scored, TopK};
 use std::any::Any;
 
@@ -96,8 +99,17 @@ pub struct SourceStats {
     pub pending: usize,
     /// Tombstoned base entries awaiting a merge.
     pub tombstones: usize,
-    /// Approximate resident bytes (index structures + owned factors).
+    /// Resident bytes of the structures a query scans: the posting
+    /// arena (raw or packed), id maps, and the rescoring factors — f32
+    /// when quantization is off, int8 codes + scales when on.
     pub memory_bytes: usize,
+    /// f32 factor bytes counted inside `memory_bytes` (the rescoring
+    /// tier when quantization is off).
+    pub factor_bytes: usize,
+    /// f32 factors kept *off* the scan path for the exact refinement
+    /// re-rank (non-zero only with quantization on; these bytes are not
+    /// in `memory_bytes` — see `docs/QUANT.md` on the tier split).
+    pub refine_bytes: usize,
 }
 
 /// A pruning method that maps a user factor to the candidate item ids
@@ -156,6 +168,12 @@ pub trait CandidateSource: Send + Sync {
     /// Approximate resident bytes.
     fn memory_bytes(&self) -> usize;
 
+    /// f32 factor bytes included in [`memory_bytes`](Self::memory_bytes)
+    /// (0 for sources that keep no resident factor copy).
+    fn factor_bytes(&self) -> usize {
+        0
+    }
+
     /// Stats for reports.
     fn stats(&self) -> SourceStats {
         SourceStats {
@@ -165,6 +183,8 @@ pub trait CandidateSource: Send + Sync {
             pending: 0,
             tombstones: 0,
             memory_bytes: self.memory_bytes(),
+            factor_bytes: self.factor_bytes(),
+            refine_bytes: 0,
         }
     }
 
@@ -227,6 +247,8 @@ pub(crate) mod explicit {
     pub const MIN_OVERLAP: u8 = 1 << 3;
     pub const SEED: u8 = 1 << 4;
     pub const MUTATION: u8 = 1 << 5;
+    pub const QUANT: u8 = 1 << 6;
+    pub const POSTINGS: u8 = 1 << 7;
 }
 
 /// Builder-style construction of an [`Engine`]; see [`Engine::builder`].
@@ -238,6 +260,8 @@ pub struct EngineBuilder {
     pub(crate) min_overlap: usize,
     pub(crate) seed: u64,
     pub(crate) mutation: MutationConfig,
+    pub(crate) quant: QuantMode,
+    pub(crate) postings: PostingsMode,
     /// Bitmask of fields the caller set explicitly (see [`explicit`]).
     pub(crate) explicit: u8,
 }
@@ -251,6 +275,8 @@ impl Default for EngineBuilder {
             min_overlap: 1,
             seed: 0xE0A1,
             mutation: MutationConfig::default(),
+            quant: QuantMode::Off,
+            postings: PostingsMode::Raw,
             explicit: 0,
         }
     }
@@ -296,6 +322,20 @@ impl EngineBuilder {
     pub fn mutation(mut self, mutation: MutationConfig) -> Self {
         self.mutation = mutation;
         self.explicit |= explicit::MUTATION;
+        self
+    }
+
+    /// Item-factor quantization of the rescoring tier (`docs/QUANT.md`).
+    pub fn quant(mut self, quant: QuantMode) -> Self {
+        self.quant = quant;
+        self.explicit |= explicit::QUANT;
+        self
+    }
+
+    /// Posting-list storage of the inverted index (geomap backend).
+    pub fn postings(mut self, postings: PostingsMode) -> Self {
+        self.postings = postings;
+        self.explicit |= explicit::POSTINGS;
         self
     }
 
@@ -358,6 +398,20 @@ impl EngineBuilder {
                 self.mutation.max_delta, other.mutation.max_delta
             ));
         }
+        if mask & explicit::QUANT != 0 && self.quant != other.quant {
+            out.push(format!(
+                "quant ({ours} {}, snapshot {})",
+                self.quant.spec(),
+                other.quant.spec()
+            ));
+        }
+        if mask & explicit::POSTINGS != 0 && self.postings != other.postings {
+            out.push(format!(
+                "postings ({ours} {}, snapshot {})",
+                self.postings.spec(),
+                other.postings.spec()
+            ));
+        }
         out
     }
 
@@ -397,6 +451,14 @@ impl EngineBuilder {
         use crate::embedding::Mapper;
         use crate::rng::Rng;
 
+        if self.postings == PostingsMode::Packed
+            && !matches!(self.backend, Backend::Geomap)
+        {
+            return Err(GeomapError::Config(format!(
+                "postings=packed requires the geomap backend (got '{}')",
+                self.backend.name()
+            )));
+        }
         let k = items.cols();
         let source: Box<dyn CandidateSource> = match self.backend {
             Backend::Geomap => Box::new(GeomapEngine::build(
@@ -404,6 +466,7 @@ impl EngineBuilder {
                 items,
                 self.min_overlap,
                 self.mutation,
+                self.postings,
             )?),
             Backend::Srp { bits, tables } => {
                 let mut rng = Rng::seeded(self.seed);
@@ -439,15 +502,20 @@ impl EngineBuilder {
                 Box::new(FilterSource::new(Box::new(filter), items))
             }
         };
-        Ok(Engine { source, spec: self })
+        let quant = Engine::quantize_source(&self, source.as_ref());
+        Ok(Engine { source, spec: self, quant })
     }
 }
 
 /// The unified retrieval facade: prune through any [`CandidateSource`],
-/// rescore survivors exactly, return the top-κ.
+/// rescore survivors (exactly, or int8-quantized with an exact
+/// refinement re-rank — `QuantMode::Int8`), return the top-κ.
 pub struct Engine {
     source: Box<dyn CandidateSource>,
     spec: EngineBuilder,
+    /// Int8 rescoring tier mirroring the source's id space
+    /// (`Some` ⟺ `spec.quant` is on).
+    quant: Option<QuantizedFactorStore>,
 }
 
 impl Engine {
@@ -456,12 +524,33 @@ impl Engine {
         EngineBuilder::default()
     }
 
+    /// Quantize a source's live factors per the spec (`None` when off).
+    fn quantize_source(
+        spec: &EngineBuilder,
+        source: &dyn CandidateSource,
+    ) -> Option<QuantizedFactorStore> {
+        if !spec.quant.is_on() {
+            return None;
+        }
+        Some(QuantizedFactorStore::from_factors(
+            source.len(),
+            source.dim(),
+            |id| source.factor(id),
+        ))
+    }
+
     /// Reassemble an engine from a deserialised source (snapshot path).
+    /// `quant` must mirror the source's id space when the spec says
+    /// quantization is on; `None` requantizes from the source factors
+    /// (identical codes — quantization is deterministic).
     pub(crate) fn from_parts(
         spec: EngineBuilder,
         source: Box<dyn CandidateSource>,
+        quant: Option<QuantizedFactorStore>,
     ) -> Engine {
-        Engine { source, spec }
+        let quant =
+            quant.or_else(|| Self::quantize_source(&spec, source.as_ref()));
+        Engine { source, spec, quant }
     }
 
     /// The full build spec this engine was constructed with.
@@ -509,13 +598,31 @@ impl Engine {
     }
 
     /// Source statistics (live items, pending mutations, memory).
+    ///
+    /// With quantization on, `memory_bytes` counts the int8 codes +
+    /// scales *instead of* the f32 factors (the scan tier), and the f32
+    /// factors move to `refine_bytes` — the exact-refinement store that
+    /// only the top `refine · κ` candidates per query touch.
     pub fn stats(&self) -> SourceStats {
-        self.source.stats()
+        let mut s = self.source.stats();
+        if let Some(q) = &self.quant {
+            s.refine_bytes = s.factor_bytes;
+            s.memory_bytes =
+                s.memory_bytes - s.factor_bytes + q.memory_bytes();
+            s.factor_bytes = 0;
+        }
+        s
     }
 
-    /// Approximate resident bytes.
+    /// Resident bytes of the scan tier (see [`stats`](Self::stats)).
     pub fn memory_bytes(&self) -> usize {
-        self.source.memory_bytes()
+        self.stats().memory_bytes
+    }
+
+    /// The int8 rescoring tier, when quantization is on (snapshot codec
+    /// and diagnostics).
+    pub fn quant_store(&self) -> Option<&QuantizedFactorStore> {
+        self.quant.as_ref()
     }
 
     /// Candidate ids (sorted, unique, live) for a user factor.
@@ -571,7 +678,58 @@ impl Engine {
         tile
     }
 
-    /// Top-κ via prune + exact rescore, reusing caller buffers.
+    /// Rescore pruned candidates into a top-κ, reusing `qbuf` for the
+    /// quantized query codes (untouched when quantization is off).
+    ///
+    /// Exact path: one f32 dot per candidate. Quantized path: one
+    /// i8×i8→i32 dot per candidate selects the top `refine · κ` by
+    /// approximate score, then those survivors are re-ranked with exact
+    /// f32 dots — so every returned score is an exact inner product and
+    /// the only possible loss is a true top-κ item falling outside the
+    /// approximate top `refine · κ` (bounded in `docs/QUANT.md`).
+    pub fn rescore_into(
+        &self,
+        user: &[f32],
+        cand: &[u32],
+        kappa: usize,
+        qbuf: &mut Vec<i8>,
+    ) -> Vec<Scored> {
+        let survivors = match (self.spec.quant, &self.quant) {
+            (QuantMode::Int8 { refine }, Some(q)) => {
+                qbuf.resize(user.len(), 0);
+                let qscale = quantize_into(user, qbuf);
+                let mut approx = TopK::new(kappa.saturating_mul(refine));
+                for &id in cand {
+                    approx.push(id, q.score(id, qbuf, qscale));
+                }
+                // unsorted: the exact re-rank below imposes its own order
+                Some(approx.into_unsorted())
+            }
+            _ => None,
+        };
+        let mut heap = TopK::new(kappa);
+        match &survivors {
+            Some(survivors) => {
+                for s in survivors {
+                    let f = self.factor(s.id).expect("candidate ids are live");
+                    heap.push(s.id, dot(user, f));
+                }
+            }
+            None => {
+                for &id in cand {
+                    let f = self.factor(id).expect("candidate ids are live");
+                    heap.push(id, dot(user, f));
+                }
+            }
+        }
+        heap.into_sorted()
+    }
+
+    /// Top-κ via prune + rescore, reusing the caller's query scratch and
+    /// candidate buffer. On a quantized engine this allocates a k-byte
+    /// query-code buffer per call; hot loops that care (the serving
+    /// worker, `benches/quant_tier.rs`) call
+    /// [`rescore_into`](Self::rescore_into) directly with a reused one.
     pub fn top_k_with(
         &self,
         user: &[f32],
@@ -580,15 +738,11 @@ impl Engine {
         cand: &mut Vec<u32>,
     ) -> Result<Vec<Scored>> {
         self.candidates_into(user, scratch, cand)?;
-        let mut heap = TopK::new(kappa);
-        for &id in cand.iter() {
-            let f = self.factor(id).expect("candidate ids are live");
-            heap.push(id, dot(user, f));
-        }
-        Ok(heap.into_sorted())
+        let mut qbuf = Vec::new();
+        Ok(self.rescore_into(user, cand, kappa, &mut qbuf))
     }
 
-    /// Top-κ via prune + exact rescore (allocating convenience).
+    /// Top-κ via prune + rescore (allocating convenience).
     pub fn top_k(&self, user: &[f32], kappa: usize) -> Result<Vec<Scored>> {
         let mut scratch = SourceScratch::new();
         let mut cand = Vec::new();
@@ -617,13 +771,26 @@ impl Engine {
     }
 
     /// Insert or replace the item at `id` (see [`MutableCatalogue`]).
+    /// The quantized tier (when on) requantizes the one affected row.
     pub fn upsert(&mut self, id: u32, factor: &[f32]) -> Result<()> {
-        self.mutable()?.upsert(id, factor)
+        self.mutable()?.upsert(id, factor)?;
+        if let Some(q) = &mut self.quant {
+            q.ensure_len(self.source.len());
+            q.set_row(id, factor);
+        }
+        Ok(())
     }
 
-    /// Remove an item; returns whether it was live.
+    /// Remove an item; returns whether it was live. The quantized tier
+    /// (when on) zeroes the row so the id can never score again.
     pub fn remove(&mut self, id: u32) -> Result<bool> {
-        self.mutable()?.remove(id)
+        let was_live = self.mutable()?.remove(id)?;
+        if was_live {
+            if let Some(q) = &mut self.quant {
+                q.clear_row(id);
+            }
+        }
+        Ok(was_live)
     }
 
     /// Merge pending mutations into a fresh immutable base now.
@@ -634,7 +801,11 @@ impl Engine {
     /// Cheap structural clone for copy-on-write mutation; `None` when the
     /// backend does not support it.
     pub fn try_clone(&self) -> Option<Engine> {
-        Some(Engine { source: self.source.clone_box()?, spec: self.spec })
+        Some(Engine {
+            source: self.source.clone_box()?,
+            spec: self.spec,
+            quant: self.quant.clone(),
+        })
     }
 }
 
@@ -733,6 +904,134 @@ mod tests {
         assert_eq!(tile.row(0), its.row(3));
         assert_eq!(tile.row(1), its.row(7));
         assert_eq!(tile.row(2), its.row(11));
+    }
+
+    #[test]
+    fn packed_postings_require_geomap() {
+        let err = Engine::builder()
+            .backend(Backend::Brute)
+            .postings(PostingsMode::Packed)
+            .build(items(10, 4, 9))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("geomap"), "{err}");
+    }
+
+    #[test]
+    fn packed_engine_matches_raw_engine_exactly() {
+        let its = items(200, 8, 10);
+        let raw = Engine::builder()
+            .threshold(0.5)
+            .build(its.clone())
+            .unwrap();
+        let packed = Engine::builder()
+            .threshold(0.5)
+            .postings(PostingsMode::Packed)
+            .build(its)
+            .unwrap();
+        let mut rng = Rng::seeded(11);
+        for _ in 0..10 {
+            let user: Vec<f32> = (0..8).map(|_| rng.gaussian_f32()).collect();
+            assert_eq!(
+                packed.candidates(&user).unwrap(),
+                raw.candidates(&user).unwrap()
+            );
+            let (a, b) =
+                (packed.top_k(&user, 5).unwrap(), raw.top_k(&user, 5).unwrap());
+            assert_eq!(a.len(), b.len());
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!((x.id, x.score), (y.id, y.score));
+            }
+        }
+    }
+
+    #[test]
+    fn quantized_scores_are_exact_for_returned_ids() {
+        let its = items(300, 16, 12);
+        for backend in [Backend::Geomap, Backend::Brute] {
+            let engine = Engine::builder()
+                .backend(backend)
+                .threshold(0.5)
+                .quant(QuantMode::Int8 { refine: 4 })
+                .build(its.clone())
+                .unwrap();
+            let mut rng = Rng::seeded(13);
+            for _ in 0..8 {
+                let user: Vec<f32> =
+                    (0..16).map(|_| rng.gaussian_f32()).collect();
+                let top = engine.top_k(&user, 5).unwrap();
+                for s in &top {
+                    // refinement re-ranks in f32, so every returned
+                    // score is the exact inner product of its id
+                    let exact = dot(&user, engine.factor(s.id).unwrap());
+                    assert_eq!(s.score, exact, "{}", engine.label());
+                }
+                for w in top.windows(2) {
+                    assert!(w[0].score >= w[1].score);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quantized_mutation_keeps_tiers_in_sync() {
+        let mut engine = Engine::builder()
+            .threshold(0.0)
+            .quant(QuantMode::Int8 { refine: 4 })
+            .mutation(MutationConfig { max_delta: 0 })
+            .build(items(60, 8, 14))
+            .unwrap();
+        // a removed id never comes back, quantized or not
+        assert!(engine.remove(9).unwrap());
+        let mut rng = Rng::seeded(15);
+        let user: Vec<f32> = (0..8).map(|_| rng.gaussian_f32()).collect();
+        let top = engine.top_k(&user, 60).unwrap();
+        assert!(top.iter().all(|s| s.id != 9), "removed id scored");
+        // an upsert rescored with the *new* factor through the
+        // quantized tier: exact score must match the new f32 row
+        let f: Vec<f32> = (0..8).map(|_| rng.gaussian_f32()).collect();
+        engine.upsert(60, &f).unwrap();
+        let top = engine.top_k(&user, 61).unwrap();
+        if let Some(s) = top.iter().find(|s| s.id == 60) {
+            assert_eq!(s.score, dot(&user, &f));
+        }
+        // clone carries the quantized tier along
+        let clone = engine.try_clone().unwrap();
+        assert!(clone.quant_store().is_some());
+        assert_eq!(clone.stats().refine_bytes, engine.stats().refine_bytes);
+    }
+
+    #[test]
+    fn quantized_stats_split_scan_and_refine_tiers() {
+        // one-hot schema: p = 3k, so posting lists are long and dense —
+        // the regime block bit-packing is built for (the parse-tree
+        // schema spreads postings over O(k²) near-singleton dims, where
+        // block metadata cancels the packing win; see docs/QUANT.md)
+        let its = items(256, 32, 16);
+        let f32_engine = Engine::builder()
+            .schema(SchemaConfig::TernaryOneHot)
+            .threshold(0.5)
+            .build(its.clone())
+            .unwrap();
+        let q_engine = Engine::builder()
+            .schema(SchemaConfig::TernaryOneHot)
+            .threshold(0.5)
+            .quant(QuantMode::Int8 { refine: 4 })
+            .postings(PostingsMode::Packed)
+            .build(its)
+            .unwrap();
+        let (fs, qs) = (f32_engine.stats(), q_engine.stats());
+        assert_eq!(fs.refine_bytes, 0);
+        assert!(fs.factor_bytes >= 256 * 32 * 4);
+        assert_eq!(qs.refine_bytes, fs.factor_bytes, "f32 moved to refine");
+        assert_eq!(qs.factor_bytes, 0);
+        // int8 codes + scales replace 4-byte floats on the scan tier
+        assert!(
+            qs.memory_bytes * 3 <= fs.memory_bytes,
+            "quantized scan tier {} not ≥3x smaller than {}",
+            qs.memory_bytes,
+            fs.memory_bytes
+        );
     }
 
     #[test]

@@ -69,7 +69,11 @@ impl CandidateSource for FilterSource {
     }
 
     fn memory_bytes(&self) -> usize {
-        self.items.rows() * self.items.cols() * 4 + self.filter.memory_bytes()
+        self.factor_bytes() + self.filter.memory_bytes()
+    }
+
+    fn factor_bytes(&self) -> usize {
+        self.items.rows() * self.items.cols() * 4
     }
 }
 
@@ -123,10 +127,11 @@ impl CandidateSource for Retriever {
     }
 
     fn memory_bytes(&self) -> usize {
-        let idx = self.index();
+        self.factor_bytes() + self.index().memory_bytes()
+    }
+
+    fn factor_bytes(&self) -> usize {
         self.item_factors().rows() * self.item_factors().cols() * 4
-            + idx.total_postings() * 4
-            + (idx.dim() + 1) * 4
     }
 }
 

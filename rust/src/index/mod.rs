@@ -9,28 +9,43 @@
 //! layout) built in a single pass; the per-query scratch counter is reused
 //! across calls through [`QueryScratch`] so the hot path allocates nothing
 //! after warm-up.
+//!
+//! Two arena representations exist behind the same query API: the raw
+//! u32 CSR arenas, and the compressed
+//! [`PackedPostings`](crate::quant::PackedPostings) arena (delta-encoded
+//! block bit-packing, decoded block-at-a-time into the scratch) selected
+//! by `configx::PostingsMode::Packed`. Candidates are identical between
+//! the two — packing changes bytes, not results.
 
 use crate::embedding::Mapper;
 use crate::error::Result;
 use crate::linalg::Matrix;
+use crate::quant::{PackedPostings, BLOCK};
 use crate::sparse::{SparseMatrix, SparseVec};
+
+/// The posting storage behind an index (see module docs).
+enum Arena {
+    /// Raw u32 CSR: offsets (len p + 1) + item ids grouped by dimension.
+    Raw { offsets: Vec<u32>, postings: Vec<u32> },
+    /// Delta-encoded block bit-packed arena.
+    Packed(PackedPostings),
+}
 
 /// Immutable inverted index over a set of item embeddings.
 pub struct InvertedIndex {
-    /// posting arena offsets per dimension (len = p + 1)
-    offsets: Vec<u32>,
-    /// item ids, grouped by dimension
-    postings: Vec<u32>,
+    arena: Arena,
     /// number of indexed items
     items: usize,
     /// ambient embedding dimension p
     p: usize,
 }
 
-/// Reusable per-query scratch: overlap counters + touched-list.
+/// Reusable per-query scratch: overlap counters + touched-list (+ a
+/// block-decode buffer for packed arenas).
 pub struct QueryScratch {
     counts: Vec<u16>,
     touched: Vec<u32>,
+    block: Vec<u32>,
 }
 
 impl QueryScratch {
@@ -41,7 +56,11 @@ impl QueryScratch {
     /// hot-swapped to a larger item set (the counters are zeroed via the
     /// touched-list, so grown tails start clean).
     pub fn new(items: usize) -> Self {
-        QueryScratch { counts: vec![0; items], touched: Vec::with_capacity(1024) }
+        QueryScratch {
+            counts: vec![0; items],
+            touched: Vec::with_capacity(1024),
+            block: Vec::with_capacity(BLOCK),
+        }
     }
 
     /// Grow the counter table to cover `items` ids (no-op when large
@@ -82,7 +101,7 @@ impl InvertedIndex {
                 *c += 1;
             }
         }
-        InvertedIndex { offsets, postings, items: n, p }
+        InvertedIndex { arena: Arena::Raw { offsets, postings }, items: n, p }
     }
 
     /// Convenience: map item factors with `mapper` then build.
@@ -130,7 +149,49 @@ impl InvertedIndex {
                 "index posting references an item >= {items}"
             )));
         }
-        Ok(InvertedIndex { offsets, postings, items, p })
+        Ok(InvertedIndex { arena: Arena::Raw { offsets, postings }, items, p })
+    }
+
+    /// Reassemble an index around a validated packed arena (the snapshot
+    /// warm-start path for `postings = packed`); `items` and `p` come
+    /// from the arena itself, which
+    /// [`PackedPostings::from_parts`] fully verified.
+    pub fn from_packed(packed: PackedPostings) -> Self {
+        let (items, p) = (packed.items(), packed.dims());
+        InvertedIndex { arena: Arena::Packed(packed), items, p }
+    }
+
+    /// Convert the raw CSR arena into the packed representation (no-op
+    /// when already packed). Candidates are identical afterwards; only
+    /// the resident bytes change.
+    pub fn into_packed(self) -> Self {
+        let InvertedIndex { arena, items, p } = self;
+        match arena {
+            Arena::Raw { offsets, postings } => {
+                let packed = PackedPostings::pack(p, items, |d| {
+                    let (lo, hi) =
+                        (offsets[d] as usize, offsets[d + 1] as usize);
+                    &postings[lo..hi]
+                });
+                InvertedIndex { arena: Arena::Packed(packed), items, p }
+            }
+            packed @ Arena::Packed(_) => {
+                InvertedIndex { arena: packed, items, p }
+            }
+        }
+    }
+
+    /// True when the posting arena is bit-packed.
+    pub fn is_packed(&self) -> bool {
+        matches!(self.arena, Arena::Packed(_))
+    }
+
+    /// The packed arena, when this index uses one.
+    pub fn packed(&self) -> Option<&PackedPostings> {
+        match &self.arena {
+            Arena::Packed(pk) => Some(pk),
+            Arena::Raw { .. } => None,
+        }
     }
 
     /// Number of indexed items.
@@ -145,25 +206,70 @@ impl InvertedIndex {
 
     /// The raw CSR offset arena (len = p + 1); with
     /// [`postings_arena`](Self::postings_arena) this is the exact state
-    /// [`from_raw_parts`](Self::from_raw_parts) consumes.
-    pub fn offsets_arena(&self) -> &[u32] {
-        &self.offsets
+    /// [`from_raw_parts`](Self::from_raw_parts) consumes. `None` when
+    /// the arena is packed (see [`packed`](Self::packed)).
+    pub fn offsets_arena(&self) -> Option<&[u32]> {
+        match &self.arena {
+            Arena::Raw { offsets, .. } => Some(offsets),
+            Arena::Packed(_) => None,
+        }
     }
 
-    /// The raw postings arena (item ids grouped by dimension).
-    pub fn postings_arena(&self) -> &[u32] {
-        &self.postings
+    /// The raw postings arena (item ids grouped by dimension); `None`
+    /// when the arena is packed.
+    pub fn postings_arena(&self) -> Option<&[u32]> {
+        match &self.arena {
+            Arena::Raw { postings, .. } => Some(postings),
+            Arena::Packed(_) => None,
+        }
     }
 
-    /// Posting list for dimension `i`.
+    /// Posting list for dimension `i` as a borrowed slice.
+    ///
+    /// Raw arenas only — a packed arena has no contiguous per-dimension
+    /// slice to borrow; use [`posting_to`](Self::posting_to) there.
+    ///
+    /// # Panics
+    /// Panics when the arena is packed.
     pub fn posting(&self, i: usize) -> &[u32] {
-        let (lo, hi) = (self.offsets[i] as usize, self.offsets[i + 1] as usize);
-        &self.postings[lo..hi]
+        match &self.arena {
+            Arena::Raw { offsets, postings } => {
+                let (lo, hi) = (offsets[i] as usize, offsets[i + 1] as usize);
+                &postings[lo..hi]
+            }
+            Arena::Packed(_) => {
+                panic!("posting(): packed arena has no borrowable slice; \
+                        use posting_to()")
+            }
+        }
+    }
+
+    /// Decode the posting list of dimension `i` into `out` (cleared
+    /// first). Works for both arena representations.
+    pub fn posting_to(&self, i: usize, out: &mut Vec<u32>) {
+        out.clear();
+        match &self.arena {
+            Arena::Raw { .. } => out.extend_from_slice(self.posting(i)),
+            Arena::Packed(pk) => pk.decode_dim(i, out),
+        }
     }
 
     /// Total postings stored.
     pub fn total_postings(&self) -> usize {
-        self.postings.len()
+        match &self.arena {
+            Arena::Raw { postings, .. } => postings.len(),
+            Arena::Packed(pk) => pk.total(),
+        }
+    }
+
+    /// Resident bytes of the posting arena (offsets included).
+    pub fn memory_bytes(&self) -> usize {
+        match &self.arena {
+            Arena::Raw { offsets, postings } => {
+                (offsets.len() + postings.len()) * 4
+            }
+            Arena::Packed(pk) => pk.memory_bytes(),
+        }
     }
 
     /// Candidate items whose sparsity pattern intersects the query support
@@ -198,13 +304,33 @@ impl InvertedIndex {
         out.clear();
         scratch.touched.clear();
         let min = min_overlap.max(1) as u16;
-        for &dim in query.indices() {
-            for &item in self.posting(dim as usize) {
-                let c = &mut scratch.counts[item as usize];
-                if *c == 0 {
-                    scratch.touched.push(item);
+        match &self.arena {
+            Arena::Raw { offsets, postings } => {
+                for &dim in query.indices() {
+                    let d = dim as usize;
+                    let (lo, hi) = (offsets[d] as usize, offsets[d + 1] as usize);
+                    for &item in &postings[lo..hi] {
+                        let c = &mut scratch.counts[item as usize];
+                        if *c == 0 {
+                            scratch.touched.push(item);
+                        }
+                        *c += 1;
+                    }
                 }
-                *c += 1;
+            }
+            Arena::Packed(pk) => {
+                for &dim in query.indices() {
+                    for b in pk.dim_blocks(dim as usize) {
+                        pk.decode_block(b, &mut scratch.block);
+                        for &item in &scratch.block {
+                            let c = &mut scratch.counts[item as usize];
+                            if *c == 0 {
+                                scratch.touched.push(item);
+                            }
+                            *c += 1;
+                        }
+                    }
+                }
             }
         }
         for &item in &scratch.touched {
@@ -223,16 +349,29 @@ impl InvertedIndex {
         out
     }
 
+    /// Posting count of dimension `i` (no decode for either arena).
+    fn posting_len(&self, i: usize) -> usize {
+        match &self.arena {
+            Arena::Raw { offsets, .. } => {
+                (offsets[i + 1] - offsets[i]) as usize
+            }
+            Arena::Packed(pk) => pk.dim_len(i),
+        }
+    }
+
     /// Index statistics for reports.
     pub fn stats(&self) -> IndexStats {
-        let nonempty = (0..self.p).filter(|&i| !self.posting(i).is_empty()).count();
-        let max_len = (0..self.p).map(|i| self.posting(i).len()).max().unwrap_or(0);
+        let nonempty =
+            (0..self.p).filter(|&i| self.posting_len(i) > 0).count();
+        let max_len =
+            (0..self.p).map(|i| self.posting_len(i)).max().unwrap_or(0);
         IndexStats {
             items: self.items,
             dims: self.p,
             nonempty_dims: nonempty,
-            total_postings: self.postings.len(),
+            total_postings: self.total_postings(),
             max_posting_len: max_len,
+            memory_bytes: self.memory_bytes(),
         }
     }
 }
@@ -250,6 +389,8 @@ pub struct IndexStats {
     pub total_postings: usize,
     /// Longest posting list.
     pub max_posting_len: usize,
+    /// Resident bytes of the posting arena (raw CSR or packed).
+    pub memory_bytes: usize,
 }
 
 #[cfg(test)]
@@ -388,8 +529,8 @@ mod tests {
     fn raw_parts_roundtrip_and_validation() {
         let idx = InvertedIndex::from_embeddings(&toy_embeddings());
         let back = InvertedIndex::from_raw_parts(
-            idx.offsets_arena().to_vec(),
-            idx.postings_arena().to_vec(),
+            idx.offsets_arena().unwrap().to_vec(),
+            idx.postings_arena().unwrap().to_vec(),
             idx.items(),
             idx.dim(),
         )
@@ -402,24 +543,81 @@ mod tests {
             InvertedIndex::from_raw_parts(vec![0; 9], vec![0], 3, 8).is_err(),
             "offsets must end at postings.len()"
         );
-        let mut offs = idx.offsets_arena().to_vec();
+        let mut offs = idx.offsets_arena().unwrap().to_vec();
         offs[2] = offs[3] + 1; // non-monotone
         assert!(InvertedIndex::from_raw_parts(
             offs,
-            idx.postings_arena().to_vec(),
+            idx.postings_arena().unwrap().to_vec(),
             idx.items(),
             idx.dim()
         )
         .is_err());
         assert!(
             InvertedIndex::from_raw_parts(
-                idx.offsets_arena().to_vec(),
-                idx.postings_arena().to_vec(),
+                idx.offsets_arena().unwrap().to_vec(),
+                idx.postings_arena().unwrap().to_vec(),
                 1, // postings reference ids >= 1
                 idx.dim()
             )
             .is_err()
         );
+    }
+
+    #[test]
+    fn packed_arena_matches_raw_results() {
+        // the packed arena is an equivalence-preserving representation:
+        // identical candidates for every query and min_overlap
+        prop(40, |g| {
+            let k = g.usize_in(2..=12);
+            let n = g.usize_in(1..=80);
+            let mapper = crate::embedding::Mapper::new(
+                TessellationKind::Ternary,
+                PermutationKind::ParseTree,
+                k,
+            );
+            let mut rng = Rng::seeded(g.case_seed ^ 0x9E37);
+            let items = crate::linalg::Matrix::gaussian(&mut rng, n, k, 1.0);
+            let emb = mapper.map_all(&items, 1).unwrap();
+            let raw = InvertedIndex::from_embeddings(&emb);
+            let packed = InvertedIndex::from_embeddings(&emb).into_packed();
+            assert!(packed.is_packed() && !raw.is_packed());
+            assert_eq!(packed.total_postings(), raw.total_postings());
+            // (memory is workload-dependent: block metadata can exceed
+            // 4 B/posting on singleton lists — compression is asserted
+            // on dense lists in quant::packed and on the real workloads
+            // in benches/quant_tier.rs)
+            let m = g.usize_in(1..=3);
+            let q = mapper.map(&g.unit_vector(k)).unwrap();
+            assert_eq!(packed.query(&q, m), raw.query(&q, m));
+            // per-dimension decode agrees with the raw slices
+            let mut buf = Vec::new();
+            for d in 0..raw.dim() {
+                packed.posting_to(d, &mut buf);
+                assert_eq!(buf, raw.posting(d), "dim {d}");
+            }
+            let (sr, sp) = (raw.stats(), packed.stats());
+            assert_eq!(sp.nonempty_dims, sr.nonempty_dims);
+            assert_eq!(sp.max_posting_len, sr.max_posting_len);
+            assert_eq!(sp.total_postings, sr.total_postings);
+        });
+    }
+
+    #[test]
+    fn packed_arena_exposes_no_raw_slices() {
+        let packed =
+            InvertedIndex::from_embeddings(&toy_embeddings()).into_packed();
+        assert!(packed.offsets_arena().is_none());
+        assert!(packed.postings_arena().is_none());
+        assert!(packed.packed().is_some());
+        // and scratch reuse stays clean across packed queries
+        let mut scratch = QueryScratch::new(packed.items());
+        let mut out = Vec::new();
+        let q = SparseVec::new(8, vec![(3, 1.0)]).unwrap();
+        packed.query_into(&q, 1, &mut scratch, &mut out);
+        assert_eq!(out, vec![0, 1]);
+        let q2 = SparseVec::new(8, vec![(6, 1.0)]).unwrap();
+        packed.query_into(&q2, 1, &mut scratch, &mut out);
+        assert_eq!(out, vec![2]);
     }
 
     #[test]

@@ -62,6 +62,7 @@ pub mod linalg;
 pub mod mf;
 pub mod obs;
 pub mod permutation;
+pub mod quant;
 pub mod retrieval;
 pub mod rng;
 pub mod runtime;
@@ -75,7 +76,9 @@ pub mod prelude {
     pub use crate::baselines::{
         BruteForce, CandidateFilter, ConcomitantLsh, PcaTree, SrpLsh, SuperbitLsh,
     };
-    pub use crate::configx::{Backend, MutationConfig, SchemaConfig};
+    pub use crate::configx::{
+        Backend, MutationConfig, PostingsMode, QuantMode, SchemaConfig,
+    };
     pub use crate::data::{gaussian_factors, MovieLensSynth, Ratings};
     pub use crate::embedding::{Mapper, PermutationKind, TessellationKind};
     pub use crate::engine::{
@@ -85,6 +88,7 @@ pub mod prelude {
     pub use crate::index::InvertedIndex;
     pub use crate::linalg::Matrix;
     pub use crate::mf::{AlsTrainer, SgdTrainer};
+    pub use crate::quant::{PackedPostings, QuantizedFactorStore};
     pub use crate::retrieval::{RecoveryReport, Retriever};
     pub use crate::rng::Rng;
     pub use crate::snapshot::{load_engine, save_engine, SnapshotInfo};

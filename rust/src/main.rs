@@ -20,7 +20,10 @@
 //! Run `geomap <subcommand> --help` for per-command options.
 
 use anyhow::{bail, Context, Result};
-use geomap::configx::{Backend, Cli, MutationConfig, SchemaConfig, ServeConfig};
+use geomap::configx::{
+    Backend, Cli, MutationConfig, PostingsMode, QuantMode, SchemaConfig,
+    ServeConfig,
+};
 use geomap::coordinator::Coordinator;
 use geomap::data::{gaussian_factors, MovieLensSynth, Ratings};
 use geomap::embedding::Mapper;
@@ -120,6 +123,13 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             "1024",
             "pending mutations per shard before a delta merge (0 = manual)",
         )
+        .opt(
+            "quant",
+            "off",
+            "rescoring-tier quantization: off | int8[:R] (R = exact-refine \
+             multiplier)",
+        )
+        .opt("postings", "raw", "posting arena: raw | packed (geomap only)")
         .opt("shards", "2", "index shards (worker threads)")
         .opt("max-batch", "32", "dynamic batch size cap")
         .opt("max-wait-us", "500", "batching window (µs)")
@@ -155,6 +165,8 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         threshold: cli.get_f64("threshold")? as f32,
         backend: Backend::parse(cli.get("backend"))?,
         mutation: MutationConfig { max_delta: cli.get_usize("max-delta")? },
+        quant: QuantMode::parse(cli.get("quant"))?,
+        postings: PostingsMode::parse(cli.get("postings"))?,
         checkpoint: None,
     };
     let factory = if cfg.use_xla {
@@ -236,12 +248,13 @@ fn cmd_map(args: &[String]) -> Result<()> {
     );
     println!(
         "embeddings: mean nnz {:.1}; index: {} postings over {}/{} dims, \
-         max posting {}",
+         max posting {}, arena {:.1} KiB",
         emb.mean_nnz(),
         s.total_postings,
         s.nonempty_dims,
         s.dims,
-        s.max_posting_len
+        s.max_posting_len,
+        s.memory_bytes as f64 / 1024.0
     );
     Ok(())
 }
@@ -378,6 +391,8 @@ fn cmd_snapshot_save(args: &[String]) -> Result<()> {
          cros[:m,l,L] | pca-tree[:frac] | brute",
     )
     .opt("max-delta", "1024", "pending mutations before a delta merge")
+    .opt("quant", "off", "rescoring-tier quantization: off | int8[:R]")
+    .opt("postings", "raw", "posting arena: raw | packed")
     .opt("seed", "42", "rng seed")
     .parse_from(args)?;
     let (_, items) = load_factors(
@@ -393,6 +408,8 @@ fn cmd_snapshot_save(args: &[String]) -> Result<()> {
         .threshold(cli.get_f64("threshold")? as f32)
         .backend(Backend::parse(cli.get("backend"))?)
         .mutation(MutationConfig { max_delta: cli.get_usize("max-delta")? })
+        .quant(QuantMode::parse(cli.get("quant"))?)
+        .postings(PostingsMode::parse(cli.get("postings"))?)
         .seed(cli.get_u64("seed")?);
     let t = Instant::now();
     let engine = spec.build(items)?;
@@ -450,13 +467,21 @@ fn cmd_snapshot_load(args: &[String]) -> Result<()> {
     let stats = engine.stats();
     println!(
         "loaded {} in {load_ms:.2} ms: {} items ({} live, {} pending, \
-         {} tombstones), ~{:.1} MiB resident",
+         {} tombstones), ~{:.1} MiB scan tier{}",
         stats.label,
         stats.len,
         stats.live,
         stats.pending,
         stats.tombstones,
-        stats.memory_bytes as f64 / (1024.0 * 1024.0)
+        stats.memory_bytes as f64 / (1024.0 * 1024.0),
+        if stats.refine_bytes > 0 {
+            format!(
+                " (+{:.1} MiB f32 refine tier)",
+                stats.refine_bytes as f64 / (1024.0 * 1024.0)
+            )
+        } else {
+            String::new()
+        }
     );
     if cli.is_set("no-rebuild") {
         return Ok(());

@@ -104,20 +104,27 @@ impl Histogram {
         self.max()
     }
 
-    /// p50/p99/max/mean one-line summary with a caller-supplied unit
+    /// The serving quantile triple `(p50, p95, p99)` in one pass-friendly
+    /// call (each quantile walk is O(buckets); callers that print all
+    /// three should prefer this for readability).
+    pub fn percentiles(&self) -> (u64, u64, u64) {
+        (self.quantile(0.5), self.quantile(0.95), self.quantile(0.99))
+    }
+
+    /// p50/p95/p99/max/mean one-line summary with a caller-supplied unit
     /// suffix ("" for dimensionless counts).
     pub fn summary_with_unit(&self, unit: &str) -> String {
+        let (p50, p95, p99) = self.percentiles();
         format!(
-            "n={} mean={:.1}{unit} p50={}{unit} p99={}{unit} max={}{unit}",
+            "n={} mean={:.1}{unit} p50={p50}{unit} p95={p95}{unit} \
+             p99={p99}{unit} max={}{unit}",
             self.count(),
             self.mean(),
-            self.quantile(0.5),
-            self.quantile(0.99),
             self.max()
         )
     }
 
-    /// p50/p99/max/mean one-line summary (µs units assumed).
+    /// p50/p95/p99/max/mean one-line summary (µs units assumed).
     pub fn summary(&self) -> String {
         self.summary_with_unit("us")
     }

@@ -1,0 +1,30 @@
+//! Compressed serving tier: int8 quantized factors + bit-packed postings.
+//!
+//! At the ROADMAP's millions-of-users scale the ceiling is bytes, not
+//! arithmetic: every item factor as f32 and every posting as a raw u32
+//! dominate resident memory. This subsystem shrinks both axes while
+//! keeping the paper's prune → exact-rescore contract intact:
+//!
+//! * [`QuantizedFactorStore`] — symmetric per-item int8 scalar
+//!   quantization with stored scales and a fixed-point i8×i8→i32 dot
+//!   kernel ([`dot_i8`]) for candidate rescoring. The engine re-ranks
+//!   the top `refine · κ` quantized survivors with exact f32 inner
+//!   products, so accuracy loss is bounded by the item quantization
+//!   error (≈ 0.4 % of ‖u‖‖v‖ at int8; `docs/QUANT.md` derives the
+//!   bound and reports measured recall).
+//! * [`PackedPostings`] — delta-encoded, block bit-packed posting lists
+//!   ([`BLOCK`]-entry blocks with per-block max-id skip entries), the
+//!   alternative arena behind `InvertedIndex`, decoded block-at-a-time
+//!   into the query scratch.
+//!
+//! Both are selected by config (`configx::QuantMode` /
+//! `configx::PostingsMode`, CLI `--quant` / `--postings`), persist in
+//! `GSNP` snapshots as format-v2 sections, and report their true
+//! residency through `SourceStats`. `benches/quant_tier.rs` measures
+//! the memory / recall / throughput trade on both workloads.
+
+mod packed;
+mod store;
+
+pub use packed::{PackedPostings, BLOCK};
+pub use store::{dot_i8, quantize_into, QuantizedFactorStore};

@@ -1,0 +1,510 @@
+//! Delta-encoded, block bit-packed posting lists.
+//!
+//! Posting lists are strictly increasing item ids (each item contributes
+//! a dimension at most once), which makes them a textbook fit for
+//! delta + bit-packing: store each list as blocks of up to [`BLOCK`]
+//! ids, where a block keeps its first id verbatim and packs the
+//! remaining `count - 1` gaps (`id[i] - id[i-1] - 1`) at the block's
+//! fixed bit width — the width of the largest gap in that block. Dense
+//! lists (small gaps) compress toward ~1–6 bits per posting instead of
+//! 32; a per-block *max-id* skip entry lets future intersection-style
+//! consumers skip blocks without decoding them.
+//!
+//! Decoding is block-at-a-time into a reusable scratch buffer, so the
+//! query hot path touches one small buffer plus the packed words —
+//! scan-friendly, no per-posting branching beyond the bit cursor.
+//!
+//! The struct is a plain bundle of flat `u32` arenas, so the snapshot
+//! codec serialises it verbatim and [`PackedPostings::from_parts`]
+//! revalidates everything (including a full decode pass) on load.
+
+use crate::error::{GeomapError, Result};
+
+/// Ids per block (the last block of a list may be shorter).
+pub const BLOCK: usize = 128;
+
+/// Bit-packed posting arena over `p` dimensions (see module docs).
+#[derive(Clone)]
+pub struct PackedPostings {
+    /// Ambient dimension count p.
+    p: usize,
+    /// Id space: every decoded id is `< items`.
+    items: usize,
+    /// Total postings across all dimensions.
+    total: usize,
+    /// Per-dimension block range: dimension `d` owns blocks
+    /// `dim_offsets[d] .. dim_offsets[d + 1]` (len = p + 1, monotone).
+    dim_offsets: Vec<u32>,
+    /// Per-block start word in `words`.
+    block_words: Vec<u32>,
+    /// Per-block first id (stored verbatim, not packed).
+    block_first: Vec<u32>,
+    /// Per-block max id — the skip entry (last id; lists are ascending).
+    block_max: Vec<u32>,
+    /// Per-block `count | width << 16` (count ≤ BLOCK, width ≤ 32).
+    block_info: Vec<u32>,
+    /// Gap bits, little-endian within each u32, LSB first. Every block
+    /// starts on a fresh word.
+    words: Vec<u32>,
+}
+
+fn bits_for(gap: u32) -> u32 {
+    32 - gap.leading_zeros()
+}
+
+impl PackedPostings {
+    /// Pack per-dimension posting lists. `lists(d)` must yield strictly
+    /// increasing ids `< items` for every `d < p` (the raw CSR arena
+    /// guarantees this; debug-asserted here).
+    pub fn pack<'a, F>(p: usize, items: usize, lists: F) -> PackedPostings
+    where
+        F: Fn(usize) -> &'a [u32],
+    {
+        let mut pk = PackedPostings {
+            p,
+            items,
+            total: 0,
+            dim_offsets: Vec::with_capacity(p + 1),
+            block_words: Vec::new(),
+            block_first: Vec::new(),
+            block_max: Vec::new(),
+            block_info: Vec::new(),
+            words: Vec::new(),
+        };
+        pk.dim_offsets.push(0);
+        for d in 0..p {
+            let list = lists(d);
+            debug_assert!(list.windows(2).all(|w| w[0] < w[1]));
+            pk.total += list.len();
+            for chunk in list.chunks(BLOCK) {
+                pk.push_block(chunk);
+            }
+            pk.dim_offsets.push(pk.block_first.len() as u32);
+        }
+        pk
+    }
+
+    fn push_block(&mut self, ids: &[u32]) {
+        debug_assert!(!ids.is_empty() && ids.len() <= BLOCK);
+        let width = ids
+            .windows(2)
+            .map(|w| bits_for(w[1] - w[0] - 1))
+            .max()
+            .unwrap_or(0);
+        self.block_words.push(self.words.len() as u32);
+        self.block_first.push(ids[0]);
+        self.block_max.push(*ids.last().unwrap());
+        self.block_info.push(ids.len() as u32 | (width << 16));
+        if width == 0 {
+            return; // a consecutive run packs to zero gap bits
+        }
+        let mut acc = 0u64;
+        let mut used = 0u32;
+        for w in ids.windows(2) {
+            let gap = w[1] - w[0] - 1;
+            acc |= (gap as u64) << used;
+            used += width;
+            while used >= 32 {
+                self.words.push(acc as u32);
+                acc >>= 32;
+                used -= 32;
+            }
+        }
+        if used > 0 {
+            self.words.push(acc as u32);
+        }
+    }
+
+    /// Ambient dimension count p.
+    pub fn dims(&self) -> usize {
+        self.p
+    }
+
+    /// Id space bound (decoded ids are `< items`).
+    pub fn items(&self) -> usize {
+        self.items
+    }
+
+    /// Total postings stored.
+    pub fn total(&self) -> usize {
+        self.total
+    }
+
+    /// Number of blocks.
+    pub fn blocks(&self) -> usize {
+        self.block_first.len()
+    }
+
+    /// Block index range of dimension `d`.
+    #[inline]
+    pub fn dim_blocks(&self, d: usize) -> std::ops::Range<usize> {
+        self.dim_offsets[d] as usize..self.dim_offsets[d + 1] as usize
+    }
+
+    /// Posting count of dimension `d` (sums block counts, no decode).
+    pub fn dim_len(&self, d: usize) -> usize {
+        self.dim_blocks(d)
+            .map(|b| (self.block_info[b] & 0xFFFF) as usize)
+            .sum()
+    }
+
+    /// Max id of block `b` — the skip entry (no decode needed).
+    #[inline]
+    pub fn block_max(&self, b: usize) -> u32 {
+        self.block_max[b]
+    }
+
+    /// Decode block `b` into `out` (cleared first; at most [`BLOCK`] ids,
+    /// strictly increasing).
+    #[inline]
+    pub fn decode_block(&self, b: usize, out: &mut Vec<u32>) {
+        out.clear();
+        let info = self.block_info[b];
+        let count = (info & 0xFFFF) as usize;
+        let width = info >> 16;
+        let mut id = self.block_first[b];
+        out.push(id);
+        // wrapping arithmetic: on well-formed data nothing wraps; on a
+        // corrupt arena a wrapped id breaks the strictly-increasing
+        // order that `from_parts` verifies, instead of panicking here
+        if width == 0 {
+            // consecutive run
+            for _ in 1..count {
+                id = id.wrapping_add(1);
+                out.push(id);
+            }
+            return;
+        }
+        let mask = (1u64 << width) - 1;
+        let mut w = self.block_words[b] as usize;
+        let mut acc = 0u64;
+        let mut have = 0u32;
+        for _ in 1..count {
+            while have < width {
+                acc |= (self.words[w] as u64) << have;
+                w += 1;
+                have += 32;
+            }
+            id = id.wrapping_add((acc & mask) as u32).wrapping_add(1);
+            acc >>= width;
+            have -= width;
+            out.push(id);
+        }
+    }
+
+    /// Decode the full posting list of dimension `d`, appending to `out`.
+    pub fn decode_dim(&self, d: usize, out: &mut Vec<u32>) {
+        let mut block = Vec::with_capacity(BLOCK);
+        for b in self.dim_blocks(d) {
+            self.decode_block(b, &mut block);
+            out.extend_from_slice(&block);
+        }
+    }
+
+    /// Resident bytes of the packed arenas.
+    pub fn memory_bytes(&self) -> usize {
+        (self.dim_offsets.len()
+            + self.block_words.len()
+            + self.block_first.len()
+            + self.block_max.len()
+            + self.block_info.len()
+            + self.words.len())
+            * 4
+    }
+
+    /// The flat arenas, for the snapshot codec: `(dim_offsets,
+    /// block_words, block_first, block_max, block_info, words)`.
+    #[allow(clippy::type_complexity)]
+    pub fn arenas(
+        &self,
+    ) -> (&[u32], &[u32], &[u32], &[u32], &[u32], &[u32]) {
+        (
+            &self.dim_offsets,
+            &self.block_words,
+            &self.block_first,
+            &self.block_max,
+            &self.block_info,
+            &self.words,
+        )
+    }
+
+    /// Reassemble from raw arenas (the snapshot load path). Everything a
+    /// decode trusts is validated — block ranges, counts, widths, word
+    /// bounds — and a full decode pass checks every id is in range,
+    /// every list strictly increasing, and the skip entries honest; a
+    /// corrupt section fails here instead of panicking at query time.
+    pub fn from_parts(
+        p: usize,
+        items: usize,
+        total: usize,
+        dim_offsets: Vec<u32>,
+        block_words: Vec<u32>,
+        block_first: Vec<u32>,
+        block_max: Vec<u32>,
+        block_info: Vec<u32>,
+        words: Vec<u32>,
+    ) -> Result<PackedPostings> {
+        let n_blocks = block_first.len();
+        if dim_offsets.len() != p + 1 {
+            return Err(GeomapError::Artifact(format!(
+                "packed postings: dim offsets len {} != p + 1 = {}",
+                dim_offsets.len(),
+                p + 1
+            )));
+        }
+        if dim_offsets.first() != Some(&0)
+            || *dim_offsets.last().unwrap() as usize != n_blocks
+            || dim_offsets.windows(2).any(|w| w[0] > w[1])
+        {
+            return Err(GeomapError::Artifact(
+                "packed postings: dim offsets are not a monotone span of \
+                 the block table"
+                    .into(),
+            ));
+        }
+        if block_words.len() != n_blocks
+            || block_max.len() != n_blocks
+            || block_info.len() != n_blocks
+        {
+            return Err(GeomapError::Artifact(
+                "packed postings: block arenas disagree in length".into(),
+            ));
+        }
+        let pk = PackedPostings {
+            p,
+            items,
+            total,
+            dim_offsets,
+            block_words,
+            block_first,
+            block_max,
+            block_info,
+            words,
+        };
+        // structural bounds first, so the decode pass cannot panic
+        for b in 0..n_blocks {
+            let info = pk.block_info[b];
+            let count = (info & 0xFFFF) as usize;
+            let width = info >> 16;
+            if count == 0 || count > BLOCK {
+                return Err(GeomapError::Artifact(format!(
+                    "packed postings: block {b} count {count} outside \
+                     1..={BLOCK}"
+                )));
+            }
+            if width > 32 {
+                return Err(GeomapError::Artifact(format!(
+                    "packed postings: block {b} gap width {width} > 32"
+                )));
+            }
+            let gap_bits = (count - 1) as u64 * width as u64;
+            let need_words = gap_bits.div_ceil(32);
+            let start = pk.block_words[b] as u64;
+            if start + need_words > pk.words.len() as u64 {
+                return Err(GeomapError::Artifact(format!(
+                    "packed postings: block {b} overruns the word arena"
+                )));
+            }
+        }
+        // full decode verification: id bounds, order, skip entries, total
+        let mut decoded = 0usize;
+        let mut buf = Vec::with_capacity(BLOCK);
+        for d in 0..p {
+            let mut prev: Option<u32> = None;
+            for b in pk.dim_blocks(d) {
+                pk.decode_block(b, &mut buf);
+                decoded += buf.len();
+                if *buf.last().unwrap() != pk.block_max[b] {
+                    return Err(GeomapError::Artifact(format!(
+                        "packed postings: block {b} skip entry disagrees \
+                         with its decoded ids"
+                    )));
+                }
+                for &id in &buf {
+                    if prev.is_some_and(|p| p >= id) {
+                        return Err(GeomapError::Artifact(format!(
+                            "packed postings: dim {d} ids not strictly \
+                             increasing"
+                        )));
+                    }
+                    if id as usize >= items {
+                        return Err(GeomapError::Artifact(format!(
+                            "packed postings: id {id} >= item bound {items}"
+                        )));
+                    }
+                    prev = Some(id);
+                }
+            }
+        }
+        if decoded != total {
+            return Err(GeomapError::Artifact(format!(
+                "packed postings: decoded {decoded} postings but header \
+                 claims {total}"
+            )));
+        }
+        Ok(pk)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn pack_lists(items: usize, lists: &[Vec<u32>]) -> PackedPostings {
+        PackedPostings::pack(lists.len(), items, |d| &lists[d])
+    }
+
+    fn decode_all(pk: &PackedPostings) -> Vec<Vec<u32>> {
+        (0..pk.dims())
+            .map(|d| {
+                let mut out = Vec::new();
+                pk.decode_dim(d, &mut out);
+                out
+            })
+            .collect()
+    }
+
+    #[test]
+    fn roundtrip_simple_lists() {
+        let lists = vec![
+            vec![0, 1, 2, 3],          // consecutive run: zero-width block
+            vec![5],                   // singleton
+            vec![],                    // empty dimension
+            vec![0, 100, 101, 9_999],  // mixed gaps
+        ];
+        let pk = pack_lists(10_000, &lists);
+        assert_eq!(pk.total(), 9);
+        assert_eq!(decode_all(&pk), lists);
+        assert_eq!(pk.dim_len(0), 4);
+        assert_eq!(pk.dim_len(2), 0);
+        assert_eq!(pk.dim_len(3), 4);
+    }
+
+    #[test]
+    fn multi_block_lists_roundtrip() {
+        // spans several blocks, including an exact BLOCK boundary
+        let mut rng = Rng::seeded(7);
+        for n in [BLOCK - 1, BLOCK, BLOCK + 1, 3 * BLOCK + 17] {
+            let mut ids: Vec<u32> = Vec::new();
+            let mut cur = 0u32;
+            for _ in 0..n {
+                cur += 1 + (rng.below(50) as u32);
+                ids.push(cur);
+            }
+            let lists = vec![ids.clone()];
+            let pk = pack_lists(cur as usize + 1, &lists);
+            assert_eq!(decode_all(&pk), lists, "n={n}");
+            let blocks = pk.dim_blocks(0);
+            assert_eq!(blocks.len(), n.div_ceil(BLOCK));
+            // skip entries are the true block maxima
+            for b in pk.dim_blocks(0) {
+                let mut buf = Vec::new();
+                pk.decode_block(b, &mut buf);
+                assert_eq!(pk.block_max(b), *buf.last().unwrap());
+                assert!(buf.len() <= BLOCK);
+            }
+        }
+    }
+
+    #[test]
+    fn wide_gaps_need_full_width() {
+        // gap of u32::MAX - 1 forces a 32-bit width
+        let lists = vec![vec![0u32, u32::MAX]];
+        let pk = pack_lists(usize::MAX, &lists);
+        assert_eq!(decode_all(&pk), lists);
+    }
+
+    #[test]
+    fn random_lists_property() {
+        let mut rng = Rng::seeded(42);
+        for _ in 0..30 {
+            let p = 1 + rng.below(8);
+            let items = 2 + rng.below(5000);
+            let mut lists = Vec::with_capacity(p);
+            for _ in 0..p {
+                let mut set: Vec<u32> = (0..items as u32)
+                    .filter(|_| rng.below(4) == 0)
+                    .collect();
+                set.dedup();
+                lists.push(set);
+            }
+            let pk = pack_lists(items, &lists);
+            assert_eq!(decode_all(&pk), lists);
+            assert_eq!(
+                pk.total(),
+                lists.iter().map(Vec::len).sum::<usize>()
+            );
+        }
+    }
+
+    #[test]
+    fn packed_is_smaller_than_raw_on_dense_lists() {
+        // every other id present: gaps of 1 → 1-bit packing
+        let ids: Vec<u32> = (0..20_000u32).step_by(2).collect();
+        let lists = vec![ids];
+        let pk = pack_lists(20_000, &lists);
+        let raw_bytes = lists[0].len() * 4;
+        assert!(
+            pk.memory_bytes() * 4 < raw_bytes,
+            "packed {} vs raw {raw_bytes}",
+            pk.memory_bytes()
+        );
+    }
+
+    #[test]
+    fn from_parts_roundtrip_and_validation() {
+        let lists = vec![vec![1u32, 4, 9, 200], vec![], vec![0, 1, 2]];
+        let pk = pack_lists(300, &lists);
+        let (dofs, bw, bf, bm, bi, w) = pk.arenas();
+        let rebuild = |items: usize,
+                       total: usize,
+                       bm: Vec<u32>,
+                       bi: Vec<u32>| {
+            PackedPostings::from_parts(
+                3,
+                items,
+                total,
+                dofs.to_vec(),
+                bw.to_vec(),
+                bf.to_vec(),
+                bm,
+                bi,
+                w.to_vec(),
+            )
+        };
+        let back =
+            rebuild(300, pk.total(), bm.to_vec(), bi.to_vec()).unwrap();
+        assert_eq!(decode_all(&back), lists);
+
+        // id beyond the claimed bound
+        assert!(rebuild(100, pk.total(), bm.to_vec(), bi.to_vec()).is_err());
+        // total disagrees with the blocks
+        assert!(rebuild(300, 99, bm.to_vec(), bi.to_vec()).is_err());
+        // lying skip entry
+        let mut bad_max = bm.to_vec();
+        bad_max[0] += 1;
+        assert!(rebuild(300, pk.total(), bad_max, bi.to_vec()).is_err());
+        // zero-count block
+        let mut bad_info = bi.to_vec();
+        bad_info[0] &= !0xFFFF;
+        assert!(rebuild(300, pk.total(), bm.to_vec(), bad_info).is_err());
+        // width > 32
+        let mut bad_info = bi.to_vec();
+        bad_info[0] |= 33 << 16;
+        assert!(rebuild(300, pk.total(), bm.to_vec(), bad_info).is_err());
+        // ragged dim offsets
+        assert!(PackedPostings::from_parts(
+            2,
+            300,
+            pk.total(),
+            dofs.to_vec(),
+            bw.to_vec(),
+            bf.to_vec(),
+            bm.to_vec(),
+            bi.to_vec(),
+            w.to_vec(),
+        )
+        .is_err());
+    }
+}

@@ -1,0 +1,347 @@
+//! Symmetric per-item int8 scalar quantization of the factor catalogue.
+//!
+//! Each item row `v` stores `codes[j] = round(v[j] / s)` clamped to
+//! `[-127, 127]` with `s = max_j |v[j]| / 127` — symmetric quantization,
+//! so no zero-point arithmetic pollutes the dot kernel. A query is
+//! quantized once the same way, and the approximate score is
+//!
+//! ```text
+//! ⟨u, v⟩ ≈ (Σ_j qu[j] · qv[j]) · s_u · s_v        (i8×i8 → i32 exact)
+//! ```
+//!
+//! The integer accumulation is exact (k · 127² ≪ 2³¹ for any realistic
+//! k), so the only error is the rounding of each coordinate — at most
+//! `s/2` per coordinate, giving the bound derived in `docs/QUANT.md`.
+//! The engine re-ranks the top `refine · κ` survivors with full f32
+//! inner products against the original factors, which removes the
+//! query-side quantization error entirely and bounds the end-to-end
+//! accuracy loss by the item-side error alone.
+//!
+//! The store is id-addressed exactly like a
+//! [`CandidateSource`](crate::engine::CandidateSource): row `id` holds
+//! the codes of item `id`, dead ids hold a zeroed row (scale 0) and are
+//! never scored because sources only return live candidates.
+
+use crate::error::{GeomapError, Result};
+
+/// Int8 codes + per-item scales for a factor catalogue (see module docs).
+#[derive(Clone)]
+pub struct QuantizedFactorStore {
+    k: usize,
+    /// Row-major codes: item `id` lives at `[id·k, (id+1)·k)`.
+    codes: Vec<i8>,
+    /// Per-item dequantization scale (`max|v| / 127`; 0 for dead rows).
+    scales: Vec<f32>,
+}
+
+/// Quantize one factor into `codes` (len k), returning its scale.
+///
+/// Symmetric: `codes[j] · scale` reconstructs `v[j]` to within
+/// `scale / 2`. An all-zero factor yields scale 0 and zero codes.
+pub fn quantize_into(factor: &[f32], codes: &mut [i8]) -> f32 {
+    debug_assert_eq!(factor.len(), codes.len());
+    let max = factor.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+    if max == 0.0 || !max.is_finite() {
+        codes.fill(0);
+        return 0.0;
+    }
+    let scale = max / 127.0;
+    let inv = 127.0 / max;
+    for (c, &x) in codes.iter_mut().zip(factor) {
+        // max scaling keeps x·inv within ±127, so the cast cannot
+        // saturate; round-half-away matches the error bound
+        *c = (x * inv).round() as i8;
+    }
+    scale
+}
+
+/// Fixed-point inner product: i8×i8 products accumulated exactly in i32.
+///
+/// Four parallel accumulators, mirroring `linalg::ops::dot`, so LLVM
+/// auto-vectorises the widening multiply-add without unsafe intrinsics.
+#[inline]
+pub fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
+    debug_assert_eq!(a.len(), b.len());
+    let chunks = a.len() / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0i32, 0i32, 0i32, 0i32);
+    for i in 0..chunks {
+        let j = i * 4;
+        s0 += a[j] as i32 * b[j] as i32;
+        s1 += a[j + 1] as i32 * b[j + 1] as i32;
+        s2 += a[j + 2] as i32 * b[j + 2] as i32;
+        s3 += a[j + 3] as i32 * b[j + 3] as i32;
+    }
+    let mut tail = 0i32;
+    for j in chunks * 4..a.len() {
+        tail += a[j] as i32 * b[j] as i32;
+    }
+    (s0 + s1) + (s2 + s3) + tail
+}
+
+impl QuantizedFactorStore {
+    /// Empty store for dimensionality `k`.
+    pub fn new(k: usize) -> Self {
+        QuantizedFactorStore { k, codes: Vec::new(), scales: Vec::new() }
+    }
+
+    /// Quantize the id space `0..len` of a factor lookup. Ids where
+    /// `factor_of` is `None` (dead / unmerged holes) get a zeroed row.
+    pub fn from_factors<'a, F>(len: usize, k: usize, factor_of: F) -> Self
+    where
+        F: Fn(u32) -> Option<&'a [f32]>,
+    {
+        let mut store = QuantizedFactorStore::new(k);
+        store.ensure_len(len);
+        for id in 0..len as u32 {
+            if let Some(f) = factor_of(id) {
+                store.set_row(id, f);
+            }
+        }
+        store
+    }
+
+    /// Grow to cover `len` ids (new rows zeroed; no-op when big enough).
+    pub fn ensure_len(&mut self, len: usize) {
+        if self.scales.len() < len {
+            self.scales.resize(len, 0.0);
+            self.codes.resize(len * self.k, 0);
+        }
+    }
+
+    /// Requantize the row of `id` from its f32 factor.
+    pub fn set_row(&mut self, id: u32, factor: &[f32]) {
+        debug_assert_eq!(factor.len(), self.k);
+        self.ensure_len(id as usize + 1);
+        let lo = id as usize * self.k;
+        self.scales[id as usize] =
+            quantize_into(factor, &mut self.codes[lo..lo + self.k]);
+    }
+
+    /// Zero the row of `id` (removed item). Out-of-range ids are a no-op
+    /// (the id never had a row to clear).
+    pub fn clear_row(&mut self, id: u32) {
+        if (id as usize) < self.scales.len() {
+            let lo = id as usize * self.k;
+            self.codes[lo..lo + self.k].fill(0);
+            self.scales[id as usize] = 0.0;
+        }
+    }
+
+    /// Approximate score of item `id` against a quantized query
+    /// (`qcodes`, `qscale` from [`quantize_into`]).
+    #[inline]
+    pub fn score(&self, id: u32, qcodes: &[i8], qscale: f32) -> f32 {
+        let lo = id as usize * self.k;
+        let row = &self.codes[lo..lo + self.k];
+        dot_i8(qcodes, row) as f32 * self.scales[id as usize] * qscale
+    }
+
+    /// Covered id space.
+    pub fn len(&self) -> usize {
+        self.scales.len()
+    }
+
+    /// True when no id is covered.
+    pub fn is_empty(&self) -> bool {
+        self.scales.is_empty()
+    }
+
+    /// Factor dimensionality k.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Resident bytes: 1 byte per code + 4 per scale.
+    pub fn memory_bytes(&self) -> usize {
+        self.codes.len() + self.scales.len() * 4
+    }
+
+    /// The raw code arena (row-major), for the snapshot codec.
+    pub fn codes(&self) -> &[i8] {
+        &self.codes
+    }
+
+    /// The per-item scales, for the snapshot codec.
+    pub fn scales(&self) -> &[f32] {
+        &self.scales
+    }
+
+    /// Reassemble from snapshot arenas, validating shape agreement.
+    pub fn from_parts(
+        k: usize,
+        codes: Vec<i8>,
+        scales: Vec<f32>,
+    ) -> Result<QuantizedFactorStore> {
+        if codes.len() != scales.len() * k {
+            return Err(GeomapError::Artifact(format!(
+                "quant store: {} codes disagree with {} items of dim {k}",
+                codes.len(),
+                scales.len()
+            )));
+        }
+        if scales.iter().any(|s| !s.is_finite() || *s < 0.0) {
+            return Err(GeomapError::Artifact(
+                "quant store: scales must be finite and non-negative".into(),
+            ));
+        }
+        Ok(QuantizedFactorStore { k, codes, scales })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::ops::dot;
+    use crate::rng::Rng;
+
+    fn gaussian(k: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::seeded(seed);
+        (0..k).map(|_| rng.gaussian_f32()).collect()
+    }
+
+    #[test]
+    fn dot_i8_matches_naive_all_lengths() {
+        let mut rng = Rng::seeded(1);
+        for len in 0..40 {
+            let a: Vec<i8> =
+                (0..len).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+            let b: Vec<i8> =
+                (0..len).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+            let want: i32 =
+                a.iter().zip(&b).map(|(&x, &y)| x as i32 * y as i32).sum();
+            assert_eq!(dot_i8(&a, &b), want, "len={len}");
+        }
+    }
+
+    #[test]
+    fn quantize_bounds_per_coordinate_error() {
+        for seed in 0..20u64 {
+            let v = gaussian(32, seed);
+            let mut codes = vec![0i8; 32];
+            let s = quantize_into(&v, &mut codes);
+            assert!(s > 0.0);
+            for (c, &x) in codes.iter().zip(&v) {
+                let err = (*c as f32 * s - x).abs();
+                assert!(
+                    err <= s * 0.5 + 1e-6,
+                    "coordinate error {err} exceeds s/2 = {}",
+                    s * 0.5
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn zero_factor_quantizes_to_zero_scale() {
+        let mut codes = vec![7i8; 8];
+        let s = quantize_into(&[0.0; 8], &mut codes);
+        assert_eq!(s, 0.0);
+        assert!(codes.iter().all(|&c| c == 0));
+    }
+
+    #[test]
+    fn approximate_scores_track_exact_dots() {
+        let k = 32;
+        let mut store = QuantizedFactorStore::new(k);
+        let rows: Vec<Vec<f32>> =
+            (0..50).map(|i| gaussian(k, 100 + i)).collect();
+        for (id, r) in rows.iter().enumerate() {
+            store.set_row(id as u32, r);
+        }
+        let u = gaussian(k, 999);
+        let mut qcodes = vec![0i8; k];
+        let qscale = quantize_into(&u, &mut qcodes);
+        // relative error bound: |Δ| ≤ (s_u/2)·Σ|qv·s_v| + (s_v/2)·Σ|qu·s_u|
+        // ≈ (s_u + s_v)/2 · √k · ‖·‖; empirically a few percent of ‖u‖‖v‖
+        for (id, r) in rows.iter().enumerate() {
+            let approx = store.score(id as u32, &qcodes, qscale);
+            let exact = dot(&u, r);
+            let norm: f32 = dot(&u, &u).sqrt() * dot(r, r).sqrt();
+            assert!(
+                (approx - exact).abs() <= 0.05 * norm + 1e-4,
+                "id {id}: approx {approx} vs exact {exact} (norms {norm})"
+            );
+        }
+    }
+
+    #[test]
+    fn ranking_survives_quantization() {
+        // the top item by a clear margin stays the top item quantized
+        let k = 16;
+        let mut store = QuantizedFactorStore::new(k);
+        let u = gaussian(k, 5);
+        store.set_row(0, &u); // perfectly aligned → dominant score
+        for id in 1..20u32 {
+            let mut v = gaussian(k, 200 + id as u64);
+            for x in &mut v {
+                *x *= 0.3;
+            }
+            store.set_row(id, &v);
+        }
+        let mut qcodes = vec![0i8; k];
+        let qscale = quantize_into(&u, &mut qcodes);
+        let best = (0..20u32)
+            .max_by(|&a, &b| {
+                store
+                    .score(a, &qcodes, qscale)
+                    .partial_cmp(&store.score(b, &qcodes, qscale))
+                    .unwrap()
+            })
+            .unwrap();
+        assert_eq!(best, 0);
+    }
+
+    #[test]
+    fn mutation_updates_rows() {
+        let k = 8;
+        let mut store = QuantizedFactorStore::new(k);
+        store.ensure_len(4);
+        assert_eq!(store.len(), 4);
+        let f = gaussian(k, 3);
+        store.set_row(2, &f);
+        let mut q = vec![0i8; k];
+        let qs = quantize_into(&f, &mut q);
+        assert!(store.score(2, &q, qs) > 0.0);
+        store.clear_row(2);
+        assert_eq!(store.score(2, &q, qs), 0.0);
+        // appending past the current length grows the store
+        store.set_row(7, &f);
+        assert_eq!(store.len(), 8);
+        assert_eq!(store.memory_bytes(), 8 * k + 8 * 4);
+        // clearing an id we never covered is a no-op
+        store.clear_row(100);
+        assert_eq!(store.len(), 8);
+    }
+
+    #[test]
+    fn parts_roundtrip_and_validation() {
+        let k = 8;
+        let mut store = QuantizedFactorStore::new(k);
+        for id in 0..5u32 {
+            store.set_row(id, &gaussian(k, id as u64));
+        }
+        let back = QuantizedFactorStore::from_parts(
+            k,
+            store.codes().to_vec(),
+            store.scales().to_vec(),
+        )
+        .unwrap();
+        assert_eq!(back.len(), 5);
+        assert_eq!(back.codes(), store.codes());
+        assert_eq!(back.scales(), store.scales());
+        // ragged arenas rejected
+        assert!(QuantizedFactorStore::from_parts(
+            k,
+            vec![0i8; 7],
+            vec![1.0]
+        )
+        .is_err());
+        // non-finite scales rejected
+        assert!(QuantizedFactorStore::from_parts(
+            1,
+            vec![0i8; 2],
+            vec![1.0, f32::NAN]
+        )
+        .is_err());
+    }
+}

@@ -43,6 +43,14 @@ impl TopK {
     }
 
     /// Offer one scored item.
+    ///
+    /// Admission ties break by ascending id (an equal-scoring entry
+    /// evicts the largest tied id), matching the `into_sorted` tie rule.
+    /// The kept set is therefore a pure function of the offered
+    /// `(id, score)` multiset — push order, and hence shard [`merge`]
+    /// order, never changes the result.
+    ///
+    /// [`merge`]: TopK::merge
     #[inline]
     pub fn push(&mut self, id: u32, score: f32) {
         if self.kappa == 0 {
@@ -51,7 +59,10 @@ impl TopK {
         if self.heap.len() < self.kappa {
             self.heap.push(MinScored(Scored { id, score }));
         } else if let Some(min) = self.heap.peek() {
-            if score > min.0.score {
+            // peek() is the smallest score, largest id among its ties
+            if score > min.0.score
+                || (score == min.0.score && id < min.0.id)
+            {
                 self.heap.pop();
                 self.heap.push(MinScored(Scored { id, score }));
             }
@@ -73,6 +84,13 @@ impl TopK {
         self.heap.peek().map(|m| m.0.score)
     }
 
+    /// Extract the kept entries in arbitrary order — for consumers that
+    /// re-rank anyway (e.g. the quantized refinement pass), skipping
+    /// [`into_sorted`](TopK::into_sorted)'s O(κ log κ) sort.
+    pub fn into_unsorted(self) -> Vec<Scored> {
+        self.heap.into_iter().map(|m| m.0).collect()
+    }
+
     /// Extract results sorted by descending score (ties: ascending id).
     pub fn into_sorted(self) -> Vec<Scored> {
         let mut v: Vec<Scored> = self.heap.into_iter().map(|m| m.0).collect();
@@ -86,6 +104,13 @@ impl TopK {
     }
 
     /// Merge another accumulator into this one (shard fan-in).
+    ///
+    /// Assumes the two accumulators cover *disjoint* id spaces, which
+    /// shard fan-in guarantees (each shard owns a contiguous global id
+    /// range). An id present in both sides is treated as two distinct
+    /// entries — no deduplication — so both copies can survive into the
+    /// merged top-κ. Tie scores stay deterministic: equal scores order
+    /// by ascending id, both during eviction and in `into_sorted`.
     pub fn merge(&mut self, other: TopK) {
         for m in other.heap {
             self.push(m.0.id, m.0.score);
@@ -178,6 +203,56 @@ mod tests {
             let direct = tc.into_sorted();
             assert_eq!(merged, direct);
         });
+    }
+
+    #[test]
+    fn merge_with_duplicate_ids_keeps_both_copies() {
+        // merge assumes disjoint shard id spaces; feeding the same id
+        // from both sides documents the contract: no deduplication
+        let mut a = TopK::new(4);
+        a.push(7, 3.0);
+        a.push(1, 1.0);
+        let mut b = TopK::new(4);
+        b.push(7, 2.0); // same id, different score
+        b.push(2, 0.5);
+        a.merge(b);
+        let out = a.into_sorted();
+        let sevens: Vec<f32> = out
+            .iter()
+            .filter(|s| s.id == 7)
+            .map(|s| s.score)
+            .collect();
+        assert_eq!(sevens, vec![3.0, 2.0], "both copies of id 7 survive");
+        assert_eq!(out.len(), 4);
+    }
+
+    #[test]
+    fn merge_ties_break_deterministically_by_id() {
+        // all-equal scores: the κ smallest ids must win, in order —
+        // regardless of which side of the merge they came from
+        let mut a = TopK::new(3);
+        for id in [9u32, 4, 6] {
+            a.push(id, 1.0);
+        }
+        let mut b = TopK::new(3);
+        for id in [2u32, 8, 5] {
+            b.push(id, 1.0);
+        }
+        a.merge(b);
+        let ids: Vec<u32> = a.into_sorted().iter().map(|s| s.id).collect();
+        assert_eq!(ids, vec![2, 4, 5], "ties evict the largest id first");
+        // and the mirror-order merge agrees exactly
+        let mut a2 = TopK::new(3);
+        for id in [2u32, 8, 5] {
+            a2.push(id, 1.0);
+        }
+        let mut b2 = TopK::new(3);
+        for id in [9u32, 4, 6] {
+            b2.push(id, 1.0);
+        }
+        a2.merge(b2);
+        let ids2: Vec<u32> = a2.into_sorted().iter().map(|s| s.id).collect();
+        assert_eq!(ids, ids2, "merge order must not change tie results");
     }
 
     #[test]

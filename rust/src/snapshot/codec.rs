@@ -24,12 +24,15 @@ use super::format::{
     cast_f32s, cast_u32s, push_f32s, push_u32s, Cursor, Reader, SectionKind,
     Writer,
 };
-use crate::configx::{obj, Backend, Json, MutationConfig, SchemaConfig};
+use crate::configx::{
+    obj, Backend, Json, MutationConfig, PostingsMode, QuantMode, SchemaConfig,
+};
 use crate::embedding::Mapper;
 use crate::engine::{BaseSegment, DeltaSegment, Engine, EngineBuilder, GeomapEngine};
 use crate::error::{GeomapError, Result};
 use crate::index::InvertedIndex;
 use crate::linalg::Matrix;
+use crate::quant::{PackedPostings, QuantizedFactorStore};
 use std::collections::HashMap;
 use std::sync::Arc;
 
@@ -46,6 +49,8 @@ pub fn spec_to_json(spec: &EngineBuilder) -> Json {
         // as a decimal string
         ("seed", Json::from(spec.seed.to_string())),
         ("max_delta", Json::from(spec.mutation.max_delta)),
+        ("quant", Json::from(spec.quant.spec())),
+        ("postings", Json::from(spec.postings.spec())),
     ])
 }
 
@@ -59,13 +64,25 @@ pub fn spec_from_json(j: &Json) -> Result<EngineBuilder> {
         GeomapError::Artifact("snapshot config has a malformed seed".into())
     })?;
     let max_delta = j.get("max_delta")?.as_usize()?;
+    // quant/postings arrived with format v2; absent keys (a v1 snapshot)
+    // mean the pre-quantization defaults
+    let quant = match j.opt("quant") {
+        Some(v) => QuantMode::parse(v.as_str()?)?,
+        None => QuantMode::Off,
+    };
+    let postings = match j.opt("postings") {
+        Some(v) => PostingsMode::parse(v.as_str()?)?,
+        None => PostingsMode::Raw,
+    };
     Ok(Engine::builder()
         .backend(backend)
         .schema(schema)
         .threshold(threshold)
         .min_overlap(min_overlap)
         .seed(seed)
-        .mutation(MutationConfig { max_delta }))
+        .mutation(MutationConfig { max_delta })
+        .quant(quant)
+        .postings(postings))
 }
 
 // -------------------------------------------------------------- bitmaps
@@ -92,6 +109,15 @@ fn read_bitmap(bytes: &[u8], n: usize) -> Vec<bool> {
 
 // --------------------------------------------------------------- encode
 
+fn push_i8s(buf: &mut Vec<u8>, xs: &[i8]) {
+    // SAFETY: i8 and u8 are layout-identical; reading i8s as bytes is
+    // always valid.
+    let raw = unsafe {
+        std::slice::from_raw_parts(xs.as_ptr() as *const u8, xs.len())
+    };
+    buf.extend_from_slice(raw);
+}
+
 /// Write one engine as the section group of shard ordinal `shard`.
 pub fn write_engine(w: &mut Writer, shard: u16, engine: &Engine) -> Result<()> {
     let spec = engine.spec();
@@ -100,7 +126,21 @@ pub fn write_engine(w: &mut Writer, shard: u16, engine: &Engine) -> Result<()> {
     w.end(SectionKind::Config, shard)?;
 
     if let Some(g) = engine.geomap_source() {
-        write_geomap(w, shard, g)
+        write_geomap(w, shard, g)?;
+        // the quantized tier rides along so a geomap load never
+        // requantizes; the section raises the container format to v2.
+        // Baseline backends skip it: their load path rebuilds from
+        // factors anyway (deterministically, bit-identical codes), so
+        // writing the section would only bloat the file and cost the
+        // snapshot its v1 readability.
+        if let Some(q) = engine.quant_store() {
+            let buf = w.begin();
+            buf.extend_from_slice(&(q.len() as u64).to_le_bytes());
+            buf.extend_from_slice(&(q.k() as u64).to_le_bytes());
+            push_f32s(buf, q.scales());
+            push_i8s(buf, q.codes());
+            w.end(SectionKind::Quant, shard)?;
+        }
     } else {
         let factors = engine.dense_factors().ok_or_else(|| {
             GeomapError::Config(format!(
@@ -108,8 +148,9 @@ pub fn write_engine(w: &mut Writer, shard: u16, engine: &Engine) -> Result<()> {
                 spec.backend.spec()
             ))
         })?;
-        write_factors(w, shard, factors)
+        write_factors(w, shard, factors)?;
     }
+    Ok(())
 }
 
 fn write_factors(w: &mut Writer, shard: u16, m: &Matrix) -> Result<()> {
@@ -124,32 +165,64 @@ fn write_geomap(w: &mut Writer, shard: u16, g: &GeomapEngine) -> Result<()> {
     let base = &g.base;
     write_factors(w, shard, &base.items)?;
 
-    // index: the CSR arenas verbatim
+    // index: the arena verbatim — raw CSR or the packed block tables
     let idx = &base.index;
-    let buf = w.begin();
-    buf.extend_from_slice(&(idx.items() as u64).to_le_bytes());
-    buf.extend_from_slice(&(idx.dim() as u64).to_le_bytes());
-    buf.extend_from_slice(&(idx.offsets_arena().len() as u64).to_le_bytes());
-    buf.extend_from_slice(&(idx.postings_arena().len() as u64).to_le_bytes());
-    push_u32s(buf, idx.offsets_arena());
-    push_u32s(buf, idx.postings_arena());
-    w.end(SectionKind::Index, shard)?;
+    match idx.packed() {
+        None => {
+            let offsets = idx.offsets_arena().expect("raw arena");
+            let postings = idx.postings_arena().expect("raw arena");
+            let buf = w.begin();
+            buf.extend_from_slice(&(idx.items() as u64).to_le_bytes());
+            buf.extend_from_slice(&(idx.dim() as u64).to_le_bytes());
+            buf.extend_from_slice(&(offsets.len() as u64).to_le_bytes());
+            buf.extend_from_slice(&(postings.len() as u64).to_le_bytes());
+            push_u32s(buf, offsets);
+            push_u32s(buf, postings);
+            w.end(SectionKind::Index, shard)?;
+        }
+        Some(pk) => {
+            let (dofs, bwords, bfirst, bmax, binfo, words) = pk.arenas();
+            let buf = w.begin();
+            buf.extend_from_slice(&(pk.items() as u64).to_le_bytes());
+            buf.extend_from_slice(&(pk.dims() as u64).to_le_bytes());
+            buf.extend_from_slice(&(pk.total() as u64).to_le_bytes());
+            buf.extend_from_slice(&(pk.blocks() as u64).to_le_bytes());
+            buf.extend_from_slice(&(words.len() as u64).to_le_bytes());
+            push_u32s(buf, dofs);
+            push_u32s(buf, bwords);
+            push_u32s(buf, bfirst);
+            push_u32s(buf, bmax);
+            push_u32s(buf, binfo);
+            push_u32s(buf, words);
+            w.end(SectionKind::PackedIndex, shard)?;
+        }
+    }
 
-    // base map: id mapping + liveness. `base.row_of` only spans the
+    // base map: id mapping + liveness. An identity base keeps no
+    // materialised maps in memory, so they are synthesised here — the
+    // on-disk layout is identical either way. `row_of` only spans the
     // address space as of the last merge; ids appended since then live
     // in the delta, so the serialised map is padded to `addr` entries
     // (the pad value, u32::MAX, means "no base row" — exactly what the
     // runtime lookup concludes for an out-of-range id).
+    let n_rows = base.rows();
+    let ident_buf: Vec<u32>;
+    let (ids, row_of): (&[u32], &[u32]) = if base.identity {
+        ident_buf = (0..n_rows as u32).collect();
+        (&ident_buf, &ident_buf)
+    } else {
+        (&base.ids, &base.row_of)
+    };
     let buf = w.begin();
     buf.extend_from_slice(&(g.addr as u64).to_le_bytes());
-    buf.extend_from_slice(&(base.ids.len() as u64).to_le_bytes());
+    buf.extend_from_slice(&(n_rows as u64).to_le_bytes());
     buf.extend_from_slice(&(g.live as u64).to_le_bytes());
     buf.extend_from_slice(&(g.dead_rows as u64).to_le_bytes());
     buf.push(base.identity as u8);
     buf.extend_from_slice(&[0u8; 7]);
-    push_u32s(buf, &base.ids);
-    push_u32s(buf, &base.row_of);
-    for _ in base.row_of.len()..g.addr {
+    push_u32s(buf, ids);
+    push_u32s(buf, row_of);
+    for _ in row_of.len()..g.addr {
         push_u32s(buf, &[u32::MAX]);
     }
     push_bitmap(buf, &g.base_dead);
@@ -194,10 +267,46 @@ pub fn read_engine(r: &Reader, shard: u16) -> Result<Engine> {
     let factors = read_factors(r, shard)?;
     if spec.backend != Backend::Geomap {
         // baselines rebuild deterministically from factors + stored seed
+        // (quantization is deterministic too, so the rebuilt int8 tier
+        // is bit-identical to the one the snapshot carries)
         return spec.build(factors);
     }
     let g = read_geomap(r, shard, &spec, factors)?;
-    Ok(Engine::from_parts(spec, Box::new(g)))
+    let quant = if spec.quant.is_on() {
+        Some(read_quant(r, shard, g.addr, g.delta.k)?)
+    } else {
+        None
+    };
+    Ok(Engine::from_parts(spec, Box::new(g), quant))
+}
+
+/// Read and cross-validate the `quant` section of `shard`: the stored
+/// tier must mirror the engine's id space (`len`) and dimensionality.
+fn read_quant(
+    r: &Reader,
+    shard: u16,
+    len: usize,
+    k: usize,
+) -> Result<QuantizedFactorStore> {
+    let bytes = r.section(SectionKind::Quant, shard)?;
+    let mut c = Cursor::new(bytes, "quant");
+    let n = c.count("item")?;
+    let qk = c.count("factor dim")?;
+    let scales = cast_f32s(c.take(n.checked_mul(4).ok_or_else(|| {
+        GeomapError::Artifact("quant scale payload overflows".into())
+    })?)?)?;
+    let n_codes = n.checked_mul(qk).ok_or_else(|| {
+        GeomapError::Artifact("quant code payload overflows".into())
+    })?;
+    let codes: Vec<i8> = c.take(n_codes)?.iter().map(|&b| b as i8).collect();
+    c.done()?;
+    if n != len || qk != k {
+        return Err(GeomapError::Artifact(format!(
+            "quant tier covers {n} items of dim {qk} but the engine has \
+             {len} of dim {k}"
+        )));
+    }
+    QuantizedFactorStore::from_parts(qk, codes, scales)
 }
 
 fn read_factors(r: &Reader, shard: u16) -> Result<Matrix> {
@@ -226,16 +335,44 @@ fn read_geomap(
     let k = items.cols();
     let mapper = Mapper::from_config(spec.schema, k, spec.threshold);
 
-    // index
-    let bytes = r.section(SectionKind::Index, shard)?;
-    let mut c = Cursor::new(bytes, "index");
-    let idx_items = c.count("item")?;
-    let p = c.count("dimension")?;
-    let n_offsets = c.count("offset")?;
-    let n_postings = c.count("posting")?;
-    let offsets = cast_u32s(c.take(n_offsets * 4)?)?;
-    let postings = cast_u32s(c.take(n_postings * 4)?)?;
-    c.done()?;
+    // index: the section kind follows the spec's postings mode (a
+    // missing section means the snapshot disagrees with its own config)
+    let (index, idx_items, p) = match spec.postings {
+        PostingsMode::Raw => {
+            let bytes = r.section(SectionKind::Index, shard)?;
+            let mut c = Cursor::new(bytes, "index");
+            let idx_items = c.count("item")?;
+            let p = c.count("dimension")?;
+            let n_offsets = c.count("offset")?;
+            let n_postings = c.count("posting")?;
+            let offsets = cast_u32s(c.take(n_offsets * 4)?)?;
+            let postings = cast_u32s(c.take(n_postings * 4)?)?;
+            c.done()?;
+            let index =
+                InvertedIndex::from_raw_parts(offsets, postings, idx_items, p)?;
+            (index, idx_items, p)
+        }
+        PostingsMode::Packed => {
+            let bytes = r.section(SectionKind::PackedIndex, shard)?;
+            let mut c = Cursor::new(bytes, "packed-index");
+            let idx_items = c.count("item")?;
+            let p = c.count("dimension")?;
+            let total = c.count("posting")?;
+            let n_blocks = c.count("block")?;
+            let n_words = c.count("word")?;
+            let dofs = cast_u32s(c.take((p + 1) * 4)?)?;
+            let bwords = cast_u32s(c.take(n_blocks * 4)?)?;
+            let bfirst = cast_u32s(c.take(n_blocks * 4)?)?;
+            let bmax = cast_u32s(c.take(n_blocks * 4)?)?;
+            let binfo = cast_u32s(c.take(n_blocks * 4)?)?;
+            let words = cast_u32s(c.take(n_words * 4)?)?;
+            c.done()?;
+            let pk = PackedPostings::from_parts(
+                p, idx_items, total, dofs, bwords, bfirst, bmax, binfo, words,
+            )?;
+            (InvertedIndex::from_packed(pk), idx_items, p)
+        }
+    };
     if idx_items != items.rows() {
         return Err(GeomapError::Artifact(format!(
             "index covers {idx_items} items but factors have {}",
@@ -249,7 +386,6 @@ fn read_geomap(
             mapper.p()
         )));
     }
-    let index = InvertedIndex::from_raw_parts(offsets, postings, idx_items, p)?;
 
     // base map
     let bytes = r.section(SectionKind::BaseMap, shard)?;
@@ -417,6 +553,10 @@ fn read_geomap(
         row_of: d_row_of,
         nnz,
     };
+    // an identity base keeps its id maps implicit in memory (the
+    // serialised copies were only needed for validation above)
+    let (ids, row_of) =
+        if identity { (Vec::new(), Vec::new()) } else { (ids, row_of) };
     Ok(GeomapEngine {
         mapper: Arc::new(mapper),
         base: Arc::new(BaseSegment { index, items, ids, row_of, identity }),
@@ -427,6 +567,7 @@ fn read_geomap(
         addr,
         min_overlap: spec.min_overlap,
         mutation: spec.mutation,
+        postings: spec.postings,
     })
 }
 
@@ -442,11 +583,40 @@ mod tests {
             .threshold(1.25)
             .min_overlap(2)
             .seed(u64::MAX - 7)
-            .mutation(MutationConfig { max_delta: 77 });
+            .mutation(MutationConfig { max_delta: 77 })
+            .quant(QuantMode::Int8 { refine: 6 });
         let j = spec_to_json(&spec);
         let text = j.to_string_compact();
         let back = spec_from_json(&Json::parse(&text).unwrap()).unwrap();
         assert!(back.same_spec(&spec));
+        let spec = Engine::builder().postings(PostingsMode::Packed);
+        let back = spec_from_json(
+            &Json::parse(&spec_to_json(&spec).to_string_compact()).unwrap(),
+        )
+        .unwrap();
+        assert!(back.same_spec(&spec));
+    }
+
+    #[test]
+    fn v1_spec_without_quant_keys_defaults_off() {
+        // a pre-quantization snapshot config parses to the old defaults
+        let j = Json::parse(
+            r#"{"backend": "geomap", "schema": "ternary-parsetree",
+                "threshold": 0.5, "min_overlap": 1, "seed": "7",
+                "max_delta": 8}"#,
+        )
+        .unwrap();
+        let spec = spec_from_json(&j).unwrap();
+        assert!(spec.same_spec(
+            &Engine::builder()
+                .schema(SchemaConfig::TernaryParseTree)
+                .threshold(0.5)
+                .min_overlap(1)
+                .seed(7)
+                .mutation(MutationConfig { max_delta: 8 })
+                .quant(QuantMode::Off)
+                .postings(PostingsMode::Raw)
+        ));
     }
 
     #[test]

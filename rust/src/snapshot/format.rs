@@ -25,7 +25,12 @@
 //! Versioning policy (docs/SNAPSHOT.md): readers accept exactly the
 //! versions they know; an unknown *version* is an error, an unknown
 //! *section kind* within a known version is skipped (forward-compatible
-//! additions).
+//! additions). Each known section kind carries the minimum format
+//! version that defines it; a file whose header declares an older
+//! version but contains a newer kind is rejected as inconsistent. The
+//! [`Writer`] stamps the lowest version that covers the sections it
+//! actually wrote, so snapshots without version-2 state (quantized
+//! factors, packed postings) stay readable by version-1 readers.
 
 use crate::error::{GeomapError, Result};
 use std::fs::File;
@@ -33,8 +38,10 @@ use std::io::{Read, Seek, SeekFrom, Write as _};
 
 /// File magic, first four bytes of every snapshot.
 pub const MAGIC: [u8; 4] = *b"GSNP";
-/// Container format version this build writes and reads.
-pub const VERSION: u16 = 1;
+/// Newest container format version this build writes and reads.
+pub const VERSION: u16 = 2;
+/// Oldest format version this build still reads.
+pub const MIN_VERSION: u16 = 1;
 /// Payload alignment in bytes.
 pub const ALIGN: usize = 64;
 /// Fixed header size in bytes.
@@ -44,7 +51,7 @@ pub const ENTRY_LEN: usize = 32;
 /// Shard ordinal reserved for file-global sections.
 pub const GLOBAL_SHARD: u16 = u16::MAX;
 
-/// Section kinds of format version 1.
+/// Section kinds (codes 1–5: format version 1; 6–7: version 2).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum SectionKind {
     /// Engine/build configuration as JSON (round-trips through configx).
@@ -57,6 +64,10 @@ pub enum SectionKind {
     BaseMap,
     /// Delta segment (pending upserts) of the mutation state.
     Delta,
+    /// Int8 quantized factor tier (scales + codes), format v2.
+    Quant,
+    /// Bit-packed posting arena of the inverted index, format v2.
+    PackedIndex,
 }
 
 impl SectionKind {
@@ -68,6 +79,8 @@ impl SectionKind {
             SectionKind::Index => 3,
             SectionKind::BaseMap => 4,
             SectionKind::Delta => 5,
+            SectionKind::Quant => 6,
+            SectionKind::PackedIndex => 7,
         }
     }
 
@@ -79,7 +92,23 @@ impl SectionKind {
             3 => Some(SectionKind::Index),
             4 => Some(SectionKind::BaseMap),
             5 => Some(SectionKind::Delta),
+            6 => Some(SectionKind::Quant),
+            7 => Some(SectionKind::PackedIndex),
             _ => None,
+        }
+    }
+
+    /// The format version that introduced this kind; a writer holding
+    /// such a section stamps at least this version, and a reader rejects
+    /// a file whose declared version predates a kind it contains.
+    pub fn min_version(self) -> u16 {
+        match self {
+            SectionKind::Config
+            | SectionKind::Factors
+            | SectionKind::Index
+            | SectionKind::BaseMap
+            | SectionKind::Delta => 1,
+            SectionKind::Quant | SectionKind::PackedIndex => 2,
         }
     }
 
@@ -91,6 +120,8 @@ impl SectionKind {
             SectionKind::Index => "index",
             SectionKind::BaseMap => "base-map",
             SectionKind::Delta => "delta",
+            SectionKind::Quant => "quant",
+            SectionKind::PackedIndex => "packed-index",
         }
     }
 }
@@ -352,6 +383,8 @@ pub struct Writer {
     buf: Vec<u8>,
     entries: Vec<SectionEntry>,
     pos: u64,
+    /// Lowest format version covering every section written so far.
+    version: u16,
 }
 
 impl Writer {
@@ -366,6 +399,7 @@ impl Writer {
             buf: Vec::new(),
             entries: Vec::new(),
             pos: HEADER_LEN as u64,
+            version: MIN_VERSION,
         })
     }
 
@@ -375,8 +409,15 @@ impl Writer {
         &mut self.buf
     }
 
+    /// The format version the header will stamp, given the sections
+    /// committed so far (the lowest version covering all of them).
+    pub fn version(&self) -> u16 {
+        self.version
+    }
+
     /// Commit the buffered payload as a `(kind, shard)` section.
     pub fn end(&mut self, kind: SectionKind, shard: u16) -> Result<()> {
+        self.version = self.version.max(kind.min_version());
         let offset = self.pad_to_align()?;
         let path = &self.path;
         self.file
@@ -424,7 +465,7 @@ impl Writer {
 
         let mut header = [0u8; HEADER_LEN];
         header[0..4].copy_from_slice(&MAGIC);
-        header[4..6].copy_from_slice(&VERSION.to_le_bytes());
+        header[4..6].copy_from_slice(&self.version.to_le_bytes());
         header[6..8].copy_from_slice(&0u16.to_le_bytes()); // flags
         header[8..12].copy_from_slice(&(self.entries.len() as u32).to_le_bytes());
         header[12..20].copy_from_slice(&table_offset.to_le_bytes());
@@ -487,10 +528,10 @@ impl Reader {
             )));
         }
         let version = u16::from_le_bytes(bytes[4..6].try_into().unwrap());
-        if version != VERSION {
+        if !(MIN_VERSION..=VERSION).contains(&version) {
             return Err(GeomapError::Artifact(format!(
                 "{path}: unsupported snapshot version {version} (this build \
-                 reads version {VERSION})"
+                 reads versions {MIN_VERSION}..={VERSION})"
             )));
         }
         let count =
@@ -542,6 +583,18 @@ impl Reader {
                     section_name(e.kind),
                     e.shard
                 )));
+            }
+            // a section kind newer than the declared format version is a
+            // mutilated or forged header, not a forward-compat skip
+            if let Some(kind) = SectionKind::from_code(e.kind) {
+                if kind.min_version() > version {
+                    return Err(GeomapError::Artifact(format!(
+                        "{path}: section '{}' requires format version {} \
+                         but the header declares version {version}",
+                        kind.name(),
+                        kind.min_version()
+                    )));
+                }
             }
             entries.push(e);
         }
@@ -646,7 +699,8 @@ mod tests {
         assert_eq!(len, std::fs::metadata(&path).unwrap().len());
 
         let r = Reader::open(&path).unwrap();
-        assert_eq!(r.version(), VERSION);
+        // no v2 sections were written, so the file stamps version 1
+        assert_eq!(r.version(), MIN_VERSION);
         assert_eq!(r.entries().len(), 3);
         assert_eq!(
             r.section(SectionKind::Config, GLOBAL_SHARD).unwrap(),
@@ -710,6 +764,47 @@ mod tests {
         std::fs::write(&path, &bytes).unwrap();
         let err = Reader::open(&path).unwrap_err().to_string();
         assert!(err.contains("version 99"), "{err}");
+    }
+
+    #[test]
+    fn writer_stamps_minimum_covering_version() {
+        // v2 sections raise the stamped version; their absence keeps the
+        // file readable by version-1 readers
+        let path = tmp("v2.gsnp");
+        let mut w = Writer::create(&path).unwrap();
+        w.begin().extend_from_slice(b"{}");
+        w.end(SectionKind::Config, GLOBAL_SHARD).unwrap();
+        let buf = w.begin();
+        push_f32s(buf, &[1.0]);
+        buf.push(0);
+        w.end(SectionKind::Quant, 0).unwrap();
+        w.finish().unwrap();
+        let r = Reader::open(&path).unwrap();
+        assert_eq!(r.version(), 2);
+        assert_eq!(
+            SectionKind::from_code(r.entries()[1].kind),
+            Some(SectionKind::Quant)
+        );
+    }
+
+    #[test]
+    fn v1_header_with_v2_section_rejected() {
+        // an old reader must never half-read quantized state; symmetric
+        // here: a v1-declared file *containing* a v2 kind is inconsistent
+        let path = tmp("forged-v1.gsnp");
+        let mut w = Writer::create(&path).unwrap();
+        w.begin().extend_from_slice(b"payload");
+        w.end(SectionKind::PackedIndex, 0).unwrap();
+        w.finish().unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        assert_eq!(bytes[4], 2, "packed-index must have stamped v2");
+        bytes[4] = 1; // forge the header back to version 1
+        std::fs::write(&path, &bytes).unwrap();
+        let err = Reader::open(&path).unwrap_err().to_string();
+        assert!(
+            err.contains("packed-index") && err.contains("version"),
+            "{err}"
+        );
     }
 
     #[test]

@@ -3,10 +3,12 @@
 //! rebuild, `min_overlap > 1` semantics, and scratch survival across
 //! catalogue growth.
 
-use geomap::configx::{Backend, MutationConfig, SchemaConfig, ServeConfig};
+use geomap::configx::{
+    Backend, MutationConfig, PostingsMode, QuantMode, SchemaConfig, ServeConfig,
+};
 use geomap::coordinator::Coordinator;
 use geomap::embedding::Mapper;
-use geomap::engine::Engine;
+use geomap::engine::{Engine, SourceScratch};
 use geomap::linalg::ops::dot;
 use geomap::linalg::Matrix;
 use geomap::retrieval::Retriever;
@@ -37,6 +39,8 @@ fn serve_cfg(k: usize, shards: usize, backend: Backend) -> ServeConfig {
         threshold: 0.0,
         backend,
         mutation: MutationConfig::default(),
+        quant: QuantMode::Off,
+        postings: PostingsMode::Raw,
         checkpoint: None,
     }
 }
@@ -319,4 +323,127 @@ fn coordinator_serves_mutations_live() {
     assert_eq!(resp.total_items, 101);
     assert_eq!(resp.results[0].id, 100, "appended item must be served");
     coord.shutdown();
+}
+
+/// Satellite coverage: one `SourceScratch` warmed on the initial
+/// catalogue keeps producing correct candidates after upserts grow the
+/// id space far past the scratch's initial counter capacity (the
+/// `QueryScratch::ensure` growth path), with clean counters across
+/// reuse.
+#[test]
+fn query_scratch_grows_past_initial_capacity_on_upserts() {
+    let k = 8;
+    let n0 = 16usize;
+    let spec = Engine::builder()
+        .schema(SchemaConfig::TernaryParseTree)
+        .threshold(0.0)
+        .mutation(MutationConfig { max_delta: 24 }); // merges fire mid-churn
+    let mut engine = spec.build(items(n0, k, 11)).unwrap();
+    let mut scratch = SourceScratch::new();
+    let mut out = Vec::new();
+    // warm the scratch on the small catalogue
+    engine
+        .candidates_into(&user(k, 800), &mut scratch, &mut out)
+        .unwrap();
+    // grow 10x past the initial capacity through the append edge,
+    // re-querying with the same scratch as the id space expands
+    for id in n0 as u32..(10 * n0) as u32 {
+        engine.upsert(id, &user(k, 900 + id as u64)).unwrap();
+        if id % 13 == 0 {
+            engine
+                .candidates_into(&user(k, 1000 + id as u64), &mut scratch, &mut out)
+                .unwrap();
+            assert!(out.iter().all(|&c| c <= id), "candidate beyond edge");
+        }
+    }
+    assert_eq!(engine.len(), 10 * n0);
+    // the warmed scratch agrees exactly with a fresh one
+    for s in 0..15u64 {
+        let u = user(k, 1100 + s);
+        engine.candidates_into(&u, &mut scratch, &mut out).unwrap();
+        let mut fresh = SourceScratch::new();
+        let mut fresh_out = Vec::new();
+        engine
+            .candidates_into(&u, &mut fresh, &mut fresh_out)
+            .unwrap();
+        assert_eq!(out, fresh_out, "stale counters after growth");
+    }
+}
+
+/// The compressed serving tier behind the coordinator: a quantized +
+/// packed geomap engine serves through the full batched path, every
+/// returned score is still an exact f32 inner product, and mutation
+/// semantics (upsert wins, remove disappears) hold end to end.
+#[test]
+fn quantized_packed_engine_serves_through_coordinator() {
+    let k = 16;
+    let catalogue = items(300, k, 12);
+    let mut cfg = serve_cfg(k, 2, Backend::Geomap);
+    cfg.schema = SchemaConfig::TernaryOneHot;
+    cfg.quant = QuantMode::Int8 { refine: 4 };
+    cfg.postings = PostingsMode::Packed;
+    let coord =
+        Coordinator::start(cfg, catalogue.clone(), cpu_scorer_factory())
+            .unwrap();
+    for s in 0..10u64 {
+        let u = user(k, 1200 + s);
+        let resp = coord.submit(u.clone(), 5).unwrap();
+        for w in resp.results.windows(2) {
+            assert!(w[0].score >= w[1].score);
+        }
+        for r in &resp.results {
+            let exact = dot(&u, catalogue.row(r.id as usize));
+            assert!(
+                (r.score - exact).abs() < 1e-5,
+                "quantized tier must refine to exact scores"
+            );
+        }
+    }
+    // mutations flow through both tiers
+    let probe = user(k, 1300);
+    let mut boosted = probe.clone();
+    for v in boosted.iter_mut() {
+        *v *= 10.0;
+    }
+    coord.upsert(7, &boosted).unwrap();
+    let resp = coord.submit(probe.clone(), 3).unwrap();
+    assert_eq!(resp.results[0].id, 7, "upserted factor must win");
+    assert!(coord.remove(7).unwrap().1);
+    for _ in 0..5 {
+        let resp = coord.submit(probe.clone(), 100).unwrap();
+        assert!(resp.results.iter().all(|r| r.id != 7));
+    }
+    coord.shutdown();
+}
+
+/// Quantized recall sanity at the engine level: against the exact f32
+/// engine over the same candidates, int8 + refine recovers ≥ 99% of the
+/// true top-10 on a gaussian catalogue.
+#[test]
+fn quantized_recall_stays_within_one_percent() {
+    let k = 32;
+    let catalogue = items(2000, k, 13);
+    let exact = Engine::builder()
+        .schema(SchemaConfig::TernaryOneHot)
+        .threshold(0.5)
+        .build(catalogue.clone())
+        .unwrap();
+    let quantized = Engine::builder()
+        .schema(SchemaConfig::TernaryOneHot)
+        .threshold(0.5)
+        .quant(QuantMode::Int8 { refine: 4 })
+        .build(catalogue)
+        .unwrap();
+    let (mut hits, mut total) = (0usize, 0usize);
+    for s in 0..50u64 {
+        let u = user(k, 1400 + s);
+        let want: Vec<u32> =
+            exact.top_k(&u, 10).unwrap().iter().map(|r| r.id).collect();
+        let got: Vec<u32> =
+            quantized.top_k(&u, 10).unwrap().iter().map(|r| r.id).collect();
+        total += want.len();
+        hits += want.iter().filter(|id| got.contains(id)).count();
+    }
+    let recall = hits as f64 / total as f64;
+    assert!(recall >= 0.99, "recall@10 = {recall:.4} (want >= 0.99)");
 }

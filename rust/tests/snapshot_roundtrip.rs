@@ -265,3 +265,138 @@ fn coordinator_checkpoint_and_warm_start_serve_identically() {
     }
     warm.shutdown();
 }
+
+/// The compressed tier round-trips without requantising: a quantized +
+/// packed engine (with pending mutation state) loads back byte-exact —
+/// candidates, ids, and scores — and the loaded engine keeps mutating;
+/// an old reader's format gate is exercised via the version stamp.
+#[test]
+fn quantized_packed_engine_roundtrips_byte_exact() {
+    use geomap::configx::{PostingsMode, QuantMode, SchemaConfig};
+    let k = 16;
+    let mut built = Engine::builder()
+        .schema(SchemaConfig::TernaryOneHot)
+        .threshold(0.5)
+        .quant(QuantMode::Int8 { refine: 4 })
+        .postings(PostingsMode::Packed)
+        .mutation(MutationConfig { max_delta: 0 })
+        .build(items(250, k, 40))
+        .unwrap();
+    // leave delta + tombstone state pending so every section is non-trivial
+    let f = users(1, k, 41).pop().unwrap();
+    built.upsert(11, &f).unwrap();
+    built.upsert(250, &f).unwrap();
+    built.remove(42).unwrap();
+
+    let path = tmp("quant-packed.gsnp");
+    built.save_snapshot(&path).unwrap();
+
+    // the container self-describes as format v2 with both new sections
+    let info = snapshot::inspect(&path).unwrap();
+    assert_eq!(info.format_version, 2);
+    let kinds: Vec<&str> =
+        info.sections.iter().map(|s| s.kind.as_str()).collect();
+    assert!(kinds.contains(&"quant") && kinds.contains(&"packed-index"));
+    assert!(!info.compression.is_empty());
+
+    let mut loaded = Engine::builder().from_snapshot(&path).unwrap();
+    assert!(loaded.spec().same_spec(&built.spec()));
+    assert!(loaded.quant_store().is_some(), "tier must load, not rebuild");
+    let (sb, sl) = (built.stats(), loaded.stats());
+    assert_eq!(sl.memory_bytes, sb.memory_bytes, "scan tier bytes drifted");
+    assert_eq!(sl.refine_bytes, sb.refine_bytes);
+    assert_identical(&built, &loaded, k, 400);
+
+    // and the loaded engine keeps mutating through both tiers
+    built.merge().unwrap();
+    loaded.merge().unwrap();
+    assert_identical(&built, &loaded, k, 500);
+    let g = users(1, k, 42).pop().unwrap();
+    built.upsert(100, &g).unwrap();
+    loaded.upsert(100, &g).unwrap();
+    assert_identical(&built, &loaded, k, 600);
+}
+
+/// Explicit quant/postings builder overrides conflict with a snapshot's
+/// recorded spec by error, never silently.
+#[test]
+fn quant_and_postings_overrides_conflict_by_error() {
+    use geomap::configx::{PostingsMode, QuantMode};
+    let engine = Engine::builder()
+        .quant(QuantMode::Int8 { refine: 4 })
+        .build(items(60, 8, 43))
+        .unwrap();
+    let path = tmp("quant-conflict.gsnp");
+    engine.save_snapshot(&path).unwrap();
+    let err = Engine::builder()
+        .quant(QuantMode::Off)
+        .from_snapshot(&path)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("quant"), "{err}");
+    let err = Engine::builder()
+        .postings(PostingsMode::Packed)
+        .from_snapshot(&path)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("postings"), "{err}");
+    // untouched defaults defer to the snapshot
+    let loaded = Engine::builder().from_snapshot(&path).unwrap();
+    assert!(loaded.quant_store().is_some());
+}
+
+/// A sharded coordinator serving the compressed tier warm-starts from
+/// its checkpoint with identical responses (the cpu scorer drives the
+/// quantized rescore path end to end).
+#[test]
+fn quantized_coordinator_warm_starts_identically() {
+    use geomap::configx::{PostingsMode, QuantMode, SchemaConfig};
+    let k = 16;
+    let mut cfg = ServeConfig {
+        k,
+        kappa: 6,
+        max_batch: 8,
+        max_wait_us: 200,
+        shards: 2,
+        queue_cap: 256,
+        use_xla: false,
+        threshold: 0.5,
+        schema: SchemaConfig::TernaryOneHot,
+        ..ServeConfig::default()
+    };
+    cfg.quant = QuantMode::Int8 { refine: 4 };
+    cfg.postings = PostingsMode::Packed;
+    let coord = Coordinator::start(
+        cfg.clone(),
+        items(220, k, 44),
+        cpu_scorer_factory(),
+    )
+    .unwrap();
+    coord.remove(13).unwrap();
+    let f = users(1, k, 45).pop().unwrap();
+    coord.upsert(220, &f).unwrap();
+    let path = tmp("quant-coord.gsnp");
+    let saved = coord.save_snapshot(&path).unwrap();
+
+    let probes = users(8, k, 46);
+    let want: Vec<_> = probes
+        .iter()
+        .map(|u| coord.submit(u.clone(), 6).unwrap())
+        .collect();
+    coord.shutdown();
+
+    let warm =
+        Coordinator::start_from_snapshot(cfg, &path, cpu_scorer_factory())
+            .unwrap();
+    assert_eq!(warm.version(), saved);
+    for (u, w) in probes.iter().zip(&want) {
+        let got = warm.submit(u.clone(), 6).unwrap();
+        assert_eq!(got.candidates, w.candidates);
+        assert_eq!(
+            got.results.iter().map(|s| (s.id, s.score)).collect::<Vec<_>>(),
+            w.results.iter().map(|s| (s.id, s.score)).collect::<Vec<_>>(),
+            "quantized warm start must serve byte-identical results"
+        );
+    }
+    warm.shutdown();
+}
