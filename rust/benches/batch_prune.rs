@@ -1,0 +1,108 @@
+//! Batched (term-major) vs per-query candidate generation — the ISSUE 4
+//! acceptance gate.
+//!
+//! For each posting arena (raw CSR, bit-packed) the bench sweeps batch
+//! sizes B ∈ {1, 2, 4, 8, 16, 32}, timing candidate generation only
+//! (map + index walk + emission; no rescoring), and prints the
+//! term-major speed-up per B. The per-query path streams every posting
+//! list — and bit-unpacks every packed block — once **per query**; the
+//! term-major walk does it once **per batch**, accumulating all lanes'
+//! overlap counts in one row-major counter arena while each posting
+//! list is hot.
+//!
+//! Gate: at B = 32 on the **packed** arena the term-major path must
+//! deliver ≥ 1.5× the candidate-generation throughput of the per-query
+//! path. (The raw arena profits less — no decode to amortise — and is
+//! reported for scaling context only.)
+//!
+//! ```bash
+//! cargo bench --bench batch_prune
+//! GEOMAP_BENCH_FAST=1 cargo bench --bench batch_prune   # CI-sized
+//! ```
+
+mod common;
+
+use geomap::bench::{black_box, Bencher};
+use geomap::configx::{PostingsMode, SchemaConfig};
+use geomap::engine::{BatchCandidates, Engine, SourceScratch};
+use geomap::linalg::Matrix;
+use geomap::testing::fix;
+
+const GATE_B: usize = 32;
+const GATE_SPEEDUP: f64 = 1.5;
+
+fn main() {
+    let fast = common::fast();
+    // one-hot schema: p = 3k, long dense posting lists — the regime the
+    // packed arena (and its per-batch decode amortisation) serves
+    let (n_items, n_users, k) =
+        if fast { (4096, 256, 16) } else { (16384, 512, 16) };
+    let items = fix::items(n_items, k, 42);
+    let users = fix::users(n_users, k, 43);
+    let mut b = Bencher::from_env();
+
+    let mut gate: Option<f64> = None;
+    for (arena, postings) in
+        [("raw", PostingsMode::Raw), ("packed", PostingsMode::Packed)]
+    {
+        let engine = Engine::builder()
+            .schema(SchemaConfig::TernaryOneHot)
+            .threshold(0.5)
+            .postings(postings)
+            .build(items.clone())
+            .unwrap();
+        b.group(&format!(
+            "candidate generation, {arena} postings ({n_items} items, k={k})"
+        ));
+        for bsz in [1usize, 2, 4, 8, 16, 32] {
+            let blocks: Vec<Matrix> = (0..n_users / bsz)
+                .map(|i| users.slice_rows(i * bsz, (i + 1) * bsz))
+                .collect();
+            let mut scratch = SourceScratch::new();
+            let mut cand = BatchCandidates::new();
+            let mut i = 0usize;
+            b.bench(&format!("per-query  B={bsz:>3}"), bsz, || {
+                engine
+                    .candidates_batch_seq(
+                        &blocks[i % blocks.len()],
+                        &mut scratch,
+                        &mut cand,
+                    )
+                    .unwrap();
+                black_box(cand.all_ids().len());
+                i += 1;
+            });
+            let seq_ns = b.results().last().unwrap().mean_ns();
+            let mut j = 0usize;
+            b.bench(&format!("term-major B={bsz:>3}"), bsz, || {
+                engine
+                    .candidates_batch_into(
+                        &blocks[j % blocks.len()],
+                        &mut scratch,
+                        &mut cand,
+                    )
+                    .unwrap();
+                black_box(cand.all_ids().len());
+                j += 1;
+            });
+            let batch_ns = b.results().last().unwrap().mean_ns();
+            let speedup = seq_ns / batch_ns;
+            println!("   B={bsz:>3}: term-major {speedup:.2}x per-query");
+            if arena == "packed" && bsz == GATE_B {
+                gate = Some(speedup);
+            }
+        }
+    }
+
+    let speedup = gate.expect("gate point (packed, B=32) must have run");
+    println!(
+        "\nB={GATE_B} packed arena: term-major batch = {speedup:.2}x the \
+         per-query path (gate: ≥ {GATE_SPEEDUP}x)"
+    );
+    assert!(
+        speedup >= GATE_SPEEDUP,
+        "batched candidate generation must be ≥{GATE_SPEEDUP}x the \
+         per-query path at B={GATE_B} on the packed arena (got \
+         {speedup:.2}x)"
+    );
+}

@@ -3,25 +3,23 @@
 //! paper table/figure *and* times its pipeline stages.
 #![allow(dead_code)] // each bench target uses a subset of these helpers
 
-use geomap::data::{gaussian_factors, MovieLensSynth};
+use geomap::data::MovieLensSynth;
 use geomap::linalg::Matrix;
 use geomap::mf::AlsTrainer;
 use geomap::rng::Rng;
+use geomap::testing::fix;
 
 /// True when `GEOMAP_BENCH_FAST=1` (CI-sized workloads).
 pub fn fast() -> bool {
     std::env::var("GEOMAP_BENCH_FAST").as_deref() == Ok("1")
 }
 
-/// The §6.1 synthetic workload (fig 2): N(0,1) users/items.
+/// The §6.1 synthetic workload (fig 2): N(0,1) users/items, drawn from
+/// the shared fixture API (stream-identical to the historical draw).
 pub fn synthetic_workload() -> (Matrix, Matrix) {
     let (n_users, n_items, k) =
         if fast() { (64, 512, 16) } else { (512, 4096, 32) };
-    let mut rng = Rng::seeded(42);
-    (
-        gaussian_factors(&mut rng, n_users, k),
-        gaussian_factors(&mut rng, n_items, k),
-    )
+    fix::workload(n_users, n_items, k, 42)
 }
 
 /// The §6.2 MovieLens workload (fig 3): ALS k=16 factors from a

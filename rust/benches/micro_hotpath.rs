@@ -5,6 +5,8 @@
 //! * inverted-index query (allocation-free path),
 //! * engine candidate retrieval (geomap + baselines through the unified
 //!   `CandidateSource` scratch API),
+//! * batched term-major candidate generation vs the per-query loop
+//!   (both posting arenas; the ≥1.5× gate is in benches/batch_prune.rs),
 //! * exact rescoring GEMM (pure rust vs PJRT executable),
 //! * per-batch worker processing (prune + union + batched score), and
 //! * shard top-κ merge.
@@ -23,10 +25,10 @@
 mod common;
 
 use geomap::bench::{black_box, Bencher};
-use geomap::configx::{Backend, SchemaConfig};
+use geomap::configx::{Backend, PostingsMode, SchemaConfig};
 use geomap::coordinator::{merge_topk, process_batch, FactorStore, WorkerScratch};
 use geomap::embedding::Mapper;
-use geomap::engine::{Engine, SourceScratch};
+use geomap::engine::{BatchCandidates, Engine, SourceScratch};
 use geomap::index::{InvertedIndex, QueryScratch};
 use geomap::linalg::Matrix;
 use geomap::retrieval::Scored;
@@ -187,6 +189,45 @@ fn main() {
         }
     }
 
+    // ---- L3: batched (term-major) candidate generation ------------------
+    // One index walk for the whole batch vs the per-query reference
+    // loop, on both posting arenas. The ≥1.5× packed-arena gate lives
+    // in benches/batch_prune.rs; this group just tracks the stages.
+    b.group("batched candidate generation (B=32)");
+    let qb = users.slice_rows(0, users.rows().min(32));
+    for (arena, postings) in
+        [("raw", PostingsMode::Raw), ("packed", PostingsMode::Packed)]
+    {
+        let engine = Engine::builder()
+            .schema(SchemaConfig::TernaryParseTree)
+            .threshold(1.3)
+            .postings(postings)
+            .build(items.clone())
+            .unwrap();
+        let mut scratch = SourceScratch::new();
+        let mut cand = BatchCandidates::new();
+        // steady-state allocation audit: after warm-up the term-major
+        // walk allocates only the per-query φ maps, exactly like the
+        // sequential path — report the per-batch count for tracking
+        engine.candidates_batch_into(&qb, &mut scratch, &mut cand).unwrap();
+        let before = alloc_events();
+        engine.candidates_batch_into(&qb, &mut scratch, &mut cand).unwrap();
+        let per_batch = alloc_events() - before;
+        b.bench(&format!("term-major batch ({arena})"), qb.rows(), || {
+            engine
+                .candidates_batch_into(&qb, &mut scratch, &mut cand)
+                .unwrap();
+            black_box(cand.all_ids().len());
+        });
+        println!("   [alloc audit] {per_batch} allocation events/batch");
+        b.bench(&format!("per-query loop  ({arena})"), qb.rows(), || {
+            engine
+                .candidates_batch_seq(&qb, &mut scratch, &mut cand)
+                .unwrap();
+            black_box(cand.all_ids().len());
+        });
+    }
+
     // ---- L2/L1: rescoring backends -------------------------------------
     b.group("exact rescoring (B=32 tile=2048)");
     let mut rng = Rng::seeded(9);
@@ -240,8 +281,15 @@ fn main() {
     let shard = &snap.shards[0];
     let mut wscratch = WorkerScratch::new(shard.items());
     let ub32 = Matrix::gaussian(&mut rng, 32, k, 1.0);
-    b.bench("process_batch cpu", 32, || {
-        let p = process_batch(shard, &ub32, 10, &CpuScorer, &mut wscratch).unwrap();
+    b.bench("process_batch cpu (batch_prune on)", 32, || {
+        let p = process_batch(shard, &ub32, 10, &CpuScorer, &mut wscratch, true)
+            .unwrap();
+        black_box(p.per_request.len());
+    });
+    b.bench("process_batch cpu (batch_prune off)", 32, || {
+        let p =
+            process_batch(shard, &ub32, 10, &CpuScorer, &mut wscratch, false)
+                .unwrap();
         black_box(p.per_request.len());
     });
 

@@ -392,8 +392,26 @@ pub struct ServeConfig {
     pub quant: QuantMode,
     /// Posting-list storage of the geomap inverted index.
     pub postings: PostingsMode,
+    /// Batched (term-major) candidate generation in the shard workers:
+    /// the whole request batch is pruned in one index walk, decoding
+    /// each packed posting block at most once per batch. `off` is the
+    /// per-request reference loop — an escape hatch, not a different
+    /// answer: candidate sets and top-κ are identical either way (see
+    /// docs/ENGINE.md §Batched retrieval).
+    pub batch_prune: bool,
     /// Background snapshot checkpointing (`None` disables it).
     pub checkpoint: Option<CheckpointConfig>,
+}
+
+/// Parse an `on`/`off` toggle (the `batch_prune` knob's CLI/JSON form).
+pub fn parse_on_off(s: &str, key: &str) -> Result<bool> {
+    match s {
+        "on" => Ok(true),
+        "off" => Ok(false),
+        _ => Err(GeomapError::Config(format!(
+            "{key} must be 'on' or 'off' (got '{s}')"
+        ))),
+    }
 }
 
 impl Default for ServeConfig {
@@ -413,6 +431,7 @@ impl Default for ServeConfig {
             mutation: MutationConfig::default(),
             quant: QuantMode::Off,
             postings: PostingsMode::Raw,
+            batch_prune: true,
             checkpoint: None,
         }
     }
@@ -500,6 +519,9 @@ impl ServeConfig {
         }
         if let Some(v) = j.opt("postings") {
             c.postings = PostingsMode::parse(v.as_str()?)?;
+        }
+        if let Some(v) = j.opt("batch_prune") {
+            c.batch_prune = parse_on_off(v.as_str()?, "batch_prune")?;
         }
         if let Some(v) = j.opt("checkpoint_dir") {
             let mut ck = CheckpointConfig {
@@ -737,6 +759,23 @@ mod tests {
         )
         .unwrap();
         assert!(ServeConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn batch_prune_knob_parses_and_defaults_on() {
+        assert!(ServeConfig::default().batch_prune, "batched by default");
+        let j = Json::parse(r#"{"batch_prune": "off"}"#).unwrap();
+        assert!(!ServeConfig::from_json(&j).unwrap().batch_prune);
+        let j = Json::parse(r#"{"batch_prune": "on"}"#).unwrap();
+        assert!(ServeConfig::from_json(&j).unwrap().batch_prune);
+        // only the canonical on|off forms are accepted
+        for bad in [r#"{"batch_prune": "true"}"#, r#"{"batch_prune": "1"}"#] {
+            let j = Json::parse(bad).unwrap();
+            assert!(ServeConfig::from_json(&j).is_err(), "{bad}");
+        }
+        assert!(parse_on_off("on", "x").unwrap());
+        assert!(!parse_on_off("off", "x").unwrap());
+        assert!(parse_on_off("On", "x").is_err());
     }
 
     #[test]

@@ -185,6 +185,93 @@ mod tests {
     }
 
     #[test]
+    fn close_racing_the_linger_flushes_the_partial_batch() {
+        // a consumer holding a partial batch inside the phase-2 window
+        // must return it promptly when the queue closes — not sleep out
+        // the rest of a long batching window
+        let q = Arc::new(BoundedQueue::new(8));
+        let q2 = Arc::clone(&q);
+        let consumer = std::thread::spawn(move || {
+            let t = Instant::now();
+            (q2.pop_batch(8, Duration::from_secs(30)), t.elapsed())
+        });
+        q.push(1).unwrap();
+        // give the consumer a chance to enter the linger with item 1
+        std::thread::sleep(Duration::from_millis(30));
+        q.close();
+        let (batch, waited) = consumer.join().unwrap();
+        assert_eq!(batch, Some(vec![1]), "close must flush, not drop");
+        assert!(
+            waited < Duration::from_secs(10),
+            "close must cut the 30s linger short (waited {waited:?})"
+        );
+        // after the flush, the closed empty queue reports shutdown
+        assert!(q.pop_batch(8, Duration::ZERO).is_none());
+    }
+
+    #[test]
+    fn zero_wait_drains_nonempty_queue_without_blocking() {
+        let q = BoundedQueue::new(8);
+        for i in 0..5 {
+            q.push(i).unwrap();
+        }
+        let t = Instant::now();
+        // max_wait = ZERO with items present: immediate FIFO prefix
+        assert_eq!(q.pop_batch(3, Duration::ZERO).unwrap(), vec![0, 1, 2]);
+        // and a under-full batch returns without any linger
+        assert_eq!(q.pop_batch(8, Duration::ZERO).unwrap(), vec![3, 4]);
+        assert!(
+            t.elapsed() < Duration::from_secs(2),
+            "ZERO window must never block on an empty linger"
+        );
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn fifo_order_preserved_per_producer_under_concurrency() {
+        const PRODUCERS: u32 = 4;
+        const PER: u32 = 200;
+        let q = Arc::new(BoundedQueue::new(4096));
+        let producers: Vec<_> = (0..PRODUCERS)
+            .map(|p| {
+                let q = Arc::clone(&q);
+                std::thread::spawn(move || {
+                    for i in 0..PER {
+                        loop {
+                            match q.push((p, i)) {
+                                Ok(()) => break,
+                                Err(PushError::Full) => {
+                                    std::thread::yield_now()
+                                }
+                                Err(PushError::Closed) => {
+                                    panic!("queue closed mid-test")
+                                }
+                            }
+                        }
+                    }
+                })
+            })
+            .collect();
+        let mut drained: Vec<(u32, u32)> = Vec::new();
+        while drained.len() < (PRODUCERS * PER) as usize {
+            if let Some(b) = q.pop_batch(64, Duration::from_millis(1)) {
+                drained.extend(b);
+            }
+        }
+        for h in producers {
+            h.join().unwrap();
+        }
+        // batches drain from the queue front, so each producer's items
+        // appear in exactly its push order across batch boundaries
+        let mut next = [0u32; PRODUCERS as usize];
+        for (p, i) in drained {
+            assert_eq!(i, next[p as usize], "producer {p} reordered");
+            next[p as usize] += 1;
+        }
+        assert!(next.iter().all(|&n| n == PER), "items lost: {next:?}");
+    }
+
+    #[test]
     fn consumer_wakes_on_close() {
         let q: Arc<BoundedQueue<u32>> = Arc::new(BoundedQueue::new(4));
         let q2 = Arc::clone(&q);

@@ -175,10 +175,11 @@ impl Coordinator {
             let (tx, rx) = mpsc::channel::<Job>();
             job_txs.push(tx);
             let factory = Arc::clone(&factory);
+            let batch_prune = cfg.batch_prune;
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("geomap-worker-{w}"))
-                    .spawn(move || worker_loop(rx, factory))
+                    .spawn(move || worker_loop(rx, factory, batch_prune))
                     .expect("spawn worker"),
             );
         }
@@ -349,7 +350,11 @@ impl Drop for Coordinator {
     }
 }
 
-fn worker_loop(rx: mpsc::Receiver<Job>, factory: ScorerFactory) {
+fn worker_loop(
+    rx: mpsc::Receiver<Job>,
+    factory: ScorerFactory,
+    batch_prune: bool,
+) {
     let scorer = factory();
     let mut scratch: Option<WorkerScratch> = None;
     while let Ok(job) = rx.recv() {
@@ -358,7 +363,14 @@ fn worker_loop(rx: mpsc::Receiver<Job>, factory: ScorerFactory) {
                 let s = scratch.get_or_insert_with(|| {
                     WorkerScratch::new(job.shard.items())
                 });
-                process_batch(&job.shard, &job.users, job.kappa, scorer.as_ref(), s)
+                process_batch(
+                    &job.shard,
+                    &job.users,
+                    job.kappa,
+                    scorer.as_ref(),
+                    s,
+                    batch_prune,
+                )
             }
             Err(e) => Err(GeomapError::Rejected(format!(
                 "scorer construction failed: {e}"
@@ -491,6 +503,7 @@ mod tests {
     use crate::retrieval::brute_force_top_k;
     use crate::rng::Rng;
     use crate::runtime::cpu_scorer_factory;
+    use crate::testing::fix::items;
 
     fn test_cfg(k: usize, shards: usize) -> ServeConfig {
         ServeConfig {
@@ -506,11 +519,6 @@ mod tests {
             threshold: 0.0,
             ..ServeConfig::default()
         }
-    }
-
-    fn items(n: usize, k: usize, seed: u64) -> Matrix {
-        let mut rng = Rng::seeded(seed);
-        Matrix::gaussian(&mut rng, n, k, 1.0)
     }
 
     #[test]

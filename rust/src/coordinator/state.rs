@@ -290,12 +290,7 @@ mod tests {
     use super::*;
     use crate::configx::{Backend, MutationConfig, SchemaConfig};
     use crate::engine::Engine;
-    use crate::rng::Rng;
-
-    fn items(n: usize, k: usize, seed: u64) -> Matrix {
-        let mut rng = Rng::seeded(seed);
-        Matrix::gaussian(&mut rng, n, k, 1.0)
-    }
+    use crate::testing::fix::items;
 
     fn spec() -> EngineBuilder {
         Engine::builder()

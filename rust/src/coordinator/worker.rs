@@ -4,8 +4,12 @@
 //! clients are not `Send`, so the scorer is built *on* the worker thread
 //! from a [`ScorerFactory`]). Per batch the worker:
 //!
-//! 1. queries the shard's [`Engine`](crate::engine::Engine) per request
-//!    (candidate local ids — any backend behind one call),
+//! 1. prunes the **whole batch in one engine call**
+//!    (`candidates_batch_into`: the geomap backend walks the inverted
+//!    index term-major, streaming each touched posting list — and
+//!    bit-unpacking each packed block — once per batch instead of once
+//!    per request; `batch_prune: off` falls back to the per-request
+//!    reference loop, with identical candidate sets),
 //! 2. takes the **union** of the batch's candidates as one item tile,
 //! 3. scores the whole batch against the tile in a single backend call
 //!    (B × U GEMM — this is where dynamic batching pays), and
@@ -16,7 +20,7 @@
 //! selection time.
 
 use super::state::Shard;
-use crate::engine::SourceScratch;
+use crate::engine::{BatchCandidates, SourceScratch};
 use crate::error::Result;
 use crate::linalg::Matrix;
 use crate::retrieval::{Scored, TopK};
@@ -36,7 +40,7 @@ pub struct ShardPartial {
 pub struct WorkerScratch {
     query: SourceScratch,
     union: Vec<u32>,
-    cand: Vec<Vec<u32>>,
+    cand: BatchCandidates,
     pos_of: Vec<u32>,
     /// Quantized query codes (engines with `quant = int8`).
     qbuf: Vec<i8>,
@@ -49,7 +53,7 @@ impl WorkerScratch {
         WorkerScratch {
             query: SourceScratch::new(),
             union: Vec::new(),
-            cand: Vec::new(),
+            cand: BatchCandidates::new(),
             pos_of: vec![u32::MAX; max_items],
             qbuf: Vec::new(),
         }
@@ -57,32 +61,37 @@ impl WorkerScratch {
 }
 
 /// Process one batch against one shard. `users` is the dense (B × k)
-/// query block in batch order.
+/// query block in batch order. `batch_prune` selects the batched
+/// (term-major) candidate walk; `false` is the per-request reference
+/// loop (`ServeConfig::batch_prune` — candidate sets are identical
+/// either way).
 pub fn process_batch(
     shard: &Shard,
     users: &Matrix,
     kappa: usize,
     scorer: &dyn Scorer,
     scratch: &mut WorkerScratch,
+    batch_prune: bool,
 ) -> Result<ShardPartial> {
     let b = users.rows();
     let n_local = shard.items();
     if scratch.pos_of.len() < n_local {
         scratch.pos_of.resize(n_local, u32::MAX);
     }
-    // 1. prune per request
-    scratch.cand.resize_with(b, Vec::new);
-    scratch.union.clear();
-    for r in 0..b {
-        let (head, tail) = scratch.cand.split_at_mut(r);
-        let _ = head;
-        let out = &mut tail[0];
+    // 1. prune the whole batch in one engine call
+    if batch_prune {
         shard
             .engine
-            .candidates_into_unordered(users.row(r), &mut scratch.query, out)?;
-        scratch.union.extend_from_slice(out);
+            .candidates_batch_into(users, &mut scratch.query, &mut scratch.cand)?;
+    } else {
+        shard
+            .engine
+            .candidates_batch_seq(users, &mut scratch.query, &mut scratch.cand)?;
     }
-    let candidates: Vec<usize> = scratch.cand[..b].iter().map(Vec::len).collect();
+    scratch.union.clear();
+    scratch.union.extend_from_slice(scratch.cand.all_ids());
+    let candidates: Vec<usize> =
+        (0..b).map(|r| scratch.cand.query(r).len()).collect();
 
     // CPU-style backends: per-request rescoring over each request's own
     // candidates through the engine's rescore tier — exact f32 dots, or
@@ -96,7 +105,7 @@ pub fn process_batch(
             let user = users.row(r);
             let mut top = shard.engine.rescore_into(
                 user,
-                &scratch.cand[r],
+                scratch.cand.query(r),
                 kappa,
                 &mut scratch.qbuf,
             );
@@ -142,7 +151,7 @@ pub fn process_batch(
     for r in 0..b {
         let mut heap = TopK::new(kappa);
         let row = scores.row(r);
-        for &c in &scratch.cand[r] {
+        for &c in scratch.cand.query(r) {
             let col = if full_tile {
                 c
             } else {
@@ -165,16 +174,15 @@ pub fn process_batch(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::configx::{Backend, SchemaConfig};
+    use crate::configx::SchemaConfig;
     use crate::coordinator::state::FactorStore;
     use crate::engine::Engine;
     use crate::linalg::ops::dot;
-    use crate::rng::Rng;
     use crate::runtime::CpuScorer;
+    use crate::testing::fix;
 
     fn shard_fixture(n: usize, k: usize, seed: u64) -> FactorStore {
-        let mut rng = Rng::seeded(seed);
-        let items = Matrix::gaussian(&mut rng, n, k, 1.0);
+        let items = fix::items(n, k, seed);
         let spec = Engine::builder()
             .schema(SchemaConfig::TernaryParseTree)
             .threshold(0.0);
@@ -186,11 +194,11 @@ mod tests {
         let store = shard_fixture(300, 8, 1);
         let snap = store.snapshot();
         let shard = &snap.shards[0];
-        let mut rng = Rng::seeded(2);
-        let users = Matrix::gaussian(&mut rng, 6, 8, 1.0);
+        let users = fix::users(6, 8, 2);
         let mut scratch = WorkerScratch::new(shard.items());
         let partial =
-            process_batch(shard, &users, 5, &CpuScorer, &mut scratch).unwrap();
+            process_batch(shard, &users, 5, &CpuScorer, &mut scratch, true)
+                .unwrap();
         assert_eq!(partial.per_request.len(), 6);
         for r in 0..6 {
             let single = shard.engine.top_k(users.row(r), 5).unwrap();
@@ -212,11 +220,11 @@ mod tests {
         let store = shard_fixture(150, 8, 3);
         let snap = store.snapshot();
         let shard = &snap.shards[0];
-        let mut rng = Rng::seeded(4);
-        let users = Matrix::gaussian(&mut rng, 3, 8, 1.0);
+        let users = fix::users(3, 8, 4);
         let mut scratch = WorkerScratch::new(shard.items());
         let partial =
-            process_batch(shard, &users, 4, &CpuScorer, &mut scratch).unwrap();
+            process_batch(shard, &users, 4, &CpuScorer, &mut scratch, true)
+                .unwrap();
         for r in 0..3 {
             for s in &partial.per_request[r] {
                 let local = s.id - shard.base_id;
@@ -232,15 +240,16 @@ mod tests {
         let store = shard_fixture(100, 8, 5);
         let snap = store.snapshot();
         let shard = &snap.shards[0];
-        let mut rng = Rng::seeded(6);
         let mut scratch = WorkerScratch::new(shard.items());
-        for _ in 0..3 {
-            let users = Matrix::gaussian(&mut rng, 4, 8, 1.0);
+        for round in 0..3u64 {
+            let users = fix::users(4, 8, 60 + round);
             let p1 =
-                process_batch(shard, &users, 3, &CpuScorer, &mut scratch).unwrap();
+                process_batch(shard, &users, 3, &CpuScorer, &mut scratch, true)
+                    .unwrap();
             let mut fresh = WorkerScratch::new(shard.items());
             let p2 =
-                process_batch(shard, &users, 3, &CpuScorer, &mut fresh).unwrap();
+                process_batch(shard, &users, 3, &CpuScorer, &mut fresh, true)
+                    .unwrap();
             for (a, b) in p1.per_request.iter().zip(&p2.per_request) {
                 assert_eq!(
                     a.iter().map(|s| s.id).collect::<Vec<_>>(),
@@ -260,30 +269,24 @@ mod tests {
         let users = Matrix::zeros(2, 4); // zero users map to empty support
         let mut scratch = WorkerScratch::new(shard.items());
         let partial =
-            process_batch(shard, &users, 3, &CpuScorer, &mut scratch).unwrap();
+            process_batch(shard, &users, 3, &CpuScorer, &mut scratch, true)
+                .unwrap();
         assert!(partial.per_request.iter().all(Vec::is_empty));
         assert_eq!(partial.candidates, vec![0, 0]);
     }
 
     #[test]
     fn baseline_backends_serve_through_the_worker() {
-        let mut rng = Rng::seeded(8);
-        let items = Matrix::gaussian(&mut rng, 200, 8, 1.0);
-        let users = Matrix::gaussian(&mut rng, 4, 8, 1.0);
-        for backend in [
-            Backend::Srp { bits: 3, tables: 2 },
-            Backend::Superbit { bits: 3, depth: 3, tables: 2 },
-            Backend::Cros { m: 12, l: 1, tables: 2 },
-            Backend::PcaTree { leaf_frac: 0.25 },
-            Backend::Brute,
-        ] {
+        let items = fix::items(200, 8, 8);
+        let users = fix::users(4, 8, 9);
+        for backend in fix::all_backends() {
             let spec = Engine::builder().backend(backend);
             let store = FactorStore::build(spec, items.clone(), 1).unwrap();
             let snap = store.snapshot();
             let shard = &snap.shards[0];
             let mut scratch = WorkerScratch::new(shard.items());
             let partial =
-                process_batch(shard, &users, 5, &CpuScorer, &mut scratch)
+                process_batch(shard, &users, 5, &CpuScorer, &mut scratch, true)
                     .unwrap();
             for r in 0..4 {
                 let single = shard.engine.top_k(users.row(r), 5).unwrap();
@@ -291,6 +294,34 @@ mod tests {
                     partial.per_request[r].iter().map(|s| s.id).collect();
                 let want: Vec<u32> = single.iter().map(|s| s.id).collect();
                 assert_eq!(got, want, "{:?} request {r}", backend);
+            }
+        }
+    }
+
+    #[test]
+    fn batch_prune_off_matches_on_exactly() {
+        // the escape hatch serves identical results: same ids, same
+        // scores, same candidate counts, every request
+        let store = shard_fixture(250, 8, 10);
+        store.remove(5).unwrap();
+        store.upsert(250, &[0.3; 8]).unwrap();
+        let snap = store.snapshot();
+        let shard = &snap.shards[0];
+        let users = fix::users(11, 8, 11);
+        let mut s_on = WorkerScratch::new(shard.items());
+        let mut s_off = WorkerScratch::new(shard.items());
+        let on =
+            process_batch(shard, &users, 6, &CpuScorer, &mut s_on, true)
+                .unwrap();
+        let off =
+            process_batch(shard, &users, 6, &CpuScorer, &mut s_off, false)
+                .unwrap();
+        assert_eq!(on.candidates, off.candidates);
+        for (a, b) in on.per_request.iter().zip(&off.per_request) {
+            assert_eq!(a.len(), b.len());
+            for (x, y) in a.iter().zip(b) {
+                assert_eq!(x.id, y.id);
+                assert_eq!(x.score.to_bits(), y.score.to_bits());
             }
         }
     }
@@ -306,11 +337,11 @@ mod tests {
         store.upsert(120, &f).unwrap(); // append
         let snap = store.snapshot();
         let shard = &snap.shards[0];
-        let mut rng = Rng::seeded(10);
-        let users = Matrix::gaussian(&mut rng, 5, 8, 1.0);
+        let users = fix::users(5, 8, 12);
         let mut scratch = WorkerScratch::new(shard.items());
         let partial =
-            process_batch(shard, &users, 121, &CpuScorer, &mut scratch).unwrap();
+            process_batch(shard, &users, 121, &CpuScorer, &mut scratch, true)
+                .unwrap();
         for r in 0..5 {
             for s in &partial.per_request[r] {
                 assert_ne!(s.id, 7, "removed id served");

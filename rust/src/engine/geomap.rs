@@ -17,7 +17,10 @@
 //! Item ids are stable handles: the base keeps an id ↔ row mapping, so a
 //! removal leaves a hole in the id space instead of shifting later ids.
 
-use super::{CandidateSource, MutableCatalogue, SourceScratch, SourceStats};
+use super::{
+    BatchCandidates, CandidateSource, MutableCatalogue, SourceScratch,
+    SourceStats,
+};
 use crate::configx::{MutationConfig, PostingsMode};
 use crate::embedding::Mapper;
 use crate::error::{GeomapError, Result};
@@ -120,11 +123,46 @@ impl DeltaSegment {
     }
 }
 
-/// Per-query scratch: base-index counters plus delta overlap counters.
+/// Queries per term-major pass of the batched walk. Bounds the counter
+/// arena at `LANES` u16 lanes per base row (64 bytes — one cache line —
+/// per row), and makes the "each packed block decoded at most once per
+/// batch" guarantee exact for batches up to the serving default
+/// `max_batch = 32`; larger batches stream the index `ceil(B / LANES)`
+/// times, still amortising the decode `LANES`-fold.
+const LANES: usize = 32;
+
+/// Per-query scratch: base-index counters plus delta overlap counters
+/// (sequential path) and the term-major plan/counter arenas (batched
+/// path). One struct serves both so a caller alternating `top_k` and
+/// `top_k_batch` never thrashes its [`SourceScratch`].
 struct GeomapScratch {
     query: QueryScratch,
     delta_counts: Vec<u16>,
     delta_touched: Vec<u32>,
+    batch: BatchScratch,
+}
+
+/// Scratch of the term-major batched walk (see
+/// [`GeomapEngine::candidates_batch_into`]).
+#[derive(Default)]
+struct BatchScratch {
+    /// The cell → query-list plan: `(dim << 32) | lane`, sorted by dim
+    /// so one run of equal dims = one posting-list visit shared by every
+    /// query whose φ support touches that dim.
+    plan: Vec<u64>,
+    /// Overlap counters, one lane group of `chunk ≤ LANES` u16s per base
+    /// row (row-major, so a posting hit updates one cache line).
+    counts: Vec<u16>,
+    /// Base rows touched this pass (marks live in `seen`).
+    touched: Vec<u32>,
+    seen: Vec<bool>,
+    /// Packed-block decode buffer (each block decoded once per pass).
+    block: Vec<u32>,
+    /// Per-lane delta-segment candidates (delta lists are small and
+    /// hash-mapped; they are counted per query, not term-major).
+    delta_out: Vec<Vec<u32>>,
+    /// Per-lane emitted-candidate counts, then absolute fill cursors.
+    cursors: Vec<usize>,
 }
 
 /// The geomap [`CandidateSource`]: inverted-index pruning with
@@ -354,6 +392,7 @@ impl CandidateSource for GeomapEngine {
             query: QueryScratch::new(base_items),
             delta_counts: Vec::new(),
             delta_touched: Vec::with_capacity(64),
+            batch: BatchScratch::default(),
         });
         // base segment (rows → global ids, tombstones dropped in place)
         self.base
@@ -382,7 +421,11 @@ impl CandidateSource for GeomapEngine {
                         if *c == 0 {
                             s.delta_touched.push(dr);
                         }
-                        *c += 1;
+                        // saturating: a count pinned at u16::MAX still
+                        // passes every admissible min_overlap, and the
+                        // sequential + batched paths stay bit-identical
+                        // in release builds too
+                        *c = c.saturating_add(1);
                     }
                 }
             }
@@ -394,6 +437,187 @@ impl CandidateSource for GeomapEngine {
                 }
                 s.delta_counts[dr as usize] = 0;
             }
+        }
+        Ok(())
+    }
+
+    /// Term-major batched candidate generation (the tentpole of ISSUE 4).
+    ///
+    /// Instead of walking the inverted index once per query, the loop is
+    /// inverted: all `B` queries are mapped to their active cells up
+    /// front, merged into one deduplicated cell → query-list plan, and
+    /// every touched posting list is then streamed **exactly once per
+    /// pass** — each packed block bit-unpacked at most once for up to
+    /// [`LANES`] queries — accumulating per-query overlap counts in a
+    /// row-major lane arena. Per-query results are set-identical to the
+    /// sequential path: same counting, same `min_overlap` admission,
+    /// same tombstone filter, same id mapping, same delta handling.
+    fn candidates_batch_into(
+        &self,
+        users: &Matrix,
+        scratch: &mut SourceScratch,
+        out: &mut BatchCandidates,
+    ) -> Result<()> {
+        let b = users.rows();
+        let rows = self.base.rows();
+        let base_items = self.base.index.items();
+        let s = scratch.get_or_insert_with(|| GeomapScratch {
+            query: QueryScratch::new(base_items),
+            delta_counts: Vec::new(),
+            delta_touched: Vec::with_capacity(64),
+            batch: BatchScratch::default(),
+        });
+        let GeomapScratch { delta_counts, delta_touched, batch, .. } = s;
+        let BatchScratch {
+            plan,
+            counts,
+            touched,
+            seen,
+            block,
+            delta_out,
+            cursors,
+        } = batch;
+        let min = self.min_overlap.min(u16::MAX as usize) as u16;
+        out.clear();
+        let mut q0 = 0usize;
+        while q0 < b {
+            let chunk = (b - q0).min(LANES);
+            // -- 1. map the chunk's queries, build the cell plan, and
+            //       collect each lane's delta-segment candidates --------
+            plan.clear();
+            if delta_out.len() < chunk {
+                delta_out.resize_with(chunk, Vec::new);
+            }
+            if delta_counts.len() < self.delta.ids.len() {
+                delta_counts.resize(self.delta.ids.len(), 0);
+            }
+            for lane in 0..chunk {
+                let phi = self.mapper.map(users.row(q0 + lane))?;
+                for &dim in phi.indices() {
+                    plan.push(((dim as u64) << 32) | lane as u64);
+                }
+                delta_out[lane].clear();
+                if !self.delta.ids.is_empty() {
+                    delta_touched.clear();
+                    for &dim in phi.indices() {
+                        if let Some(drs) = self.delta.postings.get(&dim) {
+                            for &dr in drs {
+                                let c = &mut delta_counts[dr as usize];
+                                if *c == 0 {
+                                    delta_touched.push(dr);
+                                }
+                                *c = c.saturating_add(1);
+                            }
+                        }
+                    }
+                    for &dr in delta_touched.iter() {
+                        if delta_counts[dr as usize] >= min
+                            && self.delta.alive[dr as usize]
+                        {
+                            delta_out[lane].push(self.delta.ids[dr as usize]);
+                        }
+                        delta_counts[dr as usize] = 0;
+                    }
+                }
+            }
+            // -- 2. one term-major walk of the base index: each touched
+            //       posting list streamed once for its whole query run --
+            if rows > 0 && !plan.is_empty() {
+                plan.sort_unstable();
+                if counts.len() < rows * chunk {
+                    counts.resize(rows * chunk, 0);
+                }
+                if seen.len() < rows {
+                    seen.resize(rows, false);
+                }
+                touched.clear();
+                let mut i = 0usize;
+                while i < plan.len() {
+                    let dim = (plan[i] >> 32) as u32;
+                    let mut j = i + 1;
+                    while j < plan.len() && (plan[j] >> 32) as u32 == dim {
+                        j += 1;
+                    }
+                    let lanes = &plan[i..j];
+                    self.base.index.posting_chunks(
+                        dim as usize,
+                        block,
+                        |ids| {
+                            for &row in ids {
+                                let r = row as usize;
+                                if !seen[r] {
+                                    seen[r] = true;
+                                    touched.push(row);
+                                }
+                                let at = r * chunk;
+                                for &pl in lanes {
+                                    let c =
+                                        &mut counts[at + pl as u32 as usize];
+                                    *c = c.saturating_add(1);
+                                }
+                            }
+                        },
+                    );
+                    i = j;
+                }
+            }
+            // -- 3. size each lane's span (base survivors + delta),
+            //       fence the arena, then scatter-fill ------------------
+            cursors.clear();
+            cursors.resize(chunk, 0);
+            for &row in touched.iter() {
+                let r = row as usize;
+                if self.base_dead[r] {
+                    continue;
+                }
+                let at = r * chunk;
+                for (lane, cur) in cursors.iter_mut().enumerate() {
+                    if counts[at + lane] >= min {
+                        *cur += 1;
+                    }
+                }
+            }
+            let mut start = out.ids.len();
+            for (lane, cur) in cursors.iter_mut().enumerate() {
+                let size = *cur + delta_out[lane].len();
+                *cur = start;
+                start += size;
+                out.offsets.push(start);
+            }
+            out.ids.resize(start, 0);
+            for &row in touched.iter() {
+                let r = row as usize;
+                if self.base_dead[r] {
+                    continue;
+                }
+                let id = self.base.id_of(row);
+                let at = r * chunk;
+                for (lane, cur) in cursors.iter_mut().enumerate() {
+                    if counts[at + lane] >= min {
+                        out.ids[*cur] = id;
+                        *cur += 1;
+                    }
+                }
+            }
+            for (lane, cur) in cursors.iter_mut().enumerate() {
+                for &id in delta_out[lane].iter() {
+                    out.ids[*cur] = id;
+                    *cur += 1;
+                }
+                debug_assert_eq!(
+                    *cur,
+                    out.offsets[q0 + lane + 1],
+                    "lane fill must land exactly on its fence"
+                );
+            }
+            // -- 4. restore the all-zero counter invariant --------------
+            for &row in touched.iter() {
+                let r = row as usize;
+                seen[r] = false;
+                counts[r * chunk..(r + 1) * chunk].fill(0);
+            }
+            touched.clear();
+            q0 += chunk;
         }
         Ok(())
     }
@@ -470,15 +694,10 @@ mod tests {
     use crate::configx::SchemaConfig;
     use crate::linalg::ops::dot;
     use crate::retrieval::Retriever;
-    use crate::rng::Rng;
+    use crate::testing::fix::{items, user, users};
 
     fn mapper(k: usize) -> Mapper {
         Mapper::from_config(SchemaConfig::TernaryParseTree, k, 0.0)
-    }
-
-    fn items(n: usize, k: usize, seed: u64) -> Matrix {
-        let mut rng = Rng::seeded(seed);
-        Matrix::gaussian(&mut rng, n, k, 1.0)
     }
 
     fn engine(n: usize, k: usize, seed: u64, max_delta: usize) -> GeomapEngine {
@@ -490,11 +709,6 @@ mod tests {
             PostingsMode::Raw,
         )
         .unwrap()
-    }
-
-    fn user(k: usize, seed: u64) -> Vec<f32> {
-        let mut rng = Rng::seeded(seed);
-        (0..k).map(|_| rng.gaussian_f32()).collect()
     }
 
     #[test]
@@ -665,6 +879,76 @@ mod tests {
         MutableCatalogue::merge(&mut packed).unwrap();
         assert!(packed.index().is_packed(), "merge must stay packed");
         check(&raw, &packed, "post-merge");
+    }
+
+    #[test]
+    fn term_major_batch_matches_sequential_across_lane_chunks() {
+        // batch sizes straddling the LANES chunking (1, LANES, LANES+1,
+        // several chunks) over a mutated engine: per-query sets must
+        // equal the sequential walk, raw and packed alike
+        let k = 8;
+        let its = items(200, k, 31);
+        for postings in [PostingsMode::Raw, PostingsMode::Packed] {
+            let mut e = GeomapEngine::build(
+                mapper(k),
+                its.clone(),
+                1,
+                MutationConfig { max_delta: 0 },
+                postings,
+            )
+            .unwrap();
+            e.remove(3).unwrap();
+            e.remove(150).unwrap();
+            e.upsert(7, &user(k, 700)).unwrap();
+            e.upsert(200, &user(k, 701)).unwrap();
+            assert!(e.pending() > 0, "delta + tombstones must be live");
+            let mut scratch = SourceScratch::new();
+            let mut batch = BatchCandidates::new();
+            let mut seq_scratch = SourceScratch::new();
+            let mut seq = Vec::new();
+            for bsz in [1usize, LANES, LANES + 1, 3 * LANES + 5] {
+                let qs = users(bsz, k, 800 + bsz as u64);
+                e.candidates_batch_into(&qs, &mut scratch, &mut batch)
+                    .unwrap();
+                assert_eq!(batch.queries(), bsz);
+                for r in 0..bsz {
+                    let mut got = batch.query(r).to_vec();
+                    got.sort_unstable();
+                    assert!(
+                        got.windows(2).all(|w| w[0] < w[1]),
+                        "duplicates in lane {r}"
+                    );
+                    e.candidates_into(qs.row(r), &mut seq_scratch, &mut seq)
+                        .unwrap();
+                    assert_eq!(
+                        got, seq,
+                        "{postings:?} B={bsz}: lane {r} diverges"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn term_major_batch_handles_empty_support_lanes() {
+        // zero users map to empty φ support: their lanes must come back
+        // empty while neighbouring lanes still get their candidates
+        let k = 8;
+        let e = engine(60, k, 33, 0);
+        let mut qs = users(3, k, 900);
+        qs.row_mut(1).fill(0.0);
+        let mut scratch = SourceScratch::new();
+        let mut batch = BatchCandidates::new();
+        e.candidates_batch_into(&qs, &mut scratch, &mut batch).unwrap();
+        assert!(batch.query(1).is_empty(), "zero factor maps to no cells");
+        let mut seq_scratch = SourceScratch::new();
+        let mut seq = Vec::new();
+        for r in [0usize, 2] {
+            let mut got = batch.query(r).to_vec();
+            got.sort_unstable();
+            e.candidates_into(qs.row(r), &mut seq_scratch, &mut seq).unwrap();
+            assert_eq!(got, seq);
+        }
     }
 
     #[test]

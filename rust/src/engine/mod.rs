@@ -7,9 +7,12 @@
 //!
 //! * [`CandidateSource`] — the pruning contract: allocation-lean
 //!   `candidates_into` with per-engine opaque scratch ([`SourceScratch`]),
-//!   factor access for exact rescoring, and memory/stats reporting.
-//!   Implemented by the geomap index (mutable, [`GeomapEngine`]), by the
-//!   immutable [`Retriever`](crate::retrieval::Retriever), and by every
+//!   batched multi-query pruning (`candidates_batch_into` into a
+//!   [`BatchCandidates`] arena, with a per-query default and a
+//!   term-major geomap override), factor access for exact rescoring,
+//!   and memory/stats reporting. Implemented by the geomap index
+//!   (mutable, [`GeomapEngine`]), by the immutable
+//!   [`Retriever`](crate::retrieval::Retriever), and by every
 //!   baseline through [`FilterSource`].
 //! * [`Engine`] — the facade owning prune → exact-rescore → top-κ,
 //!   constructed with a builder:
@@ -86,6 +89,94 @@ impl SourceScratch {
     }
 }
 
+/// Per-query candidate lists for one batch, stored as a flat arena —
+/// `ids` grouped by query with `offsets` fencing each query's span — so
+/// batch callers reuse two buffers regardless of batch size.
+///
+/// Filled by [`CandidateSource::candidates_batch_into`]; read back with
+/// [`query`](BatchCandidates::query). Within a query's span the ids are
+/// unique and live but **unordered** (batch consumers union, count, or
+/// rescore — all order-insensitive); sort a span if you need the
+/// sequential path's sorted form.
+#[derive(Default)]
+pub struct BatchCandidates {
+    /// Candidate ids, grouped by query.
+    pub(crate) ids: Vec<u32>,
+    /// Query spans: query `r` owns `ids[offsets[r] .. offsets[r + 1]]`.
+    /// Length is `queries + 1` once filled. `usize` deliberately: the
+    /// *summed* candidate count of a batch can exceed `u32` even though
+    /// every id fits one (B queries × a huge catalogue), and the vector
+    /// is only `queries + 1` long.
+    pub(crate) offsets: Vec<usize>,
+    /// Staging buffer for the per-query fallback.
+    pub(crate) tmp: Vec<u32>,
+}
+
+impl BatchCandidates {
+    /// An empty batch; `candidates_batch_into` fills it.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Number of queries in the batch.
+    pub fn queries(&self) -> usize {
+        self.offsets.len().saturating_sub(1)
+    }
+
+    /// Candidate ids of query `r` (unique, live, unordered).
+    pub fn query(&self, r: usize) -> &[u32] {
+        &self.ids[self.offsets[r]..self.offsets[r + 1]]
+    }
+
+    /// Every candidate id of the batch, concatenated in query order
+    /// (ids shared by several queries appear once per query — union
+    /// consumers dedup).
+    pub fn all_ids(&self) -> &[u32] {
+        &self.ids
+    }
+
+    /// Reset to an empty zero-query batch, keeping allocations.
+    pub fn clear(&mut self) {
+        self.ids.clear();
+        self.offsets.clear();
+        self.offsets.push(0);
+    }
+
+    /// Append one query's candidate list.
+    pub(crate) fn push_query(&mut self, cand: &[u32]) {
+        self.ids.extend_from_slice(cand);
+        self.offsets.push(self.ids.len());
+    }
+}
+
+/// The reference batched pruning: one
+/// [`candidates_into_unordered`](CandidateSource::candidates_into_unordered)
+/// call per query into the shared arena. Every backend's batched output
+/// must be per-query set-equal to this path (the property test in
+/// `tests/batch_equivalence.rs` is the gate); it also backs the
+/// `batch_prune: off` serving escape hatch.
+pub(crate) fn batch_fallback<S: CandidateSource + ?Sized>(
+    source: &S,
+    users: &Matrix,
+    scratch: &mut SourceScratch,
+    out: &mut BatchCandidates,
+) -> Result<()> {
+    out.clear();
+    let mut tmp = std::mem::take(&mut out.tmp);
+    let mut result = Ok(());
+    for r in 0..users.rows() {
+        if let Err(e) =
+            source.candidates_into_unordered(users.row(r), scratch, &mut tmp)
+        {
+            result = Err(e);
+            break;
+        }
+        out.push_query(&tmp);
+    }
+    out.tmp = tmp;
+    result
+}
+
 /// Summary statistics of a candidate source.
 #[derive(Clone, Debug)]
 pub struct SourceStats {
@@ -154,6 +245,25 @@ pub trait CandidateSource: Send + Sync {
         out: &mut Vec<u32>,
     ) -> Result<()> {
         self.candidates_into(user, scratch, out)
+    }
+
+    /// Candidates for a whole query batch (row = one user factor) into a
+    /// reusable per-query arena. The result is **order-insensitively
+    /// identical** to calling
+    /// [`candidates_into`](Self::candidates_into) per row: the same id
+    /// set for every query, in whatever order the batch traversal emits.
+    ///
+    /// The default walks the queries sequentially; backends with a
+    /// cheaper whole-batch traversal override it (the geomap engine
+    /// inverts the loop into one term-major index walk — see
+    /// `docs/ENGINE.md` §Batched retrieval).
+    fn candidates_batch_into(
+        &self,
+        users: &Matrix,
+        scratch: &mut SourceScratch,
+        out: &mut BatchCandidates,
+    ) -> Result<()> {
+        batch_fallback(self, users, scratch, out)
     }
 
     /// Dense factor of a live id; `None` for removed or out-of-range ids.
@@ -646,6 +756,33 @@ impl Engine {
         self.source.candidates_into_unordered(user, scratch, out)
     }
 
+    /// Candidates for a whole query batch in one backend call (see
+    /// [`CandidateSource::candidates_batch_into`]): per-query id sets
+    /// identical to the sequential path, produced by the backend's batch
+    /// traversal — on the geomap backend one term-major index walk that
+    /// decodes each packed posting block at most once per batch.
+    pub fn candidates_batch_into(
+        &self,
+        users: &Matrix,
+        scratch: &mut SourceScratch,
+        out: &mut BatchCandidates,
+    ) -> Result<()> {
+        self.source.candidates_batch_into(users, scratch, out)
+    }
+
+    /// The per-query reference loop behind the `batch_prune: off` escape
+    /// hatch: same output shape and id sets as
+    /// [`candidates_batch_into`](Self::candidates_batch_into), one
+    /// query at a time through the sequential traversal.
+    pub fn candidates_batch_seq(
+        &self,
+        users: &Matrix,
+        scratch: &mut SourceScratch,
+        out: &mut BatchCandidates,
+    ) -> Result<()> {
+        batch_fallback(self.source.as_ref(), users, scratch, out)
+    }
+
     /// Allocating convenience wrapper around
     /// [`candidates_into`](Self::candidates_into).
     pub fn candidates(&self, user: &[f32]) -> Result<Vec<u32>> {
@@ -749,6 +886,42 @@ impl Engine {
         self.top_k_with(user, kappa, &mut scratch, &mut cand)
     }
 
+    /// Batched top-κ: one batched prune
+    /// ([`candidates_batch_into`](Self::candidates_batch_into)) followed
+    /// by a per-query rescore — the exact f32 path, or the int8 scan +
+    /// exact refinement when the engine is quantized. Row `r` of the
+    /// result equals `top_k(users.row(r), kappa)` exactly (ids and
+    /// bit-identical scores): the rescore heaps are pure functions of
+    /// each query's candidate `(id, score)` multiset, so the batch
+    /// traversal's different emission order cannot change them.
+    pub fn top_k_batch(
+        &self,
+        users: &Matrix,
+        kappa: usize,
+    ) -> Result<Vec<Vec<Scored>>> {
+        let mut scratch = SourceScratch::new();
+        let mut cand = BatchCandidates::new();
+        self.top_k_batch_with(users, kappa, &mut scratch, &mut cand)
+    }
+
+    /// [`top_k_batch`](Self::top_k_batch) with caller-owned buffers for
+    /// allocation-lean serving loops.
+    pub fn top_k_batch_with(
+        &self,
+        users: &Matrix,
+        kappa: usize,
+        scratch: &mut SourceScratch,
+        cand: &mut BatchCandidates,
+    ) -> Result<Vec<Vec<Scored>>> {
+        self.candidates_batch_into(users, scratch, cand)?;
+        let mut qbuf = Vec::new();
+        Ok((0..users.rows())
+            .map(|r| {
+                self.rescore_into(users.row(r), cand.query(r), kappa, &mut qbuf)
+            })
+            .collect())
+    }
+
     /// Whether this backend supports incremental mutation.
     pub fn supports_mutation(&self) -> bool {
         self.source.is_mutable()
@@ -813,11 +986,7 @@ impl Engine {
 mod tests {
     use super::*;
     use crate::rng::Rng;
-
-    fn items(n: usize, k: usize, seed: u64) -> Matrix {
-        let mut rng = Rng::seeded(seed);
-        Matrix::gaussian(&mut rng, n, k, 1.0)
-    }
+    use crate::testing::fix::{self, items};
 
     #[test]
     fn scratch_self_heals_across_types() {
@@ -1032,6 +1201,102 @@ mod tests {
             qs.memory_bytes,
             fs.memory_bytes
         );
+    }
+
+    #[test]
+    fn batch_candidates_arena_shape_and_reuse() {
+        let engine = Engine::builder()
+            .backend(Backend::Brute)
+            .build(items(10, 4, 20))
+            .unwrap();
+        let users = fix::users(3, 4, 21);
+        let mut scratch = SourceScratch::new();
+        let mut cand = BatchCandidates::new();
+        engine.candidates_batch_into(&users, &mut scratch, &mut cand).unwrap();
+        assert_eq!(cand.queries(), 3);
+        for r in 0..3 {
+            assert_eq!(cand.query(r), (0..10u32).collect::<Vec<_>>());
+        }
+        assert_eq!(cand.all_ids().len(), 30);
+        // reuse on an empty batch leaves no stale spans behind
+        let empty = Matrix::zeros(0, 4);
+        engine.candidates_batch_into(&empty, &mut scratch, &mut cand).unwrap();
+        assert_eq!(cand.queries(), 0);
+        assert!(cand.all_ids().is_empty());
+    }
+
+    #[test]
+    fn batch_fallback_matches_sequential_on_every_backend() {
+        let its = items(150, 8, 22);
+        for backend in fix::all_backends() {
+            let engine = Engine::builder()
+                .backend(backend)
+                .threshold(0.5)
+                .build(its.clone())
+                .unwrap();
+            let users = fix::users(9, 8, 23);
+            let mut scratch = SourceScratch::new();
+            let mut cand = BatchCandidates::new();
+            engine
+                .candidates_batch_into(&users, &mut scratch, &mut cand)
+                .unwrap();
+            let mut seq = BatchCandidates::new();
+            engine
+                .candidates_batch_seq(&users, &mut scratch, &mut seq)
+                .unwrap();
+            assert_eq!(cand.queries(), 9, "{}", engine.label());
+            for r in 0..9 {
+                let mut a = cand.query(r).to_vec();
+                a.sort_unstable();
+                assert!(
+                    a.windows(2).all(|w| w[0] < w[1]),
+                    "{}: duplicate batch candidates",
+                    engine.label()
+                );
+                let mut b = seq.query(r).to_vec();
+                b.sort_unstable();
+                assert_eq!(a, b, "{}: query {r}", engine.label());
+                assert_eq!(
+                    a,
+                    engine.candidates(users.row(r)).unwrap(),
+                    "{}: query {r} vs sequential",
+                    engine.label()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn top_k_batch_matches_top_k_exactly() {
+        // geomap (term-major override) and brute (default fallback),
+        // quantized and not: ids and bit-identical scores per row
+        let its = items(200, 16, 24);
+        for backend in [Backend::Geomap, Backend::Brute] {
+            for quant in [QuantMode::Off, QuantMode::Int8 { refine: 3 }] {
+                let engine = Engine::builder()
+                    .backend(backend)
+                    .threshold(0.5)
+                    .quant(quant)
+                    .build(its.clone())
+                    .unwrap();
+                let users = fix::users(7, 16, 25);
+                let batch = engine.top_k_batch(&users, 5).unwrap();
+                assert_eq!(batch.len(), 7);
+                for r in 0..7 {
+                    let single = engine.top_k(users.row(r), 5).unwrap();
+                    assert_eq!(batch[r].len(), single.len());
+                    for (x, y) in batch[r].iter().zip(&single) {
+                        assert_eq!(x.id, y.id, "{}", engine.label());
+                        assert_eq!(
+                            x.score.to_bits(),
+                            y.score.to_bits(),
+                            "{}: score drift",
+                            engine.label()
+                        );
+                    }
+                }
+            }
+        }
     }
 
     #[test]

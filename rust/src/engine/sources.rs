@@ -142,11 +142,7 @@ mod tests {
     use crate::configx::SchemaConfig;
     use crate::embedding::Mapper;
     use crate::rng::Rng;
-
-    fn items(n: usize, k: usize, seed: u64) -> Matrix {
-        let mut rng = Rng::seeded(seed);
-        Matrix::gaussian(&mut rng, n, k, 1.0)
-    }
+    use crate::testing::fix::items;
 
     #[test]
     fn filter_source_matches_filter() {

@@ -254,6 +254,50 @@ impl InvertedIndex {
         }
     }
 
+    /// Visit the posting list of dimension `i` as one or more contiguous
+    /// ascending id chunks without materialising the whole list: a raw
+    /// arena hands out its borrowed CSR slice in a single call; a packed
+    /// arena decodes block-at-a-time into `block`, each block exactly
+    /// once. This is the block-visit hook the term-major batch path is
+    /// built on — the caller streams every dimension a whole query batch
+    /// touches through one traversal instead of one per query.
+    pub fn posting_chunks(
+        &self,
+        i: usize,
+        block: &mut Vec<u32>,
+        mut visit: impl FnMut(&[u32]),
+    ) {
+        match &self.arena {
+            Arena::Raw { offsets, postings } => {
+                let (lo, hi) = (offsets[i] as usize, offsets[i + 1] as usize);
+                visit(&postings[lo..hi]);
+            }
+            Arena::Packed(pk) => {
+                for b in pk.dim_blocks(i) {
+                    pk.decode_block(b, block);
+                    visit(block);
+                }
+            }
+        }
+    }
+
+    /// Stream several posting lists in one pass: `visit(dim, ids)` is
+    /// called with contiguous id chunks for each dimension of `dims` in
+    /// order, decoding each packed block at most once overall. The
+    /// sequential query walk passes one query's support; batch-shaped
+    /// callers pass the deduplicated union of a whole batch's supports,
+    /// so a posting list shared by many queries is walked exactly once.
+    pub fn postings_multi(
+        &self,
+        dims: &[u32],
+        block: &mut Vec<u32>,
+        mut visit: impl FnMut(u32, &[u32]),
+    ) {
+        for &d in dims {
+            self.posting_chunks(d as usize, block, |ids| visit(d, ids));
+        }
+    }
+
     /// Total postings stored.
     pub fn total_postings(&self) -> usize {
         match &self.arena {
@@ -303,41 +347,29 @@ impl InvertedIndex {
         scratch.ensure(self.items);
         out.clear();
         scratch.touched.clear();
-        let min = min_overlap.max(1) as u16;
-        match &self.arena {
-            Arena::Raw { offsets, postings } => {
-                for &dim in query.indices() {
-                    let d = dim as usize;
-                    let (lo, hi) = (offsets[d] as usize, offsets[d + 1] as usize);
-                    for &item in &postings[lo..hi] {
-                        let c = &mut scratch.counts[item as usize];
-                        if *c == 0 {
-                            scratch.touched.push(item);
-                        }
-                        *c += 1;
-                    }
+        // saturating cast: counters cap at u16::MAX, so a larger
+        // min_overlap must clamp (not truncate) to stay consistent with
+        // them — and with the term-major batch walk, which clamps too
+        let min = min_overlap.clamp(1, u16::MAX as usize) as u16;
+        let QueryScratch { counts, touched, block } = scratch;
+        self.postings_multi(query.indices(), block, |_, ids| {
+            for &item in ids {
+                let c = &mut counts[item as usize];
+                if *c == 0 {
+                    touched.push(item);
                 }
+                // saturating: a count pinned at u16::MAX still passes
+                // every admissible min_overlap, and the sequential and
+                // term-major batch walks agree bit-for-bit in release
+                // builds too
+                *c = c.saturating_add(1);
             }
-            Arena::Packed(pk) => {
-                for &dim in query.indices() {
-                    for b in pk.dim_blocks(dim as usize) {
-                        pk.decode_block(b, &mut scratch.block);
-                        for &item in &scratch.block {
-                            let c = &mut scratch.counts[item as usize];
-                            if *c == 0 {
-                                scratch.touched.push(item);
-                            }
-                            *c += 1;
-                        }
-                    }
-                }
-            }
-        }
-        for &item in &scratch.touched {
-            if scratch.counts[item as usize] >= min {
+        });
+        for &item in touched.iter() {
+            if counts[item as usize] >= min {
                 out.push(item);
             }
-            scratch.counts[item as usize] = 0;
+            counts[item as usize] = 0;
         }
     }
 
@@ -618,6 +650,73 @@ mod tests {
         let q2 = SparseVec::new(8, vec![(6, 1.0)]).unwrap();
         packed.query_into(&q2, 1, &mut scratch, &mut out);
         assert_eq!(out, vec![2]);
+    }
+
+    #[test]
+    fn posting_chunks_cover_each_list_once_per_arena() {
+        // raw and packed arenas stream identical ids through the
+        // block-visit hook, and chunks concatenate to posting_to
+        prop(25, |g| {
+            let k = g.usize_in(2..=10);
+            let n = g.usize_in(1..=400); // > BLOCK items crosses blocks
+            let mapper = crate::embedding::Mapper::new(
+                TessellationKind::Ternary,
+                PermutationKind::OneHot,
+                k,
+            );
+            let mut rng = Rng::seeded(g.case_seed ^ 0x5157);
+            let items = crate::linalg::Matrix::gaussian(&mut rng, n, k, 1.0);
+            let emb = mapper.map_all(&items, 1).unwrap();
+            let raw = InvertedIndex::from_embeddings(&emb);
+            let packed = InvertedIndex::from_embeddings(&emb).into_packed();
+            let mut block = Vec::new();
+            let mut buf = Vec::new();
+            for idx in [&raw, &packed] {
+                for d in 0..idx.dim() {
+                    let mut got = Vec::new();
+                    let mut chunks = 0usize;
+                    idx.posting_chunks(d, &mut block, |ids| {
+                        got.extend_from_slice(ids);
+                        chunks += 1;
+                    });
+                    idx.posting_to(d, &mut buf);
+                    assert_eq!(got, buf, "dim {d}");
+                    if idx.is_packed() {
+                        // exactly one visit per packed block
+                        assert_eq!(
+                            chunks,
+                            idx.packed().unwrap().dim_blocks(d).len()
+                        );
+                    } else {
+                        assert_eq!(chunks, 1, "raw arena is one chunk");
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn postings_multi_streams_dims_in_order() {
+        let raw = InvertedIndex::from_embeddings(&toy_embeddings());
+        let packed =
+            InvertedIndex::from_embeddings(&toy_embeddings()).into_packed();
+        for idx in [&raw, &packed] {
+            let dims = [0u32, 3, 5, 6];
+            let mut block = Vec::new();
+            let mut seen: Vec<(u32, Vec<u32>)> = Vec::new();
+            idx.postings_multi(&dims, &mut block, |d, ids| {
+                seen.push((d, ids.to_vec()));
+            });
+            assert_eq!(
+                seen,
+                vec![
+                    (0, vec![0]),
+                    (3, vec![0, 1]),
+                    (5, vec![1]),
+                    (6, vec![2]),
+                ]
+            );
+        }
     }
 
     #[test]

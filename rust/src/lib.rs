@@ -82,7 +82,8 @@ pub mod prelude {
     pub use crate::data::{gaussian_factors, MovieLensSynth, Ratings};
     pub use crate::embedding::{Mapper, PermutationKind, TessellationKind};
     pub use crate::engine::{
-        CandidateSource, Engine, MutableCatalogue, SourceScratch,
+        BatchCandidates, CandidateSource, Engine, MutableCatalogue,
+        SourceScratch,
     };
     pub use crate::error::GeomapError;
     pub use crate::index::InvertedIndex;

@@ -130,6 +130,12 @@ fn cmd_serve(args: &[String]) -> Result<()> {
              multiplier)",
         )
         .opt("postings", "raw", "posting arena: raw | packed (geomap only)")
+        .opt(
+            "batch-prune",
+            "on",
+            "batched term-major candidate generation: on | off (off = \
+             per-request reference loop; identical results)",
+        )
         .opt("shards", "2", "index shards (worker threads)")
         .opt("max-batch", "32", "dynamic batch size cap")
         .opt("max-wait-us", "500", "batching window (µs)")
@@ -167,6 +173,10 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         mutation: MutationConfig { max_delta: cli.get_usize("max-delta")? },
         quant: QuantMode::parse(cli.get("quant"))?,
         postings: PostingsMode::parse(cli.get("postings"))?,
+        batch_prune: geomap::configx::parse_on_off(
+            cli.get("batch-prune"),
+            "--batch-prune",
+        )?,
         checkpoint: None,
     };
     let factory = if cfg.use_xla {

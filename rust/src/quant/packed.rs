@@ -452,6 +452,117 @@ mod tests {
         );
     }
 
+    // -- adversarial decode coverage (ISSUE 4 satellite): every corrupt
+    // -- arena must come back as `Err` from `from_parts`, never panic,
+    // -- so the traversal path only ever walks verified blocks.
+
+    #[test]
+    fn truncated_final_block_rejected() {
+        // gaps of 2 → nonzero width → the word arena carries real bits;
+        // chopping its tail makes the last block overrun it
+        let ids: Vec<u32> = (0..300u32).map(|i| i * 3).collect();
+        let lists = vec![ids];
+        let pk = pack_lists(1000, &lists);
+        let (dofs, bw, bf, bm, bi, w) = pk.arenas();
+        assert!(!w.is_empty());
+        for cut in 1..=w.len().min(3) {
+            let truncated = w[..w.len() - cut].to_vec();
+            let r = PackedPostings::from_parts(
+                1,
+                1000,
+                pk.total(),
+                dofs.to_vec(),
+                bw.to_vec(),
+                bf.to_vec(),
+                bm.to_vec(),
+                bi.to_vec(),
+                truncated,
+            );
+            assert!(r.is_err(), "cut of {cut} words must be rejected");
+        }
+    }
+
+    #[test]
+    fn skip_entry_lying_low_or_high_rejected() {
+        // the per-block max-id skip entry must agree with the decoded
+        // ids exactly — one off in either direction is a corrupt arena
+        let lists = vec![vec![5u32, 9, 40, 200]];
+        let pk = pack_lists(300, &lists);
+        let (dofs, bw, bf, bm, bi, w) = pk.arenas();
+        for delta in [-1i64, 1] {
+            let mut bad = bm.to_vec();
+            bad[0] = (bad[0] as i64 + delta) as u32;
+            let r = PackedPostings::from_parts(
+                1,
+                300,
+                pk.total(),
+                dofs.to_vec(),
+                bw.to_vec(),
+                bf.to_vec(),
+                bad,
+                bi.to_vec(),
+                w.to_vec(),
+            );
+            assert!(r.is_err(), "skip entry lying by {delta} must fail");
+        }
+    }
+
+    #[test]
+    fn zero_width_blocks_roundtrip_and_reject_corrupt_counts() {
+        // a consecutive run packs to zero gap bits: no words at all
+        let lists = vec![(0u32..200).collect::<Vec<_>>()];
+        let pk = pack_lists(200, &lists);
+        let (dofs, bw, bf, bm, bi, w) = pk.arenas();
+        assert!(w.is_empty(), "consecutive runs need no gap words");
+        assert_eq!(decode_all(&pk), lists);
+        let rebuild = |bi: Vec<u32>, total: usize| {
+            PackedPostings::from_parts(
+                1,
+                200,
+                total,
+                dofs.to_vec(),
+                bw.to_vec(),
+                bf.to_vec(),
+                bm.to_vec(),
+                bi,
+                w.to_vec(),
+            )
+        };
+        assert!(rebuild(bi.to_vec(), pk.total()).is_ok());
+        // count lying HIGH: the zero-width run decodes past the skip
+        // entry (and the id bound) — rejected, not emitted
+        let mut high = bi.to_vec();
+        high[1] = (high[1] & !0xFFFF) | 100; // block 1 really holds 72
+        assert!(rebuild(high, pk.total()).is_err());
+        // count lying LOW: the run stops short of the skip entry
+        let mut low = bi.to_vec();
+        low[1] = (low[1] & !0xFFFF) | 10;
+        assert!(rebuild(low, pk.total()).is_err());
+    }
+
+    #[test]
+    fn overflowing_deltas_rejected_not_panicking() {
+        // a block whose gap pushes the id cursor past u32::MAX: decode
+        // wraps (by design — no arithmetic panic even in debug) and the
+        // strictly-increasing verification rejects the arena
+        let r = PackedPostings::from_parts(
+            1,
+            usize::MAX, // id bound out of the way: the order check fires
+            2,
+            vec![0, 1],                  // one dim owning one block
+            vec![0],                     // words start
+            vec![u32::MAX - 1],          // first id near the top
+            vec![u32::MAX - 1],          // skip entry (decode wraps here)
+            vec![2u32 | (32 << 16)],     // count 2, width 32
+            vec![u32::MAX],              // gap u32::MAX → wraps the cursor
+        );
+        let err = r.err().expect("wrapped delta must fail validation");
+        assert!(
+            err.to_string().contains("strictly"),
+            "want the ordering check, got: {err}"
+        );
+    }
+
     #[test]
     fn from_parts_roundtrip_and_validation() {
         let lists = vec![vec![1u32, 4, 9, 200], vec![], vec![0, 1, 2]];

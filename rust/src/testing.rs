@@ -1,4 +1,6 @@
-//! Property-testing support (proptest is unavailable offline — DESIGN.md §3).
+//! Test support: a seeded property runner (proptest is unavailable
+//! offline — DESIGN.md §3) plus the shared synthetic fixtures ([`fix`])
+//! the integration tests and bench targets build their workloads from.
 //!
 //! A deliberately small, seeded property runner:
 //!
@@ -16,6 +18,99 @@
 //! case with [`prop_seeded`]. No shrinking — cases are kept small instead.
 
 use crate::rng::Rng;
+
+pub mod fix {
+    //! Seeded synthetic catalogue/query fixtures shared by the
+    //! integration tests and bench targets (extracted from per-file
+    //! copies). Every factor/query builder is deterministic in its
+    //! `seed` with random streams byte-identical to the historical
+    //! in-file helpers, so migrating those call sites never changes a
+    //! test's inputs. [`serve_cfg`] is a *normalized* baseline, not a
+    //! stream: tests that relied on specific batching/queue knobs
+    //! override the returned fields explicitly.
+
+    use crate::configx::{Backend, SchemaConfig, ServeConfig};
+    use crate::linalg::Matrix;
+    use crate::rng::Rng;
+
+    /// N(0,1) item catalogue: `n × k`, deterministic in `seed`.
+    pub fn items(n: usize, k: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::seeded(seed);
+        Matrix::gaussian(&mut rng, n, k, 1.0)
+    }
+
+    /// N(0,1) query block: `b × k` user factors, deterministic in `seed`
+    /// (row `r` is a batch lane for the batched retrieval paths).
+    pub fn users(b: usize, k: usize, seed: u64) -> Matrix {
+        items(b, k, seed)
+    }
+
+    /// One N(0,1) user factor.
+    pub fn user(k: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::seeded(seed);
+        (0..k).map(|_| rng.gaussian_f32()).collect()
+    }
+
+    /// `n` user factors as owned vectors, drawn from one stream.
+    pub fn user_vecs(n: usize, k: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::seeded(seed);
+        (0..n)
+            .map(|_| (0..k).map(|_| rng.gaussian_f32()).collect())
+            .collect()
+    }
+
+    /// Paired (users, items) factors drawn from ONE seeded stream, users
+    /// first — byte-identical to the historical bench workload builder.
+    pub fn workload(
+        n_users: usize,
+        n_items: usize,
+        k: usize,
+        seed: u64,
+    ) -> (Matrix, Matrix) {
+        let mut rng = Rng::seeded(seed);
+        (
+            Matrix::gaussian(&mut rng, n_users, k, 1.0),
+            Matrix::gaussian(&mut rng, n_items, k, 1.0),
+        )
+    }
+
+    /// The six pruning backends at test-sized §6 parameters — the list
+    /// every backend-sweep test iterates.
+    pub fn all_backends() -> [Backend; 6] {
+        [
+            Backend::Geomap,
+            Backend::Srp { bits: 3, tables: 2 },
+            Backend::Superbit { bits: 3, depth: 3, tables: 2 },
+            Backend::Cros { m: 12, l: 1, tables: 2 },
+            Backend::PcaTree { leaf_frac: 0.25 },
+            Backend::Brute,
+        ]
+    }
+
+    /// A small CPU-scorer serving config for coordinator tests
+    /// (schema-parameterized via the returned value's fields; unset
+    /// knobs keep their `ServeConfig::default()` values).
+    pub fn serve_cfg(
+        k: usize,
+        shards: usize,
+        backend: Backend,
+        threshold: f32,
+    ) -> ServeConfig {
+        ServeConfig {
+            k,
+            kappa: 10,
+            schema: SchemaConfig::TernaryParseTree,
+            max_batch: 16,
+            max_wait_us: 200,
+            shards,
+            queue_cap: 1024,
+            use_xla: false,
+            threshold,
+            backend,
+            ..ServeConfig::default()
+        }
+    }
+}
 
 /// Random-input generator handed to property bodies.
 pub struct Gen {

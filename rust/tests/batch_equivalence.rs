@@ -1,0 +1,226 @@
+//! ISSUE 4 acceptance gate: batched candidate generation is
+//! **order-insensitively identical** to the sequential path on every
+//! backend × posting arena × batch size, and `top_k_batch` matches
+//! `top_k` exactly (ids + bit-identical scores) — including while the
+//! catalogue holds tombstoned and delta-segment items mid-mutation.
+//!
+//! Run under `cargo test --release` too (CI does): the term-major lane
+//! counters use saturating arithmetic whose wrap-adjacent behaviour
+//! debug assertions would otherwise mask.
+
+use geomap::configx::{
+    Backend, MutationConfig, PostingsMode, QuantMode, SchemaConfig,
+};
+use geomap::engine::{BatchCandidates, Engine, SourceScratch};
+use geomap::linalg::Matrix;
+use geomap::testing::{fix, prop};
+
+/// The spec'd batch sizes: singleton, tiny, odd, the serving default
+/// (= the term-major lane width), and several lane chunks plus a tail.
+const BATCH_SIZES: [usize; 5] = [1, 2, 7, 32, 129];
+
+fn sorted(v: &[u32]) -> Vec<u32> {
+    let mut v = v.to_vec();
+    v.sort_unstable();
+    v
+}
+
+/// The full equivalence contract for one engine × one query block.
+fn assert_batch_matches_sequential(engine: &Engine, users: &Matrix, tag: &str) {
+    let mut scratch = SourceScratch::new();
+    let mut cand = BatchCandidates::new();
+    engine.candidates_batch_into(users, &mut scratch, &mut cand).unwrap();
+    assert_eq!(cand.queries(), users.rows(), "{tag}: batch shape");
+    for r in 0..users.rows() {
+        let batch = sorted(cand.query(r));
+        assert!(
+            batch.windows(2).all(|w| w[0] < w[1]),
+            "{tag}: query {r} emitted duplicate ids"
+        );
+        let seq = engine.candidates(users.row(r)).unwrap();
+        assert_eq!(batch, seq, "{tag}: query {r} candidate sets diverge");
+    }
+    // the escape-hatch reference loop agrees as well
+    let mut seq_arena = BatchCandidates::new();
+    engine
+        .candidates_batch_seq(users, &mut scratch, &mut seq_arena)
+        .unwrap();
+    for r in 0..users.rows() {
+        assert_eq!(
+            sorted(cand.query(r)),
+            sorted(seq_arena.query(r)),
+            "{tag}: query {r} batch vs per-query arena"
+        );
+    }
+    // top_k_batch == top_k: same ids, bit-identical scores
+    let kappa = 7;
+    let batch_top = engine.top_k_batch(users, kappa).unwrap();
+    assert_eq!(batch_top.len(), users.rows(), "{tag}");
+    for r in 0..users.rows() {
+        let single = engine.top_k(users.row(r), kappa).unwrap();
+        assert_eq!(batch_top[r].len(), single.len(), "{tag}: query {r} len");
+        for (x, y) in batch_top[r].iter().zip(&single) {
+            assert_eq!(x.id, y.id, "{tag}: query {r} top-k ids");
+            assert_eq!(
+                x.score.to_bits(),
+                y.score.to_bits(),
+                "{tag}: query {r} top-k scores not byte-exact"
+            );
+        }
+    }
+}
+
+/// All 6 backends × {raw, packed} (packed is geomap-only by config) ×
+/// the spec'd batch sizes, on catalogues below and above the packed
+/// 128-entry block boundary.
+#[test]
+fn batch_equals_sequential_on_all_backends_and_arenas() {
+    for (n, k, seed) in [(60usize, 6usize, 1u64), (300, 8, 2)] {
+        let items = fix::items(n, k, seed);
+        for backend in fix::all_backends() {
+            let arenas: &[PostingsMode] = if matches!(backend, Backend::Geomap)
+            {
+                &[PostingsMode::Raw, PostingsMode::Packed]
+            } else {
+                &[PostingsMode::Raw]
+            };
+            for &postings in arenas {
+                let engine = Engine::builder()
+                    .backend(backend)
+                    .threshold(0.5)
+                    .postings(postings)
+                    .build(items.clone())
+                    .unwrap();
+                for &bsz in &BATCH_SIZES {
+                    let users = fix::users(bsz, k, 100 + bsz as u64);
+                    assert_batch_matches_sequential(
+                        &engine,
+                        &users,
+                        &format!(
+                            "{}/{}/n={n}/B={bsz}",
+                            engine.label(),
+                            postings.spec()
+                        ),
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Mid-mutation equivalence: tombstones, superseded base rows, delta
+/// rows and appends all pending (unmerged) — then again after a merge.
+#[test]
+fn batch_equals_sequential_mid_mutation() {
+    let k = 8;
+    for postings in [PostingsMode::Raw, PostingsMode::Packed] {
+        let mut engine = Engine::builder()
+            .threshold(0.0)
+            .postings(postings)
+            .mutation(MutationConfig { max_delta: 0 }) // manual merge only
+            .build(fix::items(150, k, 3))
+            .unwrap();
+        engine.remove(7).unwrap();
+        engine.remove(128).unwrap(); // lives in the second packed block
+        engine.upsert(11, &fix::user(k, 900)).unwrap(); // supersede
+        engine.upsert(150, &fix::user(k, 901)).unwrap(); // append
+        engine.upsert(151, &fix::user(k, 902)).unwrap(); // append
+        assert!(engine.pending() > 0, "mutations must be unmerged");
+        for &bsz in &BATCH_SIZES {
+            let users = fix::users(bsz, k, 200 + bsz as u64);
+            let tag = format!("mid-mutation/{}/B={bsz}", postings.spec());
+            assert_batch_matches_sequential(&engine, &users, &tag);
+            // removed ids never surface in any lane
+            let mut scratch = SourceScratch::new();
+            let mut cand = BatchCandidates::new();
+            engine
+                .candidates_batch_into(&users, &mut scratch, &mut cand)
+                .unwrap();
+            assert!(
+                cand.all_ids().iter().all(|&id| id != 7 && id != 128),
+                "{tag}: tombstoned id resurfaced"
+            );
+        }
+        engine.merge().unwrap();
+        assert_eq!(engine.pending(), 0);
+        for &bsz in &[2usize, 32, 129] {
+            let users = fix::users(bsz, k, 300 + bsz as u64);
+            assert_batch_matches_sequential(
+                &engine,
+                &users,
+                &format!("post-merge/{}/B={bsz}", postings.spec()),
+            );
+        }
+    }
+}
+
+/// The quantized rescore path through `top_k_batch`: int8 scan + exact
+/// refinement must return byte-identical results to the sequential call.
+#[test]
+fn quantized_top_k_batch_matches_top_k() {
+    for postings in [PostingsMode::Raw, PostingsMode::Packed] {
+        let engine = Engine::builder()
+            .schema(SchemaConfig::TernaryOneHot)
+            .threshold(0.5)
+            .quant(QuantMode::Int8 { refine: 3 })
+            .postings(postings)
+            .build(fix::items(400, 16, 5))
+            .unwrap();
+        for &bsz in &[1usize, 7, 32] {
+            let users = fix::users(bsz, 16, 400 + bsz as u64);
+            assert_batch_matches_sequential(
+                &engine,
+                &users,
+                &format!("quantized/{}/B={bsz}", postings.spec()),
+            );
+        }
+    }
+}
+
+/// Seeded property sweep: random catalogues, schemas, thresholds,
+/// min_overlap, posting arenas, random churn, random batch size.
+#[test]
+fn batch_equivalence_property() {
+    prop(12, |g| {
+        let k = g.usize_in(3..=12);
+        let n = g.usize_in(1..=300);
+        let postings = if g.bool_with(0.5) {
+            PostingsMode::Packed
+        } else {
+            PostingsMode::Raw
+        };
+        let schema = *g.choose(&[
+            SchemaConfig::TernaryParseTree,
+            SchemaConfig::TernaryOneHot,
+        ]);
+        let mut engine = Engine::builder()
+            .schema(schema)
+            .threshold(g.f32_in(0.0, 1.5))
+            .min_overlap(g.usize_in(1..=2))
+            .postings(postings)
+            .mutation(MutationConfig { max_delta: 0 })
+            .build(fix::items(n, k, g.case_seed))
+            .unwrap();
+        if g.bool_with(0.7) {
+            for step in 0..g.usize_in(1..=8) {
+                let seed = g.case_seed ^ (step as u64 + 1);
+                if g.bool_with(0.3) {
+                    // ids never shrink, so len() >= n >= 1 holds
+                    let id = g.usize_in(0..=engine.len() - 1) as u32;
+                    let _ = engine.remove(id).unwrap();
+                } else {
+                    // id == len() appends; smaller ids replace
+                    let id = g.usize_in(0..=engine.len()) as u32;
+                    engine.upsert(id, &fix::user(k, seed)).unwrap();
+                }
+            }
+        }
+        let bsz = *g.choose(&[1usize, 2, 7, 32, 129]);
+        let users = fix::users(bsz, k, g.case_seed ^ 0x55AA);
+        assert_batch_matches_sequential(
+            &engine,
+            &users,
+            &format!("prop/{}/{}/B={bsz}", schema.spec(), postings.spec()),
+        );
+    });
+}

@@ -12,37 +12,16 @@ use geomap::engine::{Engine, SourceScratch};
 use geomap::linalg::ops::dot;
 use geomap::linalg::Matrix;
 use geomap::retrieval::Retriever;
-use geomap::rng::Rng;
 use geomap::runtime::cpu_scorer_factory;
-
-fn items(n: usize, k: usize, seed: u64) -> Matrix {
-    let mut rng = Rng::seeded(seed);
-    Matrix::gaussian(&mut rng, n, k, 1.0)
-}
-
-fn user(k: usize, seed: u64) -> Vec<f32> {
-    let mut rng = Rng::seeded(seed);
-    (0..k).map(|_| rng.gaussian_f32()).collect()
-}
+use geomap::testing::fix::{items, user};
 
 fn serve_cfg(k: usize, shards: usize, backend: Backend) -> ServeConfig {
-    ServeConfig {
-        k,
-        kappa: 10,
-        schema: SchemaConfig::TernaryParseTree,
-        max_batch: 8,
-        max_wait_us: 200,
-        shards,
-        queue_cap: 256,
-        use_xla: false,
-        artifacts_dir: "artifacts".into(),
-        threshold: 0.0,
-        backend,
-        mutation: MutationConfig::default(),
-        quant: QuantMode::Off,
-        postings: PostingsMode::Raw,
-        checkpoint: None,
-    }
+    let mut c = geomap::testing::fix::serve_cfg(k, shards, backend, 0.0);
+    // keep the historical tighter batching: 8-request splits exercise
+    // more dynamic-batch boundaries than the fixture's default 16
+    c.max_batch = 8;
+    c.queue_cap = 256;
+    c
 }
 
 /// cros-style equivalence: `Engine` top-κ over the geomap backend matches
@@ -132,14 +111,7 @@ fn min_overlap_semantics() {
 fn six_backends_serve_through_coordinator_by_config() {
     let k = 8;
     let catalogue = items(240, k, 3);
-    for backend in [
-        Backend::Geomap,
-        Backend::Srp { bits: 3, tables: 2 },
-        Backend::Superbit { bits: 3, depth: 3, tables: 2 },
-        Backend::Cros { m: 12, l: 1, tables: 2 },
-        Backend::PcaTree { leaf_frac: 0.25 },
-        Backend::Brute,
-    ] {
+    for backend in geomap::testing::fix::all_backends() {
         let coord = Coordinator::start(
             serve_cfg(k, 2, backend),
             catalogue.clone(),

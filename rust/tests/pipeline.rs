@@ -15,9 +15,9 @@ use geomap::tessellation::{brute_force_assign, Tessellation, TernaryTessellation
 #[test]
 fn full_pipeline_is_deterministic() {
     let run = || {
-        let mut rng = Rng::seeded(77);
-        let users = gaussian_factors(&mut rng, 24, 8);
-        let items = gaussian_factors(&mut rng, 160, 8);
+        // shared fixture draw (stream-identical to the historical
+        // two-call gaussian_factors sequence from one seeded rng)
+        let (users, items) = geomap::testing::fix::workload(24, 160, 8, 77);
         let results = Comparison::default().run(&users, &items).unwrap();
         results
             .iter()
@@ -154,9 +154,7 @@ fn learned_factors_pipeline_end_to_end() {
 /// accuracy falls monotonically (within noise).
 #[test]
 fn sweep_tradeoff_shape() {
-    let mut rng = Rng::seeded(13);
-    let users = gaussian_factors(&mut rng, 32, 16);
-    let items = gaussian_factors(&mut rng, 400, 16);
+    let (users, items) = geomap::testing::fix::workload(32, 400, 16, 13);
     let pts = accuracy_sparsity_sweep(
         SchemaConfig::TernaryParseTree,
         &users,

@@ -2,35 +2,17 @@
 //! shedding, hot swaps under load, and the XLA-vs-CPU scorer equivalence
 //! through the full serving path.
 
-use geomap::configx::{SchemaConfig, ServeConfig};
+use geomap::configx::{Backend, SchemaConfig, ServeConfig};
 use geomap::coordinator::Coordinator;
-use geomap::data::gaussian_factors;
 use geomap::embedding::Mapper;
-use geomap::linalg::Matrix;
 use geomap::retrieval::Retriever;
 use geomap::rng::Rng;
 use geomap::runtime::{cpu_scorer_factory, xla_scorer_factory};
+use geomap::testing::fix::items;
 use std::sync::Arc;
 
 fn cfg(k: usize, shards: usize, threshold: f32) -> ServeConfig {
-    ServeConfig {
-        k,
-        kappa: 10,
-        schema: SchemaConfig::TernaryParseTree,
-        max_batch: 16,
-        max_wait_us: 200,
-        shards,
-        queue_cap: 1024,
-        use_xla: false,
-        artifacts_dir: "artifacts".into(),
-        threshold,
-        ..ServeConfig::default()
-    }
-}
-
-fn items(n: usize, k: usize, seed: u64) -> Matrix {
-    let mut rng = Rng::seeded(seed);
-    gaussian_factors(&mut rng, n, k)
+    geomap::testing::fix::serve_cfg(k, shards, Backend::Geomap, threshold)
 }
 
 /// The coordinator (batched, sharded) must return exactly what the

@@ -10,10 +10,9 @@
 use geomap::configx::{Backend, CheckpointConfig, MutationConfig, SchemaConfig, ServeConfig};
 use geomap::coordinator::Coordinator;
 use geomap::engine::Engine;
-use geomap::linalg::Matrix;
-use geomap::rng::Rng;
 use geomap::runtime::cpu_scorer_factory;
 use geomap::snapshot;
+use geomap::testing::fix::{items, user_vecs as users};
 
 fn tmp(name: &str) -> String {
     let dir = std::env::temp_dir()
@@ -21,16 +20,6 @@ fn tmp(name: &str) -> String {
         .join(format!("p{}", std::process::id()));
     std::fs::create_dir_all(&dir).unwrap();
     dir.join(name).to_string_lossy().into_owned()
-}
-
-fn items(n: usize, k: usize, seed: u64) -> Matrix {
-    let mut rng = Rng::seeded(seed);
-    Matrix::gaussian(&mut rng, n, k, 1.0)
-}
-
-fn users(n: usize, k: usize, seed: u64) -> Vec<Vec<f32>> {
-    let mut rng = Rng::seeded(seed);
-    (0..n).map(|_| (0..k).map(|_| rng.gaussian_f32()).collect()).collect()
 }
 
 /// Exact equality of candidates and scored top-k between two engines.
