@@ -3,7 +3,7 @@
 //!
 //! Uses the real MovieLens-100k `u.data` when `MOVIELENS_DATA` points at
 //! it; otherwise generates a synthetic log with the same shape
-//! (DESIGN.md §3 substitution).
+//! (docs/ARCHITECTURE.md §Offline substitutions).
 //!
 //! ```bash
 //! cargo run --release --example movielens

@@ -23,7 +23,9 @@
 //! GEOMAP_CPU=1 cargo run --release --example serving   # pure-rust scorer
 //! ```
 
-use geomap::configx::{Backend, MutationConfig, SchemaConfig, ServeConfig};
+use geomap::configx::{
+    Backend, CacheMode, MutationConfig, SchemaConfig, ServeConfig,
+};
 use geomap::coordinator::Coordinator;
 use geomap::data::gaussian_factors;
 use geomap::rng::Rng;
@@ -59,6 +61,10 @@ fn main() -> anyhow::Result<()> {
         threshold: 1.5, // k=32 operating point (EXPERIMENTS.md §Perf)
         backend: Backend::Geomap, // any Backend::* serves via config
         mutation: MutationConfig { max_delta: 256 },
+        // result-cache tier: repeated hot-user queries skip prune+rescore
+        // entirely; the mid-run churn below exercises epoch invalidation
+        // (watch the stale count in the final report) — docs/CACHE.md
+        cache: CacheMode::Lru { entries: 1024 },
         ..ServeConfig::default()
     };
     let factory = if use_cpu {

@@ -5,7 +5,7 @@ The paper's request-path hot spot is the dense score computation
 inverted-index pruning (paper §1.1, §6: "inner product computation is then
 required only over this significantly smaller set").
 
-TPU mapping (DESIGN.md §Hardware-Adaptation): the item tile ``V`` is blocked
+TPU mapping (docs/ARCHITECTURE.md §Runtime bridge): the item tile ``V`` is blocked
 along the item axis so each (TB, k) block plus the resident (B, k) query
 block and the (B, TB) output block fit comfortably in VMEM; the MXU consumes
 (B, k) x (k, TB) matmuls per grid step.  This BlockSpec schedule is the

@@ -1,5 +1,6 @@
-//! Ablations over the design choices DESIGN.md calls out — each sweep
-//! isolates one knob of the schema on the synthetic workload:
+//! Ablations over the schema design choices (the mapping layer of
+//! docs/ARCHITECTURE.md) — each sweep isolates one knob of the schema
+//! on the synthetic workload:
 //!
 //! * permutation window δ (§4.2.2 general parse tree: accidental-overlap
 //!   suppression vs index-space size),

@@ -1,0 +1,185 @@
+//! Result-cache tier under Zipf-skewed read-heavy traffic (docs/CACHE.md).
+//!
+//! Real serving traffic concentrates on a small hot set of users, so a
+//! mutation-aware result cache in front of the prune → rescore path
+//! should turn most of the request volume into O(hash + lock) work. The
+//! acceptance bars, judged at the default profile on the synthetic
+//! coordinator workload:
+//!
+//! * `cache: lru` serves the Zipf(1.05) workload with **≥ 3×** the
+//!   served-query throughput of `cache: off`, and
+//! * the measured **hit rate is ≥ 0.8** on that workload,
+//!
+//! with responses spot-checked byte-identical between the two
+//! coordinators (the full equivalence matrix lives in
+//! `tests/cache_equivalence.rs`).
+//!
+//! ```bash
+//! cargo bench --bench cache_tier
+//! GEOMAP_BENCH_FAST=1 cargo bench --bench cache_tier
+//! ```
+
+mod common;
+
+use geomap::configx::{Backend, CacheMode, SchemaConfig, ServeConfig};
+use geomap::coordinator::Coordinator;
+use geomap::rng::{Rng, Zipf};
+use geomap::runtime::cpu_scorer_factory;
+use geomap::testing::fix;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Instant;
+
+struct Workload {
+    items: usize,
+    k: usize,
+    pool: usize,
+    requests: usize,
+    clients: usize,
+}
+
+fn workload() -> Workload {
+    if common::fast() {
+        Workload { items: 512, k: 16, pool: 128, requests: 2_048, clients: 4 }
+    } else {
+        Workload { items: 4096, k: 32, pool: 512, requests: 16_384, clients: 4 }
+    }
+}
+
+fn serve_cfg(w: &Workload, cache: CacheMode) -> ServeConfig {
+    ServeConfig {
+        k: w.k,
+        kappa: 10,
+        schema: SchemaConfig::TernaryParseTree,
+        max_batch: 32,
+        max_wait_us: 200,
+        shards: 2,
+        queue_cap: 8192,
+        use_xla: false,
+        threshold: if w.k >= 32 { 1.5 } else { 1.3 },
+        backend: Backend::Geomap,
+        cache,
+        ..ServeConfig::default()
+    }
+}
+
+/// Drive `w.requests` Zipf(1.05)-distributed queries from `w.clients`
+/// threads through `coord` (after a warm-up pass over the whole user
+/// pool) and return the served-query throughput in requests/second.
+fn drive(coord: &Arc<Coordinator>, users: &geomap::linalg::Matrix, w: &Workload) -> f64 {
+    // warm-up: every pool user once, so both configurations start from
+    // the same steady state (for `lru` this fills the cache; for `off`
+    // it is the same amount of prune/rescore work)
+    for r in 0..users.rows() {
+        coord.submit(users.row(r).to_vec(), 10).expect("warm-up");
+    }
+    let zipf = Zipf::new(users.rows(), 1.05);
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for c in 0..w.clients {
+            let coord = Arc::clone(coord);
+            let zipf = zipf.clone();
+            scope.spawn(move || {
+                let mut rng = Rng::seeded(0x5EED + c as u64);
+                for _ in 0..w.requests / w.clients {
+                    let u = users.row(zipf.sample(&mut rng)).to_vec();
+                    coord.submit(u, 10).expect("request");
+                }
+            });
+        }
+    });
+    let served = (w.requests / w.clients * w.clients) as f64;
+    served / t0.elapsed().as_secs_f64()
+}
+
+fn main() {
+    let w = workload();
+    let items = fix::items(w.items, w.k, 42);
+    let users = fix::users(w.pool, w.k, 43);
+    println!(
+        "== cache tier: {} items, k={}, pool {} users, Zipf(1.05), {} \
+         requests × {} clients ==",
+        w.items, w.k, w.pool, w.requests, w.clients
+    );
+
+    // the cache holds the whole hot pool: steady state is ~all hits
+    let entries = w.pool * 2;
+    let off = Arc::new(
+        Coordinator::start(
+            serve_cfg(&w, CacheMode::Off),
+            items.clone(),
+            cpu_scorer_factory(),
+        )
+        .expect("cache-off coordinator"),
+    );
+    let on = Arc::new(
+        Coordinator::start(
+            serve_cfg(&w, CacheMode::Lru { entries }),
+            items,
+            cpu_scorer_factory(),
+        )
+        .expect("cache-on coordinator"),
+    );
+
+    // spot-check equivalence before timing (the full matrix is gated in
+    // tests/cache_equivalence.rs)
+    for r in 0..8.min(w.pool) {
+        let u = users.row(r).to_vec();
+        let a = on.submit(u.clone(), 10).expect("probe");
+        let b = off.submit(u, 10).expect("probe");
+        assert_eq!(
+            a.results.iter().map(|s| (s.id, s.score.to_bits())).collect::<Vec<_>>(),
+            b.results.iter().map(|s| (s.id, s.score.to_bits())).collect::<Vec<_>>(),
+            "cached response diverged from uncached"
+        );
+    }
+
+    let rps_off = drive(&off, &users, &w);
+    let rps_on = drive(&on, &users, &w);
+    let m = on.metrics();
+    let hit_rate = m.cache_hit_rate();
+    let speedup = rps_on / rps_off;
+    println!("cache off: {rps_off:>10.0} req/s");
+    println!(
+        "cache lru:{entries}: {rps_on:>10.0} req/s → {speedup:.2}x; \
+         hit rate {:.1}% ({} hits, {} misses, {} stale, {} evictions)",
+        hit_rate * 100.0,
+        m.cache_hits.load(Ordering::Relaxed),
+        m.cache_misses.load(Ordering::Relaxed),
+        m.cache_stale.load(Ordering::Relaxed),
+        m.cache_evictions.load(Ordering::Relaxed),
+    );
+    println!("\n{}", m.report());
+
+    let mut failures = Vec::new();
+    if !common::fast() {
+        if speedup < 3.0 {
+            failures.push(format!(
+                "cache speed-up {speedup:.2}x below the 3x target"
+            ));
+        }
+        if hit_rate < 0.8 {
+            failures.push(format!(
+                "hit rate {:.3} below the 0.8 target",
+                hit_rate
+            ));
+        }
+    }
+    drop(off);
+    drop(on);
+    if failures.is_empty() {
+        if common::fast() {
+            println!("\nfast profile: measurements reported, gates not judged");
+        } else {
+            println!(
+                "\ncache-tier targets met: ≥3x served-query throughput at \
+                 ≥0.8 hit rate"
+            );
+        }
+    } else {
+        for f in &failures {
+            eprintln!("CACHE TIER TARGET MISSED: {f}");
+        }
+        std::process::exit(1);
+    }
+}

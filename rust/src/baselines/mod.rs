@@ -6,7 +6,10 @@
 //! any filter into a [`crate::engine::CandidateSource`], so the serving
 //! coordinator and the evaluation harness treat every method
 //! identically: build over the item factors, then per-user return the
-//! surviving candidate ids.
+//! surviving candidate ids. The current entry point is
+//! `Engine::builder().backend(Backend::Srp { .. })` (and the other
+//! [`crate::configx::Backend`] variants) — construct the concrete
+//! filter types below directly only in unit tests or custom harnesses.
 //!
 //! As in the paper (footnote 7), hashing baselines are *boosted* by
 //! coalescing the candidates collected from several independent hash

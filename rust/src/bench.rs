@@ -1,4 +1,5 @@
-//! Benchmark harness (criterion is unavailable offline — DESIGN.md §3).
+//! Benchmark harness (criterion is unavailable offline —
+//! docs/ARCHITECTURE.md §Offline substitutions).
 //!
 //! `cargo bench` targets use `harness = false` and drive this module:
 //! warm-up, timed iterations with adaptive batching, and a stats report

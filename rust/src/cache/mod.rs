@@ -1,0 +1,341 @@
+//! Result-cache tier: a sharded, mutation-aware top-κ response cache in
+//! front of the coordinator's prune → exact-rescore path (`docs/CACHE.md`).
+//!
+//! Real serving traffic is heavily Zipf-skewed — a small set of hot
+//! users dominates request volume — so after batching amortised the
+//! *per-batch* cost, the next win is not recomputing repeated queries at
+//! all. The contract is strict: a cached response must be byte-identical
+//! to what the prune → rescore path would compute *right now*, or it is
+//! not served. Three pieces enforce that:
+//!
+//! * **Canonical fingerprint** ([`fingerprint`]) — 128-bit hash of the
+//!   query factor's raw f32 bits, κ, and the engine-spec digest
+//!   ([`EngineBuilder::digest`](crate::engine::EngineBuilder::digest)),
+//!   so entries can never answer a query served under a different
+//!   backend/quant/threshold configuration.
+//! * **Segmented LRU** ([`SegmentedLru`]) — probation/protected arena
+//!   with O(1) admission, promotion, demotion and eviction; one-touch
+//!   tail queries churn through probation without displacing the
+//!   re-referenced head (Zipf-friendly admission).
+//! * **Epoch invalidation** ([`ResultCache::lookup`]) — every catalogue
+//!   shard carries a mutation epoch
+//!   ([`Shard::epoch`](crate::coordinator::Shard)) bumped by
+//!   `upsert`/`remove`/`swap_items` (merges ride inside the mutation
+//!   that triggers them); an entry records the epoch vector it was
+//!   computed under and is served only while *every* shard epoch still
+//!   matches. Epochs only grow, so a stale entry can never revalidate —
+//!   lookup drops it on sight.
+//!
+//! The cache is enabled by `ServeConfig::cache`
+//! (`cache: off | lru:<entries>`, CLI `--cache`) and observable through
+//! the `cache:` line of [`ServeMetrics::report`](crate::coordinator::ServeMetrics::report).
+
+mod slru;
+
+pub use slru::SegmentedLru;
+
+use crate::retrieval::Scored;
+use std::sync::{Arc, Mutex};
+
+/// Murmur3-style 64-bit lane: absorb one word.
+#[inline]
+fn absorb(mut h: u64, w: u64) -> u64 {
+    let k = w
+        .wrapping_mul(0x87c37b91114253d5)
+        .rotate_left(31)
+        .wrapping_mul(0x4cf5ad432745937f);
+    h ^= k;
+    h.rotate_left(27).wrapping_mul(5).wrapping_add(0x52dce729)
+}
+
+/// Murmur3 fmix64 finaliser.
+#[inline]
+fn fmix(mut h: u64) -> u64 {
+    h ^= h >> 33;
+    h = h.wrapping_mul(0xff51afd7ed558ccd);
+    h ^= h >> 33;
+    h = h.wrapping_mul(0xc4ceb9fe1a85ec53);
+    h ^ (h >> 33)
+}
+
+/// Canonical 128-bit query fingerprint: the raw f32 bit pattern of the
+/// user factor, the requested κ, and the engine-spec digest, hashed on
+/// two independently-seeded 64-bit lanes. Equal inputs always collide
+/// (the cache key is deterministic); distinct inputs collide with
+/// probability ~2⁻¹²⁸ — negligible against any serving volume.
+pub fn fingerprint(user: &[f32], kappa: usize, spec_digest: u64) -> u128 {
+    let (mut h1, mut h2) = (0x9e3779b97f4a7c15u64, 0x2545f4914f6cdd1du64);
+    let mut word = |w: u64| {
+        h1 = absorb(h1, w);
+        h2 = absorb(h2, !w);
+    };
+    word(spec_digest);
+    word(kappa as u64);
+    word(user.len() as u64);
+    // two f32 lanes per word; the absorbed length word above is what
+    // keeps [x] and [x, 0.0] from aliasing — the odd-tail marker is
+    // only filler
+    for pair in user.chunks(2) {
+        let lo = pair[0].to_bits() as u64;
+        let hi = match pair.get(1) {
+            Some(x) => x.to_bits() as u64,
+            None => 0xdead_beef,
+        };
+        word(lo | (hi << 32));
+    }
+    ((fmix(h1) as u128) << 64) | fmix(h2) as u128
+}
+
+/// The cacheable part of a coordinator response — everything except the
+/// per-request latency, which is measured fresh on every hit.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CachedResponse {
+    /// Global item ids with exact scores, descending.
+    pub results: Vec<Scored>,
+    /// Candidates that survived pruning (summed over shards).
+    pub candidates: usize,
+    /// Catalogue size at serving time.
+    pub total_items: usize,
+    /// Factor-store version that served the request.
+    pub version: u64,
+}
+
+struct CacheEntry {
+    /// Per-shard mutation epochs the response was computed under.
+    epochs: Box<[u64]>,
+    /// `Arc` so a hit hands the response out with a refcount bump — the
+    /// deep copy (if the caller needs one) happens outside the shard
+    /// mutex, keeping the serialized hot-path section minimal.
+    resp: Arc<CachedResponse>,
+}
+
+/// Outcome of a cache probe.
+#[derive(Debug)]
+pub enum Lookup {
+    /// Entry present and every shard epoch matches: the response is
+    /// byte-identical to a recomputation.
+    Hit(Arc<CachedResponse>),
+    /// No entry under this fingerprint.
+    Miss,
+    /// Entry present but at least one shard mutated since it was
+    /// computed; the entry has been dropped (epochs only grow — it could
+    /// never become valid again).
+    Stale,
+}
+
+/// Sharded, mutation-aware top-κ result cache.
+///
+/// Lock shards are segmented-LRU arenas selected by fingerprint, so
+/// concurrent client threads rarely contend; total capacity is split
+/// across them. All methods take `&self`.
+pub struct ResultCache {
+    shards: Vec<Mutex<SegmentedLru<CacheEntry>>>,
+}
+
+impl ResultCache {
+    /// Upper bound on lock shards: enough to keep submit-side
+    /// contention low.
+    const MAX_LOCK_SHARDS: usize = 8;
+
+    /// Minimum arena capacity per lock shard. Keys pick their shard by
+    /// fingerprint hash, so a hot working set spreads unevenly
+    /// (balls-into-bins); giving every shard headroom of at least this
+    /// many slots keeps a small `lru:N` cache able to actually hold ~N
+    /// hot keys instead of fragmenting into tiny arenas that evict each
+    /// other's overflow.
+    const MIN_ENTRIES_PER_SHARD: usize = 32;
+
+    /// A cache holding up to `entries` responses in total.
+    pub fn new(entries: usize) -> ResultCache {
+        let n = (entries / Self::MIN_ENTRIES_PER_SHARD)
+            .clamp(1, Self::MAX_LOCK_SHARDS);
+        let shards = (0..n)
+            .map(|i| {
+                // split capacity as evenly as integers allow
+                let cap = entries / n + usize::from(i < entries % n);
+                Mutex::new(SegmentedLru::new(cap))
+            })
+            .collect();
+        ResultCache { shards }
+    }
+
+    fn shard(&self, fp: u128) -> &Mutex<SegmentedLru<CacheEntry>> {
+        // the high lane picks the lock shard; the SLRU map consumes the
+        // whole fingerprint, so this costs no key entropy
+        &self.shards[(fp >> 64) as u64 as usize % self.shards.len()]
+    }
+
+    /// Probe for `fp`, validating the entry against the current shard
+    /// `epochs`. A hit also promotes the entry (segmented-LRU recency);
+    /// a stale entry is removed.
+    pub fn lookup(&self, fp: u128, epochs: &[u64]) -> Lookup {
+        let mut shard = self.shard(fp).lock().unwrap();
+        // probe immutably first; the recency/removal mutation below must
+        // come after the borrow on the probed entry ends
+        let valid = match shard.probe(fp) {
+            None => return Lookup::Miss,
+            // refcount bump, not a deep copy — the lock is held
+            Some(e) if *e.epochs == *epochs => Some(Arc::clone(&e.resp)),
+            Some(_) => None,
+        };
+        match valid {
+            Some(resp) => {
+                shard.touch(fp);
+                Lookup::Hit(resp)
+            }
+            None => {
+                shard.remove(fp);
+                Lookup::Stale
+            }
+        }
+    }
+
+    /// Insert (or refresh) the response computed for `fp` under the
+    /// given shard `epochs`. Returns how many entries were evicted to
+    /// make room.
+    pub fn insert(
+        &self,
+        fp: u128,
+        epochs: &[u64],
+        resp: CachedResponse,
+    ) -> usize {
+        // allocate the entry before taking the shard lock
+        let entry = CacheEntry { epochs: epochs.into(), resp: Arc::new(resp) };
+        self.shard(fp).lock().unwrap().insert(fp, entry)
+    }
+
+    /// Entries currently cached (sums the lock shards; approximate under
+    /// concurrent mutation, exact when quiescent).
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    /// True when nothing is cached.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn resp(tag: u32) -> CachedResponse {
+        CachedResponse {
+            results: vec![Scored { id: tag, score: tag as f32 }],
+            candidates: tag as usize,
+            total_items: 100,
+            version: 1,
+        }
+    }
+
+    #[test]
+    fn fingerprint_is_deterministic_and_input_sensitive() {
+        let u = [0.5f32, -1.25, 3.0];
+        let fp = fingerprint(&u, 10, 42);
+        assert_eq!(fp, fingerprint(&u, 10, 42), "deterministic");
+        assert_ne!(fp, fingerprint(&u, 11, 42), "κ matters");
+        assert_ne!(fp, fingerprint(&u, 10, 43), "spec digest matters");
+        assert_ne!(
+            fp,
+            fingerprint(&[0.5, -1.25, 3.0000002], 10, 42),
+            "any factor bit matters"
+        );
+        // length-extension guards: a trailing zero and a dropped tail
+        // must both change the fingerprint
+        assert_ne!(fp, fingerprint(&[0.5, -1.25, 3.0, 0.0], 10, 42));
+        assert_ne!(fp, fingerprint(&[0.5, -1.25], 10, 42));
+        // -0.0 and 0.0 differ in bits, so they are distinct keys (a
+        // conservative miss, never a wrong hit)
+        assert_ne!(
+            fingerprint(&[0.0f32], 1, 0),
+            fingerprint(&[-0.0f32], 1, 0)
+        );
+    }
+
+    #[test]
+    fn hit_only_while_every_epoch_matches() {
+        let c = ResultCache::new(16);
+        let fp = fingerprint(&[1.0, 2.0], 5, 7);
+        assert!(matches!(c.lookup(fp, &[1, 1]), Lookup::Miss));
+        c.insert(fp, &[1, 1], resp(9));
+        match c.lookup(fp, &[1, 1]) {
+            Lookup::Hit(r) => assert_eq!(*r, resp(9)),
+            other => panic!("expected hit, got {other:?}"),
+        }
+        // one shard mutated → stale, and the entry is gone for good
+        assert!(matches!(c.lookup(fp, &[1, 2]), Lookup::Stale));
+        assert!(matches!(c.lookup(fp, &[1, 2]), Lookup::Miss));
+        assert!(
+            matches!(c.lookup(fp, &[1, 1]), Lookup::Miss),
+            "stale entries never revalidate, even against the old epochs"
+        );
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn epoch_vector_length_mismatch_is_stale() {
+        // a swap that changes the shard layout must never serve old
+        // entries, whatever the numeric values
+        let c = ResultCache::new(4);
+        let fp = fingerprint(&[1.0], 1, 0);
+        c.insert(fp, &[3, 3], resp(1));
+        assert!(matches!(c.lookup(fp, &[3]), Lookup::Stale));
+    }
+
+    #[test]
+    fn capacity_is_enforced_across_lock_shards() {
+        let c = ResultCache::new(96); // 3 lock shards of 32
+        assert_eq!(c.shards.len(), 3);
+        let mut evicted = 0;
+        for i in 0..400u32 {
+            let fp = fingerprint(&[i as f32], 3, 1);
+            evicted += c.insert(fp, &[1], resp(i));
+        }
+        assert!(c.len() <= 96, "len {} exceeds capacity", c.len());
+        assert_eq!(evicted, 400 - c.len());
+    }
+
+    #[test]
+    fn small_caches_stay_single_arena() {
+        // below one shard's worth of entries there is nothing to split:
+        // a single arena gives exact lru:N semantics (no balls-into-bins
+        // fragmentation of a small hot set)
+        for entries in [1, 8, 31] {
+            let c = ResultCache::new(entries);
+            assert_eq!(c.shards.len(), 1, "entries {entries}");
+            // the whole capacity is usable by any key mix
+            for i in 0..entries as u32 {
+                c.insert(fingerprint(&[i as f32], 1, 0), &[1], resp(i));
+            }
+            assert_eq!(c.len(), entries);
+        }
+        assert_eq!(ResultCache::new(10_000).shards.len(), 8, "capped at 8");
+    }
+
+    #[test]
+    fn single_entry_cache_works() {
+        let c = ResultCache::new(1);
+        assert_eq!(c.shards.len(), 1);
+        let a = fingerprint(&[1.0], 1, 0);
+        let b = fingerprint(&[2.0], 1, 0);
+        c.insert(a, &[1], resp(1));
+        assert!(matches!(c.lookup(a, &[1]), Lookup::Hit(_)));
+        c.insert(b, &[1], resp(2));
+        assert!(matches!(c.lookup(a, &[1]), Lookup::Miss));
+        assert!(matches!(c.lookup(b, &[1]), Lookup::Hit(_)));
+    }
+
+    #[test]
+    fn refresh_replaces_the_cached_value() {
+        let c = ResultCache::new(4);
+        let fp = fingerprint(&[9.0], 2, 0);
+        c.insert(fp, &[1], resp(1));
+        c.insert(fp, &[2], resp(2));
+        match c.lookup(fp, &[2]) {
+            Lookup::Hit(r) => assert_eq!(*r, resp(2)),
+            other => panic!("expected refreshed hit, got {other:?}"),
+        }
+        assert!(matches!(c.lookup(fp, &[1]), Lookup::Stale));
+    }
+}

@@ -1,0 +1,384 @@
+//! Segmented-LRU arena: probation/protected lists over one slot arena,
+//! every operation O(1).
+//!
+//! Admission is Zipf-friendly by construction: a new key enters the
+//! *probation* segment and is only promoted to *protected* on a second
+//! access, so one-touch keys (the long tail of a skewed workload) churn
+//! through probation without ever displacing the re-referenced head.
+//! Eviction takes the probation LRU tail first and falls back to the
+//! protected tail only when probation is empty; a promotion that
+//! overflows the protected segment demotes its LRU tail back to
+//! probation instead of evicting it.
+
+use std::collections::HashMap;
+
+const NIL: u32 = u32::MAX;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Seg {
+    Probation,
+    Protected,
+}
+
+struct Slot<V> {
+    key: u128,
+    value: V,
+    seg: Seg,
+    prev: u32,
+    next: u32,
+}
+
+/// Head/tail of one intrusive list (head = MRU, tail = LRU).
+#[derive(Clone, Copy)]
+struct Ends {
+    head: u32,
+    tail: u32,
+    len: usize,
+}
+
+impl Ends {
+    fn empty() -> Ends {
+        Ends { head: NIL, tail: NIL, len: 0 }
+    }
+}
+
+/// A fixed-capacity segmented-LRU map from 128-bit keys to values.
+///
+/// Not thread-safe by itself — the result cache wraps one per lock
+/// shard. `capacity == 0` is a valid degenerate cache that stores
+/// nothing.
+pub struct SegmentedLru<V> {
+    slots: Vec<Slot<V>>,
+    map: HashMap<u128, u32>,
+    free: Vec<u32>,
+    probation: Ends,
+    protected: Ends,
+    capacity: usize,
+    protected_cap: usize,
+}
+
+impl<V> SegmentedLru<V> {
+    /// A cache holding up to `capacity` entries, ~80% of them in the
+    /// protected segment once the workload earns promotions (probation
+    /// always keeps at least one slot so admission stays possible).
+    pub fn new(capacity: usize) -> Self {
+        SegmentedLru {
+            slots: Vec::new(),
+            map: HashMap::new(),
+            free: Vec::new(),
+            probation: Ends::empty(),
+            protected: Ends::empty(),
+            capacity,
+            protected_cap: capacity * 4 / 5,
+        }
+    }
+
+    /// Entries currently cached.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    /// True when nothing is cached.
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Total capacity.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    fn ends(&mut self, seg: Seg) -> &mut Ends {
+        match seg {
+            Seg::Probation => &mut self.probation,
+            Seg::Protected => &mut self.protected,
+        }
+    }
+
+    fn unlink(&mut self, i: u32) {
+        let (seg, prev, next) = {
+            let s = &self.slots[i as usize];
+            (s.seg, s.prev, s.next)
+        };
+        match prev {
+            NIL => self.ends(seg).head = next,
+            p => self.slots[p as usize].next = next,
+        }
+        match next {
+            NIL => self.ends(seg).tail = prev,
+            n => self.slots[n as usize].prev = prev,
+        }
+        self.ends(seg).len -= 1;
+    }
+
+    fn push_front(&mut self, seg: Seg, i: u32) {
+        let head = self.ends(seg).head;
+        {
+            let s = &mut self.slots[i as usize];
+            s.seg = seg;
+            s.prev = NIL;
+            s.next = head;
+        }
+        if head != NIL {
+            self.slots[head as usize].prev = i;
+        }
+        let ends = self.ends(seg);
+        ends.head = i;
+        if ends.tail == NIL {
+            ends.tail = i;
+        }
+        ends.len += 1;
+    }
+
+    /// Value of `key` without touching recency or segments (used to
+    /// validate an entry before deciding to promote or drop it).
+    pub fn probe(&self, key: u128) -> Option<&V> {
+        self.map.get(&key).map(|&i| &self.slots[i as usize].value)
+    }
+
+    /// Record a hit on `key`: a probation entry is promoted to the
+    /// protected MRU position (demoting the protected LRU tail back to
+    /// probation when that segment is full), a protected entry moves to
+    /// its MRU position. No-op when the key is absent.
+    pub fn touch(&mut self, key: u128) {
+        let Some(&i) = self.map.get(&key) else { return };
+        let seg = self.slots[i as usize].seg;
+        self.unlink(i);
+        if seg == Seg::Protected || self.protected_cap > 0 {
+            self.push_front(Seg::Protected, i);
+            if self.protected.len > self.protected_cap {
+                let demote = self.protected.tail;
+                self.unlink(demote);
+                self.push_front(Seg::Probation, demote);
+            }
+        } else {
+            // capacity too small for a protected segment: plain LRU
+            self.push_front(Seg::Probation, i);
+        }
+    }
+
+    /// Remove `key`; returns whether it was present.
+    pub fn remove(&mut self, key: u128) -> bool {
+        match self.map.remove(&key) {
+            Some(i) => {
+                self.unlink(i);
+                self.free.push(i);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Insert or replace `key`. A new key is admitted at the probation
+    /// MRU position; a present key has its value replaced in place (and
+    /// counts as a hit for recency). Returns how many entries were
+    /// evicted to make room (0 or 1; always 0 when replacing).
+    pub fn insert(&mut self, key: u128, value: V) -> usize {
+        if self.capacity == 0 {
+            return 0;
+        }
+        if let Some(&i) = self.map.get(&key) {
+            self.slots[i as usize].value = value;
+            self.touch(key);
+            return 0;
+        }
+        let mut evicted = 0;
+        while self.map.len() >= self.capacity {
+            let victim = if self.probation.tail != NIL {
+                self.probation.tail
+            } else {
+                self.protected.tail
+            };
+            let vkey = self.slots[victim as usize].key;
+            self.remove(vkey);
+            evicted += 1;
+        }
+        let i = match self.free.pop() {
+            Some(i) => {
+                let s = &mut self.slots[i as usize];
+                s.key = key;
+                s.value = value;
+                i
+            }
+            None => {
+                let i = self.slots.len() as u32;
+                self.slots.push(Slot {
+                    key,
+                    value,
+                    seg: Seg::Probation,
+                    prev: NIL,
+                    next: NIL,
+                });
+                i
+            }
+        };
+        self.map.insert(key, i);
+        self.push_front(Seg::Probation, i);
+        evicted
+    }
+
+    /// Keys from LRU to MRU within `(probation, protected)` — test and
+    /// diagnostics helper; not on any hot path.
+    #[cfg(test)]
+    fn segments(&self) -> (Vec<u128>, Vec<u128>) {
+        let walk = |ends: &Ends| {
+            let mut out = Vec::with_capacity(ends.len);
+            let mut i = ends.tail;
+            while i != NIL {
+                let s = &self.slots[i as usize];
+                out.push(s.key);
+                i = s.prev;
+            }
+            out
+        };
+        (walk(&self.probation), walk(&self.protected))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_probe_and_replace() {
+        let mut c = SegmentedLru::new(4);
+        assert!(c.is_empty());
+        assert_eq!(c.insert(1, "a"), 0);
+        assert_eq!(c.insert(2, "b"), 0);
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.probe(1), Some(&"a"));
+        assert_eq!(c.probe(3), None);
+        // replace keeps the count and swaps the value
+        assert_eq!(c.insert(1, "a2"), 0);
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.probe(1), Some(&"a2"));
+    }
+
+    #[test]
+    fn one_touch_keys_evict_in_insertion_order() {
+        // nothing is ever touched → everything stays in probation and
+        // eviction is pure FIFO-of-LRU
+        let mut c = SegmentedLru::new(3);
+        for k in 1..=3u128 {
+            c.insert(k, k);
+        }
+        assert_eq!(c.insert(4, 4), 1, "one eviction at capacity");
+        assert_eq!(c.probe(1), None, "LRU tail evicted first");
+        assert_eq!(c.insert(5, 5), 1);
+        assert_eq!(c.probe(2), None);
+        assert!(c.probe(3).is_some() && c.probe(4).is_some());
+        assert_eq!(c.len(), 3);
+    }
+
+    #[test]
+    fn promoted_keys_survive_a_probation_scan() {
+        // the SLRU property: a re-referenced key outlives a burst of
+        // one-touch keys bigger than the whole cache
+        let mut c = SegmentedLru::new(5); // protected_cap = 4
+        c.insert(100, 0);
+        c.touch(100); // → protected
+        for k in 0..20u128 {
+            c.insert(k, 0);
+        }
+        assert!(c.probe(100).is_some(), "protected key scanned out");
+        let (prob, prot) = c.segments();
+        assert_eq!(prot, vec![100]);
+        assert_eq!(prob.len(), 4);
+    }
+
+    #[test]
+    fn capacity_one_degenerates_to_single_slot_lru() {
+        let mut c = SegmentedLru::new(1); // protected_cap = 0
+        assert_eq!(c.insert(1, "a"), 0);
+        // touching with no protected segment keeps the entry resident
+        c.touch(1);
+        c.touch(1);
+        assert_eq!(c.probe(1), Some(&"a"));
+        assert_eq!(c.len(), 1);
+        // any new key evicts the previous one
+        assert_eq!(c.insert(2, "b"), 1);
+        assert_eq!(c.probe(1), None);
+        assert_eq!(c.probe(2), Some(&"b"));
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn capacity_zero_stores_nothing() {
+        let mut c = SegmentedLru::new(0);
+        assert_eq!(c.insert(1, "a"), 0);
+        assert!(c.is_empty());
+        assert_eq!(c.probe(1), None);
+        c.touch(1); // must not panic
+        assert!(!c.remove(1));
+    }
+
+    #[test]
+    fn protected_overflow_demotes_its_tail_not_evicts() {
+        let mut c = SegmentedLru::new(5); // protected_cap = 4
+        for k in 1..=5u128 {
+            c.insert(k, k);
+        }
+        // promote all five: the 5th promotion overflows protected and
+        // demotes the protected LRU (key 1) back to probation
+        for k in 1..=5u128 {
+            c.touch(k);
+        }
+        assert_eq!(c.len(), 5, "demotion must not evict");
+        let (prob, prot) = c.segments();
+        assert_eq!(prob, vec![1]);
+        assert_eq!(prot, vec![2, 3, 4, 5], "protected LRU→MRU order");
+        // eviction pressure takes the demoted key first
+        c.insert(6, 6);
+        assert_eq!(c.probe(1), None);
+        assert!(c.probe(2).is_some());
+    }
+
+    #[test]
+    fn capacity_two_boundary_promotion_and_demotion() {
+        // capacity 2 → protected_cap = 1: every promotion of a second
+        // key demotes the previous protected occupant instead of
+        // evicting it, and eviction always finds a probation victim
+        let mut c = SegmentedLru::new(2);
+        c.insert(1, 1);
+        c.touch(1); // 1 → protected; probation empty
+        c.insert(2, 2);
+        c.touch(2); // 2 → protected overflow → demotes 1 to probation
+        let (prob, prot) = c.segments();
+        assert_eq!((prob, prot), (vec![1], vec![2]));
+        assert_eq!(c.len(), 2, "demotion preserved both entries");
+        // at capacity the probation entry (the demoted 1) is the victim
+        assert_eq!(c.insert(3, 3), 1);
+        assert_eq!(c.probe(1), None);
+        assert!(c.probe(2).is_some(), "protected entry survives");
+        assert!(c.probe(3).is_some());
+    }
+
+    #[test]
+    fn remove_then_reinsert_reuses_slots() {
+        let mut c = SegmentedLru::new(3);
+        for k in 0..3u128 {
+            c.insert(k, k);
+        }
+        assert!(c.remove(1));
+        assert!(!c.remove(1), "double remove is a no-op");
+        assert_eq!(c.len(), 2);
+        c.insert(7, 7);
+        assert_eq!(c.len(), 3);
+        assert_eq!(c.slots.len(), 3, "freed slot reused, arena did not grow");
+        assert_eq!(c.probe(7), Some(&7));
+    }
+
+    #[test]
+    fn recency_order_is_updated_by_touch() {
+        let mut c = SegmentedLru::new(3);
+        for k in 1..=3u128 {
+            c.insert(k, k);
+        }
+        c.touch(1); // 1 → protected; probation LRU is now 2
+        c.insert(4, 4); // evicts 2
+        assert_eq!(c.probe(2), None);
+        assert!(c.probe(1).is_some());
+        assert!(c.probe(3).is_some());
+        assert!(c.probe(4).is_some());
+    }
+}

@@ -306,6 +306,66 @@ impl PostingsMode {
     }
 }
 
+/// Coordinator result-cache policy (`cache` knob; see `docs/CACHE.md`).
+///
+/// `Lru` puts a sharded, mutation-aware top-κ result cache in front of
+/// the prune → exact-rescore path: entries are keyed by a canonical
+/// query fingerprint (query factor bits + κ + engine-spec digest) and
+/// invalidated by per-shard mutation epochs, so a hit is served only
+/// when no shard has mutated since the entry was computed — cached
+/// responses are byte-identical to recomputed ones, never stale.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CacheMode {
+    /// No result caching (the default).
+    Off,
+    /// Segmented-LRU result cache holding up to `entries` responses.
+    Lru {
+        /// Total cached responses across all cache shards (>= 1).
+        entries: usize,
+    },
+}
+
+impl CacheMode {
+    /// Parse from CLI/JSON string form: `off`, `lru:<entries>`.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "off" => Ok(CacheMode::Off),
+            _ => {
+                if let Some(rest) = s.strip_prefix("lru:") {
+                    let entries: usize = rest.parse().map_err(|_| {
+                        GeomapError::Config(format!(
+                            "bad entry count in cache '{s}'"
+                        ))
+                    })?;
+                    if entries == 0 {
+                        return Err(GeomapError::Config(
+                            "cache entry count must be >= 1".into(),
+                        ));
+                    }
+                    Ok(CacheMode::Lru { entries })
+                } else {
+                    Err(GeomapError::Config(format!(
+                        "unknown cache mode '{s}' (want off | lru:<entries>)"
+                    )))
+                }
+            }
+        }
+    }
+
+    /// Canonical string form; `CacheMode::parse(m.spec())` round-trips.
+    pub fn spec(&self) -> String {
+        match self {
+            CacheMode::Off => "off".to_string(),
+            CacheMode::Lru { entries } => format!("lru:{entries}"),
+        }
+    }
+
+    /// True when result caching is enabled.
+    pub fn is_on(&self) -> bool {
+        !matches!(self, CacheMode::Off)
+    }
+}
+
 /// Incremental catalogue-mutation policy (geomap backend only).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct MutationConfig {
@@ -401,6 +461,12 @@ pub struct ServeConfig {
     pub batch_prune: bool,
     /// Background snapshot checkpointing (`None` disables it).
     pub checkpoint: Option<CheckpointConfig>,
+    /// Result-cache tier in front of the prune → rescore path
+    /// (JSON `"cache": "off" | "lru:<entries>"`, CLI `--cache`): repeated
+    /// queries under skewed traffic are answered from a sharded
+    /// segmented-LRU keyed by query fingerprint and invalidated by shard
+    /// mutation epochs — see `docs/CACHE.md`.
+    pub cache: CacheMode,
 }
 
 /// Parse an `on`/`off` toggle (the `batch_prune` knob's CLI/JSON form).
@@ -433,6 +499,7 @@ impl Default for ServeConfig {
             postings: PostingsMode::Raw,
             batch_prune: true,
             checkpoint: None,
+            cache: CacheMode::Off,
         }
     }
 }
@@ -468,6 +535,11 @@ impl ServeConfig {
                 "postings=packed requires the geomap backend (got '{}')",
                 self.backend.name()
             )));
+        }
+        if let CacheMode::Lru { entries: 0 } = self.cache {
+            return Err(GeomapError::Config(
+                "cache entry count must be >= 1 (or cache: off)".into(),
+            ));
         }
         if let Some(ck) = self.checkpoint.take() {
             self.checkpoint = Some(ck.validated()?);
@@ -522,6 +594,9 @@ impl ServeConfig {
         }
         if let Some(v) = j.opt("batch_prune") {
             c.batch_prune = parse_on_off(v.as_str()?, "batch_prune")?;
+        }
+        if let Some(v) = j.opt("cache") {
+            c.cache = CacheMode::parse(v.as_str()?)?;
         }
         if let Some(v) = j.opt("checkpoint_dir") {
             let mut ck = CheckpointConfig {
@@ -776,6 +851,35 @@ mod tests {
         assert!(parse_on_off("on", "x").unwrap());
         assert!(!parse_on_off("off", "x").unwrap());
         assert!(parse_on_off("On", "x").is_err());
+    }
+
+    #[test]
+    fn cache_parse_forms_and_json() {
+        assert_eq!(CacheMode::parse("off").unwrap(), CacheMode::Off);
+        assert_eq!(
+            CacheMode::parse("lru:4096").unwrap(),
+            CacheMode::Lru { entries: 4096 }
+        );
+        assert!(CacheMode::parse("lru:0").is_err());
+        assert!(CacheMode::parse("lru:").is_err());
+        assert!(CacheMode::parse("lru").is_err());
+        assert!(CacheMode::parse("arc:16").is_err());
+        for m in [CacheMode::Off, CacheMode::Lru { entries: 7 }] {
+            assert_eq!(CacheMode::parse(&m.spec()).unwrap(), m);
+        }
+        assert!(!CacheMode::Off.is_on());
+        assert!(CacheMode::Lru { entries: 1 }.is_on());
+        // JSON wiring + off by default
+        assert_eq!(ServeConfig::default().cache, CacheMode::Off);
+        let j = Json::parse(r#"{"cache": "lru:512"}"#).unwrap();
+        let c = ServeConfig::from_json(&j).unwrap();
+        assert_eq!(c.cache, CacheMode::Lru { entries: 512 });
+        let j = Json::parse(r#"{"cache": "bogus"}"#).unwrap();
+        assert!(ServeConfig::from_json(&j).is_err());
+        // a hand-built zero-entry cache is rejected at validation
+        let mut c = ServeConfig::default();
+        c.cache = CacheMode::Lru { entries: 0 };
+        assert!(c.validated().is_err());
     }
 
     #[test]

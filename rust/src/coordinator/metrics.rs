@@ -15,6 +15,16 @@ pub struct ServeMetrics {
     pub completed: AtomicU64,
     /// Batches dispatched.
     pub batches: AtomicU64,
+    /// Result-cache hits (responses served without prune/rescore work).
+    pub cache_hits: AtomicU64,
+    /// Result-cache misses (no entry under the query fingerprint).
+    pub cache_misses: AtomicU64,
+    /// Result-cache probes that found an entry invalidated by a shard
+    /// mutation epoch (counted separately from misses: stale probes
+    /// measure invalidation churn, misses measure working-set coverage).
+    pub cache_stale: AtomicU64,
+    /// Result-cache entries evicted to admit newer ones.
+    pub cache_evictions: AtomicU64,
     /// End-to-end latency per request (µs).
     pub latency_us: Histogram,
     /// Time spent queued before batching (µs).
@@ -48,10 +58,30 @@ impl ServeMetrics {
         }
     }
 
+    /// Result-cache probes: every submitted request that consulted the
+    /// cache, whatever the outcome.
+    pub fn cache_lookups(&self) -> u64 {
+        self.cache_hits.load(Ordering::Relaxed)
+            + self.cache_misses.load(Ordering::Relaxed)
+            + self.cache_stale.load(Ordering::Relaxed)
+    }
+
+    /// Fraction of cache probes served from the cache (0 when the cache
+    /// is off or nothing has been probed yet).
+    pub fn cache_hit_rate(&self) -> f64 {
+        let lookups = self.cache_lookups();
+        if lookups == 0 {
+            return 0.0;
+        }
+        self.cache_hits.load(Ordering::Relaxed) as f64 / lookups as f64
+    }
+
     /// Multi-line report for logs and examples. Latency, queueing,
     /// batch-size and candidate lines carry full p50/p95/p99 quantiles
     /// from the underlying histograms; the discard line adds the same
     /// quantile view next to the mean the speed-up is derived from.
+    /// When the result cache has been probed, a `cache:` line reports
+    /// hit/miss/stale/eviction counts and the hit rate.
     pub fn report(&self) -> String {
         let acc = self.accepted.load(Ordering::Relaxed);
         let rej = self.rejected.load(Ordering::Relaxed);
@@ -59,6 +89,19 @@ impl ServeMetrics {
         let batches = self.batches.load(Ordering::Relaxed).max(1);
         let (d50, d95, d99) = self.discard_bp.percentiles();
         let bp = |x: u64| x as f64 / 100.0; // basis points → percent
+        let cache = if self.cache_lookups() > 0 {
+            format!(
+                "\ncache:    {} hits, {} misses, {} stale, {} evictions → \
+                 {:.1}% hit rate",
+                self.cache_hits.load(Ordering::Relaxed),
+                self.cache_misses.load(Ordering::Relaxed),
+                self.cache_stale.load(Ordering::Relaxed),
+                self.cache_evictions.load(Ordering::Relaxed),
+                self.cache_hit_rate() * 100.0,
+            )
+        } else {
+            String::new()
+        };
         format!(
             "requests: accepted {acc}, rejected {rej}, completed {done}\n\
              batches:  {batches} (size {})\n\
@@ -66,7 +109,7 @@ impl ServeMetrics {
              queueing: {}\n\
              pruning:  {} candidates\n\
              discard:  p50 {:.1}% p95 {:.1}% p99 {:.1}%; mean {:.1}% → \
-             {:.2}x speed-up",
+             {:.2}x speed-up{cache}",
             self.batch_size.summary_with_unit(""),
             self.latency_us.summary(),
             self.queue_wait_us.summary(),
@@ -104,6 +147,52 @@ mod tests {
         let r = m.report();
         assert!(r.contains("accepted 5"));
         assert!(r.contains("rejected 1"));
+    }
+
+    #[test]
+    fn cache_counters_accumulate_monotonically() {
+        let m = ServeMetrics::new();
+        assert_eq!(m.cache_lookups(), 0);
+        assert_eq!(m.cache_hit_rate(), 0.0, "no probes → rate 0, not NaN");
+        // interleave outcomes; every observation can only grow each
+        // counter and the lookup total
+        let mut last_total = 0;
+        for round in 0..5u64 {
+            m.cache_hits.fetch_add(3, Ordering::Relaxed);
+            m.cache_misses.fetch_add(2, Ordering::Relaxed);
+            m.cache_stale.fetch_add(1, Ordering::Relaxed);
+            m.cache_evictions.fetch_add(2, Ordering::Relaxed);
+            let total = m.cache_lookups();
+            assert!(total > last_total, "lookups must be monotone");
+            last_total = total;
+            assert_eq!(total, 6 * (round + 1));
+        }
+        // 15 hits / 30 lookups
+        assert!((m.cache_hit_rate() - 0.5).abs() < 1e-9);
+        // evictions are not lookups
+        assert_eq!(m.cache_lookups(), 30);
+        assert_eq!(m.cache_evictions.load(Ordering::Relaxed), 10);
+    }
+
+    #[test]
+    fn report_includes_cache_line_only_when_probed() {
+        let m = ServeMetrics::new();
+        m.latency_us.record(50);
+        assert!(
+            !m.report().contains("cache:"),
+            "cache-off reports must be unchanged"
+        );
+        m.cache_hits.fetch_add(8, Ordering::Relaxed);
+        m.cache_misses.fetch_add(1, Ordering::Relaxed);
+        m.cache_stale.fetch_add(1, Ordering::Relaxed);
+        m.cache_evictions.fetch_add(4, Ordering::Relaxed);
+        let r = m.report();
+        assert!(r.contains("cache:"), "{r}");
+        assert!(r.contains("8 hits"), "{r}");
+        assert!(r.contains("1 misses"), "{r}");
+        assert!(r.contains("1 stale"), "{r}");
+        assert!(r.contains("4 evictions"), "{r}");
+        assert!(r.contains("80.0% hit rate"), "{r}");
     }
 
     #[test]

@@ -1,6 +1,7 @@
-//! L3 serving coordinator (DESIGN.md §6): admission control, dynamic
-//! batching, shard routing, versioned factor state, batched exact
-//! rescoring through the runtime, and serving metrics.
+//! L3 serving coordinator (`docs/ARCHITECTURE.md` §Request data path):
+//! admission control, dynamic batching, shard routing, versioned factor
+//! state, batched exact rescoring through the runtime, the result-cache
+//! tier, and serving metrics.
 //!
 //! The paper's contribution — the geometry-aware sparse map + inverted
 //! index — lives on this data path as each shard's pruning step, behind

@@ -8,7 +8,8 @@
 //! ```
 //!
 //! The dispatcher and every worker are OS threads; request/response
-//! plumbing is std `mpsc` (no tokio offline — DESIGN.md §3). Factor
+//! plumbing is std `mpsc` (no tokio offline — `docs/ARCHITECTURE.md`
+//! §Offline substitutions). Factor
 //! updates go through [`Coordinator::swap_items`] (whole catalogue) or
 //! [`Coordinator::upsert`] / [`Coordinator::remove`] (incremental, geomap
 //! backend): in-flight batches finish on their old snapshot, new batches
@@ -21,7 +22,8 @@ use super::metrics::ServeMetrics;
 use super::router::merge_topk;
 use super::state::{FactorStore, Shard};
 use super::worker::{process_batch, ShardPartial, WorkerScratch};
-use crate::configx::ServeConfig;
+use crate::cache::{fingerprint, CachedResponse, Lookup, ResultCache};
+use crate::configx::{CacheMode, ServeConfig};
 use crate::engine::{explicit, Engine};
 use crate::error::{GeomapError, Result};
 use crate::linalg::Matrix;
@@ -51,7 +53,17 @@ struct Pending {
     user: Vec<f32>,
     kappa: usize,
     reply: mpsc::SyncSender<Result<Response>>,
+    /// When `submit` started — end-to-end latency is measured from here
+    /// (includes the cache probe, like the hit path's latency does).
+    submitted: Instant,
+    /// When the request entered the queue — `queue_wait_us` is measured
+    /// from here so the metric stays pure queue time and is not
+    /// polluted by fingerprinting or cache-mutex contention.
     enqueued: Instant,
+    /// Query fingerprint, precomputed by the submit-side cache probe so
+    /// the dispatcher can insert the computed response without hashing
+    /// again (`None` when the cache is off).
+    fingerprint: Option<u128>,
 }
 
 struct Job {
@@ -62,7 +74,8 @@ struct Job {
     reply: mpsc::Sender<(u64, usize, Result<ShardPartial>)>,
 }
 
-/// The serving coordinator (paper contribution host, DESIGN.md §6).
+/// The serving coordinator (paper contribution host; the full request
+/// walkthrough lives in `docs/ARCHITECTURE.md` §Request data path).
 pub struct Coordinator {
     cfg: ServeConfig,
     store: Arc<FactorStore>,
@@ -72,6 +85,11 @@ pub struct Coordinator {
     dispatcher: Option<std::thread::JoinHandle<()>>,
     workers: Vec<std::thread::JoinHandle<()>>,
     checkpointer: Option<Checkpointer>,
+    /// Result-cache tier (`ServeConfig::cache`, see `docs/CACHE.md`):
+    /// probed on submit, filled by the dispatcher after rescore.
+    cache: Option<Arc<ResultCache>>,
+    /// Engine-spec digest folded into every query fingerprint.
+    spec_digest: u64,
 }
 
 impl Coordinator {
@@ -87,6 +105,29 @@ impl Coordinator {
     }
 
     /// Build the factor store, spawn shard workers and the dispatcher.
+    ///
+    /// ```
+    /// use geomap::configx::ServeConfig;
+    /// use geomap::coordinator::Coordinator;
+    /// use geomap::data::gaussian_factors;
+    /// use geomap::rng::Rng;
+    /// use geomap::runtime::cpu_scorer_factory;
+    /// let mut rng = Rng::seeded(1);
+    /// let items = gaussian_factors(&mut rng, 100, 16);
+    /// let cfg = ServeConfig {
+    ///     k: 16,
+    ///     shards: 1,
+    ///     use_xla: false, // pure-rust scorer: no AOT artifacts needed
+    ///     threshold: 0.0,
+    ///     ..ServeConfig::default()
+    /// };
+    /// let coord = Coordinator::start(cfg, items, cpu_scorer_factory())?;
+    /// let user: Vec<f32> = (0..16).map(|_| rng.gaussian_f32()).collect();
+    /// let resp = coord.submit(user, 5)?;
+    /// assert!(resp.results.len() <= 5);
+    /// coord.shutdown();
+    /// # Ok::<(), geomap::error::GeomapError>(())
+    /// ```
     pub fn start(
         cfg: ServeConfig,
         items: Matrix,
@@ -184,15 +225,26 @@ impl Coordinator {
             );
         }
 
+        // result-cache tier: probed on submit, filled by the dispatcher
+        let cache = match cfg.cache {
+            CacheMode::Off => None,
+            CacheMode::Lru { entries } => {
+                Some(Arc::new(ResultCache::new(entries)))
+            }
+        };
+
         // dispatcher
         let dispatcher = {
             let queue = Arc::clone(&queue);
             let store = Arc::clone(&store);
             let metrics = Arc::clone(&metrics);
+            let cache = cache.clone();
             let cfg2 = cfg.clone();
             std::thread::Builder::new()
                 .name("geomap-dispatcher".into())
-                .spawn(move || dispatcher_loop(cfg2, queue, store, metrics, job_txs))
+                .spawn(move || {
+                    dispatcher_loop(cfg2, queue, store, metrics, job_txs, cache)
+                })
                 .expect("spawn dispatcher")
         };
 
@@ -218,6 +270,7 @@ impl Coordinator {
             None => None,
         };
 
+        let spec_digest = store.spec().digest();
         Ok(Coordinator {
             cfg,
             store,
@@ -227,10 +280,18 @@ impl Coordinator {
             dispatcher: Some(dispatcher),
             workers,
             checkpointer,
+            cache,
+            spec_digest,
         })
     }
 
     /// Submit a query and block for its response.
+    ///
+    /// With the result cache on (`ServeConfig::cache`), a repeated query
+    /// whose catalogue shards have not mutated since it was last
+    /// computed is answered here — byte-identical results, no queueing,
+    /// no prune/rescore work; everything else proceeds through the
+    /// batch path and is inserted into the cache after rescoring.
     pub fn submit(&self, user: Vec<f32>, kappa: usize) -> Result<Response> {
         if user.len() != self.cfg.k {
             return Err(GeomapError::Shape(format!(
@@ -242,9 +303,52 @@ impl Coordinator {
         if self.closing.load(Ordering::Acquire) {
             return Err(GeomapError::Rejected("coordinator shutting down".into()));
         }
+        let start = Instant::now();
+        let mut fp = None;
+        if let Some(cache) = &self.cache {
+            let f = fingerprint(&user, kappa, self.spec_digest);
+            let snap = self.store.snapshot();
+            match cache.lookup(f, &snap.epochs) {
+                Lookup::Hit(hit) => {
+                    let m = &self.metrics;
+                    m.accepted.fetch_add(1, Ordering::Relaxed);
+                    m.cache_hits.fetch_add(1, Ordering::Relaxed);
+                    m.completed.fetch_add(1, Ordering::Relaxed);
+                    m.candidates.record(hit.candidates as u64);
+                    if hit.total_items > 0 {
+                        m.discard_bp.record(10_000u64.saturating_sub(
+                            (hit.candidates * 10_000 / hit.total_items) as u64,
+                        ));
+                    }
+                    let latency_us = start.elapsed().as_micros() as u64;
+                    m.latency_us.record(latency_us);
+                    // the Vec copy happens here, outside the cache lock
+                    return Ok(Response {
+                        results: hit.results.clone(),
+                        candidates: hit.candidates,
+                        total_items: hit.total_items,
+                        version: hit.version,
+                        latency_us,
+                    });
+                }
+                Lookup::Miss => {
+                    self.metrics.cache_misses.fetch_add(1, Ordering::Relaxed);
+                }
+                Lookup::Stale => {
+                    self.metrics.cache_stale.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            fp = Some(f);
+        }
         let (tx, rx) = mpsc::sync_channel(1);
-        let pending =
-            Pending { user, kappa, reply: tx, enqueued: Instant::now() };
+        let pending = Pending {
+            user,
+            kappa,
+            reply: tx,
+            submitted: start,
+            enqueued: Instant::now(),
+            fingerprint: fp,
+        };
         match self.queue.push(pending) {
             Ok(()) => {
                 self.metrics.accepted.fetch_add(1, Ordering::Relaxed);
@@ -387,6 +491,7 @@ fn dispatcher_loop(
     store: Arc<FactorStore>,
     metrics: Arc<ServeMetrics>,
     job_txs: Vec<mpsc::Sender<Job>>,
+    cache: Option<Arc<ResultCache>>,
 ) {
     let max_wait = Duration::from_micros(cfg.max_wait_us);
     let (partial_tx, partial_rx) =
@@ -481,9 +586,29 @@ fn dispatcher_loop(
                 metrics.discard_bp.record(discard_bp);
             }
             metrics.candidates.record(candidates as u64);
-            let latency_us = p.enqueued.elapsed().as_micros() as u64;
+            let latency_us = p.submitted.elapsed().as_micros() as u64;
             metrics.latency_us.record(latency_us);
             metrics.completed.fetch_add(1, Ordering::Relaxed);
+            // fill the result cache under the epochs of the snapshot
+            // that served this batch: if a mutation landed mid-batch,
+            // the entry is simply born stale and never served
+            if let (Some(cache), Some(f)) = (cache.as_ref(), p.fingerprint) {
+                let evicted = cache.insert(
+                    f,
+                    &snapshot.epochs,
+                    CachedResponse {
+                        results: results.clone(),
+                        candidates,
+                        total_items: total,
+                        version: snapshot.version,
+                    },
+                );
+                if evicted > 0 {
+                    metrics
+                        .cache_evictions
+                        .fetch_add(evicted as u64, Ordering::Relaxed);
+                }
+            }
             let _ = p.reply.send(Ok(Response {
                 results,
                 candidates,
@@ -785,6 +910,79 @@ mod tests {
         assert_eq!(warm.version(), v);
         assert_eq!(warm.total_items(), 61);
         warm.shutdown();
+    }
+
+    #[test]
+    fn cached_hit_is_byte_identical_and_counted() {
+        let k = 8;
+        let mut cfg = test_cfg(k, 2);
+        cfg.cache = CacheMode::Lru { entries: 64 };
+        let coord = Coordinator::start(
+            cfg,
+            items(200, k, 60),
+            cpu_scorer_factory(),
+        )
+        .unwrap();
+        let user = crate::testing::fix::user(k, 61);
+        let cold = coord.submit(user.clone(), 5).unwrap();
+        let warm = coord.submit(user.clone(), 5).unwrap();
+        assert_eq!(
+            cold.results.iter().map(|s| (s.id, s.score.to_bits())).collect::<Vec<_>>(),
+            warm.results.iter().map(|s| (s.id, s.score.to_bits())).collect::<Vec<_>>(),
+            "cached response must be byte-identical"
+        );
+        assert_eq!(warm.candidates, cold.candidates);
+        assert_eq!(warm.total_items, cold.total_items);
+        assert_eq!(warm.version, cold.version);
+        let m = coord.metrics();
+        assert_eq!(m.cache_hits.load(Ordering::Relaxed), 1);
+        assert_eq!(m.cache_misses.load(Ordering::Relaxed), 1);
+        assert_eq!(m.cache_stale.load(Ordering::Relaxed), 0);
+        assert_eq!(m.completed.load(Ordering::Relaxed), 2);
+        // a different κ is a different fingerprint, not a hit
+        let other = coord.submit(user, 3).unwrap();
+        assert!(other.results.len() <= 3);
+        assert_eq!(m.cache_misses.load(Ordering::Relaxed), 2);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn mutation_invalidates_cache_before_next_hit() {
+        let k = 8;
+        let mut cfg = test_cfg(k, 2);
+        cfg.cache = CacheMode::Lru { entries: 64 };
+        let coord = Coordinator::start(
+            cfg,
+            items(120, k, 62),
+            cpu_scorer_factory(),
+        )
+        .unwrap();
+        let user = crate::testing::fix::user(k, 63);
+        let first = coord.submit(user.clone(), 5).unwrap();
+        assert!(!first.results.is_empty());
+        // warm the cache, then remove the served top item
+        let _ = coord.submit(user.clone(), 5).unwrap();
+        let top_id = first.results[0].id;
+        let (v, live) = coord.remove(top_id).unwrap();
+        assert!(live);
+        // the next lookup must observe the epoch bump: never the stale
+        // cached response containing the removed id
+        let after = coord.submit(user.clone(), 5).unwrap();
+        assert_eq!(after.version, v);
+        assert!(
+            after.results.iter().all(|s| s.id != top_id),
+            "stale cached result served after mutation"
+        );
+        let m = coord.metrics();
+        assert_eq!(m.cache_stale.load(Ordering::Relaxed), 1);
+        // and the recomputed entry serves hits again
+        let again = coord.submit(user, 5).unwrap();
+        assert_eq!(
+            again.results.iter().map(|s| (s.id, s.score.to_bits())).collect::<Vec<_>>(),
+            after.results.iter().map(|s| (s.id, s.score.to_bits())).collect::<Vec<_>>(),
+        );
+        assert_eq!(m.cache_hits.load(Ordering::Relaxed), 2);
+        coord.shutdown();
     }
 
     #[test]

@@ -38,6 +38,13 @@ pub struct Shard {
     pub base_id: u32,
     /// The candidate engine over this shard's items.
     pub engine: Engine,
+    /// Mutation epoch: bumped every time this shard's engine state
+    /// changes (`upsert`/`remove`/`swap_items`; threshold-triggered
+    /// merges ride inside the mutation that fires them). The result
+    /// cache records the epoch vector each entry was computed under and
+    /// serves a hit only while every shard epoch still matches — epochs
+    /// only grow, so stale entries can never revalidate (`docs/CACHE.md`).
+    pub epoch: u64,
 }
 
 impl Shard {
@@ -55,6 +62,21 @@ pub struct ShardSet {
     pub shards: Vec<Arc<Shard>>,
     /// Total addressable ids across shards.
     pub total_items: usize,
+    /// The shards' mutation epochs, in shard order — precomputed so the
+    /// cache lookup on the submit path compares one slice instead of
+    /// walking the shard `Arc`s.
+    pub epochs: Box<[u64]>,
+}
+
+impl ShardSet {
+    /// Assemble a set from shards, deriving the item total and the
+    /// epoch vector (the single construction path, so the derived
+    /// fields cannot drift from the shards).
+    fn assemble(version: u64, shards: Vec<Arc<Shard>>) -> ShardSet {
+        let total_items = shards.iter().map(|s| s.items()).sum();
+        let epochs = shards.iter().map(|s| s.epoch).collect();
+        ShardSet { version, shards, total_items, epochs }
+    }
 }
 
 /// Versioned store of mapped + indexed item factors.
@@ -101,9 +123,13 @@ impl FactorStore {
                 id: s,
                 base_id: lo as u32,
                 engine: spec.build(slice)?,
+                // a full (re)build stamps every shard with the set
+                // version: always above any epoch of the previous set,
+                // so all cached results go stale at once
+                epoch: version,
             }));
         }
-        Ok(ShardSet { version, shards, total_items: total })
+        Ok(ShardSet::assemble(version, shards))
     }
 
     /// Snapshot the current shard set (cheap: one Arc clone).
@@ -152,9 +178,8 @@ impl FactorStore {
         let version = snap.version + 1;
         let mut shards = snap.shards.clone();
         shards[s] = Arc::new(shard);
-        let total_items = shards.iter().map(|sh| sh.items()).sum();
         *self.current.write().unwrap() =
-            Arc::new(ShardSet { version, shards, total_items });
+            Arc::new(ShardSet::assemble(version, shards));
         version
     }
 
@@ -181,8 +206,12 @@ impl FactorStore {
         let s = Self::route(&snap, id, true)?;
         let mut engine = self.cow_engine(&snap, s)?;
         engine.upsert(id - snap.shards[s].base_id, factor)?;
-        let shard =
-            Shard { id: s, base_id: snap.shards[s].base_id, engine };
+        let shard = Shard {
+            id: s,
+            base_id: snap.shards[s].base_id,
+            engine,
+            epoch: snap.shards[s].epoch + 1,
+        };
         Ok(self.replace_shard(&snap, s, shard))
     }
 
@@ -196,10 +225,16 @@ impl FactorStore {
         let mut engine = self.cow_engine(&snap, s)?;
         let was_live = engine.remove(id - snap.shards[s].base_id)?;
         if !was_live {
+            // a dead-id remove changes nothing: no version bump, no
+            // epoch bump, cached results stay valid
             return Ok((snap.version, false));
         }
-        let shard =
-            Shard { id: s, base_id: snap.shards[s].base_id, engine };
+        let shard = Shard {
+            id: s,
+            base_id: snap.shards[s].base_id,
+            engine,
+            epoch: snap.shards[s].epoch + 1,
+        };
         Ok((self.replace_shard(&snap, s, shard), true))
     }
 
@@ -225,11 +260,9 @@ impl FactorStore {
         if snap.version >= floor {
             return;
         }
-        let set = ShardSet {
-            version: floor,
-            shards: snap.shards.clone(),
-            total_items: snap.total_items,
-        };
+        // shard state is untouched, so epochs (and cached results, were
+        // any to exist this early) carry over unchanged
+        let set = ShardSet::assemble(floor, snap.shards.clone());
         *self.current.write().unwrap() = Arc::new(set);
     }
 
@@ -268,14 +301,18 @@ impl FactorStore {
                 )));
             }
             expect_base += engine.len() as u32;
-            shards.push(Arc::new(Shard { id, base_id, engine }));
+            shards.push(Arc::new(Shard {
+                id,
+                base_id,
+                engine,
+                // a warm start begins a fresh epoch history at the
+                // snapshot's catalogue version (the cache starts empty,
+                // so only monotonicity from here on matters)
+                epoch: loaded.catalogue_version,
+            }));
         }
         let n_shards = shards.len();
-        let set = ShardSet {
-            version: loaded.catalogue_version,
-            shards,
-            total_items: expect_base as usize,
-        };
+        let set = ShardSet::assemble(loaded.catalogue_version, shards);
         Ok(FactorStore {
             spec,
             n_shards,
@@ -423,6 +460,33 @@ mod tests {
         assert_eq!(restored.snapshot().shards[1].engine.factor(40 - 26), None);
         let v = restored.upsert(103, &[0.5; 8]).unwrap();
         assert_eq!(v, saved_version + 1);
+    }
+
+    #[test]
+    fn epochs_track_mutations_per_shard() {
+        let s = store(40, 2);
+        let e0 = s.snapshot().epochs.clone();
+        assert_eq!(e0.len(), 2);
+        // mutating shard 1 bumps only shard 1's epoch
+        s.upsert(30, &[0.5; 8]).unwrap();
+        let e1 = s.snapshot().epochs.clone();
+        assert_eq!(e1[0], e0[0], "untouched shard keeps its epoch");
+        assert_eq!(e1[1], e0[1] + 1);
+        // a live remove bumps the owning shard
+        s.remove(5).unwrap();
+        let e2 = s.snapshot().epochs.clone();
+        assert_eq!(e2[0], e1[0] + 1);
+        assert_eq!(e2[1], e1[1]);
+        // a dead-id remove is a no-op: no epoch movement at all
+        let (_, live) = s.remove(5).unwrap();
+        assert!(!live);
+        assert_eq!(*s.snapshot().epochs, *e2);
+        // a whole-catalogue swap moves every epoch strictly forward
+        s.swap_items(items(50, 8, 9)).unwrap();
+        let e3 = s.snapshot().epochs.clone();
+        for (new, old) in e3.iter().zip(e2.iter()) {
+            assert!(new > old, "swap must invalidate every shard");
+        }
     }
 
     #[test]

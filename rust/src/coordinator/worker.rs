@@ -2,7 +2,8 @@
 //!
 //! Each worker owns one shard ordinal and its own [`Scorer`] (PJRT
 //! clients are not `Send`, so the scorer is built *on* the worker thread
-//! from a [`ScorerFactory`]). Per batch the worker:
+//! from a [`ScorerFactory`](crate::runtime::ScorerFactory)). Per batch
+//! the worker:
 //!
 //! 1. prunes the **whole batch in one engine call**
 //!    (`candidates_batch_into`: the geomap backend walks the inverted

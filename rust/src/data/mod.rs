@@ -5,7 +5,7 @@
 //! ([`Ratings::load_movielens`]); offline, [`MovieLensSynth`] generates a
 //! ratings log with the same shape (943 users × 1682 items, ~100k
 //! ratings, Zipf item popularity, clustered low-rank latent structure) —
-//! see the DESIGN.md §3 substitution table for why this preserves the
+//! see docs/ARCHITECTURE.md §Offline substitutions for why this preserves the
 //! experiment's geometry.
 
 mod io;

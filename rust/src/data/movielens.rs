@@ -1,5 +1,5 @@
 //! MovieLens-100k ratings: real-file loader plus a synthetic generator
-//! with the same shape (DESIGN.md §3 substitution).
+//! with the same shape (docs/ARCHITECTURE.md §Offline substitutions).
 //!
 //! The real dataset's `u.data` is tab-separated `user \t item \t rating
 //! \t timestamp` with 1-based ids, 943 users, 1682 items, 100k ratings.

@@ -4,6 +4,12 @@
 //! map `φ : R^k → R^p`: factor coordinate `z^j` lands at index `τ_j` of a
 //! p-dimensional sparse vector. Factors that share a Voronoi tile get the
 //! same index map; factors in nearby tiles get overlapping maps.
+//!
+//! Retrieval applications select a schema through
+//! `Engine::builder().schema(..)` ([`crate::configx::SchemaConfig`],
+//! `docs/ENGINE.md`) rather than constructing a `Mapper` directly; the
+//! `geomap map` CLI subcommand exposes this module for embedding/index
+//! diagnostics.
 
 use crate::configx::SchemaConfig;
 use crate::error::{GeomapError, Result};

@@ -17,19 +17,22 @@
 //! * [`Engine`] — the facade owning prune → exact-rescore → top-κ,
 //!   constructed with a builder:
 //!
-//!   ```no_run
+//!   ```
 //!   use geomap::configx::{Backend, SchemaConfig};
+//!   use geomap::data::gaussian_factors;
 //!   use geomap::engine::Engine;
-//!   use geomap::linalg::Matrix;
-//!   # let items = Matrix::zeros(10, 8);
+//!   use geomap::rng::Rng;
+//!   let mut rng = Rng::seeded(7);
+//!   let items = gaussian_factors(&mut rng, 64, 8);
 //!   let engine = Engine::builder()
 //!       .schema(SchemaConfig::TernaryParseTree)
 //!       .backend(Backend::Geomap)
 //!       .threshold(1.3)
 //!       .build(items)
 //!       .unwrap();
-//!   let top = engine.top_k(&[0.0; 8], 10).unwrap();
-//!   # let _ = top;
+//!   let user: Vec<f32> = (0..8).map(|_| rng.gaussian_f32()).collect();
+//!   let top = engine.top_k(&user, 10).unwrap();
+//!   assert!(top.len() <= 10);
 //!   ```
 //!
 //! * [`MutableCatalogue`] — incremental mutation (`upsert` / `remove`)
@@ -455,6 +458,40 @@ impl EngineBuilder {
         self.conflicts_with(other, u8::MAX, "a").is_empty()
     }
 
+    /// Stable 64-bit digest of the engine spec (every field that can
+    /// change retrieval results). Builders that are
+    /// [`same_spec`](Self::same_spec) always digest equal; differing
+    /// specs digest differently up to 64-bit hash collision. The result
+    /// cache folds this into its query fingerprint so entries computed
+    /// under one spec can never answer a query served under another
+    /// (`docs/CACHE.md`).
+    pub fn digest(&self) -> u64 {
+        // FNV-1a over the canonical round-tripping string forms plus the
+        // raw numeric fields; '\x1f' separators keep fields from
+        // concatenating ambiguously.
+        let mut h = 0xcbf29ce484222325u64;
+        let mut eat = |bytes: &[u8]| {
+            for &b in bytes {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x100000001b3);
+            }
+            h ^= 0x1f;
+            h = h.wrapping_mul(0x100000001b3);
+        };
+        eat(self.schema.spec().as_bytes());
+        // normalize -0.0 → 0.0 so bit-hashing agrees with same_spec's
+        // `==` comparison (which treats the two as equal)
+        let threshold = self.threshold + 0.0;
+        eat(&threshold.to_bits().to_le_bytes());
+        eat(self.backend.spec().as_bytes());
+        eat(&(self.min_overlap as u64).to_le_bytes());
+        eat(&self.seed.to_le_bytes());
+        eat(&(self.mutation.max_delta as u64).to_le_bytes());
+        eat(self.quant.spec().as_bytes());
+        eat(self.postings.spec().as_bytes());
+        h
+    }
+
     /// Field-by-field conflict report against a snapshot spec,
     /// restricted to the fields selected by `mask` (see [`explicit`]);
     /// `ours` labels this side in the messages ("builder", "config").
@@ -677,7 +714,26 @@ impl Engine {
     /// state + config) to a `GSNP` snapshot at `path`, atomically
     /// (tmp file + rename). Returns the snapshot size in bytes.
     ///
-    /// Load it back with [`EngineBuilder::from_snapshot`].
+    /// Load it back with [`EngineBuilder::from_snapshot`]:
+    ///
+    /// ```
+    /// use geomap::prelude::*;
+    /// let mut rng = Rng::seeded(11);
+    /// let engine = Engine::builder()
+    ///     .threshold(0.5)
+    ///     .build(gaussian_factors(&mut rng, 50, 8))?;
+    /// let path = std::env::temp_dir()
+    ///     .join("geomap-doc-save-snapshot.gsnp")
+    ///     .to_string_lossy()
+    ///     .into_owned();
+    /// engine.save_snapshot(&path)?;
+    /// // reassembled without re-mapping; same spec, same results
+    /// let restored = Engine::builder().from_snapshot(&path)?;
+    /// assert_eq!(restored.len(), engine.len());
+    /// assert!(restored.spec().same_spec(&engine.spec()));
+    /// # std::fs::remove_file(&path).ok();
+    /// # Ok::<(), geomap::error::GeomapError>(())
+    /// ```
     pub fn save_snapshot(&self, path: &str) -> Result<u64> {
         crate::snapshot::save_engine(path, self)
     }
@@ -880,6 +936,19 @@ impl Engine {
     }
 
     /// Top-κ via prune + rescore (allocating convenience).
+    ///
+    /// ```
+    /// use geomap::prelude::*;
+    /// let mut rng = Rng::seeded(3);
+    /// let items = gaussian_factors(&mut rng, 200, 16);
+    /// let engine = Engine::builder().threshold(0.5).build(items)?;
+    /// let user: Vec<f32> = (0..16).map(|_| rng.gaussian_f32()).collect();
+    /// let top = engine.top_k(&user, 5)?;
+    /// assert!(top.len() <= 5);
+    /// // descending exact inner-product scores
+    /// assert!(top.windows(2).all(|w| w[0].score >= w[1].score));
+    /// # Ok::<(), geomap::error::GeomapError>(())
+    /// ```
     pub fn top_k(&self, user: &[f32], kappa: usize) -> Result<Vec<Scored>> {
         let mut scratch = SourceScratch::new();
         let mut cand = Vec::new();
@@ -1035,6 +1104,32 @@ mod tests {
             assert_eq!(stats.len, 120);
             assert_eq!(stats.live, 120);
             assert_eq!(engine.backend(), backend);
+        }
+    }
+
+    #[test]
+    fn spec_digest_separates_every_field() {
+        let base = Engine::builder();
+        assert_eq!(base.digest(), Engine::builder().digest(), "deterministic");
+        // re-setting a field to its default value digests identically:
+        // the digest covers spec *values*, not the explicit-setting mask
+        assert_eq!(base.digest(), base.threshold(0.0).digest());
+        // -0.0 == 0.0 per same_spec's comparison, so digests must agree
+        assert_eq!(base.threshold(0.0).digest(), base.threshold(-0.0).digest());
+        assert!(base.threshold(0.0).same_spec(&base.threshold(-0.0)));
+        let variants = [
+            base.schema(SchemaConfig::TernaryOneHot),
+            base.threshold(0.5),
+            base.backend(Backend::Brute),
+            base.min_overlap(2),
+            base.seed(1),
+            base.mutation(MutationConfig { max_delta: 7 }),
+            base.quant(QuantMode::Int8 { refine: 4 }),
+            base.postings(PostingsMode::Packed),
+        ];
+        for (i, v) in variants.iter().enumerate() {
+            assert_ne!(base.digest(), v.digest(), "variant {i} collided");
+            assert!(!base.same_spec(v));
         }
     }
 

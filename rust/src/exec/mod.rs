@@ -1,5 +1,6 @@
 //! Execution substrate: a dependency-free thread pool and parallel
-//! iteration helpers (no rayon/tokio available offline — see DESIGN.md §3).
+//! iteration helpers (no rayon/tokio available offline —
+//! see docs/ARCHITECTURE.md §Offline substitutions).
 //!
 //! The coordinator uses [`ThreadPool`] for its worker shards; batch mapping
 //! of factors uses [`parallel_chunks`].

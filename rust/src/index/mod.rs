@@ -1,5 +1,12 @@
 //! Inverted index over sparse embeddings (paper §1.1).
 //!
+//! This is an internal layer of the geomap backend: applications prune
+//! and retrieve through the [`crate::engine::Engine`] facade
+//! (`Engine::builder()`, `docs/ENGINE.md`), which owns the index,
+//! tombstones, and the delta segment; the serving stack reaches it via
+//! the coordinator. Use this module directly only when building custom
+//! index tooling.
+//!
 //! Each embedding dimension `i < p` owns a posting list of the item ids
 //! whose φ(v) is non-zero at `i`. A query walks the posting lists of the
 //! user's support and returns every item hit at least `min_overlap` times

@@ -19,7 +19,7 @@
 //!
 //! ## Quick start
 //!
-//! ```no_run
+//! ```
 //! use geomap::prelude::*;
 //!
 //! // 1. factors on the unit sphere
@@ -47,6 +47,7 @@
 
 pub mod baselines;
 pub mod bench;
+pub mod cache;
 pub mod cluster;
 pub mod configx;
 pub mod coordinator;
@@ -76,8 +77,10 @@ pub mod prelude {
     pub use crate::baselines::{
         BruteForce, CandidateFilter, ConcomitantLsh, PcaTree, SrpLsh, SuperbitLsh,
     };
+    pub use crate::cache::ResultCache;
     pub use crate::configx::{
-        Backend, MutationConfig, PostingsMode, QuantMode, SchemaConfig,
+        Backend, CacheMode, MutationConfig, PostingsMode, QuantMode,
+        SchemaConfig,
     };
     pub use crate::data::{gaussian_factors, MovieLensSynth, Ratings};
     pub use crate::embedding::{Mapper, PermutationKind, TessellationKind};

@@ -136,6 +136,12 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             "batched term-major candidate generation: on | off (off = \
              per-request reference loop; identical results)",
         )
+        .opt(
+            "cache",
+            "off",
+            "result-cache tier: off | lru:<entries> (mutation-aware top-κ \
+             cache; repeated queries skip prune+rescore)",
+        )
         .opt("shards", "2", "index shards (worker threads)")
         .opt("max-batch", "32", "dynamic batch size cap")
         .opt("max-wait-us", "500", "batching window (µs)")
@@ -178,6 +184,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             "--batch-prune",
         )?,
         checkpoint: None,
+        cache: geomap::configx::CacheMode::parse(cli.get("cache"))?,
     };
     let factory = if cfg.use_xla {
         xla_scorer_factory(&cfg.artifacts_dir)

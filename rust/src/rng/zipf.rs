@@ -1,6 +1,6 @@
 //! Zipf-distributed sampler — used by the MovieLens-like synthetic ratings
 //! generator to reproduce the heavy-tailed item popularity of real
-//! recommendation logs (DESIGN.md §3 substitution table).
+//! recommendation logs (docs/ARCHITECTURE.md §Offline substitutions).
 
 use super::Rng;
 

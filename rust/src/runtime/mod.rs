@@ -2,7 +2,8 @@
 //! PJRT CPU client from the serving hot path.
 //!
 //! The interchange format is HLO *text* (see `python/compile/aot.py` and
-//! DESIGN.md §2): `HloModuleProto::from_text_file` → `XlaComputation` →
+//! `docs/ARCHITECTURE.md` §Runtime bridge):
+//! `HloModuleProto::from_text_file` → `XlaComputation` →
 //! `client.compile` once per module, then `execute` per batch.
 //!
 //! `PjRtClient` is `Rc`-based (not `Send`), so an [`XlaRuntime`] must stay

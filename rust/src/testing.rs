@@ -1,5 +1,6 @@
 //! Test support: a seeded property runner (proptest is unavailable
-//! offline — DESIGN.md §3) plus the shared synthetic fixtures ([`fix`])
+//! offline — `docs/ARCHITECTURE.md` §Offline substitutions) plus the
+//! shared synthetic fixtures ([`fix`])
 //! the integration tests and bench targets build their workloads from.
 //!
 //! A deliberately small, seeded property runner:

@@ -1,0 +1,209 @@
+//! Result-cache equivalence (docs/CACHE.md): a coordinator with
+//! `cache: lru:<n>` must be *observably indistinguishable* from one with
+//! `cache: off` — byte-identical results, candidate counts, catalogue
+//! totals and versions for every backend — and a mutation between
+//! repeated queries must always yield the post-mutation response (stale
+//! entries are invalidated by shard mutation epochs, never served).
+
+use geomap::configx::{Backend, CacheMode, PostingsMode, QuantMode, ServeConfig};
+use geomap::coordinator::{Coordinator, Response};
+use geomap::rng::Rng;
+use geomap::runtime::cpu_scorer_factory;
+use geomap::testing::fix;
+use std::sync::atomic::Ordering;
+
+/// Everything in a `Response` except latency, with scores at bit
+/// precision ("byte-identical" is judged on this).
+fn key(r: &Response) -> (Vec<(u32, u32)>, usize, usize, u64) {
+    (
+        r.results.iter().map(|s| (s.id, s.score.to_bits())).collect(),
+        r.candidates,
+        r.total_items,
+        r.version,
+    )
+}
+
+fn pair(
+    mut cfg: ServeConfig,
+    entries: usize,
+    n: usize,
+    seed: u64,
+) -> (Coordinator, Coordinator) {
+    let off = Coordinator::start(
+        cfg.clone(),
+        fix::items(n, cfg.k, seed),
+        cpu_scorer_factory(),
+    )
+    .unwrap();
+    cfg.cache = CacheMode::Lru { entries };
+    let on = Coordinator::start(
+        cfg.clone(),
+        fix::items(n, cfg.k, seed),
+        cpu_scorer_factory(),
+    )
+    .unwrap();
+    (on, off)
+}
+
+#[test]
+fn cached_matches_uncached_on_every_backend() {
+    let k = 8;
+    for backend in fix::all_backends() {
+        let cfg = fix::serve_cfg(k, 2, backend, 0.5);
+        let (on, off) = pair(cfg, 256, 300, 70);
+        let users = fix::user_vecs(20, k, 71);
+        // pass 0 fills the cache; pass 1 serves (mostly) from it — both
+        // passes must be indistinguishable from the uncached coordinator
+        for pass in 0..2 {
+            for (i, u) in users.iter().enumerate() {
+                let a = on.submit(u.clone(), 6).unwrap();
+                let b = off.submit(u.clone(), 6).unwrap();
+                assert_eq!(
+                    key(&a),
+                    key(&b),
+                    "{backend:?}: pass {pass}, user {i}"
+                );
+            }
+        }
+        let m = on.metrics();
+        assert_eq!(
+            m.cache_hits.load(Ordering::Relaxed),
+            20,
+            "{backend:?}: second pass must be all hits"
+        );
+        assert_eq!(m.cache_stale.load(Ordering::Relaxed), 0);
+        on.shutdown();
+        off.shutdown();
+    }
+}
+
+#[test]
+fn cached_matches_uncached_with_quant_and_packed_postings() {
+    // the fingerprint folds the engine-spec digest, so the compressed
+    // tier caches like any other config — and stays byte-identical
+    let k = 16;
+    let mut cfg = fix::serve_cfg(k, 2, Backend::Geomap, 0.5);
+    cfg.quant = QuantMode::Int8 { refine: 4 };
+    cfg.postings = PostingsMode::Packed;
+    let (on, off) = pair(cfg, 64, 400, 72);
+    let users = fix::user_vecs(12, k, 73);
+    for _ in 0..2 {
+        for u in &users {
+            let a = on.submit(u.clone(), 8).unwrap();
+            let b = off.submit(u.clone(), 8).unwrap();
+            assert_eq!(key(&a), key(&b));
+        }
+    }
+    assert_eq!(on.metrics().cache_hits.load(Ordering::Relaxed), 12);
+    on.shutdown();
+    off.shutdown();
+}
+
+#[test]
+fn interleaved_mutations_always_yield_post_mutation_results() {
+    // seeded churn: after every upsert/append/remove applied to both
+    // coordinators, a repeated query on the cached coordinator must
+    // equal the uncached one — a stale hit would freeze the pre-mutation
+    // response and fail the comparison
+    let k = 8;
+    let cfg = fix::serve_cfg(k, 2, Backend::Geomap, 0.0);
+    let (on, off) = pair(cfg, 128, 200, 80);
+    let pool = fix::user_vecs(8, k, 81);
+    let compare_all = |label: &str| {
+        for (i, u) in pool.iter().enumerate() {
+            let a = on.submit(u.clone(), 5).unwrap();
+            let b = off.submit(u.clone(), 5).unwrap();
+            assert_eq!(key(&a), key(&b), "{label}, user {i}");
+        }
+    };
+    compare_all("warm-up");
+    let mut rng = Rng::seeded(82);
+    for round in 0..25 {
+        let total = on.total_items();
+        assert_eq!(total, off.total_items());
+        match rng.below(3) {
+            0 => {
+                // replace a random live-or-dead id in both
+                let id = rng.below(total) as u32;
+                let f: Vec<f32> =
+                    (0..k).map(|_| rng.gaussian_f32()).collect();
+                on.upsert(id, &f).unwrap();
+                off.upsert(id, &f).unwrap();
+            }
+            1 => {
+                // append
+                let f: Vec<f32> =
+                    (0..k).map(|_| rng.gaussian_f32()).collect();
+                on.upsert(total as u32, &f).unwrap();
+                off.upsert(total as u32, &f).unwrap();
+            }
+            _ => {
+                let id = rng.below(total) as u32;
+                let (_, a_live) = on.remove(id).unwrap();
+                let (_, b_live) = off.remove(id).unwrap();
+                assert_eq!(a_live, b_live);
+            }
+        }
+        compare_all(&format!("round {round}"));
+        // query the pool again so later rounds start from cache hits
+        compare_all(&format!("round {round} (rewarm)"));
+    }
+    let m = on.metrics();
+    assert!(
+        m.cache_stale.load(Ordering::Relaxed) > 0,
+        "churn must have invalidated cached entries"
+    );
+    assert!(
+        m.cache_hits.load(Ordering::Relaxed) > 0,
+        "rewarm passes must have produced hits"
+    );
+    on.shutdown();
+    off.shutdown();
+}
+
+#[test]
+fn tiny_cache_under_eviction_pressure_stays_equivalent() {
+    // working set (16 users) far above capacity (3 entries): constant
+    // admission/eviction churn through the segmented LRU must never
+    // change a single response
+    let k = 8;
+    let cfg = fix::serve_cfg(k, 1, Backend::Geomap, 0.0);
+    let (on, off) = pair(cfg, 3, 150, 90);
+    let users = fix::user_vecs(16, k, 91);
+    for _ in 0..4 {
+        for u in &users {
+            let a = on.submit(u.clone(), 4).unwrap();
+            let b = off.submit(u.clone(), 4).unwrap();
+            assert_eq!(key(&a), key(&b));
+        }
+    }
+    let m = on.metrics();
+    assert!(
+        m.cache_evictions.load(Ordering::Relaxed) > 0,
+        "a 3-entry cache under a 16-query working set must evict"
+    );
+    on.shutdown();
+    off.shutdown();
+}
+
+#[test]
+fn repeated_query_after_swap_serves_the_new_catalogue() {
+    let k = 8;
+    let cfg = fix::serve_cfg(k, 2, Backend::Geomap, 0.0);
+    let (on, off) = pair(cfg, 64, 120, 92);
+    let u = fix::user(k, 93);
+    let before_on = on.submit(u.clone(), 5).unwrap();
+    let before_off = off.submit(u.clone(), 5).unwrap();
+    assert_eq!(key(&before_on), key(&before_off));
+    // hit once, then replace the whole catalogue on both
+    let _ = on.submit(u.clone(), 5).unwrap();
+    on.swap_items(fix::items(90, k, 94)).unwrap();
+    off.swap_items(fix::items(90, k, 94)).unwrap();
+    let after_on = on.submit(u.clone(), 5).unwrap();
+    let after_off = off.submit(u, 5).unwrap();
+    assert_eq!(after_on.total_items, 90);
+    assert_eq!(key(&after_on), key(&after_off), "swap must invalidate");
+    assert_eq!(on.metrics().cache_stale.load(Ordering::Relaxed), 1);
+    on.shutdown();
+    off.shutdown();
+}
