@@ -1,0 +1,260 @@
+//! Protocol load generator for the TCP front-end (`docs/NET.md`).
+//!
+//! Simulates a large population of distinct users — the default pool is
+//! one million — without materialising a user matrix: each user's factor
+//! is regenerated on the fly from a seed derived from their rank, so
+//! the pool costs no memory and any two runs with the same seed drive
+//! byte-identical traffic. Ranks are drawn Zipf(s), matching the
+//! skewed popularity of real recommendation traffic; a configurable
+//! fraction of requests are catalogue mutations (upserts/removes)
+//! interleaved with the reads, over `--conns` concurrent connections.
+//!
+//! Two modes:
+//!
+//! * `--connect <ip:port>` — drive an already-running front-end
+//!   (e.g. `geomap serve --net tcp:127.0.0.1:7070 --net-linger-ms 60000`).
+//! * no `--connect` — **self-host**: start a coordinator + `NetServer`
+//!   on an ephemeral loopback port, drive it, then assert a clean
+//!   shutdown with zero decode errors and zero error responses. This is
+//!   the CI net smoke leg; the process exits non-zero on any failure.
+//!
+//! ```bash
+//! cargo run --release --example loadgen                     # self-host
+//! cargo run --release --example loadgen -- --connect 127.0.0.1:7070
+//! ```
+
+use geomap::configx::{Backend, Cli, SchemaConfig, ServeConfig};
+use geomap::coordinator::Coordinator;
+use geomap::net::{NetClient, NetServer};
+use geomap::obs::Histogram;
+use geomap::rng::{Rng, Zipf};
+use geomap::runtime::cpu_scorer_factory;
+use geomap::testing::fix;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Regenerate user `rank`'s factor from the pool seed — the "millions
+/// of distinct users" exist only as this function.
+fn user_factor(out: &mut Vec<f32>, pool_seed: u64, rank: usize, k: usize) {
+    let mut rng =
+        Rng::seeded(pool_seed ^ (rank as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    out.clear();
+    out.extend((0..k).map(|_| rng.gaussian_f32()));
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cli = Cli::new("loadgen", "TCP front-end load generator (docs/NET.md)")
+        .opt("connect", "", "front-end address; empty = self-host one")
+        .opt("items", "4096", "catalogue size (self-host mode)")
+        .opt("k", "32", "factor dimensionality")
+        .opt("kappa", "10", "top-κ per query")
+        .opt("pool", "1000000", "distinct simulated users")
+        .opt("zipf", "1.05", "Zipf exponent over the user pool")
+        .opt("requests", "20000", "total requests across all connections")
+        .opt("conns", "4", "concurrent connections")
+        .opt(
+            "mutate-every",
+            "8",
+            "every Nth request per connection is a mutation (3:1 \
+             upsert:remove); 0 = reads only",
+        )
+        .opt("seed", "42", "rng seed (pool + traffic)")
+        .parse_from(&args)?;
+
+    let k = cli.get_usize("k")?;
+    let kappa = cli.get_usize("kappa")?;
+    let pool = cli.get_usize("pool")?.max(1);
+    let zipf_s = cli.get_f64("zipf")?;
+    let requests = cli.get_usize("requests")?;
+    let conns = cli.get_usize("conns")?.max(1);
+    let mutate_every = cli.get_usize("mutate-every")?;
+    let seed = cli.get_u64("seed")?;
+    let n_items = cli.get_usize("items")?;
+
+    // self-host a coordinator + front-end unless --connect is given
+    let self_host = cli.get("connect").is_empty();
+    let (coord, server) = if self_host {
+        let cfg = ServeConfig {
+            k,
+            kappa,
+            schema: SchemaConfig::TernaryParseTree,
+            max_batch: 32,
+            max_wait_us: 200,
+            shards: 2,
+            queue_cap: 8192,
+            use_xla: false,
+            threshold: if k >= 32 { 1.5 } else { 1.3 },
+            backend: Backend::Geomap,
+            ..ServeConfig::default()
+        };
+        let coord = Arc::new(Coordinator::start(
+            cfg,
+            fix::items(n_items, k, seed),
+            cpu_scorer_factory(),
+        )?);
+        let server = NetServer::start(Arc::clone(&coord), "127.0.0.1:0")?;
+        println!("self-hosted front-end on tcp:{}", server.local_addr());
+        (Some(coord), Some(server))
+    } else {
+        (None, None)
+    };
+    let addr = match &server {
+        Some(s) => s.local_addr(),
+        None => cli.get("connect").parse()?,
+    };
+
+    // self-host equivalence spot check: the network path must be
+    // byte-identical to in-process submit
+    if let Some(coord) = &coord {
+        let mut client = NetClient::connect(addr)?;
+        let mut user = Vec::new();
+        for rank in 0..4usize {
+            user_factor(&mut user, seed, rank, k);
+            let via_net = client.query(&user, kappa)?;
+            let direct = coord.submit(user.clone(), kappa)?;
+            let bits = |rs: &[geomap::retrieval::Scored]| {
+                rs.iter().map(|s| (s.id, s.score.to_bits())).collect::<Vec<_>>()
+            };
+            assert_eq!(
+                bits(&via_net.results),
+                bits(&direct.results),
+                "network path diverged from in-process submit"
+            );
+        }
+        println!("equivalence spot check: network == in-process ✓");
+    }
+
+    let zipf = Zipf::new(pool, zipf_s);
+    let latency = Histogram::new();
+    let queries = AtomicU64::new(0);
+    let upserts = AtomicU64::new(0);
+    let removes = AtomicU64::new(0);
+    let errors = AtomicU64::new(0);
+    let per_conn = requests / conns;
+
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for c in 0..conns {
+            let zipf = &zipf;
+            let latency = &latency;
+            let queries = &queries;
+            let upserts = &upserts;
+            let removes = &removes;
+            let errors = &errors;
+            scope.spawn(move || {
+                let mut client = match NetClient::connect(addr) {
+                    Ok(cl) => cl,
+                    Err(e) => {
+                        eprintln!("conn {c}: connect failed: {e}");
+                        errors.fetch_add(per_conn as u64, Ordering::Relaxed);
+                        return;
+                    }
+                };
+                let mut rng = Rng::seeded(seed ^ ((c as u64 + 1) << 40));
+                let mut user = Vec::with_capacity(k);
+                for i in 0..per_conn {
+                    let mutate =
+                        mutate_every > 0 && i % mutate_every == mutate_every - 1;
+                    let t = Instant::now();
+                    let outcome = if mutate {
+                        // mutations target existing catalogue ids so a
+                        // replayed trace stays valid whatever the server
+                        // has already absorbed
+                        let id = rng.below(n_items) as u32;
+                        if i % (4 * mutate_every) == 4 * mutate_every - 1 {
+                            removes.fetch_add(1, Ordering::Relaxed);
+                            client.remove(id).map(|_| ())
+                        } else {
+                            user_factor(
+                                &mut user,
+                                seed ^ 0xFACADE,
+                                id as usize,
+                                k,
+                            );
+                            upserts.fetch_add(1, Ordering::Relaxed);
+                            client.upsert(id, &user).map(|_| ())
+                        }
+                    } else {
+                        let rank = zipf.sample(&mut rng);
+                        user_factor(&mut user, seed, rank, k);
+                        queries.fetch_add(1, Ordering::Relaxed);
+                        match client.query_raw(&user, kappa) {
+                            Ok(line) => {
+                                if line.starts_with(b"{\"error") {
+                                    Err(geomap::error::GeomapError::Rejected(
+                                        String::from_utf8_lossy(line).into(),
+                                    ))
+                                } else {
+                                    Ok(())
+                                }
+                            }
+                            Err(e) => Err(e),
+                        }
+                    };
+                    latency.record(t.elapsed().as_micros() as u64);
+                    if let Err(e) = outcome {
+                        if errors.fetch_add(1, Ordering::Relaxed) < 5 {
+                            eprintln!("conn {c} request {i}: {e}");
+                        }
+                    }
+                }
+            });
+        }
+    });
+    let elapsed = t0.elapsed().as_secs_f64();
+
+    let total = (per_conn * conns) as f64;
+    let (p50, p95, p99) = latency.percentiles();
+    println!(
+        "\n{} requests ({} queries, {} upserts, {} removes) over {conns} \
+         conns in {elapsed:.2}s → {:.0} req/s",
+        per_conn * conns,
+        queries.load(Ordering::Relaxed),
+        upserts.load(Ordering::Relaxed),
+        removes.load(Ordering::Relaxed),
+        total / elapsed,
+    );
+    println!(
+        "client latency: p50 {p50}us p95 {p95}us p99 {p99}us max {}us",
+        latency.max()
+    );
+    let client_errors = errors.load(Ordering::Relaxed);
+    println!("error responses: {client_errors}");
+
+    let mut failed = client_errors > 0;
+    if let Some(server) = server {
+        server.shutdown(); // joins every connection thread
+    }
+    if let Some(coord) = coord {
+        let m = coord.metrics();
+        let decode_errors = m.net_decode_errors.load(Ordering::Relaxed);
+        let malformed = m.net_malformed.load(Ordering::Relaxed);
+        let accepted = m.net_connections.load(Ordering::Relaxed);
+        let closed = m.net_closed.load(Ordering::Relaxed);
+        println!("\n{}", m.report());
+        if decode_errors > 0 || malformed > 0 {
+            eprintln!(
+                "FAIL: {decode_errors} decode errors, {malformed} malformed \
+                 requests on well-formed traffic"
+            );
+            failed = true;
+        }
+        if accepted != closed {
+            eprintln!(
+                "FAIL: unclean shutdown — {accepted} connections accepted, \
+                 {closed} closed"
+            );
+            failed = true;
+        }
+        Arc::try_unwrap(coord)
+            .map_err(|_| ())
+            .ok()
+            .map(Coordinator::shutdown);
+    }
+    if failed {
+        std::process::exit(1);
+    }
+    Ok(())
+}

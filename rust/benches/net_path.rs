@@ -1,0 +1,226 @@
+//! Socket → decode → submit → encode vs in-process submit (docs/NET.md).
+//!
+//! The protocol layer earns its keep only if it adds negligible cost on
+//! top of the coordinator it fronts. One coordinator serves both paths;
+//! the same Zipf(1.05) workload is driven first through
+//! `Coordinator::submit` directly, then through a loopback `NetServer`
+//! with one `NetClient` per client thread. The acceptance bars, judged
+//! at the default profile:
+//!
+//! * the network path sustains **≥ 10,000 req/s** over loopback at the
+//!   B-worker coordinator defaults, and
+//! * its **p99 latency is ≤ 5×** the in-process p99 on the same
+//!   workload,
+//!
+//! with zero decode errors over the run and responses spot-checked
+//! byte-identical between the two paths before timing (the full
+//! equivalence matrix lives in `tests/net_protocol.rs`).
+//!
+//! ```bash
+//! cargo bench --bench net_path
+//! GEOMAP_BENCH_FAST=1 cargo bench --bench net_path
+//! ```
+
+mod common;
+
+use geomap::configx::{Backend, SchemaConfig, ServeConfig};
+use geomap::coordinator::Coordinator;
+use geomap::net::{NetClient, NetServer};
+use geomap::obs::Histogram;
+use geomap::rng::{Rng, Zipf};
+use geomap::runtime::cpu_scorer_factory;
+use geomap::testing::fix;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Instant;
+
+struct Workload {
+    items: usize,
+    k: usize,
+    pool: usize,
+    requests: usize,
+    clients: usize,
+}
+
+fn workload() -> Workload {
+    if common::fast() {
+        Workload { items: 512, k: 16, pool: 128, requests: 2_048, clients: 4 }
+    } else {
+        Workload { items: 4096, k: 32, pool: 512, requests: 16_384, clients: 4 }
+    }
+}
+
+fn serve_cfg(w: &Workload) -> ServeConfig {
+    ServeConfig {
+        k: w.k,
+        kappa: 10,
+        schema: SchemaConfig::TernaryParseTree,
+        max_batch: 32,
+        max_wait_us: 200,
+        shards: 2,
+        queue_cap: 8192,
+        use_xla: false,
+        threshold: if w.k >= 32 { 1.5 } else { 1.3 },
+        backend: Backend::Geomap,
+        ..ServeConfig::default()
+    }
+}
+
+/// Drive the workload through `Coordinator::submit` directly; returns
+/// (req/s, client-observed latency histogram).
+fn drive_inproc(
+    coord: &Arc<Coordinator>,
+    users: &geomap::linalg::Matrix,
+    w: &Workload,
+) -> (f64, Histogram) {
+    let zipf = Zipf::new(users.rows(), 1.05);
+    let lat = Histogram::new();
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for c in 0..w.clients {
+            let coord = Arc::clone(coord);
+            let zipf = zipf.clone();
+            let lat = &lat;
+            scope.spawn(move || {
+                let mut rng = Rng::seeded(0x5EED + c as u64);
+                for _ in 0..w.requests / w.clients {
+                    let u = users.row(zipf.sample(&mut rng)).to_vec();
+                    let t = Instant::now();
+                    coord.submit(u, 10).expect("in-process request");
+                    lat.record(t.elapsed().as_micros() as u64);
+                }
+            });
+        }
+    });
+    let served = (w.requests / w.clients * w.clients) as f64;
+    (served / t0.elapsed().as_secs_f64(), lat)
+}
+
+/// Drive the same workload through the TCP front-end — one connection
+/// per client thread, raw (unparsed) responses on the hot path.
+fn drive_net(
+    addr: std::net::SocketAddr,
+    users: &geomap::linalg::Matrix,
+    w: &Workload,
+) -> (f64, Histogram) {
+    let zipf = Zipf::new(users.rows(), 1.05);
+    let lat = Histogram::new();
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for c in 0..w.clients {
+            let zipf = zipf.clone();
+            let lat = &lat;
+            scope.spawn(move || {
+                let mut client =
+                    NetClient::connect(addr).expect("connect to front-end");
+                let mut rng = Rng::seeded(0x5EED + c as u64);
+                for _ in 0..w.requests / w.clients {
+                    let u = users.row(zipf.sample(&mut rng));
+                    let t = Instant::now();
+                    let line =
+                        client.query_raw(u, 10).expect("network request");
+                    assert!(
+                        !line.starts_with(b"{\"error"),
+                        "server error on well-formed query: {}",
+                        String::from_utf8_lossy(line)
+                    );
+                    lat.record(t.elapsed().as_micros() as u64);
+                }
+            });
+        }
+    });
+    let served = (w.requests / w.clients * w.clients) as f64;
+    (served / t0.elapsed().as_secs_f64(), lat)
+}
+
+fn main() {
+    let w = workload();
+    let items = fix::items(w.items, w.k, 42);
+    let users = fix::users(w.pool, w.k, 43);
+    println!(
+        "== net path: {} items, k={}, pool {} users, Zipf(1.05), {} \
+         requests × {} clients ==",
+        w.items, w.k, w.pool, w.requests, w.clients
+    );
+
+    let coord = Arc::new(
+        Coordinator::start(serve_cfg(&w), items, cpu_scorer_factory())
+            .expect("coordinator"),
+    );
+    let server = NetServer::start(Arc::clone(&coord), "127.0.0.1:0")
+        .expect("net front-end");
+    let addr = server.local_addr();
+
+    // spot-check equivalence before timing: the wire path must be
+    // byte-identical to in-process submit
+    {
+        let mut client = NetClient::connect(addr).expect("probe connection");
+        for r in 0..8.min(w.pool) {
+            let u = users.row(r);
+            let a = client.query(u, 10).expect("probe via net");
+            let b = coord.submit(u.to_vec(), 10).expect("probe in-process");
+            assert_eq!(
+                a.results.iter().map(|s| (s.id, s.score.to_bits())).collect::<Vec<_>>(),
+                b.results.iter().map(|s| (s.id, s.score.to_bits())).collect::<Vec<_>>(),
+                "network response diverged from in-process submit"
+            );
+        }
+    }
+
+    let (rps_in, lat_in) = drive_inproc(&coord, &users, &w);
+    let (rps_net, lat_net) = drive_net(addr, &users, &w);
+
+    let (_, _, p99_in) = lat_in.percentiles();
+    let (p50_net, p95_net, p99_net) = lat_net.percentiles();
+    let overhead = p99_net as f64 / p99_in.max(1) as f64;
+    println!("in-process: {rps_in:>10.0} req/s, p99 {p99_in}us");
+    println!(
+        "tcp front-end: {rps_net:>7.0} req/s, p50 {p50_net}us p95 {p95_net}us \
+         p99 {p99_net}us → {overhead:.2}x in-process p99"
+    );
+
+    let m = coord.metrics();
+    let decode_errors = m.net_decode_errors.load(Ordering::Relaxed);
+    let malformed = m.net_malformed.load(Ordering::Relaxed);
+    println!("\n{}", m.report());
+
+    let mut failures = Vec::new();
+    // the traffic is well-formed in every profile: any decode error is a
+    // protocol-layer bug, not a tuning miss
+    if decode_errors > 0 || malformed > 0 {
+        failures.push(format!(
+            "{decode_errors} decode errors / {malformed} malformed on \
+             well-formed traffic"
+        ));
+    }
+    if !common::fast() {
+        if rps_net < 10_000.0 {
+            failures.push(format!(
+                "network throughput {rps_net:.0} req/s below the 10k target"
+            ));
+        }
+        if overhead > 5.0 {
+            failures.push(format!(
+                "network p99 {p99_net}us is {overhead:.2}x in-process \
+                 ({p99_in}us), above the 5x bound"
+            ));
+        }
+    }
+    server.shutdown();
+    Arc::try_unwrap(coord).ok().map(Coordinator::shutdown);
+    if failures.is_empty() {
+        if common::fast() {
+            println!("\nfast profile: measurements reported, gates not judged");
+        } else {
+            println!(
+                "\nnet-path targets met: ≥10k req/s over loopback at ≤5x \
+                 in-process p99, zero decode errors"
+            );
+        }
+    } else {
+        for f in &failures {
+            eprintln!("NET PATH TARGET MISSED: {f}");
+        }
+        std::process::exit(1);
+    }
+}

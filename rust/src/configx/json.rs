@@ -261,6 +261,65 @@ pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
     Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
 }
 
+/// Scan one number starting at `bytes[pos]` under the strict JSON grammar
+/// (RFC 8259 §6): `-?int frac? exp?` with no leading zeros, a digit
+/// required on each side of `.`, and at least one exponent digit. Rust's
+/// permissive `f64::from_str` would otherwise accept `01`, `-`, `1.`,
+/// `.5` and `1e` — forms the snapshot config round-trip must reject, not
+/// normalise. Returns the value and the position one past its last byte;
+/// errors carry `(offset, message)`. Shared between [`Json::parse`] and
+/// the network request decoder (`net::decoder`), which applies the same
+/// grammar to factor payloads read off the socket.
+pub(crate) fn scan_number(
+    bytes: &[u8],
+    pos: usize,
+) -> std::result::Result<(f64, usize), (usize, &'static str)> {
+    fn digits(bytes: &[u8], p: &mut usize) -> usize {
+        let start = *p;
+        while matches!(bytes.get(*p), Some(b'0'..=b'9')) {
+            *p += 1;
+        }
+        *p - start
+    }
+    let start = pos;
+    let mut p = pos;
+    if bytes.get(p) == Some(&b'-') {
+        p += 1;
+    }
+    let int_start = p;
+    match digits(bytes, &mut p) {
+        0 => return Err((p, "expected digit in number")),
+        n if n > 1 && bytes[int_start] == b'0' => {
+            return Err((int_start, "leading zeros are not allowed"));
+        }
+        _ => {}
+    }
+    if bytes.get(p) == Some(&b'.') {
+        p += 1;
+        if digits(bytes, &mut p) == 0 {
+            return Err((p, "expected digit after '.'"));
+        }
+    }
+    if matches!(bytes.get(p), Some(b'e') | Some(b'E')) {
+        p += 1;
+        if matches!(bytes.get(p), Some(b'+') | Some(b'-')) {
+            p += 1;
+        }
+        if digits(bytes, &mut p) == 0 {
+            return Err((p, "expected digit in exponent"));
+        }
+    }
+    let text = std::str::from_utf8(&bytes[start..p])
+        .map_err(|_| (start, "bad number"))?;
+    let n: f64 = text.parse().map_err(|_| (start, "bad number"))?;
+    if !n.is_finite() {
+        // e.g. 1e999: syntactically valid but unrepresentable, and a
+        // non-finite value would serialise to invalid JSON
+        return Err((start, "number overflows f64"));
+    }
+    Ok((n, p))
+}
+
 struct Parser<'a> {
     bytes: &'a [u8],
     pos: usize,
@@ -417,57 +476,15 @@ impl<'a> Parser<'a> {
         }
     }
 
-    /// Consume a run of ASCII digits, returning how many were read.
-    fn digits(&mut self) -> usize {
-        let start = self.pos;
-        while matches!(self.peek(), Some(b'0'..=b'9')) {
-            self.pos += 1;
-        }
-        self.pos - start
-    }
-
-    /// Strict JSON number grammar (RFC 8259 §6): `-?int frac? exp?` with
-    /// no leading zeros, a digit required on each side of `.`, and at
-    /// least one exponent digit. Rust's permissive `f64::from_str` would
-    /// otherwise accept `01`, `-`, `1.`, `.5` and `1e` — forms the
-    /// snapshot config round-trip must reject, not normalise.
+    /// Strict-grammar number via the shared [`scan_number`] scanner.
     fn number(&mut self) -> Result<Json> {
-        let start = self.pos;
-        if self.peek() == Some(b'-') {
-            self.pos += 1;
-        }
-        let int_start = self.pos;
-        match self.digits() {
-            0 => return Err(self.err("expected digit in number")),
-            n if n > 1 && self.bytes[int_start] == b'0' => {
-                return Err(self.err("leading zeros are not allowed"));
-            }
-            _ => {}
-        }
-        if self.peek() == Some(b'.') {
-            self.pos += 1;
-            if self.digits() == 0 {
-                return Err(self.err("expected digit after '.'"));
-            }
-        }
-        if matches!(self.peek(), Some(b'e') | Some(b'E')) {
-            self.pos += 1;
-            if matches!(self.peek(), Some(b'+') | Some(b'-')) {
-                self.pos += 1;
-            }
-            if self.digits() == 0 {
-                return Err(self.err("expected digit in exponent"));
-            }
-        }
-        let text = std::str::from_utf8(&self.bytes[start..self.pos])
-            .map_err(|_| self.err("bad number"))?;
-        let n: f64 =
-            text.parse().map_err(|_| self.err("bad number"))?;
-        if !n.is_finite() {
-            // e.g. 1e999: syntactically valid but unrepresentable, and a
-            // non-finite Num would serialise to invalid JSON
-            return Err(self.err("number overflows f64"));
-        }
+        let (n, end) = scan_number(self.bytes, self.pos).map_err(
+            |(offset, message)| GeomapError::Json {
+                offset,
+                message: message.to_string(),
+            },
+        )?;
+        self.pos = end;
         Ok(Json::Num(n))
     }
 }
@@ -531,6 +548,29 @@ mod tests {
         // underflow quietly rounds to zero, which is representable
         assert_eq!(Json::parse("1e-999").unwrap(), Json::Num(0.0));
         assert_eq!(Json::parse("-12.75e1").unwrap(), Json::Num(-127.5));
+    }
+
+    #[test]
+    fn scan_number_reports_end_position() {
+        // the shared scanner stops exactly after the number so embedding
+        // grammars (JSON values, net request lines) can keep parsing
+        for (src, want, end) in [
+            ("42,", 42.0, 2),
+            ("-12.75e1]", -127.5, 7),
+            ("0}", 0.0, 1),
+            ("1e-2 ", 0.01, 4),
+        ] {
+            let (n, p) = scan_number(src.as_bytes(), 0).unwrap();
+            assert_eq!(n, want, "{src}");
+            assert_eq!(p, end, "{src}");
+        }
+        // mid-buffer start offset
+        let (n, p) = scan_number(b"[1.5,2.5]", 5).unwrap();
+        assert_eq!(n, 2.5);
+        assert_eq!(p, 8);
+        // error offsets point into the buffer, not the number
+        let (off, _) = scan_number(b"[01]", 1).unwrap_err();
+        assert_eq!(off, 1);
     }
 
     #[test]

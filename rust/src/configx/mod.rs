@@ -366,6 +366,70 @@ impl CacheMode {
     }
 }
 
+/// Network serving front-end for the coordinator (`net` knob; see
+/// `docs/NET.md`).
+///
+/// `Tcp` starts the newline-delimited JSON protocol server
+/// (`net::NetServer`) over `Coordinator::submit` on the given listen
+/// address. Addresses are literal `ip:port` pairs — DNS names are
+/// rejected because name resolution is unavailable offline — and port 0
+/// requests an ephemeral port (query the bound port via
+/// `NetServer::local_addr`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum NetMode {
+    /// No network front-end (the default): in-process `submit` only.
+    Off,
+    /// TCP front-end bound to `addr` (`"ip:port"`, e.g. `127.0.0.1:7070`).
+    Tcp {
+        /// Listen address in literal `ip:port` form.
+        addr: String,
+    },
+}
+
+impl NetMode {
+    /// Parse from CLI/JSON string form: `off`, `tcp:<ip:port>`.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "off" => Ok(NetMode::Off),
+            _ => {
+                if let Some(addr) = s.strip_prefix("tcp:") {
+                    parse_listen_addr(addr)?;
+                    Ok(NetMode::Tcp { addr: addr.to_string() })
+                } else {
+                    Err(GeomapError::Config(format!(
+                        "net must be one of off | tcp:<ip:port> (got '{s}')"
+                    )))
+                }
+            }
+        }
+    }
+
+    /// Canonical string form; `NetMode::parse(m.spec())` round-trips.
+    pub fn spec(&self) -> String {
+        match self {
+            NetMode::Off => "off".to_string(),
+            NetMode::Tcp { addr } => format!("tcp:{addr}"),
+        }
+    }
+
+    /// True when a network front-end is configured.
+    pub fn is_on(&self) -> bool {
+        !matches!(self, NetMode::Off)
+    }
+}
+
+/// Validate + resolve a `net` listen address: a literal `ip:port` pair
+/// (v4 or bracketed v6). The error names the `net` key like every other
+/// config error so a bad address in a config file is attributable.
+pub fn parse_listen_addr(addr: &str) -> Result<std::net::SocketAddr> {
+    addr.parse::<std::net::SocketAddr>().map_err(|_| {
+        GeomapError::Config(format!(
+            "net listen address must be a literal ip:port, e.g. \
+             127.0.0.1:7070 (got '{addr}')"
+        ))
+    })
+}
+
 /// Incremental catalogue-mutation policy (geomap backend only).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct MutationConfig {
@@ -467,6 +531,11 @@ pub struct ServeConfig {
     /// segmented-LRU keyed by query fingerprint and invalidated by shard
     /// mutation epochs — see `docs/CACHE.md`.
     pub cache: CacheMode,
+    /// Network serving front-end (JSON `"net": "off" | "tcp:<ip:port>"`,
+    /// CLI `--net`): a TCP listener speaking the newline-delimited JSON
+    /// request protocol over `submit`/`upsert`/`remove` — see
+    /// `docs/NET.md`.
+    pub net: NetMode,
 }
 
 /// Parse an `on`/`off` toggle (the `batch_prune` knob's CLI/JSON form).
@@ -475,7 +544,7 @@ pub fn parse_on_off(s: &str, key: &str) -> Result<bool> {
         "on" => Ok(true),
         "off" => Ok(false),
         _ => Err(GeomapError::Config(format!(
-            "{key} must be 'on' or 'off' (got '{s}')"
+            "{key} must be one of on | off (got '{s}')"
         ))),
     }
 }
@@ -500,6 +569,7 @@ impl Default for ServeConfig {
             batch_prune: true,
             checkpoint: None,
             cache: CacheMode::Off,
+            net: NetMode::Off,
         }
     }
 }
@@ -540,6 +610,11 @@ impl ServeConfig {
             return Err(GeomapError::Config(
                 "cache entry count must be >= 1 (or cache: off)".into(),
             ));
+        }
+        if let NetMode::Tcp { addr } = &self.net {
+            // re-validated here so hand-built configs (not just parsed
+            // ones) hit the same ip:port check, naming the net key
+            parse_listen_addr(addr)?;
         }
         if let Some(ck) = self.checkpoint.take() {
             self.checkpoint = Some(ck.validated()?);
@@ -597,6 +672,9 @@ impl ServeConfig {
         }
         if let Some(v) = j.opt("cache") {
             c.cache = CacheMode::parse(v.as_str()?)?;
+        }
+        if let Some(v) = j.opt("net") {
+            c.net = NetMode::parse(v.as_str()?)?;
         }
         if let Some(v) = j.opt("checkpoint_dir") {
             let mut ck = CheckpointConfig {
@@ -851,6 +929,57 @@ mod tests {
         assert!(parse_on_off("on", "x").unwrap());
         assert!(!parse_on_off("off", "x").unwrap());
         assert!(parse_on_off("On", "x").is_err());
+        // the error lists the accepted values and names the key
+        let err = parse_on_off("yes", "batch_prune").unwrap_err().to_string();
+        assert!(err.contains("batch_prune"), "{err}");
+        assert!(err.contains("on | off"), "{err}");
+        assert!(err.contains("yes"), "{err}");
+    }
+
+    #[test]
+    fn net_parse_forms_and_json() {
+        assert_eq!(NetMode::parse("off").unwrap(), NetMode::Off);
+        assert_eq!(
+            NetMode::parse("tcp:127.0.0.1:7070").unwrap(),
+            NetMode::Tcp { addr: "127.0.0.1:7070".into() }
+        );
+        // ephemeral port and bracketed v6 are literal ip:port forms too
+        assert!(NetMode::parse("tcp:0.0.0.0:0").is_ok());
+        assert!(NetMode::parse("tcp:[::1]:9000").is_ok());
+        // invalid forms are rejected with the offending key in the error
+        for bad in [
+            "tcp:",
+            "tcp:localhost:80", // DNS names don't resolve offline
+            "tcp:127.0.0.1",    // missing port
+            "tcp:127.0.0.1:notaport",
+            "udp:127.0.0.1:7070",
+            "bogus",
+        ] {
+            let err = NetMode::parse(bad).unwrap_err().to_string();
+            assert!(err.contains("net"), "'{bad}': {err}");
+            assert!(
+                err.contains("off | tcp:") || err.contains("ip:port"),
+                "'{bad}' must list accepted values: {err}"
+            );
+        }
+        for m in [NetMode::Off, NetMode::Tcp { addr: "127.0.0.1:7070".into() }] {
+            assert_eq!(NetMode::parse(&m.spec()).unwrap(), m);
+        }
+        assert!(!NetMode::Off.is_on());
+        assert!(NetMode::Tcp { addr: "127.0.0.1:0".into() }.is_on());
+        // JSON wiring + off by default
+        assert_eq!(ServeConfig::default().net, NetMode::Off);
+        let j = Json::parse(r#"{"net": "tcp:127.0.0.1:0"}"#).unwrap();
+        let c = ServeConfig::from_json(&j).unwrap();
+        assert_eq!(c.net, NetMode::Tcp { addr: "127.0.0.1:0".into() });
+        let j = Json::parse(r#"{"net": "tcp:not-an-addr:80"}"#).unwrap();
+        let err = ServeConfig::from_json(&j).unwrap_err().to_string();
+        assert!(err.contains("net"), "{err}");
+        // a hand-built bad address is caught at validation, same key name
+        let mut c = ServeConfig::default();
+        c.net = NetMode::Tcp { addr: "nope".into() };
+        let err = c.validated().unwrap_err().to_string();
+        assert!(err.contains("net"), "{err}");
     }
 
     #[test]

@@ -25,6 +25,23 @@ pub struct ServeMetrics {
     pub cache_stale: AtomicU64,
     /// Result-cache entries evicted to admit newer ones.
     pub cache_evictions: AtomicU64,
+    /// TCP connections accepted by the network front-end.
+    pub net_connections: AtomicU64,
+    /// TCP connections closed (client hangup, I/O error, or shutdown).
+    pub net_closed: AtomicU64,
+    /// Request bytes read off sockets by the front-end.
+    pub net_bytes_in: AtomicU64,
+    /// Response bytes written to sockets by the front-end.
+    pub net_bytes_out: AtomicU64,
+    /// Request lines the streaming decoder rejected (framing or grammar
+    /// errors: bad JSON, non-finite floats, oversized lines, …). The
+    /// connection survives; the client gets an `{"error":…}` response.
+    pub net_decode_errors: AtomicU64,
+    /// Requests that decoded cleanly but were rejected semantically by
+    /// the coordinator (wrong factor dimensionality, config violations).
+    /// Counted separately from decode errors: malformed requests measure
+    /// client bugs, decode errors measure protocol corruption.
+    pub net_malformed: AtomicU64,
     /// End-to-end latency per request (µs).
     pub latency_us: Histogram,
     /// Time spent queued before batching (µs).
@@ -81,7 +98,9 @@ impl ServeMetrics {
     /// from the underlying histograms; the discard line adds the same
     /// quantile view next to the mean the speed-up is derived from.
     /// When the result cache has been probed, a `cache:` line reports
-    /// hit/miss/stale/eviction counts and the hit rate.
+    /// hit/miss/stale/eviction counts and the hit rate; when the network
+    /// front-end accepted at least one connection, a `net:` line reports
+    /// connection, byte, and rejection counters.
     pub fn report(&self) -> String {
         let acc = self.accepted.load(Ordering::Relaxed);
         let rej = self.rejected.load(Ordering::Relaxed);
@@ -102,6 +121,20 @@ impl ServeMetrics {
         } else {
             String::new()
         };
+        let net = if self.net_connections.load(Ordering::Relaxed) > 0 {
+            format!(
+                "\nnet:      {} connections ({} closed), {} B in / {} B out, \
+                 {} decode errors, {} malformed",
+                self.net_connections.load(Ordering::Relaxed),
+                self.net_closed.load(Ordering::Relaxed),
+                self.net_bytes_in.load(Ordering::Relaxed),
+                self.net_bytes_out.load(Ordering::Relaxed),
+                self.net_decode_errors.load(Ordering::Relaxed),
+                self.net_malformed.load(Ordering::Relaxed),
+            )
+        } else {
+            String::new()
+        };
         format!(
             "requests: accepted {acc}, rejected {rej}, completed {done}\n\
              batches:  {batches} (size {})\n\
@@ -109,7 +142,7 @@ impl ServeMetrics {
              queueing: {}\n\
              pruning:  {} candidates\n\
              discard:  p50 {:.1}% p95 {:.1}% p99 {:.1}%; mean {:.1}% → \
-             {:.2}x speed-up{cache}",
+             {:.2}x speed-up{cache}{net}",
             self.batch_size.summary_with_unit(""),
             self.latency_us.summary(),
             self.queue_wait_us.summary(),
@@ -193,6 +226,57 @@ mod tests {
         assert!(r.contains("1 stale"), "{r}");
         assert!(r.contains("4 evictions"), "{r}");
         assert!(r.contains("80.0% hit rate"), "{r}");
+    }
+
+    #[test]
+    fn net_counters_accumulate_monotonically() {
+        let m = ServeMetrics::new();
+        // interleave traffic; every observation only grows each counter
+        let mut last_in = 0;
+        let mut last_out = 0;
+        for round in 0..5u64 {
+            m.net_connections.fetch_add(2, Ordering::Relaxed);
+            m.net_closed.fetch_add(1, Ordering::Relaxed);
+            m.net_bytes_in.fetch_add(100, Ordering::Relaxed);
+            m.net_bytes_out.fetch_add(250, Ordering::Relaxed);
+            m.net_decode_errors.fetch_add(1, Ordering::Relaxed);
+            let bytes_in = m.net_bytes_in.load(Ordering::Relaxed);
+            let bytes_out = m.net_bytes_out.load(Ordering::Relaxed);
+            assert!(bytes_in > last_in && bytes_out > last_out);
+            last_in = bytes_in;
+            last_out = bytes_out;
+            assert_eq!(m.net_connections.load(Ordering::Relaxed), 2 * (round + 1));
+        }
+        // closed never exceeds accepted in a consistent accounting
+        assert!(
+            m.net_closed.load(Ordering::Relaxed)
+                <= m.net_connections.load(Ordering::Relaxed)
+        );
+        // decode errors and malformed rejections are independent counters
+        assert_eq!(m.net_decode_errors.load(Ordering::Relaxed), 5);
+        assert_eq!(m.net_malformed.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn report_includes_net_line_only_when_front_end_ran() {
+        let m = ServeMetrics::new();
+        m.latency_us.record(50);
+        assert!(
+            !m.report().contains("net:"),
+            "in-process-only reports must be unchanged"
+        );
+        m.net_connections.fetch_add(3, Ordering::Relaxed);
+        m.net_closed.fetch_add(3, Ordering::Relaxed);
+        m.net_bytes_in.fetch_add(1234, Ordering::Relaxed);
+        m.net_bytes_out.fetch_add(5678, Ordering::Relaxed);
+        m.net_decode_errors.fetch_add(2, Ordering::Relaxed);
+        m.net_malformed.fetch_add(1, Ordering::Relaxed);
+        let r = m.report();
+        assert!(r.contains("net:"), "{r}");
+        assert!(r.contains("3 connections (3 closed)"), "{r}");
+        assert!(r.contains("1234 B in / 5678 B out"), "{r}");
+        assert!(r.contains("2 decode errors"), "{r}");
+        assert!(r.contains("1 malformed"), "{r}");
     }
 
     #[test]

@@ -61,6 +61,7 @@ pub mod geometry;
 pub mod index;
 pub mod linalg;
 pub mod mf;
+pub mod net;
 pub mod obs;
 pub mod permutation;
 pub mod quant;
@@ -79,7 +80,7 @@ pub mod prelude {
     };
     pub use crate::cache::ResultCache;
     pub use crate::configx::{
-        Backend, CacheMode, MutationConfig, PostingsMode, QuantMode,
+        Backend, CacheMode, MutationConfig, NetMode, PostingsMode, QuantMode,
         SchemaConfig,
     };
     pub use crate::data::{gaussian_factors, MovieLensSynth, Ratings};
@@ -92,6 +93,7 @@ pub mod prelude {
     pub use crate::index::InvertedIndex;
     pub use crate::linalg::Matrix;
     pub use crate::mf::{AlsTrainer, SgdTrainer};
+    pub use crate::net::{NetClient, NetServer};
     pub use crate::quant::{PackedPostings, QuantizedFactorStore};
     pub use crate::retrieval::{RecoveryReport, Retriever};
     pub use crate::rng::Rng;

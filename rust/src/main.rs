@@ -142,6 +142,18 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             "result-cache tier: off | lru:<entries> (mutation-aware top-κ \
              cache; repeated queries skip prune+rescore)",
         )
+        .opt(
+            "net",
+            "off",
+            "network front-end: off | tcp:<ip:port> (newline-delimited \
+             JSON protocol; port 0 picks an ephemeral port — docs/NET.md)",
+        )
+        .opt(
+            "net-linger-ms",
+            "0",
+            "keep the network front-end serving this long after the \
+             internal workload drains (0 = stop immediately)",
+        )
         .opt("shards", "2", "index shards (worker threads)")
         .opt("max-batch", "32", "dynamic batch size cap")
         .opt("max-wait-us", "500", "batching window (µs)")
@@ -185,6 +197,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         )?,
         checkpoint: None,
         cache: geomap::configx::CacheMode::parse(cli.get("cache"))?,
+        net: geomap::configx::NetMode::parse(cli.get("net"))?,
     };
     let factory = if cfg.use_xla {
         xla_scorer_factory(&cfg.artifacts_dir)
@@ -199,7 +212,18 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         if cfg.use_xla { "xla" } else { "cpu" }
     );
     let kappa = cfg.kappa;
+    let net_mode = cfg.net.clone();
     let coord = std::sync::Arc::new(Coordinator::start(cfg, items, factory)?);
+
+    let net = match &net_mode {
+        geomap::configx::NetMode::Off => None,
+        geomap::configx::NetMode::Tcp { addr } => {
+            let srv =
+                geomap::net::NetServer::start(std::sync::Arc::clone(&coord), addr)?;
+            println!("net front-end listening on tcp:{}", srv.local_addr());
+            Some(srv)
+        }
+    };
 
     let total_requests = cli.get_usize("requests")?;
     let clients = cli.get_usize("clients")?.max(1);
@@ -225,6 +249,16 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         elapsed.as_secs_f64(),
         done as f64 / elapsed.as_secs_f64()
     );
+    if let Some(srv) = net {
+        // let external clients keep the front-end busy past the internal
+        // workload if asked, then drain connections before teardown
+        let linger_ms = cli.get_u64("net-linger-ms")?;
+        if linger_ms > 0 {
+            println!("net front-end serving for another {linger_ms} ms");
+            std::thread::sleep(std::time::Duration::from_millis(linger_ms));
+        }
+        srv.shutdown();
+    }
     println!("{}", coord.metrics().report());
     std::sync::Arc::try_unwrap(coord)
         .map_err(|_| ())

@@ -1,0 +1,171 @@
+//! Minimal blocking protocol client: reusable encode/read buffers,
+//! line-framed request/response round trips.
+//!
+//! This is the test/bench/loadgen counterpart of the server — not a
+//! production SDK. The hot path ([`query_raw`](NetClient::query_raw))
+//! reuses one encode buffer and one read buffer and never parses the
+//! response; the convenience methods parse response lines through the
+//! configx JSON parser, which is exactly what the equivalence tests
+//! want (an independent decoder checking the server's encoder).
+
+use super::proto;
+use crate::configx::Json;
+use crate::error::{GeomapError, Result};
+use crate::retrieval::Scored;
+use std::io::{Read, Write as _};
+use std::net::{SocketAddr, TcpStream};
+
+/// A query response as decoded on the client side.
+#[derive(Clone, Debug)]
+pub struct ClientResponse {
+    /// Global item ids with exact scores, descending.
+    pub results: Vec<Scored>,
+    /// Candidates that survived pruning (summed over shards).
+    pub candidates: usize,
+    /// Catalogue size at serving time.
+    pub total_items: usize,
+    /// Factor-store version that served the request.
+    pub version: u64,
+    /// Server-side end-to-end latency (µs).
+    pub latency_us: u64,
+}
+
+/// Blocking connection to a [`NetServer`](super::NetServer).
+pub struct NetClient {
+    stream: TcpStream,
+    out: Vec<u8>,
+    inbuf: Vec<u8>,
+    /// Consumed prefix of `inbuf` (compacted on the next read).
+    start: usize,
+}
+
+impl NetClient {
+    /// Connect to a front-end.
+    pub fn connect(addr: SocketAddr) -> Result<NetClient> {
+        let stream = TcpStream::connect(addr)
+            .map_err(|e| GeomapError::io(addr.to_string(), e))?;
+        let _ = stream.set_nodelay(true);
+        Ok(NetClient {
+            stream,
+            out: Vec::with_capacity(4096),
+            inbuf: Vec::with_capacity(4096),
+            start: 0,
+        })
+    }
+
+    fn write_out(&mut self) -> Result<()> {
+        self.stream
+            .write_all(&self.out)
+            .map_err(|e| GeomapError::io("net client", e))
+    }
+
+    /// Read one response line (newline stripped). The borrow is valid
+    /// until the next call.
+    fn read_line(&mut self) -> Result<&[u8]> {
+        if self.start > 0 {
+            self.inbuf.drain(..self.start);
+            self.start = 0;
+        }
+        let mut scan = 0usize;
+        loop {
+            if let Some(i) =
+                self.inbuf[scan..].iter().position(|&b| b == b'\n')
+            {
+                let end = scan + i;
+                self.start = end + 1;
+                return Ok(&self.inbuf[..end]);
+            }
+            scan = self.inbuf.len();
+            let mut chunk = [0u8; 16 * 1024];
+            let n = self
+                .stream
+                .read(&mut chunk)
+                .map_err(|e| GeomapError::io("net client", e))?;
+            if n == 0 {
+                return Err(GeomapError::Rejected(
+                    "connection closed by server".into(),
+                ));
+            }
+            self.inbuf.extend_from_slice(&chunk[..n]);
+        }
+    }
+
+    /// Send one raw line (newline appended if missing) and return the
+    /// raw response line — adversarial tests drive malformed bytes here.
+    pub fn send_raw(&mut self, line: &[u8]) -> Result<Vec<u8>> {
+        self.out.clear();
+        self.out.extend_from_slice(line);
+        if self.out.last() != Some(&b'\n') {
+            self.out.push(b'\n');
+        }
+        self.write_out()?;
+        self.read_line().map(|l| l.to_vec())
+    }
+
+    /// Fire one query and return the raw response line without parsing —
+    /// the bench hot path. The borrow is valid until the next call.
+    pub fn query_raw(&mut self, user: &[f32], kappa: usize) -> Result<&[u8]> {
+        proto::encode_query(&mut self.out, user, kappa);
+        self.write_out()?;
+        self.read_line()
+    }
+
+    /// Round-trip one query, parsing the response (errors from the
+    /// server become [`GeomapError::Rejected`]).
+    pub fn query(&mut self, user: &[f32], kappa: usize) -> Result<ClientResponse> {
+        proto::encode_query(&mut self.out, user, kappa);
+        self.write_out()?;
+        let line = self.read_line()?;
+        let j = parse_line_json(line)?;
+        let mut results = Vec::new();
+        for r in j.get("results")?.as_arr()? {
+            results.push(Scored {
+                id: r.get("id")?.as_usize()? as u32,
+                score: r.get("score")?.as_f64()? as f32,
+            });
+        }
+        Ok(ClientResponse {
+            results,
+            candidates: j.get("candidates")?.as_usize()?,
+            total_items: j.get("total")?.as_usize()?,
+            version: j.get("version")?.as_usize()? as u64,
+            latency_us: j.get("latency_us")?.as_usize()? as u64,
+        })
+    }
+
+    /// Round-trip one upsert, returning the new catalogue version.
+    pub fn upsert(&mut self, id: u32, factor: &[f32]) -> Result<u64> {
+        proto::encode_upsert(&mut self.out, id, factor);
+        self.write_out()?;
+        let line = self.read_line()?;
+        let j = parse_line_json(line)?;
+        Ok(j.get("version")?.as_usize()? as u64)
+    }
+
+    /// Round-trip one remove, returning `(version, was_live)`.
+    pub fn remove(&mut self, id: u32) -> Result<(u64, bool)> {
+        proto::encode_remove(&mut self.out, id);
+        self.write_out()?;
+        let line = self.read_line()?;
+        let j = parse_line_json(line)?;
+        Ok((
+            j.get("version")?.as_usize()? as u64,
+            j.get("live")?.as_bool()?,
+        ))
+    }
+}
+
+/// Parse one response line, mapping `{"error":…}` to `Rejected`.
+fn parse_line_json(line: &[u8]) -> Result<Json> {
+    let text = std::str::from_utf8(line).map_err(|_| {
+        GeomapError::Rejected("response is not valid utf-8".into())
+    })?;
+    let j = Json::parse(text)?;
+    if let Some(e) = j.opt("error") {
+        return Err(GeomapError::Rejected(format!(
+            "server error: {}",
+            e.as_str()?
+        )));
+    }
+    Ok(j)
+}

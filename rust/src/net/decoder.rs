@@ -1,0 +1,697 @@
+//! Streaming request decoder: newline-framed JSON parsed in place from
+//! the socket read buffer.
+//!
+//! Design (after the slice/byte-iterator JSON lexers the protocol is
+//! modelled on): bytes from `read()` are appended to one growable
+//! buffer; complete lines are parsed **in place** — no `Json` tree, no
+//! intermediate `String`s, factor payloads written into one reusable
+//! scratch `Vec<f32>` that the returned [`Request`] borrows. The
+//! request grammar is deliberately flat (a factor array holds numbers
+//! only), so parsing is a single left-to-right scan with no recursion:
+//! a deeply nested payload is rejected at its second `[` in O(1), not
+//! stack-overflowed. Numbers use the same strict RFC 8259 grammar as
+//! the configx JSON parser ([`crate::configx::json`]'s shared scanner),
+//! so `01`, `1.`, `1e` and friends are protocol errors here exactly as
+//! they are config errors there.
+//!
+//! Malformed input is never a panic and never kills the framing: each
+//! bad line yields one [`DecodeError`] (rendered to one `{"error":…}`
+//! response by the server) and decoding resumes at the next newline.
+
+use super::proto::{Request, MAX_FACTOR_LEN, MAX_KAPPA, MAX_LINE_BYTES};
+use crate::configx::json::scan_number;
+
+/// A protocol decode error: byte offset within the offending line plus
+/// a message. `Display` renders the single-line form sent to clients.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct DecodeError {
+    /// Byte offset of the error within its request line.
+    pub offset: usize,
+    /// What went wrong.
+    pub message: String,
+}
+
+impl DecodeError {
+    fn new(offset: usize, message: impl Into<String>) -> Self {
+        DecodeError { offset, message: message.into() }
+    }
+}
+
+impl std::fmt::Display for DecodeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "decode error at byte {}: {}", self.offset, self.message)
+    }
+}
+
+/// Incremental decoder over a stream of socket reads. Feed raw chunks
+/// with [`feed`](Self::feed), then drain complete requests with
+/// [`next_request`](Self::next_request) until it returns `None` (more
+/// bytes needed). Lines may arrive split at any byte boundary.
+pub struct RequestDecoder {
+    buf: Vec<u8>,
+    /// First unconsumed byte of `buf`.
+    start: usize,
+    /// Next byte to inspect for a newline (avoids re-scanning the same
+    /// prefix when a long line arrives across many reads).
+    scan: usize,
+    /// An oversized line is being discarded up to its terminating
+    /// newline (the one-error-then-resync path).
+    skipping: bool,
+    /// Scratch the decoded factor payload lands in; borrowed by the
+    /// returned [`Request`] until the next `next_request` call.
+    scratch: Vec<f32>,
+    max_line: usize,
+}
+
+impl Default for RequestDecoder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RequestDecoder {
+    /// Decoder with the default [`MAX_LINE_BYTES`] line budget.
+    pub fn new() -> Self {
+        Self::with_max_line(MAX_LINE_BYTES)
+    }
+
+    /// Decoder with a custom per-line byte budget (tests shrink it to
+    /// exercise the oversized-line resync path cheaply).
+    pub fn with_max_line(max_line: usize) -> Self {
+        RequestDecoder {
+            buf: Vec::with_capacity(4096),
+            start: 0,
+            scan: 0,
+            skipping: false,
+            scratch: Vec::new(),
+            max_line: max_line.max(1),
+        }
+    }
+
+    /// Append freshly read socket bytes. Consumed prefix is compacted
+    /// first so the buffer stays bounded by one in-flight line.
+    pub fn feed(&mut self, bytes: &[u8]) {
+        if self.start > 0 {
+            self.buf.drain(..self.start);
+            self.scan -= self.start;
+            self.start = 0;
+        }
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Bytes buffered but not yet framed into a complete line.
+    pub fn buffered(&self) -> usize {
+        self.buf.len() - self.start
+    }
+
+    /// Decode the next complete request, if a full line is buffered.
+    ///
+    /// `None` means "need more bytes" — call [`feed`](Self::feed) with
+    /// the next read. `Some(Err(_))` consumes exactly one bad line (or
+    /// begins discarding an oversized one); framing always survives.
+    pub fn next_request(&mut self) -> Option<Result<Request<'_>, DecodeError>> {
+        loop {
+            if self.skipping {
+                // discard the tail of an oversized line
+                match find_newline(&self.buf[self.start..]) {
+                    Some(i) => {
+                        self.start += i + 1;
+                        self.scan = self.start;
+                        self.skipping = false;
+                    }
+                    None => {
+                        self.start = self.buf.len();
+                        self.scan = self.buf.len();
+                        return None;
+                    }
+                }
+                continue;
+            }
+            let Some(rel) = find_newline(&self.buf[self.scan..]) else {
+                if self.buf.len() - self.start > self.max_line {
+                    // budget blown with no newline in sight: reject once,
+                    // then swallow bytes until the line finally ends
+                    self.skipping = true;
+                    self.start = self.buf.len();
+                    self.scan = self.buf.len();
+                    return Some(Err(DecodeError::new(
+                        0,
+                        format!(
+                            "request line exceeds {} bytes",
+                            self.max_line
+                        ),
+                    )));
+                }
+                self.scan = self.buf.len();
+                return None;
+            };
+            let nl = self.scan + rel;
+            let line_start = self.start;
+            self.start = nl + 1;
+            self.scan = self.start;
+            let mut line_end = nl;
+            if line_end > line_start && self.buf[line_end - 1] == b'\r' {
+                line_end -= 1; // tolerate CRLF framing
+            }
+            if line_end == line_start {
+                continue; // blank keep-alive line
+            }
+            if line_end - line_start > self.max_line {
+                return Some(Err(DecodeError::new(
+                    0,
+                    format!("request line exceeds {} bytes", self.max_line),
+                )));
+            }
+            // parse into owned verb + scratch floats, then re-borrow the
+            // scratch for the caller-facing Request
+            let parsed = parse_line(
+                &self.buf[line_start..line_end],
+                &mut self.scratch,
+            );
+            return Some(match parsed {
+                Ok(verb) => Ok(verb.into_request(&self.scratch)),
+                Err(e) => Err(e),
+            });
+        }
+    }
+}
+
+fn find_newline(bytes: &[u8]) -> Option<usize> {
+    bytes.iter().position(|&b| b == b'\n')
+}
+
+/// Owned parse result; factor payloads live in the caller's scratch.
+enum Verb {
+    Query { kappa: usize },
+    Upsert { id: u32 },
+    Remove { id: u32 },
+}
+
+impl Verb {
+    fn into_request(self, scratch: &[f32]) -> Request<'_> {
+        match self {
+            Verb::Query { kappa } => Request::Query { user: scratch, kappa },
+            Verb::Upsert { id } => Request::Upsert { id, factor: scratch },
+            Verb::Remove { id } => Request::Remove { id },
+        }
+    }
+}
+
+struct LineParser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> LineParser<'a> {
+    fn err(&self, message: impl Into<String>) -> DecodeError {
+        DecodeError::new(self.pos, message)
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t')) {
+            self.pos += 1;
+        }
+    }
+
+    fn expect(&mut self, c: u8) -> Result<(), DecodeError> {
+        if self.peek() == Some(c) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            Err(self.err(format!("expected '{}'", c as char)))
+        }
+    }
+
+    /// A quoted request key. Known keys are plain ASCII, so escapes are
+    /// rejected rather than decoded — an escaped key can never match.
+    fn key(&mut self) -> Result<&'a [u8], DecodeError> {
+        self.expect(b'"')?;
+        let start = self.pos;
+        loop {
+            match self.peek() {
+                Some(b'"') => {
+                    let key = &self.bytes[start..self.pos];
+                    self.pos += 1;
+                    return Ok(key);
+                }
+                Some(b'\\') => {
+                    return Err(self
+                        .err("escapes are not allowed in request keys"))
+                }
+                Some(c) if c >= 0x20 => self.pos += 1,
+                _ => return Err(self.err("unterminated key")),
+            }
+        }
+    }
+
+    /// Strict-grammar number via the scanner shared with configx JSON.
+    fn number(&mut self) -> Result<f64, DecodeError> {
+        let (n, end) = scan_number(self.bytes, self.pos)
+            .map_err(|(offset, message)| DecodeError::new(offset, message))?;
+        self.pos = end;
+        Ok(n)
+    }
+
+    /// A non-negative integer bounded by `max` (ids, kappa).
+    fn integer(&mut self, what: &str, max: u64) -> Result<u64, DecodeError> {
+        let at = self.pos;
+        let n = self.number()?;
+        if n < 0.0 || n.fract() != 0.0 {
+            return Err(DecodeError::new(
+                at,
+                format!("{what} must be a non-negative integer"),
+            ));
+        }
+        if n > max as f64 {
+            return Err(DecodeError::new(at, format!("{what} must be <= {max}")));
+        }
+        Ok(n as u64)
+    }
+
+    /// A flat `[f32, …]` payload into `out`. Every element must narrow
+    /// to a *finite* f32: `1e39` is a valid JSON number and a valid f64
+    /// but would silently become `inf` — that is a protocol error, not
+    /// a score.
+    fn f32_array(
+        &mut self,
+        what: &str,
+        out: &mut Vec<f32>,
+    ) -> Result<(), DecodeError> {
+        out.clear();
+        self.skip_ws();
+        self.expect(b'[')?;
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(());
+        }
+        loop {
+            self.skip_ws();
+            // flat grammar: nested '[' fails scan_number right here, so
+            // arbitrarily deep nesting costs O(1) and no stack
+            let at = self.pos;
+            let n = self.number()?;
+            let v = n as f32;
+            if !v.is_finite() {
+                return Err(DecodeError::new(
+                    at,
+                    format!("{what} value overflows f32"),
+                ));
+            }
+            if out.len() == MAX_FACTOR_LEN {
+                return Err(DecodeError::new(
+                    at,
+                    format!("{what} exceeds {MAX_FACTOR_LEN} values"),
+                ));
+            }
+            out.push(v);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(());
+                }
+                _ => return Err(self.err("expected ',' or ']'")),
+            }
+        }
+    }
+}
+
+/// Parse one complete request line (newline already stripped).
+fn parse_line(line: &[u8], scratch: &mut Vec<f32>) -> Result<Verb, DecodeError> {
+    let mut p = LineParser { bytes: line, pos: 0 };
+    let mut kappa: Option<usize> = None;
+    let mut upsert_id: Option<u32> = None;
+    let mut remove_id: Option<u32> = None;
+    let mut have_user = false;
+    let mut have_factor = false;
+
+    p.skip_ws();
+    p.expect(b'{')?;
+    p.skip_ws();
+    if p.peek() == Some(b'}') {
+        p.pos += 1;
+    } else {
+        loop {
+            p.skip_ws();
+            let key_at = p.pos;
+            let key = p.key()?;
+            p.skip_ws();
+            p.expect(b':')?;
+            p.skip_ws();
+            match key {
+                b"user" => {
+                    if have_user {
+                        return Err(DecodeError::new(key_at, "duplicate 'user'"));
+                    }
+                    p.f32_array("user", scratch)?;
+                    have_user = true;
+                }
+                b"factor" => {
+                    if have_factor {
+                        return Err(DecodeError::new(
+                            key_at,
+                            "duplicate 'factor'",
+                        ));
+                    }
+                    p.f32_array("factor", scratch)?;
+                    have_factor = true;
+                }
+                b"kappa" => {
+                    if kappa.is_some() {
+                        return Err(DecodeError::new(key_at, "duplicate 'kappa'"));
+                    }
+                    let n = p.integer("kappa", MAX_KAPPA as u64)?;
+                    if n == 0 {
+                        return Err(DecodeError::new(key_at, "kappa must be >= 1"));
+                    }
+                    kappa = Some(n as usize);
+                }
+                b"upsert" => {
+                    if upsert_id.is_some() {
+                        return Err(DecodeError::new(
+                            key_at,
+                            "duplicate 'upsert'",
+                        ));
+                    }
+                    upsert_id =
+                        Some(p.integer("upsert id", u32::MAX as u64)? as u32);
+                }
+                b"remove" => {
+                    if remove_id.is_some() {
+                        return Err(DecodeError::new(
+                            key_at,
+                            "duplicate 'remove'",
+                        ));
+                    }
+                    remove_id =
+                        Some(p.integer("remove id", u32::MAX as u64)? as u32);
+                }
+                other => {
+                    return Err(DecodeError::new(
+                        key_at,
+                        format!(
+                            "unknown request key '{}'",
+                            String::from_utf8_lossy(other)
+                        ),
+                    ));
+                }
+            }
+            p.skip_ws();
+            match p.peek() {
+                Some(b',') => p.pos += 1,
+                Some(b'}') => {
+                    p.pos += 1;
+                    break;
+                }
+                _ => return Err(p.err("expected ',' or '}'")),
+            }
+        }
+    }
+    p.skip_ws();
+    if p.pos != p.bytes.len() {
+        return Err(p.err("trailing bytes after request object"));
+    }
+
+    // exactly one verb: user+kappa, upsert+factor, or remove
+    match (have_user, upsert_id, remove_id) {
+        (true, None, None) => {
+            if have_factor {
+                return Err(DecodeError::new(
+                    0,
+                    "'factor' belongs to 'upsert', not queries",
+                ));
+            }
+            let kappa = kappa.ok_or_else(|| {
+                DecodeError::new(0, "query is missing 'kappa'")
+            })?;
+            Ok(Verb::Query { kappa })
+        }
+        (false, Some(id), None) => {
+            if kappa.is_some() {
+                return Err(DecodeError::new(
+                    0,
+                    "'kappa' is only valid on queries",
+                ));
+            }
+            if !have_factor {
+                return Err(DecodeError::new(0, "upsert is missing 'factor'"));
+            }
+            Ok(Verb::Upsert { id })
+        }
+        (false, None, Some(id)) => {
+            if kappa.is_some() || have_factor {
+                return Err(DecodeError::new(
+                    0,
+                    "remove takes no other keys",
+                ));
+            }
+            Ok(Verb::Remove { id })
+        }
+        (false, None, None) => Err(DecodeError::new(
+            0,
+            "request names no verb: want 'user'+'kappa', \
+             'upsert'+'factor', or 'remove'",
+        )),
+        _ => Err(DecodeError::new(0, "request mixes more than one verb")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn decode_one(line: &str) -> Result<OwnedRequest, DecodeError> {
+        let mut dec = RequestDecoder::new();
+        dec.feed(line.as_bytes());
+        dec.feed(b"\n");
+        match dec.next_request() {
+            Some(Ok(r)) => Ok(OwnedRequest::from(r)),
+            Some(Err(e)) => Err(e),
+            None => panic!("complete line must decode"),
+        }
+    }
+
+    /// Owned mirror of [`Request`] so tests can hold several at once.
+    #[derive(Debug, PartialEq)]
+    enum OwnedRequest {
+        Query { user: Vec<f32>, kappa: usize },
+        Upsert { id: u32, factor: Vec<f32> },
+        Remove { id: u32 },
+    }
+
+    impl From<Request<'_>> for OwnedRequest {
+        fn from(r: Request<'_>) -> Self {
+            match r {
+                Request::Query { user, kappa } => {
+                    OwnedRequest::Query { user: user.to_vec(), kappa }
+                }
+                Request::Upsert { id, factor } => {
+                    OwnedRequest::Upsert { id, factor: factor.to_vec() }
+                }
+                Request::Remove { id } => OwnedRequest::Remove { id },
+            }
+        }
+    }
+
+    #[test]
+    fn decodes_the_three_verbs() {
+        assert_eq!(
+            decode_one(r#"{"user":[1.5,-2.25,0],"kappa":10}"#).unwrap(),
+            OwnedRequest::Query { user: vec![1.5, -2.25, 0.0], kappa: 10 }
+        );
+        assert_eq!(
+            decode_one(r#"{"upsert":7,"factor":[0.5,0.25]}"#).unwrap(),
+            OwnedRequest::Upsert { id: 7, factor: vec![0.5, 0.25] }
+        );
+        // key order is not significant
+        assert_eq!(
+            decode_one(r#"{"factor":[0.5,0.25],"upsert":7}"#).unwrap(),
+            OwnedRequest::Upsert { id: 7, factor: vec![0.5, 0.25] }
+        );
+        assert_eq!(
+            decode_one(r#"{"remove":42}"#).unwrap(),
+            OwnedRequest::Remove { id: 42 }
+        );
+        // interior whitespace tolerated
+        assert_eq!(
+            decode_one(r#" { "user" : [ 1 , 2 ] , "kappa" : 3 } "#).unwrap(),
+            OwnedRequest::Query { user: vec![1.0, 2.0], kappa: 3 }
+        );
+    }
+
+    #[test]
+    fn reassembles_lines_split_at_every_byte_boundary() {
+        let line = b"{\"user\":[1.5,-2.25,3.75e-2],\"kappa\":7}\n";
+        for split in 0..line.len() {
+            let mut dec = RequestDecoder::new();
+            dec.feed(&line[..split]);
+            if split < line.len() - 1 {
+                assert!(
+                    dec.next_request().is_none(),
+                    "split {split}: no newline yet"
+                );
+            }
+            dec.feed(&line[split..]);
+            match dec.next_request() {
+                Some(Ok(Request::Query { user, kappa })) => {
+                    assert_eq!(user, &[1.5, -2.25, 3.75e-2]);
+                    assert_eq!(kappa, 7);
+                }
+                other => panic!("split {split}: {other:?}"),
+            }
+            assert!(dec.next_request().is_none());
+            assert_eq!(dec.buffered(), 0);
+        }
+    }
+
+    #[test]
+    fn byte_at_a_time_feed_decodes_a_request_stream() {
+        let stream =
+            b"{\"remove\":1}\r\n\n{\"user\":[2],\"kappa\":1}\n{\"remove\":3}\n";
+        let mut dec = RequestDecoder::new();
+        let mut got = Vec::new();
+        for &b in stream.iter() {
+            dec.feed(&[b]);
+            while let Some(r) = dec.next_request() {
+                got.push(OwnedRequest::from(r.expect("valid stream")));
+            }
+        }
+        assert_eq!(
+            got,
+            vec![
+                OwnedRequest::Remove { id: 1 },
+                OwnedRequest::Query { user: vec![2.0], kappa: 1 },
+                OwnedRequest::Remove { id: 3 },
+            ]
+        );
+    }
+
+    #[test]
+    fn adversarial_lines_error_without_killing_framing() {
+        let bad = [
+            // truncated mid-array / mid-number (newline arrived early)
+            r#"{"user":[0.1,0.2"#,
+            r#"{"user":[0.1,0.2],"kappa":1"#,
+            r#"{"user":[1.5e],"kappa":1}"#,
+            r#"{"user":[1.],"kappa":1}"#,
+            // non-finite and overflowing floats
+            r#"{"user":[NaN],"kappa":1}"#,
+            r#"{"user":[Infinity],"kappa":1}"#,
+            r#"{"user":[-inf],"kappa":1}"#,
+            r#"{"user":[1e999],"kappa":1}"#,
+            r#"{"user":[1e39],"kappa":1}"#,
+            // strict number grammar
+            r#"{"user":[01],"kappa":1}"#,
+            r#"{"user":[.5],"kappa":1}"#,
+            r#"{"user":[1],"kappa":07}"#,
+            // nesting is not part of the grammar
+            r#"{"user":[[1,2]],"kappa":1}"#,
+            // kappa domain
+            r#"{"user":[1],"kappa":0}"#,
+            r#"{"user":[1],"kappa":70000}"#,
+            r#"{"user":[1],"kappa":2.5}"#,
+            r#"{"user":[1],"kappa":-3}"#,
+            // verb confusion
+            r#"{}"#,
+            r#"{"kappa":5}"#,
+            r#"{"user":[1,2]}"#,
+            r#"{"upsert":5}"#,
+            r#"{"remove":1,"kappa":2}"#,
+            r#"{"user":[1],"kappa":1,"remove":2}"#,
+            r#"{"user":[1],"user":[2],"kappa":1}"#,
+            r#"{"quary":[1],"kappa":1}"#,
+            // framing garbage
+            r#"not json"#,
+            r#"{"user":[1,2],"kappa":3}trailing"#,
+            r#"["user"]"#,
+            r#"{"user":"oops","kappa":1}"#,
+        ];
+        let mut dec = RequestDecoder::new();
+        for line in bad {
+            dec.feed(line.as_bytes());
+            dec.feed(b"\n");
+            match dec.next_request() {
+                Some(Err(_)) => {}
+                other => panic!("'{line}' must be a decode error: {other:?}"),
+            }
+            // framing survives: a valid request right after decodes
+            dec.feed(b"{\"user\":[1.0],\"kappa\":2}\n");
+            match dec.next_request() {
+                Some(Ok(Request::Query { user, kappa })) => {
+                    assert_eq!(user, &[1.0]);
+                    assert_eq!(kappa, 2);
+                }
+                other => panic!("after '{line}': {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn deep_nesting_is_rejected_flat_not_recursively() {
+        // 64k opening brackets: a recursive parser would blow the stack;
+        // the flat grammar fails at the second '[' in O(1)
+        let mut line = String::from(r#"{"user":"#);
+        line.push_str(&"[".repeat(65_536));
+        let mut dec = RequestDecoder::new();
+        dec.feed(line.as_bytes());
+        dec.feed(b"\n");
+        assert!(matches!(dec.next_request(), Some(Err(_))));
+        dec.feed(b"{\"remove\":1}\n");
+        assert!(matches!(
+            dec.next_request(),
+            Some(Ok(Request::Remove { id: 1 }))
+        ));
+    }
+
+    #[test]
+    fn oversized_line_errors_once_then_resyncs() {
+        let mut dec = RequestDecoder::with_max_line(64);
+        // a 200-byte line fed in chunks: one error when the budget blows
+        let big = vec![b'x'; 200];
+        dec.feed(&big[..100]);
+        assert!(matches!(dec.next_request(), Some(Err(_))), "budget blown");
+        dec.feed(&big[100..]);
+        assert!(dec.next_request().is_none(), "still discarding");
+        dec.feed(b"\n{\"remove\":9}\n");
+        assert!(matches!(
+            dec.next_request(),
+            Some(Ok(Request::Remove { id: 9 }))
+        ));
+        assert!(dec.next_request().is_none());
+
+        // an oversized line that arrives whole (newline included) is
+        // also rejected, and the next line still decodes
+        let mut dec = RequestDecoder::with_max_line(16);
+        dec.feed(b"{\"user\":[1,2,3,4,5,6],\"kappa\":1}\n{\"remove\":2}\n");
+        assert!(matches!(dec.next_request(), Some(Err(_))));
+        assert!(matches!(
+            dec.next_request(),
+            Some(Ok(Request::Remove { id: 2 }))
+        ));
+    }
+
+    #[test]
+    fn empty_factor_array_decodes_and_fails_downstream_not_here() {
+        // shape validation belongs to the coordinator (it knows k); the
+        // decoder's job is only the grammar
+        assert_eq!(
+            decode_one(r#"{"user":[],"kappa":1}"#).unwrap(),
+            OwnedRequest::Query { user: vec![], kappa: 1 }
+        );
+    }
+
+    #[test]
+    fn error_offsets_point_into_the_line() {
+        let err = decode_one(r#"{"user":[01],"kappa":1}"#).unwrap_err();
+        assert_eq!(err.offset, 9, "{err}");
+        let err = decode_one(r#"{"user":[1e999],"kappa":1}"#).unwrap_err();
+        assert_eq!(err.offset, 9, "{err}");
+        assert!(err.to_string().contains("overflows"), "{err}");
+    }
+}

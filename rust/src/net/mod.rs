@@ -1,0 +1,23 @@
+//! Network serving front-end (`docs/NET.md`): a TCP protocol layer over
+//! [`Coordinator::submit`](crate::coordinator::Coordinator::submit).
+//!
+//! The protocol is newline-delimited JSON — one request object per
+//! line, one response line per request, in order — decoded by a
+//! hand-rolled streaming parser that works directly on the socket read
+//! buffer: zero-copy over slices, incremental across partial reads,
+//! strict RFC 8259 numbers via the scanner shared with configx, and
+//! `Err`-never-panic on malformed input (each bad line costs one error
+//! response, never the connection). This is the subsystem that turns
+//! the repo from a library into a servable system: configure it with
+//! `net: tcp:<ip:port>` (CLI `--net`), drive it with
+//! `examples/loadgen.rs`, and hold it to the `net_path` bench gates.
+
+pub mod client;
+pub mod decoder;
+pub mod proto;
+pub mod server;
+
+pub use client::{ClientResponse, NetClient};
+pub use decoder::{DecodeError, RequestDecoder};
+pub use proto::Request;
+pub use server::NetServer;

@@ -1,0 +1,279 @@
+//! Wire protocol: request/response grammar and allocation-lean encoders.
+//!
+//! Framing is newline-delimited JSON: one request object per line, one
+//! response line per request, answered in order on the same connection.
+//! Request forms (`docs/NET.md` has the full grammar):
+//!
+//! ```text
+//! {"user":[f32,...],"kappa":N}        top-κ query
+//! {"upsert":ID,"factor":[f32,...]}    incremental catalogue upsert
+//! {"remove":ID}                       incremental catalogue remove
+//! ```
+//!
+//! Response lines:
+//!
+//! ```text
+//! {"results":[{"id":..,"score":..},..],
+//!  "candidates":..,"total":..,"version":..,"latency_us":..}
+//! {"ok":true,"version":..}            upsert ack
+//! {"ok":true,"version":..,"live":b}   remove ack
+//! {"error":"..."}                     decode or serve failure
+//! ```
+//!
+//! Encoders stream straight into a reusable `Vec<u8>` through
+//! `io::Write` — no intermediate `String`, no per-field allocation once
+//! the buffer has grown to its steady-state size. Floats are emitted
+//! with Rust's shortest-round-trip `Display`, which the strict decoder
+//! grammar accepts verbatim, so an encode → decode round trip recovers
+//! every f32 bit-exactly (including `-0.0` and subnormals; non-finite
+//! values never reach an encoder — the decoder rejects them on input
+//! and retrieval scores are finite by construction).
+
+use crate::coordinator::Response;
+use std::io::Write as _;
+
+/// Largest accepted `kappa`: past this a request is malformed, not
+/// ambitious — it would pin a shard merging the whole catalogue per hit.
+pub const MAX_KAPPA: usize = 65_536;
+
+/// Largest accepted factor array (`user` / upsert `factor`) length.
+pub const MAX_FACTOR_LEN: usize = 65_536;
+
+/// Default per-line byte budget for the streaming decoder. A maximal
+/// legal request (a `MAX_FACTOR_LEN` factor at ~17 bytes per float)
+/// still fits; anything longer is dropped with one error response and
+/// the connection resyncs at the next newline.
+pub const MAX_LINE_BYTES: usize = 2 << 20;
+
+/// One decoded request. Factor payloads borrow the decoder's scratch
+/// buffer — they are valid until the next `next_request()` call, long
+/// enough to hand to `Coordinator::{submit,upsert}`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Request<'a> {
+    /// Top-κ retrieval for one user factor.
+    Query {
+        /// User factor (length is validated by `submit` against `k`).
+        user: &'a [f32],
+        /// Result count, 1..=[`MAX_KAPPA`].
+        kappa: usize,
+    },
+    /// Insert or replace one catalogue item.
+    Upsert {
+        /// Item id.
+        id: u32,
+        /// Item factor.
+        factor: &'a [f32],
+    },
+    /// Tombstone one catalogue item.
+    Remove {
+        /// Item id.
+        id: u32,
+    },
+}
+
+fn write_f32_array(out: &mut Vec<u8>, xs: &[f32]) {
+    out.push(b'[');
+    for (i, x) in xs.iter().enumerate() {
+        if i > 0 {
+            out.push(b',');
+        }
+        // shortest round-trip Display; Vec<u8> writes are infallible
+        let _ = write!(out, "{x}");
+    }
+    out.push(b']');
+}
+
+fn write_escaped(out: &mut Vec<u8>, s: &str) {
+    out.push(b'"');
+    for c in s.chars() {
+        match c {
+            '"' => out.extend_from_slice(b"\\\""),
+            '\\' => out.extend_from_slice(b"\\\\"),
+            '\n' => out.extend_from_slice(b"\\n"),
+            '\r' => out.extend_from_slice(b"\\r"),
+            '\t' => out.extend_from_slice(b"\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => {
+                let mut buf = [0u8; 4];
+                out.extend_from_slice(c.encode_utf8(&mut buf).as_bytes());
+            }
+        }
+    }
+    out.push(b'"');
+}
+
+/// Encode a query request line into `out` (cleared first).
+pub fn encode_query(out: &mut Vec<u8>, user: &[f32], kappa: usize) {
+    out.clear();
+    out.extend_from_slice(b"{\"user\":");
+    write_f32_array(out, user);
+    let _ = write!(out, ",\"kappa\":{kappa}}}");
+    out.push(b'\n');
+}
+
+/// Encode an upsert request line into `out` (cleared first).
+pub fn encode_upsert(out: &mut Vec<u8>, id: u32, factor: &[f32]) {
+    out.clear();
+    let _ = write!(out, "{{\"upsert\":{id},\"factor\":");
+    write_f32_array(out, factor);
+    out.extend_from_slice(b"}\n");
+}
+
+/// Encode a remove request line into `out` (cleared first).
+pub fn encode_remove(out: &mut Vec<u8>, id: u32) {
+    out.clear();
+    let _ = write!(out, "{{\"remove\":{id}}}");
+    out.push(b'\n');
+}
+
+/// Encode a query response line into `out` (cleared first): the top-κ
+/// results plus the serving telemetry `submit` attaches.
+pub fn encode_response(out: &mut Vec<u8>, resp: &Response) {
+    out.clear();
+    out.extend_from_slice(b"{\"results\":[");
+    for (i, s) in resp.results.iter().enumerate() {
+        if i > 0 {
+            out.push(b',');
+        }
+        let _ = write!(out, "{{\"id\":{},\"score\":{}}}", s.id, s.score);
+    }
+    let _ = write!(
+        out,
+        "],\"candidates\":{},\"total\":{},\"version\":{},\"latency_us\":{}}}",
+        resp.candidates, resp.total_items, resp.version, resp.latency_us
+    );
+    out.push(b'\n');
+}
+
+/// Encode a mutation ack line into `out` (cleared first). `live` is the
+/// remove verb's "was the id still live" bit; upserts pass `None`.
+pub fn encode_ack(out: &mut Vec<u8>, version: u64, live: Option<bool>) {
+    out.clear();
+    match live {
+        None => {
+            let _ = write!(out, "{{\"ok\":true,\"version\":{version}}}");
+        }
+        Some(live) => {
+            let _ = write!(
+                out,
+                "{{\"ok\":true,\"version\":{version},\"live\":{live}}}"
+            );
+        }
+    }
+    out.push(b'\n');
+}
+
+/// Encode an error response line into `out` (cleared first); the message
+/// is JSON-escaped so decoder diagnostics can quote raw input safely.
+pub fn encode_error(out: &mut Vec<u8>, message: &str) {
+    out.clear();
+    out.extend_from_slice(b"{\"error\":");
+    write_escaped(out, message);
+    out.extend_from_slice(b"}\n");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::configx::Json;
+    use crate::retrieval::Scored;
+
+    #[test]
+    fn f32_display_roundtrips_bit_exactly() {
+        // the equivalence guarantee rests on this: shortest-repr Display,
+        // parsed as f64 and narrowed, recovers the exact f32 bits
+        let edge = [
+            0.0f32,
+            -0.0,
+            1.0,
+            -1.0,
+            0.1,
+            1.0 / 3.0,
+            f32::MIN_POSITIVE,
+            f32::MAX,
+            -f32::MAX,
+            1.0e-40,              // subnormal
+            f32::from_bits(1),    // smallest subnormal
+            3.141_592_7,
+            -2.718_281_8e-20,
+        ];
+        for x in edge {
+            let s = format!("{x}");
+            let back = s.parse::<f64>().unwrap() as f32;
+            assert_eq!(back.to_bits(), x.to_bits(), "{x} → '{s}' → {back}");
+        }
+        let mut rng = crate::rng::Rng::seeded(0x5EED);
+        for _ in 0..10_000 {
+            let x = rng.gaussian_f32() * 10f32.powi(rng.below(60) as i32 - 30);
+            let s = format!("{x}");
+            let back = s.parse::<f64>().unwrap() as f32;
+            assert_eq!(back.to_bits(), x.to_bits(), "{x} → '{s}' → {back}");
+        }
+    }
+
+    #[test]
+    fn encoded_response_is_valid_json() {
+        let resp = Response {
+            results: vec![
+                Scored { id: 5, score: 1.25 },
+                Scored { id: 9, score: -0.5 },
+            ],
+            candidates: 17,
+            total_items: 100,
+            version: 3,
+            latency_us: 250,
+        };
+        let mut out = Vec::new();
+        encode_response(&mut out, &resp);
+        assert_eq!(out.last(), Some(&b'\n'));
+        let j = Json::parse(std::str::from_utf8(&out).unwrap().trim_end())
+            .unwrap();
+        let results = j.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(results.len(), 2);
+        assert_eq!(results[0].get("id").unwrap().as_usize().unwrap(), 5);
+        assert_eq!(results[0].get("score").unwrap().as_f64().unwrap(), 1.25);
+        assert_eq!(j.get("candidates").unwrap().as_usize().unwrap(), 17);
+        assert_eq!(j.get("total").unwrap().as_usize().unwrap(), 100);
+        assert_eq!(j.get("version").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(j.get("latency_us").unwrap().as_usize().unwrap(), 250);
+    }
+
+    #[test]
+    fn encoded_acks_and_errors_are_valid_json() {
+        let mut out = Vec::new();
+        encode_ack(&mut out, 7, None);
+        let j = Json::parse(std::str::from_utf8(&out).unwrap().trim_end())
+            .unwrap();
+        assert!(j.get("ok").unwrap().as_bool().unwrap());
+        assert_eq!(j.get("version").unwrap().as_usize().unwrap(), 7);
+        assert!(j.opt("live").is_none());
+
+        encode_ack(&mut out, 8, Some(false));
+        let j = Json::parse(std::str::from_utf8(&out).unwrap().trim_end())
+            .unwrap();
+        assert!(!j.get("live").unwrap().as_bool().unwrap());
+
+        // hostile message content must stay one well-formed line
+        encode_error(&mut out, "bad byte '\"' at\nline\t2 \\ \u{1}");
+        assert_eq!(out.iter().filter(|&&b| b == b'\n').count(), 1);
+        let j = Json::parse(std::str::from_utf8(&out).unwrap().trim_end())
+            .unwrap();
+        assert_eq!(
+            j.get("error").unwrap().as_str().unwrap(),
+            "bad byte '\"' at\nline\t2 \\ \u{1}"
+        );
+    }
+
+    #[test]
+    fn encoders_reset_their_buffer() {
+        let mut out = Vec::new();
+        encode_remove(&mut out, 1);
+        let first = out.clone();
+        encode_query(&mut out, &[1.0, 2.0], 3);
+        encode_remove(&mut out, 1);
+        assert_eq!(out, first, "reuse must not accumulate");
+        assert_eq!(out, b"{\"remove\":1}\n");
+    }
+}

@@ -1,0 +1,230 @@
+//! TCP front-end: accept loop, per-connection serving threads, graceful
+//! shutdown.
+//!
+//! Threading model (tokio is unavailable offline — `docs/ARCHITECTURE.md`
+//! §Offline substitutions): one blocking accept thread plus one thread
+//! per connection over `std::net`. Each connection thread owns a
+//! [`RequestDecoder`] and one reusable response buffer, reads fixed-size
+//! chunks, and answers every complete request **before reading more** —
+//! that sequential reply discipline is the per-connection backpressure:
+//! a client that pipelines faster than the coordinator serves fills its
+//! own socket buffers and blocks, instead of growing server memory.
+//! Cross-connection backpressure is the coordinator's own bounded
+//! admission queue (`queue_cap`), whose shed errors travel back as
+//! `{"error":"request rejected: …"}` lines.
+//!
+//! Shutdown: [`NetServer::shutdown`] flips the closing flag, wakes the
+//! blocking `accept()` with a loopback self-connect, half-closes every
+//! live connection socket to unblock its read, and joins all threads —
+//! no thread is ever detached past shutdown.
+
+use super::decoder::RequestDecoder;
+use super::proto::{self, Request};
+use crate::configx::parse_listen_addr;
+use crate::coordinator::Coordinator;
+use crate::error::{GeomapError, Result};
+use std::io::Read;
+use std::io::Write as _;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+/// Read-chunk size per connection; requests larger than this simply
+/// span multiple reads of the streaming decoder.
+const READ_CHUNK: usize = 16 * 1024;
+
+/// A running TCP front-end over one [`Coordinator`].
+///
+/// Dropping the server (or calling [`shutdown`](Self::shutdown)) stops
+/// accepting, drains every connection thread, and leaves the coordinator
+/// untouched — the caller still owns its `Arc<Coordinator>` and decides
+/// when to stop serving in-process traffic.
+pub struct NetServer {
+    local_addr: SocketAddr,
+    accept: Option<JoinHandle<()>>,
+    shared: Arc<Shared>,
+}
+
+struct Shared {
+    coord: Arc<Coordinator>,
+    closing: AtomicBool,
+    /// Live-connection socket clones, half-closed at shutdown to
+    /// unblock their reader threads.
+    streams: Mutex<Vec<TcpStream>>,
+    conns: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl NetServer {
+    /// Bind `addr` (literal `ip:port`; port 0 for ephemeral) and start
+    /// serving the protocol over `coord`.
+    pub fn start(coord: Arc<Coordinator>, addr: &str) -> Result<NetServer> {
+        let sock = parse_listen_addr(addr)?;
+        let listener =
+            TcpListener::bind(sock).map_err(|e| GeomapError::io(addr, e))?;
+        let local_addr =
+            listener.local_addr().map_err(|e| GeomapError::io(addr, e))?;
+        let shared = Arc::new(Shared {
+            coord,
+            closing: AtomicBool::new(false),
+            streams: Mutex::new(Vec::new()),
+            conns: Mutex::new(Vec::new()),
+        });
+        let accept = {
+            let shared = Arc::clone(&shared);
+            std::thread::Builder::new()
+                .name("geomap-net-accept".into())
+                .spawn(move || accept_loop(listener, shared))
+                .expect("spawn net accept thread")
+        };
+        Ok(NetServer { local_addr, accept: Some(accept), shared })
+    }
+
+    /// The bound listen address (resolves port 0 to the actual port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Stop accepting, drain and join every connection thread.
+    pub fn shutdown(mut self) {
+        self.stop();
+    }
+
+    fn stop(&mut self) {
+        if self.shared.closing.swap(true, Ordering::AcqRel) {
+            return; // already stopped (shutdown then Drop)
+        }
+        // wake the blocking accept() with a throwaway self-connect; if
+        // a real client won the race, the loop still observes `closing`
+        let _ = TcpStream::connect(self.local_addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        // half-close every live connection to unblock its read()
+        for s in self.shared.streams.lock().unwrap().drain(..) {
+            let _ = s.shutdown(Shutdown::Both);
+        }
+        let conns: Vec<_> =
+            self.shared.conns.lock().unwrap().drain(..).collect();
+        for h in conns {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
+    loop {
+        let (stream, _peer) = match listener.accept() {
+            Ok(conn) => conn,
+            Err(_) => {
+                if shared.closing.load(Ordering::Acquire) {
+                    break;
+                }
+                continue; // transient accept error (e.g. ECONNABORTED)
+            }
+        };
+        if shared.closing.load(Ordering::Acquire) {
+            break; // the shutdown self-connect (or a late client)
+        }
+        shared
+            .coord
+            .metrics()
+            .net_connections
+            .fetch_add(1, Ordering::Relaxed);
+        if let Ok(clone) = stream.try_clone() {
+            shared.streams.lock().unwrap().push(clone);
+        }
+        let conn_shared = Arc::clone(&shared);
+        let handle = std::thread::Builder::new()
+            .name("geomap-net-conn".into())
+            .spawn(move || connection_loop(stream, conn_shared))
+            .expect("spawn net connection thread");
+        shared.conns.lock().unwrap().push(handle);
+    }
+}
+
+fn connection_loop(mut stream: TcpStream, shared: Arc<Shared>) {
+    // request/response round trips are one small write each way; without
+    // nodelay, Nagle + delayed ACK would serialise them at ~40ms
+    let _ = stream.set_nodelay(true);
+    let coord = &shared.coord;
+    let metrics = coord.metrics();
+    let mut dec = RequestDecoder::new();
+    let mut out = Vec::with_capacity(4096);
+    let mut chunk = [0u8; READ_CHUNK];
+    'conn: loop {
+        if shared.closing.load(Ordering::Acquire) {
+            break;
+        }
+        let n = match stream.read(&mut chunk) {
+            Ok(0) => break, // clean client hangup
+            Ok(n) => n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(_) => break, // reset, or half-closed by shutdown
+        };
+        metrics.net_bytes_in.fetch_add(n as u64, Ordering::Relaxed);
+        dec.feed(&chunk[..n]);
+        // answer everything decodable before the next read: this is the
+        // per-connection backpressure (see module docs)
+        while let Some(decoded) = dec.next_request() {
+            match decoded {
+                Ok(req) => serve_request(coord, req, &mut out),
+                Err(e) => {
+                    metrics.net_decode_errors.fetch_add(1, Ordering::Relaxed);
+                    proto::encode_error(&mut out, &e.to_string());
+                }
+            }
+            metrics.net_bytes_out.fetch_add(out.len() as u64, Ordering::Relaxed);
+            if stream.write_all(&out).is_err() {
+                break 'conn;
+            }
+        }
+    }
+    let _ = stream.shutdown(Shutdown::Both);
+    shared.coord.metrics().net_closed.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Serve one decoded request, leaving the encoded response line in `out`.
+fn serve_request(coord: &Coordinator, req: Request<'_>, out: &mut Vec<u8>) {
+    let failed = match req {
+        Request::Query { user, kappa } => {
+            // the one unavoidable copy: submit hands the factor to the
+            // batcher thread, so it must own the bytes
+            match coord.submit(user.to_vec(), kappa) {
+                Ok(resp) => {
+                    proto::encode_response(out, &resp);
+                    None
+                }
+                Err(e) => Some(e),
+            }
+        }
+        Request::Upsert { id, factor } => match coord.upsert(id, factor) {
+            Ok(version) => {
+                proto::encode_ack(out, version, None);
+                None
+            }
+            Err(e) => Some(e),
+        },
+        Request::Remove { id } => match coord.remove(id) {
+            Ok((version, live)) => {
+                proto::encode_ack(out, version, Some(live));
+                None
+            }
+            Err(e) => Some(e),
+        },
+    };
+    if let Some(e) = failed {
+        // decoded fine but rejected semantically (shape/config) — client
+        // bug, not protocol corruption; queue sheds are neither
+        if matches!(e, GeomapError::Shape(_) | GeomapError::Config(_)) {
+            coord.metrics().net_malformed.fetch_add(1, Ordering::Relaxed);
+        }
+        proto::encode_error(out, &e.to_string());
+    }
+}

@@ -1,0 +1,272 @@
+//! End-to-end protocol equivalence and robustness (docs/NET.md): a query
+//! served over the TCP front-end must be *byte-identical* to the same
+//! query through `Coordinator::submit`, malformed lines must cost one
+//! error response and never the connection, requests split across
+//! arbitrary TCP write boundaries must reassemble, and shutdown must
+//! leave no thread behind and no client blocked.
+
+use geomap::configx::Backend;
+use geomap::coordinator::{Coordinator, Response};
+use geomap::net::{proto, NetClient, NetServer, Request, RequestDecoder};
+use geomap::runtime::cpu_scorer_factory;
+use geomap::testing::{fix, prop};
+use std::io::{Read, Write};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Coordinator + front-end on an ephemeral loopback port.
+fn start(k: usize, n: usize, seed: u64) -> (Arc<Coordinator>, NetServer) {
+    let coord = Arc::new(
+        Coordinator::start(
+            fix::serve_cfg(k, 2, Backend::Geomap, 0.5),
+            fix::items(n, k, seed),
+            cpu_scorer_factory(),
+        )
+        .unwrap(),
+    );
+    let server = NetServer::start(Arc::clone(&coord), "127.0.0.1:0").unwrap();
+    (coord, server)
+}
+
+fn stop(coord: Arc<Coordinator>, server: NetServer) {
+    server.shutdown();
+    Arc::try_unwrap(coord).ok().map(Coordinator::shutdown);
+}
+
+/// Everything in a `Response` except latency, scores at bit precision.
+fn key(r: &Response) -> (Vec<(u32, u32)>, usize, usize, u64) {
+    (
+        r.results.iter().map(|s| (s.id, s.score.to_bits())).collect(),
+        r.candidates,
+        r.total_items,
+        r.version,
+    )
+}
+
+#[test]
+fn tcp_query_is_byte_identical_to_direct_submit() {
+    let (coord, server) = start(6, 300, 40);
+    let mut client = NetClient::connect(server.local_addr()).unwrap();
+    for (i, u) in fix::user_vecs(16, 6, 41).into_iter().enumerate() {
+        let via_net = client.query(&u, 5).unwrap();
+        let direct = coord.submit(u, 5).unwrap();
+        let net_key = (
+            via_net
+                .results
+                .iter()
+                .map(|s| (s.id, s.score.to_bits()))
+                .collect::<Vec<_>>(),
+            via_net.candidates,
+            via_net.total_items,
+            via_net.version,
+        );
+        assert_eq!(net_key, key(&direct), "user {i} diverged over the wire");
+    }
+    drop(client);
+    stop(coord, server);
+}
+
+#[test]
+fn malformed_lines_error_without_killing_the_connection() {
+    let (coord, server) = start(4, 100, 50);
+    let mut client = NetClient::connect(server.local_addr()).unwrap();
+    let good = fix::user(4, 51);
+    let bad: &[&[u8]] = &[
+        br#"{"user":[0.1,0.2"#,
+        br#"{"user":[NaN],"kappa":1}"#,
+        br#"{"user":[1e999],"kappa":1}"#,
+        br#"{"user":[01],"kappa":1}"#,
+        br#"{"user":[[1,2]],"kappa":1}"#,
+        br#"{"user":[1],"kappa":0}"#,
+        br#"{"user":[1],"kappa":99999999}"#,
+        br#"{"kappa":5}"#,
+        br#"{"upsert":5}"#,
+        br#"{"remove":1,"kappa":2}"#,
+        br#"not json"#,
+        br#"{"user":[1],"kappa":2}trailing"#,
+    ];
+    let before = coord
+        .metrics()
+        .net_decode_errors
+        .load(Ordering::Relaxed);
+    for line in bad {
+        let resp = client.send_raw(line).unwrap();
+        assert!(
+            resp.starts_with(b"{\"error\":"),
+            "{} must draw an error response, got {}",
+            String::from_utf8_lossy(line),
+            String::from_utf8_lossy(&resp)
+        );
+        // the same connection still serves the next well-formed query
+        let ok = client.query(&good, 3).unwrap();
+        assert!(ok.results.len() <= 3);
+    }
+    let after = coord.metrics().net_decode_errors.load(Ordering::Relaxed);
+    assert_eq!(after - before, bad.len() as u64);
+    drop(client);
+    stop(coord, server);
+}
+
+#[test]
+fn requests_split_across_tcp_writes_reassemble() {
+    let (coord, server) = start(4, 100, 60);
+    let mut stream = std::net::TcpStream::connect(server.local_addr()).unwrap();
+    stream.set_nodelay(true).unwrap();
+    let mut wire = Vec::new();
+    proto::encode_query(&mut wire, &fix::user(4, 61), 3);
+    // drip the request a few bytes per segment; the decoder must buffer
+    // partial lines across reads
+    for chunk in wire.chunks(3) {
+        stream.write_all(chunk).unwrap();
+        stream.flush().unwrap();
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    let mut buf = Vec::new();
+    let mut chunk = [0u8; 256];
+    while !buf.contains(&b'\n') {
+        let n = stream.read(&mut chunk).unwrap();
+        assert!(n > 0, "server closed the connection mid-response");
+        buf.extend_from_slice(&chunk[..n]);
+    }
+    assert!(
+        buf.starts_with(b"{\"results\":"),
+        "unexpected response: {}",
+        String::from_utf8_lossy(&buf)
+    );
+    drop(stream);
+    stop(coord, server);
+}
+
+#[test]
+fn mutations_flow_through_the_socket() {
+    let k = 4;
+    let (coord, server) = start(k, 64, 70);
+    let mut client = NetClient::connect(server.local_addr()).unwrap();
+    let v0 = coord.submit(fix::user(k, 71), 3).unwrap().version;
+
+    // upsert advances the version and changes subsequent responses
+    let v1 = client.upsert(7, &vec![2.0; k]).unwrap();
+    assert!(v1 > v0);
+    // remove reports whether the id was live
+    let (v2, live) = client.remove(7).unwrap();
+    assert!(v2 > v1);
+    assert!(live);
+    let (_, live_again) = client.remove(7).unwrap();
+    assert!(!live_again, "second remove of the same id must report dead");
+
+    // wrong-dimension upsert: decodes fine, rejected by the coordinator —
+    // an error response plus one `net_malformed`, not a decode error
+    let malformed_before =
+        coord.metrics().net_malformed.load(Ordering::Relaxed);
+    let err = client.upsert(3, &vec![1.0; k + 1]).unwrap_err();
+    assert!(err.to_string().contains("server error"));
+    assert_eq!(
+        coord.metrics().net_malformed.load(Ordering::Relaxed),
+        malformed_before + 1
+    );
+    assert_eq!(
+        coord.metrics().net_decode_errors.load(Ordering::Relaxed),
+        0,
+        "a well-formed but invalid request is not a decode error"
+    );
+
+    // connection still lives
+    assert!(client.query(&fix::user(k, 72), 3).unwrap().results.len() <= 3);
+    drop(client);
+    stop(coord, server);
+}
+
+#[test]
+fn decoded_requests_serve_byte_identically_to_originals() {
+    let k = 6;
+    let (coord, server) = start(k, 200, 80);
+    let client = std::cell::RefCell::new(
+        NetClient::connect(server.local_addr()).unwrap(),
+    );
+    prop(48, |g| {
+        let user: Vec<f32> = (0..k).map(|_| g.gaussian()).collect();
+        let kappa = g.usize_in(1..=16);
+
+        // encode → streaming decode is bit-exact
+        let mut wire = Vec::new();
+        proto::encode_query(&mut wire, &user, kappa);
+        let mut dec = RequestDecoder::new();
+        dec.feed(&wire);
+        let decoded: Vec<f32> = match dec.next_request() {
+            Some(Ok(Request::Query { user: u, kappa: kq })) => {
+                assert_eq!(kq, kappa);
+                u.to_vec()
+            }
+            other => panic!("round-trip failed to decode: {other:?}"),
+        };
+        assert!(dec.next_request().is_none(), "one line, one request");
+        assert_eq!(
+            decoded.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            user.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            "factor bits changed across encode → decode"
+        );
+
+        // serving the decoded factor equals serving the original
+        let a = coord.submit(decoded, kappa).unwrap();
+        let b = coord.submit(user.clone(), kappa).unwrap();
+        assert_eq!(key(&a), key(&b));
+
+        // a subset goes through the real socket as well
+        if g.bool_with(0.25) {
+            let via_net = client.borrow_mut().query(&user, kappa).unwrap();
+            assert_eq!(
+                via_net
+                    .results
+                    .iter()
+                    .map(|s| (s.id, s.score.to_bits()))
+                    .collect::<Vec<_>>(),
+                b.results
+                    .iter()
+                    .map(|s| (s.id, s.score.to_bits()))
+                    .collect::<Vec<_>>()
+            );
+        }
+    });
+    drop(client);
+    stop(coord, server);
+}
+
+#[test]
+fn metrics_account_for_connections_and_bytes() {
+    let (coord, server) = start(4, 64, 90);
+    let m = coord.metrics();
+    let u = fix::user(4, 91);
+    {
+        let mut a = NetClient::connect(server.local_addr()).unwrap();
+        let mut b = NetClient::connect(server.local_addr()).unwrap();
+        a.query(&u, 2).unwrap();
+        b.query(&u, 2).unwrap();
+        assert_eq!(m.net_connections.load(Ordering::Relaxed), 2);
+        assert!(m.net_bytes_in.load(Ordering::Relaxed) > 0);
+        assert!(m.net_bytes_out.load(Ordering::Relaxed) > 0);
+    }
+    // client drop closes the sockets; the server threads notice and
+    // count the close shortly after
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while m.net_closed.load(Ordering::Relaxed) < 2 {
+        assert!(Instant::now() < deadline, "connection closes never counted");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert!(m.report().contains("net:"), "report must show the net line");
+    stop(coord, server);
+}
+
+#[test]
+fn shutdown_disconnects_idle_clients() {
+    let (coord, server) = start(4, 64, 95);
+    let mut client = NetClient::connect(server.local_addr()).unwrap();
+    let u = fix::user(4, 96);
+    client.query(&u, 2).unwrap();
+    // the client is idle (its server thread blocked in read); shutdown
+    // must half-close that socket, join the thread, and the next client
+    // round trip must fail rather than hang
+    server.shutdown();
+    assert!(client.query(&u, 2).is_err());
+    Arc::try_unwrap(coord).ok().map(Coordinator::shutdown);
+}
