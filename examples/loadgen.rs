@@ -61,6 +61,11 @@ fn main() -> anyhow::Result<()> {
              upsert:remove); 0 = reads only",
         )
         .opt("seed", "42", "rng seed (pool + traffic)")
+        .flag(
+            "stats",
+            "issue {\"stats\":true} after the run and fail on a malformed \
+             or under-populated snapshot (docs/OBSERVABILITY.md)",
+        )
         .parse_from(&args)?;
 
     let k = cli.get_usize("k")?;
@@ -127,7 +132,12 @@ fn main() -> anyhow::Result<()> {
     }
 
     let zipf = Zipf::new(pool, zipf_s);
-    let latency = Histogram::new();
+    // client-side latency, split per verb: mutations are acks (cheap),
+    // queries ride the full prune+rescore path — one histogram would
+    // blur the two populations
+    let lat_query = Histogram::new();
+    let lat_upsert = Histogram::new();
+    let lat_remove = Histogram::new();
     let queries = AtomicU64::new(0);
     let upserts = AtomicU64::new(0);
     let removes = AtomicU64::new(0);
@@ -138,7 +148,9 @@ fn main() -> anyhow::Result<()> {
     std::thread::scope(|scope| {
         for c in 0..conns {
             let zipf = &zipf;
-            let latency = &latency;
+            let lat_query = &lat_query;
+            let lat_upsert = &lat_upsert;
+            let lat_remove = &lat_remove;
             let queries = &queries;
             let upserts = &upserts;
             let removes = &removes;
@@ -158,14 +170,14 @@ fn main() -> anyhow::Result<()> {
                     let mutate =
                         mutate_every > 0 && i % mutate_every == mutate_every - 1;
                     let t = Instant::now();
-                    let outcome = if mutate {
+                    let (hist, outcome) = if mutate {
                         // mutations target existing catalogue ids so a
                         // replayed trace stays valid whatever the server
                         // has already absorbed
                         let id = rng.below(n_items) as u32;
                         if i % (4 * mutate_every) == 4 * mutate_every - 1 {
                             removes.fetch_add(1, Ordering::Relaxed);
-                            client.remove(id).map(|_| ())
+                            (lat_remove, client.remove(id).map(|_| ()))
                         } else {
                             user_factor(
                                 &mut user,
@@ -174,13 +186,13 @@ fn main() -> anyhow::Result<()> {
                                 k,
                             );
                             upserts.fetch_add(1, Ordering::Relaxed);
-                            client.upsert(id, &user).map(|_| ())
+                            (lat_upsert, client.upsert(id, &user).map(|_| ()))
                         }
                     } else {
                         let rank = zipf.sample(&mut rng);
                         user_factor(&mut user, seed, rank, k);
                         queries.fetch_add(1, Ordering::Relaxed);
-                        match client.query_raw(&user, kappa) {
+                        let outcome = match client.query_raw(&user, kappa) {
                             Ok(line) => {
                                 if line.starts_with(b"{\"error") {
                                     Err(geomap::error::GeomapError::Rejected(
@@ -191,9 +203,10 @@ fn main() -> anyhow::Result<()> {
                                 }
                             }
                             Err(e) => Err(e),
-                        }
+                        };
+                        (lat_query, outcome)
                     };
-                    latency.record(t.elapsed().as_micros() as u64);
+                    hist.record(t.elapsed().as_micros() as u64);
                     if let Err(e) = outcome {
                         if errors.fetch_add(1, Ordering::Relaxed) < 5 {
                             eprintln!("conn {c} request {i}: {e}");
@@ -206,7 +219,6 @@ fn main() -> anyhow::Result<()> {
     let elapsed = t0.elapsed().as_secs_f64();
 
     let total = (per_conn * conns) as f64;
-    let (p50, p95, p99) = latency.percentiles();
     println!(
         "\n{} requests ({} queries, {} upserts, {} removes) over {conns} \
          conns in {elapsed:.2}s → {:.0} req/s",
@@ -216,14 +228,44 @@ fn main() -> anyhow::Result<()> {
         removes.load(Ordering::Relaxed),
         total / elapsed,
     );
+    // merged view first, then the per-verb split
+    let mut overall = lat_query.snapshot();
+    overall.merge(&lat_upsert.snapshot());
+    overall.merge(&lat_remove.snapshot());
+    let (p50, p95, p99) = overall.percentiles();
     println!(
         "client latency: p50 {p50}us p95 {p95}us p99 {p99}us max {}us",
-        latency.max()
+        overall.max()
     );
+    for (verb, hist) in [
+        ("query", &lat_query),
+        ("upsert", &lat_upsert),
+        ("remove", &lat_remove),
+    ] {
+        if hist.count() == 0 {
+            continue;
+        }
+        let (p50, p95, p99) = hist.percentiles();
+        println!(
+            "  {verb:<7} n={:<7} p50 {p50}us p95 {p95}us p99 {p99}us \
+             max {}us",
+            hist.count(),
+            hist.max()
+        );
+    }
     let client_errors = errors.load(Ordering::Relaxed);
     println!("error responses: {client_errors}");
 
     let mut failed = client_errors > 0;
+    if cli.is_set("stats") {
+        match check_stats(addr, queries.load(Ordering::Relaxed)) {
+            Ok(()) => println!("stats snapshot validated ✓"),
+            Err(e) => {
+                eprintln!("FAIL: stats snapshot: {e}");
+                failed = true;
+            }
+        }
+    }
     if let Some(server) = server {
         server.shutdown(); // joins every connection thread
     }
@@ -255,6 +297,37 @@ fn main() -> anyhow::Result<()> {
     }
     if failed {
         std::process::exit(1);
+    }
+    Ok(())
+}
+
+/// Post-run `{"stats":true}` validation: every section of the documented
+/// grammar must be present (the client checks that) and the serving-stage
+/// histograms must have absorbed the traffic this process just drove.
+fn check_stats(addr: std::net::SocketAddr, queries: u64) -> anyhow::Result<()> {
+    let mut client = NetClient::connect(addr)?;
+    let j = client.stats()?;
+    let completed = j.get("requests")?.get("completed")?.as_usize()? as u64;
+    anyhow::ensure!(
+        completed >= queries,
+        "completed {completed} < the {queries} queries this run drove"
+    );
+    if queries > 0 {
+        for stage in
+            ["candgen_us", "rescore_us", "net_decode_us", "net_encode_us"]
+        {
+            let count =
+                j.get("stages")?.get(stage)?.get("count")?.as_usize()?;
+            anyhow::ensure!(count > 0, "stage histogram '{stage}' is empty");
+        }
+        anyhow::ensure!(
+            j.get("latency_us")?.get("count")?.as_usize()? > 0,
+            "latency_us histogram is empty"
+        );
+        for counter in ["posting_lists", "refines_f32"] {
+            let n = j.get("work")?.get(counter)?.as_usize()?;
+            anyhow::ensure!(n > 0, "work counter '{counter}' is zero");
+        }
     }
     Ok(())
 }

@@ -1,0 +1,238 @@
+//! Observability overhead: full tracing vs tracing off on the net-path
+//! workload (`docs/OBSERVABILITY.md`).
+//!
+//! The obs layer promises near-zero cost: stage histograms are lock-free
+//! records, the trace sampler is one relaxed add, and the slow log only
+//! takes a short lock on sampled entries. This bench holds it to that.
+//! Two identical self-hosted serving stacks run the same mixed
+//! read/mutate Zipf workload over loopback:
+//!
+//! * **pass A** — `--trace-sample 0` (slow log disabled),
+//! * **pass B** — `--trace-sample 1 --slow-us 0 --slow-log 64`: every
+//!   request traced, every trace offered to the slow log — the most
+//!   expensive configuration the layer has.
+//!
+//! Acceptance, judged at the default profile:
+//!
+//! * pass B sustains **≥ 0.95×** pass A's throughput, and
+//! * after pass B, `{"stats":true}` round-trips through the client
+//!   parser with every serving-stage histogram non-empty and every work
+//!   counter non-zero (the plumbing actually measured the burst).
+//!
+//! ```bash
+//! cargo bench --bench obs_overhead
+//! GEOMAP_BENCH_FAST=1 cargo bench --bench obs_overhead
+//! ```
+
+mod common;
+
+use geomap::configx::{
+    Backend, CacheMode, ObsConfig, SchemaConfig, ServeConfig,
+};
+use geomap::coordinator::Coordinator;
+use geomap::net::{NetClient, NetServer};
+use geomap::rng::{Rng, Zipf};
+use geomap::runtime::cpu_scorer_factory;
+use geomap::testing::fix;
+use std::sync::Arc;
+use std::time::Instant;
+
+struct Workload {
+    items: usize,
+    k: usize,
+    pool: usize,
+    requests: usize,
+    clients: usize,
+}
+
+fn workload() -> Workload {
+    if common::fast() {
+        Workload { items: 512, k: 16, pool: 128, requests: 2_048, clients: 4 }
+    } else {
+        Workload { items: 4096, k: 32, pool: 512, requests: 16_384, clients: 4 }
+    }
+}
+
+fn serve_cfg(w: &Workload, obs: ObsConfig) -> ServeConfig {
+    ServeConfig {
+        k: w.k,
+        kappa: 10,
+        schema: SchemaConfig::TernaryParseTree,
+        max_batch: 32,
+        max_wait_us: 200,
+        shards: 2,
+        queue_cap: 8192,
+        use_xla: false,
+        threshold: if w.k >= 32 { 1.5 } else { 1.3 },
+        backend: Backend::Geomap,
+        // the cache is on so pass B exercises the probe/fill spans too
+        cache: CacheMode::Lru { entries: 256 },
+        obs,
+        ..ServeConfig::default()
+    }
+}
+
+/// Drive the mixed workload over loopback: one connection per client
+/// thread, every 8th request a mutation (3:1 upsert:remove), queries
+/// Zipf-skewed so the result cache sees both hits and fills.
+fn drive(
+    addr: std::net::SocketAddr,
+    users: &geomap::linalg::Matrix,
+    w: &Workload,
+) -> f64 {
+    let zipf = Zipf::new(users.rows(), 1.05);
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for c in 0..w.clients {
+            let zipf = zipf.clone();
+            scope.spawn(move || {
+                let mut client =
+                    NetClient::connect(addr).expect("connect to front-end");
+                let mut rng = Rng::seeded(0x5EED + c as u64);
+                for i in 0..w.requests / w.clients {
+                    if i % 8 == 7 {
+                        let id = rng.below(w.items) as u32;
+                        if i % 32 == 31 {
+                            client.remove(id).expect("remove over the wire");
+                        } else {
+                            let f = vec![0.25; w.k];
+                            client
+                                .upsert(id, &f)
+                                .expect("upsert over the wire");
+                        }
+                        continue;
+                    }
+                    let u = users.row(zipf.sample(&mut rng));
+                    let line =
+                        client.query_raw(u, 10).expect("network request");
+                    assert!(
+                        !line.starts_with(b"{\"error"),
+                        "server error on well-formed query: {}",
+                        String::from_utf8_lossy(line)
+                    );
+                }
+            });
+        }
+    });
+    let served = (w.requests / w.clients * w.clients) as f64;
+    served / t0.elapsed().as_secs_f64()
+}
+
+/// One serving stack with the given obs config: start, drive, optionally
+/// validate the stats round trip, shut down; returns req/s.
+fn run_pass(
+    label: &str,
+    obs: ObsConfig,
+    w: &Workload,
+    items: &geomap::linalg::Matrix,
+    users: &geomap::linalg::Matrix,
+    validate_stats: bool,
+) -> f64 {
+    let coord = Arc::new(
+        Coordinator::start(serve_cfg(w, obs), items.clone(), cpu_scorer_factory())
+            .expect("coordinator"),
+    );
+    let server = NetServer::start(Arc::clone(&coord), "127.0.0.1:0")
+        .expect("net front-end");
+    let rps = drive(server.local_addr(), users, w);
+    println!("{label}: {rps:>10.0} req/s");
+    if validate_stats {
+        check_stats(server.local_addr());
+    }
+    server.shutdown();
+    Arc::try_unwrap(coord).ok().map(Coordinator::shutdown);
+    rps
+}
+
+/// The stats-verb acceptance: every serving-stage histogram non-empty,
+/// every work counter non-zero after the mixed burst.
+fn check_stats(addr: std::net::SocketAddr) {
+    let mut client = NetClient::connect(addr).expect("stats connection");
+    let j = client.stats().expect("stats round trip");
+    let stages = j.get("stages").expect("stages section");
+    for stage in [
+        "candgen_us",
+        "rescore_us",
+        "cache_probe_us",
+        "cache_fill_us",
+        "net_decode_us",
+        "net_encode_us",
+    ] {
+        let count = stages
+            .get(stage)
+            .and_then(|h| h.get("count"))
+            .and_then(|c| c.as_usize())
+            .expect("stage count field");
+        assert!(count > 0, "stage histogram '{stage}' is empty");
+    }
+    let queue_count = j
+        .get("queue_wait_us")
+        .and_then(|h| h.get("count"))
+        .and_then(|c| c.as_usize())
+        .expect("queue_wait_us count");
+    assert!(queue_count > 0, "queue_wait_us histogram is empty");
+    let work = j.get("work").expect("work section");
+    for counter in
+        ["posting_lists", "packed_blocks", "dots_i8", "refines_f32"]
+    {
+        let n = work
+            .get(counter)
+            .and_then(|v| v.as_usize())
+            .expect("work counter field");
+        // packed_blocks and dots_i8 only tick under packed/int8 configs
+        if matches!(counter, "posting_lists" | "refines_f32") {
+            assert!(n > 0, "work counter '{counter}' is zero");
+        }
+    }
+    let slow = j.get("slow").expect("slow section").as_arr().expect("array");
+    assert!(
+        !slow.is_empty(),
+        "slow-us 0 traces every sampled request: the slow log must fill"
+    );
+    println!("stats round trip: all stage histograms populated ✓");
+}
+
+fn main() {
+    let w = workload();
+    let items = fix::items(w.items, w.k, 42);
+    let users = fix::users(w.pool, w.k, 43);
+    println!(
+        "== obs overhead: {} items, k={}, pool {} users, Zipf(1.05), {} \
+         requests × {} clients, lru:256 cache, 1/8 mutations ==",
+        w.items, w.k, w.pool, w.requests, w.clients
+    );
+
+    let baseline = run_pass(
+        "tracing off  (sample 0.0)",
+        ObsConfig { sample: 0.0, ..ObsConfig::default() },
+        &w,
+        &items,
+        &users,
+        false,
+    );
+    let traced = run_pass(
+        "tracing full (sample 1.0, slow-us 0)",
+        ObsConfig { sample: 1.0, slow_us: 0, slow_log: 64 },
+        &w,
+        &items,
+        &users,
+        true,
+    );
+
+    let ratio = traced / baseline.max(1e-9);
+    println!("full tracing sustains {:.1}% of baseline", ratio * 100.0);
+    if common::fast() {
+        println!("\nfast profile: measurements reported, gate not judged");
+    } else if ratio < 0.95 {
+        eprintln!(
+            "OBS OVERHEAD TARGET MISSED: full tracing at {ratio:.3}x \
+             baseline, below the 0.95x bound"
+        );
+        std::process::exit(1);
+    } else {
+        println!(
+            "\nobs overhead target met: full tracing ≥ 0.95x the \
+             tracing-off baseline"
+        );
+    }
+}

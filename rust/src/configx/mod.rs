@@ -483,6 +483,29 @@ impl CheckpointConfig {
     }
 }
 
+/// Observability policy: request-trace sampling and the slow-query log
+/// (see `docs/OBSERVABILITY.md`). JSON form is a nested `"obs"` object
+/// (`{"obs": {"sample": 0.1, "slow_us": 5000, "slow_log": 64}}`); CLI
+/// flags are `--trace-sample`, `--slow-us`, `--slow-log`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ObsConfig {
+    /// Fraction of requests carrying a trace, in `[0, 1]`; `0` disables
+    /// tracing, `1` traces every request (the default — per-request
+    /// overhead is one atomic add unless the request also ranks as slow).
+    pub sample: f64,
+    /// Threshold (µs) a traced request must reach to enter the slow log.
+    pub slow_us: u64,
+    /// Slow-log capacity: the N slowest traces retained (`0` disables
+    /// the log while keeping stage histograms live).
+    pub slow_log: usize,
+}
+
+impl Default for ObsConfig {
+    fn default() -> Self {
+        ObsConfig { sample: 1.0, slow_us: 10_000, slow_log: 32 }
+    }
+}
+
 /// Coordinator serving configuration.
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
@@ -536,6 +559,10 @@ pub struct ServeConfig {
     /// request protocol over `submit`/`upsert`/`remove` — see
     /// `docs/NET.md`.
     pub net: NetMode,
+    /// Trace sampling + slow-query-log policy (JSON `"obs": {…}`, CLI
+    /// `--trace-sample`/`--slow-us`/`--slow-log`) — see
+    /// `docs/OBSERVABILITY.md`.
+    pub obs: ObsConfig,
 }
 
 /// Parse an `on`/`off` toggle (the `batch_prune` knob's CLI/JSON form).
@@ -570,6 +597,7 @@ impl Default for ServeConfig {
             checkpoint: None,
             cache: CacheMode::Off,
             net: NetMode::Off,
+            obs: ObsConfig::default(),
         }
     }
 }
@@ -615,6 +643,12 @@ impl ServeConfig {
             // re-validated here so hand-built configs (not just parsed
             // ones) hit the same ip:port check, naming the net key
             parse_listen_addr(addr)?;
+        }
+        if !(0.0..=1.0).contains(&self.obs.sample) {
+            return Err(GeomapError::Config(format!(
+                "obs.sample (--trace-sample) must be in [0, 1], got {}",
+                self.obs.sample
+            )));
         }
         if let Some(ck) = self.checkpoint.take() {
             self.checkpoint = Some(ck.validated()?);
@@ -675,6 +709,17 @@ impl ServeConfig {
         }
         if let Some(v) = j.opt("net") {
             c.net = NetMode::parse(v.as_str()?)?;
+        }
+        if let Some(o) = j.opt("obs") {
+            if let Some(v) = o.opt("sample") {
+                c.obs.sample = v.as_f64()?;
+            }
+            if let Some(v) = o.opt("slow_us") {
+                c.obs.slow_us = v.as_usize()? as u64;
+            }
+            if let Some(v) = o.opt("slow_log") {
+                c.obs.slow_log = v.as_usize()?;
+            }
         }
         if let Some(v) = j.opt("checkpoint_dir") {
             let mut ck = CheckpointConfig {
@@ -764,6 +809,34 @@ mod tests {
     #[test]
     fn from_json_rejects_bad_types() {
         let j = Json::parse(r#"{"k": "many"}"#).unwrap();
+        assert!(ServeConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn obs_defaults_and_json_block() {
+        let c = ServeConfig::default();
+        assert_eq!(c.obs, ObsConfig { sample: 1.0, slow_us: 10_000, slow_log: 32 });
+        let j = Json::parse(
+            r#"{"obs": {"sample": 0.25, "slow_us": 5000, "slow_log": 64}}"#,
+        )
+        .unwrap();
+        let c = ServeConfig::from_json(&j).unwrap();
+        assert_eq!(c.obs, ObsConfig { sample: 0.25, slow_us: 5_000, slow_log: 64 });
+        // partial block keeps the other defaults
+        let j = Json::parse(r#"{"obs": {"slow_log": 8}}"#).unwrap();
+        let c = ServeConfig::from_json(&j).unwrap();
+        assert_eq!(c.obs, ObsConfig { sample: 1.0, slow_us: 10_000, slow_log: 8 });
+    }
+
+    #[test]
+    fn obs_sample_outside_unit_interval_rejected() {
+        for sample in [-0.1, 1.5, f64::NAN] {
+            let mut c = ServeConfig::default();
+            c.obs.sample = sample;
+            let err = c.validated().unwrap_err().to_string();
+            assert!(err.contains("trace-sample"), "{err}");
+        }
+        let j = Json::parse(r#"{"obs": {"sample": 2}}"#).unwrap();
         assert!(ServeConfig::from_json(&j).is_err());
     }
 

@@ -1,6 +1,7 @@
-//! Serving metrics: counters + latency/batch/discard histograms.
+//! Serving metrics: counters + latency/batch/discard histograms, per-stage
+//! spans, physical-work counters, and immutable scrape snapshots.
 
-use crate::obs::Histogram;
+use crate::obs::{Histogram, HistogramSnapshot, WorkCounts};
 use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Shared coordinator metrics (all methods are `&self`; everything is
@@ -52,6 +53,26 @@ pub struct ServeMetrics {
     pub candidates: Histogram,
     /// Catalogue discard per request, in basis points (0..=10000).
     pub discard_bp: Histogram,
+    /// Candidate-generation (index prune) span per shard batch (µs).
+    pub stage_candgen_us: Histogram,
+    /// Rescore (exact/int8 scoring + select) span per shard batch (µs).
+    pub stage_rescore_us: Histogram,
+    /// Result-cache probe span per submitted request (µs).
+    pub stage_cache_probe_us: Histogram,
+    /// Result-cache fill span per dispatched batch (µs).
+    pub stage_cache_fill_us: Histogram,
+    /// Wire-decode span per decoded request line (µs).
+    pub stage_net_decode_us: Histogram,
+    /// Wire-encode span per response line (µs).
+    pub stage_net_encode_us: Histogram,
+    /// Posting lists streamed from the inverted index.
+    pub work_posting_lists: AtomicU64,
+    /// Bit-packed posting blocks decoded.
+    pub work_packed_blocks: AtomicU64,
+    /// int8 candidate dot products scored.
+    pub work_dots_i8: AtomicU64,
+    /// Exact f32 inner products computed.
+    pub work_refines_f32: AtomicU64,
 }
 
 impl ServeMetrics {
@@ -100,7 +121,9 @@ impl ServeMetrics {
     /// When the result cache has been probed, a `cache:` line reports
     /// hit/miss/stale/eviction counts and the hit rate; when the network
     /// front-end accepted at least one connection, a `net:` line reports
-    /// connection, byte, and rejection counters.
+    /// connection, byte, and rejection counters. A `stages:` block lists
+    /// one quantile line per pipeline stage that actually ran, and a
+    /// `work:` line totals the physical-work counters when any were fed.
     pub fn report(&self) -> String {
         let acc = self.accepted.load(Ordering::Relaxed);
         let rej = self.rejected.load(Ordering::Relaxed);
@@ -135,6 +158,38 @@ impl ServeMetrics {
         } else {
             String::new()
         };
+        let mut stage_lines = String::new();
+        for (name, h) in [
+            ("candgen", &self.stage_candgen_us),
+            ("rescore", &self.stage_rescore_us),
+            ("cache_probe", &self.stage_cache_probe_us),
+            ("cache_fill", &self.stage_cache_fill_us),
+            ("net_decode", &self.stage_net_decode_us),
+            ("net_encode", &self.stage_net_encode_us),
+        ] {
+            if h.count() > 0 {
+                stage_lines.push_str(&format!("\n  {name:<12} {}", h.summary()));
+            }
+        }
+        let stages = if stage_lines.is_empty() {
+            String::new()
+        } else {
+            format!("\nstages:{stage_lines}")
+        };
+        let (wp, wb, wd, wr) = (
+            self.work_posting_lists.load(Ordering::Relaxed),
+            self.work_packed_blocks.load(Ordering::Relaxed),
+            self.work_dots_i8.load(Ordering::Relaxed),
+            self.work_refines_f32.load(Ordering::Relaxed),
+        );
+        let work = if wp + wb + wd + wr > 0 {
+            format!(
+                "\nwork:     {wp} posting lists, {wb} packed blocks, \
+                 {wd} i8 dots, {wr} f32 refines"
+            )
+        } else {
+            String::new()
+        };
         format!(
             "requests: accepted {acc}, rejected {rej}, completed {done}\n\
              batches:  {batches} (size {})\n\
@@ -142,7 +197,7 @@ impl ServeMetrics {
              queueing: {}\n\
              pruning:  {} candidates\n\
              discard:  p50 {:.1}% p95 {:.1}% p99 {:.1}%; mean {:.1}% → \
-             {:.2}x speed-up{cache}{net}",
+             {:.2}x speed-up{stages}{work}{cache}{net}",
             self.batch_size.summary_with_unit(""),
             self.latency_us.summary(),
             self.queue_wait_us.summary(),
@@ -152,6 +207,195 @@ impl ServeMetrics {
             bp(d99),
             self.mean_discard() * 100.0,
             self.implied_speedup(),
+        )
+    }
+
+    /// Fold a worker's per-batch physical-work tally into the totals.
+    pub fn record_work(&self, w: &WorkCounts) {
+        self.work_posting_lists.fetch_add(w.posting_lists, Ordering::Relaxed);
+        self.work_packed_blocks.fetch_add(w.packed_blocks, Ordering::Relaxed);
+        self.work_dots_i8.fetch_add(w.dots_i8, Ordering::Relaxed);
+        self.work_refines_f32.fetch_add(w.refines_f32, Ordering::Relaxed);
+    }
+
+    /// Freeze every counter and histogram into an immutable
+    /// [`MetricsSnapshot`] — the unit of export for the `{"stats":true}`
+    /// wire verb and the `--stats-interval` reporter.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            accepted: self.accepted.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            cache_hits: self.cache_hits.load(Ordering::Relaxed),
+            cache_misses: self.cache_misses.load(Ordering::Relaxed),
+            cache_stale: self.cache_stale.load(Ordering::Relaxed),
+            cache_evictions: self.cache_evictions.load(Ordering::Relaxed),
+            net_connections: self.net_connections.load(Ordering::Relaxed),
+            net_closed: self.net_closed.load(Ordering::Relaxed),
+            net_bytes_in: self.net_bytes_in.load(Ordering::Relaxed),
+            net_bytes_out: self.net_bytes_out.load(Ordering::Relaxed),
+            net_decode_errors: self.net_decode_errors.load(Ordering::Relaxed),
+            net_malformed: self.net_malformed.load(Ordering::Relaxed),
+            work_posting_lists: self.work_posting_lists.load(Ordering::Relaxed),
+            work_packed_blocks: self.work_packed_blocks.load(Ordering::Relaxed),
+            work_dots_i8: self.work_dots_i8.load(Ordering::Relaxed),
+            work_refines_f32: self.work_refines_f32.load(Ordering::Relaxed),
+            latency_us: self.latency_us.snapshot(),
+            queue_wait_us: self.queue_wait_us.snapshot(),
+            batch_size: self.batch_size.snapshot(),
+            candidates: self.candidates.snapshot(),
+            discard_bp: self.discard_bp.snapshot(),
+            stage_candgen_us: self.stage_candgen_us.snapshot(),
+            stage_rescore_us: self.stage_rescore_us.snapshot(),
+            stage_cache_probe_us: self.stage_cache_probe_us.snapshot(),
+            stage_cache_fill_us: self.stage_cache_fill_us.snapshot(),
+            stage_net_decode_us: self.stage_net_decode_us.snapshot(),
+            stage_net_encode_us: self.stage_net_encode_us.snapshot(),
+        }
+    }
+}
+
+/// Immutable point-in-time copy of [`ServeMetrics`]: every counter value
+/// plus a [`HistogramSnapshot`] per histogram. Cumulative snapshots
+/// subtract pairwise ([`delta`](MetricsSnapshot::delta)) into interval
+/// snapshots, which is what the `--stats-interval` reporter prints.
+#[derive(Clone, Debug, Default)]
+pub struct MetricsSnapshot {
+    /// Requests accepted into the queue.
+    pub accepted: u64,
+    /// Requests shed by admission control.
+    pub rejected: u64,
+    /// Responses delivered.
+    pub completed: u64,
+    /// Batches dispatched.
+    pub batches: u64,
+    /// Result-cache hits.
+    pub cache_hits: u64,
+    /// Result-cache misses.
+    pub cache_misses: u64,
+    /// Result-cache stale probes.
+    pub cache_stale: u64,
+    /// Result-cache evictions.
+    pub cache_evictions: u64,
+    /// TCP connections accepted.
+    pub net_connections: u64,
+    /// TCP connections closed.
+    pub net_closed: u64,
+    /// Request bytes read off sockets.
+    pub net_bytes_in: u64,
+    /// Response bytes written to sockets.
+    pub net_bytes_out: u64,
+    /// Wire lines the decoder rejected.
+    pub net_decode_errors: u64,
+    /// Decoded requests the coordinator rejected semantically.
+    pub net_malformed: u64,
+    /// Posting lists streamed.
+    pub work_posting_lists: u64,
+    /// Packed posting blocks decoded.
+    pub work_packed_blocks: u64,
+    /// int8 dots scored.
+    pub work_dots_i8: u64,
+    /// Exact f32 inner products computed.
+    pub work_refines_f32: u64,
+    /// End-to-end latency (µs).
+    pub latency_us: HistogramSnapshot,
+    /// Admission-queue wait (µs).
+    pub queue_wait_us: HistogramSnapshot,
+    /// Requests per dispatched batch.
+    pub batch_size: HistogramSnapshot,
+    /// Candidates surviving the prune per request.
+    pub candidates: HistogramSnapshot,
+    /// Catalogue discard per request (basis points).
+    pub discard_bp: HistogramSnapshot,
+    /// Candidate-generation span per shard batch (µs).
+    pub stage_candgen_us: HistogramSnapshot,
+    /// Rescore span per shard batch (µs).
+    pub stage_rescore_us: HistogramSnapshot,
+    /// Cache-probe span per request (µs).
+    pub stage_cache_probe_us: HistogramSnapshot,
+    /// Cache-fill span per batch (µs).
+    pub stage_cache_fill_us: HistogramSnapshot,
+    /// Wire-decode span per request line (µs).
+    pub stage_net_decode_us: HistogramSnapshot,
+    /// Wire-encode span per response line (µs).
+    pub stage_net_encode_us: HistogramSnapshot,
+}
+
+impl MetricsSnapshot {
+    /// Interval delta `self − earlier` (saturating everywhere, so a
+    /// counter reset yields zeros instead of wrapping). Histogram deltas
+    /// follow [`HistogramSnapshot::saturating_sub`] — in particular the
+    /// interval `max` is the cumulative upper bound, not the true
+    /// interval max.
+    pub fn delta(&self, earlier: &MetricsSnapshot) -> MetricsSnapshot {
+        MetricsSnapshot {
+            accepted: self.accepted.saturating_sub(earlier.accepted),
+            rejected: self.rejected.saturating_sub(earlier.rejected),
+            completed: self.completed.saturating_sub(earlier.completed),
+            batches: self.batches.saturating_sub(earlier.batches),
+            cache_hits: self.cache_hits.saturating_sub(earlier.cache_hits),
+            cache_misses: self.cache_misses.saturating_sub(earlier.cache_misses),
+            cache_stale: self.cache_stale.saturating_sub(earlier.cache_stale),
+            cache_evictions: self.cache_evictions.saturating_sub(earlier.cache_evictions),
+            net_connections: self.net_connections.saturating_sub(earlier.net_connections),
+            net_closed: self.net_closed.saturating_sub(earlier.net_closed),
+            net_bytes_in: self.net_bytes_in.saturating_sub(earlier.net_bytes_in),
+            net_bytes_out: self.net_bytes_out.saturating_sub(earlier.net_bytes_out),
+            net_decode_errors: self.net_decode_errors.saturating_sub(earlier.net_decode_errors),
+            net_malformed: self.net_malformed.saturating_sub(earlier.net_malformed),
+            work_posting_lists: self.work_posting_lists.saturating_sub(earlier.work_posting_lists),
+            work_packed_blocks: self.work_packed_blocks.saturating_sub(earlier.work_packed_blocks),
+            work_dots_i8: self.work_dots_i8.saturating_sub(earlier.work_dots_i8),
+            work_refines_f32: self.work_refines_f32.saturating_sub(earlier.work_refines_f32),
+            latency_us: self.latency_us.saturating_sub(&earlier.latency_us),
+            queue_wait_us: self.queue_wait_us.saturating_sub(&earlier.queue_wait_us),
+            batch_size: self.batch_size.saturating_sub(&earlier.batch_size),
+            candidates: self.candidates.saturating_sub(&earlier.candidates),
+            discard_bp: self.discard_bp.saturating_sub(&earlier.discard_bp),
+            stage_candgen_us: self.stage_candgen_us.saturating_sub(&earlier.stage_candgen_us),
+            stage_rescore_us: self.stage_rescore_us.saturating_sub(&earlier.stage_rescore_us),
+            stage_cache_probe_us: self
+                .stage_cache_probe_us
+                .saturating_sub(&earlier.stage_cache_probe_us),
+            stage_cache_fill_us: self
+                .stage_cache_fill_us
+                .saturating_sub(&earlier.stage_cache_fill_us),
+            stage_net_decode_us: self
+                .stage_net_decode_us
+                .saturating_sub(&earlier.stage_net_decode_us),
+            stage_net_encode_us: self
+                .stage_net_encode_us
+                .saturating_sub(&earlier.stage_net_encode_us),
+        }
+    }
+
+    /// Cache probes in this snapshot (hits + misses + stale).
+    pub fn cache_lookups(&self) -> u64 {
+        self.cache_hits + self.cache_misses + self.cache_stale
+    }
+
+    /// One-line interval-rate rendering for the `--stats-interval`
+    /// reporter: call on a [`delta`](MetricsSnapshot::delta) with the
+    /// interval length in seconds.
+    pub fn rate_report(&self, secs: f64) -> String {
+        let secs = if secs > 0.0 { secs } else { 1.0 };
+        let (p50, p95, p99) = self.latency_us.percentiles();
+        let cache = if self.cache_lookups() > 0 {
+            format!(
+                ", cache hit {:.1}%",
+                self.cache_hits as f64 / self.cache_lookups() as f64 * 100.0
+            )
+        } else {
+            String::new()
+        };
+        format!(
+            "{:.0} req/s ({} completed, {} rejected in {:.1}s), \
+             latency p50 {p50}us p95 {p95}us p99 {p99}us{cache}",
+            self.completed as f64 / secs,
+            self.completed,
+            self.rejected,
+            secs,
         )
     }
 }
@@ -299,5 +543,99 @@ mod tests {
         let (d50, d95, d99) = m.discard_bp.percentiles();
         assert!(d50 <= d95 && d95 <= d99, "quantiles must be monotone");
         assert!(d50 > 8_000, "p50 sits in the 90% mass, got {d50}");
+    }
+
+    #[test]
+    fn report_includes_stage_block_only_when_stages_ran() {
+        let m = ServeMetrics::new();
+        m.latency_us.record(50);
+        let r = m.report();
+        assert!(!r.contains("stages:"), "no stage spans → no block: {r}");
+        assert!(!r.contains("work:"), "no work fed → no work line: {r}");
+        // Only the stages that ran get a line.
+        m.stage_candgen_us.record(120);
+        m.stage_rescore_us.record(340);
+        let r = m.report();
+        assert!(r.contains("stages:"), "{r}");
+        assert!(r.contains("candgen"), "{r}");
+        assert!(r.contains("rescore"), "{r}");
+        assert!(!r.contains("cache_probe"), "cache never probed: {r}");
+        assert!(!r.contains("net_decode"), "net never ran: {r}");
+    }
+
+    #[test]
+    fn report_includes_work_line_only_when_counters_fed() {
+        let m = ServeMetrics::new();
+        assert!(!m.report().contains("work:"));
+        m.record_work(&WorkCounts {
+            posting_lists: 7,
+            packed_blocks: 3,
+            dots_i8: 512,
+            refines_f32: 40,
+        });
+        m.record_work(&WorkCounts { posting_lists: 1, ..WorkCounts::default() });
+        let r = m.report();
+        assert!(r.contains("work:"), "{r}");
+        assert!(r.contains("8 posting lists"), "{r}");
+        assert!(r.contains("3 packed blocks"), "{r}");
+        assert!(r.contains("512 i8 dots"), "{r}");
+        assert!(r.contains("40 f32 refines"), "{r}");
+    }
+
+    #[test]
+    fn snapshot_delta_is_end_minus_start_under_concurrency() {
+        let m = std::sync::Arc::new(ServeMetrics::new());
+        // Pre-existing traffic the delta must subtract away.
+        m.completed.fetch_add(100, Ordering::Relaxed);
+        m.latency_us.record(1_000);
+        m.stage_candgen_us.record(10);
+        let start = m.snapshot();
+        const THREADS: u64 = 4;
+        const PER: u64 = 250;
+        std::thread::scope(|s| {
+            for _ in 0..THREADS {
+                let m = std::sync::Arc::clone(&m);
+                s.spawn(move || {
+                    for i in 0..PER {
+                        m.accepted.fetch_add(1, Ordering::Relaxed);
+                        m.completed.fetch_add(1, Ordering::Relaxed);
+                        m.latency_us.record(50 + i);
+                        m.stage_candgen_us.record(5);
+                        m.record_work(&WorkCounts {
+                            dots_i8: 10,
+                            ..WorkCounts::default()
+                        });
+                    }
+                });
+            }
+        });
+        let d = m.snapshot().delta(&start);
+        assert_eq!(d.accepted, THREADS * PER);
+        assert_eq!(d.completed, THREADS * PER, "pre-existing 100 subtracted");
+        assert_eq!(d.latency_us.count(), THREADS * PER);
+        assert_eq!(d.stage_candgen_us.count(), THREADS * PER);
+        assert_eq!(d.work_dots_i8, THREADS * PER * 10);
+        // Interval quantiles come from the delta buckets, not cumulative.
+        let (p50, _, _) = d.latency_us.percentiles();
+        assert!(p50 < 1_000, "the 1000us pre-sample must not dominate: {p50}");
+    }
+
+    #[test]
+    fn rate_report_computes_interval_rates() {
+        let m = ServeMetrics::new();
+        let start = m.snapshot();
+        m.completed.fetch_add(500, Ordering::Relaxed);
+        for _ in 0..10 {
+            m.latency_us.record(200);
+        }
+        let d = m.snapshot().delta(&start);
+        let line = d.rate_report(2.0);
+        assert!(line.contains("250 req/s"), "{line}");
+        assert!(line.contains("500 completed"), "{line}");
+        assert!(!line.contains("cache hit"), "cache off → no cache rate: {line}");
+        m.cache_hits.fetch_add(3, Ordering::Relaxed);
+        m.cache_misses.fetch_add(1, Ordering::Relaxed);
+        let line = m.snapshot().delta(&start).rate_report(2.0);
+        assert!(line.contains("cache hit 75.0%"), "{line}");
     }
 }

@@ -26,7 +26,7 @@ pub mod state;
 pub mod worker;
 
 pub use admission::{BoundedQueue, PushError};
-pub use metrics::ServeMetrics;
+pub use metrics::{MetricsSnapshot, ServeMetrics};
 pub use router::merge_topk;
 pub use server::{Coordinator, Response};
 pub use state::{FactorStore, Shard, ShardSet};

@@ -27,12 +27,22 @@ use crate::configx::{CacheMode, ServeConfig};
 use crate::engine::{explicit, Engine};
 use crate::error::{GeomapError, Result};
 use crate::linalg::Matrix;
+use crate::obs::{Logger, Sampler, SlowEntry, SlowLog, StageTimer, WorkCounts};
 use crate::retrieval::Scored;
 use crate::runtime::ScorerFactory;
 use crate::snapshot::Checkpointer;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
+
+static LOG: Logger = Logger::new("coordinator");
+
+/// Shared tracing state: the submit-side sampler and the slow-query log
+/// the dispatcher feeds (`ServeConfig::obs`, see `docs/OBSERVABILITY.md`).
+struct ObsState {
+    sampler: Sampler,
+    slow: SlowLog,
+}
 
 /// A retrieval response.
 #[derive(Clone, Debug)]
@@ -64,6 +74,10 @@ struct Pending {
     /// the dispatcher can insert the computed response without hashing
     /// again (`None` when the cache is off).
     fingerprint: Option<u128>,
+    /// Trace under construction when this request was sampled: submit
+    /// prefills the cache-probe span and κ, the dispatcher fills the
+    /// remaining stages and offers it to the slow log.
+    trace: Option<SlowEntry>,
 }
 
 struct Job {
@@ -90,6 +104,8 @@ pub struct Coordinator {
     cache: Option<Arc<ResultCache>>,
     /// Engine-spec digest folded into every query fingerprint.
     spec_digest: u64,
+    /// Request sampler + slow-query log (`ServeConfig::obs`).
+    obs: Arc<ObsState>,
 }
 
 impl Coordinator {
@@ -233,17 +249,23 @@ impl Coordinator {
             }
         };
 
+        let obs = Arc::new(ObsState {
+            sampler: Sampler::new(cfg.obs.sample),
+            slow: SlowLog::new(cfg.obs.slow_log, cfg.obs.slow_us),
+        });
+
         // dispatcher
         let dispatcher = {
             let queue = Arc::clone(&queue);
             let store = Arc::clone(&store);
             let metrics = Arc::clone(&metrics);
             let cache = cache.clone();
+            let obs = Arc::clone(&obs);
             let cfg2 = cfg.clone();
             std::thread::Builder::new()
                 .name("geomap-dispatcher".into())
                 .spawn(move || {
-                    dispatcher_loop(cfg2, queue, store, metrics, job_txs, cache)
+                    dispatcher_loop(cfg2, queue, store, metrics, job_txs, cache, obs)
                 })
                 .expect("spawn dispatcher")
         };
@@ -282,6 +304,7 @@ impl Coordinator {
             checkpointer,
             cache,
             spec_digest,
+            obs,
         })
     }
 
@@ -305,10 +328,15 @@ impl Coordinator {
         }
         let start = Instant::now();
         let mut fp = None;
+        let mut cache_probe_us = 0u64;
         if let Some(cache) = &self.cache {
+            let t_probe = StageTimer::start();
             let f = fingerprint(&user, kappa, self.spec_digest);
             let snap = self.store.snapshot();
-            match cache.lookup(f, &snap.epochs) {
+            let looked_up = cache.lookup(f, &snap.epochs);
+            cache_probe_us = t_probe.elapsed_us();
+            self.metrics.stage_cache_probe_us.record(cache_probe_us);
+            match looked_up {
                 Lookup::Hit(hit) => {
                     let m = &self.metrics;
                     m.accepted.fetch_add(1, Ordering::Relaxed);
@@ -340,6 +368,13 @@ impl Coordinator {
             }
             fp = Some(f);
         }
+        // Trace only requests that take the full batch path — a cache
+        // hit above did no stage work worth a slow-log entry.
+        let trace = if self.obs.sampler.hit() {
+            Some(SlowEntry { kappa, cache_probe_us, ..SlowEntry::default() })
+        } else {
+            None
+        };
         let (tx, rx) = mpsc::sync_channel(1);
         let pending = Pending {
             user,
@@ -348,6 +383,7 @@ impl Coordinator {
             submitted: start,
             enqueued: Instant::now(),
             fingerprint: fp,
+            trace,
         };
         match self.queue.push(pending) {
             Ok(()) => {
@@ -403,6 +439,12 @@ impl Coordinator {
         &self.metrics
     }
 
+    /// Current slow-query log, slowest first (empty when tracing is off
+    /// or nothing has crossed `ServeConfig::obs.slow_us` yet).
+    pub fn slow_entries(&self) -> Vec<SlowEntry> {
+        self.obs.slow.dump()
+    }
+
     /// The active configuration.
     pub fn config(&self) -> &ServeConfig {
         &self.cfg
@@ -439,6 +481,13 @@ impl Coordinator {
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
+        // surface the slowest traced requests once, at teardown — the
+        // same entries remain scrapeable live via the stats verb
+        if !self.obs.slow.is_empty() {
+            for e in self.obs.slow.dump() {
+                LOG.info(e.line());
+            }
+        }
     }
 
     /// Drain and stop all threads (final checkpoint included when
@@ -460,6 +509,9 @@ fn worker_loop(
     batch_prune: bool,
 ) {
     let scorer = factory();
+    if let Err(e) = &scorer {
+        LOG.error(format!("scorer construction failed: {e}"));
+    }
     let mut scratch: Option<WorkerScratch> = None;
     while let Ok(job) = rx.recv() {
         let result = match &scorer {
@@ -485,6 +537,7 @@ fn worker_loop(
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn dispatcher_loop(
     cfg: ServeConfig,
     queue: Arc<BoundedQueue<Pending>>,
@@ -492,6 +545,7 @@ fn dispatcher_loop(
     metrics: Arc<ServeMetrics>,
     job_txs: Vec<mpsc::Sender<Job>>,
     cache: Option<Arc<ResultCache>>,
+    obs: Arc<ObsState>,
 ) {
     let max_wait = Duration::from_micros(cfg.max_wait_us);
     let (partial_tx, partial_rx) =
@@ -502,10 +556,13 @@ fn dispatcher_loop(
             continue;
         }
         batch_id += 1;
-        for p in &batch {
-            metrics
-                .queue_wait_us
-                .record(p.enqueued.elapsed().as_micros() as u64);
+        // measured once, reused below for traced requests
+        let queue_waits: Vec<u64> = batch
+            .iter()
+            .map(|p| p.enqueued.elapsed().as_micros() as u64)
+            .collect();
+        for &w in &queue_waits {
+            metrics.queue_wait_us.record(w);
         }
         metrics.batches.fetch_add(1, Ordering::Relaxed);
         metrics.batch_size.record(batch.len() as u64);
@@ -558,6 +615,25 @@ fn dispatcher_loop(
                 }
             }
         }
+        if let Some(e) = &failure {
+            LOG.warn(format!("batch {batch_id} failed: {e}"));
+        }
+
+        // per-shard stage spans + work tallies → serving metrics, and
+        // batch-level sums for traced requests (a batched system cannot
+        // attribute shared prune/rescore work to one request, so traces
+        // carry the cost of the batch they rode in)
+        let mut candgen_sum = 0u64;
+        let mut rescore_sum = 0u64;
+        let mut batch_work = WorkCounts::default();
+        for sp in partials.iter().flatten() {
+            metrics.stage_candgen_us.record(sp.candgen_us);
+            metrics.stage_rescore_us.record(sp.rescore_us);
+            metrics.record_work(&sp.work);
+            candgen_sum += sp.candgen_us;
+            rescore_sum += sp.rescore_us;
+            batch_work.add(&sp.work);
+        }
 
         // merge + reply per request
         for (r, p) in batch.into_iter().enumerate() {
@@ -593,6 +669,7 @@ fn dispatcher_loop(
             // that served this batch: if a mutation landed mid-batch,
             // the entry is simply born stale and never served
             if let (Some(cache), Some(f)) = (cache.as_ref(), p.fingerprint) {
+                let t_fill = StageTimer::start();
                 let evicted = cache.insert(
                     f,
                     &snapshot.epochs,
@@ -603,11 +680,21 @@ fn dispatcher_loop(
                         version: snapshot.version,
                     },
                 );
+                metrics.stage_cache_fill_us.record(t_fill.elapsed_us());
                 if evicted > 0 {
                     metrics
                         .cache_evictions
                         .fetch_add(evicted as u64, Ordering::Relaxed);
                 }
+            }
+            if let Some(mut t) = p.trace {
+                t.total_us = latency_us;
+                t.queue_us = queue_waits[r];
+                t.candgen_us = candgen_sum;
+                t.rescore_us = rescore_sum;
+                t.candidates = candidates;
+                t.work = batch_work;
+                obs.slow.offer(t);
             }
             let _ = p.reply.send(Ok(Response {
                 results,
@@ -982,6 +1069,65 @@ mod tests {
             after.results.iter().map(|s| (s.id, s.score.to_bits())).collect::<Vec<_>>(),
         );
         assert_eq!(m.cache_hits.load(Ordering::Relaxed), 2);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn tracing_feeds_stage_metrics_and_slow_log() {
+        let k = 8;
+        let mut cfg = test_cfg(k, 2);
+        cfg.cache = CacheMode::Lru { entries: 32 };
+        // sample everything, rank everything: every request must land
+        cfg.obs = crate::configx::ObsConfig { sample: 1.0, slow_us: 0, slow_log: 8 };
+        let coord = Coordinator::start(
+            cfg,
+            items(200, k, 70),
+            cpu_scorer_factory(),
+        )
+        .unwrap();
+        let mut rng = Rng::seeded(71);
+        for _ in 0..12 {
+            let user: Vec<f32> = (0..k).map(|_| rng.gaussian_f32()).collect();
+            coord.submit(user, 5).unwrap();
+        }
+        let m = coord.metrics();
+        assert!(m.stage_candgen_us.count() > 0, "candgen spans recorded");
+        assert!(m.stage_rescore_us.count() > 0, "rescore spans recorded");
+        assert!(m.stage_cache_probe_us.count() > 0, "probe spans recorded");
+        assert!(m.stage_cache_fill_us.count() > 0, "fill spans recorded");
+        assert!(m.work_posting_lists.load(Ordering::Relaxed) > 0);
+        assert!(m.work_refines_f32.load(Ordering::Relaxed) > 0);
+        let slow = coord.slow_entries();
+        assert!(!slow.is_empty(), "threshold 0 ranks every trace");
+        assert!(slow.len() <= 8, "ring bounded by slow_log cap");
+        for w in slow.windows(2) {
+            assert!(w[0].total_us >= w[1].total_us, "slowest first");
+        }
+        for e in &slow {
+            assert_eq!(e.kappa, 5);
+            assert!(e.total_us >= e.queue_us, "queue wait is part of total");
+        }
+        coord.shutdown();
+    }
+
+    #[test]
+    fn sampling_off_keeps_slow_log_empty() {
+        let k = 8;
+        let mut cfg = test_cfg(k, 1);
+        cfg.obs = crate::configx::ObsConfig { sample: 0.0, slow_us: 0, slow_log: 8 };
+        let coord = Coordinator::start(
+            cfg,
+            items(100, k, 72),
+            cpu_scorer_factory(),
+        )
+        .unwrap();
+        let user = crate::testing::fix::user(k, 73);
+        coord.submit(user, 5).unwrap();
+        assert!(coord.slow_entries().is_empty(), "sample 0 → no traces");
+        // stage histograms are fed per shard batch regardless of
+        // sampling — they are the aggregate view, tracing is the
+        // per-request one
+        assert!(coord.metrics().stage_candgen_us.count() > 0);
         coord.shutdown();
     }
 

@@ -24,6 +24,7 @@ use super::state::Shard;
 use crate::engine::{BatchCandidates, SourceScratch};
 use crate::error::Result;
 use crate::linalg::Matrix;
+use crate::obs::{work, StageTimer, WorkCounts};
 use crate::retrieval::{Scored, TopK};
 use crate::runtime::Scorer;
 
@@ -33,6 +34,12 @@ pub struct ShardPartial {
     pub per_request: Vec<Vec<Scored>>,
     /// Per request: number of candidates that survived pruning.
     pub candidates: Vec<usize>,
+    /// Candidate-generation (batch prune) span for this shard (µs).
+    pub candgen_us: u64,
+    /// Rescore (scoring + select) span for this shard (µs).
+    pub rescore_us: u64,
+    /// Physical work this batch did on this shard's worker thread.
+    pub work: WorkCounts,
 }
 
 /// Reusable per-worker buffers. The engine-specific query scratch is
@@ -79,7 +86,11 @@ pub fn process_batch(
     if scratch.pos_of.len() < n_local {
         scratch.pos_of.resize(n_local, u32::MAX);
     }
+    // The engine/index hooks tally into a thread-local; zeroing here and
+    // draining at each return attributes the work to exactly this batch.
+    work::reset();
     // 1. prune the whole batch in one engine call
+    let t_candgen = StageTimer::start();
     if batch_prune {
         shard
             .engine
@@ -93,6 +104,8 @@ pub fn process_batch(
     scratch.union.extend_from_slice(scratch.cand.all_ids());
     let candidates: Vec<usize> =
         (0..b).map(|r| scratch.cand.query(r).len()).collect();
+    let candgen_us = t_candgen.elapsed_us();
+    let t_rescore = StageTimer::start();
 
     // CPU-style backends: per-request rescoring over each request's own
     // candidates through the engine's rescore tier — exact f32 dots, or
@@ -115,7 +128,13 @@ pub fn process_batch(
             }
             per_request.push(top);
         }
-        return Ok(ShardPartial { per_request, candidates });
+        return Ok(ShardPartial {
+            per_request,
+            candidates,
+            candgen_us,
+            rescore_us: t_rescore.elapsed_us(),
+            work: work::take(),
+        });
     }
 
     // 2. candidate union
@@ -126,6 +145,9 @@ pub fn process_batch(
         return Ok(ShardPartial {
             per_request: vec![Vec::new(); b],
             candidates,
+            candgen_us,
+            rescore_us: t_rescore.elapsed_us(),
+            work: work::take(),
         });
     }
 
@@ -146,6 +168,9 @@ pub fn process_batch(
         let tile = shard.engine.gather(union);
         scorer.score(users, &tile)?
     };
+    // The GEMM computes every (request, tile-column) inner product.
+    let tile_cols = if full_tile { n_local } else { union.len() };
+    work::count_refines_f32((b * tile_cols) as u64);
 
     // 4. per-request top-κ over own candidates, mapped to global ids
     let mut per_request = Vec::with_capacity(b);
@@ -169,7 +194,13 @@ pub fn process_batch(
             scratch.pos_of[id as usize] = u32::MAX;
         }
     }
-    Ok(ShardPartial { per_request, candidates })
+    Ok(ShardPartial {
+        per_request,
+        candidates,
+        candgen_us,
+        rescore_us: t_rescore.elapsed_us(),
+        work: work::take(),
+    })
 }
 
 #[cfg(test)]
@@ -325,6 +356,30 @@ mod tests {
                 assert_eq!(x.score.to_bits(), y.score.to_bits());
             }
         }
+    }
+
+    #[test]
+    fn partial_carries_stage_spans_and_work_tally() {
+        let store = shard_fixture(300, 8, 21);
+        let snap = store.snapshot();
+        let shard = &snap.shards[0];
+        let users = fix::users(6, 8, 22);
+        let mut scratch = WorkerScratch::new(shard.items());
+        let partial =
+            process_batch(shard, &users, 5, &CpuScorer, &mut scratch, true)
+                .unwrap();
+        // The geomap backend streams posting lists during the prune and
+        // the CPU rescore path computes exact f32 dots — both tallies
+        // must arrive attributed to this batch.
+        assert!(partial.work.posting_lists > 0, "{:?}", partial.work);
+        assert!(partial.work.refines_f32 > 0, "{:?}", partial.work);
+        // Work left on the thread-local after take() would leak into the
+        // next batch's attribution.
+        assert_eq!(crate::obs::work::take(), crate::obs::WorkCounts::default());
+        // Spans are measured (µs granularity may legitimately round a
+        // fast stage to 0, so only sanity-bound them).
+        assert!(partial.candgen_us < 60_000_000);
+        assert!(partial.rescore_us < 60_000_000);
     }
 
     #[test]

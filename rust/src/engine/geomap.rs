@@ -416,6 +416,7 @@ impl CandidateSource for GeomapEngine {
             let min = self.min_overlap.min(u16::MAX as usize) as u16;
             for &dim in phi.indices() {
                 if let Some(drs) = self.delta.postings.get(&dim) {
+                    crate::obs::work::count_posting_list();
                     for &dr in drs {
                         let c = &mut s.delta_counts[dr as usize];
                         if *c == 0 {
@@ -501,6 +502,7 @@ impl CandidateSource for GeomapEngine {
                     delta_touched.clear();
                     for &dim in phi.indices() {
                         if let Some(drs) = self.delta.postings.get(&dim) {
+                            crate::obs::work::count_posting_list();
                             for &dr in drs {
                                 let c = &mut delta_counts[dr as usize];
                                 if *c == 0 {

@@ -895,6 +895,7 @@ impl Engine {
                 for &id in cand {
                     approx.push(id, q.score(id, qbuf, qscale));
                 }
+                crate::obs::work::count_dots_i8(cand.len() as u64);
                 // unsorted: the exact re-rank below imposes its own order
                 Some(approx.into_unsorted())
             }
@@ -907,12 +908,14 @@ impl Engine {
                     let f = self.factor(s.id).expect("candidate ids are live");
                     heap.push(s.id, dot(user, f));
                 }
+                crate::obs::work::count_refines_f32(survivors.len() as u64);
             }
             None => {
                 for &id in cand {
                     let f = self.factor(id).expect("candidate ids are live");
                     heap.push(id, dot(user, f));
                 }
+                crate::obs::work::count_refines_f32(cand.len() as u64);
             }
         }
         heap.into_sorted()

@@ -274,6 +274,7 @@ impl InvertedIndex {
         block: &mut Vec<u32>,
         mut visit: impl FnMut(&[u32]),
     ) {
+        crate::obs::work::count_posting_list();
         match &self.arena {
             Arena::Raw { offsets, postings } => {
                 let (lo, hi) = (offsets[i] as usize, offsets[i + 1] as usize);
@@ -282,6 +283,7 @@ impl InvertedIndex {
             Arena::Packed(pk) => {
                 for b in pk.dim_blocks(i) {
                     pk.decode_block(b, block);
+                    crate::obs::work::count_packed_blocks(1);
                     visit(block);
                 }
             }

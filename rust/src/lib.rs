@@ -80,9 +80,10 @@ pub mod prelude {
     };
     pub use crate::cache::ResultCache;
     pub use crate::configx::{
-        Backend, CacheMode, MutationConfig, NetMode, PostingsMode, QuantMode,
-        SchemaConfig,
+        Backend, CacheMode, MutationConfig, NetMode, ObsConfig, PostingsMode,
+        QuantMode, SchemaConfig,
     };
+    pub use crate::obs::{Histogram, HistogramSnapshot};
     pub use crate::data::{gaussian_factors, MovieLensSynth, Ratings};
     pub use crate::embedding::{Mapper, PermutationKind, TessellationKind};
     pub use crate::engine::{

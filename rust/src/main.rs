@@ -21,8 +21,8 @@
 
 use anyhow::{bail, Context, Result};
 use geomap::configx::{
-    Backend, Cli, MutationConfig, PostingsMode, QuantMode, SchemaConfig,
-    ServeConfig,
+    Backend, Cli, MutationConfig, ObsConfig, PostingsMode, QuantMode,
+    SchemaConfig, ServeConfig,
 };
 use geomap::coordinator::Coordinator;
 use geomap::data::{gaussian_factors, MovieLensSynth, Ratings};
@@ -159,10 +159,31 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         .opt("max-wait-us", "500", "batching window (µs)")
         .opt("requests", "2000", "requests to drive")
         .opt("clients", "8", "concurrent client threads")
+        .opt(
+            "trace-sample",
+            "1.0",
+            "fraction of requests eligible for the slow-query log, in [0,1] \
+             (0 disables tracing; stage histograms always record)",
+        )
+        .opt(
+            "slow-us",
+            "10000",
+            "slow-query threshold (µs): traced requests at or above it \
+             enter the slow log",
+        )
+        .opt("slow-log", "32", "slow-query log capacity (keep-N-slowest)")
+        .opt(
+            "stats-interval",
+            "0",
+            "print interval metrics rates to stderr every N seconds (0 = off)",
+        )
+        .opt("log-level", "info", "stderr log level: debug|info|warn|error")
         .opt("seed", "42", "rng seed")
         .opt("artifacts", "artifacts", "AOT artifact directory")
         .flag("cpu", "use the pure-rust scorer instead of PJRT")
         .parse_from(args)?;
+
+    geomap::obs::set_level(geomap::obs::Level::parse(cli.get("log-level"))?);
 
     let k = cli.get_usize("k")?;
     let seed = cli.get_u64("seed")?;
@@ -198,6 +219,11 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         checkpoint: None,
         cache: geomap::configx::CacheMode::parse(cli.get("cache"))?,
         net: geomap::configx::NetMode::parse(cli.get("net"))?,
+        obs: ObsConfig {
+            sample: cli.get_f64("trace-sample")?,
+            slow_us: cli.get_u64("slow-us")?,
+            slow_log: cli.get_usize("slow-log")?,
+        },
     };
     let factory = if cfg.use_xla {
         xla_scorer_factory(&cfg.artifacts_dir)
@@ -224,6 +250,38 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             Some(srv)
         }
     };
+
+    // periodic interval-rate reporter: every --stats-interval seconds,
+    // snapshot the metrics, delta against the previous snapshot, and
+    // print the interval's rates to stderr (stdout stays machine-clean)
+    let stats_interval = cli.get_u64("stats-interval")?;
+    let reporter_stop =
+        std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let reporter = (stats_interval > 0).then(|| {
+        let coord = std::sync::Arc::clone(&coord);
+        let stop = std::sync::Arc::clone(&reporter_stop);
+        std::thread::spawn(move || {
+            use std::sync::atomic::Ordering;
+            let mut prev = coord.metrics().snapshot();
+            'report: loop {
+                let tick = Instant::now();
+                // sleep in 100ms slices so shutdown is prompt
+                while tick.elapsed().as_secs() < stats_interval {
+                    if stop.load(Ordering::Acquire) {
+                        break 'report;
+                    }
+                    std::thread::sleep(std::time::Duration::from_millis(100));
+                }
+                let cur = coord.metrics().snapshot();
+                let delta = cur.delta(&prev);
+                eprintln!(
+                    "[stats] {}",
+                    delta.rate_report(tick.elapsed().as_secs_f64())
+                );
+                prev = cur;
+            }
+        })
+    });
 
     let total_requests = cli.get_usize("requests")?;
     let clients = cli.get_usize("clients")?.max(1);
@@ -258,6 +316,10 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             std::thread::sleep(std::time::Duration::from_millis(linger_ms));
         }
         srv.shutdown();
+    }
+    reporter_stop.store(true, std::sync::atomic::Ordering::Release);
+    if let Some(h) = reporter {
+        let _ = h.join();
     }
     println!("{}", coord.metrics().report());
     std::sync::Arc::try_unwrap(coord)

@@ -142,6 +142,37 @@ impl NetClient {
         Ok(j.get("version")?.as_usize()? as u64)
     }
 
+    /// Round-trip one `{"stats":true}` request, returning the parsed
+    /// snapshot. Every top-level section of the documented grammar must
+    /// be present — a scraper should fail loudly on protocol drift, not
+    /// silently read zeros.
+    pub fn stats(&mut self) -> Result<Json> {
+        proto::encode_stats_request(&mut self.out);
+        self.write_out()?;
+        let line = self.read_line()?;
+        let j = parse_line_json(line)?;
+        for key in [
+            "requests",
+            "cache",
+            "net",
+            "latency_us",
+            "queue_wait_us",
+            "batch_size",
+            "candidates",
+            "discard_bp",
+            "stages",
+            "work",
+            "slow",
+        ] {
+            if j.opt(key).is_none() {
+                return Err(GeomapError::Rejected(format!(
+                    "stats response is missing '{key}'"
+                )));
+            }
+        }
+        Ok(j)
+    }
+
     /// Round-trip one remove, returning `(version, was_live)`.
     pub fn remove(&mut self, id: u32) -> Result<(u64, bool)> {
         proto::encode_remove(&mut self.out, id);

@@ -185,6 +185,7 @@ enum Verb {
     Query { kappa: usize },
     Upsert { id: u32 },
     Remove { id: u32 },
+    Stats,
 }
 
 impl Verb {
@@ -193,6 +194,7 @@ impl Verb {
             Verb::Query { kappa } => Request::Query { user: scratch, kappa },
             Verb::Upsert { id } => Request::Upsert { id, factor: scratch },
             Verb::Remove { id } => Request::Remove { id },
+            Verb::Stats => Request::Stats,
         }
     }
 }
@@ -245,6 +247,16 @@ impl<'a> LineParser<'a> {
                 Some(c) if c >= 0x20 => self.pos += 1,
                 _ => return Err(self.err("unterminated key")),
             }
+        }
+    }
+
+    /// The literal `true` — the only accepted value for `"stats"`.
+    fn literal_true(&mut self) -> Result<(), DecodeError> {
+        if self.bytes[self.pos..].starts_with(b"true") {
+            self.pos += 4;
+            Ok(())
+        } else {
+            Err(self.err("expected the literal 'true'"))
         }
     }
 
@@ -330,6 +342,7 @@ fn parse_line(line: &[u8], scratch: &mut Vec<f32>) -> Result<Verb, DecodeError> 
     let mut remove_id: Option<u32> = None;
     let mut have_user = false;
     let mut have_factor = false;
+    let mut have_stats = false;
 
     p.skip_ws();
     p.expect(b'{')?;
@@ -392,6 +405,13 @@ fn parse_line(line: &[u8], scratch: &mut Vec<f32>) -> Result<Verb, DecodeError> 
                     remove_id =
                         Some(p.integer("remove id", u32::MAX as u64)? as u32);
                 }
+                b"stats" => {
+                    if have_stats {
+                        return Err(DecodeError::new(key_at, "duplicate 'stats'"));
+                    }
+                    p.literal_true()?;
+                    have_stats = true;
+                }
                 other => {
                     return Err(DecodeError::new(
                         key_at,
@@ -418,7 +438,16 @@ fn parse_line(line: &[u8], scratch: &mut Vec<f32>) -> Result<Verb, DecodeError> 
         return Err(p.err("trailing bytes after request object"));
     }
 
-    // exactly one verb: user+kappa, upsert+factor, or remove
+    if have_stats {
+        if have_user || have_factor || kappa.is_some() || upsert_id.is_some()
+            || remove_id.is_some()
+        {
+            return Err(DecodeError::new(0, "stats takes no other keys"));
+        }
+        return Ok(Verb::Stats);
+    }
+
+    // exactly one verb: user+kappa, upsert+factor, remove, or stats
     match (have_user, upsert_id, remove_id) {
         (true, None, None) => {
             if have_factor {
@@ -456,7 +485,7 @@ fn parse_line(line: &[u8], scratch: &mut Vec<f32>) -> Result<Verb, DecodeError> 
         (false, None, None) => Err(DecodeError::new(
             0,
             "request names no verb: want 'user'+'kappa', \
-             'upsert'+'factor', or 'remove'",
+             'upsert'+'factor', 'remove', or 'stats'",
         )),
         _ => Err(DecodeError::new(0, "request mixes more than one verb")),
     }
@@ -483,6 +512,7 @@ mod tests {
         Query { user: Vec<f32>, kappa: usize },
         Upsert { id: u32, factor: Vec<f32> },
         Remove { id: u32 },
+        Stats,
     }
 
     impl From<Request<'_>> for OwnedRequest {
@@ -495,6 +525,7 @@ mod tests {
                     OwnedRequest::Upsert { id, factor: factor.to_vec() }
                 }
                 Request::Remove { id } => OwnedRequest::Remove { id },
+                Request::Stats => OwnedRequest::Stats,
             }
         }
     }
@@ -517,6 +548,14 @@ mod tests {
         assert_eq!(
             decode_one(r#"{"remove":42}"#).unwrap(),
             OwnedRequest::Remove { id: 42 }
+        );
+        assert_eq!(
+            decode_one(r#"{"stats":true}"#).unwrap(),
+            OwnedRequest::Stats
+        );
+        assert_eq!(
+            decode_one(r#" { "stats" : true } "#).unwrap(),
+            OwnedRequest::Stats
         );
         // interior whitespace tolerated
         assert_eq!(
@@ -606,6 +645,14 @@ mod tests {
             r#"{"user":[1],"kappa":1,"remove":2}"#,
             r#"{"user":[1],"user":[2],"kappa":1}"#,
             r#"{"quary":[1],"kappa":1}"#,
+            // stats is strict: literal true only, no other keys
+            r#"{"stats":false}"#,
+            r#"{"stats":1}"#,
+            r#"{"stats":"true"}"#,
+            r#"{"stats":true,"kappa":1}"#,
+            r#"{"stats":true,"remove":2}"#,
+            r#"{"stats":true,"stats":true}"#,
+            r#"{"stats":truex}"#,
             // framing garbage
             r#"not json"#,
             r#"{"user":[1,2],"kappa":3}trailing"#,

@@ -8,6 +8,7 @@
 //! {"user":[f32,...],"kappa":N}        top-κ query
 //! {"upsert":ID,"factor":[f32,...]}    incremental catalogue upsert
 //! {"remove":ID}                       incremental catalogue remove
+//! {"stats":true}                      metrics + slow-log snapshot
 //! ```
 //!
 //! Response lines:
@@ -17,6 +18,7 @@
 //!  "candidates":..,"total":..,"version":..,"latency_us":..}
 //! {"ok":true,"version":..}            upsert ack
 //! {"ok":true,"version":..,"live":b}   remove ack
+//! {"requests":{..},"cache":{..},...}  stats snapshot (docs/OBSERVABILITY.md)
 //! {"error":"..."}                     decode or serve failure
 //! ```
 //!
@@ -29,7 +31,8 @@
 //! values never reach an encoder — the decoder rejects them on input
 //! and retrieval scores are finite by construction).
 
-use crate::coordinator::Response;
+use crate::coordinator::{MetricsSnapshot, Response};
+use crate::obs::{HistogramSnapshot, SlowEntry};
 use std::io::Write as _;
 
 /// Largest accepted `kappa`: past this a request is malformed, not
@@ -69,6 +72,8 @@ pub enum Request<'a> {
         /// Item id.
         id: u32,
     },
+    /// Snapshot the server's metrics and slow-query log.
+    Stats,
 }
 
 fn write_f32_array(out: &mut Vec<u8>, xs: &[f32]) {
@@ -174,6 +179,118 @@ pub fn encode_error(out: &mut Vec<u8>, message: &str) {
     out.extend_from_slice(b"}\n");
 }
 
+/// Encode a stats request line into `out` (cleared first).
+pub fn encode_stats_request(out: &mut Vec<u8>) {
+    out.clear();
+    out.extend_from_slice(b"{\"stats\":true}\n");
+}
+
+fn write_hist(out: &mut Vec<u8>, name: &str, h: &HistogramSnapshot) {
+    let (p50, p95, p99) = h.percentiles();
+    let _ = write!(
+        out,
+        "\"{name}\":{{\"count\":{},\"mean\":{:.1},\"p50\":{p50},\
+         \"p95\":{p95},\"p99\":{p99},\"max\":{}}}",
+        h.count(),
+        h.mean(),
+        h.max()
+    );
+}
+
+fn write_slow_entry(out: &mut Vec<u8>, e: &SlowEntry) {
+    let _ = write!(
+        out,
+        "{{\"total_us\":{},\"queue_us\":{},\"candgen_us\":{},\
+         \"rescore_us\":{},\"cache_probe_us\":{},\"kappa\":{},\
+         \"candidates\":{},\"posting_lists\":{},\"packed_blocks\":{},\
+         \"dots_i8\":{},\"refines_f32\":{}}}",
+        e.total_us,
+        e.queue_us,
+        e.candgen_us,
+        e.rescore_us,
+        e.cache_probe_us,
+        e.kappa,
+        e.candidates,
+        e.work.posting_lists,
+        e.work.packed_blocks,
+        e.work.dots_i8,
+        e.work.refines_f32,
+    );
+}
+
+/// Encode a stats response line into `out` (cleared first): the full
+/// metrics snapshot plus the slow-query log, with a **byte-stable key
+/// order** so scrapers can depend on the layout (`docs/OBSERVABILITY.md`
+/// documents the grammar).
+pub fn encode_stats(
+    out: &mut Vec<u8>,
+    snap: &MetricsSnapshot,
+    slow: &[SlowEntry],
+) {
+    out.clear();
+    let _ = write!(
+        out,
+        "{{\"requests\":{{\"accepted\":{},\"rejected\":{},\
+         \"completed\":{},\"batches\":{}}},",
+        snap.accepted, snap.rejected, snap.completed, snap.batches
+    );
+    let _ = write!(
+        out,
+        "\"cache\":{{\"hits\":{},\"misses\":{},\"stale\":{},\
+         \"evictions\":{}}},",
+        snap.cache_hits, snap.cache_misses, snap.cache_stale,
+        snap.cache_evictions
+    );
+    let _ = write!(
+        out,
+        "\"net\":{{\"connections\":{},\"closed\":{},\"bytes_in\":{},\
+         \"bytes_out\":{},\"decode_errors\":{},\"malformed\":{}}},",
+        snap.net_connections,
+        snap.net_closed,
+        snap.net_bytes_in,
+        snap.net_bytes_out,
+        snap.net_decode_errors,
+        snap.net_malformed,
+    );
+    write_hist(out, "latency_us", &snap.latency_us);
+    out.push(b',');
+    write_hist(out, "queue_wait_us", &snap.queue_wait_us);
+    out.push(b',');
+    write_hist(out, "batch_size", &snap.batch_size);
+    out.push(b',');
+    write_hist(out, "candidates", &snap.candidates);
+    out.push(b',');
+    write_hist(out, "discard_bp", &snap.discard_bp);
+    out.extend_from_slice(b",\"stages\":{");
+    write_hist(out, "candgen_us", &snap.stage_candgen_us);
+    out.push(b',');
+    write_hist(out, "rescore_us", &snap.stage_rescore_us);
+    out.push(b',');
+    write_hist(out, "cache_probe_us", &snap.stage_cache_probe_us);
+    out.push(b',');
+    write_hist(out, "cache_fill_us", &snap.stage_cache_fill_us);
+    out.push(b',');
+    write_hist(out, "net_decode_us", &snap.stage_net_decode_us);
+    out.push(b',');
+    write_hist(out, "net_encode_us", &snap.stage_net_encode_us);
+    let _ = write!(
+        out,
+        "}},\"work\":{{\"posting_lists\":{},\"packed_blocks\":{},\
+         \"dots_i8\":{},\"refines_f32\":{}}},\"slow\":[",
+        snap.work_posting_lists,
+        snap.work_packed_blocks,
+        snap.work_dots_i8,
+        snap.work_refines_f32,
+    );
+    for (i, e) in slow.iter().enumerate() {
+        if i > 0 {
+            out.push(b',');
+        }
+        write_slow_entry(out, e);
+    }
+    out.extend_from_slice(b"]}\n");
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -264,6 +381,107 @@ mod tests {
             j.get("error").unwrap().as_str().unwrap(),
             "bad byte '\"' at\nline\t2 \\ \u{1}"
         );
+    }
+
+    #[test]
+    fn encoded_stats_is_valid_json_with_stable_key_order() {
+        use crate::obs::WorkCounts;
+        let snap = MetricsSnapshot {
+            accepted: 10,
+            completed: 9,
+            cache_hits: 3,
+            net_bytes_in: 1234,
+            work_dots_i8: 77,
+            ..MetricsSnapshot::default()
+        };
+        let slow = [SlowEntry {
+            total_us: 900,
+            queue_us: 100,
+            candgen_us: 300,
+            rescore_us: 400,
+            cache_probe_us: 5,
+            kappa: 8,
+            candidates: 42,
+            work: WorkCounts {
+                posting_lists: 6,
+                packed_blocks: 2,
+                dots_i8: 77,
+                refines_f32: 11,
+            },
+        }];
+        let mut out = Vec::new();
+        encode_stats(&mut out, &snap, &slow);
+        assert_eq!(out.last(), Some(&b'\n'));
+        let text = std::str::from_utf8(&out).unwrap().trim_end();
+        // key order is part of the contract: scrapers may cut on bytes
+        for (earlier, later) in [
+            ("\"requests\":", "\"cache\":"),
+            ("\"cache\":", "\"net\":"),
+            ("\"net\":", "\"latency_us\":"),
+            ("\"latency_us\":", "\"queue_wait_us\":"),
+            ("\"discard_bp\":", "\"stages\":"),
+            ("\"stages\":", "\"work\":"),
+            ("\"work\":", "\"slow\":"),
+        ] {
+            let a = text.find(earlier).unwrap_or_else(|| panic!("{earlier}"));
+            let b = text.find(later).unwrap_or_else(|| panic!("{later}"));
+            assert!(a < b, "{earlier} must precede {later}");
+        }
+        let j = Json::parse(text).unwrap();
+        let req = j.get("requests").unwrap();
+        assert_eq!(req.get("accepted").unwrap().as_usize().unwrap(), 10);
+        assert_eq!(req.get("completed").unwrap().as_usize().unwrap(), 9);
+        assert_eq!(
+            j.get("cache").unwrap().get("hits").unwrap().as_usize().unwrap(),
+            3
+        );
+        assert_eq!(
+            j.get("net")
+                .unwrap()
+                .get("bytes_in")
+                .unwrap()
+                .as_usize()
+                .unwrap(),
+            1234
+        );
+        let lat = j.get("latency_us").unwrap();
+        for key in ["count", "mean", "p50", "p95", "p99", "max"] {
+            assert!(lat.opt(key).is_some(), "histogram field {key}");
+        }
+        let stages = j.get("stages").unwrap();
+        for key in [
+            "candgen_us",
+            "rescore_us",
+            "cache_probe_us",
+            "cache_fill_us",
+            "net_decode_us",
+            "net_encode_us",
+        ] {
+            assert!(stages.opt(key).is_some(), "stage histogram {key}");
+        }
+        assert_eq!(
+            j.get("work")
+                .unwrap()
+                .get("dots_i8")
+                .unwrap()
+                .as_usize()
+                .unwrap(),
+            77
+        );
+        let slow_arr = j.get("slow").unwrap().as_arr().unwrap();
+        assert_eq!(slow_arr.len(), 1);
+        assert_eq!(
+            slow_arr[0].get("total_us").unwrap().as_usize().unwrap(),
+            900
+        );
+        assert_eq!(
+            slow_arr[0].get("refines_f32").unwrap().as_usize().unwrap(),
+            11
+        );
+
+        let mut req_line = Vec::new();
+        encode_stats_request(&mut req_line);
+        assert_eq!(req_line, b"{\"stats\":true}\n");
     }
 
     #[test]

@@ -21,14 +21,17 @@
 use super::decoder::RequestDecoder;
 use super::proto::{self, Request};
 use crate::configx::parse_listen_addr;
-use crate::coordinator::Coordinator;
+use crate::coordinator::{Coordinator, MetricsSnapshot, Response};
 use crate::error::{GeomapError, Result};
+use crate::obs::{Logger, SlowEntry, StageTimer};
 use std::io::Read;
 use std::io::Write as _;
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+
+static LOG: Logger = Logger::new("net");
 
 /// Read-chunk size per connection; requests larger than this simply
 /// span multiple reads of the streaming decoder.
@@ -77,6 +80,7 @@ impl NetServer {
                 .spawn(move || accept_loop(listener, shared))
                 .expect("spawn net accept thread")
         };
+        LOG.info(format!("listening on {local_addr}"));
         Ok(NetServer { local_addr, accept: Some(accept), shared })
     }
 
@@ -109,6 +113,7 @@ impl NetServer {
         for h in conns {
             let _ = h.join();
         }
+        LOG.info(format!("shut down, listener {} released", self.local_addr));
     }
 }
 
@@ -120,7 +125,7 @@ impl Drop for NetServer {
 
 fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
     loop {
-        let (stream, _peer) = match listener.accept() {
+        let (stream, peer) = match listener.accept() {
             Ok(conn) => conn,
             Err(_) => {
                 if shared.closing.load(Ordering::Acquire) {
@@ -132,6 +137,7 @@ fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
         if shared.closing.load(Ordering::Acquire) {
             break; // the shutdown self-connect (or a late client)
         }
+        LOG.debug(format!("connection accepted from {peer}"));
         shared
             .coord
             .metrics()
@@ -172,7 +178,13 @@ fn connection_loop(mut stream: TcpStream, shared: Arc<Shared>) {
         dec.feed(&chunk[..n]);
         // answer everything decodable before the next read: this is the
         // per-connection backpressure (see module docs)
-        while let Some(decoded) = dec.next_request() {
+        loop {
+            let t_decode = StageTimer::start();
+            let Some(decoded) = dec.next_request() else { break };
+            // span covers the in-place parse of one framed line (the
+            // "need more bytes" probe above costs a newline scan and is
+            // not a decode — it records nothing)
+            metrics.stage_net_decode_us.record(t_decode.elapsed_us());
             match decoded {
                 Ok(req) => serve_request(coord, req, &mut out),
                 Err(e) => {
@@ -187,44 +199,61 @@ fn connection_loop(mut stream: TcpStream, shared: Arc<Shared>) {
         }
     }
     let _ = stream.shutdown(Shutdown::Both);
+    LOG.debug("connection closed");
     shared.coord.metrics().net_closed.fetch_add(1, Ordering::Relaxed);
+}
+
+/// What one decoded request resolved to. Computed **before** any bytes
+/// are written so the encode span below is measured in exactly one place
+/// for every response shape.
+enum Outcome {
+    Query(Response),
+    Ack { version: u64, live: Option<bool> },
+    Stats(MetricsSnapshot, Vec<SlowEntry>),
+    Fail(GeomapError),
 }
 
 /// Serve one decoded request, leaving the encoded response line in `out`.
 fn serve_request(coord: &Coordinator, req: Request<'_>, out: &mut Vec<u8>) {
-    let failed = match req {
+    let metrics = coord.metrics();
+    let outcome = match req {
         Request::Query { user, kappa } => {
             // the one unavoidable copy: submit hands the factor to the
             // batcher thread, so it must own the bytes
             match coord.submit(user.to_vec(), kappa) {
-                Ok(resp) => {
-                    proto::encode_response(out, &resp);
-                    None
-                }
-                Err(e) => Some(e),
+                Ok(resp) => Outcome::Query(resp),
+                Err(e) => Outcome::Fail(e),
             }
         }
         Request::Upsert { id, factor } => match coord.upsert(id, factor) {
-            Ok(version) => {
-                proto::encode_ack(out, version, None);
-                None
-            }
-            Err(e) => Some(e),
+            Ok(version) => Outcome::Ack { version, live: None },
+            Err(e) => Outcome::Fail(e),
         },
         Request::Remove { id } => match coord.remove(id) {
-            Ok((version, live)) => {
-                proto::encode_ack(out, version, Some(live));
-                None
-            }
-            Err(e) => Some(e),
+            Ok((version, live)) => Outcome::Ack { version, live: Some(live) },
+            Err(e) => Outcome::Fail(e),
         },
-    };
-    if let Some(e) = failed {
-        // decoded fine but rejected semantically (shape/config) — client
-        // bug, not protocol corruption; queue sheds are neither
-        if matches!(e, GeomapError::Shape(_) | GeomapError::Config(_)) {
-            coord.metrics().net_malformed.fetch_add(1, Ordering::Relaxed);
+        // reads counters + histograms without blocking serving; the slow
+        // log is copied out under its own short lock
+        Request::Stats => {
+            Outcome::Stats(metrics.snapshot(), coord.slow_entries())
         }
-        proto::encode_error(out, &e.to_string());
+    };
+    let t_encode = StageTimer::start();
+    match &outcome {
+        Outcome::Query(resp) => proto::encode_response(out, resp),
+        Outcome::Ack { version, live } => {
+            proto::encode_ack(out, *version, *live)
+        }
+        Outcome::Stats(snap, slow) => proto::encode_stats(out, snap, slow),
+        Outcome::Fail(e) => {
+            // decoded fine but rejected semantically (shape/config) —
+            // client bug, not protocol corruption; queue sheds are neither
+            if matches!(e, GeomapError::Shape(_) | GeomapError::Config(_)) {
+                metrics.net_malformed.fetch_add(1, Ordering::Relaxed);
+            }
+            proto::encode_error(out, &e.to_string());
+        }
     }
+    metrics.stage_net_encode_us.record(t_encode.elapsed_us());
 }

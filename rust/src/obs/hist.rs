@@ -2,7 +2,9 @@
 //!
 //! Values (µs) are bucketed as `(exponent, 1/16 sub-bucket)` giving ≤ ~6 %
 //! relative error on quantiles, with plain atomic counters so the serving
-//! hot path never takes a lock to record.
+//! hot path never takes a lock to record. [`Histogram::snapshot`] freezes
+//! the live counters into an immutable [`HistogramSnapshot`], which can be
+//! merged across shards and subtracted pairwise to compute interval rates.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -10,6 +12,41 @@ const SUB_BITS: u32 = 4; // 16 sub-buckets per octave
 const SUB: usize = 1 << SUB_BITS;
 const OCTAVES: usize = 40; // covers up to ~2^40 µs
 const BUCKETS: usize = OCTAVES * SUB;
+
+#[inline]
+fn bucket_of(v: u64) -> usize {
+    if v < SUB as u64 {
+        return v as usize; // exact for tiny values
+    }
+    let exp = 63 - v.leading_zeros() as usize; // floor(log2 v) >= SUB_BITS
+    let sub = ((v >> (exp as u32 - SUB_BITS)) as usize) & (SUB - 1);
+    ((exp - SUB_BITS as usize + 1) * SUB + sub).min(BUCKETS - 1)
+}
+
+/// Representative (upper-edge) value of a bucket.
+fn bucket_value(idx: usize) -> u64 {
+    if idx < SUB {
+        return idx as u64;
+    }
+    let oct = idx / SUB - 1 + SUB_BITS as usize;
+    let sub = idx % SUB;
+    ((SUB + sub) as u64) << (oct as u32 - SUB_BITS)
+}
+
+/// Shared quantile walk over a bucket array: the index of the bucket
+/// holding the `q`-quantile sample out of `total`, or `None` when the
+/// walk exhausts the array (counts mutated concurrently).
+fn quantile_bucket(counts: impl Iterator<Item = u64>, total: u64, q: f64) -> Option<usize> {
+    let target = ((q.clamp(0.0, 1.0)) * (total as f64 - 1.0)).round() as u64;
+    let mut seen = 0u64;
+    for (i, c) in counts.enumerate() {
+        seen += c;
+        if seen > target {
+            return Some(i);
+        }
+    }
+    None
+}
 
 /// Concurrent histogram of u64 samples (typically µs latencies).
 pub struct Histogram {
@@ -38,30 +75,10 @@ impl Histogram {
         }
     }
 
-    #[inline]
-    fn bucket_of(v: u64) -> usize {
-        if v < SUB as u64 {
-            return v as usize; // exact for tiny values
-        }
-        let exp = 63 - v.leading_zeros() as usize; // floor(log2 v) >= SUB_BITS
-        let sub = ((v >> (exp as u32 - SUB_BITS)) as usize) & (SUB - 1);
-        ((exp - SUB_BITS as usize + 1) * SUB + sub).min(BUCKETS - 1)
-    }
-
-    /// Representative (upper-edge) value of a bucket.
-    fn bucket_value(idx: usize) -> u64 {
-        if idx < SUB {
-            return idx as u64;
-        }
-        let oct = idx / SUB - 1 + SUB_BITS as usize;
-        let sub = idx % SUB;
-        ((SUB + sub) as u64) << (oct as u32 - SUB_BITS)
-    }
-
     /// Record one sample.
     #[inline]
     pub fn record(&self, v: u64) {
-        self.buckets[Self::bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        self.buckets[bucket_of(v)].fetch_add(1, Ordering::Relaxed);
         self.count.fetch_add(1, Ordering::Relaxed);
         self.sum.fetch_add(v, Ordering::Relaxed);
         self.max.fetch_max(v, Ordering::Relaxed);
@@ -93,20 +110,20 @@ impl Histogram {
         if total == 0 {
             return 0;
         }
-        let target = ((q.clamp(0.0, 1.0)) * (total as f64 - 1.0)).round() as u64;
-        let mut seen = 0u64;
-        for (i, b) in self.buckets.iter().enumerate() {
-            seen += b.load(Ordering::Relaxed);
-            if seen > target {
-                return Self::bucket_value(i);
-            }
+        let counts = self.buckets.iter().map(|b| b.load(Ordering::Relaxed));
+        match quantile_bucket(counts, total, q) {
+            Some(i) => bucket_value(i),
+            None => self.max(),
         }
-        self.max()
     }
 
     /// The serving quantile triple `(p50, p95, p99)` in one pass-friendly
     /// call (each quantile walk is O(buckets); callers that print all
     /// three should prefer this for readability).
+    ///
+    /// On an empty histogram every quantile is the sentinel `0` — same
+    /// convention as [`Histogram::quantile`] and
+    /// [`HistogramSnapshot::percentiles`].
     pub fn percentiles(&self) -> (u64, u64, u64) {
         (self.quantile(0.5), self.quantile(0.95), self.quantile(0.99))
     }
@@ -137,6 +154,116 @@ impl Histogram {
         self.count.store(0, Ordering::Relaxed);
         self.sum.store(0, Ordering::Relaxed);
         self.max.store(0, Ordering::Relaxed);
+    }
+
+    /// Freeze the live counters into an immutable point-in-time snapshot.
+    ///
+    /// Buckets are loaded one by one without a global lock, so a snapshot
+    /// taken while writers race may be off by the handful of in-flight
+    /// records — fine for monitoring, same contract as `count()` itself.
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        HistogramSnapshot {
+            buckets: self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
+            count: self.count(),
+            sum: self.sum.load(Ordering::Relaxed),
+            max: self.max(),
+        }
+    }
+}
+
+/// Immutable point-in-time copy of a [`Histogram`]: mergeable across
+/// sources and subtractable pairwise (`later − earlier`) for interval
+/// quantiles, which the live atomic histogram cannot provide.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct HistogramSnapshot {
+    buckets: Vec<u64>,
+    count: u64,
+    sum: u64,
+    max: u64,
+}
+
+impl HistogramSnapshot {
+    /// Number of samples in the snapshot.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// True when no samples were recorded.
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Mean of samples (0 if empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Maximum recorded sample. After [`saturating_sub`] this is the
+    /// *later* snapshot's max, not the interval max — see there.
+    ///
+    /// [`saturating_sub`]: HistogramSnapshot::saturating_sub
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// Approximate quantile in [0, 1] (0 on an empty snapshot).
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        match quantile_bucket(self.buckets.iter().copied(), self.count, q) {
+            Some(i) => bucket_value(i),
+            None => self.max,
+        }
+    }
+
+    /// `(p50, p95, p99)` triple.
+    ///
+    /// On an **empty snapshot** the documented sentinel is `(0, 0, 0)` —
+    /// callers printing rates must branch on [`is_empty`] if they need to
+    /// distinguish "no traffic" from "all samples were < 1µs".
+    ///
+    /// [`is_empty`]: HistogramSnapshot::is_empty
+    pub fn percentiles(&self) -> (u64, u64, u64) {
+        (self.quantile(0.5), self.quantile(0.95), self.quantile(0.99))
+    }
+
+    /// Fold another snapshot into this one (bucket-wise addition). Used
+    /// to aggregate per-verb or per-shard histograms into one view.
+    pub fn merge(&mut self, other: &HistogramSnapshot) {
+        debug_assert_eq!(self.buckets.len(), other.buckets.len());
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += *b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.max = self.max.max(other.max);
+    }
+
+    /// Interval delta `self − earlier`, saturating per bucket so a reset
+    /// (or racing snapshot) yields zeros instead of wrapping.
+    ///
+    /// `count` and `sum` subtract exactly; `max` is **not** subtractable
+    /// (the interval's true max is unknowable from two cumulative
+    /// snapshots), so the result keeps `self`'s cumulative max as an
+    /// upper bound on the interval max.
+    pub fn saturating_sub(&self, earlier: &HistogramSnapshot) -> HistogramSnapshot {
+        debug_assert_eq!(self.buckets.len(), earlier.buckets.len());
+        HistogramSnapshot {
+            buckets: self
+                .buckets
+                .iter()
+                .zip(&earlier.buckets)
+                .map(|(a, b)| a.saturating_sub(*b))
+                .collect(),
+            count: self.count.saturating_sub(earlier.count),
+            sum: self.sum.saturating_sub(earlier.sum),
+            max: self.max,
+        }
     }
 }
 
@@ -188,18 +315,30 @@ mod tests {
 
     #[test]
     fn concurrent_records() {
+        // ≥ 4 threads, each hammering a distinct value range so bucket
+        // contention and disjoint buckets are both exercised on the
+        // lock-free path; count and sum must come out exact.
         let h = std::sync::Arc::new(Histogram::new());
+        const THREADS: u64 = 6;
+        const PER: u64 = 1000;
         std::thread::scope(|s| {
-            for _ in 0..4 {
+            for t in 0..THREADS {
                 let h = std::sync::Arc::clone(&h);
                 s.spawn(move || {
-                    for v in 0..1000u64 {
-                        h.record(v);
+                    for v in 0..PER {
+                        h.record(t * 10_000 + v);
                     }
                 });
             }
         });
-        assert_eq!(h.count(), 4000);
+        assert_eq!(h.count(), THREADS * PER);
+        let want_sum: u64 = (0..THREADS)
+            .map(|t| (0..PER).map(|v| t * 10_000 + v).sum::<u64>())
+            .sum();
+        let snap = h.snapshot();
+        assert_eq!(snap.count(), THREADS * PER);
+        assert!((snap.mean() - want_sum as f64 / (THREADS * PER) as f64).abs() < 1e-9);
+        assert_eq!(h.max(), (THREADS - 1) * 10_000 + PER - 1);
     }
 
     #[test]
@@ -215,14 +354,79 @@ mod tests {
     fn bucket_roundtrip_monotone() {
         let mut last = 0;
         for v in [0u64, 1, 15, 16, 17, 100, 1000, 123_456, 10_000_000] {
-            let b = Histogram::bucket_of(v);
+            let b = bucket_of(v);
             assert!(b >= last, "buckets must be monotone in v");
             last = b;
-            let rep = Histogram::bucket_value(b);
+            let rep = bucket_value(b);
             if v >= 16 {
                 let rel = (rep as f64 - v as f64).abs() / v as f64;
                 assert!(rel < 0.07, "v={v} rep={rep}");
             }
         }
+    }
+
+    #[test]
+    fn snapshot_matches_live_quantiles() {
+        let h = Histogram::new();
+        for v in 1..=10_000u64 {
+            h.record(v);
+        }
+        let s = h.snapshot();
+        for q in [0.0, 0.5, 0.95, 0.99, 1.0] {
+            assert_eq!(s.quantile(q), h.quantile(q), "q={q}");
+        }
+        assert_eq!(s.count(), h.count());
+        assert_eq!(s.max(), h.max());
+        assert!((s.mean() - h.mean()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_snapshot_percentile_sentinel() {
+        // Documented contract: empty snapshot → (0, 0, 0), not a panic
+        // and not max().
+        let s = Histogram::new().snapshot();
+        assert!(s.is_empty());
+        assert_eq!(s.percentiles(), (0, 0, 0));
+        assert_eq!(s.quantile(1.0), 0);
+        assert_eq!(s.mean(), 0.0);
+    }
+
+    #[test]
+    fn merge_is_bucketwise_addition() {
+        let a = Histogram::new();
+        let b = Histogram::new();
+        let all = Histogram::new();
+        for v in [3u64, 17, 900] {
+            a.record(v);
+            all.record(v);
+        }
+        for v in [5u64, 250_000] {
+            b.record(v);
+            all.record(v);
+        }
+        let mut m = a.snapshot();
+        m.merge(&b.snapshot());
+        assert_eq!(m, all.snapshot());
+    }
+
+    #[test]
+    fn saturating_sub_recovers_interval() {
+        let h = Histogram::new();
+        for v in [10u64, 20, 30] {
+            h.record(v);
+        }
+        let early = h.snapshot();
+        for v in [100u64, 200] {
+            h.record(v);
+        }
+        let d = h.snapshot().saturating_sub(&early);
+        assert_eq!(d.count(), 2);
+        assert!((d.mean() - 150.0).abs() < 1.0);
+        // max stays the cumulative one (documented non-subtractable).
+        assert_eq!(d.max(), 200);
+        // Subtracting the later from the earlier saturates to empty.
+        let rev = early.saturating_sub(&h.snapshot());
+        assert_eq!(rev.count(), 0);
+        assert_eq!(rev.percentiles(), (0, 0, 0));
     }
 }

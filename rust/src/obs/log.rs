@@ -12,11 +12,36 @@ pub enum Level {
     Error = 3,
 }
 
+impl Level {
+    /// Parse a CLI/JSON level name (`debug`/`info`/`warn`/`error`).
+    pub fn parse(s: &str) -> Result<Level, crate::error::GeomapError> {
+        match s {
+            "debug" => Ok(Level::Debug),
+            "info" => Ok(Level::Info),
+            "warn" => Ok(Level::Warn),
+            "error" => Ok(Level::Error),
+            other => Err(crate::error::GeomapError::Config(format!(
+                "--log-level must be debug|info|warn|error, got '{other}'"
+            ))),
+        }
+    }
+}
+
 static GLOBAL_LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
 
 /// Set the global minimum level.
 pub fn set_level(level: Level) {
     GLOBAL_LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+/// Current global minimum level.
+pub fn level() -> Level {
+    match GLOBAL_LEVEL.load(Ordering::Relaxed) {
+        0 => Level::Debug,
+        1 => Level::Info,
+        2 => Level::Warn,
+        _ => Level::Error,
+    }
 }
 
 fn enabled(level: Level) -> bool {
@@ -76,6 +101,11 @@ impl Logger {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::Mutex;
+
+    // GLOBAL_LEVEL is process-wide; tests that mutate it serialize here
+    // so parallel test threads never observe each other's level.
+    static LEVEL_GUARD: Mutex<()> = Mutex::new(());
 
     #[test]
     fn level_ordering() {
@@ -85,13 +115,40 @@ mod tests {
     }
 
     #[test]
+    fn parse_round_trips_and_rejects() {
+        assert_eq!(Level::parse("debug").unwrap(), Level::Debug);
+        assert_eq!(Level::parse("info").unwrap(), Level::Info);
+        assert_eq!(Level::parse("warn").unwrap(), Level::Warn);
+        assert_eq!(Level::parse("error").unwrap(), Level::Error);
+        let err = Level::parse("verbose").unwrap_err();
+        assert!(err.to_string().contains("--log-level"), "{err}");
+    }
+
+    #[test]
     fn logging_does_not_panic() {
+        let _g = LEVEL_GUARD.lock().unwrap();
+        let prev = level();
         let log = Logger::new("test");
         set_level(Level::Error); // silence output during tests
         log.debug("d");
         log.info("i");
         log.warn("w");
         log.error("e");
-        set_level(Level::Info);
+        set_level(prev);
+    }
+
+    #[test]
+    fn level_filters_below_threshold() {
+        let _g = LEVEL_GUARD.lock().unwrap();
+        let prev = level();
+        set_level(Level::Warn);
+        assert!(!enabled(Level::Debug));
+        assert!(!enabled(Level::Info));
+        assert!(enabled(Level::Warn));
+        assert!(enabled(Level::Error));
+        assert_eq!(level(), Level::Warn);
+        set_level(Level::Debug);
+        assert!(enabled(Level::Debug));
+        set_level(prev);
     }
 }

@@ -1,10 +1,22 @@
-//! Observability substrate: leveled logging and latency histograms.
+//! Observability substrate: leveled logging, latency histograms,
+//! per-request stage tracing, work counters, and the slow-query log.
+//!
+//! The serving pipeline's measurement substrate (`docs/OBSERVABILITY.md`):
+//! [`Histogram`]s record per-stage latencies lock-free, [`WorkCounts`]
+//! tallies physical work thread-locally, a [`Sampler`] + [`StageTimer`]
+//! pair traces sampled requests into the [`SlowLog`], and immutable
+//! [`HistogramSnapshot`]s make the whole state scrapeable and
+//! delta-subtractable for interval rates.
 
 mod hist;
 mod log;
+mod trace;
+pub mod work;
 
-pub use hist::Histogram;
-pub use log::{set_level, Level, Logger};
+pub use hist::{Histogram, HistogramSnapshot};
+pub use log::{level, set_level, Level, Logger};
+pub use trace::{Sampler, SlowEntry, SlowLog, StageTimer};
+pub use work::WorkCounts;
 
 use std::time::Instant;
 

@@ -1,0 +1,248 @@
+//! Per-request stage tracing: sampling, stage timers, and the slow-query
+//! log.
+//!
+//! A [`Sampler`] decides (one atomic add) whether a request gets a trace;
+//! sampled requests carry a [`SlowEntry`] through the coordinator, filled
+//! in stage by stage from [`StageTimer`] spans and the worker's
+//! [`WorkCounts`] tally, and are finally offered to the [`SlowLog`] — a
+//! bounded keep-N-slowest buffer dumpable over the wire (`{"stats":true}`)
+//! and at shutdown.
+
+use super::work::WorkCounts;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Monotonic stopwatch for one pipeline stage.
+///
+/// Thin wrapper over [`Instant`] so call sites read as tracing, not time
+/// math; unlike [`super::Timer`] it does not record on drop — the caller
+/// decides which histogram (if any) receives the span.
+#[derive(Clone, Copy, Debug)]
+pub struct StageTimer {
+    start: Instant,
+}
+
+impl StageTimer {
+    /// Start timing now.
+    #[inline]
+    pub fn start() -> Self {
+        StageTimer { start: Instant::now() }
+    }
+
+    /// Microseconds elapsed since [`start`](StageTimer::start).
+    #[inline]
+    pub fn elapsed_us(&self) -> u64 {
+        self.start.elapsed().as_micros() as u64
+    }
+}
+
+/// Deterministic 1-in-N request sampler.
+///
+/// `new(rate)` converts a sampling probability into a period
+/// (`rate = 1.0` → every request, `0.5` → every 2nd, `0.0` → never);
+/// [`hit`](Sampler::hit) is one relaxed `fetch_add` + modulo, cheap
+/// enough to sit on the submit path unconditionally. Deterministic
+/// striding (rather than PRNG coin flips) keeps sampled traces evenly
+/// spread across a burst instead of clumping.
+#[derive(Debug)]
+pub struct Sampler {
+    period: u64, // 0 = disabled
+    counter: AtomicU64,
+}
+
+impl Sampler {
+    /// Build from a sampling rate in `[0, 1]`.
+    pub fn new(rate: f64) -> Self {
+        let period = if rate <= 0.0 { 0 } else { (1.0 / rate.min(1.0)).round() as u64 };
+        Sampler { period, counter: AtomicU64::new(0) }
+    }
+
+    /// Should this request be traced?
+    #[inline]
+    pub fn hit(&self) -> bool {
+        if self.period == 0 {
+            return false;
+        }
+        self.counter.fetch_add(1, Ordering::Relaxed) % self.period == 0
+    }
+}
+
+/// One traced request: per-stage µs spans plus the physical-work tally.
+///
+/// `candgen_us`/`rescore_us` are **batch-level** spans summed over the
+/// shards that served the request's batch — a batched system cannot
+/// attribute shared work to one request, so the entry reports the cost of
+/// the batch it rode in (see `docs/OBSERVABILITY.md`).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SlowEntry {
+    /// End-to-end submit → reply µs.
+    pub total_us: u64,
+    /// Admission-queue wait µs.
+    pub queue_us: u64,
+    /// Candidate-generation (index prune) µs, summed over shards.
+    pub candgen_us: u64,
+    /// Rescore (exact/int8 scoring + select) µs, summed over shards.
+    pub rescore_us: u64,
+    /// Result-cache probe µs (0 when the cache is off).
+    pub cache_probe_us: u64,
+    /// Requested top-κ.
+    pub kappa: usize,
+    /// Candidates surviving the prune, summed over shards.
+    pub candidates: usize,
+    /// Physical work done by the batch, summed over shards.
+    pub work: WorkCounts,
+}
+
+impl SlowEntry {
+    /// Structured one-line rendering (the slow-log format documented in
+    /// `docs/OBSERVABILITY.md`).
+    pub fn line(&self) -> String {
+        format!(
+            "slow total={}us queue={}us candgen={}us rescore={}us \
+             cache_probe={}us kappa={} candidates={} postings={} \
+             blocks={} dots_i8={} refines_f32={}",
+            self.total_us,
+            self.queue_us,
+            self.candgen_us,
+            self.rescore_us,
+            self.cache_probe_us,
+            self.kappa,
+            self.candidates,
+            self.work.posting_lists,
+            self.work.packed_blocks,
+            self.work.dots_i8,
+            self.work.refines_f32,
+        )
+    }
+}
+
+/// Bounded keep-N-slowest log of traced requests.
+///
+/// Entries below `threshold_us` are dropped at the door; the survivors
+/// are kept sorted slowest-first and truncated to `cap`. Offers take a
+/// mutex, but only for requests that are both *sampled* and *slow* — the
+/// fast path never sees it.
+#[derive(Debug)]
+pub struct SlowLog {
+    cap: usize,
+    threshold_us: u64,
+    entries: Mutex<Vec<SlowEntry>>,
+}
+
+impl SlowLog {
+    /// Keep the `cap` slowest entries at or above `threshold_us`.
+    pub fn new(cap: usize, threshold_us: u64) -> Self {
+        SlowLog { cap, threshold_us, entries: Mutex::new(Vec::new()) }
+    }
+
+    /// Offer a completed trace; kept only if slow enough to rank.
+    pub fn offer(&self, entry: SlowEntry) {
+        if self.cap == 0 || entry.total_us < self.threshold_us {
+            return;
+        }
+        let mut entries = self.entries.lock().unwrap();
+        let pos = entries
+            .binary_search_by(|e| entry.total_us.cmp(&e.total_us))
+            .unwrap_or_else(|p| p);
+        if pos >= self.cap {
+            return; // slower entries already fill the ring
+        }
+        entries.insert(pos, entry);
+        entries.truncate(self.cap);
+    }
+
+    /// Copy out the current entries, slowest first.
+    pub fn dump(&self) -> Vec<SlowEntry> {
+        self.entries.lock().unwrap().clone()
+    }
+
+    /// True when nothing has ranked yet.
+    pub fn is_empty(&self) -> bool {
+        self.entries.lock().unwrap().is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_timer_measures_nonnegative() {
+        let t = StageTimer::start();
+        assert!(t.elapsed_us() < 60_000_000, "sane upper bound");
+    }
+
+    #[test]
+    fn sampler_rate_one_hits_every_request() {
+        let s = Sampler::new(1.0);
+        for _ in 0..10 {
+            assert!(s.hit());
+        }
+    }
+
+    #[test]
+    fn sampler_rate_zero_never_hits() {
+        let s = Sampler::new(0.0);
+        for _ in 0..10 {
+            assert!(!s.hit());
+        }
+        // Negative rates clamp to never, not panic.
+        assert!(!Sampler::new(-1.0).hit());
+    }
+
+    #[test]
+    fn sampler_fractional_rate_strides() {
+        let s = Sampler::new(0.25);
+        let hits = (0..100).filter(|_| s.hit()).count();
+        assert_eq!(hits, 25);
+    }
+
+    #[test]
+    fn slow_log_keeps_n_slowest_sorted() {
+        let log = SlowLog::new(3, 100);
+        for total_us in [150u64, 50, 400, 200, 300, 99] {
+            log.offer(SlowEntry { total_us, ..SlowEntry::default() });
+        }
+        let got: Vec<u64> = log.dump().iter().map(|e| e.total_us).collect();
+        // 50 and 99 were under threshold; 150 was pushed out by cap 3.
+        assert_eq!(got, vec![400, 300, 200]);
+    }
+
+    #[test]
+    fn slow_log_zero_cap_is_inert() {
+        let log = SlowLog::new(0, 0);
+        log.offer(SlowEntry { total_us: 1_000_000, ..SlowEntry::default() });
+        assert!(log.is_empty());
+    }
+
+    #[test]
+    fn slow_entry_line_is_structured() {
+        let e = SlowEntry {
+            total_us: 1234,
+            queue_us: 10,
+            candgen_us: 400,
+            rescore_us: 700,
+            cache_probe_us: 2,
+            kappa: 10,
+            candidates: 512,
+            work: WorkCounts { posting_lists: 8, packed_blocks: 4, dots_i8: 512, refines_f32: 40 },
+        };
+        let line = e.line();
+        for needle in [
+            "total=1234us",
+            "queue=10us",
+            "candgen=400us",
+            "rescore=700us",
+            "cache_probe=2us",
+            "kappa=10",
+            "candidates=512",
+            "postings=8",
+            "blocks=4",
+            "dots_i8=512",
+            "refines_f32=40",
+        ] {
+            assert!(line.contains(needle), "missing {needle} in {line}");
+        }
+    }
+}

@@ -258,6 +258,95 @@ fn metrics_account_for_connections_and_bytes() {
 }
 
 #[test]
+fn stats_verb_round_trips_a_populated_snapshot() {
+    let k = 4;
+    let (coord, server) = start(k, 128, 97);
+    let mut client = NetClient::connect(server.local_addr()).unwrap();
+
+    // mixed burst: queries exercise candgen/rescore, mutations exercise
+    // the ack path, everything exercises net decode/encode
+    for i in 0..12u32 {
+        client.query(&fix::user(k, 98 + u64::from(i)), 3).unwrap();
+        if i % 4 == 0 {
+            client.upsert(200 + i, &vec![0.5; k]).unwrap();
+            client.remove(200 + i).unwrap();
+        }
+    }
+
+    let j = client.stats().unwrap();
+    let req = j.get("requests").unwrap();
+    assert_eq!(req.get("completed").unwrap().as_usize().unwrap(), 12);
+    assert!(req.get("batches").unwrap().as_usize().unwrap() >= 1);
+
+    // every serving stage must have recorded spans after the burst
+    let stages = j.get("stages").unwrap();
+    for stage in ["candgen_us", "rescore_us", "net_decode_us", "net_encode_us"]
+    {
+        let count = stages
+            .get(stage)
+            .unwrap()
+            .get("count")
+            .unwrap()
+            .as_usize()
+            .unwrap();
+        assert!(count > 0, "stage {stage} recorded nothing");
+    }
+    assert!(
+        j.get("latency_us")
+            .unwrap()
+            .get("count")
+            .unwrap()
+            .as_usize()
+            .unwrap()
+            >= 12
+    );
+    let work = j.get("work").unwrap();
+    assert!(
+        work.get("posting_lists").unwrap().as_usize().unwrap() > 0,
+        "index traversal must tally posting lists"
+    );
+    assert!(
+        work.get("refines_f32").unwrap().as_usize().unwrap() > 0,
+        "rescore must tally f32 refinements"
+    );
+    // slow log is an array (default 10ms threshold: usually empty here)
+    let _ = j.get("slow").unwrap().as_arr().unwrap();
+
+    // raw adversarial forms of the stats verb
+    let resp = client.send_raw(br#"{"stats":true}"#).unwrap();
+    assert!(
+        resp.starts_with(b"{\"requests\":"),
+        "stats response must open with the requests section: {}",
+        String::from_utf8_lossy(&resp)
+    );
+    for bad in
+        [&br#"{"stats":false}"#[..], br#"{"stats":true,"kappa":1}"#]
+    {
+        let resp = client.send_raw(bad).unwrap();
+        assert!(
+            resp.starts_with(b"{\"error\":"),
+            "{} must be rejected",
+            String::from_utf8_lossy(bad)
+        );
+    }
+
+    // the stats round trip itself does not inflate request counters
+    let j2 = client.stats().unwrap();
+    assert_eq!(
+        j2.get("requests")
+            .unwrap()
+            .get("completed")
+            .unwrap()
+            .as_usize()
+            .unwrap(),
+        12,
+        "stats must not count as a served query"
+    );
+    drop(client);
+    stop(coord, server);
+}
+
+#[test]
 fn shutdown_disconnects_idle_clients() {
     let (coord, server) = start(4, 64, 95);
     let mut client = NetClient::connect(server.local_addr()).unwrap();
