@@ -23,7 +23,7 @@
 //! cargo run --release --example loadgen -- --connect 127.0.0.1:7070
 //! ```
 
-use geomap::configx::{Backend, Cli, SchemaConfig, ServeConfig};
+use geomap::configx::{AuditConfig, Backend, Cli, SchemaConfig, ServeConfig};
 use geomap::coordinator::Coordinator;
 use geomap::net::{NetClient, NetServer};
 use geomap::obs::Histogram;
@@ -66,6 +66,12 @@ fn main() -> anyhow::Result<()> {
             "issue {\"stats\":true} after the run and fail on a malformed \
              or under-populated snapshot (docs/OBSERVABILITY.md)",
         )
+        .flag(
+            "audit",
+            "self-host mode: shadow-rescore every served query on the \
+             audit thread; with --stats, fail unless the quality and \
+             health sections populated",
+        )
         .parse_from(&args)?;
 
     let k = cli.get_usize("k")?;
@@ -92,6 +98,10 @@ fn main() -> anyhow::Result<()> {
             use_xla: false,
             threshold: if k >= 32 { 1.5 } else { 1.3 },
             backend: Backend::Geomap,
+            audit: AuditConfig {
+                sample: if cli.is_set("audit") { 1.0 } else { 0.0 },
+                ..AuditConfig::default()
+            },
             ..ServeConfig::default()
         };
         let coord = Arc::new(Coordinator::start(
@@ -258,7 +268,8 @@ fn main() -> anyhow::Result<()> {
 
     let mut failed = client_errors > 0;
     if cli.is_set("stats") {
-        match check_stats(addr, queries.load(Ordering::Relaxed)) {
+        let audited = self_host && cli.is_set("audit");
+        match check_stats(addr, queries.load(Ordering::Relaxed), audited) {
             Ok(()) => println!("stats snapshot validated ✓"),
             Err(e) => {
                 eprintln!("FAIL: stats snapshot: {e}");
@@ -304,7 +315,13 @@ fn main() -> anyhow::Result<()> {
 /// Post-run `{"stats":true}` validation: every section of the documented
 /// grammar must be present (the client checks that) and the serving-stage
 /// histograms must have absorbed the traffic this process just drove.
-fn check_stats(addr: std::net::SocketAddr, queries: u64) -> anyhow::Result<()> {
+/// With `audit` on, the quality and health sections must be populated —
+/// the audit thread ran beside this very workload.
+fn check_stats(
+    addr: std::net::SocketAddr,
+    queries: u64,
+    audit: bool,
+) -> anyhow::Result<()> {
     let mut client = NetClient::connect(addr)?;
     let j = client.stats()?;
     let completed = j.get("requests")?.get("completed")?.as_usize()? as u64;
@@ -328,6 +345,25 @@ fn check_stats(addr: std::net::SocketAddr, queries: u64) -> anyhow::Result<()> {
             let n = j.get("work")?.get(counter)?.as_usize()?;
             anyhow::ensure!(n > 0, "work counter '{counter}' is zero");
         }
+    }
+    if audit && queries > 0 {
+        let q = j.get("quality")?;
+        let samples = q.get("samples")?.as_usize()?;
+        anyhow::ensure!(samples > 0, "quality.samples is zero with --audit");
+        let ewma = q.get("recall_ewma")?.as_f64()?;
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&ewma) && ewma > 0.0,
+            "recall EWMA {ewma} is not a plausible recall"
+        );
+        let h = j.get("health")?;
+        anyhow::ensure!(
+            h.get("version")?.as_usize()? > 0,
+            "health gauges were never recomputed"
+        );
+        anyhow::ensure!(
+            h.get("occupancy_max")?.as_usize()? > 0,
+            "health occupancy gauges are empty on a built index"
+        );
     }
     Ok(())
 }

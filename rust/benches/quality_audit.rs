@@ -1,0 +1,256 @@
+//! Quality-audit overhead and agreement: audit on vs off on the
+//! net-path workload (`docs/OBSERVABILITY.md` §Quality audit).
+//!
+//! The auditor promises to stay off the serving path: the submit-side
+//! cost is one stride check, and a sampled query only pays a clone +
+//! `try_send` (a full queue sheds the sample, never blocking the
+//! dispatcher). This bench holds it to that, and cross-checks the
+//! *measured* recall against the offline quant-tier gate. Two identical
+//! self-hosted serving stacks run the same mixed read/mutate Zipf
+//! workload over loopback:
+//!
+//! * **pass A** — `audit.sample = 0` (no query is ever cloned),
+//! * **pass B** — `audit.sample = 1`: every served query offered to the
+//!   audit thread, the most expensive configuration the auditor has.
+//!
+//! The stack serves one-hot `int8+packed` at threshold 0 — the same
+//! compressed tier `quant_tier` gates at recall@10 ≥ 0.99, with the
+//! prune made lossless so the audited recall isolates quantization
+//! loss exactly like the offline metric does (which compares against
+//! exact rescoring over the *same* candidates).
+//!
+//! Acceptance, judged at the default profile:
+//!
+//! * pass B sustains **≥ 0.95×** pass A's throughput, and
+//! * pass B's recall EWMA (scraped from `{"stats":true}`) is ≥ 0.99 —
+//!   the online auditor agrees with the offline quant-tier gate on the
+//!   same configuration.
+//!
+//! ```bash
+//! cargo bench --bench quality_audit
+//! GEOMAP_BENCH_FAST=1 cargo bench --bench quality_audit
+//! ```
+
+mod common;
+
+use geomap::configx::{
+    AuditConfig, Backend, PostingsMode, QuantMode, SchemaConfig, ServeConfig,
+};
+use geomap::coordinator::Coordinator;
+use geomap::net::{NetClient, NetServer};
+use geomap::rng::{Rng, Zipf};
+use geomap::runtime::cpu_scorer_factory;
+use geomap::testing::fix;
+use std::sync::Arc;
+use std::time::Instant;
+
+struct Workload {
+    items: usize,
+    k: usize,
+    pool: usize,
+    requests: usize,
+    clients: usize,
+}
+
+fn workload() -> Workload {
+    if common::fast() {
+        Workload { items: 512, k: 16, pool: 128, requests: 2_048, clients: 4 }
+    } else {
+        Workload { items: 4096, k: 32, pool: 512, requests: 16_384, clients: 4 }
+    }
+}
+
+fn serve_cfg(w: &Workload, audit: AuditConfig) -> ServeConfig {
+    ServeConfig {
+        k: w.k,
+        kappa: 10,
+        // one-hot + int8+packed is the compressed tier quant_tier gates;
+        // threshold 0 makes the prune lossless, so the audited recall
+        // measures quantization loss alone (see the module doc)
+        schema: SchemaConfig::TernaryOneHot,
+        threshold: 0.0,
+        quant: QuantMode::Int8 { refine: 4 },
+        postings: PostingsMode::Packed,
+        max_batch: 32,
+        max_wait_us: 200,
+        shards: 2,
+        queue_cap: 8192,
+        use_xla: false,
+        backend: Backend::Geomap,
+        audit,
+        ..ServeConfig::default()
+    }
+}
+
+/// Drive the mixed workload over loopback: one connection per client
+/// thread, every 8th request a mutation (3:1 upsert:remove), queries
+/// Zipf-skewed like real traffic.
+fn drive(
+    addr: std::net::SocketAddr,
+    users: &geomap::linalg::Matrix,
+    w: &Workload,
+) -> f64 {
+    let zipf = Zipf::new(users.rows(), 1.05);
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for c in 0..w.clients {
+            let zipf = zipf.clone();
+            scope.spawn(move || {
+                let mut client =
+                    NetClient::connect(addr).expect("connect to front-end");
+                let mut rng = Rng::seeded(0x5EED + c as u64);
+                for i in 0..w.requests / w.clients {
+                    if i % 8 == 7 {
+                        let id = rng.below(w.items) as u32;
+                        if i % 32 == 31 {
+                            client.remove(id).expect("remove over the wire");
+                        } else {
+                            let f = vec![0.25; w.k];
+                            client
+                                .upsert(id, &f)
+                                .expect("upsert over the wire");
+                        }
+                        continue;
+                    }
+                    let u = users.row(zipf.sample(&mut rng));
+                    let line =
+                        client.query_raw(u, 10).expect("network request");
+                    assert!(
+                        !line.starts_with(b"{\"error"),
+                        "server error on well-formed query: {}",
+                        String::from_utf8_lossy(line)
+                    );
+                }
+            });
+        }
+    });
+    let served = (w.requests / w.clients * w.clients) as f64;
+    served / t0.elapsed().as_secs_f64()
+}
+
+/// One serving stack with the given audit config: start, drive, scrape
+/// the quality section if asked, shut down; returns (req/s, recall EWMA).
+fn run_pass(
+    label: &str,
+    audit: AuditConfig,
+    w: &Workload,
+    items: &geomap::linalg::Matrix,
+    users: &geomap::linalg::Matrix,
+    read_quality: bool,
+) -> (f64, Option<f64>) {
+    let coord = Arc::new(
+        Coordinator::start(
+            serve_cfg(w, audit),
+            items.clone(),
+            cpu_scorer_factory(),
+        )
+        .expect("coordinator"),
+    );
+    let server = NetServer::start(Arc::clone(&coord), "127.0.0.1:0")
+        .expect("net front-end");
+    let rps = drive(server.local_addr(), users, w);
+    println!("{label}: {rps:>10.0} req/s");
+    let recall = read_quality.then(|| check_quality(server.local_addr()));
+    server.shutdown();
+    Arc::try_unwrap(coord).ok().map(Coordinator::shutdown);
+    (rps, recall)
+}
+
+/// Scrape `{"stats":true}` after the audited burst: the quality section
+/// must have absorbed samples and the health gauges must be populated.
+/// Returns the recall EWMA.
+fn check_quality(addr: std::net::SocketAddr) -> f64 {
+    let mut client = NetClient::connect(addr).expect("stats connection");
+    let j = client.stats().expect("stats round trip");
+    let q = j.get("quality").expect("quality section");
+    let samples = q
+        .get("samples")
+        .and_then(|v| v.as_usize())
+        .expect("quality.samples");
+    assert!(samples > 0, "sample 1.0 must audit at least one query");
+    let shed = q
+        .get("shed")
+        .and_then(|v| v.as_usize())
+        .expect("quality.shed");
+    let ewma = q
+        .get("recall_ewma")
+        .and_then(|v| v.as_f64())
+        .expect("quality.recall_ewma");
+    let worst = q
+        .get("worst_recall")
+        .and_then(|v| v.as_f64())
+        .expect("quality.worst_recall");
+    let h = j.get("health").expect("health section");
+    assert!(
+        h.get("version").and_then(|v| v.as_usize()).expect("version") > 0,
+        "health gauges never recomputed under mutating traffic"
+    );
+    assert!(
+        h.get("occupancy_max").and_then(|v| v.as_usize()).expect("occ") > 0,
+        "occupancy gauges empty on a built one-hot index"
+    );
+    println!(
+        "quality: {samples} audited ({shed} shed), recall ewma {ewma:.4} \
+         (worst {worst:.4}); health gauges populated ✓"
+    );
+    ewma
+}
+
+fn main() {
+    let w = workload();
+    let items = fix::items(w.items, w.k, 42);
+    let users = fix::users(w.pool, w.k, 43);
+    println!(
+        "== quality audit: {} items, k={}, one-hot int8+packed \
+         (threshold 0), pool {} users, Zipf(1.05), {} requests × {} \
+         clients, 1/8 mutations ==",
+        w.items, w.k, w.pool, w.requests, w.clients
+    );
+
+    let (baseline, _) = run_pass(
+        "audit off (sample 0.0)",
+        AuditConfig::default(),
+        &w,
+        &items,
+        &users,
+        false,
+    );
+    let (audited, recall) = run_pass(
+        "audit full (sample 1.0)",
+        AuditConfig { sample: 1.0, ..AuditConfig::default() },
+        &w,
+        &items,
+        &users,
+        true,
+    );
+    let recall = recall.expect("pass B reads the quality section");
+
+    let ratio = audited / baseline.max(1e-9);
+    println!("full audit sustains {:.1}% of baseline", ratio * 100.0);
+    if common::fast() {
+        println!("\nfast profile: measurements reported, gates not judged");
+        return;
+    }
+    let mut failed = false;
+    if ratio < 0.95 {
+        eprintln!(
+            "QUALITY AUDIT TARGET MISSED: full audit at {ratio:.3}x \
+             baseline, below the 0.95x bound"
+        );
+        failed = true;
+    }
+    if recall < 0.99 {
+        eprintln!(
+            "QUALITY AUDIT TARGET MISSED: recall ewma {recall:.4} below \
+             the 0.99 the offline quant-tier gate holds on this config"
+        );
+        failed = true;
+    }
+    if failed {
+        std::process::exit(1);
+    }
+    println!(
+        "\nquality audit targets met: ≥ 0.95x audit-off throughput, \
+         recall ewma ≥ 0.99 agreeing with the offline quant-tier gate"
+    );
+}

@@ -506,6 +506,48 @@ impl Default for ObsConfig {
     }
 }
 
+/// Shadow-rescore quality-audit policy (see `docs/OBSERVABILITY.md`
+/// §Quality audit). JSON form is a nested `"audit"` object
+/// (`{"audit": {"sample": 0.01, "k": 10, "half_life": 64}}`); CLI flags
+/// are `--audit-sample`, `--audit-k`, `--audit-half-life`, and
+/// `--recall-floor`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AuditConfig {
+    /// Fraction of batch-path queries shadow-rescored against an exact
+    /// brute-force scan, in `[0, 1]`; `0` disables query auditing (the
+    /// audit thread still maintains the index-health gauges).
+    pub sample: f64,
+    /// Recall depth: served vs exact top-k agreement is judged at
+    /// `min(k, request κ)`.
+    pub k: usize,
+    /// Recall-EWMA half-life in samples: after this many audited
+    /// queries, an older observation's weight has decayed to one half.
+    pub half_life: f64,
+    /// WARN through the leveled logger when the recall EWMA crosses
+    /// below this floor (`0` disables alerting). Edge-triggered: one
+    /// warning per excursion, one recovery line when it climbs back.
+    pub recall_floor: f64,
+    /// Worst-recall ring capacity: the N lowest-recall audited queries
+    /// retained (`0` disables the ring).
+    pub worst_log: usize,
+    /// Bounded audit-queue depth; a full queue sheds samples instead of
+    /// ever blocking the dispatcher.
+    pub queue: usize,
+}
+
+impl Default for AuditConfig {
+    fn default() -> Self {
+        AuditConfig {
+            sample: 0.0,
+            k: 10,
+            half_life: 64.0,
+            recall_floor: 0.0,
+            worst_log: 16,
+            queue: 64,
+        }
+    }
+}
+
 /// Coordinator serving configuration.
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
@@ -563,6 +605,11 @@ pub struct ServeConfig {
     /// `--trace-sample`/`--slow-us`/`--slow-log`) — see
     /// `docs/OBSERVABILITY.md`.
     pub obs: ObsConfig,
+    /// Shadow-rescore quality audit + index-health gauges (JSON
+    /// `"audit": {…}`, CLI `--audit-sample`/`--audit-k`/
+    /// `--audit-half-life`/`--recall-floor`) — see `docs/OBSERVABILITY.md`
+    /// §Quality audit.
+    pub audit: AuditConfig,
 }
 
 /// Parse an `on`/`off` toggle (the `batch_prune` knob's CLI/JSON form).
@@ -598,6 +645,7 @@ impl Default for ServeConfig {
             cache: CacheMode::Off,
             net: NetMode::Off,
             obs: ObsConfig::default(),
+            audit: AuditConfig::default(),
         }
     }
 }
@@ -648,6 +696,31 @@ impl ServeConfig {
             return Err(GeomapError::Config(format!(
                 "obs.sample (--trace-sample) must be in [0, 1], got {}",
                 self.obs.sample
+            )));
+        }
+        if !(0.0..=1.0).contains(&self.audit.sample) {
+            return Err(GeomapError::Config(format!(
+                "audit.sample (--audit-sample) must be in [0, 1], got {}",
+                self.audit.sample
+            )));
+        }
+        if self.audit.k == 0 {
+            return Err(GeomapError::Config(
+                "audit.k (--audit-k) must be >= 1".into(),
+            ));
+        }
+        if self.audit.half_life <= 0.0 || !self.audit.half_life.is_finite() {
+            return Err(GeomapError::Config(format!(
+                "audit.half_life (--audit-half-life) must be a positive \
+                 finite sample count, got {}",
+                self.audit.half_life
+            )));
+        }
+        if !(0.0..=1.0).contains(&self.audit.recall_floor) {
+            return Err(GeomapError::Config(format!(
+                "audit.recall_floor (--recall-floor) must be in [0, 1], \
+                 got {}",
+                self.audit.recall_floor
             )));
         }
         if let Some(ck) = self.checkpoint.take() {
@@ -719,6 +792,26 @@ impl ServeConfig {
             }
             if let Some(v) = o.opt("slow_log") {
                 c.obs.slow_log = v.as_usize()?;
+            }
+        }
+        if let Some(a) = j.opt("audit") {
+            if let Some(v) = a.opt("sample") {
+                c.audit.sample = v.as_f64()?;
+            }
+            if let Some(v) = a.opt("k") {
+                c.audit.k = v.as_usize()?;
+            }
+            if let Some(v) = a.opt("half_life") {
+                c.audit.half_life = v.as_f64()?;
+            }
+            if let Some(v) = a.opt("recall_floor") {
+                c.audit.recall_floor = v.as_f64()?;
+            }
+            if let Some(v) = a.opt("worst_log") {
+                c.audit.worst_log = v.as_usize()?;
+            }
+            if let Some(v) = a.opt("queue") {
+                c.audit.queue = v.as_usize()?;
             }
         }
         if let Some(v) = j.opt("checkpoint_dir") {
@@ -837,6 +930,62 @@ mod tests {
             assert!(err.contains("trace-sample"), "{err}");
         }
         let j = Json::parse(r#"{"obs": {"sample": 2}}"#).unwrap();
+        assert!(ServeConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn audit_defaults_and_json_block() {
+        let c = ServeConfig::default();
+        assert_eq!(c.audit, AuditConfig::default());
+        assert_eq!(c.audit.sample, 0.0, "audit is opt-in");
+        let j = Json::parse(
+            r#"{"audit": {"sample": 0.05, "k": 20, "half_life": 128,
+                "recall_floor": 0.95, "worst_log": 8, "queue": 32}}"#,
+        )
+        .unwrap();
+        let c = ServeConfig::from_json(&j).unwrap();
+        assert_eq!(
+            c.audit,
+            AuditConfig {
+                sample: 0.05,
+                k: 20,
+                half_life: 128.0,
+                recall_floor: 0.95,
+                worst_log: 8,
+                queue: 32,
+            }
+        );
+        // partial block keeps the other defaults
+        let j = Json::parse(r#"{"audit": {"sample": 1}}"#).unwrap();
+        let c = ServeConfig::from_json(&j).unwrap();
+        assert_eq!(c.audit, AuditConfig { sample: 1.0, ..AuditConfig::default() });
+    }
+
+    #[test]
+    fn audit_knobs_out_of_range_rejected() {
+        for sample in [-0.5, 1.01, f64::NAN] {
+            let mut c = ServeConfig::default();
+            c.audit.sample = sample;
+            let err = c.validated().unwrap_err().to_string();
+            assert!(err.contains("audit-sample"), "{err}");
+        }
+        let mut c = ServeConfig::default();
+        c.audit.k = 0;
+        let err = c.validated().unwrap_err().to_string();
+        assert!(err.contains("audit-k"), "{err}");
+        for hl in [0.0, -3.0, f64::NAN, f64::INFINITY] {
+            let mut c = ServeConfig::default();
+            c.audit.half_life = hl;
+            let err = c.validated().unwrap_err().to_string();
+            assert!(err.contains("audit-half-life"), "{err}");
+        }
+        for floor in [-0.1, 1.5] {
+            let mut c = ServeConfig::default();
+            c.audit.recall_floor = floor;
+            let err = c.validated().unwrap_err().to_string();
+            assert!(err.contains("recall-floor"), "{err}");
+        }
+        let j = Json::parse(r#"{"audit": {"sample": 2}}"#).unwrap();
         assert!(ServeConfig::from_json(&j).is_err());
     }
 

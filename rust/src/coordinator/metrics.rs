@@ -73,6 +73,35 @@ pub struct ServeMetrics {
     pub work_dots_i8: AtomicU64,
     /// Exact f32 inner products computed.
     pub work_refines_f32: AtomicU64,
+    /// Queries shadow-rescored by the quality auditor.
+    pub audit_samples: AtomicU64,
+    /// Sampled queries shed because the audit queue was full.
+    pub audit_shed: AtomicU64,
+    /// Recall@k EWMA over audited queries (f64 bits; the audit thread is
+    /// the single writer of every `*_bits`/gauge field below, so plain
+    /// relaxed stores suffice — readers reassemble with `f64::from_bits`).
+    pub audit_recall_ewma_bits: AtomicU64,
+    /// Lowest recall@k seen on any audited query (f64 bits).
+    pub audit_worst_recall_bits: AtomicU64,
+    /// Largest |served − exact| score error seen (f64 bits).
+    pub audit_max_score_err_bits: AtomicU64,
+    /// Largest rank displacement seen on any audited query.
+    pub audit_worst_disp: AtomicU64,
+    /// Catalogue version the health gauges were last computed at
+    /// (0 = never computed).
+    pub health_version: AtomicU64,
+    /// Longest posting list across shards.
+    pub health_occ_max: AtomicU64,
+    /// Mean posting length over nonempty dimensions (f64 bits).
+    pub health_occ_mean_bits: AtomicU64,
+    /// Gini coefficient of posting lengths (f64 bits).
+    pub health_occ_gini_bits: AtomicU64,
+    /// Delta-segment fraction of the id space (f64 bits).
+    pub health_delta_frac_bits: AtomicU64,
+    /// Tombstoned fraction of the id space (f64 bits).
+    pub health_tombstone_frac_bits: AtomicU64,
+    /// Quant scale dispersion `(max−min)/mean` over live rows (f64 bits).
+    pub health_scale_drift_bits: AtomicU64,
 }
 
 impl ServeMetrics {
@@ -124,6 +153,9 @@ impl ServeMetrics {
     /// connection, byte, and rejection counters. A `stages:` block lists
     /// one quantile line per pipeline stage that actually ran, and a
     /// `work:` line totals the physical-work counters when any were fed.
+    /// A `quality:` line summarises the shadow-rescore audit once a query
+    /// has been audited, and a `health:` line the index gauges once they
+    /// have been computed.
     pub fn report(&self) -> String {
         let acc = self.accepted.load(Ordering::Relaxed);
         let rej = self.rejected.load(Ordering::Relaxed);
@@ -190,6 +222,39 @@ impl ServeMetrics {
         } else {
             String::new()
         };
+        let audited = self.audit_samples.load(Ordering::Relaxed);
+        let quality = if audited > 0 {
+            let f = |bits: &AtomicU64| f64::from_bits(bits.load(Ordering::Relaxed));
+            format!(
+                "\nquality:  recall ewma {:.4} (worst {:.4}) over {} audited \
+                 ({} shed), max |Δscore| {:.6}, worst displacement {}",
+                f(&self.audit_recall_ewma_bits),
+                f(&self.audit_worst_recall_bits),
+                audited,
+                self.audit_shed.load(Ordering::Relaxed),
+                f(&self.audit_max_score_err_bits),
+                self.audit_worst_disp.load(Ordering::Relaxed),
+            )
+        } else {
+            String::new()
+        };
+        let health = if self.health_version.load(Ordering::Acquire) > 0 {
+            let f = |bits: &AtomicU64| f64::from_bits(bits.load(Ordering::Relaxed));
+            format!(
+                "\nhealth:   occupancy max {} / mean {:.1} (gini {:.4}); \
+                 delta {:.2}%, tombstones {:.2}%; scale drift {:.4} \
+                 (catalogue v{})",
+                self.health_occ_max.load(Ordering::Relaxed),
+                f(&self.health_occ_mean_bits),
+                f(&self.health_occ_gini_bits),
+                f(&self.health_delta_frac_bits) * 100.0,
+                f(&self.health_tombstone_frac_bits) * 100.0,
+                f(&self.health_scale_drift_bits),
+                self.health_version.load(Ordering::Relaxed),
+            )
+        } else {
+            String::new()
+        };
         format!(
             "requests: accepted {acc}, rejected {rej}, completed {done}\n\
              batches:  {batches} (size {})\n\
@@ -197,7 +262,7 @@ impl ServeMetrics {
              queueing: {}\n\
              pruning:  {} candidates\n\
              discard:  p50 {:.1}% p95 {:.1}% p99 {:.1}%; mean {:.1}% → \
-             {:.2}x speed-up{stages}{work}{cache}{net}",
+             {:.2}x speed-up{stages}{work}{quality}{health}{cache}{net}",
             self.batch_size.summary_with_unit(""),
             self.latency_us.summary(),
             self.queue_wait_us.summary(),
@@ -241,6 +306,35 @@ impl ServeMetrics {
             work_packed_blocks: self.work_packed_blocks.load(Ordering::Relaxed),
             work_dots_i8: self.work_dots_i8.load(Ordering::Relaxed),
             work_refines_f32: self.work_refines_f32.load(Ordering::Relaxed),
+            audit_samples: self.audit_samples.load(Ordering::Acquire),
+            audit_shed: self.audit_shed.load(Ordering::Relaxed),
+            recall_ewma: f64::from_bits(
+                self.audit_recall_ewma_bits.load(Ordering::Relaxed),
+            ),
+            worst_recall: f64::from_bits(
+                self.audit_worst_recall_bits.load(Ordering::Relaxed),
+            ),
+            max_score_err: f64::from_bits(
+                self.audit_max_score_err_bits.load(Ordering::Relaxed),
+            ),
+            worst_rank_disp: self.audit_worst_disp.load(Ordering::Relaxed),
+            health_version: self.health_version.load(Ordering::Acquire),
+            occ_max: self.health_occ_max.load(Ordering::Relaxed),
+            occ_mean: f64::from_bits(
+                self.health_occ_mean_bits.load(Ordering::Relaxed),
+            ),
+            occ_gini: f64::from_bits(
+                self.health_occ_gini_bits.load(Ordering::Relaxed),
+            ),
+            delta_frac: f64::from_bits(
+                self.health_delta_frac_bits.load(Ordering::Relaxed),
+            ),
+            tombstone_frac: f64::from_bits(
+                self.health_tombstone_frac_bits.load(Ordering::Relaxed),
+            ),
+            scale_drift: f64::from_bits(
+                self.health_scale_drift_bits.load(Ordering::Relaxed),
+            ),
             latency_us: self.latency_us.snapshot(),
             queue_wait_us: self.queue_wait_us.snapshot(),
             batch_size: self.batch_size.snapshot(),
@@ -298,6 +392,33 @@ pub struct MetricsSnapshot {
     pub work_dots_i8: u64,
     /// Exact f32 inner products computed.
     pub work_refines_f32: u64,
+    /// Queries shadow-rescored by the quality auditor (counter).
+    pub audit_samples: u64,
+    /// Sampled queries shed by the full audit queue (counter).
+    pub audit_shed: u64,
+    /// Recall@k EWMA over audited queries (gauge; meaningless until
+    /// `audit_samples > 0`).
+    pub recall_ewma: f64,
+    /// Lowest recall@k seen on any audited query (gauge).
+    pub worst_recall: f64,
+    /// Largest |served − exact| score error seen (gauge).
+    pub max_score_err: f64,
+    /// Largest rank displacement seen (gauge).
+    pub worst_rank_disp: u64,
+    /// Catalogue version of the health gauges (gauge; 0 = never).
+    pub health_version: u64,
+    /// Longest posting list across shards (gauge).
+    pub occ_max: u64,
+    /// Mean posting length over nonempty dimensions (gauge).
+    pub occ_mean: f64,
+    /// Gini coefficient of posting lengths (gauge).
+    pub occ_gini: f64,
+    /// Delta-segment fraction of the id space (gauge).
+    pub delta_frac: f64,
+    /// Tombstoned fraction of the id space (gauge).
+    pub tombstone_frac: f64,
+    /// Quant scale dispersion over live rows (gauge).
+    pub scale_drift: f64,
     /// End-to-end latency (µs).
     pub latency_us: HistogramSnapshot,
     /// Admission-queue wait (µs).
@@ -327,7 +448,11 @@ impl MetricsSnapshot {
     /// counter reset yields zeros instead of wrapping). Histogram deltas
     /// follow [`HistogramSnapshot::saturating_sub`] — in particular the
     /// interval `max` is the cumulative upper bound, not the true
-    /// interval max.
+    /// interval max. Gauge fields (recall EWMA, worst recall, score
+    /// error, rank displacement, and the whole health block) are not
+    /// interval quantities: the delta carries the *later* snapshot's
+    /// value unchanged, so an epoch bump mid-window surfaces the
+    /// post-bump gauges rather than a meaningless difference.
     pub fn delta(&self, earlier: &MetricsSnapshot) -> MetricsSnapshot {
         MetricsSnapshot {
             accepted: self.accepted.saturating_sub(earlier.accepted),
@@ -348,6 +473,19 @@ impl MetricsSnapshot {
             work_packed_blocks: self.work_packed_blocks.saturating_sub(earlier.work_packed_blocks),
             work_dots_i8: self.work_dots_i8.saturating_sub(earlier.work_dots_i8),
             work_refines_f32: self.work_refines_f32.saturating_sub(earlier.work_refines_f32),
+            audit_samples: self.audit_samples.saturating_sub(earlier.audit_samples),
+            audit_shed: self.audit_shed.saturating_sub(earlier.audit_shed),
+            recall_ewma: self.recall_ewma,
+            worst_recall: self.worst_recall,
+            max_score_err: self.max_score_err,
+            worst_rank_disp: self.worst_rank_disp,
+            health_version: self.health_version,
+            occ_max: self.occ_max,
+            occ_mean: self.occ_mean,
+            occ_gini: self.occ_gini,
+            delta_frac: self.delta_frac,
+            tombstone_frac: self.tombstone_frac,
+            scale_drift: self.scale_drift,
             latency_us: self.latency_us.saturating_sub(&earlier.latency_us),
             queue_wait_us: self.queue_wait_us.saturating_sub(&earlier.queue_wait_us),
             batch_size: self.batch_size.saturating_sub(&earlier.batch_size),
@@ -389,9 +527,17 @@ impl MetricsSnapshot {
         } else {
             String::new()
         };
+        let quality = if self.audit_samples > 0 {
+            format!(
+                ", recall ewma {:.4} ({} audited)",
+                self.recall_ewma, self.audit_samples
+            )
+        } else {
+            String::new()
+        };
         format!(
             "{:.0} req/s ({} completed, {} rejected in {:.1}s), \
-             latency p50 {p50}us p95 {p95}us p99 {p99}us{cache}",
+             latency p50 {p50}us p95 {p95}us p99 {p99}us{cache}{quality}",
             self.completed as f64 / secs,
             self.completed,
             self.rejected,
@@ -618,6 +764,77 @@ mod tests {
         // Interval quantiles come from the delta buckets, not cumulative.
         let (p50, _, _) = d.latency_us.percentiles();
         assert!(p50 < 1_000, "the 1000us pre-sample must not dominate: {p50}");
+    }
+
+    #[test]
+    fn snapshot_delta_carries_gauges_across_epoch_bump() {
+        let m = ServeMetrics::new();
+        // window opens: 2 audited queries, health computed at version 3
+        m.audit_samples.fetch_add(2, Ordering::Relaxed);
+        m.audit_recall_ewma_bits.store(0.97f64.to_bits(), Ordering::Relaxed);
+        m.audit_worst_recall_bits.store(0.90f64.to_bits(), Ordering::Relaxed);
+        m.health_version.store(3, Ordering::Relaxed);
+        m.health_occ_max.store(40, Ordering::Relaxed);
+        m.health_delta_frac_bits.store(0.05f64.to_bits(), Ordering::Relaxed);
+        let start = m.snapshot();
+        // mid-window: more audits land, an epoch bump recomputes health
+        m.audit_samples.fetch_add(3, Ordering::Relaxed);
+        m.audit_shed.fetch_add(1, Ordering::Relaxed);
+        m.audit_recall_ewma_bits.store(0.99f64.to_bits(), Ordering::Relaxed);
+        m.audit_worst_recall_bits.store(0.85f64.to_bits(), Ordering::Relaxed);
+        m.audit_worst_disp.store(4, Ordering::Relaxed);
+        m.health_version.store(7, Ordering::Relaxed);
+        m.health_occ_max.store(55, Ordering::Relaxed);
+        m.health_delta_frac_bits.store(0.0f64.to_bits(), Ordering::Relaxed);
+        let d = m.snapshot().delta(&start);
+        // counters are interval quantities
+        assert_eq!(d.audit_samples, 3, "2 pre-window audits subtracted");
+        assert_eq!(d.audit_shed, 1);
+        // gauges carry the later snapshot's value, never a difference
+        assert_eq!(d.recall_ewma, 0.99);
+        assert_eq!(d.worst_recall, 0.85);
+        assert_eq!(d.worst_rank_disp, 4);
+        assert_eq!(d.health_version, 7, "post-bump version, not 7−3");
+        assert_eq!(d.occ_max, 55);
+        assert_eq!(d.delta_frac, 0.0, "merge mid-window → post-merge gauge");
+        // the interval rendering surfaces the audit state
+        let line = d.rate_report(1.0);
+        assert!(line.contains("recall ewma 0.9900"), "{line}");
+        assert!(line.contains("3 audited"), "{line}");
+        // a window with no audited queries stays byte-identical to PR 7
+        let quiet = ServeMetrics::new();
+        let q = quiet.snapshot().delta(&quiet.snapshot());
+        assert!(!q.rate_report(1.0).contains("recall"), "audit-off unchanged");
+    }
+
+    #[test]
+    fn report_includes_quality_and_health_only_when_fed() {
+        let m = ServeMetrics::new();
+        m.latency_us.record(50);
+        let r = m.report();
+        assert!(!r.contains("quality:"), "no audits → no quality line: {r}");
+        assert!(!r.contains("health:"), "no gauges → no health line: {r}");
+        m.audit_samples.fetch_add(5, Ordering::Relaxed);
+        m.audit_recall_ewma_bits.store(0.995f64.to_bits(), Ordering::Relaxed);
+        m.audit_worst_recall_bits.store(0.9f64.to_bits(), Ordering::Relaxed);
+        m.audit_max_score_err_bits.store(0.0125f64.to_bits(), Ordering::Relaxed);
+        m.audit_worst_disp.store(2, Ordering::Relaxed);
+        m.health_version.store(4, Ordering::Relaxed);
+        m.health_occ_max.store(33, Ordering::Relaxed);
+        m.health_occ_mean_bits.store(8.5f64.to_bits(), Ordering::Relaxed);
+        m.health_occ_gini_bits.store(0.31f64.to_bits(), Ordering::Relaxed);
+        m.health_tombstone_frac_bits.store(0.02f64.to_bits(), Ordering::Relaxed);
+        let r = m.report();
+        assert!(r.contains("quality:"), "{r}");
+        assert!(r.contains("recall ewma 0.9950"), "{r}");
+        assert!(r.contains("worst 0.9000"), "{r}");
+        assert!(r.contains("5 audited"), "{r}");
+        assert!(r.contains("worst displacement 2"), "{r}");
+        assert!(r.contains("health:"), "{r}");
+        assert!(r.contains("occupancy max 33 / mean 8.5"), "{r}");
+        assert!(r.contains("gini 0.3100"), "{r}");
+        assert!(r.contains("tombstones 2.00%"), "{r}");
+        assert!(r.contains("catalogue v4"), "{r}");
     }
 
     #[test]

@@ -27,7 +27,10 @@ use crate::configx::{CacheMode, ServeConfig};
 use crate::engine::{explicit, Engine};
 use crate::error::{GeomapError, Result};
 use crate::linalg::Matrix;
-use crate::obs::{Logger, Sampler, SlowEntry, SlowLog, StageTimer, WorkCounts};
+use crate::obs::{
+    AuditEntry, Auditor, Logger, Sampler, SlowEntry, SlowLog, StageTimer,
+    WorkCounts,
+};
 use crate::retrieval::Scored;
 use crate::runtime::ScorerFactory;
 use crate::snapshot::Checkpointer;
@@ -106,6 +109,11 @@ pub struct Coordinator {
     spec_digest: u64,
     /// Request sampler + slow-query log (`ServeConfig::obs`).
     obs: Arc<ObsState>,
+    /// Shadow-rescore quality auditor + index-health recomputation
+    /// (`ServeConfig::audit`, see `docs/OBSERVABILITY.md` §Quality audit).
+    /// Always present: with sampling off it still keeps the health gauges
+    /// current across epoch bumps.
+    audit: Arc<Auditor>,
 }
 
 impl Coordinator {
@@ -254,6 +262,12 @@ impl Coordinator {
             slow: SlowLog::new(cfg.obs.slow_log, cfg.obs.slow_us),
         });
 
+        // quality auditor + health recomputation thread; seed the health
+        // gauges from the startup catalogue so the `health` stats section
+        // populates before the first batch (and without any traffic)
+        let audit = Arc::new(Auditor::start(cfg.audit, Arc::clone(&metrics)));
+        audit.observe_version(&store.snapshot());
+
         // dispatcher
         let dispatcher = {
             let queue = Arc::clone(&queue);
@@ -261,11 +275,14 @@ impl Coordinator {
             let metrics = Arc::clone(&metrics);
             let cache = cache.clone();
             let obs = Arc::clone(&obs);
+            let audit = Arc::clone(&audit);
             let cfg2 = cfg.clone();
             std::thread::Builder::new()
                 .name("geomap-dispatcher".into())
                 .spawn(move || {
-                    dispatcher_loop(cfg2, queue, store, metrics, job_txs, cache, obs)
+                    dispatcher_loop(
+                        cfg2, queue, store, metrics, job_txs, cache, obs, audit,
+                    )
                 })
                 .expect("spawn dispatcher")
         };
@@ -305,6 +322,7 @@ impl Coordinator {
             cache,
             spec_digest,
             obs,
+            audit,
         })
     }
 
@@ -445,6 +463,12 @@ impl Coordinator {
         self.obs.slow.dump()
     }
 
+    /// Current worst-recall ring of the quality auditor, worst first
+    /// (empty when audit sampling is off or nothing has been audited).
+    pub fn audit_entries(&self) -> Vec<AuditEntry> {
+        self.audit.entries()
+    }
+
     /// The active configuration.
     pub fn config(&self) -> &ServeConfig {
         &self.cfg
@@ -481,8 +505,15 @@ impl Coordinator {
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
-        // surface the slowest traced requests once, at teardown — the
-        // same entries remain scrapeable live via the stats verb
+        // after the dispatcher: no new offers arrive, so the audit thread
+        // drains every queued sample before joining
+        self.audit.stop();
+        // surface the worst audited queries and the slowest traced
+        // requests once, at teardown — the same entries remain scrapeable
+        // live via the stats verb / audit_entries()
+        for e in self.audit.entries() {
+            LOG.info(e.line());
+        }
         if !self.obs.slow.is_empty() {
             for e in self.obs.slow.dump() {
                 LOG.info(e.line());
@@ -546,6 +577,7 @@ fn dispatcher_loop(
     job_txs: Vec<mpsc::Sender<Job>>,
     cache: Option<Arc<ResultCache>>,
     obs: Arc<ObsState>,
+    audit: Arc<Auditor>,
 ) {
     let max_wait = Duration::from_micros(cfg.max_wait_us);
     let (partial_tx, partial_rx) =
@@ -577,6 +609,8 @@ fn dispatcher_loop(
 
         // fan out to every shard of the current snapshot
         let snapshot = store.snapshot();
+        // epoch hook: a version move queues one health recomputation
+        audit.observe_version(&snapshot);
         let mut expected = 0usize;
         for shard in &snapshot.shards {
             if shard.items() == 0 {
@@ -696,6 +730,9 @@ fn dispatcher_loop(
                 t.work = batch_work;
                 obs.slow.offer(t);
             }
+            // shadow-rescore sample: the auditor grades exactly what the
+            // client receives, against the snapshot that computed it
+            audit.offer(&p.user, &results, p.kappa, &snapshot);
             let _ = p.reply.send(Ok(Response {
                 results,
                 candidates,
@@ -1128,6 +1165,89 @@ mod tests {
         // sampling — they are the aggregate view, tracing is the
         // per-request one
         assert!(coord.metrics().stage_candgen_us.count() > 0);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn audit_thread_grades_served_queries_and_tracks_health() {
+        let k = 8;
+        let mut cfg = test_cfg(k, 2);
+        cfg.audit = crate::configx::AuditConfig {
+            sample: 1.0,
+            ..crate::configx::AuditConfig::default()
+        };
+        let coord = Coordinator::start(
+            cfg,
+            items(200, k, 80),
+            cpu_scorer_factory(),
+        )
+        .unwrap();
+        let mut rng = Rng::seeded(81);
+        for _ in 0..8 {
+            let user: Vec<f32> = (0..k).map(|_| rng.gaussian_f32()).collect();
+            coord.submit(user, 5).unwrap();
+        }
+        // the auditor grades asynchronously; wait for it to catch up
+        let m = coord.metrics();
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while m.audit_samples.load(Ordering::Acquire) < 8
+            && Instant::now() < deadline
+        {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(m.audit_samples.load(Ordering::Relaxed), 8);
+        let ewma =
+            f64::from_bits(m.audit_recall_ewma_bits.load(Ordering::Relaxed));
+        // threshold 0.0 serving is near-exact; the audit must agree
+        assert!(ewma > 0.9, "recall ewma {ewma}");
+        let worst = coord.audit_entries();
+        assert!(!worst.is_empty() && worst.len() <= 8, "{}", worst.len());
+        for w in worst.windows(2) {
+            assert!(w[0].recall <= w[1].recall, "worst recall first");
+        }
+        // startup seeded the health gauges from catalogue version 1
+        assert!(m.health_version.load(Ordering::Relaxed) >= 1);
+        assert!(m.health_occ_max.load(Ordering::Relaxed) > 0);
+        // an epoch bump re-stamps the gauges at the new version
+        coord.remove(3).unwrap();
+        let v = coord.upsert(200, &vec![0.5; k]).unwrap();
+        let user: Vec<f32> = (0..k).map(|_| rng.gaussian_f32()).collect();
+        coord.submit(user, 5).unwrap();
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while m.health_version.load(Ordering::Relaxed) < v
+            && Instant::now() < deadline
+        {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(m.health_version.load(Ordering::Relaxed), v);
+        let delta_frac =
+            f64::from_bits(m.health_delta_frac_bits.load(Ordering::Relaxed));
+        assert!(delta_frac > 0.0, "pending upsert must register");
+        coord.shutdown();
+    }
+
+    #[test]
+    fn audit_off_stays_out_of_the_serving_path() {
+        let k = 8;
+        let coord = Coordinator::start(
+            test_cfg(k, 1), // audit sample defaults to 0.0
+            items(100, k, 82),
+            cpu_scorer_factory(),
+        )
+        .unwrap();
+        let user = crate::testing::fix::user(k, 83);
+        coord.submit(user, 5).unwrap();
+        let m = coord.metrics();
+        assert_eq!(m.audit_samples.load(Ordering::Relaxed), 0);
+        assert!(coord.audit_entries().is_empty());
+        // health still tracks: the auditor seeds it at startup
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while m.health_version.load(Ordering::Relaxed) == 0
+            && Instant::now() < deadline
+        {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(m.health_version.load(Ordering::Relaxed) >= 1);
         coord.shutdown();
     }
 

@@ -921,6 +921,23 @@ impl Engine {
         heap.into_sorted()
     }
 
+    /// Exact brute-force f32 top-κ over every live id, bypassing the
+    /// prune and quant tiers entirely — the shadow-rescore auditor's
+    /// ground truth (`docs/OBSERVABILITY.md` §Quality audit). Dead ids
+    /// are skipped; returned ids are local (shard callers offset by
+    /// their base id). Deliberately does not tick the physical-work
+    /// counters: audit scans run off the serving path and must not
+    /// pollute the serving work attribution.
+    pub fn exact_top_k(&self, user: &[f32], kappa: usize) -> Vec<Scored> {
+        let mut heap = TopK::new(kappa);
+        for id in 0..self.len() as u32 {
+            if let Some(f) = self.factor(id) {
+                heap.push(id, dot(user, f));
+            }
+        }
+        heap.into_sorted()
+    }
+
     /// Top-κ via prune + rescore, reusing the caller's query scratch and
     /// candidate buffer. On a quantized engine this allocates a k-byte
     /// query-code buffer per call; hot loops that care (the serving

@@ -390,8 +390,10 @@ impl InvertedIndex {
         out
     }
 
-    /// Posting count of dimension `i` (no decode for either arena).
-    fn posting_len(&self, i: usize) -> usize {
+    /// Posting count of dimension `i` (no decode for either arena) —
+    /// the per-cell occupancy the health gauges aggregate into skew and
+    /// Gini statistics (`docs/OBSERVABILITY.md` §Index health).
+    pub fn posting_len(&self, i: usize) -> usize {
         match &self.arena {
             Arena::Raw { offsets, .. } => {
                 (offsets[i + 1] - offsets[i]) as usize

@@ -80,8 +80,8 @@ pub mod prelude {
     };
     pub use crate::cache::ResultCache;
     pub use crate::configx::{
-        Backend, CacheMode, MutationConfig, NetMode, ObsConfig, PostingsMode,
-        QuantMode, SchemaConfig,
+        AuditConfig, Backend, CacheMode, MutationConfig, NetMode, ObsConfig,
+        PostingsMode, QuantMode, SchemaConfig,
     };
     pub use crate::obs::{Histogram, HistogramSnapshot};
     pub use crate::data::{gaussian_factors, MovieLensSynth, Ratings};

@@ -21,8 +21,8 @@
 
 use anyhow::{bail, Context, Result};
 use geomap::configx::{
-    Backend, Cli, MutationConfig, ObsConfig, PostingsMode, QuantMode,
-    SchemaConfig, ServeConfig,
+    AuditConfig, Backend, Cli, MutationConfig, ObsConfig, PostingsMode,
+    QuantMode, SchemaConfig, ServeConfig,
 };
 use geomap::coordinator::Coordinator;
 use geomap::data::{gaussian_factors, MovieLensSynth, Ratings};
@@ -173,6 +173,25 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         )
         .opt("slow-log", "32", "slow-query log capacity (keep-N-slowest)")
         .opt(
+            "audit-sample",
+            "0",
+            "fraction of served queries shadow-rescored exactly on the \
+             audit thread, in [0,1] (0 disables query auditing; index \
+             health gauges always recompute on epoch bumps)",
+        )
+        .opt("audit-k", "10", "audit depth (clamped to the request's κ)")
+        .opt(
+            "audit-half-life",
+            "64",
+            "recall EWMA half-life, in audited queries",
+        )
+        .opt(
+            "recall-floor",
+            "0",
+            "WARN when the recall EWMA drops below this floor, in (0,1] \
+             (0 disables the alert)",
+        )
+        .opt(
             "stats-interval",
             "0",
             "print interval metrics rates to stderr every N seconds (0 = off)",
@@ -224,6 +243,13 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             slow_us: cli.get_u64("slow-us")?,
             slow_log: cli.get_usize("slow-log")?,
         },
+        audit: AuditConfig {
+            sample: cli.get_f64("audit-sample")?,
+            k: cli.get_usize("audit-k")?,
+            half_life: cli.get_f64("audit-half-life")?,
+            recall_floor: cli.get_f64("recall-floor")?,
+            ..AuditConfig::default()
+        },
     };
     let factory = if cfg.use_xla {
         xla_scorer_factory(&cfg.artifacts_dir)
@@ -263,21 +289,29 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         std::thread::spawn(move || {
             use std::sync::atomic::Ordering;
             let mut prev = coord.metrics().snapshot();
-            'report: loop {
+            loop {
                 let tick = Instant::now();
                 // sleep in 100ms slices so shutdown is prompt
+                let mut stopping = false;
                 while tick.elapsed().as_secs() < stats_interval {
                     if stop.load(Ordering::Acquire) {
-                        break 'report;
+                        stopping = true;
+                        break;
                     }
                     std::thread::sleep(std::time::Duration::from_millis(100));
                 }
+                // the final (possibly partial) interval still gets its
+                // line, emitted before the join completes — the shutdown
+                // report never races a trailing [stats] line
                 let cur = coord.metrics().snapshot();
                 let delta = cur.delta(&prev);
                 eprintln!(
                     "[stats] {}",
-                    delta.rate_report(tick.elapsed().as_secs_f64())
+                    delta.rate_report(tick.elapsed().as_secs_f64().max(1e-9))
                 );
+                if stopping {
+                    break;
+                }
                 prev = cur;
             }
         })
@@ -560,6 +594,13 @@ fn cmd_snapshot_inspect(args: &[String]) -> Result<()> {
     if !info.intact() {
         bail!("{path}: one or more sections failed CRC verification");
     }
+    // health gauges need the decoded engine, not just the headers — load
+    // it and report the same summary the serving path publishes
+    let engine = geomap::engine::Engine::builder()
+        .from_snapshot(&path)
+        .with_context(|| format!("loading {path} for health gauges"))?;
+    let health = geomap::obs::HealthGauges::compute(std::iter::once(&engine));
+    println!("health:   {}", health.render());
     Ok(())
 }
 

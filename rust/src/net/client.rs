@@ -162,6 +162,8 @@ impl NetClient {
             "discard_bp",
             "stages",
             "work",
+            "quality",
+            "health",
             "slow",
         ] {
             if j.opt(key).is_none() {

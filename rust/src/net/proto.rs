@@ -276,11 +276,39 @@ pub fn encode_stats(
     let _ = write!(
         out,
         "}},\"work\":{{\"posting_lists\":{},\"packed_blocks\":{},\
-         \"dots_i8\":{},\"refines_f32\":{}}},\"slow\":[",
+         \"dots_i8\":{},\"refines_f32\":{}}},",
         snap.work_posting_lists,
         snap.work_packed_blocks,
         snap.work_dots_i8,
         snap.work_refines_f32,
+    );
+    // gauge floats print at fixed precision so identical metric state
+    // always encodes to identical bytes (the byte-stability contract)
+    let _ = write!(
+        out,
+        "\"quality\":{{\"samples\":{},\"shed\":{},\"recall_ewma\":{:.4},\
+         \"worst_recall\":{:.4},\"max_score_err\":{:.6},\
+         \"worst_rank_disp\":{}}},",
+        snap.audit_samples,
+        snap.audit_shed,
+        snap.recall_ewma,
+        snap.worst_recall,
+        snap.max_score_err,
+        snap.worst_rank_disp,
+    );
+    let _ = write!(
+        out,
+        "\"health\":{{\"version\":{},\"occupancy_max\":{},\
+         \"occupancy_mean\":{:.1},\"occupancy_gini\":{:.4},\
+         \"delta_frac\":{:.4},\"tombstone_frac\":{:.4},\
+         \"scale_drift\":{:.4}}},\"slow\":[",
+        snap.health_version,
+        snap.occ_max,
+        snap.occ_mean,
+        snap.occ_gini,
+        snap.delta_frac,
+        snap.tombstone_frac,
+        snap.scale_drift,
     );
     for (i, e) in slow.iter().enumerate() {
         if i > 0 {
@@ -392,6 +420,19 @@ mod tests {
             cache_hits: 3,
             net_bytes_in: 1234,
             work_dots_i8: 77,
+            audit_samples: 4,
+            audit_shed: 1,
+            recall_ewma: 0.98765,
+            worst_recall: 0.9,
+            max_score_err: 0.0123456,
+            worst_rank_disp: 3,
+            health_version: 5,
+            occ_max: 31,
+            occ_mean: 7.25,
+            occ_gini: 0.4321,
+            delta_frac: 0.0625,
+            tombstone_frac: 0.03125,
+            scale_drift: 0.5,
             ..MetricsSnapshot::default()
         };
         let slow = [SlowEntry {
@@ -421,7 +462,9 @@ mod tests {
             ("\"latency_us\":", "\"queue_wait_us\":"),
             ("\"discard_bp\":", "\"stages\":"),
             ("\"stages\":", "\"work\":"),
-            ("\"work\":", "\"slow\":"),
+            ("\"work\":", "\"quality\":"),
+            ("\"quality\":", "\"health\":"),
+            ("\"health\":", "\"slow\":"),
         ] {
             let a = text.find(earlier).unwrap_or_else(|| panic!("{earlier}"));
             let b = text.find(later).unwrap_or_else(|| panic!("{later}"));
@@ -468,6 +511,38 @@ mod tests {
                 .unwrap(),
             77
         );
+        let quality = j.get("quality").unwrap();
+        assert_eq!(quality.get("samples").unwrap().as_usize().unwrap(), 4);
+        assert_eq!(quality.get("shed").unwrap().as_usize().unwrap(), 1);
+        // gauge floats are fixed-precision: 0.98765 → 0.9877
+        assert_eq!(
+            quality.get("recall_ewma").unwrap().as_f64().unwrap(),
+            0.9877
+        );
+        assert_eq!(
+            quality.get("max_score_err").unwrap().as_f64().unwrap(),
+            0.012346
+        );
+        assert_eq!(
+            quality.get("worst_rank_disp").unwrap().as_usize().unwrap(),
+            3
+        );
+        let health = j.get("health").unwrap();
+        assert_eq!(health.get("version").unwrap().as_usize().unwrap(), 5);
+        assert_eq!(
+            health.get("occupancy_max").unwrap().as_usize().unwrap(),
+            31
+        );
+        assert_eq!(
+            health.get("occupancy_mean").unwrap().as_f64().unwrap(),
+            7.2
+        );
+        assert_eq!(
+            health.get("occupancy_gini").unwrap().as_f64().unwrap(),
+            0.4321
+        );
+        assert_eq!(health.get("delta_frac").unwrap().as_f64().unwrap(), 0.0625);
+        assert_eq!(health.get("scale_drift").unwrap().as_f64().unwrap(), 0.5);
         let slow_arr = j.get("slow").unwrap().as_arr().unwrap();
         assert_eq!(slow_arr.len(), 1);
         assert_eq!(

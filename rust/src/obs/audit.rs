@@ -1,0 +1,514 @@
+//! Shadow-rescore quality auditor (`docs/OBSERVABILITY.md` §Quality
+//! audit).
+//!
+//! The serving path answers through an approximation stack — tessellation
+//! prune, optional int8 rescore, optional result cache — whose quality is
+//! validated offline but can drift online (mutation churn, quant scale
+//! drift, adversarial query mixes). The auditor measures served quality
+//! *live* without touching the serving path: a deterministic [`Sampler`]
+//! (the PR 7 stride machinery, independent `audit:` knob) picks queries,
+//! each sampled query is cloned — user factor, served results, and the
+//! batch's own `Arc<ShardSet>` snapshot, so the audit scores the exact
+//! catalogue state that served it — and pushed over a bounded channel to
+//! one background thread. The thread re-answers each query with an exact
+//! brute-force f32 scan ([`Engine::exact_top_k`]) and grades the served
+//! list: recall@k, max absolute score error, worst rank displacement.
+//!
+//! Shed, don't block: a full queue drops the audit task (counted in
+//! `audit_shed`), never the request. Aggregates flow into [`ServeMetrics`]
+//! gauge atomics (recall EWMA with a configurable half-life, worst recall,
+//! max score error, worst displacement), the N worst-recall queries ride a
+//! keep-worst ring beside the slow log, and an edge-triggered alert WARNs
+//! through the leveled [`Logger`] when the EWMA breaches `--recall-floor`.
+//! The same thread recomputes the [`HealthGauges`] whenever the shard-set
+//! version moves, so index health is versioned with the catalogue rather
+//! than polled.
+//!
+//! Cached responses never reach the dispatcher, so they are not sampled:
+//! a cache hit is epoch-validated to be byte-identical to a previously
+//! *auditable* fill, which the sampler saw with the same stride odds.
+
+use super::health::HealthGauges;
+use super::log::Logger;
+use super::trace::Sampler;
+use crate::configx::AuditConfig;
+use crate::coordinator::{ServeMetrics, ShardSet};
+use crate::linalg::ops::dot;
+use crate::retrieval::{Scored, TopK};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+static LOG: Logger = Logger::new("audit");
+
+/// One sampled query awaiting shadow rescore.
+struct QueryAudit {
+    user: Vec<f32>,
+    /// The results the client actually received (global ids).
+    served: Vec<Scored>,
+    /// The request's top-k size.
+    kappa: usize,
+    /// The shard-set snapshot the batch served from.
+    shards: Arc<ShardSet>,
+}
+
+/// Work item for the audit thread.
+enum Task {
+    Query(QueryAudit),
+    Health(Arc<ShardSet>),
+}
+
+/// The verdict on one audited query.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct AuditEntry {
+    /// |served ∩ exact| / |exact| over the audited prefix.
+    pub recall: f64,
+    /// Audited depth: `min(audit.k, request k)`.
+    pub kappa: usize,
+    /// Max |served score − exact f32 score| over the served prefix.
+    pub max_score_err: f64,
+    /// Max |exact rank − served rank|; a missing exact id counts the
+    /// full audited depth.
+    pub rank_disp: usize,
+    /// Served results available to audit (may be < kappa).
+    pub served: usize,
+    /// Exact results found (may be < kappa on tiny catalogues).
+    pub exact: usize,
+    /// Catalogue version the query was served (and audited) under.
+    pub version: u64,
+}
+
+impl AuditEntry {
+    /// Structured one-line rendering (worst-recall ring dump format,
+    /// `docs/OBSERVABILITY.md`).
+    pub fn line(&self) -> String {
+        format!(
+            "audit recall={:.4} k={} max_score_err={:.6} rank_disp={} \
+             served={} exact={} version={}",
+            self.recall,
+            self.kappa,
+            self.max_score_err,
+            self.rank_disp,
+            self.served,
+            self.exact,
+            self.version,
+        )
+    }
+}
+
+/// Bounded keep-N-*worst*-recall ring — [`super::SlowLog`]'s shape with
+/// the ranking inverted: lowest recall first, ties broken by larger
+/// score error first (the more alarming entry ranks ahead).
+#[derive(Debug)]
+pub struct WorstLog {
+    cap: usize,
+    entries: Mutex<Vec<AuditEntry>>,
+}
+
+impl WorstLog {
+    /// Keep the `cap` lowest-recall audited queries.
+    pub fn new(cap: usize) -> Self {
+        WorstLog { cap, entries: Mutex::new(Vec::new()) }
+    }
+
+    /// Offer a verdict; kept only if it ranks among the worst.
+    pub fn offer(&self, entry: AuditEntry) {
+        if self.cap == 0 {
+            return;
+        }
+        let mut entries = self.entries.lock().unwrap();
+        let pos = entries
+            .binary_search_by(|e| {
+                e.recall
+                    .partial_cmp(&entry.recall)
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(
+                        entry
+                            .max_score_err
+                            .partial_cmp(&e.max_score_err)
+                            .unwrap_or(std::cmp::Ordering::Equal),
+                    )
+            })
+            .unwrap_or_else(|p| p);
+        if pos >= self.cap {
+            return; // worse entries already fill the ring
+        }
+        entries.insert(pos, entry);
+        entries.truncate(self.cap);
+    }
+
+    /// Copy out the current entries, worst recall first.
+    pub fn dump(&self) -> Vec<AuditEntry> {
+        self.entries.lock().unwrap().clone()
+    }
+
+    /// True when nothing has been audited yet.
+    pub fn is_empty(&self) -> bool {
+        self.entries.lock().unwrap().is_empty()
+    }
+}
+
+/// Per-sample EWMA weight for a half-life expressed in samples:
+/// `(1 − α)^half_life = 1/2`, so after `half_life` audited queries an
+/// old observation has half its original weight.
+pub(crate) fn ewma_alpha(half_life: f64) -> f64 {
+    1.0 - 0.5f64.powf(1.0 / half_life.max(1e-9))
+}
+
+/// The audit front door the coordinator holds: sampling + hand-off on
+/// the serving side, one owned background thread on the scoring side.
+///
+/// Always constructed — with `sample = 0.0` no query is ever cloned, but
+/// the health recomputation still rides the same thread, so the `health`
+/// stats section populates even with auditing off.
+pub struct Auditor {
+    sampler: Sampler,
+    tx: Mutex<Option<SyncSender<Task>>>,
+    handle: Mutex<Option<JoinHandle<()>>>,
+    /// Last shard-set version a health task was queued for (dedup).
+    health_mark: AtomicU64,
+    worst: Arc<WorstLog>,
+    metrics: Arc<ServeMetrics>,
+}
+
+impl Auditor {
+    /// Spawn the audit thread and return the serving-side handle.
+    pub fn start(cfg: AuditConfig, metrics: Arc<ServeMetrics>) -> Auditor {
+        let worst = Arc::new(WorstLog::new(cfg.worst_log));
+        let (tx, rx) = sync_channel(cfg.queue.max(1));
+        let handle = {
+            let (metrics, worst) = (Arc::clone(&metrics), Arc::clone(&worst));
+            std::thread::Builder::new()
+                .name("geomap-audit".into())
+                .spawn(move || audit_loop(rx, cfg, &metrics, &worst))
+                .expect("spawn audit thread")
+        };
+        Auditor {
+            sampler: Sampler::new(cfg.sample),
+            tx: Mutex::new(Some(tx)),
+            handle: Mutex::new(Some(handle)),
+            health_mark: AtomicU64::new(0),
+            worst,
+            metrics,
+        }
+    }
+
+    /// Offer one completed request for auditing. One relaxed atomic when
+    /// the stride misses; a sampled query clones its payload and
+    /// `try_send`s — a full queue sheds the sample (counted), never
+    /// blocking the dispatcher.
+    pub fn offer(
+        &self,
+        user: &[f32],
+        served: &[Scored],
+        kappa: usize,
+        shards: &Arc<ShardSet>,
+    ) {
+        if !self.sampler.hit() {
+            return;
+        }
+        let guard = self.tx.lock().unwrap();
+        let Some(tx) = guard.as_ref() else { return };
+        let task = Task::Query(QueryAudit {
+            user: user.to_vec(),
+            served: served.to_vec(),
+            kappa,
+            shards: Arc::clone(shards),
+        });
+        if let Err(TrySendError::Full(_)) = tx.try_send(task) {
+            self.metrics.audit_shed.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Queue a health-gauge recomputation if `set`'s version is new.
+    /// Called per dispatched batch: one relaxed load on the unchanged
+    /// path, one clone + send per epoch bump. The mark moves only on a
+    /// successful send, so a shed recomputation retries next batch.
+    pub fn observe_version(&self, set: &Arc<ShardSet>) {
+        if set.version == self.health_mark.load(Ordering::Relaxed) {
+            return;
+        }
+        let guard = self.tx.lock().unwrap();
+        let Some(tx) = guard.as_ref() else { return };
+        if tx.try_send(Task::Health(Arc::clone(set))).is_ok() {
+            self.health_mark.store(set.version, Ordering::Relaxed);
+        }
+    }
+
+    /// Close the channel and join the thread; queued tasks drain first.
+    /// Idempotent.
+    pub fn stop(&self) {
+        drop(self.tx.lock().unwrap().take());
+        if let Some(h) = self.handle.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+
+    /// Current worst-recall ring, worst first.
+    pub fn entries(&self) -> Vec<AuditEntry> {
+        self.worst.dump()
+    }
+}
+
+impl Drop for Auditor {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn audit_loop(
+    rx: Receiver<Task>,
+    cfg: AuditConfig,
+    metrics: &ServeMetrics,
+    worst: &WorstLog,
+) {
+    let alpha = ewma_alpha(cfg.half_life);
+    let mut ewma: Option<f64> = None;
+    let mut worst_recall = f64::INFINITY;
+    let mut max_err = 0.0f64;
+    let mut worst_disp = 0u64;
+    let mut below_floor = false;
+    for task in rx {
+        let q = match task {
+            Task::Health(set) => {
+                HealthGauges::of_set(&set).publish(metrics);
+                continue;
+            }
+            Task::Query(q) => q,
+        };
+        let entry = judge(&q, cfg.k);
+        let e = match ewma {
+            None => entry.recall, // first sample seeds the average
+            Some(prev) => prev + alpha * (entry.recall - prev),
+        };
+        ewma = Some(e);
+        metrics.audit_recall_ewma_bits.store(e.to_bits(), Ordering::Relaxed);
+        if entry.recall < worst_recall {
+            worst_recall = entry.recall;
+            metrics
+                .audit_worst_recall_bits
+                .store(entry.recall.to_bits(), Ordering::Relaxed);
+        }
+        if entry.max_score_err > max_err {
+            max_err = entry.max_score_err;
+            metrics
+                .audit_max_score_err_bits
+                .store(max_err.to_bits(), Ordering::Relaxed);
+        }
+        if entry.rank_disp as u64 > worst_disp {
+            worst_disp = entry.rank_disp as u64;
+            metrics.audit_worst_disp.store(worst_disp, Ordering::Relaxed);
+        }
+        worst.offer(entry);
+        // samples last: a reader seeing n samples sees n-sample gauges
+        metrics.audit_samples.fetch_add(1, Ordering::Release);
+        if cfg.recall_floor > 0.0 {
+            // edge-triggered: one WARN per excursion, not one per sample
+            if e < cfg.recall_floor && !below_floor {
+                below_floor = true;
+                LOG.warn(format!(
+                    "recall EWMA {:.4} breached floor {:.4} ({})",
+                    e,
+                    cfg.recall_floor,
+                    entry.line()
+                ));
+            } else if e >= cfg.recall_floor && below_floor {
+                below_floor = false;
+                LOG.info(format!(
+                    "recall EWMA {:.4} recovered above floor {:.4}",
+                    e, cfg.recall_floor
+                ));
+            }
+        }
+    }
+}
+
+/// Shadow-rescore one sampled query: exact brute-force top-k over the
+/// same shard snapshot, then grade the served prefix against it.
+fn judge(q: &QueryAudit, audit_k: usize) -> AuditEntry {
+    let k = audit_k.min(q.kappa).max(1);
+    let mut heap = TopK::new(k);
+    for shard in &q.shards.shards {
+        for s in shard.engine.exact_top_k(&q.user, k) {
+            heap.push(shard.base_id + s.id, s.score);
+        }
+    }
+    let exact = heap.into_sorted();
+    let served = &q.served[..q.served.len().min(k)];
+
+    let mut max_score_err = 0.0f64;
+    for s in served {
+        // exact f32 score of the id the client was actually given
+        for shard in &q.shards.shards {
+            let lo = shard.base_id;
+            if s.id >= lo && ((s.id - lo) as usize) < shard.engine.len() {
+                if let Some(f) = shard.engine.factor(s.id - lo) {
+                    let err = (s.score as f64 - dot(&q.user, f) as f64).abs();
+                    max_score_err = max_score_err.max(err);
+                }
+                break;
+            }
+        }
+    }
+
+    let mut rank_disp = 0usize;
+    let mut hits = 0usize;
+    for (rank, e) in exact.iter().enumerate() {
+        match served.iter().position(|s| s.id == e.id) {
+            Some(pos) => {
+                hits += 1;
+                rank_disp = rank_disp.max(pos.abs_diff(rank));
+            }
+            None => rank_disp = rank_disp.max(k),
+        }
+    }
+    AuditEntry {
+        recall: hits as f64 / exact.len().max(1) as f64,
+        kappa: k,
+        max_score_err,
+        rank_disp,
+        served: served.len(),
+        exact: exact.len(),
+        version: q.shards.version,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::configx::SchemaConfig;
+    use crate::coordinator::FactorStore;
+    use crate::engine::Engine;
+    use crate::retrieval::brute_force_top_k;
+    use crate::testing::fix;
+
+    fn snapshot(n: usize, shards: usize) -> (Arc<ShardSet>, crate::linalg::Matrix) {
+        let items = fix::items(n, 8, 11);
+        let spec = Engine::builder()
+            .schema(SchemaConfig::TernaryParseTree)
+            .threshold(0.0);
+        let store = FactorStore::build(spec, items.clone(), shards).unwrap();
+        (store.snapshot(), items)
+    }
+
+    #[test]
+    fn ewma_alpha_halves_in_half_life_samples() {
+        for hl in [1.0, 8.0, 64.0] {
+            let a = ewma_alpha(hl);
+            assert!((0.0..=1.0).contains(&a));
+            let retained = (1.0 - a).powf(hl);
+            assert!((retained - 0.5).abs() < 1e-9, "hl {hl}: {retained}");
+        }
+    }
+
+    #[test]
+    fn worst_log_keeps_lowest_recall_sorted() {
+        let log = WorstLog::new(3);
+        for recall in [0.9, 0.5, 1.0, 0.7, 0.95, 0.6] {
+            log.offer(AuditEntry { recall, ..AuditEntry::default() });
+        }
+        let got: Vec<f64> = log.dump().iter().map(|e| e.recall).collect();
+        assert_eq!(got, vec![0.5, 0.6, 0.7]);
+        assert!(WorstLog::new(0).dump().is_empty());
+        let zero = WorstLog::new(0);
+        zero.offer(AuditEntry::default());
+        assert!(zero.is_empty(), "zero cap is inert");
+    }
+
+    #[test]
+    fn judge_scores_exactly_served_query_perfect() {
+        let (snap, items) = snapshot(60, 3);
+        let user = fix::user(8, 21);
+        let served = brute_force_top_k(&user, &items, 10);
+        let q = QueryAudit {
+            user: user.clone(),
+            served,
+            kappa: 10,
+            shards: Arc::clone(&snap),
+        };
+        let e = judge(&q, 10);
+        assert_eq!(e.recall, 1.0, "{e:?}");
+        assert_eq!(e.rank_disp, 0, "{e:?}");
+        assert!(e.max_score_err < 1e-6, "{e:?}");
+        assert_eq!(e.kappa, 10);
+        assert_eq!((e.served, e.exact), (10, 10));
+        assert_eq!(e.version, snap.version);
+        assert!(e.line().contains("recall=1.0000"), "{}", e.line());
+    }
+
+    #[test]
+    fn judge_penalizes_wrong_ids_and_scores() {
+        let (snap, items) = snapshot(60, 2);
+        let user = fix::user(8, 22);
+        let mut served = brute_force_top_k(&user, &items, 5);
+        // swap the top id for one far outside the true top-5 and
+        // misreport a score on another
+        let worst = brute_force_top_k(&user, &items, 60).pop().unwrap();
+        served[0] = worst;
+        served[2].score += 0.5;
+        let q = QueryAudit { user, served, kappa: 5, shards: snap };
+        let e = judge(&q, 5);
+        assert!(e.recall <= 0.8, "one of five missing: {e:?}");
+        assert!(e.rank_disp >= 1, "{e:?}");
+        assert!(e.max_score_err > 0.4, "{e:?}");
+    }
+
+    #[test]
+    fn judge_clamps_depth_to_request_k() {
+        let (snap, items) = snapshot(30, 1);
+        let user = fix::user(8, 23);
+        let served = brute_force_top_k(&user, &items, 3);
+        let q = QueryAudit { user, served, kappa: 3, shards: snap };
+        let e = judge(&q, 10); // audit.k deeper than the request
+        assert_eq!(e.kappa, 3);
+        assert_eq!(e.recall, 1.0, "{e:?}");
+    }
+
+    #[test]
+    fn auditor_thread_audits_and_publishes_health() {
+        let (snap, items) = snapshot(60, 2);
+        let metrics = Arc::new(ServeMetrics::default());
+        let cfg = AuditConfig { sample: 1.0, ..AuditConfig::default() };
+        let auditor = Auditor::start(cfg, Arc::clone(&metrics));
+        auditor.observe_version(&snap);
+        auditor.observe_version(&snap); // deduped: same version
+        for seed in 0..4 {
+            let user = fix::user(8, 100 + seed);
+            let served = brute_force_top_k(&user, &items, 10);
+            auditor.offer(&user, &served, 10, &snap);
+        }
+        auditor.stop(); // drains the queue, then joins
+        assert_eq!(metrics.audit_samples.load(Ordering::Relaxed), 4);
+        assert_eq!(metrics.audit_shed.load(Ordering::Relaxed), 0);
+        let ewma =
+            f64::from_bits(metrics.audit_recall_ewma_bits.load(Ordering::Relaxed));
+        assert_eq!(ewma, 1.0, "exact serving → perfect recall");
+        assert_eq!(
+            metrics.health_version.load(Ordering::Relaxed),
+            snap.version,
+            "health gauges recomputed for the observed version"
+        );
+        assert!(metrics.health_occ_max.load(Ordering::Relaxed) > 0);
+        assert_eq!(auditor.entries().len(), 4.min(cfg.worst_log));
+        auditor.stop(); // idempotent
+    }
+
+    #[test]
+    fn sampler_zero_never_clones_queries() {
+        let (snap, items) = snapshot(30, 1);
+        let metrics = Arc::new(ServeMetrics::default());
+        let cfg = AuditConfig::default(); // sample 0.0
+        let auditor = Auditor::start(cfg, Arc::clone(&metrics));
+        let user = fix::user(8, 9);
+        let served = brute_force_top_k(&user, &items, 10);
+        for _ in 0..16 {
+            auditor.offer(&user, &served, 10, &snap);
+        }
+        auditor.observe_version(&snap); // health still flows
+        auditor.stop();
+        assert_eq!(metrics.audit_samples.load(Ordering::Relaxed), 0);
+        assert!(auditor.entries().is_empty());
+        assert_eq!(metrics.health_version.load(Ordering::Relaxed), snap.version);
+    }
+}

@@ -1,0 +1,231 @@
+//! Index-health gauges: cell-occupancy skew, mutation-debt fractions,
+//! and quant scale drift (`docs/OBSERVABILITY.md` §Index health).
+//!
+//! The tessellation's pruning power rests on build-time occupancy
+//! assumptions: posting lists roughly balanced across cells, the delta
+//! segment small relative to the merged base, few tombstoned rows, and
+//! per-item quant scales clustered around the population the int8 codes
+//! were calibrated for. Mutation churn erodes all four silently — this
+//! module measures them. [`HealthGauges::compute`] is a pure function
+//! over engines (reused by `snapshot inspect` on a loaded snapshot);
+//! the serving path recomputes it on the audit thread whenever the
+//! shard-set version moves (epoch bump) and publishes the result into
+//! the [`ServeMetrics`] gauge atomics, where the `{"stats":true}` verb
+//! and `report()` pick it up.
+
+use crate::coordinator::{ServeMetrics, ShardSet};
+use crate::engine::Engine;
+use std::sync::atomic::Ordering;
+
+/// One recomputation of the index-health gauges.
+///
+/// Occupancy statistics cover the **base** inverted index of every
+/// geomap shard (the delta segment is scanned, not tessellated — its
+/// cost is what `delta_frac` measures); they are zero under baseline
+/// backends, which have no posting arena.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct HealthGauges {
+    /// Shard-set version the gauges were computed at (0 = never).
+    pub version: u64,
+    /// Longest posting list across all shards.
+    pub occ_max: u64,
+    /// Mean posting length over nonempty dimensions.
+    pub occ_mean: f64,
+    /// Gini coefficient of nonempty posting lengths, in `[0, 1)`:
+    /// 0 is perfectly balanced cells, →1 is all postings in one cell.
+    pub occ_gini: f64,
+    /// Delta-segment rows as a fraction of the addressable id space.
+    pub delta_frac: f64,
+    /// Tombstoned rows as a fraction of the addressable id space.
+    pub tombstone_frac: f64,
+    /// Quant scale dispersion `(max − min) / mean` over live rows
+    /// (0 with quantization off): grows when folded-in items need very
+    /// different int8 scales than the base population.
+    pub scale_drift: f64,
+}
+
+impl HealthGauges {
+    /// Compute the gauges over a set of engines (`version` left 0; use
+    /// [`of_set`](Self::of_set) on the serving path).
+    pub fn compute<'a>(engines: impl Iterator<Item = &'a Engine>) -> Self {
+        let mut lens: Vec<u64> = Vec::new();
+        let (mut addr, mut pending, mut tombstones) = (0usize, 0usize, 0usize);
+        let (mut s_min, mut s_max) = (f32::INFINITY, 0.0f32);
+        let (mut s_sum, mut s_count) = (0.0f64, 0u64);
+        for engine in engines {
+            let st = engine.stats();
+            addr += st.len;
+            pending += st.pending;
+            tombstones += st.tombstones;
+            if let Some(g) = engine.geomap_source() {
+                let idx = g.index();
+                let dims = idx.stats().dims;
+                for d in 0..dims {
+                    let l = idx.posting_len(d);
+                    if l > 0 {
+                        lens.push(l as u64);
+                    }
+                }
+            }
+            if let Some(q) = engine.quant_store() {
+                // dead rows keep a 0.0 scale — they are not population
+                for &s in q.scales() {
+                    if s > 0.0 {
+                        s_min = s_min.min(s);
+                        s_max = s_max.max(s);
+                        s_sum += s as f64;
+                        s_count += 1;
+                    }
+                }
+            }
+        }
+        let total: u64 = lens.iter().sum();
+        let occ_max = lens.iter().copied().max().unwrap_or(0);
+        let occ_mean = if lens.is_empty() {
+            0.0
+        } else {
+            total as f64 / lens.len() as f64
+        };
+        let occ_gini = gini(&mut lens);
+        let frac = |part: usize| {
+            if addr == 0 {
+                0.0
+            } else {
+                part as f64 / addr as f64
+            }
+        };
+        let scale_drift = if s_count == 0 || s_sum <= 0.0 {
+            0.0
+        } else {
+            (s_max - s_min) as f64 * s_count as f64 / s_sum
+        };
+        HealthGauges {
+            version: 0,
+            occ_max,
+            occ_mean,
+            occ_gini,
+            delta_frac: frac(pending),
+            tombstone_frac: frac(tombstones),
+            scale_drift,
+        }
+    }
+
+    /// Compute over a serving shard set, stamping its version.
+    pub fn of_set(set: &ShardSet) -> Self {
+        let mut g = Self::compute(set.shards.iter().map(|s| &s.engine));
+        g.version = set.version;
+        g
+    }
+
+    /// Publish into the metrics gauge atomics (plain stores — the audit
+    /// thread is the single writer, readers only `load`).
+    pub fn publish(&self, m: &ServeMetrics) {
+        m.health_occ_max.store(self.occ_max, Ordering::Relaxed);
+        m.health_occ_mean_bits
+            .store(self.occ_mean.to_bits(), Ordering::Relaxed);
+        m.health_occ_gini_bits
+            .store(self.occ_gini.to_bits(), Ordering::Relaxed);
+        m.health_delta_frac_bits
+            .store(self.delta_frac.to_bits(), Ordering::Relaxed);
+        m.health_tombstone_frac_bits
+            .store(self.tombstone_frac.to_bits(), Ordering::Relaxed);
+        m.health_scale_drift_bits
+            .store(self.scale_drift.to_bits(), Ordering::Relaxed);
+        // version last: a reader seeing the new version sees new gauges
+        m.health_version.store(self.version, Ordering::Release);
+    }
+
+    /// Human rendering for `snapshot inspect` and shutdown reports.
+    pub fn render(&self) -> String {
+        format!(
+            "occupancy max {} / mean {:.1} (gini {:.3}); delta {:.2}%, \
+             tombstones {:.2}%; scale drift {:.3}",
+            self.occ_max,
+            self.occ_mean,
+            self.occ_gini,
+            self.delta_frac * 100.0,
+            self.tombstone_frac * 100.0,
+            self.scale_drift,
+        )
+    }
+}
+
+/// Gini coefficient of a set of non-negative weights (sorted in place).
+/// 0 for ≤1 entries or all-equal weights; approaches 1 as one entry
+/// dominates.
+fn gini(lens: &mut [u64]) -> f64 {
+    let n = lens.len();
+    let total: u64 = lens.iter().sum();
+    if n < 2 || total == 0 {
+        return 0.0;
+    }
+    lens.sort_unstable();
+    let weighted: f64 = lens
+        .iter()
+        .enumerate()
+        .map(|(i, &l)| (i as f64 + 1.0) * l as f64)
+        .sum();
+    let n = n as f64;
+    (2.0 * weighted) / (n * total as f64) - (n + 1.0) / n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::configx::{QuantMode, SchemaConfig};
+    use crate::testing::fix;
+
+    fn build(quant: QuantMode) -> Engine {
+        Engine::builder()
+            .schema(SchemaConfig::TernaryOneHot)
+            .threshold(1.3)
+            .quant(quant)
+            .build(fix::items(64, 8, 7))
+            .expect("engine")
+    }
+
+    #[test]
+    fn gini_bounds_and_extremes() {
+        assert_eq!(gini(&mut []), 0.0);
+        assert_eq!(gini(&mut [5]), 0.0);
+        assert!(gini(&mut [4, 4, 4, 4]).abs() < 1e-12, "uniform → 0");
+        // one dominant cell among many empties-removed singletons
+        let g = gini(&mut [1, 1, 1, 1000]);
+        assert!(g > 0.7, "skewed → high gini, got {g}");
+        let mut unsorted = [3, 1, 2];
+        let mut sorted = [1, 2, 3];
+        assert_eq!(gini(&mut unsorted), gini(&mut sorted), "order-free");
+    }
+
+    #[test]
+    fn fresh_engine_has_no_mutation_debt() {
+        let e = build(QuantMode::Off);
+        let g = HealthGauges::compute(std::iter::once(&e));
+        assert_eq!(g.delta_frac, 0.0);
+        assert_eq!(g.tombstone_frac, 0.0);
+        assert_eq!(g.scale_drift, 0.0, "quant off → no scale gauge");
+        assert!(g.occ_max > 0, "one-hot postings must be nonempty");
+        assert!(g.occ_mean > 0.0);
+        assert!((0.0..1.0).contains(&g.occ_gini), "gini in [0,1): {}", g.occ_gini);
+        let line = g.render();
+        assert!(line.contains("occupancy max"), "{line}");
+        assert!(line.contains("tombstones"), "{line}");
+    }
+
+    #[test]
+    fn mutation_debt_moves_the_fractions() {
+        let mut e = build(QuantMode::Int8 { refine: 4 });
+        let k = e.dim();
+        // grow a delta segment and tombstone part of the base
+        for id in 64..72u32 {
+            e.upsert(id, &vec![0.5; k]).expect("upsert");
+        }
+        for id in 0..4u32 {
+            e.remove(id).expect("remove");
+        }
+        let g = HealthGauges::compute(std::iter::once(&e));
+        assert!(g.delta_frac > 0.0, "delta rows pending: {:?}", g);
+        assert!(g.tombstone_frac > 0.0, "tombstoned rows: {:?}", g);
+        assert!(g.scale_drift >= 0.0);
+    }
+}

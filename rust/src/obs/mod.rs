@@ -1,18 +1,28 @@
 //! Observability substrate: leveled logging, latency histograms,
-//! per-request stage tracing, work counters, and the slow-query log.
+//! per-request stage tracing, work counters, the slow-query log, and the
+//! shadow-rescore quality auditor.
 //!
 //! The serving pipeline's measurement substrate (`docs/OBSERVABILITY.md`):
 //! [`Histogram`]s record per-stage latencies lock-free, [`WorkCounts`]
 //! tallies physical work thread-locally, a [`Sampler`] + [`StageTimer`]
 //! pair traces sampled requests into the [`SlowLog`], and immutable
 //! [`HistogramSnapshot`]s make the whole state scrapeable and
-//! delta-subtractable for interval rates.
+//! delta-subtractable for interval rates. On top of the timing substrate,
+//! an [`Auditor`] shadow-rescores a deterministic sample of served
+//! queries on a background thread (recall@k, score error, rank
+//! displacement — the [`WorstLog`] ring keeps the worst offenders) and
+//! recomputes [`HealthGauges`] over the index whenever the catalogue
+//! version moves.
 
+mod audit;
+mod health;
 mod hist;
 mod log;
 mod trace;
 pub mod work;
 
+pub use audit::{AuditEntry, Auditor, WorstLog};
+pub use health::HealthGauges;
 pub use hist::{Histogram, HistogramSnapshot};
 pub use log::{level, set_level, Level, Logger};
 pub use trace::{Sampler, SlowEntry, SlowLog, StageTimer};

@@ -199,6 +199,29 @@ mod tests {
     }
 
     #[test]
+    fn sampler_stride_is_deterministic_under_concurrent_recorders() {
+        // The atomic ticket counter makes the hit *count* a pure function
+        // of the call count, whatever the thread interleaving: every
+        // period-th ticket hits, and tickets are handed out exactly once.
+        const THREADS: usize = 8;
+        const PER: usize = 400;
+        let s = Sampler::new(0.25); // period 4
+        let hits: usize = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..THREADS)
+                .map(|_| {
+                    let s = &s;
+                    scope.spawn(move || (0..PER).filter(|_| s.hit()).count())
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).sum()
+        });
+        assert_eq!(hits, THREADS * PER / 4, "exactly 1-in-4 across threads");
+        // and the stride continues seamlessly after the burst
+        let tail = (0..40).filter(|_| s.hit()).count();
+        assert_eq!(tail, 10);
+    }
+
+    #[test]
     fn slow_log_keeps_n_slowest_sorted() {
         let log = SlowLog::new(3, 100);
         for total_us in [150u64, 50, 400, 200, 300, 99] {
