@@ -22,9 +22,10 @@
 
 mod common;
 
-use geomap::bench::{black_box, Bencher};
+use geomap::bench::{black_box, Bencher, GateResult};
 use geomap::configx::{PostingsMode, SchemaConfig};
 use geomap::engine::{BatchCandidates, Engine, SourceScratch};
+use geomap::kernels::{self, KernelsMode};
 use geomap::linalg::Matrix;
 use geomap::testing::fix;
 
@@ -94,10 +95,62 @@ fn main() {
         }
     }
 
+    // per-kernel throughput at the gate point: the same term-major walk
+    // under forced-scalar vs auto (runtime-detected) dispatch. The
+    // candidate sets are identical either way (docs/KERNELS.md); this
+    // tracks what the unpack + accumulate SIMD arms buy the whole walk.
+    b.group("kernel dispatch at the gate point (packed, B=32)");
+    {
+        let engine = Engine::builder()
+            .schema(SchemaConfig::TernaryOneHot)
+            .threshold(0.5)
+            .postings(PostingsMode::Packed)
+            .build(items.clone())
+            .unwrap();
+        let blocks: Vec<Matrix> = (0..n_users / GATE_B)
+            .map(|i| users.slice_rows(i * GATE_B, (i + 1) * GATE_B))
+            .collect();
+        let mut scratch = SourceScratch::new();
+        let mut cand = BatchCandidates::new();
+        for (label, mode) in
+            [("scalar", KernelsMode::Scalar), ("auto", KernelsMode::Auto)]
+        {
+            kernels::set_mode(mode);
+            let arm = kernels::active().name;
+            let mut i = 0usize;
+            b.bench(
+                &format!("term-major B={GATE_B} kernels={label} [{arm}]"),
+                GATE_B,
+                || {
+                    engine
+                        .candidates_batch_into(
+                            &blocks[i % blocks.len()],
+                            &mut scratch,
+                            &mut cand,
+                        )
+                        .unwrap();
+                    black_box(cand.all_ids().len());
+                    i += 1;
+                },
+            );
+        }
+        kernels::set_mode(KernelsMode::Auto);
+    }
+
     let speedup = gate.expect("gate point (packed, B=32) must have run");
     println!(
         "\nB={GATE_B} packed arena: term-major batch = {speedup:.2}x the \
          per-query path (gate: ≥ {GATE_SPEEDUP}x)"
+    );
+    b.write_json(
+        "batch_prune",
+        &[GateResult {
+            name: format!("term-major B={GATE_B} packed speedup"),
+            required: GATE_SPEEDUP,
+            measured: speedup,
+            passed: speedup >= GATE_SPEEDUP,
+            skipped: false,
+        }],
     );
     assert!(
         speedup >= GATE_SPEEDUP,

@@ -24,8 +24,10 @@
 
 mod common;
 
-use geomap::bench::{black_box, Bencher};
+use geomap::bench::{black_box, Bencher, GateResult};
 use geomap::configx::{Backend, PostingsMode, SchemaConfig};
+use geomap::kernels;
+use geomap::quant::PackedPostings;
 use geomap::coordinator::{merge_topk, process_batch, FactorStore, WorkerScratch};
 use geomap::embedding::Mapper;
 use geomap::engine::{BatchCandidates, Engine, SourceScratch};
@@ -228,6 +230,142 @@ fn main() {
         });
     }
 
+    // ---- L3: dispatched hot-path kernels -------------------------------
+    // Scalar vs runtime-detected vector arms of the three dispatched
+    // kernels (docs/KERNELS.md). Both arms are bit-identical; the only
+    // question here is throughput. The dot gate below enforces the
+    // headline ≥2× vectorized speedup — but only on AVX2 hosts under
+    // the full profile; everywhere else the comparison is report-only.
+    b.group("kernels (scalar vs vector dispatch)");
+    let mut gates: Vec<GateResult> = Vec::new();
+    let scalar = kernels::scalar();
+    let vector = kernels::vector();
+    println!(
+        "   (vector arm: {})",
+        vector.map_or("none detected", |v| v.name)
+    );
+    let mut krng = Rng::seeded(77);
+
+    // i8×i8→i32 dot: the serving lane width (k=32) plus a longer 256
+    // lane where the SIMD win is unambiguous
+    let mut dot_speedup_256 = None;
+    for len in [32usize, 256] {
+        let qa: Vec<i8> =
+            (0..len).map(|_| (krng.next_u64() as i8).max(-127)).collect();
+        let qb: Vec<i8> =
+            (0..len).map(|_| (krng.next_u64() as i8).max(-127)).collect();
+        b.bench(&format!("dot_i8 len={len} (scalar)"), len, || {
+            black_box((scalar.dot_i8)(&qa, &qb));
+        });
+        let scalar_ns = b.results().last().unwrap().mean_ns();
+        if let Some(v) = vector {
+            assert_eq!(
+                (scalar.dot_i8)(&qa, &qb),
+                (v.dot_i8)(&qa, &qb),
+                "arms disagree"
+            );
+            b.bench(&format!("dot_i8 len={len} ({})", v.name), len, || {
+                black_box((v.dot_i8)(&qa, &qb));
+            });
+            let speedup = scalar_ns / b.results().last().unwrap().mean_ns();
+            println!("   [kernel] dot_i8 len={len}: {speedup:.2}x vs scalar");
+            if len == 256 {
+                dot_speedup_256 = Some(speedup);
+            }
+        }
+    }
+
+    // 128-entry delta-decoded block unpack, on a dense posting dim
+    {
+        let ids: Vec<u32> = {
+            let mut cur = 0u32;
+            (0..4096)
+                .map(|_| {
+                    cur += 1 + (krng.next_u64() % 37) as u32;
+                    cur
+                })
+                .collect()
+        };
+        let pk = PackedPostings::pack(
+            1,
+            ids.last().map_or(1, |&m| m as usize + 1),
+            |_| ids.as_slice(),
+        );
+        let blocks: Vec<usize> = pk.dim_blocks(0).collect();
+        let mut out = Vec::new();
+        b.bench("block unpack (scalar)", 4096, || {
+            for &blk in &blocks {
+                pk.decode_block_with(scalar, blk, &mut out);
+            }
+            black_box(out.len());
+        });
+        let scalar_ns = b.results().last().unwrap().mean_ns();
+        if let Some(v) = vector {
+            b.bench(&format!("block unpack ({})", v.name), 4096, || {
+                for &blk in &blocks {
+                    pk.decode_block_with(v, blk, &mut out);
+                }
+                black_box(out.len());
+            });
+            let speedup = scalar_ns / b.results().last().unwrap().mean_ns();
+            println!("   [kernel] block unpack: {speedup:.2}x vs scalar");
+        }
+    }
+
+    // B-lane saturating counter accumulation (batched prune step 2):
+    // 128 posting rows × full 32-query chunk per call
+    {
+        let chunk = 32usize;
+        let rows: Vec<u32> =
+            (0..128).map(|_| krng.below(1024) as u32).collect();
+        let lanes: Vec<u16> = (0..chunk as u16).collect();
+        let mut inc = vec![0u16; chunk];
+        for &l in &lanes {
+            inc[l as usize] = 1;
+        }
+        let mut counts = vec![0u16; 1024 * chunk];
+        b.bench("accum_lanes 128 rows (scalar)", 128 * chunk, || {
+            (scalar.accum_lanes)(&mut counts, chunk, &rows, &lanes, &inc);
+            black_box(counts[0]);
+        });
+        let scalar_ns = b.results().last().unwrap().mean_ns();
+        if let Some(v) = vector {
+            counts.iter_mut().for_each(|c| *c = 0);
+            b.bench(
+                &format!("accum_lanes 128 rows ({})", v.name),
+                128 * chunk,
+                || {
+                    (v.accum_lanes)(&mut counts, chunk, &rows, &lanes, &inc);
+                    black_box(counts[0]);
+                },
+            );
+            let speedup = scalar_ns / b.results().last().unwrap().mean_ns();
+            println!("   [kernel] accum_lanes: {speedup:.2}x vs scalar");
+        }
+    }
+
+    // gate: the vectorized dot must earn its keep on AVX2 hosts. The
+    // fast CI profile and non-AVX2 arms (NEON autovectorizes the scalar
+    // loop well) report without enforcing.
+    {
+        let enforce = !b.fast_profile()
+            && vector.is_some_and(|v| v.name == "avx2");
+        let measured = dot_speedup_256.unwrap_or(0.0);
+        gates.push(GateResult {
+            name: "dot_i8 len=256 vector speedup".into(),
+            required: 2.0,
+            measured,
+            passed: measured >= 2.0,
+            skipped: !enforce,
+        });
+        if enforce {
+            assert!(
+                measured >= 2.0,
+                "vectorized dot_i8 speedup {measured:.2}x < 2.0x gate"
+            );
+        }
+    }
+
     // ---- L2/L1: rescoring backends -------------------------------------
     b.group("exact rescoring (B=32 tile=2048)");
     let mut rng = Rng::seeded(9);
@@ -305,4 +443,6 @@ fn main() {
     b.bench("merge_topk 4 shards kappa=10", 1, || {
         black_box(merge_topk(&parts, 10).len());
     });
+
+    b.write_json("micro_hotpath", &gates);
 }

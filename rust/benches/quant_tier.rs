@@ -25,10 +25,11 @@
 
 mod common;
 
-use geomap::bench::{black_box, Bencher};
+use geomap::bench::{black_box, Bencher, GateResult};
 use geomap::configx::{PostingsMode, QuantMode, SchemaConfig};
 use geomap::engine::{Engine, SourceScratch};
 use geomap::evalx::render_table;
+use geomap::kernels::{self, KernelsMode};
 use geomap::linalg::Matrix;
 
 const KAPPA: usize = 10;
@@ -65,7 +66,9 @@ fn run_workload(
     threshold: f32,
     users: &Matrix,
     items: &Matrix,
+    bencher: &mut Bencher,
     failures: &mut Vec<String>,
+    gates: &mut Vec<GateResult>,
 ) {
     println!(
         "\n== {workload}: {} items, k={} (schema ternary-onehot, \
@@ -105,7 +108,6 @@ fn run_workload(
         (0..probes).map(|r| top_ids(&engines[0], users.row(r))).collect();
 
     let mut results = Vec::new();
-    let mut bencher = Bencher::from_env();
     for (cfg, engine) in configs.iter().zip(&engines) {
         let (mut hits, mut total) = (0usize, 0usize);
         for (r, want) in reference.iter().enumerate() {
@@ -164,37 +166,107 @@ fn run_workload(
     );
 
     // acceptance gates, judged on the synthetic workload at the default
-    // profile (the CI fast profile is too small to be meaningful)
-    if workload == "synthetic" && !common::fast() {
+    // profile (the CI fast profile is too small to be meaningful); the
+    // measured values still land in BENCH_quant_tier.json either way,
+    // flagged skipped when unenforced
+    if workload == "synthetic" {
+        let enforce = !common::fast();
         let ratio =
             f32_raw.scan_bytes as f64 / int8_packed.scan_bytes as f64;
-        if ratio < 3.0 {
-            failures.push(format!(
-                "int8+packed only {ratio:.2}x smaller than f32+raw (target 3x)"
-            ));
+        for (name, required, measured) in [
+            ("int8+packed scan-tier shrink", 3.0, ratio),
+            ("int8+packed recall@10", 0.99, int8_packed.recall),
+            ("f32+packed recall@10", 1.0, results[2].recall),
+        ] {
+            gates.push(GateResult {
+                name: name.into(),
+                required,
+                measured,
+                passed: measured >= required,
+                skipped: !enforce,
+            });
         }
-        if int8_packed.recall < 0.99 {
-            failures.push(format!(
-                "int8+packed recall@10 {:.4} below 0.99",
-                int8_packed.recall
-            ));
-        }
-        if results[2].recall < 1.0 {
-            failures.push(format!(
-                "f32+packed recall@10 {:.4} — packing must not change \
-                 results at all",
-                results[2].recall
-            ));
+        if enforce {
+            if ratio < 3.0 {
+                failures.push(format!(
+                    "int8+packed only {ratio:.2}x smaller than f32+raw \
+                     (target 3x)"
+                ));
+            }
+            if int8_packed.recall < 0.99 {
+                failures.push(format!(
+                    "int8+packed recall@10 {:.4} below 0.99",
+                    int8_packed.recall
+                ));
+            }
+            if results[2].recall < 1.0 {
+                failures.push(format!(
+                    "f32+packed recall@10 {:.4} — packing must not change \
+                     results at all",
+                    results[2].recall
+                ));
+            }
         }
     }
 }
 
 fn main() {
     let mut failures = Vec::new();
+    let mut gates = Vec::new();
+    let mut bencher = Bencher::from_env();
     let (users, items) = common::synthetic_workload();
-    run_workload("synthetic", 1.5, &users, &items, &mut failures);
+    run_workload(
+        "synthetic", 1.5, &users, &items, &mut bencher, &mut failures,
+        &mut gates,
+    );
+
+    // per-kernel rescore throughput: the int8 scan under forced-scalar
+    // vs auto (runtime-detected) dispatch — identical top-κ either way
+    // (docs/KERNELS.md), only the i8-dot arm changes
+    println!("\n== kernel dispatch: int8 rescore (synthetic) ==");
+    {
+        let engine = Engine::builder()
+            .schema(SchemaConfig::TernaryOneHot)
+            .threshold(1.5)
+            .quant(QuantMode::Int8 { refine: 4 })
+            .postings(PostingsMode::Packed)
+            .build(items.clone())
+            .expect("int8+packed");
+        let probes = (if common::fast() { 24 } else { 64 }).min(users.rows());
+        let mut scratch = SourceScratch::new();
+        let mut cand = Vec::new();
+        let mut qbuf = Vec::new();
+        for (label, mode) in
+            [("scalar", KernelsMode::Scalar), ("auto", KernelsMode::Auto)]
+        {
+            kernels::set_mode(mode);
+            let arm = kernels::active().name;
+            let mut r = 0usize;
+            bencher.bench(
+                &format!("synthetic: top-{KAPPA} int8 kernels={label} [{arm}]"),
+                1,
+                || {
+                    let user = users.row(r);
+                    engine
+                        .candidates_into(user, &mut scratch, &mut cand)
+                        .expect("candidates");
+                    let top =
+                        engine.rescore_into(user, &cand, KAPPA, &mut qbuf);
+                    black_box(top.len());
+                    r = (r + 1) % probes;
+                },
+            );
+        }
+        kernels::set_mode(KernelsMode::Auto);
+    }
+
     let (users, items) = common::movielens_workload();
-    run_workload("movielens", 1.3, &users, &items, &mut failures);
+    run_workload(
+        "movielens", 1.3, &users, &items, &mut bencher, &mut failures,
+        &mut gates,
+    );
+
+    bencher.write_json("quant_tier", &gates);
 
     if failures.is_empty() {
         if common::fast() {

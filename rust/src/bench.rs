@@ -162,6 +162,91 @@ impl Bencher {
     pub fn group(&self, title: &str) {
         println!("\n== {title} ==");
     }
+
+    /// True when the quick CI profile is active (`GEOMAP_BENCH_FAST=1`):
+    /// gated benches switch to report-only under it, since 200 ms
+    /// sampling windows are too noisy to fail a build on.
+    pub fn fast_profile(&self) -> bool {
+        self.measure < Duration::from_secs(1)
+    }
+
+    /// Write every collected case plus the gate verdicts as a
+    /// machine-readable `BENCH_<name>.json` under
+    /// `$GEOMAP_BENCH_JSON_DIR` (default `target/bench-json`).
+    ///
+    /// Best-effort: an unwritable directory prints a `[bench json]
+    /// skipped` line and never fails the bench run — the JSON artifact
+    /// is a CI convenience, not a gate.
+    pub fn write_json(&self, bench: &str, gates: &[GateResult]) {
+        use crate::configx::json::{obj, Json};
+        let cases: Vec<Json> = self
+            .results
+            .iter()
+            .map(|s| {
+                obj(vec![
+                    ("name", Json::from(s.name.as_str())),
+                    ("mean_ns", Json::from(s.mean_ns())),
+                    ("p50_ns", Json::from(s.quantile_ns(0.5))),
+                    ("p99_ns", Json::from(s.quantile_ns(0.99))),
+                    (
+                        "items_per_iter",
+                        s.items_per_iter.map(Json::from).unwrap_or(Json::Null),
+                    ),
+                    (
+                        "throughput",
+                        s.throughput().map(Json::from).unwrap_or(Json::Null),
+                    ),
+                ])
+            })
+            .collect();
+        let gates: Vec<Json> = gates.iter().map(GateResult::to_json).collect();
+        let doc = obj(vec![
+            ("bench", Json::from(bench)),
+            ("fast_profile", Json::from(self.fast_profile())),
+            ("cases", Json::from(cases)),
+            ("gates", Json::from(gates)),
+        ]);
+        let dir = std::env::var("GEOMAP_BENCH_JSON_DIR")
+            .unwrap_or_else(|_| "target/bench-json".to_string());
+        let path = format!("{dir}/BENCH_{bench}.json");
+        let write = std::fs::create_dir_all(&dir)
+            .and_then(|()| std::fs::write(&path, doc.to_string_pretty()));
+        match write {
+            Ok(()) => println!("[bench json] wrote {path}"),
+            Err(e) => println!("[bench json] skipped ({path}: {e})"),
+        }
+    }
+}
+
+/// Verdict of one gated assertion in a bench target, carried into the
+/// `BENCH_*.json` artifact so CI trend tooling sees *why* a bench
+/// passed: enforced, or skipped (fast profile / feature not present).
+#[derive(Clone, Debug)]
+pub struct GateResult {
+    /// Gate label, e.g. `dot_i8 len=256 vector speedup`.
+    pub name: String,
+    /// The threshold the measurement must meet.
+    pub required: f64,
+    /// The measured value.
+    pub measured: f64,
+    /// Whether the measurement met the threshold.
+    pub passed: bool,
+    /// True when the gate was reported but not enforced (fast profile,
+    /// or the vector arm is absent on this host).
+    pub skipped: bool,
+}
+
+impl GateResult {
+    fn to_json(&self) -> crate::configx::Json {
+        use crate::configx::json::{obj, Json};
+        obj(vec![
+            ("name", Json::from(self.name.as_str())),
+            ("required", Json::from(self.required)),
+            ("measured", Json::from(self.measured)),
+            ("passed", Json::from(self.passed)),
+            ("skipped", Json::from(self.skipped)),
+        ])
+    }
 }
 
 /// Prevent the optimiser from discarding a value (ptr read fence).
@@ -203,6 +288,50 @@ mod tests {
         assert!(s.quantile_ns(0.0) <= s.quantile_ns(0.5));
         assert!(s.quantile_ns(0.5) <= s.quantile_ns(1.0));
         assert!(s.throughput().is_none());
+    }
+
+    #[test]
+    fn write_json_roundtrips() {
+        use crate::configx::Json;
+        let mut b = Bencher {
+            warmup: Duration::from_millis(1),
+            measure: Duration::from_millis(20),
+            samples: 3,
+            results: Vec::new(),
+        };
+        let mut acc = 0u64;
+        b.bench("case-a", 4, || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        let gates = [GateResult {
+            name: "speedup".into(),
+            required: 2.0,
+            measured: 2.5,
+            passed: true,
+            skipped: false,
+        }];
+        // default dir (target/bench-json) — the env override is
+        // process-global, so tests stick to the default path
+        b.write_json("selftest", &gates);
+        let raw = std::fs::read_to_string(
+            "target/bench-json/BENCH_selftest.json",
+        )
+        .expect("artifact written");
+        let j = Json::parse(&raw).expect("artifact parses");
+        assert_eq!(j.opt("bench").unwrap().as_str().unwrap(), "selftest");
+        assert!(j.opt("fast_profile").unwrap().as_bool().unwrap());
+        let cases = match j.opt("cases").unwrap() {
+            Json::Arr(v) => v,
+            other => panic!("cases not an array: {other:?}"),
+        };
+        assert_eq!(cases[0].opt("name").unwrap().as_str().unwrap(), "case-a");
+        assert!(cases[0].opt("mean_ns").unwrap().as_f64().unwrap() > 0.0);
+        let gates = match j.opt("gates").unwrap() {
+            Json::Arr(v) => v,
+            other => panic!("gates not an array: {other:?}"),
+        };
+        assert!(gates[0].opt("passed").unwrap().as_bool().unwrap());
+        assert!(!gates[0].opt("skipped").unwrap().as_bool().unwrap());
     }
 
     #[test]

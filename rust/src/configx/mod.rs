@@ -7,6 +7,8 @@ pub mod json;
 pub use cli::Cli;
 pub use json::{obj, Json};
 
+pub use crate::kernels::KernelsMode;
+
 use crate::error::{GeomapError, Result};
 
 /// Which sparse-mapping schema the serving stack uses (paper §4).
@@ -610,6 +612,13 @@ pub struct ServeConfig {
     /// `--audit-half-life`/`--recall-floor`) — see `docs/OBSERVABILITY.md`
     /// §Quality audit.
     pub audit: AuditConfig,
+    /// Hot-path kernel dispatch (JSON `"kernels": "auto" | "scalar"`,
+    /// CLI `--kernels`): `auto` installs runtime-detected SIMD arms for
+    /// the i8 dot / block unpack / lane-accumulate loops, `scalar`
+    /// forces the portable reference arms. Results are bit-identical
+    /// either way — this is a perf/debug escape hatch, not a quality
+    /// knob — see `docs/KERNELS.md`.
+    pub kernels: KernelsMode,
 }
 
 /// Parse an `on`/`off` toggle (the `batch_prune` knob's CLI/JSON form).
@@ -646,6 +655,7 @@ impl Default for ServeConfig {
             net: NetMode::Off,
             obs: ObsConfig::default(),
             audit: AuditConfig::default(),
+            kernels: KernelsMode::Auto,
         }
     }
 }
@@ -773,6 +783,9 @@ impl ServeConfig {
         }
         if let Some(v) = j.opt("postings") {
             c.postings = PostingsMode::parse(v.as_str()?)?;
+        }
+        if let Some(v) = j.opt("kernels") {
+            c.kernels = KernelsMode::parse(v.as_str()?)?;
         }
         if let Some(v) = j.opt("batch_prune") {
             c.batch_prune = parse_on_off(v.as_str()?, "batch_prune")?;
@@ -903,6 +916,17 @@ mod tests {
     fn from_json_rejects_bad_types() {
         let j = Json::parse(r#"{"k": "many"}"#).unwrap();
         assert!(ServeConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn kernels_json_wiring_and_default() {
+        assert_eq!(ServeConfig::default().kernels, KernelsMode::Auto);
+        let j = Json::parse(r#"{"kernels": "scalar"}"#).unwrap();
+        let c = ServeConfig::from_json(&j).unwrap();
+        assert_eq!(c.kernels, KernelsMode::Scalar);
+        let j = Json::parse(r#"{"kernels": "avx512"}"#).unwrap();
+        let err = ServeConfig::from_json(&j).unwrap_err().to_string();
+        assert!(err.contains("kernels"), "{err}");
     }
 
     #[test]

@@ -229,6 +229,15 @@ impl Coordinator {
         store: Arc<FactorStore>,
         factory: ScorerFactory,
     ) -> Result<Coordinator> {
+        // install the hot-path kernel dispatch before any worker spins
+        // up; results are identical either way (docs/KERNELS.md), so
+        // this never joins the spec digest or snapshots
+        crate::kernels::set_mode(cfg.kernels);
+        LOG.info(format!(
+            "kernels: {} (active arm: {})",
+            cfg.kernels.spec(),
+            crate::kernels::active().name
+        ));
         let queue = Arc::new(BoundedQueue::new(cfg.queue_cap));
         let metrics = Arc::new(ServeMetrics::new());
         let closing = Arc::new(AtomicBool::new(false));

@@ -163,6 +163,13 @@ struct BatchScratch {
     delta_out: Vec<Vec<u32>>,
     /// Per-lane emitted-candidate counts, then absolute fill cursors.
     cursors: Vec<usize>,
+    /// Live lanes of the current dim run as sparse u16 indices — the
+    /// accumulate kernel's scalar-arm form.
+    lane_idx: Vec<u16>,
+    /// Live lanes of the current dim run as a dense 0/1 increment mask
+    /// (len = chunk) — the accumulate kernel's vector-arm form (one
+    /// saturating vector add per register over the whole lane group).
+    inc: Vec<u16>,
 }
 
 /// The geomap [`CandidateSource`]: inverted-index pruning with
@@ -264,6 +271,17 @@ impl MutableCatalogue for GeomapEngine {
             return Err(GeomapError::Shape(format!(
                 "factor dim {} != k {k}",
                 factor.len()
+            )));
+        }
+        // NaN/±Inf lanes must be rejected at ingestion: a non-finite
+        // factor would quantize to a dead row while the exact-f32
+        // refinement propagates NaN into the top-κ ordering, silently
+        // diverging served and audited scores
+        if let Some(j) = factor.iter().position(|x| !x.is_finite()) {
+            return Err(GeomapError::Shape(format!(
+                "upsert id {id}: factor coordinate {j} is non-finite \
+                 ({}); factors must be finite",
+                factor[j]
             )));
         }
         if (id as usize) > self.addr {
@@ -477,7 +495,12 @@ impl CandidateSource for GeomapEngine {
             block,
             delta_out,
             cursors,
+            lane_idx,
+            inc,
         } = batch;
+        // one dispatch resolve per batch call; every arm counts
+        // identically (tests/kernel_equivalence.rs)
+        let kern = crate::kernels::active();
         let min = self.min_overlap.min(u16::MAX as usize) as u16;
         out.clear();
         let mut q0 = 0usize;
@@ -540,7 +563,16 @@ impl CandidateSource for GeomapEngine {
                     while j < plan.len() && (plan[j] >> 32) as u32 == dim {
                         j += 1;
                     }
-                    let lanes = &plan[i..j];
+                    // the run's live lanes, in both kernel-arm forms:
+                    // sparse indices (scalar) and a dense mask (vector)
+                    lane_idx.clear();
+                    inc.clear();
+                    inc.resize(chunk, 0);
+                    for &pl in &plan[i..j] {
+                        let lane = pl as u32 as u16;
+                        lane_idx.push(lane);
+                        inc[lane as usize] = 1;
+                    }
                     self.base.index.posting_chunks(
                         dim as usize,
                         block,
@@ -551,13 +583,10 @@ impl CandidateSource for GeomapEngine {
                                     seen[r] = true;
                                     touched.push(row);
                                 }
-                                let at = r * chunk;
-                                for &pl in lanes {
-                                    let c =
-                                        &mut counts[at + pl as u32 as usize];
-                                    *c = c.saturating_add(1);
-                                }
                             }
+                            (kern.accum_lanes)(
+                                counts, chunk, ids, lane_idx, inc,
+                            );
                         },
                     );
                     i = j;

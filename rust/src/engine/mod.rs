@@ -606,6 +606,25 @@ impl EngineBuilder {
                 self.backend.name()
             )));
         }
+        // the builder is the other ingestion boundary (upsert is the
+        // first): a NaN/±Inf lane would quantize to a dead row while the
+        // exact-f32 refinement propagates NaN into the top-κ ordering,
+        // so served and audited scores silently diverge — reject here
+        if let Some(j) =
+            items.as_slice().iter().position(|x| !x.is_finite())
+        {
+            let k_dim = items.cols().max(1);
+            return Err(GeomapError::Shape(format!(
+                "item {} factor coordinate {} is non-finite ({}); \
+                 factors must be finite",
+                j / k_dim,
+                j % k_dim,
+                items.as_slice()[j]
+            )));
+        }
+        // warm the kernel dispatch once at engine build, so feature
+        // detection never lands inside a serving hot loop
+        let _ = crate::kernels::active();
         let k = items.cols();
         let source: Box<dyn CandidateSource> = match self.backend {
             Backend::Geomap => Box::new(GeomapEngine::build(
@@ -892,8 +911,10 @@ impl Engine {
                 qbuf.resize(user.len(), 0);
                 let qscale = quantize_into(user, qbuf);
                 let mut approx = TopK::new(kappa.saturating_mul(refine));
+                // resolve the dot kernel once per rescore, not per candidate
+                let kern = crate::kernels::active();
                 for &id in cand {
-                    approx.push(id, q.score(id, qbuf, qscale));
+                    approx.push(id, q.score_with(kern, id, qbuf, qscale));
                 }
                 crate::obs::work::count_dots_i8(cand.len() as u64);
                 // unsorted: the exact re-rank below imposes its own order
@@ -1283,6 +1304,73 @@ mod tests {
         let clone = engine.try_clone().unwrap();
         assert!(clone.quant_store().is_some());
         assert_eq!(clone.stats().refine_bytes, engine.stats().refine_bytes);
+    }
+
+    #[test]
+    fn builder_rejects_non_finite_items() {
+        for bad in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+            let mut its = items(12, 4, 7);
+            its.row_mut(5)[2] = bad;
+            let err = Engine::builder().build(its).unwrap_err();
+            let msg = err.to_string();
+            assert!(
+                msg.contains("item 5") && msg.contains("coordinate 2"),
+                "error should attribute the bad lane, got: {msg}"
+            );
+        }
+    }
+
+    #[test]
+    fn upsert_rejects_non_finite_factors() {
+        let mut engine = Engine::builder()
+            .mutation(MutationConfig { max_delta: 0 })
+            .build(items(20, 4, 7))
+            .unwrap();
+        for bad in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+            let err = engine.upsert(3, &[0.5, bad, 0.5, 0.5]).unwrap_err();
+            let msg = err.to_string();
+            assert!(
+                msg.contains("coordinate 1") && msg.contains("non-finite"),
+                "error should attribute the bad lane, got: {msg}"
+            );
+        }
+        // the rejected upserts left the row untouched
+        assert_eq!(
+            engine.factor(3).unwrap(),
+            items(20, 4, 7).row(3),
+            "rejected upsert must not partially apply"
+        );
+    }
+
+    #[test]
+    fn quantized_append_covers_new_id_before_scoring() {
+        // `QuantizedFactorStore::score` requires every scored id to be
+        // covered (uncovered ⇒ debug panic); the engine upholds that by
+        // extending the store in the same mutation that grows the base.
+        // Pin the append path: upsert at id == len, then score through
+        // the quantized tier immediately — the debug_assert in
+        // `score_with` would fire if the store lagged behind.
+        let mut engine = Engine::builder()
+            .threshold(0.0)
+            .quant(QuantMode::Int8 { refine: 4 })
+            .mutation(MutationConfig { max_delta: 0 })
+            .build(items(16, 8, 21))
+            .unwrap();
+        let mut rng = Rng::seeded(22);
+        for step in 0..4u32 {
+            let id = 16 + step;
+            let f: Vec<f32> = (0..8).map(|_| rng.gaussian_f32()).collect();
+            engine.upsert(id, &f).unwrap();
+            // κ == len: the appended id must flow through the i8 scan
+            let top = engine.top_k(&f, (id + 1) as usize).unwrap();
+            let s = top.iter().find(|s| s.id == id).expect("appended id");
+            assert_eq!(s.score, dot(&f, &f));
+        }
+        // removal keeps coverage too: the row goes dead, not uncovered
+        assert!(engine.remove(17).unwrap());
+        let user: Vec<f32> = (0..8).map(|_| rng.gaussian_f32()).collect();
+        let top = engine.top_k(&user, 20).unwrap();
+        assert!(top.iter().all(|s| s.id != 17));
     }
 
     #[test]

@@ -281,8 +281,10 @@ impl InvertedIndex {
                 visit(&postings[lo..hi]);
             }
             Arena::Packed(pk) => {
+                // resolve the unpack kernel once per list, not per block
+                let kern = crate::kernels::active();
                 for b in pk.dim_blocks(i) {
-                    pk.decode_block(b, block);
+                    pk.decode_block_with(kern, b, block);
                     crate::obs::work::count_packed_blocks(1);
                     visit(block);
                 }

@@ -1,0 +1,227 @@
+//! Runtime-dispatched SIMD hot-path kernels (`docs/KERNELS.md`).
+//!
+//! The three hottest inner loops of the serving path — the int8 scan
+//! dot ([`Kernels::dot_i8`]), the packed-posting delta bit-unpack
+//! ([`Kernels::unpack_deltas`]), and the batched traversal's lane-group
+//! counter accumulate ([`Kernels::accum_lanes`]) — are reached through a
+//! process-wide function-pointer table resolved at call time:
+//!
+//! * **scalar** — the portable reference implementations, always
+//!   correct, always available ([`scalar()`]).
+//! * **avx2** (x86_64) / **neon** (aarch64) — `std::arch` intrinsic
+//!   arms, installed only after runtime feature detection
+//!   (`is_x86_feature_detected!` / `is_aarch64_feature_detected!`), so
+//!   one binary serves every host ([`vector()`]).
+//!
+//! Every arm is bit-identical to scalar (integer kernels are exact and
+//! the f32 multiply order of the score path is unchanged), so candidate
+//! sets, scores, and served `top_k` bytes do not depend on the arm —
+//! property-pinned by `tests/kernel_equivalence.rs`.
+//!
+//! Dispatch is deliberately *global*, not per-engine: the arm never
+//! affects results, so it is not part of an engine spec, never joins
+//! the spec digest, and never round-trips through a snapshot. The
+//! escape hatch is [`KernelsMode::Scalar`] (config `kernels: scalar`,
+//! CLI `--kernels scalar`) or the `GEOMAP_KERNELS=scalar` environment
+//! override, which wins over the programmatic mode so CI can force the
+//! fallback arm across a whole test run.
+//!
+//! Detection runs once per process (`OnceLock`); the table resolve is
+//! one relaxed atomic load, and hot loops resolve once per call (batch,
+//! block, or rescore pass), not per element.
+
+use crate::error::{GeomapError, Result};
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+pub mod scalar;
+
+#[cfg(target_arch = "aarch64")]
+pub mod neon;
+#[cfg(target_arch = "x86_64")]
+pub mod x86;
+
+/// Kernel dispatch policy (config key `kernels`, CLI `--kernels`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum KernelsMode {
+    /// Use the best arm the host supports (the default): the detected
+    /// vector table where present, scalar otherwise.
+    #[default]
+    Auto = 0,
+    /// Force the portable scalar arm — identical results, an escape
+    /// hatch for production triage and the CI fallback leg.
+    Scalar = 1,
+}
+
+impl KernelsMode {
+    /// Parse from CLI/JSON string form: `auto`, `scalar`.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "auto" => Ok(KernelsMode::Auto),
+            "scalar" => Ok(KernelsMode::Scalar),
+            _ => Err(GeomapError::Config(format!(
+                "kernels must be one of auto | scalar (got '{s}')"
+            ))),
+        }
+    }
+
+    /// Canonical string form; `KernelsMode::parse(m.spec())` round-trips.
+    pub fn spec(&self) -> &'static str {
+        match self {
+            KernelsMode::Auto => "auto",
+            KernelsMode::Scalar => "scalar",
+        }
+    }
+}
+
+/// One dispatch arm: the three hot-loop kernels plus a display name.
+///
+/// All arms share exact integer semantics (including wrapping and
+/// saturation behaviour), so swapping tables can never change results.
+pub struct Kernels {
+    /// Arm name for logs and bench labels (`scalar`, `avx2`, `neon`).
+    pub name: &'static str,
+    /// Widening i8×i8→i32 dot product over equal-length slices — the
+    /// quant scan tier's inner loop. Exact i32 accumulation (callers
+    /// keep `len · 127² ≪ 2³¹`).
+    pub dot_i8: fn(&[i8], &[i8]) -> i32,
+    /// Append `count - 1` delta-decoded ids to `out`: gaps are packed
+    /// LSB-first at a fixed `width` (1..=32 bits) starting at
+    /// `words[start]`, and id `i` reconstructs as
+    /// `id[i-1] + gap + 1` with *wrapping* u32 arithmetic (corrupt
+    /// arenas are caught by validation, never by a panic here). The
+    /// caller handles `width == 0` (consecutive runs) itself.
+    /// Signature: `(words, start, width, count, first_id, out)`.
+    pub unpack_deltas: fn(&[u32], usize, u32, usize, u32, &mut Vec<u32>),
+    /// For every row in `rows`, saturating-add 1 to the u16 overlap
+    /// counters of the live lanes of that row's lane group
+    /// (`counts[row·chunk ..][lane]`). The live lanes arrive twice:
+    /// as a sparse index list `lanes` (scalar arm) and as a dense 0/1
+    /// increment mask `inc` of length `chunk` (vector arm — one
+    /// saturating vector add per register over the whole group).
+    /// Signature: `(counts, chunk, rows, lanes, inc)`.
+    pub accum_lanes: fn(&mut [u16], usize, &[u32], &[u16], &[u16]),
+}
+
+/// The always-available portable arm.
+static SCALAR: Kernels = Kernels {
+    name: "scalar",
+    dot_i8: scalar::dot_i8,
+    unpack_deltas: scalar::unpack_deltas,
+    accum_lanes: scalar::accum_lanes,
+};
+
+/// Process-wide dispatch mode (see [`set_mode`]); 0 = auto, 1 = scalar.
+static MODE: AtomicU8 = AtomicU8::new(0);
+
+/// Set the process-wide dispatch mode. The coordinator calls this from
+/// the serving config at start-up; benches flip it to pin an arm.
+pub fn set_mode(mode: KernelsMode) {
+    MODE.store(mode as u8, Ordering::Relaxed);
+}
+
+/// The current process-wide dispatch mode (before the env override).
+pub fn mode() -> KernelsMode {
+    match MODE.load(Ordering::Relaxed) {
+        1 => KernelsMode::Scalar,
+        _ => KernelsMode::Auto,
+    }
+}
+
+/// `GEOMAP_KERNELS` environment override, read once per process. A set,
+/// parseable value wins over the programmatic mode (so a CI leg can run
+/// the whole suite on the scalar arm); unset or unparseable is ignored.
+fn env_override() -> Option<KernelsMode> {
+    static FORCE: OnceLock<Option<KernelsMode>> = OnceLock::new();
+    *FORCE.get_or_init(|| {
+        std::env::var("GEOMAP_KERNELS")
+            .ok()
+            .and_then(|s| KernelsMode::parse(&s).ok())
+    })
+}
+
+/// The portable scalar arm (always available).
+pub fn scalar() -> &'static Kernels {
+    &SCALAR
+}
+
+/// The host's vector arm, if the CPU has one: AVX2 on x86_64, NEON on
+/// aarch64, `None` elsewhere. Feature detection runs once per process.
+pub fn vector() -> Option<&'static Kernels> {
+    static DETECTED: OnceLock<Option<&'static Kernels>> = OnceLock::new();
+    *DETECTED.get_or_init(detect)
+}
+
+#[cfg(target_arch = "x86_64")]
+fn detect() -> Option<&'static Kernels> {
+    if std::arch::is_x86_feature_detected!("avx2") {
+        Some(&x86::AVX2)
+    } else {
+        None
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+fn detect() -> Option<&'static Kernels> {
+    if std::arch::is_aarch64_feature_detected!("neon") {
+        Some(&neon::NEON)
+    } else {
+        None
+    }
+}
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+fn detect() -> Option<&'static Kernels> {
+    None
+}
+
+/// Resolve the active dispatch table: the env override (when set) or
+/// the programmatic mode, with `Auto` falling back to scalar on hosts
+/// without a vector arm. Hot loops call this once per pass, not per
+/// element.
+#[inline]
+pub fn active() -> &'static Kernels {
+    let m = env_override().unwrap_or_else(mode);
+    match m {
+        KernelsMode::Scalar => &SCALAR,
+        KernelsMode::Auto => vector().unwrap_or(&SCALAR),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_parse_roundtrips() {
+        for m in [KernelsMode::Auto, KernelsMode::Scalar] {
+            assert_eq!(KernelsMode::parse(m.spec()).unwrap(), m);
+        }
+        assert!(KernelsMode::parse("avx2").is_err());
+        assert!(KernelsMode::parse("").is_err());
+        assert_eq!(KernelsMode::default(), KernelsMode::Auto);
+    }
+
+    #[test]
+    fn scalar_arm_always_available() {
+        assert_eq!(scalar().name, "scalar");
+        // active() resolves to a real table under any mode/host/env
+        let k = active();
+        assert!(
+            k.name == "scalar"
+                || Some(k.name) == vector().map(|v| v.name),
+            "active arm '{}' is neither scalar nor the detected vector",
+            k.name
+        );
+    }
+
+    #[test]
+    fn arms_agree_on_a_smoke_dot() {
+        let a: Vec<i8> = (0..97).map(|i| ((i * 37) % 255 - 127) as i8).collect();
+        let b: Vec<i8> = (0..97).map(|i| ((i * 53) % 255 - 127) as i8).collect();
+        let want = (scalar().dot_i8)(&a, &b);
+        if let Some(v) = vector() {
+            assert_eq!((v.dot_i8)(&a, &b), want, "arm {}", v.name);
+        }
+    }
+}

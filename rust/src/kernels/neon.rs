@@ -1,0 +1,124 @@
+//! NEON kernel arm (aarch64). Reached only through [`super::vector`],
+//! which installs the table after `is_aarch64_feature_detected!("neon")`
+//! succeeds — that runtime check is the safety argument for every
+//! wrapper below (NEON is baseline on aarch64, but the check keeps the
+//! dispatch contract uniform with x86).
+
+use super::Kernels;
+use std::arch::aarch64::*;
+
+/// The NEON dispatch table (see module docs for the safety argument).
+pub static NEON: Kernels = Kernels {
+    name: "neon",
+    dot_i8,
+    unpack_deltas,
+    accum_lanes,
+};
+
+fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
+    debug_assert_eq!(a.len(), b.len());
+    // SAFETY: NEON presence was verified before this table was installed.
+    unsafe { dot_i8_neon(a, b) }
+}
+
+/// 16 codes per iteration: widening i8×i8→i16 multiplies
+/// (`vmull_s8` / `vmull_high_s8`), pairwise add-accumulate into i32
+/// lanes (`vpadalq_s16` — exact, like the scalar arm), then a
+/// horizontal reduce.
+#[target_feature(enable = "neon")]
+unsafe fn dot_i8_neon(a: &[i8], b: &[i8]) -> i32 {
+    unsafe {
+        let n = a.len();
+        let pa = a.as_ptr();
+        let pb = b.as_ptr();
+        let mut acc = vdupq_n_s32(0);
+        let mut i = 0usize;
+        while i + 16 <= n {
+            let va = vld1q_s8(pa.add(i));
+            let vb = vld1q_s8(pb.add(i));
+            acc = vpadalq_s16(acc, vmull_s8(vget_low_s8(va), vget_low_s8(vb)));
+            acc = vpadalq_s16(acc, vmull_high_s8(va, vb));
+            i += 16;
+        }
+        let mut sum = vaddvq_s32(acc);
+        while i < n {
+            sum += a[i] as i32 * b[i] as i32;
+            i += 1;
+        }
+        sum
+    }
+}
+
+/// Branchless gap extraction: no carried bit cursor — each gap's bits
+/// land inside one u64 window (`width ≤ 32`, in-word offset ≤ 31), so
+/// the loop is a pure load/shift/mask chain the backend pipelines well.
+/// The id reconstruction itself is a loop-carried prefix sum and stays
+/// scalar on this arm.
+fn unpack_deltas(
+    words: &[u32],
+    start: usize,
+    width: u32,
+    count: usize,
+    first: u32,
+    out: &mut Vec<u32>,
+) {
+    let mask = (1u64 << width) - 1;
+    let mut id = first;
+    for g in 0..count.saturating_sub(1) {
+        let bit = g as u64 * width as u64;
+        let wi = start + (bit >> 5) as usize;
+        let lo = words[wi] as u64;
+        let hi = if wi + 1 < words.len() {
+            words[wi + 1] as u64
+        } else {
+            0
+        };
+        let gap = (((lo | (hi << 32)) >> (bit & 31)) & mask) as u32;
+        id = id.wrapping_add(gap).wrapping_add(1);
+        out.push(id);
+    }
+}
+
+fn accum_lanes(
+    counts: &mut [u16],
+    chunk: usize,
+    rows: &[u32],
+    lanes: &[u16],
+    inc: &[u16],
+) {
+    // the vector form needs a full 32-lane group (one cache line, four
+    // 128-bit registers); partial tail chunks take the scalar arm
+    if chunk != 32 || inc.len() < 32 {
+        return super::scalar::accum_lanes(counts, chunk, rows, lanes, inc);
+    }
+    debug_assert!(rows
+        .iter()
+        .all(|&r| (r as usize + 1) * 32 <= counts.len()));
+    // SAFETY: NEON presence was verified before this table was
+    // installed; the debug_assert above states the caller's bounds
+    // contract (`counts` covers every row's 32-lane group).
+    unsafe { accum_lanes_neon(counts, rows, inc) }
+}
+
+/// Whole-lane-group saturating add via the dense 0/1 increment mask:
+/// four `vqaddq_u16`s per row — adding 0 with unsigned saturation is
+/// the identity, so this matches the scalar arm's sparse walk exactly,
+/// saturation included.
+#[target_feature(enable = "neon")]
+unsafe fn accum_lanes_neon(counts: &mut [u16], rows: &[u32], inc: &[u16]) {
+    unsafe {
+        let pi = inc.as_ptr();
+        let i0 = vld1q_u16(pi);
+        let i1 = vld1q_u16(pi.add(8));
+        let i2 = vld1q_u16(pi.add(16));
+        let i3 = vld1q_u16(pi.add(24));
+        let base = counts.as_mut_ptr();
+        for &row in rows {
+            let p = base.add(row as usize * 32);
+            vst1q_u16(p, vqaddq_u16(vld1q_u16(p), i0));
+            vst1q_u16(p.add(8), vqaddq_u16(vld1q_u16(p.add(8)), i1));
+            vst1q_u16(p.add(16), vqaddq_u16(vld1q_u16(p.add(16)), i2));
+            vst1q_u16(p.add(24), vqaddq_u16(vld1q_u16(p.add(24)), i3));
+        }
+    }
+}

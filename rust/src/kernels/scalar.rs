@@ -1,0 +1,69 @@
+//! Portable scalar kernel arm — the always-correct reference the vector
+//! arms are property-tested against (`tests/kernel_equivalence.rs`).
+//!
+//! These are the original hot-loop bodies, unchanged: `dot_i8` is the
+//! quant tier's four-accumulator widening dot, `unpack_deltas` is the
+//! packed-posting bit-cursor loop, and `accum_lanes` is the batched
+//! traversal's sparse per-lane saturating increment.
+
+/// Widening i8×i8→i32 dot — delegates to the quant tier's scalar loop
+/// ([`crate::quant::store::dot_i8`]), which stays the single reference
+/// implementation.
+#[inline]
+pub fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
+    crate::quant::store::dot_i8(a, b)
+}
+
+/// Bit-cursor delta unpack (see [`crate::kernels::Kernels::unpack_deltas`]
+/// for the contract): a carried 64-bit accumulator refills from `words`
+/// 32 bits at a time and shifts each `width`-bit gap off its tail.
+pub fn unpack_deltas(
+    words: &[u32],
+    start: usize,
+    width: u32,
+    count: usize,
+    first: u32,
+    out: &mut Vec<u32>,
+) {
+    debug_assert!((1..=32).contains(&width));
+    let mask = (1u64 << width) - 1;
+    let mut w = start;
+    let mut acc = 0u64;
+    let mut have = 0u32;
+    let mut id = first;
+    // wrapping arithmetic: on well-formed data nothing wraps; on a
+    // corrupt arena a wrapped id breaks the strictly-increasing order
+    // that `PackedPostings::from_parts` verifies, instead of panicking
+    for _ in 1..count {
+        while have < width {
+            acc |= (words[w] as u64) << have;
+            w += 1;
+            have += 32;
+        }
+        id = id.wrapping_add((acc & mask) as u32).wrapping_add(1);
+        acc >>= width;
+        have -= width;
+        out.push(id);
+    }
+}
+
+/// Sparse lane-group accumulate (see
+/// [`crate::kernels::Kernels::accum_lanes`] for the contract): for each
+/// posting row, walk the live-lane index list and saturating-add 1 to
+/// that lane's u16 overlap counter. The dense `inc` mask is unused here
+/// — it exists for the vector arms.
+pub fn accum_lanes(
+    counts: &mut [u16],
+    chunk: usize,
+    rows: &[u32],
+    lanes: &[u16],
+    _inc: &[u16],
+) {
+    for &row in rows {
+        let at = row as usize * chunk;
+        for &lane in lanes {
+            let c = &mut counts[at + lane as usize];
+            *c = c.saturating_add(1);
+        }
+    }
+}

@@ -1,0 +1,179 @@
+//! AVX2 kernel arm (x86_64). Reached only through
+//! [`super::vector`], which installs the table after
+//! `is_x86_feature_detected!("avx2")` succeeds — that runtime check is
+//! the safety argument for every wrapper below.
+
+use super::Kernels;
+use crate::quant::packed::BLOCK;
+use std::arch::x86_64::*;
+
+/// The AVX2 dispatch table (see module docs for the safety argument).
+pub static AVX2: Kernels = Kernels {
+    name: "avx2",
+    dot_i8,
+    unpack_deltas,
+    accum_lanes,
+};
+
+fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
+    debug_assert_eq!(a.len(), b.len());
+    // SAFETY: AVX2 presence was verified before this table was installed.
+    unsafe { dot_i8_avx2(a, b) }
+}
+
+/// 16 codes per iteration: sign-extend i8→i16, `madd` pairs of i16
+/// products into i32 lanes (no overflow: |i8·i8| ≤ 127² and a pair sum
+/// stays far inside i16×i16→i32 headroom), accumulate, then reduce.
+#[target_feature(enable = "avx2")]
+unsafe fn dot_i8_avx2(a: &[i8], b: &[i8]) -> i32 {
+    unsafe {
+        let n = a.len();
+        let pa = a.as_ptr();
+        let pb = b.as_ptr();
+        let mut acc = _mm256_setzero_si256();
+        let mut i = 0usize;
+        while i + 16 <= n {
+            let va = _mm_loadu_si128(pa.add(i) as *const __m128i);
+            let vb = _mm_loadu_si128(pb.add(i) as *const __m128i);
+            let prod = _mm256_madd_epi16(
+                _mm256_cvtepi8_epi16(va),
+                _mm256_cvtepi8_epi16(vb),
+            );
+            acc = _mm256_add_epi32(acc, prod);
+            i += 16;
+        }
+        let s = _mm_add_epi32(
+            _mm256_castsi256_si128(acc),
+            _mm256_extracti128_si256::<1>(acc),
+        );
+        let s = _mm_add_epi32(s, _mm_shuffle_epi32::<0b01_00_11_10>(s));
+        let s = _mm_add_epi32(s, _mm_shuffle_epi32::<0b00_00_00_01>(s));
+        let mut sum = _mm_cvtsi128_si32(s);
+        while i < n {
+            sum += a[i] as i32 * b[i] as i32;
+            i += 1;
+        }
+        sum
+    }
+}
+
+fn unpack_deltas(
+    words: &[u32],
+    start: usize,
+    width: u32,
+    count: usize,
+    first: u32,
+    out: &mut Vec<u32>,
+) {
+    if count > BLOCK {
+        // larger-than-block counts never occur on validated arenas; keep
+        // the stack buffers below sound anyway
+        return super::scalar::unpack_deltas(
+            words, start, width, count, first, out,
+        );
+    }
+    // SAFETY: AVX2 presence was verified before this table was installed.
+    unsafe { unpack_deltas_avx2(words, start, width, count, first, out) }
+}
+
+/// Branchless gap extraction (each gap's bits land inside one u64
+/// window, since `width ≤ 32` and the in-word offset is ≤ 31) followed
+/// by an 8-lane SIMD prefix reconstruction of the ids. Wrapping i32
+/// vector adds match the scalar arm's wrapping u32 adds bit-for-bit.
+#[target_feature(enable = "avx2")]
+unsafe fn unpack_deltas_avx2(
+    words: &[u32],
+    start: usize,
+    width: u32,
+    count: usize,
+    first: u32,
+    out: &mut Vec<u32>,
+) {
+    unsafe {
+        let n = count - 1;
+        let mask = (1u64 << width) - 1;
+        let mut gaps = [0u32; BLOCK];
+        for (g, slot) in gaps.iter_mut().take(n).enumerate() {
+            let bit = g as u64 * width as u64;
+            let wi = start + (bit >> 5) as usize;
+            let lo = words[wi] as u64;
+            let hi = if wi + 1 < words.len() {
+                words[wi + 1] as u64
+            } else {
+                0
+            };
+            *slot = (((lo | (hi << 32)) >> (bit & 31)) & mask) as u32;
+        }
+        // ids[g] = first + Σ_{j ≤ g} (gaps[j] + 1): in-register prefix
+        // sums of 8 deltas, a lane-crossing fix-up, and a running carry
+        let mut ids = [0u32; BLOCK];
+        let one = _mm256_set1_epi32(1);
+        let mut carry = first as i32;
+        let mut g = 0usize;
+        while g + 8 <= n {
+            let v =
+                _mm256_loadu_si256(gaps.as_ptr().add(g) as *const __m256i);
+            let mut v = _mm256_add_epi32(v, one);
+            v = _mm256_add_epi32(v, _mm256_slli_si256::<4>(v));
+            v = _mm256_add_epi32(v, _mm256_slli_si256::<8>(v));
+            let low = _mm256_extract_epi32::<3>(v);
+            v = _mm256_add_epi32(
+                v,
+                _mm256_set_epi32(low, low, low, low, 0, 0, 0, 0),
+            );
+            v = _mm256_add_epi32(v, _mm256_set1_epi32(carry));
+            _mm256_storeu_si256(ids.as_mut_ptr().add(g) as *mut __m256i, v);
+            carry = _mm256_extract_epi32::<7>(v);
+            g += 8;
+        }
+        let mut id = carry as u32;
+        while g < n {
+            id = id.wrapping_add(gaps[g]).wrapping_add(1);
+            ids[g] = id;
+            g += 1;
+        }
+        out.extend_from_slice(&ids[..n]);
+    }
+}
+
+fn accum_lanes(
+    counts: &mut [u16],
+    chunk: usize,
+    rows: &[u32],
+    lanes: &[u16],
+    inc: &[u16],
+) {
+    // the vector form needs a full 32-lane group (one cache line, two
+    // 256-bit registers); partial tail chunks take the scalar arm
+    if chunk != 32 || inc.len() < 32 {
+        return super::scalar::accum_lanes(counts, chunk, rows, lanes, inc);
+    }
+    debug_assert!(rows
+        .iter()
+        .all(|&r| (r as usize + 1) * 32 <= counts.len()));
+    // SAFETY: AVX2 presence was verified before this table was
+    // installed; the debug_assert above states the caller's bounds
+    // contract (`counts` covers every row's 32-lane group).
+    unsafe { accum_lanes_avx2(counts, rows, inc) }
+}
+
+/// Whole-lane-group saturating add: the dense 0/1 increment mask makes
+/// the per-row update two `_mm256_adds_epu16`s over one cache line —
+/// adding 0 with unsigned saturation is the identity, so this matches
+/// the scalar arm's sparse walk exactly, saturation included.
+#[target_feature(enable = "avx2")]
+unsafe fn accum_lanes_avx2(counts: &mut [u16], rows: &[u32], inc: &[u16]) {
+    unsafe {
+        let i0 = _mm256_loadu_si256(inc.as_ptr() as *const __m256i);
+        let i1 =
+            _mm256_loadu_si256(inc.as_ptr().add(16) as *const __m256i);
+        let base = counts.as_mut_ptr();
+        for &row in rows {
+            let p = base.add(row as usize * 32) as *mut __m256i;
+            let c0 = _mm256_loadu_si256(p);
+            let c1 = _mm256_loadu_si256(p.add(1));
+            _mm256_storeu_si256(p, _mm256_adds_epu16(c0, i0));
+            _mm256_storeu_si256(p.add(1), _mm256_adds_epu16(c1, i1));
+        }
+    }
+}

@@ -59,6 +59,7 @@ pub mod evalx;
 pub mod exec;
 pub mod geometry;
 pub mod index;
+pub mod kernels;
 pub mod linalg;
 pub mod mf;
 pub mod net;
@@ -92,6 +93,7 @@ pub mod prelude {
     };
     pub use crate::error::GeomapError;
     pub use crate::index::InvertedIndex;
+    pub use crate::kernels::KernelsMode;
     pub use crate::linalg::Matrix;
     pub use crate::mf::{AlsTrainer, SgdTrainer};
     pub use crate::net::{NetClient, NetServer};

@@ -131,6 +131,12 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         )
         .opt("postings", "raw", "posting arena: raw | packed (geomap only)")
         .opt(
+            "kernels",
+            "auto",
+            "hot-path kernel dispatch: auto (runtime SIMD detection) | \
+             scalar (portable fallback; identical results — docs/KERNELS.md)",
+        )
+        .opt(
             "batch-prune",
             "on",
             "batched term-major candidate generation: on | off (off = \
@@ -231,6 +237,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         mutation: MutationConfig { max_delta: cli.get_usize("max-delta")? },
         quant: QuantMode::parse(cli.get("quant"))?,
         postings: PostingsMode::parse(cli.get("postings"))?,
+        kernels: geomap::configx::KernelsMode::parse(cli.get("kernels"))?,
         batch_prune: geomap::configx::parse_on_off(
             cli.get("batch-prune"),
             "--batch-prune",

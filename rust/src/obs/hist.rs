@@ -23,7 +23,13 @@ fn bucket_of(v: u64) -> usize {
     ((exp - SUB_BITS as usize + 1) * SUB + sub).min(BUCKETS - 1)
 }
 
-/// Representative (upper-edge) value of a bucket.
+/// Representative value of a bucket: its **lower edge** (inclusive).
+///
+/// Exact for every v < 16 (one bucket per value) and at every exact
+/// power of two ≥ 16 (each octave boundary starts a fresh sub-bucket,
+/// so `bucket_value(bucket_of(2^n)) == 2^n`). Mid-bucket values are
+/// understated by less than one sub-bucket width (≤ ~6 % relative),
+/// never overstated — reported quantiles are conservative lower bounds.
 fn bucket_value(idx: usize) -> u64 {
     if idx < SUB {
         return idx as u64;
@@ -361,6 +367,66 @@ mod tests {
             if v >= 16 {
                 let rel = (rep as f64 - v as f64).abs() / v as f64;
                 assert!(rel < 0.07, "v={v} rep={rep}");
+            }
+        }
+    }
+
+    #[test]
+    fn bucket_edges_exact_at_octave_boundaries() {
+        // Every v < 16 gets its own bucket and round-trips exactly —
+        // including the v=0 and v=1 edges and the v=15 top of the
+        // exact range.
+        for v in 0..16u64 {
+            assert_eq!(bucket_value(bucket_of(v)), v, "tiny v={v}");
+        }
+        // 16 is the first log-bucketed value and the first octave edge:
+        // it must land in the first non-tiny bucket, exactly.
+        assert_eq!(bucket_of(15) + 1, bucket_of(16), "no gap at the seam");
+        assert_eq!(bucket_value(bucket_of(16)), 16);
+        // 16..32 is still one-value-per-bucket (sub-bucket width 1).
+        for v in 16..32u64 {
+            assert_eq!(bucket_value(bucket_of(v)), v, "first octave v={v}");
+        }
+        // Exact powers of two start a fresh sub-bucket in every octave
+        // the histogram covers, so their representative is exact.
+        for n in 4..40u32 {
+            let v = 1u64 << n;
+            assert_eq!(bucket_value(bucket_of(v)), v, "2^{n}");
+            // ... and the value just below is a *different* bucket whose
+            // representative also never overstates it
+            assert!(bucket_of(v - 1) < bucket_of(v), "boundary 2^{n}");
+            assert!(bucket_value(bucket_of(v - 1)) <= v - 1);
+        }
+    }
+
+    #[test]
+    fn bucket_value_is_a_lower_edge() {
+        // The representative never overstates the recorded value, and
+        // understates by less than one sub-bucket width (≤ ~6 %).
+        for v in 0..100_000u64 {
+            let rep = bucket_value(bucket_of(v));
+            assert!(rep <= v, "v={v} rep={rep} overstated");
+            if v >= 16 {
+                let width = (v / 16).max(1);
+                assert!(v - rep < width, "v={v} rep={rep} width={width}");
+            } else {
+                assert_eq!(rep, v);
+            }
+        }
+    }
+
+    #[test]
+    fn point_mass_quantiles_are_exact_at_powers_of_two() {
+        // A histogram holding one repeated power-of-two value reports
+        // that exact value at every quantile — the lower-edge
+        // representative is exact on octave boundaries.
+        for v in [1u64, 16, 32, 1 << 20, 1 << 39] {
+            let h = Histogram::new();
+            for _ in 0..100 {
+                h.record(v);
+            }
+            for q in [0.0, 0.5, 0.99, 1.0] {
+                assert_eq!(h.quantile(q), v, "v={v} q={q}");
             }
         }
     }

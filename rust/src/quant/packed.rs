@@ -155,18 +155,34 @@ impl PackedPostings {
     }
 
     /// Decode block `b` into `out` (cleared first; at most [`BLOCK`] ids,
-    /// strictly increasing).
+    /// strictly increasing). Resolves the active kernel table per call;
+    /// block-streaming loops resolve once and use
+    /// [`decode_block_with`](Self::decode_block_with).
     #[inline]
     pub fn decode_block(&self, b: usize, out: &mut Vec<u32>) {
+        self.decode_block_with(crate::kernels::active(), b, out)
+    }
+
+    /// [`decode_block`](Self::decode_block) with a caller-resolved
+    /// kernel table ([`crate::kernels::active`], or a pinned arm in the
+    /// equivalence tests and benches). Every arm decodes identically.
+    #[inline]
+    pub fn decode_block_with(
+        &self,
+        kern: &crate::kernels::Kernels,
+        b: usize,
+        out: &mut Vec<u32>,
+    ) {
         out.clear();
         let info = self.block_info[b];
         let count = (info & 0xFFFF) as usize;
         let width = info >> 16;
         let mut id = self.block_first[b];
         out.push(id);
-        // wrapping arithmetic: on well-formed data nothing wraps; on a
-        // corrupt arena a wrapped id breaks the strictly-increasing
-        // order that `from_parts` verifies, instead of panicking here
+        // wrapping arithmetic (in every kernel arm): on well-formed data
+        // nothing wraps; on a corrupt arena a wrapped id breaks the
+        // strictly-increasing order that `from_parts` verifies, instead
+        // of panicking here
         if width == 0 {
             // consecutive run
             for _ in 1..count {
@@ -175,21 +191,14 @@ impl PackedPostings {
             }
             return;
         }
-        let mask = (1u64 << width) - 1;
-        let mut w = self.block_words[b] as usize;
-        let mut acc = 0u64;
-        let mut have = 0u32;
-        for _ in 1..count {
-            while have < width {
-                acc |= (self.words[w] as u64) << have;
-                w += 1;
-                have += 32;
-            }
-            id = id.wrapping_add((acc & mask) as u32).wrapping_add(1);
-            acc >>= width;
-            have -= width;
-            out.push(id);
-        }
+        (kern.unpack_deltas)(
+            &self.words,
+            self.block_words[b] as usize,
+            width,
+            count,
+            id,
+            out,
+        );
     }
 
     /// Decode the full posting list of dimension `d`, appending to `out`.

@@ -37,10 +37,22 @@ pub struct QuantizedFactorStore {
 /// Quantize one factor into `codes` (len k), returning its scale.
 ///
 /// Symmetric: `codes[j] · scale` reconstructs `v[j]` to within
-/// `scale / 2`. An all-zero factor yields scale 0 and zero codes.
+/// `scale / 2`. An all-zero factor yields scale 0 and zero codes, and
+/// so does any factor with a non-finite lane: `f32::max` would silently
+/// discard a NaN operand, so the fold below promotes *any* NaN/±Inf
+/// lane to an infinite max and the guard zeroes the row — a non-finite
+/// factor can never produce a live-looking quantized row. (Ingestion
+/// rejects such factors outright; this is defence in depth.)
 pub fn quantize_into(factor: &[f32], codes: &mut [i8]) -> f32 {
     debug_assert_eq!(factor.len(), codes.len());
-    let max = factor.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+    let max = factor.iter().fold(0.0f32, |m, &x| {
+        let a = x.abs();
+        if a.is_finite() {
+            m.max(a)
+        } else {
+            f32::INFINITY
+        }
+    });
     if max == 0.0 || !max.is_finite() {
         codes.fill(0);
         return 0.0;
@@ -59,6 +71,10 @@ pub fn quantize_into(factor: &[f32], codes: &mut [i8]) -> f32 {
 ///
 /// Four parallel accumulators, mirroring `linalg::ops::dot`, so LLVM
 /// auto-vectorises the widening multiply-add without unsafe intrinsics.
+/// This is the *scalar reference* arm of the dispatched kernel
+/// ([`crate::kernels::Kernels::dot_i8`]); the scan hot path goes
+/// through [`QuantizedFactorStore::score_with`], which may select an
+/// explicit AVX2/NEON arm with bit-identical results.
 #[inline]
 pub fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
     debug_assert_eq!(a.len(), b.len());
@@ -129,11 +145,42 @@ impl QuantizedFactorStore {
 
     /// Approximate score of item `id` against a quantized query
     /// (`qcodes`, `qscale` from [`quantize_into`]).
+    ///
+    /// # Panics
+    ///
+    /// `id` must be covered (`id < self.len()`). Unlike
+    /// [`clear_row`](Self::clear_row)'s tolerant out-of-range contract,
+    /// this is a hot-path accessor and an uncovered id is a caller bug:
+    /// debug builds fail the assert below, release builds panic on the
+    /// slice range. The engine upholds the precondition by growing the
+    /// store (`ensure_len` + `set_row`) in the same mutation that makes
+    /// a new id visible to candidate generation, before any rescore can
+    /// observe it.
     #[inline]
     pub fn score(&self, id: u32, qcodes: &[i8], qscale: f32) -> f32 {
+        self.score_with(crate::kernels::active(), id, qcodes, qscale)
+    }
+
+    /// [`score`](Self::score) with a caller-resolved kernel table
+    /// ([`crate::kernels::active`]), so batch rescore loops resolve the
+    /// dispatch once per pass instead of once per candidate. Same
+    /// precondition: `id` must be covered.
+    #[inline]
+    pub fn score_with(
+        &self,
+        kern: &crate::kernels::Kernels,
+        id: u32,
+        qcodes: &[i8],
+        qscale: f32,
+    ) -> f32 {
+        debug_assert!(
+            (id as usize) < self.scales.len(),
+            "score id {id} is uncovered (store len {})",
+            self.scales.len()
+        );
         let lo = id as usize * self.k;
         let row = &self.codes[lo..lo + self.k];
-        dot_i8(qcodes, row) as f32 * self.scales[id as usize] * qscale
+        (kern.dot_i8)(qcodes, row) as f32 * self.scales[id as usize] * qscale
     }
 
     /// Covered id space.
@@ -237,6 +284,32 @@ mod tests {
         let s = quantize_into(&[0.0; 8], &mut codes);
         assert_eq!(s, 0.0);
         assert!(codes.iter().all(|&c| c == 0));
+    }
+
+    #[test]
+    fn non_finite_factor_quantizes_to_dead_row() {
+        // an f32::max fold discards NaN, so a NaN lane must not slip a
+        // live-looking scale through — every non-finite lane (in any
+        // position, including past larger finite lanes) zeroes the row
+        for bad in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+            for pos in 0..4 {
+                let mut v = [3.0f32, -1.0, 0.5, 2.0];
+                v[pos] = bad;
+                let mut codes = vec![7i8; 4];
+                let s = quantize_into(&v, &mut codes);
+                assert_eq!(s, 0.0, "bad={bad} pos={pos}");
+                assert!(codes.iter().all(|&c| c == 0));
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn score_uncovered_id_panics() {
+        // the documented precondition: debug builds hit the assert,
+        // release builds the slice range — never a silent wrong answer
+        let store = QuantizedFactorStore::new(4);
+        let _ = store.score(0, &[1, 2, 3, 4], 1.0);
     }
 
     #[test]

@@ -1,0 +1,301 @@
+//! Scalar ↔ SIMD equivalence properties for the dispatched hot-path
+//! kernels (docs/KERNELS.md).
+//!
+//! Every vector arm must be **bit-identical** to the portable scalar
+//! reference on every input shape the serving path can produce:
+//!
+//! * `dot_i8` — all lengths 0..=257, misaligned slice heads, and the
+//!   i8 extremes (±127 from quantization, plus the raw -128 corner);
+//! * `accum_lanes` — random chunk sizes 1..=32, duplicate rows, sparse
+//!   lane subsets, and saturation pinned exactly at `u16::MAX`;
+//! * `unpack_deltas` — every gap bit-width 0..=32 across block
+//!   boundaries, including the width-32 near-`u32::MAX` corner.
+//!
+//! The capstone property re-runs a quantized + packed engine end to end
+//! under `kernels: auto` vs `kernels: scalar` and compares served
+//! `top_k` ids and raw score bits — the arm must be unobservable.
+
+use geomap::configx::{PostingsMode, QuantMode, SchemaConfig};
+use geomap::engine::Engine;
+use geomap::kernels::{self, Kernels, KernelsMode};
+use geomap::quant::{PackedPostings, BLOCK};
+use geomap::rng::Rng;
+use geomap::testing::fix;
+
+/// Scalar first, then the host's vector arm when one was detected (the
+/// suite still passes — vacuously for the vector cases — on hosts
+/// without one; CI's scalar-forced leg covers the fallback arm).
+fn arms() -> Vec<&'static Kernels> {
+    let mut v = vec![kernels::scalar()];
+    if let Some(k) = kernels::vector() {
+        v.push(k);
+    }
+    v
+}
+
+#[test]
+fn dot_i8_arms_agree_on_every_length_and_offset() {
+    let mut rng = Rng::seeded(11);
+    let n = 257 + 4;
+    let a: Vec<i8> = (0..n).map(|_| rng.next_u64() as i8).collect();
+    let b: Vec<i8> = (0..n).map(|_| rng.next_u64() as i8).collect();
+    for len in 0..=257usize {
+        // misaligned heads: sub-slices starting at every offset 0..4,
+        // so the 16-lane vector body sees every alignment class
+        for off in 0..4usize {
+            let (xa, xb) = (&a[off..off + len], &b[off..off + len]);
+            let want = (kernels::scalar().dot_i8)(xa, xb);
+            for arm in arms() {
+                assert_eq!(
+                    (arm.dot_i8)(xa, xb),
+                    want,
+                    "arm {} len={len} off={off}",
+                    arm.name
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn dot_i8_arms_agree_at_i8_extremes() {
+    // quantized codes are clamped to ±127, but the kernel contract is
+    // the full i8 domain — pin ±127 and the -128 corner at an odd
+    // length so the scalar tail participates too
+    let len = 257usize;
+    for (va, vb) in [(127i8, 127i8), (-127, 127), (-127, -127), (-128, 127)] {
+        let a = vec![va; len];
+        let b = vec![vb; len];
+        let want = (kernels::scalar().dot_i8)(&a, &b);
+        assert_eq!(want, len as i32 * va as i32 * vb as i32);
+        for arm in arms() {
+            assert_eq!(
+                (arm.dot_i8)(&a, &b),
+                want,
+                "arm {} ({va},{vb})",
+                arm.name
+            );
+        }
+    }
+}
+
+#[test]
+fn accum_lanes_arms_agree_on_random_shapes() {
+    let mut rng = Rng::seeded(22);
+    for case in 0..60 {
+        let chunk = 1 + rng.below(32);
+        let groups = 1 + rng.below(64);
+        // duplicate rows are legal (several postings of one id in a
+        // traversal never happens, but the kernel contract allows it)
+        let rows: Vec<u32> = (0..rng.below(200))
+            .map(|_| rng.below(groups) as u32)
+            .collect();
+        let mut lanes: Vec<u16> = (0..chunk as u16).collect();
+        rng.shuffle(&mut lanes);
+        lanes.truncate(rng.below(chunk + 1));
+        let mut inc = vec![0u16; chunk];
+        for &l in &lanes {
+            inc[l as usize] = 1;
+        }
+        // seed counters with values across the range, some within one
+        // step of saturating, so the saturating add is exercised mid-run
+        let base: Vec<u16> = (0..groups * chunk)
+            .map(|_| {
+                if rng.below(10) == 0 {
+                    u16::MAX - rng.below(2) as u16
+                } else {
+                    (rng.next_u64() % 1000) as u16
+                }
+            })
+            .collect();
+        let mut want = base.clone();
+        (kernels::scalar().accum_lanes)(&mut want, chunk, &rows, &lanes, &inc);
+        for arm in arms().into_iter().skip(1) {
+            let mut got = base.clone();
+            (arm.accum_lanes)(&mut got, chunk, &rows, &lanes, &inc);
+            assert_eq!(
+                got, want,
+                "arm {} case={case} chunk={chunk} rows={} lanes={}",
+                arm.name,
+                rows.len(),
+                lanes.len()
+            );
+        }
+    }
+}
+
+#[test]
+fn accum_lanes_saturates_exactly_at_u16_max() {
+    // the full-chunk (vectorizable) shape, counters one step from the
+    // ceiling: repeated application must clamp at u16::MAX on every arm
+    let chunk = 32usize;
+    let rows: Vec<u32> = vec![0, 1, 1, 2];
+    let lanes: Vec<u16> = (0..chunk as u16).collect();
+    let inc = vec![1u16; chunk];
+    for arm in arms() {
+        let mut counts = vec![u16::MAX - 1; 4 * chunk];
+        for _ in 0..3 {
+            (arm.accum_lanes)(&mut counts, chunk, &rows, &lanes, &inc);
+        }
+        // rows 0..=2 hit (row 1 twice per pass): all clamp to MAX
+        assert!(
+            counts[..3 * chunk].iter().all(|&c| c == u16::MAX),
+            "arm {} must clamp at u16::MAX",
+            arm.name
+        );
+        // row 3 never appears: untouched
+        assert!(
+            counts[3 * chunk..].iter().all(|&c| c == u16::MAX - 1),
+            "arm {} touched a row outside `rows`",
+            arm.name
+        );
+    }
+}
+
+#[test]
+fn unpack_deltas_arms_agree_at_every_bit_width() {
+    let mut rng = Rng::seeded(33);
+    for width in 0..=32u32 {
+        // force the first gap to have exactly `width` bits so the
+        // packer picks this width for block 0, and size the list so the
+        // cumulative id stays ≤ u32::MAX (width 32's largest decodable
+        // gap is u32::MAX - 1: first id 0 → last id u32::MAX)
+        let max_gap: u64 = if width == 0 {
+            0
+        } else {
+            ((1u64 << width) - 1).min(u32::MAX as u64 - 1)
+        };
+        let min_gap: u64 = if width <= 1 { 0 } else { 1u64 << (width - 1) };
+        let count = if width == 0 {
+            130 // consecutive run crossing a block boundary
+        } else {
+            ((u32::MAX as u64 - 1) / (max_gap + 1)).clamp(1, 129) as usize + 1
+        };
+        let mut ids: Vec<u32> = vec![0];
+        let mut cur = 0u64;
+        for i in 1..count {
+            let gap = if width == 0 {
+                0
+            } else if i == 1 {
+                max_gap // pin the block's width on the first gap
+            } else {
+                min_gap + rng.next_u64() % (max_gap - min_gap + 1)
+            };
+            cur += gap + 1;
+            ids.push(cur as u32);
+        }
+        assert!(cur <= u32::MAX as u64, "width={width} overflowed the test");
+        let pk = PackedPostings::pack(
+            1,
+            cur as usize + 1,
+            |_| ids.as_slice(),
+        );
+        // the packer chose the width we engineered (first block at
+        // least; later blocks may be narrower)
+        let (_, _, _, _, block_info, _) = pk.arenas();
+        assert_eq!(
+            block_info[0] >> 16,
+            width,
+            "block 0 width for engineered gaps"
+        );
+        let mut want = Vec::new();
+        let mut got = Vec::new();
+        let mut off = 0usize;
+        for blk in pk.dim_blocks(0) {
+            pk.decode_block_with(kernels::scalar(), blk, &mut want);
+            assert_eq!(
+                want,
+                ids[off..off + want.len()],
+                "scalar decode disagrees with the source list"
+            );
+            for arm in arms().into_iter().skip(1) {
+                pk.decode_block_with(arm, blk, &mut got);
+                assert_eq!(
+                    got, want,
+                    "arm {} width={width} block={blk}",
+                    arm.name
+                );
+            }
+            off += want.len();
+        }
+        assert_eq!(off, ids.len());
+    }
+}
+
+#[test]
+fn unpack_deltas_width32_near_u32_max() {
+    // two-id blocks with a gap of u32::MAX - 1: the widest possible
+    // delta, ids at the very top of the id space
+    let ids = vec![0u32, u32::MAX];
+    let pk = PackedPostings::pack(1, usize::MAX, |_| ids.as_slice());
+    let mut out = Vec::new();
+    for arm in arms() {
+        for blk in pk.dim_blocks(0) {
+            pk.decode_block_with(arm, blk, &mut out);
+            assert_eq!(out, ids, "arm {}", arm.name);
+        }
+    }
+}
+
+#[test]
+fn unpack_deltas_full_random_blocks() {
+    // BLOCK-sized random-gap lists across many widths at once; every
+    // arm must reproduce the packer's input byte for byte
+    let mut rng = Rng::seeded(44);
+    for _ in 0..20 {
+        let n = 1 + rng.below(3 * BLOCK + 1);
+        let mut cur = 0u32;
+        let mut ids = Vec::with_capacity(n);
+        for i in 0..n {
+            cur += u32::from(i > 0) + (rng.next_u64() % (1 << rng.below(16))) as u32;
+            ids.push(cur);
+        }
+        let pk = PackedPostings::pack(1, cur as usize + 1, |_| ids.as_slice());
+        let mut want = Vec::new();
+        let mut got = Vec::new();
+        for blk in pk.dim_blocks(0) {
+            pk.decode_block_with(kernels::scalar(), blk, &mut want);
+            for arm in arms().into_iter().skip(1) {
+                pk.decode_block_with(arm, blk, &mut got);
+                assert_eq!(got, want, "arm {} block {blk}", arm.name);
+            }
+        }
+    }
+}
+
+#[test]
+fn top_k_bytes_identical_across_dispatch_modes() {
+    // the whole serving pipeline — packed traversal, i8 scan, exact
+    // refine — under auto vs forced-scalar dispatch: ids and raw f32
+    // score bits must match exactly. (This test flips the process-wide
+    // mode; the other tests in this binary pin arms explicitly, so
+    // concurrent execution is safe.)
+    let items = fix::items(400, 16, 51);
+    let users = fix::users(24, 16, 52);
+    let engine = Engine::builder()
+        .schema(SchemaConfig::TernaryOneHot)
+        .threshold(0.5)
+        .quant(QuantMode::Int8 { refine: 4 })
+        .postings(PostingsMode::Packed)
+        .build(items)
+        .unwrap();
+    let run = |mode: KernelsMode| -> Vec<(u32, u32)> {
+        kernels::set_mode(mode);
+        (0..users.rows())
+            .flat_map(|u| {
+                engine
+                    .top_k(users.row(u), 10)
+                    .unwrap()
+                    .into_iter()
+                    .map(|s| (s.id, s.score.to_bits()))
+            })
+            .collect()
+    };
+    let auto = run(KernelsMode::Auto);
+    let scalar = run(KernelsMode::Scalar);
+    kernels::set_mode(KernelsMode::Auto);
+    assert_eq!(
+        auto, scalar,
+        "served top_k depends on the kernel dispatch mode"
+    );
+}

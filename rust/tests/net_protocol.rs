@@ -178,6 +178,47 @@ fn mutations_flow_through_the_socket() {
 }
 
 #[test]
+fn non_finite_upsert_factors_rejected_at_the_wire() {
+    // Regression (ISSUE 9 satellite): a non-finite factor lane must
+    // never reach the engine through the TCP path. JSON cannot spell
+    // NaN/Inf literally (that's a parse error), but `1e39` is a valid
+    // JSON number that overflows f32 to +Inf — the decoder rejects it
+    // at `f32_array`, so it costs one *decode* error and the catalogue
+    // never sees the row.
+    let k = 4;
+    let (coord, server) = start(k, 64, 75);
+    let mut client = NetClient::connect(server.local_addr()).unwrap();
+    let decode_before =
+        coord.metrics().net_decode_errors.load(Ordering::Relaxed);
+    let v0 = client.query(&fix::user(k, 76), 3).unwrap().version;
+    let bad: &[&[u8]] = &[
+        br#"{"upsert":3,"factor":[1e39,0,0,0]}"#,
+        br#"{"upsert":3,"factor":[0,-1e39,0,0]}"#,
+        br#"{"upsert":3,"factor":[0,0,NaN,0]}"#,
+    ];
+    for line in bad {
+        let resp = client.send_raw(line).unwrap();
+        assert!(
+            resp.starts_with(b"{\"error\":"),
+            "{} must be rejected, got {}",
+            String::from_utf8_lossy(line),
+            String::from_utf8_lossy(&resp)
+        );
+    }
+    assert_eq!(
+        coord.metrics().net_decode_errors.load(Ordering::Relaxed),
+        decode_before + bad.len() as u64,
+        "non-finite factors are decode errors, not engine errors"
+    );
+    // the rejected upserts never mutated the catalogue: the version is
+    // unchanged and a live query still serves
+    let r = client.query(&fix::user(k, 76), 3).unwrap();
+    assert_eq!(r.version, v0, "rejected upserts must not bump the version");
+    drop(client);
+    stop(coord, server);
+}
+
+#[test]
 fn decoded_requests_serve_byte_identically_to_originals() {
     let k = 6;
     let (coord, server) = start(k, 200, 80);
