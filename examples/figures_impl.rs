@@ -68,7 +68,7 @@ pub fn run(seed: u64, fast: bool) -> Result<()> {
     let ml = if fast { MovieLensSynth::small() } else { MovieLensSynth::default() };
     let ratings = ml.generate(&mut rng);
     let model = AlsTrainer { k: 16, ..Default::default() }
-        .train(&ratings, if fast { 4 } else { 8 }, seed);
+        .train(&ratings, if fast { 4 } else { 8 }, seed)?;
     println!(
         "movielens-like: {} ratings, ALS k=16, train RMSE {:.3}\n",
         ratings.len(),

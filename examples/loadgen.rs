@@ -8,6 +8,10 @@
 //! skewed popularity of real recommendation traffic; a configurable
 //! fraction of requests are catalogue mutations (upserts/removes)
 //! interleaved with the reads, over `--conns` concurrent connections.
+//! `--observe-every` adds a write stream of `{"observe":…}` ratings
+//! feeding the online fold-in queue (docs/INGEST.md); the self-host
+//! smoke cross-checks the client-side accepted/shed ack counts against
+//! the server's ingest counters and fails on any mismatch.
 //!
 //! Two modes:
 //!
@@ -60,6 +64,13 @@ fn main() -> anyhow::Result<()> {
             "every Nth request per connection is a mutation (3:1 \
              upsert:remove); 0 = reads only",
         )
+        .opt(
+            "observe-every",
+            "0",
+            "every Nth request per connection streams an observe rating \
+             into the ingest fold-in queue (docs/INGEST.md); 0 = no \
+             write stream",
+        )
         .opt("seed", "42", "rng seed (pool + traffic)")
         .flag(
             "stats",
@@ -81,6 +92,7 @@ fn main() -> anyhow::Result<()> {
     let requests = cli.get_usize("requests")?;
     let conns = cli.get_usize("conns")?.max(1);
     let mutate_every = cli.get_usize("mutate-every")?;
+    let observe_every = cli.get_usize("observe-every")?;
     let seed = cli.get_u64("seed")?;
     let n_items = cli.get_usize("items")?;
 
@@ -148,9 +160,15 @@ fn main() -> anyhow::Result<()> {
     let lat_query = Histogram::new();
     let lat_upsert = Histogram::new();
     let lat_remove = Histogram::new();
+    let lat_observe = Histogram::new();
     let queries = AtomicU64::new(0);
     let upserts = AtomicU64::new(0);
     let removes = AtomicU64::new(0);
+    // observe acks split by what the server answered: accepted=true
+    // entered the fold-in queue, accepted=false was shed under load —
+    // both are successful round trips, not errors
+    let obs_accepted = AtomicU64::new(0);
+    let obs_shed = AtomicU64::new(0);
     let errors = AtomicU64::new(0);
     let per_conn = requests / conns;
 
@@ -161,9 +179,12 @@ fn main() -> anyhow::Result<()> {
             let lat_query = &lat_query;
             let lat_upsert = &lat_upsert;
             let lat_remove = &lat_remove;
+            let lat_observe = &lat_observe;
             let queries = &queries;
             let upserts = &upserts;
             let removes = &removes;
+            let obs_accepted = &obs_accepted;
+            let obs_shed = &obs_shed;
             let errors = &errors;
             scope.spawn(move || {
                 let mut client = match NetClient::connect(addr) {
@@ -177,10 +198,34 @@ fn main() -> anyhow::Result<()> {
                 let mut rng = Rng::seeded(seed ^ ((c as u64 + 1) << 40));
                 let mut user = Vec::with_capacity(k);
                 for i in 0..per_conn {
-                    let mutate =
-                        mutate_every > 0 && i % mutate_every == mutate_every - 1;
+                    // the write stream outranks catalogue mutations when
+                    // both land on the same slot, so an observe cadence
+                    // is honoured exactly whatever --mutate-every says
+                    let observe = observe_every > 0
+                        && i % observe_every == observe_every - 1;
+                    let mutate = !observe
+                        && mutate_every > 0
+                        && i % mutate_every == mutate_every - 1;
                     let t = Instant::now();
-                    let (hist, outcome) = if mutate {
+                    let (hist, outcome) = if observe {
+                        // a Zipf-ranked user rates a catalogue item; the
+                        // rating grid matches MovieLens (1.0..5.0 by 0.5)
+                        let rank = zipf.sample(&mut rng);
+                        let item = rng.below(n_items) as u32;
+                        let rating = 1.0 + rng.below(9) as f32 * 0.5;
+                        let outcome = client
+                            .observe(
+                                rank.min(u32::MAX as usize) as u32,
+                                item,
+                                rating,
+                            )
+                            .map(|accepted| {
+                                let ctr =
+                                    if accepted { obs_accepted } else { obs_shed };
+                                ctr.fetch_add(1, Ordering::Relaxed);
+                            });
+                        (lat_observe, outcome)
+                    } else if mutate {
                         // mutations target existing catalogue ids so a
                         // replayed trace stays valid whatever the server
                         // has already absorbed
@@ -229,19 +274,26 @@ fn main() -> anyhow::Result<()> {
     let elapsed = t0.elapsed().as_secs_f64();
 
     let total = (per_conn * conns) as f64;
+    let accepted = obs_accepted.load(Ordering::Relaxed);
+    let shed = obs_shed.load(Ordering::Relaxed);
     println!(
-        "\n{} requests ({} queries, {} upserts, {} removes) over {conns} \
-         conns in {elapsed:.2}s → {:.0} req/s",
+        "\n{} requests ({} queries, {} upserts, {} removes, {} observes) \
+         over {conns} conns in {elapsed:.2}s → {:.0} req/s",
         per_conn * conns,
         queries.load(Ordering::Relaxed),
         upserts.load(Ordering::Relaxed),
         removes.load(Ordering::Relaxed),
+        accepted + shed,
         total / elapsed,
     );
+    if accepted + shed > 0 {
+        println!("observe acks: {accepted} accepted, {shed} shed");
+    }
     // merged view first, then the per-verb split
     let mut overall = lat_query.snapshot();
     overall.merge(&lat_upsert.snapshot());
     overall.merge(&lat_remove.snapshot());
+    overall.merge(&lat_observe.snapshot());
     let (p50, p95, p99) = overall.percentiles();
     println!(
         "client latency: p50 {p50}us p95 {p95}us p99 {p99}us max {}us",
@@ -251,6 +303,7 @@ fn main() -> anyhow::Result<()> {
         ("query", &lat_query),
         ("upsert", &lat_upsert),
         ("remove", &lat_remove),
+        ("observe", &lat_observe),
     ] {
         if hist.count() == 0 {
             continue;
@@ -269,7 +322,13 @@ fn main() -> anyhow::Result<()> {
     let mut failed = client_errors > 0;
     if cli.is_set("stats") {
         let audited = self_host && cli.is_set("audit");
-        match check_stats(addr, queries.load(Ordering::Relaxed), audited) {
+        match check_stats(
+            addr,
+            queries.load(Ordering::Relaxed),
+            audited,
+            accepted,
+            shed,
+        ) {
             Ok(()) => println!("stats snapshot validated ✓"),
             Err(e) => {
                 eprintln!("FAIL: stats snapshot: {e}");
@@ -284,9 +343,22 @@ fn main() -> anyhow::Result<()> {
         let m = coord.metrics();
         let decode_errors = m.net_decode_errors.load(Ordering::Relaxed);
         let malformed = m.net_malformed.load(Ordering::Relaxed);
-        let accepted = m.net_connections.load(Ordering::Relaxed);
+        let conns_in = m.net_connections.load(Ordering::Relaxed);
         let closed = m.net_closed.load(Ordering::Relaxed);
         println!("\n{}", m.report());
+        // shed accounting: every observe ack the clients saw must agree
+        // with the server's own counters — accepted acks with the queue
+        // admissions, shed acks with the shed counter
+        let observed = m.ingest_observed.load(Ordering::Relaxed);
+        let server_shed = m.ingest_shed.load(Ordering::Relaxed);
+        if observed != accepted || server_shed != shed {
+            eprintln!(
+                "FAIL: ingest shed accounting mismatch — clients saw \
+                 {accepted} accepted + {shed} shed acks, server counted \
+                 {observed} observed + {server_shed} shed"
+            );
+            failed = true;
+        }
         if decode_errors > 0 || malformed > 0 {
             eprintln!(
                 "FAIL: {decode_errors} decode errors, {malformed} malformed \
@@ -294,9 +366,9 @@ fn main() -> anyhow::Result<()> {
             );
             failed = true;
         }
-        if accepted != closed {
+        if conns_in != closed {
             eprintln!(
-                "FAIL: unclean shutdown — {accepted} connections accepted, \
+                "FAIL: unclean shutdown — {conns_in} connections accepted, \
                  {closed} closed"
             );
             failed = true;
@@ -321,6 +393,8 @@ fn check_stats(
     addr: std::net::SocketAddr,
     queries: u64,
     audit: bool,
+    observes_accepted: u64,
+    observes_shed: u64,
 ) -> anyhow::Result<()> {
     let mut client = NetClient::connect(addr)?;
     let j = client.stats()?;
@@ -345,6 +419,27 @@ fn check_stats(
             let n = j.get("work")?.get(counter)?.as_usize()?;
             anyhow::ensure!(n > 0, "work counter '{counter}' is zero");
         }
+    }
+    if observes_accepted + observes_shed > 0 {
+        // ≥ rather than ==: in --connect mode other clients may share
+        // the server; the exact accounting check runs against the
+        // self-host coordinator's raw counters after the run
+        let ing = j.get("ingest")?;
+        let observed = ing.get("observed")?.as_usize()? as u64;
+        let shed = ing.get("shed")?.as_usize()? as u64;
+        anyhow::ensure!(
+            observed >= observes_accepted,
+            "ingest.observed {observed} < the {observes_accepted} accepted \
+             acks this run saw"
+        );
+        anyhow::ensure!(
+            shed >= observes_shed,
+            "ingest.shed {shed} < the {observes_shed} shed acks this run saw"
+        );
+        for key in ["user_folds", "item_folds", "errors", "sla_breach"] {
+            let _ = ing.get(key)?.as_usize()?;
+        }
+        let _ = ing.get("visibility_us")?.get("count")?.as_usize()?;
     }
     if audit && queries > 0 {
         let q = j.get("quality")?;

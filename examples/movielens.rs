@@ -37,7 +37,7 @@ fn main() -> anyhow::Result<()> {
     // ---- 2. learn factors (ALS with biases) ---------------------------
     let (train, test) = ratings.split(0.1, &mut rng);
     let (model, curve) =
-        AlsTrainer { k: 16, ..Default::default() }.train_logged(&train, 8, 42);
+        AlsTrainer { k: 16, ..Default::default() }.train_logged(&train, 8, 42)?;
     for s in &curve {
         println!("  als sweep {}: train rmse {:.4}", s.epoch, s.train_rmse);
     }

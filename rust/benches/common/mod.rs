@@ -29,7 +29,8 @@ pub fn movielens_workload() -> (Matrix, Matrix) {
     let mut rng = Rng::seeded(42);
     let ratings = ml.generate(&mut rng);
     let model = AlsTrainer { k: 16, ..Default::default() }
-        .train(&ratings, if fast() { 4 } else { 8 }, 42);
+        .train(&ratings, if fast() { 4 } else { 8 }, 42)
+        .expect("synthetic ratings log is finite");
     let sample = if fast() { 64 } else { 256 };
     let users = model
         .user_factors

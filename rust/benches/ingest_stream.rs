@@ -1,0 +1,294 @@
+//! Streaming-ingest freshness under read pressure (`docs/INGEST.md`).
+//!
+//! One self-hosted serving stack takes two concurrent workloads over
+//! loopback:
+//!
+//! * **readers** — Zipf-skewed top-κ queries on several connections, the
+//!   same heavy read side the other net benches drive, with the quality
+//!   auditor shadow-rescoring every served query (`audit.sample = 1`);
+//! * **one writer** — a continuous observe/upsert stream: live-item
+//!   ratings (online user fold-ins), brand-new item ids rated by users
+//!   who just earned a factor (online item fold-ins → catalogue growth
+//!   while serving), and periodic catalogue upserts for merge pressure.
+//!
+//! The stack serves one-hot `int8+packed` at threshold 0 — the lossless
+//! prune configuration the quality-audit bench gates at recall ≥ 0.99 —
+//! so any read-path quality regression caused by the write stream is
+//! attributable, not noise.
+//!
+//! Acceptance, judged at the default profile:
+//!
+//! * the writer sustains **≥ 1000 mutations/s** (accepted observes +
+//!   upserts) while the readers run;
+//! * ingest p99 time-to-visibility (accepted observe → folded item live
+//!   in the served catalogue) stays within the configured freshness SLA
+//!   (`ingest.sla_us`, default 500 ms);
+//! * the audit recall EWMA stays **≥ 0.99** — the write stream must not
+//!   degrade read-path quality;
+//! * every new item the writer created folded in exactly once
+//!   (checked at both profiles).
+//!
+//! ```bash
+//! cargo bench --bench ingest_stream
+//! GEOMAP_BENCH_FAST=1 cargo bench --bench ingest_stream
+//! ```
+
+mod common;
+
+use geomap::configx::{
+    AuditConfig, Backend, PostingsMode, QuantMode, SchemaConfig, ServeConfig,
+};
+use geomap::coordinator::Coordinator;
+use geomap::net::{NetClient, NetServer};
+use geomap::rng::{Rng, Zipf};
+use geomap::runtime::cpu_scorer_factory;
+use geomap::testing::fix;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+struct Workload {
+    items: usize,
+    k: usize,
+    pool: usize,
+    requests: usize,
+    readers: usize,
+    writer_ops: usize,
+}
+
+fn workload() -> Workload {
+    if common::fast() {
+        Workload {
+            items: 512,
+            k: 16,
+            pool: 128,
+            requests: 2_048,
+            readers: 3,
+            writer_ops: 512,
+        }
+    } else {
+        Workload {
+            items: 4096,
+            k: 32,
+            pool: 512,
+            requests: 16_384,
+            readers: 3,
+            writer_ops: 4_096,
+        }
+    }
+}
+
+fn serve_cfg(w: &Workload) -> ServeConfig {
+    ServeConfig {
+        k: w.k,
+        kappa: 10,
+        // lossless prune + compressed rescoring tier: the config the
+        // quality-audit bench holds at recall ≥ 0.99, reused here so the
+        // recall gate isolates write-stream interference (module docs)
+        schema: SchemaConfig::TernaryOneHot,
+        threshold: 0.0,
+        quant: QuantMode::Int8 { refine: 4 },
+        postings: PostingsMode::Packed,
+        max_batch: 32,
+        max_wait_us: 200,
+        shards: 2,
+        queue_cap: 8192,
+        use_xla: false,
+        backend: Backend::Geomap,
+        audit: AuditConfig { sample: 1.0, ..AuditConfig::default() },
+        ..ServeConfig::default()
+    }
+}
+
+/// The writer leg: a continuous mutation stream over one connection.
+/// Returns (accepted observes + upserts, new items created, elapsed).
+fn write_stream(
+    addr: std::net::SocketAddr,
+    w: &Workload,
+) -> (u64, u64, Duration) {
+    let mut client = NetClient::connect(addr).expect("writer connection");
+    let mut rng = Rng::seeded(0xFEED);
+    let mut user = 0u32;
+    let mut next_new = w.items as u32;
+    let mut mutations = 0u64;
+    let mut created = 0u64;
+    let t0 = Instant::now();
+    for i in 0..w.writer_ops {
+        match i % 8 {
+            // the user who just rated live items rates a brand-new id:
+            // contiguous (id == total at fold time) and backed by a
+            // user factor, so it fold-ins as soon as the queue drains
+            1 => {
+                let ok = client
+                    .observe(user, next_new, 4.5)
+                    .expect("observe over the wire");
+                if ok {
+                    mutations += 1;
+                    created += 1;
+                    next_new += 1;
+                }
+            }
+            // periodic catalogue upsert: merge pressure beside the folds
+            7 => {
+                let id = rng.below(w.items) as u32;
+                let f = vec![0.25f32; w.k];
+                client.upsert(id, &f).expect("upsert over the wire");
+                mutations += 1;
+            }
+            // live-item ratings: the online user fold-in stream
+            _ => {
+                user = rng.below(w.pool) as u32;
+                let item = rng.below(w.items) as u32;
+                let rating = 1.0 + rng.below(9) as f32 * 0.5;
+                let ok = client
+                    .observe(user, item, rating)
+                    .expect("observe over the wire");
+                if ok {
+                    mutations += 1;
+                }
+            }
+        }
+    }
+    (mutations, created, t0.elapsed())
+}
+
+fn main() {
+    let w = workload();
+    let items = fix::items(w.items, w.k, 42);
+    let users = fix::users(w.pool, w.k, 43);
+    println!(
+        "== ingest stream: {} items, k={}, one-hot int8+packed \
+         (threshold 0), pool {} users, {} reads × {} readers + {} writer \
+         ops, audit sample 1.0 ==",
+        w.items, w.k, w.pool, w.requests, w.readers, w.writer_ops
+    );
+
+    let cfg = serve_cfg(&w);
+    let sla_us = cfg.ingest.sla_us;
+    let coord = Arc::new(
+        Coordinator::start(cfg, items.clone(), cpu_scorer_factory())
+            .expect("coordinator"),
+    );
+    let server = NetServer::start(Arc::clone(&coord), "127.0.0.1:0")
+        .expect("net front-end");
+    let addr = server.local_addr();
+
+    // readers and the writer run concurrently; the scope joins both
+    let zipf = Zipf::new(w.pool, 1.05);
+    let mut writer_out = (0u64, 0u64, Duration::ZERO);
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for c in 0..w.readers {
+            let zipf = zipf.clone();
+            let users = &users;
+            scope.spawn(move || {
+                let mut client =
+                    NetClient::connect(addr).expect("reader connection");
+                let mut rng = Rng::seeded(0x5EED + c as u64);
+                for _ in 0..w.requests / w.readers {
+                    let u = users.row(zipf.sample(&mut rng));
+                    let line =
+                        client.query_raw(u, 10).expect("network request");
+                    assert!(
+                        !line.starts_with(b"{\"error"),
+                        "server error on well-formed query: {}",
+                        String::from_utf8_lossy(line)
+                    );
+                }
+            });
+        }
+        writer_out = write_stream(addr, &w);
+    });
+    let total_elapsed = t0.elapsed();
+    let (mutations, created, writer_elapsed) = writer_out;
+    let reads = (w.requests / w.readers * w.readers) as f64;
+    let write_rate = mutations as f64 / writer_elapsed.as_secs_f64();
+    println!(
+        "readers: {:.0} req/s over the run; writer: {mutations} mutations \
+         ({created} new items) in {:.2}s → {write_rate:.0} mut/s",
+        reads / total_elapsed.as_secs_f64(),
+        writer_elapsed.as_secs_f64(),
+    );
+
+    // drain: every created item must become servable; the fold counter
+    // (Acquire, paired with the ingest thread's Release) then equals the
+    // created count exactly — each new id folds in exactly once
+    let expected = w.items + created as usize;
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while coord.total_items() < expected {
+        assert!(
+            Instant::now() < deadline,
+            "ingest never drained: {} of {expected} items live",
+            coord.total_items()
+        );
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    let m = coord.metrics();
+    let folds = m.ingest_item_folds.load(Ordering::Acquire);
+    assert_eq!(
+        folds, created,
+        "every created item must fold exactly once"
+    );
+    assert_eq!(coord.total_items(), expected, "catalogue grew past the folds");
+
+    // scrape freshness + quality over the wire, like a real operator
+    let mut client = NetClient::connect(addr).expect("stats connection");
+    let j = client.stats().expect("stats round trip");
+    let ing = j.get("ingest").expect("ingest section");
+    let vis_p99 = ing
+        .get("visibility_us")
+        .and_then(|h| h.get("p99"))
+        .and_then(|v| v.as_usize())
+        .expect("ingest.visibility_us.p99") as u64;
+    let breaches = ing
+        .get("sla_breach")
+        .and_then(|v| v.as_usize())
+        .expect("ingest.sla_breach");
+    let recall = j
+        .get("quality")
+        .and_then(|q| q.get("recall_ewma"))
+        .and_then(|v| v.as_f64())
+        .expect("quality.recall_ewma");
+    println!(
+        "freshness: visibility p99 {vis_p99}us (SLA {sla_us}us, {breaches} \
+         breaches); read quality under churn: recall ewma {recall:.4}"
+    );
+
+    server.shutdown();
+    Arc::try_unwrap(coord).ok().map(Coordinator::shutdown);
+
+    if common::fast() {
+        println!("\nfast profile: measurements reported, gates not judged");
+        return;
+    }
+    let mut failed = false;
+    if write_rate < 1000.0 {
+        eprintln!(
+            "INGEST STREAM TARGET MISSED: {write_rate:.0} mutations/s \
+             sustained, below the 1000/s floor"
+        );
+        failed = true;
+    }
+    if vis_p99 > sla_us {
+        eprintln!(
+            "INGEST STREAM TARGET MISSED: p99 time-to-visibility \
+             {vis_p99}us exceeds the {sla_us}us freshness SLA"
+        );
+        failed = true;
+    }
+    if recall < 0.99 {
+        eprintln!(
+            "INGEST STREAM TARGET MISSED: recall ewma {recall:.4} under \
+             the write stream, below the 0.99 read-path floor"
+        );
+        failed = true;
+    }
+    if failed {
+        std::process::exit(1);
+    }
+    println!(
+        "\ningest stream targets met: ≥ 1000 mutations/s sustained, p99 \
+         visibility within the freshness SLA, recall ewma ≥ 0.99 under \
+         churn"
+    );
+}

@@ -550,6 +550,45 @@ impl Default for AuditConfig {
     }
 }
 
+/// Streaming-ingest fold-in policy (see `docs/INGEST.md`). JSON form is
+/// a nested `"ingest"` object
+/// (`{"ingest": {"reg": 0.08, "min_obs": 1, "merge_budget": 8}}`); CLI
+/// flags are `--ingest-reg`, `--ingest-min-obs`, `--ingest-merge-budget`,
+/// `--ingest-queue`, and `--ingest-sla-us`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct IngestConfig {
+    /// Fold-in ridge regularisation λ, scaled by each row's observation
+    /// count (matching the ALS trainer). Any positive value keeps the
+    /// normal equations SPD regardless of rank deficiency.
+    pub reg: f32,
+    /// Observations (from users with folded factors) a new item needs
+    /// before its factor is solved and upserted.
+    pub min_obs: usize,
+    /// Max fold-in upserts applied per drained observation — bounds the
+    /// mutation burst (engine clone + epoch bump each) one observation
+    /// can trigger; the remainder folds on subsequent observations or at
+    /// shutdown drain.
+    pub merge_budget: usize,
+    /// Bounded observation-queue depth; a full queue sheds the
+    /// observation (`accepted:false`) instead of ever blocking serving.
+    pub queue: usize,
+    /// Freshness SLA (µs): a visibility sample beyond this bound counts
+    /// as an SLA breach in the `ingest` stats section.
+    pub sla_us: u64,
+}
+
+impl Default for IngestConfig {
+    fn default() -> Self {
+        IngestConfig {
+            reg: 0.08,
+            min_obs: 1,
+            merge_budget: 8,
+            queue: 256,
+            sla_us: 500_000,
+        }
+    }
+}
+
 /// Coordinator serving configuration.
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
@@ -612,6 +651,10 @@ pub struct ServeConfig {
     /// `--audit-half-life`/`--recall-floor`) — see `docs/OBSERVABILITY.md`
     /// §Quality audit.
     pub audit: AuditConfig,
+    /// Streaming-ingest fold-in policy (JSON `"ingest": {…}`, CLI
+    /// `--ingest-*`): online least-squares fold-in of new users/items
+    /// from the `observe` verb — see `docs/INGEST.md`.
+    pub ingest: IngestConfig,
     /// Hot-path kernel dispatch (JSON `"kernels": "auto" | "scalar"`,
     /// CLI `--kernels`): `auto` installs runtime-detected SIMD arms for
     /// the i8 dot / block unpack / lane-accumulate loops, `scalar`
@@ -655,6 +698,7 @@ impl Default for ServeConfig {
             net: NetMode::Off,
             obs: ObsConfig::default(),
             audit: AuditConfig::default(),
+            ingest: IngestConfig::default(),
             kernels: KernelsMode::Auto,
         }
     }
@@ -732,6 +776,29 @@ impl ServeConfig {
                  got {}",
                 self.audit.recall_floor
             )));
+        }
+        if !self.ingest.reg.is_finite() || self.ingest.reg < 0.0 {
+            return Err(GeomapError::Config(format!(
+                "ingest.reg (--ingest-reg) must be a finite value >= 0, \
+                 got {}",
+                self.ingest.reg
+            )));
+        }
+        if self.ingest.min_obs == 0 {
+            return Err(GeomapError::Config(
+                "ingest.min_obs (--ingest-min-obs) must be >= 1".into(),
+            ));
+        }
+        if self.ingest.merge_budget == 0 {
+            return Err(GeomapError::Config(
+                "ingest.merge_budget (--ingest-merge-budget) must be >= 1"
+                    .into(),
+            ));
+        }
+        if self.ingest.sla_us == 0 {
+            return Err(GeomapError::Config(
+                "ingest.sla_us (--ingest-sla-us) must be >= 1".into(),
+            ));
         }
         if let Some(ck) = self.checkpoint.take() {
             self.checkpoint = Some(ck.validated()?);
@@ -825,6 +892,23 @@ impl ServeConfig {
             }
             if let Some(v) = a.opt("queue") {
                 c.audit.queue = v.as_usize()?;
+            }
+        }
+        if let Some(i) = j.opt("ingest") {
+            if let Some(v) = i.opt("reg") {
+                c.ingest.reg = v.as_f64()? as f32;
+            }
+            if let Some(v) = i.opt("min_obs") {
+                c.ingest.min_obs = v.as_usize()?;
+            }
+            if let Some(v) = i.opt("merge_budget") {
+                c.ingest.merge_budget = v.as_usize()?;
+            }
+            if let Some(v) = i.opt("queue") {
+                c.ingest.queue = v.as_usize()?;
+            }
+            if let Some(v) = i.opt("sla_us") {
+                c.ingest.sla_us = v.as_usize()? as u64;
             }
         }
         if let Some(v) = j.opt("checkpoint_dir") {
@@ -1010,6 +1094,59 @@ mod tests {
             assert!(err.contains("recall-floor"), "{err}");
         }
         let j = Json::parse(r#"{"audit": {"sample": 2}}"#).unwrap();
+        assert!(ServeConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn ingest_defaults_and_json_block() {
+        let c = ServeConfig::default();
+        assert_eq!(c.ingest, IngestConfig::default());
+        let j = Json::parse(
+            r#"{"ingest": {"reg": 0.2, "min_obs": 3, "merge_budget": 2,
+                "queue": 32, "sla_us": 250000}}"#,
+        )
+        .unwrap();
+        let c = ServeConfig::from_json(&j).unwrap();
+        assert_eq!(
+            c.ingest,
+            IngestConfig {
+                reg: 0.2,
+                min_obs: 3,
+                merge_budget: 2,
+                queue: 32,
+                sla_us: 250_000,
+            }
+        );
+        // partial block keeps the other defaults
+        let j = Json::parse(r#"{"ingest": {"min_obs": 2}}"#).unwrap();
+        let c = ServeConfig::from_json(&j).unwrap();
+        assert_eq!(
+            c.ingest,
+            IngestConfig { min_obs: 2, ..IngestConfig::default() }
+        );
+    }
+
+    #[test]
+    fn ingest_knobs_out_of_range_rejected() {
+        for reg in [-0.1f32, f32::NAN, f32::INFINITY] {
+            let mut c = ServeConfig::default();
+            c.ingest.reg = reg;
+            let err = c.validated().unwrap_err().to_string();
+            assert!(err.contains("ingest-reg"), "{err}");
+        }
+        let mut c = ServeConfig::default();
+        c.ingest.min_obs = 0;
+        let err = c.validated().unwrap_err().to_string();
+        assert!(err.contains("ingest-min-obs"), "{err}");
+        let mut c = ServeConfig::default();
+        c.ingest.merge_budget = 0;
+        let err = c.validated().unwrap_err().to_string();
+        assert!(err.contains("ingest-merge-budget"), "{err}");
+        let mut c = ServeConfig::default();
+        c.ingest.sla_us = 0;
+        let err = c.validated().unwrap_err().to_string();
+        assert!(err.contains("ingest-sla-us"), "{err}");
+        let j = Json::parse(r#"{"ingest": {"min_obs": 0}}"#).unwrap();
         assert!(ServeConfig::from_json(&j).is_err());
     }
 

@@ -102,6 +102,26 @@ pub struct ServeMetrics {
     pub health_tombstone_frac_bits: AtomicU64,
     /// Quant scale dispersion `(max−min)/mean` over live rows (f64 bits).
     pub health_scale_drift_bits: AtomicU64,
+    /// Observations accepted into the ingest fold queue.
+    pub ingest_observed: AtomicU64,
+    /// Observations shed because the ingest queue was full.
+    pub ingest_shed: AtomicU64,
+    /// User-factor fold solves performed by the ingest thread.
+    pub ingest_user_folds: AtomicU64,
+    /// New-item factors folded in and upserted into the catalogue.
+    pub ingest_item_folds: AtomicU64,
+    /// Fold solves or upserts that failed (observations dropped).
+    pub ingest_errors: AtomicU64,
+    /// Observations evicted from a full per-row history.
+    pub ingest_evicted: AtomicU64,
+    /// Visibility samples that exceeded the configured freshness SLA.
+    pub ingest_sla_breach: AtomicU64,
+    /// Observations currently retained for not-yet-live items (gauge;
+    /// the ingest thread is the single writer).
+    pub ingest_pending: AtomicU64,
+    /// Accepted-observe → item-live-in-a-snapshot time (µs), one sample
+    /// per observation that contributed to a fold-in.
+    pub ingest_visibility_us: Histogram,
 }
 
 impl ServeMetrics {
@@ -155,7 +175,9 @@ impl ServeMetrics {
     /// `work:` line totals the physical-work counters when any were fed.
     /// A `quality:` line summarises the shadow-rescore audit once a query
     /// has been audited, and a `health:` line the index gauges once they
-    /// have been computed.
+    /// have been computed. An `ingest:` line reports fold-in counters and
+    /// the time-to-visibility quantiles once an observation has been
+    /// accepted.
     pub fn report(&self) -> String {
         let acc = self.accepted.load(Ordering::Relaxed);
         let rej = self.rejected.load(Ordering::Relaxed);
@@ -255,6 +277,23 @@ impl ServeMetrics {
         } else {
             String::new()
         };
+        let observed = self.ingest_observed.load(Ordering::Relaxed);
+        let ingest = if observed > 0 {
+            format!(
+                "\ningest:   {observed} observed ({} shed), {} user folds, \
+                 {} item folds, {} errors, {} pending; visibility {}, \
+                 {} SLA breaches",
+                self.ingest_shed.load(Ordering::Relaxed),
+                self.ingest_user_folds.load(Ordering::Relaxed),
+                self.ingest_item_folds.load(Ordering::Relaxed),
+                self.ingest_errors.load(Ordering::Relaxed),
+                self.ingest_pending.load(Ordering::Relaxed),
+                self.ingest_visibility_us.summary(),
+                self.ingest_sla_breach.load(Ordering::Relaxed),
+            )
+        } else {
+            String::new()
+        };
         format!(
             "requests: accepted {acc}, rejected {rej}, completed {done}\n\
              batches:  {batches} (size {})\n\
@@ -262,7 +301,7 @@ impl ServeMetrics {
              queueing: {}\n\
              pruning:  {} candidates\n\
              discard:  p50 {:.1}% p95 {:.1}% p99 {:.1}%; mean {:.1}% → \
-             {:.2}x speed-up{stages}{work}{quality}{health}{cache}{net}",
+             {:.2}x speed-up{stages}{work}{quality}{health}{ingest}{cache}{net}",
             self.batch_size.summary_with_unit(""),
             self.latency_us.summary(),
             self.queue_wait_us.summary(),
@@ -335,6 +374,17 @@ impl ServeMetrics {
             scale_drift: f64::from_bits(
                 self.health_scale_drift_bits.load(Ordering::Relaxed),
             ),
+            // Acquire pairs with the ingest thread's Release store after it
+            // publishes a folded item, so a reader that sees the fold count
+            // also sees the catalogue mutation behind it.
+            ingest_item_folds: self.ingest_item_folds.load(Ordering::Acquire),
+            ingest_observed: self.ingest_observed.load(Ordering::Relaxed),
+            ingest_shed: self.ingest_shed.load(Ordering::Relaxed),
+            ingest_user_folds: self.ingest_user_folds.load(Ordering::Relaxed),
+            ingest_errors: self.ingest_errors.load(Ordering::Relaxed),
+            ingest_evicted: self.ingest_evicted.load(Ordering::Relaxed),
+            ingest_sla_breach: self.ingest_sla_breach.load(Ordering::Relaxed),
+            ingest_pending: self.ingest_pending.load(Ordering::Relaxed),
             latency_us: self.latency_us.snapshot(),
             queue_wait_us: self.queue_wait_us.snapshot(),
             batch_size: self.batch_size.snapshot(),
@@ -346,6 +396,7 @@ impl ServeMetrics {
             stage_cache_fill_us: self.stage_cache_fill_us.snapshot(),
             stage_net_decode_us: self.stage_net_decode_us.snapshot(),
             stage_net_encode_us: self.stage_net_encode_us.snapshot(),
+            ingest_visibility_us: self.ingest_visibility_us.snapshot(),
         }
     }
 }
@@ -419,6 +470,22 @@ pub struct MetricsSnapshot {
     pub tombstone_frac: f64,
     /// Quant scale dispersion over live rows (gauge).
     pub scale_drift: f64,
+    /// Observations accepted into the ingest fold queue (counter).
+    pub ingest_observed: u64,
+    /// Observations shed by the full ingest queue (counter).
+    pub ingest_shed: u64,
+    /// User-factor fold solves performed (counter).
+    pub ingest_user_folds: u64,
+    /// New-item factors folded in and upserted (counter).
+    pub ingest_item_folds: u64,
+    /// Failed fold solves or upserts (counter).
+    pub ingest_errors: u64,
+    /// Observations evicted from a full per-row history (counter).
+    pub ingest_evicted: u64,
+    /// Visibility samples over the freshness SLA (counter).
+    pub ingest_sla_breach: u64,
+    /// Observations retained for not-yet-live items (gauge).
+    pub ingest_pending: u64,
     /// End-to-end latency (µs).
     pub latency_us: HistogramSnapshot,
     /// Admission-queue wait (µs).
@@ -441,6 +508,8 @@ pub struct MetricsSnapshot {
     pub stage_net_decode_us: HistogramSnapshot,
     /// Wire-encode span per response line (µs).
     pub stage_net_encode_us: HistogramSnapshot,
+    /// Accepted-observe → item-live time (µs).
+    pub ingest_visibility_us: HistogramSnapshot,
 }
 
 impl MetricsSnapshot {
@@ -486,6 +555,15 @@ impl MetricsSnapshot {
             delta_frac: self.delta_frac,
             tombstone_frac: self.tombstone_frac,
             scale_drift: self.scale_drift,
+            ingest_observed: self.ingest_observed.saturating_sub(earlier.ingest_observed),
+            ingest_shed: self.ingest_shed.saturating_sub(earlier.ingest_shed),
+            ingest_user_folds: self.ingest_user_folds.saturating_sub(earlier.ingest_user_folds),
+            ingest_item_folds: self.ingest_item_folds.saturating_sub(earlier.ingest_item_folds),
+            ingest_errors: self.ingest_errors.saturating_sub(earlier.ingest_errors),
+            ingest_evicted: self.ingest_evicted.saturating_sub(earlier.ingest_evicted),
+            ingest_sla_breach: self.ingest_sla_breach.saturating_sub(earlier.ingest_sla_breach),
+            // pending is a gauge: carry the later depth, not a difference
+            ingest_pending: self.ingest_pending,
             latency_us: self.latency_us.saturating_sub(&earlier.latency_us),
             queue_wait_us: self.queue_wait_us.saturating_sub(&earlier.queue_wait_us),
             batch_size: self.batch_size.saturating_sub(&earlier.batch_size),
@@ -505,6 +583,9 @@ impl MetricsSnapshot {
             stage_net_encode_us: self
                 .stage_net_encode_us
                 .saturating_sub(&earlier.stage_net_encode_us),
+            ingest_visibility_us: self
+                .ingest_visibility_us
+                .saturating_sub(&earlier.ingest_visibility_us),
         }
     }
 
@@ -535,9 +616,19 @@ impl MetricsSnapshot {
         } else {
             String::new()
         };
+        let ingest = if self.ingest_observed > 0 {
+            let (_, _, v99) = self.ingest_visibility_us.percentiles();
+            format!(
+                ", {:.0} obs/s ({} folds, visibility p99 {v99}us)",
+                self.ingest_observed as f64 / secs,
+                self.ingest_item_folds,
+            )
+        } else {
+            String::new()
+        };
         format!(
             "{:.0} req/s ({} completed, {} rejected in {:.1}s), \
-             latency p50 {p50}us p95 {p95}us p99 {p99}us{cache}{quality}",
+             latency p50 {p50}us p95 {p95}us p99 {p99}us{cache}{quality}{ingest}",
             self.completed as f64 / secs,
             self.completed,
             self.rejected,
@@ -854,5 +945,66 @@ mod tests {
         m.cache_misses.fetch_add(1, Ordering::Relaxed);
         let line = m.snapshot().delta(&start).rate_report(2.0);
         assert!(line.contains("cache hit 75.0%"), "{line}");
+    }
+
+    #[test]
+    fn report_includes_ingest_line_only_when_observed() {
+        let m = ServeMetrics::new();
+        m.latency_us.record(50);
+        assert!(
+            !m.report().contains("ingest:"),
+            "ingest-off reports must be unchanged"
+        );
+        m.ingest_observed.fetch_add(10, Ordering::Relaxed);
+        m.ingest_shed.fetch_add(2, Ordering::Relaxed);
+        m.ingest_user_folds.fetch_add(4, Ordering::Relaxed);
+        m.ingest_item_folds.fetch_add(3, Ordering::Relaxed);
+        m.ingest_errors.fetch_add(1, Ordering::Relaxed);
+        m.ingest_pending.store(5, Ordering::Relaxed);
+        m.ingest_sla_breach.fetch_add(1, Ordering::Relaxed);
+        m.ingest_visibility_us.record(800);
+        let r = m.report();
+        assert!(r.contains("ingest:"), "{r}");
+        assert!(r.contains("10 observed (2 shed)"), "{r}");
+        assert!(r.contains("4 user folds"), "{r}");
+        assert!(r.contains("3 item folds"), "{r}");
+        assert!(r.contains("1 errors"), "{r}");
+        assert!(r.contains("5 pending"), "{r}");
+        assert!(r.contains("1 SLA breaches"), "{r}");
+    }
+
+    #[test]
+    fn ingest_delta_subtracts_counters_and_carries_pending() {
+        let m = ServeMetrics::new();
+        m.ingest_observed.fetch_add(20, Ordering::Relaxed);
+        m.ingest_item_folds.fetch_add(5, Ordering::Relaxed);
+        m.ingest_pending.store(9, Ordering::Relaxed);
+        m.ingest_visibility_us.record(1_000);
+        let start = m.snapshot();
+        m.ingest_observed.fetch_add(30, Ordering::Relaxed);
+        m.ingest_shed.fetch_add(4, Ordering::Relaxed);
+        m.ingest_user_folds.fetch_add(7, Ordering::Relaxed);
+        m.ingest_item_folds.fetch_add(6, Ordering::Relaxed);
+        m.ingest_sla_breach.fetch_add(2, Ordering::Relaxed);
+        m.ingest_pending.store(3, Ordering::Relaxed);
+        for _ in 0..10 {
+            m.ingest_visibility_us.record(400);
+        }
+        let d = m.snapshot().delta(&start);
+        assert_eq!(d.ingest_observed, 30, "20 pre-window observes subtracted");
+        assert_eq!(d.ingest_shed, 4);
+        assert_eq!(d.ingest_user_folds, 7);
+        assert_eq!(d.ingest_item_folds, 6);
+        assert_eq!(d.ingest_sla_breach, 2);
+        assert_eq!(d.ingest_pending, 3, "queue depth is a gauge, not 9−3");
+        assert_eq!(d.ingest_visibility_us.count(), 10);
+        let line = d.rate_report(2.0);
+        assert!(line.contains("15 obs/s"), "{line}");
+        assert!(line.contains("6 folds"), "{line}");
+        assert!(line.contains("visibility p99"), "{line}");
+        // a window with no observes stays byte-identical to PR 9
+        let quiet = ServeMetrics::new();
+        let q = quiet.snapshot().delta(&quiet.snapshot());
+        assert!(!q.rate_report(1.0).contains("obs/s"), "ingest-off unchanged");
     }
 }

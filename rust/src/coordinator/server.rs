@@ -26,6 +26,7 @@ use crate::cache::{fingerprint, CachedResponse, Lookup, ResultCache};
 use crate::configx::{CacheMode, ServeConfig};
 use crate::engine::{explicit, Engine};
 use crate::error::{GeomapError, Result};
+use crate::ingest::Ingestor;
 use crate::linalg::Matrix;
 use crate::obs::{
     AuditEntry, Auditor, Logger, Sampler, SlowEntry, SlowLog, StageTimer,
@@ -114,6 +115,11 @@ pub struct Coordinator {
     /// Always present: with sampling off it still keeps the health gauges
     /// current across epoch bumps.
     audit: Arc<Auditor>,
+    /// Streaming-ingest fold-in queue (`ServeConfig::ingest`, see
+    /// `docs/INGEST.md`): [`observe`](Coordinator::observe) offers into
+    /// it, a background thread folds new users/items through the same
+    /// upsert path incremental mutation uses.
+    ingest: Arc<Ingestor>,
 }
 
 impl Coordinator {
@@ -277,6 +283,14 @@ impl Coordinator {
         let audit = Arc::new(Auditor::start(cfg.audit, Arc::clone(&metrics)));
         audit.observe_version(&store.snapshot());
 
+        // streaming-ingest fold thread: observations offered through
+        // `observe` fold into the catalogue off the read path
+        let ingest = Arc::new(Ingestor::start(
+            cfg.ingest,
+            Arc::clone(&store),
+            Arc::clone(&metrics),
+        ));
+
         // dispatcher
         let dispatcher = {
             let queue = Arc::clone(&queue);
@@ -332,6 +346,7 @@ impl Coordinator {
             spec_digest,
             obs,
             audit,
+            ingest,
         })
     }
 
@@ -461,6 +476,32 @@ impl Coordinator {
         self.store.remove(id)
     }
 
+    /// Offer one `(user, item, rating)` observation to the streaming
+    /// ingest queue (`docs/INGEST.md`). Returns whether the bounded
+    /// queue accepted it — `false` means shed under load, never blocked.
+    /// Non-finite ratings are rejected here, before the queue.
+    pub fn observe(&self, user: u32, item: u32, rating: f32) -> Result<bool> {
+        if !rating.is_finite() {
+            return Err(GeomapError::Shape(
+                "observe rating must be finite".into(),
+            ));
+        }
+        if self.closing.load(Ordering::Acquire) {
+            return Err(GeomapError::Rejected(
+                "coordinator shutting down".into(),
+            ));
+        }
+        Ok(self.ingest.offer(user, item, rating))
+    }
+
+    /// Observations currently retained by the ingest layer for items
+    /// that are not yet live (tests and operators poll this to detect a
+    /// drained write stream; also exported as the `ingest_pending`
+    /// stats gauge).
+    pub fn ingest_pending(&self) -> usize {
+        self.ingest.pending_observations()
+    }
+
     /// Serving metrics.
     pub fn metrics(&self) -> &ServeMetrics {
         &self.metrics
@@ -507,6 +548,10 @@ impl Coordinator {
             ck.stop();
         }
         self.closing.store(true, Ordering::Release);
+        // the ingest thread first, while the store is fully consistent:
+        // its channel closes, queued observations drain through one
+        // final fold pass, and the counters come to rest exactly
+        self.ingest.stop();
         self.queue.close();
         if let Some(d) = self.dispatcher.take() {
             let _ = d.join();
@@ -891,6 +936,39 @@ mod tests {
         assert_eq!(resp.total_items, 101);
         // dim mismatch rejected at the facade
         assert!(coord.upsert(0, &[1.0; 3]).is_err());
+        coord.shutdown();
+    }
+
+    #[test]
+    fn observe_feeds_ingest_through_the_coordinator() {
+        let k = 8;
+        let coord = Coordinator::start(
+            test_cfg(k, 2),
+            items(60, k, 90),
+            cpu_scorer_factory(),
+        )
+        .unwrap();
+        // non-finite ratings rejected at the facade, before the queue
+        assert!(coord.observe(1, 2, f32::NAN).is_err());
+        assert!(coord.observe(1, 2, f32::INFINITY).is_err());
+        // warm user 5 on live items, then stream a brand-new item
+        assert!(coord.observe(5, 3, 0.9).unwrap());
+        assert!(coord.observe(5, 10, -0.4).unwrap());
+        assert!(coord.observe(5, 60, 0.7).unwrap());
+        // the fold thread works asynchronously; wait for the append
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while coord.total_items() < 61 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert_eq!(coord.total_items(), 61, "folded item 60 appended");
+        let m = coord.metrics();
+        assert_eq!(m.ingest_observed.load(Ordering::Relaxed), 3);
+        assert_eq!(m.ingest_item_folds.load(Ordering::Acquire), 1);
+        assert_eq!(coord.ingest_pending(), 0);
+        // the folded item is servable through the normal read path
+        let user = crate::testing::fix::user(k, 91);
+        let resp = coord.submit(user, 61).unwrap();
+        assert_eq!(resp.total_items, 61);
         coord.shutdown();
     }
 

@@ -1,0 +1,537 @@
+//! Streaming ingest: online fold-in of new users and items
+//! (`docs/INGEST.md`).
+//!
+//! The serving stack treats factors as precomputed — `mf/{als,sgd}`
+//! learn them offline and the catalogue mutates only through explicit
+//! `upsert`/`remove`. This module closes the loop the paper's motivating
+//! workloads (online news, fresh catalogues) need: a rating stream
+//! `(user, item, rating)` arrives while serving continues, and new rows
+//! get factors *folded in* online — the single ridge least-squares solve
+//! against the fixed opposite-side factors that one ALS half-step would
+//! perform, reused here as [`fold_in`] on the same
+//! [`cholesky_solve`] normal-equations machinery.
+//!
+//! Two sides fold symmetrically:
+//!
+//! * a **user** seen rating live catalogue items gets a user factor
+//!   solved against those items' current factors (kept in the ingest
+//!   state — queries still carry explicit factors, but the folded user
+//!   factors are what make item folds possible);
+//! * an **item** not yet in the catalogue accumulates observations; once
+//!   [`IngestConfig::min_obs`] of them come from users with folded
+//!   factors (and the id is contiguous with the catalogue), its factor
+//!   is solved and pushed through the existing
+//!   [`FactorStore::upsert`] path — geomap re-embedding, epoch bump,
+//!   cache invalidation, and the threshold merge all ride along
+//!   unchanged, off the read path.
+//!
+//! Shed, don't block — the [`Auditor`](crate::obs::Auditor) discipline:
+//! observations cross one bounded channel to a single background thread;
+//! a full queue sheds the observation (counted in `ingest_shed`, the
+//! client sees `accepted:false`), never blocking the serving side.
+//! Freshness is measured per accepted observation: when the item it
+//! contributed to becomes live in a swapped-in snapshot, the elapsed
+//! time from acceptance lands in the `visibility_us` histogram, and
+//! samples beyond [`IngestConfig::sla_us`] count as SLA breaches.
+//!
+//! Live items are never re-folded from the stream: a handful of online
+//! ratings would overwrite a factor learned from the full training log.
+//! Their observations still feed the rater's user factor.
+
+use crate::configx::IngestConfig;
+use crate::coordinator::{FactorStore, ServeMetrics, ShardSet};
+use crate::error::{GeomapError, Result};
+use crate::linalg::{cholesky_solve, Matrix};
+use crate::obs::Logger;
+use std::collections::HashMap;
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+static LOG: Logger = Logger::new("ingest");
+
+/// Per-row observation-history cap: a user's fold uses at most this many
+/// most-recent ratings, and a pending item retains at most this many.
+/// Bounds ingest-state memory under adversarial streams; old entries
+/// fall off FIFO (counted in `ingest_evicted`).
+const MAX_HISTORY: usize = 64;
+
+/// Solve the fold-in ridge normal equations for one new row:
+/// `(XᵀX + λ n I) w = Xᵀ r` with `X` the `n` fixed opposite-side factors
+/// and `r` the observed ratings — exactly the per-row system one ALS
+/// half-sweep solves ([`AlsTrainer`](crate::mf::AlsTrainer)), minus the
+/// bias terms: the serving engine scores plain inner products, so the
+/// fold treats ratings directly as inner-product targets.
+///
+/// `reg` scales with the observation count (matching ALS), so any
+/// `reg > 0` makes the system SPD regardless of rank deficiency in `X`.
+/// With `reg == 0` a rank-deficient system surfaces as `Err` from the
+/// Cholesky factorisation rather than a garbage factor. Zero
+/// observations return the zero vector (inert in any top-k).
+pub fn fold_in(k: usize, reg: f32, obs: &[(&[f32], f32)]) -> Result<Vec<f32>> {
+    if obs.is_empty() {
+        return Ok(vec![0.0; k]);
+    }
+    let mut a = Matrix::zeros(k, k);
+    let mut b = vec![0.0f32; k];
+    for &(x, r) in obs {
+        if x.len() != k {
+            return Err(GeomapError::Shape(format!(
+                "fold_in: co-factor has {} dims, expected {k}",
+                x.len()
+            )));
+        }
+        if !r.is_finite() {
+            return Err(GeomapError::Shape(format!(
+                "fold_in: non-finite rating {r}"
+            )));
+        }
+        for i in 0..k {
+            b[i] += r * x[i];
+            for j in 0..=i {
+                let inc = x[i] * x[j];
+                a.set(i, j, a.get(i, j) + inc);
+            }
+        }
+    }
+    let lambda = reg * obs.len() as f32;
+    for i in 0..k {
+        for j in 0..i {
+            a.set(j, i, a.get(i, j));
+        }
+        a.set(i, i, a.get(i, i) + lambda);
+    }
+    cholesky_solve(a, b)
+}
+
+/// One accepted observation crossing to the fold thread.
+struct Obs {
+    user: u32,
+    item: u32,
+    rating: f32,
+    /// Acceptance time — the freshness clock starts here.
+    at: Instant,
+}
+
+/// Fold state for one streamed user.
+#[derive(Default)]
+struct UserState {
+    /// Most-recent `(item, rating)` pairs, FIFO-capped at [`MAX_HISTORY`].
+    history: Vec<(u32, f32)>,
+    /// Folded factor, refreshed whenever a new observation resolves.
+    factor: Option<Vec<f32>>,
+}
+
+/// All mutable fold state, owned by the ingest thread (the handle only
+/// locks it for read-side accessors; contention is one task at a time).
+#[derive(Default)]
+struct FoldState {
+    users: HashMap<u32, UserState>,
+    /// Observations for items not yet live: `(user, rating, accepted)`.
+    pending: HashMap<u32, Vec<(u32, f32, Instant)>>,
+}
+
+/// The ingest front door the coordinator holds: `try_send` hand-off on
+/// the serving side, one owned background fold thread on the other.
+pub struct Ingestor {
+    tx: Mutex<Option<SyncSender<Obs>>>,
+    handle: Mutex<Option<JoinHandle<()>>>,
+    state: Arc<Mutex<FoldState>>,
+    metrics: Arc<ServeMetrics>,
+}
+
+impl Ingestor {
+    /// Spawn the fold thread and return the serving-side handle.
+    pub fn start(
+        cfg: IngestConfig,
+        store: Arc<FactorStore>,
+        metrics: Arc<ServeMetrics>,
+    ) -> Ingestor {
+        let state = Arc::new(Mutex::new(FoldState::default()));
+        let (tx, rx) = sync_channel(cfg.queue.max(1));
+        let handle = {
+            let (metrics, state) = (Arc::clone(&metrics), Arc::clone(&state));
+            std::thread::Builder::new()
+                .name("geomap-ingest".into())
+                .spawn(move || ingest_loop(rx, cfg, &store, &metrics, &state))
+                .expect("spawn ingest thread")
+        };
+        Ingestor {
+            tx: Mutex::new(Some(tx)),
+            handle: Mutex::new(Some(handle)),
+            state,
+            metrics,
+        }
+    }
+
+    /// Offer one observation. Returns whether it was accepted: a full
+    /// queue sheds (counted), never blocking the caller; after
+    /// [`stop`](Self::stop) everything sheds.
+    pub fn offer(&self, user: u32, item: u32, rating: f32) -> bool {
+        let guard = self.tx.lock().unwrap();
+        let Some(tx) = guard.as_ref() else {
+            self.metrics.ingest_shed.fetch_add(1, Ordering::Relaxed);
+            return false;
+        };
+        let obs = Obs { user, item, rating, at: Instant::now() };
+        match tx.try_send(obs) {
+            Ok(()) => {
+                self.metrics.ingest_observed.fetch_add(1, Ordering::Relaxed);
+                true
+            }
+            Err(TrySendError::Full(_)) => {
+                self.metrics.ingest_shed.fetch_add(1, Ordering::Relaxed);
+                false
+            }
+            Err(TrySendError::Disconnected(_)) => false,
+        }
+    }
+
+    /// Close the channel and join the thread; queued observations drain
+    /// first (then a final unbudgeted fold pass). Idempotent.
+    pub fn stop(&self) {
+        drop(self.tx.lock().unwrap().take());
+        if let Some(h) = self.handle.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+
+    /// The folded factor of a streamed user, if one has resolved yet.
+    pub fn user_factor(&self, user: u32) -> Option<Vec<f32>> {
+        self.state.lock().unwrap().users.get(&user)?.factor.clone()
+    }
+
+    /// Observations currently retained for not-yet-live items.
+    pub fn pending_observations(&self) -> usize {
+        let st = self.state.lock().unwrap();
+        st.pending.values().map(Vec::len).sum()
+    }
+}
+
+impl Drop for Ingestor {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// Find the live factor of global id `id` in a snapshot (route to the
+/// owning shard, then through any tombstone — the audit's addressing).
+fn live_factor<'a>(snap: &'a ShardSet, id: u32) -> Option<&'a [f32]> {
+    for shard in &snap.shards {
+        let lo = shard.base_id;
+        if id >= lo && ((id - lo) as usize) < shard.engine.len() {
+            return shard.engine.factor(id - lo);
+        }
+    }
+    None
+}
+
+fn ingest_loop(
+    rx: Receiver<Obs>,
+    cfg: IngestConfig,
+    store: &FactorStore,
+    metrics: &ServeMetrics,
+    state: &Mutex<FoldState>,
+) {
+    for obs in rx {
+        let mut st = state.lock().unwrap();
+        absorb(&mut st, obs, &cfg, store, metrics);
+        drain_ready(&mut st, &cfg, store, metrics, cfg.merge_budget);
+        publish_pending(&st, metrics);
+    }
+    // channel closed: one final unbudgeted pass so a clean shutdown
+    // folds everything that is ready, for exact counter accounting
+    let mut st = state.lock().unwrap();
+    drain_ready(&mut st, &cfg, store, metrics, usize::MAX);
+    publish_pending(&st, metrics);
+}
+
+fn publish_pending(st: &FoldState, metrics: &ServeMetrics) {
+    let pending: usize = st.pending.values().map(Vec::len).sum();
+    metrics.ingest_pending.store(pending as u64, Ordering::Release);
+}
+
+/// Absorb one observation: refresh the rater's folded user factor from
+/// everything resolvable against the current snapshot, and queue the
+/// item side when the item is not live yet.
+fn absorb(
+    st: &mut FoldState,
+    obs: Obs,
+    cfg: &IngestConfig,
+    store: &FactorStore,
+    metrics: &ServeMetrics,
+) {
+    let snap = store.snapshot();
+    let k = snap.shards[0].engine.dim();
+
+    let user = st.users.entry(obs.user).or_default();
+    user.history.push((obs.item, obs.rating));
+    if user.history.len() > MAX_HISTORY {
+        user.history.remove(0);
+        metrics.ingest_evicted.fetch_add(1, Ordering::Relaxed);
+    }
+    let resolved: Vec<(&[f32], f32)> = user
+        .history
+        .iter()
+        .filter_map(|&(it, r)| live_factor(&snap, it).map(|f| (f, r)))
+        .collect();
+    if resolved.len() >= cfg.min_obs.max(1) {
+        match fold_in(k, cfg.reg, &resolved) {
+            Ok(w) if w.iter().all(|v| v.is_finite()) => {
+                st.users.get_mut(&obs.user).unwrap().factor = Some(w);
+                metrics.ingest_user_folds.fetch_add(1, Ordering::Relaxed);
+            }
+            _ => {
+                metrics.ingest_errors.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    if live_factor(&snap, obs.item).is_none() {
+        let p = st.pending.entry(obs.item).or_default();
+        p.push((obs.user, obs.rating, obs.at));
+        if p.len() > MAX_HISTORY {
+            p.remove(0);
+            metrics.ingest_evicted.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Fold every ready pending item, smallest id first so appends stay
+/// contiguous, applying at most `budget` upserts this pass.
+fn drain_ready(
+    st: &mut FoldState,
+    cfg: &IngestConfig,
+    store: &FactorStore,
+    metrics: &ServeMetrics,
+    mut budget: usize,
+) {
+    let min_obs = cfg.min_obs.max(1);
+    while budget > 0 {
+        let snap = store.snapshot();
+        let k = snap.shards[0].engine.dim();
+        let total = snap.total_items as u32;
+        // smallest foldable id: addressable now (in-range or the append
+        // slot) with >= min_obs observations from users that have factors
+        let mut ready: Option<u32> = None;
+        for (&id, obs_list) in &st.pending {
+            if id > total {
+                continue; // a gap: not appendable until lower ids land
+            }
+            let known = obs_list
+                .iter()
+                .filter(|(u, _, _)| {
+                    st.users.get(u).is_some_and(|s| s.factor.is_some())
+                })
+                .count();
+            if known >= min_obs && ready.map_or(true, |r| id < r) {
+                ready = Some(id);
+            }
+        }
+        let Some(id) = ready else { break };
+        let obs_list = st.pending.remove(&id).unwrap();
+        let folded = {
+            let rows: Vec<(&[f32], f32)> = obs_list
+                .iter()
+                .filter_map(|(u, r, _)| {
+                    let f = st.users.get(u)?.factor.as_deref()?;
+                    Some((f, *r))
+                })
+                .collect();
+            fold_in(k, cfg.reg, &rows)
+        };
+        match folded {
+            Ok(w) if w.iter().all(|v| v.is_finite()) => {
+                match store.upsert(id, &w) {
+                    Ok(version) => {
+                        metrics
+                            .ingest_item_folds
+                            .fetch_add(1, Ordering::Release);
+                        let now = Instant::now();
+                        for (_, _, at) in &obs_list {
+                            let us =
+                                now.duration_since(*at).as_micros() as u64;
+                            metrics.ingest_visibility_us.record(us);
+                            if us > cfg.sla_us {
+                                metrics
+                                    .ingest_sla_breach
+                                    .fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                        LOG.debug(format!(
+                            "folded item {id} from {} observations \
+                             (catalogue version {version})",
+                            obs_list.len()
+                        ));
+                    }
+                    Err(e) => {
+                        metrics.ingest_errors.fetch_add(1, Ordering::Relaxed);
+                        LOG.warn(format!("fold-in upsert of item {id}: {e}"));
+                    }
+                }
+            }
+            _ => {
+                metrics.ingest_errors.fetch_add(1, Ordering::Relaxed);
+                LOG.warn(format!(
+                    "fold-in solve for item {id} failed; observations dropped"
+                ));
+            }
+        }
+        budget -= 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::configx::SchemaConfig;
+    use crate::engine::Engine;
+    use crate::linalg::ops::dot;
+    use crate::testing::fix;
+
+    fn store(n: usize, k: usize, shards: usize) -> Arc<FactorStore> {
+        let spec = Engine::builder()
+            .schema(SchemaConfig::TernaryParseTree)
+            .threshold(0.0);
+        Arc::new(FactorStore::build(spec, fix::items(n, k, 17), shards).unwrap())
+    }
+
+    #[test]
+    fn fold_in_satisfies_its_normal_equations() {
+        let k = 8;
+        let items = fix::items(12, k, 3);
+        let rows: Vec<(&[f32], f32)> = (0..12)
+            .map(|i| (items.row(i), 0.1 * (i as f32 + 1.0)))
+            .collect();
+        let reg = 0.05f32;
+        let w = fold_in(k, reg, &rows).unwrap();
+        // residual check: (XᵀX + λnI) w − Xᵀr ≈ 0
+        let lambda = reg * rows.len() as f32;
+        for i in 0..k {
+            let mut lhs = lambda * w[i];
+            let mut rhs = 0.0f32;
+            for &(x, r) in &rows {
+                lhs += x[i] * dot(x, &w);
+                rhs += x[i] * r;
+            }
+            assert!((lhs - rhs).abs() < 1e-3, "coord {i}: {lhs} vs {rhs}");
+        }
+    }
+
+    #[test]
+    fn fold_in_degenerate_cases() {
+        // zero observations: the inert zero vector
+        assert_eq!(fold_in(4, 0.1, &[]).unwrap(), vec![0.0; 4]);
+        // rank-deficient with reg = 0 errors instead of inventing a factor
+        let x = [1.0f32, 0.0, 0.0, 0.0];
+        let rows = [(&x[..], 1.0f32), (&x[..], 1.0f32)];
+        assert!(fold_in(4, 0.0, &rows).is_err());
+        // any positive reg regularises the same system
+        assert!(fold_in(4, 0.01, &rows).is_ok());
+        // shape and finiteness guards
+        assert!(fold_in(3, 0.1, &rows).is_err());
+        let bad = [(&x[..], f32::NAN)];
+        assert!(fold_in(4, 0.1, &bad).is_err());
+    }
+
+    #[test]
+    fn ingestor_folds_user_then_item_and_accounts_exactly() {
+        let store = store(40, 8, 2);
+        let metrics = Arc::new(ServeMetrics::default());
+        let cfg = IngestConfig::default();
+        let ing =
+            Ingestor::start(cfg, Arc::clone(&store), Arc::clone(&metrics));
+        // user 7 rates two live items, then a brand-new item (id 40)
+        assert!(ing.offer(7, 3, 0.9));
+        assert!(ing.offer(7, 11, -0.2));
+        assert!(ing.offer(7, 40, 0.7));
+        ing.stop();
+        assert!(ing.user_factor(7).is_some(), "user folded");
+        let snap = store.snapshot();
+        assert_eq!(snap.total_items, 41, "item 40 folded in");
+        assert!(live_factor(&snap, 40).is_some());
+        assert_eq!(metrics.ingest_observed.load(Ordering::Relaxed), 3);
+        assert_eq!(metrics.ingest_shed.load(Ordering::Relaxed), 0);
+        assert_eq!(metrics.ingest_item_folds.load(Ordering::Relaxed), 1);
+        assert!(metrics.ingest_user_folds.load(Ordering::Relaxed) >= 1);
+        assert_eq!(metrics.ingest_errors.load(Ordering::Relaxed), 0);
+        assert_eq!(metrics.ingest_visibility_us.count(), 1);
+        assert_eq!(ing.pending_observations(), 0);
+        ing.stop(); // idempotent
+    }
+
+    #[test]
+    fn min_obs_gates_the_item_fold() {
+        let store = store(30, 8, 1);
+        let metrics = Arc::new(ServeMetrics::default());
+        let cfg = IngestConfig { min_obs: 2, ..IngestConfig::default() };
+        let ing =
+            Ingestor::start(cfg, Arc::clone(&store), Arc::clone(&metrics));
+        // two raters warm up on live items, then each rates new item 30
+        for (user, item) in [(1u32, 4u32), (1, 9), (2, 5), (2, 12)] {
+            assert!(ing.offer(user, item, 0.5));
+        }
+        assert!(ing.offer(1, 30, 0.8));
+        ing.stop();
+        // one observation < min_obs: still pending, catalogue untouched
+        assert_eq!(store.snapshot().total_items, 30);
+        assert_eq!(ing.pending_observations(), 1);
+        assert_eq!(metrics.ingest_item_folds.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn gap_ids_wait_until_contiguous() {
+        let store = store(20, 8, 1);
+        let metrics = Arc::new(ServeMetrics::default());
+        let ing = Ingestor::start(
+            IngestConfig::default(),
+            Arc::clone(&store),
+            Arc::clone(&metrics),
+        );
+        assert!(ing.offer(3, 1, 0.4)); // warm the user on a live item
+        assert!(ing.offer(3, 25, 0.9)); // id 25 > total 20: a gap
+        assert!(ing.offer(3, 20, 0.6)); // the append slot
+        ing.stop();
+        let snap = store.snapshot();
+        // 20 appended; 25 still gapped (21..24 never arrived)
+        assert_eq!(snap.total_items, 21);
+        assert_eq!(ing.pending_observations(), 1);
+        assert_eq!(metrics.ingest_item_folds.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn live_items_are_never_refolded() {
+        let store = store(25, 8, 1);
+        let before = store.snapshot();
+        let metrics = Arc::new(ServeMetrics::default());
+        let ing = Ingestor::start(
+            IngestConfig::default(),
+            Arc::clone(&store),
+            Arc::clone(&metrics),
+        );
+        for i in 0..5u32 {
+            assert!(ing.offer(9, i, 1.0));
+        }
+        ing.stop();
+        let after = store.snapshot();
+        assert_eq!(after.version, before.version, "no mutation");
+        assert_eq!(metrics.ingest_item_folds.load(Ordering::Relaxed), 0);
+        assert!(metrics.ingest_user_folds.load(Ordering::Relaxed) >= 1);
+    }
+
+    #[test]
+    fn offer_after_stop_sheds() {
+        let store = store(10, 8, 1);
+        let metrics = Arc::new(ServeMetrics::default());
+        let ing = Ingestor::start(
+            IngestConfig::default(),
+            Arc::clone(&store),
+            Arc::clone(&metrics),
+        );
+        ing.stop();
+        assert!(!ing.offer(1, 2, 0.5));
+        assert_eq!(metrics.ingest_observed.load(Ordering::Relaxed), 0);
+    }
+}

@@ -59,6 +59,7 @@ pub mod evalx;
 pub mod exec;
 pub mod geometry;
 pub mod index;
+pub mod ingest;
 pub mod kernels;
 pub mod linalg;
 pub mod mf;
@@ -81,9 +82,10 @@ pub mod prelude {
     };
     pub use crate::cache::ResultCache;
     pub use crate::configx::{
-        AuditConfig, Backend, CacheMode, MutationConfig, NetMode, ObsConfig,
-        PostingsMode, QuantMode, SchemaConfig,
+        AuditConfig, Backend, CacheMode, IngestConfig, MutationConfig,
+        NetMode, ObsConfig, PostingsMode, QuantMode, SchemaConfig,
     };
+    pub use crate::ingest::{fold_in, Ingestor};
     pub use crate::obs::{Histogram, HistogramSnapshot};
     pub use crate::data::{gaussian_factors, MovieLensSynth, Ratings};
     pub use crate::embedding::{Mapper, PermutationKind, TessellationKind};

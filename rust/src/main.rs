@@ -21,8 +21,8 @@
 
 use anyhow::{bail, Context, Result};
 use geomap::configx::{
-    AuditConfig, Backend, Cli, MutationConfig, ObsConfig, PostingsMode,
-    QuantMode, SchemaConfig, ServeConfig,
+    AuditConfig, Backend, Cli, IngestConfig, MutationConfig, ObsConfig,
+    PostingsMode, QuantMode, SchemaConfig, ServeConfig,
 };
 use geomap::coordinator::Coordinator;
 use geomap::data::{gaussian_factors, MovieLensSynth, Ratings};
@@ -93,7 +93,8 @@ fn load_factors(
                 let mut rng = Rng::seeded(seed);
                 MovieLensSynth::default().generate(&mut rng)
             };
-            let model = AlsTrainer { k, ..Default::default() }.train(&ratings, 8, seed);
+            let model =
+                AlsTrainer { k, ..Default::default() }.train(&ratings, 8, seed)?;
             Ok((model.user_factors, model.item_factors))
         }
         other => bail!(
@@ -198,6 +199,32 @@ fn cmd_serve(args: &[String]) -> Result<()> {
              (0 disables the alert)",
         )
         .opt(
+            "ingest-reg",
+            "0.08",
+            "fold-in ridge regularisation, scaled by observation count \
+             (docs/INGEST.md)",
+        )
+        .opt(
+            "ingest-min-obs",
+            "1",
+            "observations required before a new item's factor folds in",
+        )
+        .opt(
+            "ingest-merge-budget",
+            "8",
+            "max fold-in upserts applied per drained observation",
+        )
+        .opt(
+            "ingest-queue",
+            "256",
+            "bounded observe queue depth (full = shed, never block)",
+        )
+        .opt(
+            "ingest-sla-us",
+            "500000",
+            "freshness SLA bound on observe-to-visibility latency (µs)",
+        )
+        .opt(
             "stats-interval",
             "0",
             "print interval metrics rates to stderr every N seconds (0 = off)",
@@ -256,6 +283,13 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             half_life: cli.get_f64("audit-half-life")?,
             recall_floor: cli.get_f64("recall-floor")?,
             ..AuditConfig::default()
+        },
+        ingest: IngestConfig {
+            reg: cli.get_f64("ingest-reg")? as f32,
+            min_obs: cli.get_usize("ingest-min-obs")?,
+            merge_budget: cli.get_usize("ingest-merge-budget")?,
+            queue: cli.get_usize("ingest-queue")?,
+            sla_us: cli.get_u64("ingest-sla-us")?,
         },
     };
     let factory = if cfg.use_xla {
@@ -436,9 +470,9 @@ fn cmd_train(args: &[String]) -> Result<()> {
     let seed = cli.get_u64("seed")?;
     let (model, curve) = match cli.get("trainer") {
         "als" => geomap::mf::AlsTrainer { k, ..Default::default() }
-            .train_logged(&train, epochs, seed),
+            .train_logged(&train, epochs, seed)?,
         "sgd" => geomap::mf::SgdTrainer { k, ..Default::default() }
-            .train_logged(&train, epochs, seed),
+            .train_logged(&train, epochs, seed)?,
         other => bail!("unknown trainer '{other}' (als | sgd)"),
     };
     for s in &curve {

@@ -7,6 +7,7 @@
 
 use super::{EpochStats, FactorModel};
 use crate::data::Ratings;
+use crate::error::Result;
 use crate::linalg::{cholesky_solve, ops::dot, Matrix};
 
 /// ALS trainer configuration.
@@ -28,9 +29,15 @@ impl Default for AlsTrainer {
 type Grouped = Vec<Vec<(u32, f32)>>;
 
 impl AlsTrainer {
-    /// Train for `sweeps` alternating passes.
-    pub fn train(&self, ratings: &Ratings, sweeps: usize, seed: u64) -> FactorModel {
-        self.train_logged(ratings, sweeps, seed).0
+    /// Train for `sweeps` alternating passes. Rejects logs containing
+    /// non-finite ratings up front (`check_ratings` in `mf/mod.rs`).
+    pub fn train(
+        &self,
+        ratings: &Ratings,
+        sweeps: usize,
+        seed: u64,
+    ) -> Result<FactorModel> {
+        Ok(self.train_logged(ratings, sweeps, seed)?.0)
     }
 
     /// Train and return per-sweep train RMSE.
@@ -39,7 +46,8 @@ impl AlsTrainer {
         ratings: &Ratings,
         sweeps: usize,
         seed: u64,
-    ) -> (FactorModel, Vec<EpochStats>) {
+    ) -> Result<(FactorModel, Vec<EpochStats>)> {
+        super::check_ratings(ratings)?;
         let mut model = FactorModel::init(
             ratings.n_users,
             ratings.n_items,
@@ -59,7 +67,7 @@ impl AlsTrainer {
             self.solve_side(&mut model, &by_item, false);
             log.push(EpochStats { epoch: sweep, train_rmse: model.rmse(ratings) });
         }
-        (model, log)
+        Ok((model, log))
     }
 
     /// One half-sweep: re-solve every row on one side, biases included
@@ -148,7 +156,8 @@ mod tests {
     #[test]
     fn rmse_decreases_monotonically_early() {
         let log = tiny_log();
-        let (_, stats) = AlsTrainer::default().train_logged(&log, 6, 1);
+        let (_, stats) =
+            AlsTrainer::default().train_logged(&log, 6, 1).unwrap();
         assert!(stats[1].train_rmse <= stats[0].train_rmse + 1e-6);
         assert!(stats.last().unwrap().train_rmse < stats[0].train_rmse);
         assert!(stats.last().unwrap().train_rmse < 0.7, "{:?}", stats);
@@ -157,8 +166,8 @@ mod tests {
     #[test]
     fn als_is_deterministic_per_seed() {
         let log = tiny_log();
-        let a = AlsTrainer::default().train(&log, 2, 3);
-        let b = AlsTrainer::default().train(&log, 2, 3);
+        let a = AlsTrainer::default().train(&log, 2, 3).unwrap();
+        let b = AlsTrainer::default().train(&log, 2, 3).unwrap();
         assert_eq!(a.item_factors, b.item_factors);
     }
 
@@ -168,8 +177,23 @@ mod tests {
         let mut log = tiny_log();
         log.n_users += 1; // phantom extra user with no ratings
         let init = FactorModel::init(log.n_users, log.n_items, 16, log.mean(), 4);
-        let trained = AlsTrainer::default().train(&log, 1, 4);
+        let trained = AlsTrainer::default().train(&log, 1, 4).unwrap();
         let last = log.n_users - 1;
         assert_eq!(trained.user_factors.row(last), init.user_factors.row(last));
+    }
+
+    #[test]
+    fn non_finite_ratings_are_rejected_at_the_boundary() {
+        for bad in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+            let mut log = tiny_log();
+            log.triples[7].value = bad;
+            let err = AlsTrainer::default()
+                .train(&log, 2, 1)
+                .expect_err("non-finite rating must not train");
+            assert!(
+                err.to_string().contains("non-finite rating"),
+                "unexpected error: {err}"
+            );
+        }
     }
 }

@@ -20,7 +20,25 @@ pub use als::AlsTrainer;
 pub use sgd::SgdTrainer;
 
 use crate::data::Ratings;
+use crate::error::{GeomapError, Result};
 use crate::linalg::{ops::dot, Matrix};
+
+/// Boundary validation shared by both trainers: a single NaN or ±∞
+/// rating would silently poison every factor it touches (SGD propagates
+/// it through the shared biases; ALS folds it into the normal equations
+/// of every co-rated row), so training rejects the whole log up front
+/// instead of producing a garbage model.
+fn check_ratings(ratings: &Ratings) -> Result<()> {
+    for r in &ratings.triples {
+        if !r.value.is_finite() {
+            return Err(GeomapError::Shape(format!(
+                "non-finite rating {} for user {} item {}",
+                r.value, r.user, r.item
+            )));
+        }
+    }
+    Ok(())
+}
 
 /// A trained biased-MF model `r̂ = μ + b_u + b_i + uᵀv`.
 #[derive(Clone, Debug)]
@@ -157,8 +175,9 @@ mod tests {
         };
 
         let sgd = SgdTrainer { k: 8, reg: 0.08, ..Default::default() }
-            .train(&train, 15, 7);
-        let als = AlsTrainer { k: 8, reg: 0.15 }.train(&train, 6, 7);
+            .train(&train, 15, 7)
+            .unwrap();
+        let als = AlsTrainer { k: 8, reg: 0.15 }.train(&train, 6, 7).unwrap();
         let sgd_rmse = sgd.rmse(&test);
         let als_rmse = als.rmse(&test);
         assert!(sgd_rmse < base_rmse, "sgd {sgd_rmse} vs mean {base_rmse}");

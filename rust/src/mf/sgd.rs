@@ -3,6 +3,7 @@
 
 use super::{EpochStats, FactorModel};
 use crate::data::Ratings;
+use crate::error::Result;
 use crate::rng::Rng;
 
 /// SGD trainer configuration.
@@ -25,9 +26,16 @@ impl Default for SgdTrainer {
 }
 
 impl SgdTrainer {
-    /// Train for `epochs` passes over a shuffled log.
-    pub fn train(&self, ratings: &Ratings, epochs: usize, seed: u64) -> FactorModel {
-        self.train_logged(ratings, epochs, seed).0
+    /// Train for `epochs` passes over a shuffled log. Rejects logs
+    /// containing non-finite ratings up front (`check_ratings` in
+    /// `mf/mod.rs`).
+    pub fn train(
+        &self,
+        ratings: &Ratings,
+        epochs: usize,
+        seed: u64,
+    ) -> Result<FactorModel> {
+        Ok(self.train_logged(ratings, epochs, seed)?.0)
     }
 
     /// Train and return per-epoch train RMSE (for learning-curve logs).
@@ -36,7 +44,8 @@ impl SgdTrainer {
         ratings: &Ratings,
         epochs: usize,
         seed: u64,
-    ) -> (FactorModel, Vec<EpochStats>) {
+    ) -> Result<(FactorModel, Vec<EpochStats>)> {
+        super::check_ratings(ratings)?;
         let mut model = FactorModel::init(
             ratings.n_users,
             ratings.n_items,
@@ -66,7 +75,7 @@ impl SgdTrainer {
             lr *= self.lr_decay;
             log.push(EpochStats { epoch, train_rmse: model.rmse(ratings) });
         }
-        (model, log)
+        Ok((model, log))
     }
 }
 
@@ -103,7 +112,8 @@ mod tests {
     #[test]
     fn loss_decreases_over_epochs() {
         let log = tiny_log();
-        let (_, stats) = SgdTrainer::default().train_logged(&log, 10, 1);
+        let (_, stats) =
+            SgdTrainer::default().train_logged(&log, 10, 1).unwrap();
         assert_eq!(stats.len(), 10);
         assert!(
             stats.last().unwrap().train_rmse < stats[0].train_rmse,
@@ -116,8 +126,8 @@ mod tests {
     #[test]
     fn training_is_deterministic_per_seed() {
         let log = tiny_log();
-        let a = SgdTrainer::default().train(&log, 3, 9);
-        let b = SgdTrainer::default().train(&log, 3, 9);
+        let a = SgdTrainer::default().train(&log, 3, 9).unwrap();
+        let b = SgdTrainer::default().train(&log, 3, 9).unwrap();
         assert_eq!(a.user_factors, b.user_factors);
         assert_eq!(a.item_factors, b.item_factors);
     }
@@ -125,7 +135,24 @@ mod tests {
     #[test]
     fn k_is_respected() {
         let log = tiny_log();
-        let m = SgdTrainer { k: 5, ..Default::default() }.train(&log, 1, 2);
+        let m = SgdTrainer { k: 5, ..Default::default() }
+            .train(&log, 1, 2)
+            .unwrap();
         assert_eq!(m.k(), 5);
+    }
+
+    #[test]
+    fn non_finite_ratings_are_rejected_at_the_boundary() {
+        for bad in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+            let mut log = tiny_log();
+            log.triples[3].value = bad;
+            let err = SgdTrainer::default()
+                .train(&log, 2, 1)
+                .expect_err("non-finite rating must not train");
+            assert!(
+                err.to_string().contains("non-finite rating"),
+                "unexpected error: {err}"
+            );
+        }
     }
 }

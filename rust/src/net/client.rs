@@ -142,6 +142,21 @@ impl NetClient {
         Ok(j.get("version")?.as_usize()? as u64)
     }
 
+    /// Round-trip one observe, returning whether the ingest queue
+    /// accepted the observation (`false` = shed under load).
+    pub fn observe(
+        &mut self,
+        user: u32,
+        item: u32,
+        rating: f32,
+    ) -> Result<bool> {
+        proto::encode_observe(&mut self.out, user, item, rating);
+        self.write_out()?;
+        let line = self.read_line()?;
+        let j = parse_line_json(line)?;
+        j.get("accepted")?.as_bool()
+    }
+
     /// Round-trip one `{"stats":true}` request, returning the parsed
     /// snapshot. Every top-level section of the documented grammar must
     /// be present — a scraper should fail loudly on protocol drift, not
@@ -164,6 +179,7 @@ impl NetClient {
             "work",
             "quality",
             "health",
+            "ingest",
             "slow",
         ] {
             if j.opt(key).is_none() {

@@ -7,9 +7,10 @@
 //! intermediate `String`s, factor payloads written into one reusable
 //! scratch `Vec<f32>` that the returned [`Request`] borrows. The
 //! request grammar is deliberately flat (a factor array holds numbers
-//! only), so parsing is a single left-to-right scan with no recursion:
-//! a deeply nested payload is rejected at its second `[` in O(1), not
-//! stack-overflowed. Numbers use the same strict RFC 8259 grammar as
+//! only; the one nested form — `observe`'s fixed three-key sub-object —
+//! is parsed inline to a known depth of one), so parsing is a single
+//! left-to-right scan with no recursion: a deeply nested payload is
+//! rejected at its second `[` in O(1), not stack-overflowed. Numbers use the same strict RFC 8259 grammar as
 //! the configx JSON parser ([`crate::configx::json`]'s shared scanner),
 //! so `01`, `1.`, `1e` and friends are protocol errors here exactly as
 //! they are config errors there.
@@ -185,6 +186,7 @@ enum Verb {
     Query { kappa: usize },
     Upsert { id: u32 },
     Remove { id: u32 },
+    Observe { user: u32, item: u32, rating: f32 },
     Stats,
 }
 
@@ -194,6 +196,9 @@ impl Verb {
             Verb::Query { kappa } => Request::Query { user: scratch, kappa },
             Verb::Upsert { id } => Request::Upsert { id, factor: scratch },
             Verb::Remove { id } => Request::Remove { id },
+            Verb::Observe { user, item, rating } => {
+                Request::Observe { user, item, rating }
+            }
             Verb::Stats => Request::Stats,
         }
     }
@@ -332,6 +337,87 @@ impl<'a> LineParser<'a> {
             }
         }
     }
+
+    /// The nested `{"user":U,"item":I,"rating":R}` observe payload — the
+    /// grammar's one nested form, parsed inline to a fixed depth of one
+    /// with the same duplicate-rejecting key loop as the outer object.
+    fn observe_object(&mut self) -> Result<(u32, u32, f32), DecodeError> {
+        self.expect(b'{')?;
+        let mut user: Option<u32> = None;
+        let mut item: Option<u32> = None;
+        let mut rating: Option<f32> = None;
+        loop {
+            self.skip_ws();
+            let key_at = self.pos;
+            let key = self.key()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            self.skip_ws();
+            match key {
+                b"user" => {
+                    if user.is_some() {
+                        return Err(DecodeError::new(
+                            key_at,
+                            "duplicate observe 'user'",
+                        ));
+                    }
+                    user = Some(
+                        self.integer("observe user", u32::MAX as u64)? as u32,
+                    );
+                }
+                b"item" => {
+                    if item.is_some() {
+                        return Err(DecodeError::new(
+                            key_at,
+                            "duplicate observe 'item'",
+                        ));
+                    }
+                    item = Some(
+                        self.integer("observe item", u32::MAX as u64)? as u32,
+                    );
+                }
+                b"rating" => {
+                    if rating.is_some() {
+                        return Err(DecodeError::new(
+                            key_at,
+                            "duplicate observe 'rating'",
+                        ));
+                    }
+                    let at = self.pos;
+                    let v = self.number()? as f32;
+                    if !v.is_finite() {
+                        return Err(DecodeError::new(
+                            at,
+                            "rating must be a finite f32",
+                        ));
+                    }
+                    rating = Some(v);
+                }
+                other => {
+                    return Err(DecodeError::new(
+                        key_at,
+                        format!(
+                            "unknown observe key '{}'",
+                            String::from_utf8_lossy(other)
+                        ),
+                    ));
+                }
+            }
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b'}') => {
+                    self.pos += 1;
+                    break;
+                }
+                _ => return Err(self.err("expected ',' or '}'")),
+            }
+        }
+        match (user, item, rating) {
+            (Some(u), Some(i), Some(r)) => Ok((u, i, r)),
+            _ => Err(self.err("observe needs 'user', 'item', and 'rating'")),
+        }
+    }
 }
 
 /// Parse one complete request line (newline already stripped).
@@ -340,6 +426,7 @@ fn parse_line(line: &[u8], scratch: &mut Vec<f32>) -> Result<Verb, DecodeError> 
     let mut kappa: Option<usize> = None;
     let mut upsert_id: Option<u32> = None;
     let mut remove_id: Option<u32> = None;
+    let mut observe: Option<(u32, u32, f32)> = None;
     let mut have_user = false;
     let mut have_factor = false;
     let mut have_stats = false;
@@ -405,6 +492,15 @@ fn parse_line(line: &[u8], scratch: &mut Vec<f32>) -> Result<Verb, DecodeError> 
                     remove_id =
                         Some(p.integer("remove id", u32::MAX as u64)? as u32);
                 }
+                b"observe" => {
+                    if observe.is_some() {
+                        return Err(DecodeError::new(
+                            key_at,
+                            "duplicate 'observe'",
+                        ));
+                    }
+                    observe = Some(p.observe_object()?);
+                }
                 b"stats" => {
                     if have_stats {
                         return Err(DecodeError::new(key_at, "duplicate 'stats'"));
@@ -440,14 +536,22 @@ fn parse_line(line: &[u8], scratch: &mut Vec<f32>) -> Result<Verb, DecodeError> 
 
     if have_stats {
         if have_user || have_factor || kappa.is_some() || upsert_id.is_some()
-            || remove_id.is_some()
+            || remove_id.is_some() || observe.is_some()
         {
             return Err(DecodeError::new(0, "stats takes no other keys"));
         }
         return Ok(Verb::Stats);
     }
+    if let Some((user, item, rating)) = observe {
+        if have_user || have_factor || kappa.is_some() || upsert_id.is_some()
+            || remove_id.is_some()
+        {
+            return Err(DecodeError::new(0, "observe takes no other keys"));
+        }
+        return Ok(Verb::Observe { user, item, rating });
+    }
 
-    // exactly one verb: user+kappa, upsert+factor, remove, or stats
+    // exactly one verb: user+kappa, upsert+factor, remove, observe, or stats
     match (have_user, upsert_id, remove_id) {
         (true, None, None) => {
             if have_factor {
@@ -485,7 +589,7 @@ fn parse_line(line: &[u8], scratch: &mut Vec<f32>) -> Result<Verb, DecodeError> 
         (false, None, None) => Err(DecodeError::new(
             0,
             "request names no verb: want 'user'+'kappa', \
-             'upsert'+'factor', 'remove', or 'stats'",
+             'upsert'+'factor', 'remove', 'observe', or 'stats'",
         )),
         _ => Err(DecodeError::new(0, "request mixes more than one verb")),
     }
@@ -512,6 +616,7 @@ mod tests {
         Query { user: Vec<f32>, kappa: usize },
         Upsert { id: u32, factor: Vec<f32> },
         Remove { id: u32 },
+        Observe { user: u32, item: u32, rating: f32 },
         Stats,
     }
 
@@ -525,6 +630,9 @@ mod tests {
                     OwnedRequest::Upsert { id, factor: factor.to_vec() }
                 }
                 Request::Remove { id } => OwnedRequest::Remove { id },
+                Request::Observe { user, item, rating } => {
+                    OwnedRequest::Observe { user, item, rating }
+                }
                 Request::Stats => OwnedRequest::Stats,
             }
         }
@@ -562,6 +670,79 @@ mod tests {
             decode_one(r#" { "user" : [ 1 , 2 ] , "kappa" : 3 } "#).unwrap(),
             OwnedRequest::Query { user: vec![1.0, 2.0], kappa: 3 }
         );
+    }
+
+    #[test]
+    fn decodes_the_observe_verb() {
+        assert_eq!(
+            decode_one(r#"{"observe":{"user":7,"item":9,"rating":4.5}}"#)
+                .unwrap(),
+            OwnedRequest::Observe { user: 7, item: 9, rating: 4.5 }
+        );
+        // inner key order is not significant
+        assert_eq!(
+            decode_one(r#"{"observe":{"rating":-2.5,"item":0,"user":3}}"#)
+                .unwrap(),
+            OwnedRequest::Observe { user: 3, item: 0, rating: -2.5 }
+        );
+        // interior whitespace tolerated
+        assert_eq!(
+            decode_one(
+                r#" { "observe" : { "user" : 1 , "item" : 2 , "rating" : 0 } } "#
+            )
+            .unwrap(),
+            OwnedRequest::Observe { user: 1, item: 2, rating: 0.0 }
+        );
+    }
+
+    #[test]
+    fn adversarial_observe_lines_error_without_killing_framing() {
+        let bad = [
+            // missing / duplicate / unknown inner keys
+            r#"{"observe":{"user":1,"item":2}}"#,
+            r#"{"observe":{"user":1,"rating":1}}"#,
+            r#"{"observe":{"item":2,"rating":1}}"#,
+            r#"{"observe":{}}"#,
+            r#"{"observe":{"user":1,"user":2,"item":3,"rating":1}}"#,
+            r#"{"observe":{"user":1,"item":2,"rating":1,"rating":2}}"#,
+            r#"{"observe":{"user":1,"item":2,"rating":1,"weight":2}}"#,
+            // non-object payloads
+            r#"{"observe":true}"#,
+            r#"{"observe":[1,2,3]}"#,
+            r#"{"observe":7}"#,
+            // id and rating domains
+            r#"{"observe":{"user":-1,"item":2,"rating":1}}"#,
+            r#"{"observe":{"user":1.5,"item":2,"rating":1}}"#,
+            r#"{"observe":{"user":1,"item":4294967296,"rating":1}}"#,
+            r#"{"observe":{"user":1,"item":2,"rating":NaN}}"#,
+            r#"{"observe":{"user":1,"item":2,"rating":1e999}}"#,
+            r#"{"observe":{"user":1,"item":2,"rating":1e39}}"#,
+            r#"{"observe":{"user":1,"item":2,"rating":01}}"#,
+            // truncated mid-object
+            r#"{"observe":{"user":1,"item":2,"rating":1"#,
+            // verb exclusivity
+            r#"{"observe":{"user":1,"item":2,"rating":1},"kappa":1}"#,
+            r#"{"observe":{"user":1,"item":2,"rating":1},"remove":2}"#,
+            r#"{"stats":true,"observe":{"user":1,"item":2,"rating":1}}"#,
+            r#"{"observe":{"user":1,"item":2,"rating":1},"observe":{"user":1,"item":2,"rating":1}}"#,
+        ];
+        let mut dec = RequestDecoder::new();
+        for line in bad {
+            dec.feed(line.as_bytes());
+            dec.feed(b"\n");
+            match dec.next_request() {
+                Some(Err(_)) => {}
+                other => panic!("'{line}' must be a decode error: {other:?}"),
+            }
+            // framing survives: a valid observe right after decodes
+            dec.feed(b"{\"observe\":{\"user\":1,\"item\":2,\"rating\":3}}\n");
+            match dec.next_request() {
+                Some(Ok(Request::Observe { user: 1, item: 2, rating })) => {
+                    assert_eq!(rating, 3.0);
+                }
+                other => panic!("after '{line}': {other:?}"),
+            }
+        }
     }
 
     #[test]

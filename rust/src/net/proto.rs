@@ -8,6 +8,7 @@
 //! {"user":[f32,...],"kappa":N}        top-κ query
 //! {"upsert":ID,"factor":[f32,...]}    incremental catalogue upsert
 //! {"remove":ID}                       incremental catalogue remove
+//! {"observe":{"user":U,"item":I,"rating":R}}  streaming rating observation
 //! {"stats":true}                      metrics + slow-log snapshot
 //! ```
 //!
@@ -18,6 +19,7 @@
 //!  "candidates":..,"total":..,"version":..,"latency_us":..}
 //! {"ok":true,"version":..}            upsert ack
 //! {"ok":true,"version":..,"live":b}   remove ack
+//! {"ok":true,"accepted":b}            observe ack (false = shed)
 //! {"requests":{..},"cache":{..},...}  stats snapshot (docs/OBSERVABILITY.md)
 //! {"error":"..."}                     decode or serve failure
 //! ```
@@ -71,6 +73,17 @@ pub enum Request<'a> {
     Remove {
         /// Item id.
         id: u32,
+    },
+    /// Feed one (user, item, rating) observation to the ingest fold-in
+    /// queue (`docs/INGEST.md`). Answered with `{"ok":true,"accepted":b}`
+    /// where `accepted:false` means the observation was shed.
+    Observe {
+        /// Observing user id (ingest-side identity, not a catalogue id).
+        user: u32,
+        /// Rated item id (live catalogue id or the next fresh id).
+        item: u32,
+        /// Observed rating; must be finite.
+        rating: f32,
     },
     /// Snapshot the server's metrics and slow-query log.
     Stats,
@@ -167,6 +180,25 @@ pub fn encode_ack(out: &mut Vec<u8>, version: u64, live: Option<bool>) {
             );
         }
     }
+    out.push(b'\n');
+}
+
+/// Encode an observe request line into `out` (cleared first).
+pub fn encode_observe(out: &mut Vec<u8>, user: u32, item: u32, rating: f32) {
+    out.clear();
+    let _ = write!(
+        out,
+        "{{\"observe\":{{\"user\":{user},\"item\":{item},\
+         \"rating\":{rating}}}}}"
+    );
+    out.push(b'\n');
+}
+
+/// Encode an observe ack line into `out` (cleared first). `accepted` is
+/// false when the ingest queue shed the observation.
+pub fn encode_observe_ack(out: &mut Vec<u8>, accepted: bool) {
+    out.clear();
+    let _ = write!(out, "{{\"ok\":true,\"accepted\":{accepted}}}");
     out.push(b'\n');
 }
 
@@ -301,7 +333,7 @@ pub fn encode_stats(
         "\"health\":{{\"version\":{},\"occupancy_max\":{},\
          \"occupancy_mean\":{:.1},\"occupancy_gini\":{:.4},\
          \"delta_frac\":{:.4},\"tombstone_frac\":{:.4},\
-         \"scale_drift\":{:.4}}},\"slow\":[",
+         \"scale_drift\":{:.4}}},",
         snap.health_version,
         snap.occ_max,
         snap.occ_mean,
@@ -310,6 +342,21 @@ pub fn encode_stats(
         snap.tombstone_frac,
         snap.scale_drift,
     );
+    let _ = write!(
+        out,
+        "\"ingest\":{{\"observed\":{},\"shed\":{},\"user_folds\":{},\
+         \"item_folds\":{},\"errors\":{},\"sla_breach\":{},\
+         \"pending\":{},",
+        snap.ingest_observed,
+        snap.ingest_shed,
+        snap.ingest_user_folds,
+        snap.ingest_item_folds,
+        snap.ingest_errors,
+        snap.ingest_sla_breach,
+        snap.ingest_pending,
+    );
+    write_hist(out, "visibility_us", &snap.ingest_visibility_us);
+    out.extend_from_slice(b"},\"slow\":[");
     for (i, e) in slow.iter().enumerate() {
         if i > 0 {
             out.push(b',');
@@ -433,6 +480,13 @@ mod tests {
             delta_frac: 0.0625,
             tombstone_frac: 0.03125,
             scale_drift: 0.5,
+            ingest_observed: 12,
+            ingest_shed: 2,
+            ingest_user_folds: 6,
+            ingest_item_folds: 4,
+            ingest_errors: 1,
+            ingest_sla_breach: 3,
+            ingest_pending: 5,
             ..MetricsSnapshot::default()
         };
         let slow = [SlowEntry {
@@ -464,7 +518,8 @@ mod tests {
             ("\"stages\":", "\"work\":"),
             ("\"work\":", "\"quality\":"),
             ("\"quality\":", "\"health\":"),
-            ("\"health\":", "\"slow\":"),
+            ("\"health\":", "\"ingest\":"),
+            ("\"ingest\":", "\"slow\":"),
         ] {
             let a = text.find(earlier).unwrap_or_else(|| panic!("{earlier}"));
             let b = text.find(later).unwrap_or_else(|| panic!("{later}"));
@@ -543,6 +598,18 @@ mod tests {
         );
         assert_eq!(health.get("delta_frac").unwrap().as_f64().unwrap(), 0.0625);
         assert_eq!(health.get("scale_drift").unwrap().as_f64().unwrap(), 0.5);
+        let ingest = j.get("ingest").unwrap();
+        assert_eq!(ingest.get("observed").unwrap().as_usize().unwrap(), 12);
+        assert_eq!(ingest.get("shed").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(ingest.get("user_folds").unwrap().as_usize().unwrap(), 6);
+        assert_eq!(ingest.get("item_folds").unwrap().as_usize().unwrap(), 4);
+        assert_eq!(ingest.get("errors").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(ingest.get("sla_breach").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(ingest.get("pending").unwrap().as_usize().unwrap(), 5);
+        let vis = ingest.get("visibility_us").unwrap();
+        for key in ["count", "mean", "p50", "p95", "p99", "max"] {
+            assert!(vis.opt(key).is_some(), "visibility histogram field {key}");
+        }
         let slow_arr = j.get("slow").unwrap().as_arr().unwrap();
         assert_eq!(slow_arr.len(), 1);
         assert_eq!(
@@ -557,6 +624,30 @@ mod tests {
         let mut req_line = Vec::new();
         encode_stats_request(&mut req_line);
         assert_eq!(req_line, b"{\"stats\":true}\n");
+    }
+
+    #[test]
+    fn encoded_observe_and_ack_are_valid_json() {
+        let mut out = Vec::new();
+        encode_observe(&mut out, 7, 1234, -2.5);
+        assert_eq!(
+            out,
+            b"{\"observe\":{\"user\":7,\"item\":1234,\"rating\":-2.5}}\n"
+        );
+        let j = Json::parse(std::str::from_utf8(&out).unwrap().trim_end())
+            .unwrap();
+        let o = j.get("observe").unwrap();
+        assert_eq!(o.get("user").unwrap().as_usize().unwrap(), 7);
+        assert_eq!(o.get("item").unwrap().as_usize().unwrap(), 1234);
+        assert_eq!(o.get("rating").unwrap().as_f64().unwrap(), -2.5);
+
+        encode_observe_ack(&mut out, true);
+        assert_eq!(out, b"{\"ok\":true,\"accepted\":true}\n");
+        encode_observe_ack(&mut out, false);
+        let j = Json::parse(std::str::from_utf8(&out).unwrap().trim_end())
+            .unwrap();
+        assert!(j.get("ok").unwrap().as_bool().unwrap());
+        assert!(!j.get("accepted").unwrap().as_bool().unwrap());
     }
 
     #[test]

@@ -209,6 +209,7 @@ fn connection_loop(mut stream: TcpStream, shared: Arc<Shared>) {
 enum Outcome {
     Query(Response),
     Ack { version: u64, live: Option<bool> },
+    ObserveAck { accepted: bool },
     Stats(MetricsSnapshot, Vec<SlowEntry>),
     Fail(GeomapError),
 }
@@ -233,6 +234,12 @@ fn serve_request(coord: &Coordinator, req: Request<'_>, out: &mut Vec<u8>) {
             Ok((version, live)) => Outcome::Ack { version, live: Some(live) },
             Err(e) => Outcome::Fail(e),
         },
+        Request::Observe { user, item, rating } => {
+            match coord.observe(user, item, rating) {
+                Ok(accepted) => Outcome::ObserveAck { accepted },
+                Err(e) => Outcome::Fail(e),
+            }
+        }
         // reads counters + histograms without blocking serving; the slow
         // log is copied out under its own short lock
         Request::Stats => {
@@ -244,6 +251,9 @@ fn serve_request(coord: &Coordinator, req: Request<'_>, out: &mut Vec<u8>) {
         Outcome::Query(resp) => proto::encode_response(out, resp),
         Outcome::Ack { version, live } => {
             proto::encode_ack(out, *version, *live)
+        }
+        Outcome::ObserveAck { accepted } => {
+            proto::encode_observe_ack(out, *accepted)
         }
         Outcome::Stats(snap, slow) => proto::encode_stats(out, snap, slow),
         Outcome::Fail(e) => {

@@ -1,0 +1,252 @@
+//! Ingest equivalence (docs/INGEST.md): the online fold-in must be the
+//! mathematics it claims and nothing more.
+//!
+//! Two claims are held:
+//!
+//! 1. **Solver equivalence** — [`fold_in`]'s factor satisfies the same
+//!    ridge normal equations `(XᵀX + λnI) w = Xᵀr` as an independent
+//!    dense f64 Gaussian-elimination reference, across random ranks,
+//!    observation counts and regularisation strengths — including the
+//!    degenerate ends (zero observations, rank-deficient systems).
+//! 2. **Serving equivalence** — after an item folds in through the
+//!    streaming path (observe → fold → upsert → re-embed → merge), the
+//!    coordinator's top-κ responses are byte-identical to a coordinator
+//!    *rebuilt from scratch* over the same catalogue with the same
+//!    folded factor appended, across posting arenas (raw/packed) ×
+//!    quantization (off/int8). Streaming in a factor and having always
+//!    had it must be observably the same thing.
+
+use geomap::configx::{Backend, PostingsMode, QuantMode, ServeConfig};
+use geomap::coordinator::{Coordinator, Response};
+use geomap::ingest::fold_in;
+use geomap::linalg::Matrix;
+use geomap::runtime::cpu_scorer_factory;
+use geomap::testing::{fix, prop};
+use std::sync::atomic::Ordering;
+use std::time::{Duration, Instant};
+
+/// Dense f64 reference for the fold-in system: assemble
+/// `A = XᵀX + λnI`, `b = Xᵀr` and solve by Gaussian elimination with
+/// partial pivoting — deliberately nothing like the f32 Cholesky path.
+fn reference_solve(k: usize, reg: f32, obs: &[(Vec<f32>, f32)]) -> Vec<f64> {
+    let n = obs.len();
+    let mut a = vec![vec![0.0f64; k]; k];
+    let mut b = vec![0.0f64; k];
+    for (x, r) in obs {
+        for i in 0..k {
+            b[i] += *r as f64 * x[i] as f64;
+            for j in 0..k {
+                a[i][j] += x[i] as f64 * x[j] as f64;
+            }
+        }
+    }
+    let lambda = reg as f64 * n as f64;
+    for (i, row) in a.iter_mut().enumerate() {
+        row[i] += lambda;
+    }
+    for col in 0..k {
+        let pivot = (col..k)
+            .max_by(|&i, &j| a[i][col].abs().total_cmp(&a[j][col].abs()))
+            .unwrap();
+        a.swap(col, pivot);
+        b.swap(col, pivot);
+        assert!(a[col][col].abs() > 1e-12, "reference system is singular");
+        for row in col + 1..k {
+            let m = a[row][col] / a[col][col];
+            for c in col..k {
+                a[row][c] -= m * a[col][c];
+            }
+            b[row] -= m * b[col];
+        }
+    }
+    let mut w = vec![0.0f64; k];
+    for i in (0..k).rev() {
+        let mut s = b[i];
+        for j in i + 1..k {
+            s -= a[i][j] * w[j];
+        }
+        w[i] = s / a[i][i];
+    }
+    w
+}
+
+#[test]
+fn fold_in_matches_the_dense_reference_across_ranks_and_reg() {
+    prop(120, |g| {
+        let k = g.usize_in(2..=12);
+        let n = g.usize_in(k..=k + 16);
+        let reg = g.f32_in(0.02, 0.5);
+        let obs: Vec<(Vec<f32>, f32)> = (0..n)
+            .map(|_| {
+                let x: Vec<f32> = (0..k).map(|_| g.gaussian()).collect();
+                (x, g.f32_in(-2.0, 2.0))
+            })
+            .collect();
+        let borrowed: Vec<(&[f32], f32)> =
+            obs.iter().map(|(x, r)| (x.as_slice(), *r)).collect();
+        let w = fold_in(k, reg, &borrowed).unwrap();
+        let w_ref = reference_solve(k, reg, &obs);
+        for i in 0..k {
+            let tol = 5e-3 * (1.0 + w_ref[i].abs());
+            assert!(
+                (w[i] as f64 - w_ref[i]).abs() < tol,
+                "coord {i}: fold {} vs reference {} (k={k} n={n} reg={reg})",
+                w[i],
+                w_ref[i]
+            );
+        }
+    });
+}
+
+#[test]
+fn fold_in_underdetermined_but_regularised_matches_the_reference() {
+    // fewer observations than dimensions: XᵀX is rank-deficient, the
+    // ridge term alone makes the system definite — both solvers must
+    // agree there too, not just on comfortable full-rank inputs
+    prop(80, |g| {
+        let k = g.usize_in(3..=12);
+        let n = g.usize_in(1..=k - 1);
+        let reg = g.f32_in(0.05, 0.5);
+        let obs: Vec<(Vec<f32>, f32)> = (0..n)
+            .map(|_| {
+                let x: Vec<f32> = (0..k).map(|_| g.gaussian()).collect();
+                (x, g.f32_in(-2.0, 2.0))
+            })
+            .collect();
+        let borrowed: Vec<(&[f32], f32)> =
+            obs.iter().map(|(x, r)| (x.as_slice(), *r)).collect();
+        let w = fold_in(k, reg, &borrowed).unwrap();
+        let w_ref = reference_solve(k, reg, &obs);
+        for i in 0..k {
+            let tol = 5e-3 * (1.0 + w_ref[i].abs());
+            assert!(
+                (w[i] as f64 - w_ref[i]).abs() < tol,
+                "coord {i}: fold {} vs reference {} (k={k} n={n} reg={reg})",
+                w[i],
+                w_ref[i]
+            );
+        }
+    });
+}
+
+#[test]
+fn fold_in_degenerate_ends_hold_their_contracts() {
+    // zero observations: the documented inert zero vector, any reg
+    for k in [1usize, 4, 9] {
+        assert_eq!(fold_in(k, 0.0, &[]).unwrap(), vec![0.0; k]);
+        assert_eq!(fold_in(k, 0.3, &[]).unwrap(), vec![0.0; k]);
+    }
+    // rank-deficient with reg = 0: an error, never an invented factor
+    let x = [0.5f32, -1.0, 0.0, 2.0];
+    let dup = [(&x[..], 1.0f32), (&x[..], -0.5f32), (&x[..], 2.0f32)];
+    assert!(fold_in(4, 0.0, &dup).is_err());
+    // the same system under any positive reg solves and matches the
+    // reference
+    let w = fold_in(4, 0.1, &dup).unwrap();
+    let owned: Vec<(Vec<f32>, f32)> =
+        dup.iter().map(|&(x, r)| (x.to_vec(), r)).collect();
+    let w_ref = reference_solve(4, 0.1, &owned);
+    for i in 0..4 {
+        assert!((w[i] as f64 - w_ref[i]).abs() < 5e-3);
+    }
+}
+
+/// Everything in a `Response` except latency and catalogue version (the
+/// streamed coordinator took an upsert the rebuilt one never saw, so the
+/// version counters legitimately differ; result bytes must not).
+fn key(r: &Response) -> (Vec<(u32, u32)>, usize, usize) {
+    (
+        r.results.iter().map(|s| (s.id, s.score.to_bits())).collect(),
+        r.candidates,
+        r.total_items,
+    )
+}
+
+/// The four serving tiers the streamed-vs-rebuilt comparison sweeps.
+fn tier_configs(k: usize) -> Vec<(String, ServeConfig)> {
+    let mut out = Vec::new();
+    for postings in [PostingsMode::Raw, PostingsMode::Packed] {
+        for quant in [QuantMode::Off, QuantMode::Int8 { refine: 4 }] {
+            let label = format!("{postings:?}/{quant:?}");
+            let mut cfg = fix::serve_cfg(k, 2, Backend::Geomap, 0.5);
+            cfg.postings = postings;
+            cfg.quant = quant;
+            // merge every mutation immediately: the comparison judges the
+            // *post-merge* index, not the delta overlay
+            cfg.mutation.max_delta = 1;
+            out.push((label, cfg));
+        }
+    }
+    out
+}
+
+#[test]
+fn streamed_fold_in_equals_rebuild_from_scratch_across_tiers() {
+    let k = 8;
+    let n = 160;
+    let items = fix::items(n, k, 55);
+    // the observe stream: user 9 rates three live items, then the
+    // brand-new id `n` — replicated below to precompute the exact factor
+    // the ingest thread will fold
+    let history: [(u32, f32); 3] = [(3, 1.5), (40, -0.5), (101, 2.0)];
+    let new_rating = 1.0f32;
+
+    for (label, cfg) in tier_configs(k) {
+        let reg = cfg.ingest.reg;
+        let streamed = Coordinator::start(
+            cfg.clone(),
+            items.clone(),
+            cpu_scorer_factory(),
+        )
+        .unwrap();
+        for &(item, rating) in &history {
+            assert!(streamed.observe(9, item, rating).unwrap(), "{label}");
+        }
+        assert!(streamed.observe(9, n as u32, new_rating).unwrap(), "{label}");
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while streamed.metrics().ingest_item_folds.load(Ordering::Acquire) < 1
+        {
+            assert!(Instant::now() < deadline, "{label}: item never folded");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(streamed.total_items(), n + 1, "{label}");
+
+        // replicate the fold arithmetic exactly: the user factor from the
+        // live co-factors, then the item factor from that user factor
+        let resolved: Vec<(&[f32], f32)> = history
+            .iter()
+            .map(|&(item, rating)| (items.row(item as usize), rating))
+            .collect();
+        let user_factor = fold_in(k, reg, &resolved).unwrap();
+        let folded =
+            fold_in(k, reg, &[(user_factor.as_slice(), new_rating)]).unwrap();
+
+        // a coordinator that always had the folded row, built from scratch
+        let mut full = Matrix::zeros(n + 1, k);
+        for i in 0..n {
+            full.row_mut(i).copy_from_slice(items.row(i));
+        }
+        full.row_mut(n).copy_from_slice(&folded);
+        let rebuilt =
+            Coordinator::start(cfg.clone(), full, cpu_scorer_factory())
+                .unwrap();
+
+        // probes: a random pool plus the folded factor's own direction,
+        // which must retrieve the new item identically on both sides
+        let mut probes = fix::user_vecs(12, k, 56);
+        probes.push(folded.clone());
+        for (i, u) in probes.iter().enumerate() {
+            let a = streamed.submit(u.clone(), 6).unwrap();
+            let b = rebuilt.submit(u.clone(), 6).unwrap();
+            assert_eq!(key(&a), key(&b), "{label}: probe {i}");
+        }
+        let along = streamed.submit(folded.clone(), 6).unwrap();
+        assert!(
+            along.results.iter().any(|s| s.id == n as u32),
+            "{label}: the folded item must be retrievable along its own \
+             factor"
+        );
+        streamed.shutdown();
+        rebuilt.shutdown();
+    }
+}

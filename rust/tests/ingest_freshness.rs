@@ -1,0 +1,222 @@
+//! Freshness soak (docs/INGEST.md): a cached coordinator under a live
+//! observe stream with concurrent readers must stay byte-identical to
+//! its cache-off twin, keep versions monotone, make every accepted
+//! observation visible within the configured SLA, and shut down with
+//! exact ingest-counter accounting.
+//!
+//! Determinism note: the only catalogue mutations here are the ingest
+//! thread's own fold-in upserts. Fold results depend solely on the
+//! observation prefix processed so far (each absorb + drain is a pure
+//! function of ingest state), so two coordinators fed the identical
+//! stream converge to bit-identical catalogues regardless of thread
+//! timing — which is what lets the twins be compared at all.
+
+use geomap::configx::{Backend, CacheMode, ServeConfig};
+use geomap::coordinator::{Coordinator, Response};
+use geomap::runtime::cpu_scorer_factory;
+use geomap::testing::fix;
+use std::sync::atomic::Ordering;
+use std::time::{Duration, Instant};
+
+const BASE_ITEMS: usize = 120;
+const K: usize = 8;
+const STEPS: usize = 200;
+const RATERS: u32 = 10;
+
+/// Everything in a `Response` except latency, scores at bit precision.
+fn key(r: &Response) -> (Vec<(u32, u32)>, usize, usize, u64) {
+    (
+        r.results.iter().map(|s| (s.id, s.score.to_bits())).collect(),
+        r.candidates,
+        r.total_items,
+        r.version,
+    )
+}
+
+fn soak_cfg() -> ServeConfig {
+    let mut cfg = fix::serve_cfg(K, 2, Backend::Geomap, 0.0);
+    // a queue deep enough that the synchronous test stream never sheds:
+    // the accounting checks below demand exactness, not rough counts
+    cfg.ingest.queue = 4096;
+    cfg
+}
+
+/// The deterministic observe stream, sent identically to both twins.
+/// Returns (observes sent, new items created).
+fn stream(twins: &[&Coordinator]) -> (u64, u64) {
+    let mut next_new = BASE_ITEMS as u32;
+    let mut sent = 0u64;
+    let mut created = 0u64;
+    for step in 0..STEPS {
+        let user = (step as u32) % RATERS;
+        let item = (step * 7 % BASE_ITEMS) as u32;
+        let rating = 0.5 + (step % 9) as f32 * 0.5;
+        for c in twins {
+            assert!(
+                c.observe(user, item, rating).unwrap(),
+                "deep queue must never shed (step {step})"
+            );
+        }
+        sent += 1;
+        if step % 5 == 4 {
+            // the same user, having just rated a live item, rates a
+            // brand-new contiguous id: an online item fold-in
+            for c in twins {
+                assert!(c.observe(user, next_new, 1.5).unwrap());
+            }
+            sent += 1;
+            created += 1;
+            next_new += 1;
+        }
+    }
+    (sent, created)
+}
+
+/// Wait until a coordinator has folded `folds` items and retains no
+/// pending observations (ingest fully drained).
+fn quiesce(c: &Coordinator, folds: u64, label: &str) {
+    let deadline = Instant::now() + Duration::from_secs(20);
+    loop {
+        let done = c.metrics().ingest_item_folds.load(Ordering::Acquire)
+            >= folds
+            && c.ingest_pending() == 0;
+        if done {
+            return;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "{label}: ingest never drained ({} folds, {} pending)",
+            c.metrics().ingest_item_folds.load(Ordering::Acquire),
+            c.ingest_pending()
+        );
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+#[test]
+fn cached_twin_stays_byte_identical_under_ingest_churn() {
+    let cfg = soak_cfg();
+    let off = Coordinator::start(
+        cfg.clone(),
+        fix::items(BASE_ITEMS, K, 77),
+        cpu_scorer_factory(),
+    )
+    .unwrap();
+    let mut cfg_on = cfg;
+    cfg_on.cache = CacheMode::Lru { entries: 64 };
+    let on = Coordinator::start(
+        cfg_on,
+        fix::items(BASE_ITEMS, K, 77),
+        cpu_scorer_factory(),
+    )
+    .unwrap();
+
+    let probes = fix::user_vecs(8, K, 78);
+    let mut sent_created = (0u64, 0u64);
+    // readers hammer both twins while the writer streams: they assert
+    // per-coordinator version monotonicity (epoch bumps from fold-in
+    // upserts must never be observed out of order) and well-formedness,
+    // not cross-twin equality — the twins drain on their own clocks
+    std::thread::scope(|scope| {
+        for reader in 0..2usize {
+            let coords = [&on, &off];
+            let probes = &probes;
+            scope.spawn(move || {
+                let coord = coords[reader % 2];
+                let mut last_version = 0u64;
+                for round in 0..60 {
+                    for u in probes {
+                        let r = coord.submit(u.clone(), 5).unwrap();
+                        assert!(
+                            r.version >= last_version,
+                            "reader {reader}: version went backwards \
+                             ({} < {last_version}) in round {round}",
+                            r.version
+                        );
+                        last_version = r.version;
+                        assert!(r.results.len() <= 5);
+                    }
+                }
+            });
+        }
+        sent_created = stream(&[&on, &off]);
+    });
+    let (sent, created) = sent_created;
+    quiesce(&on, created, "cache-on");
+    quiesce(&off, created, "cache-off");
+
+    // both twins grew the same catalogue and answer byte-identically —
+    // a stale cache entry surviving a fold-in epoch bump would break this
+    let expected = BASE_ITEMS + created as usize;
+    assert_eq!(on.total_items(), expected);
+    assert_eq!(off.total_items(), expected);
+    for (i, u) in probes.iter().enumerate() {
+        // twice on the cached twin: fill, then serve from cache
+        let first = on.submit(u.clone(), 5).unwrap();
+        let cached = on.submit(u.clone(), 5).unwrap();
+        let fresh = off.submit(u.clone(), 5).unwrap();
+        assert_eq!(key(&first), key(&fresh), "probe {i}");
+        assert_eq!(key(&cached), key(&fresh), "probe {i} (cached)");
+    }
+
+    // freshness: every accepted observation that contributed to a fold
+    // became visible within the configured SLA, and the counters account
+    // for the whole stream exactly
+    for (label, c) in [("cache-on", &on), ("cache-off", &off)] {
+        let m = c.metrics();
+        assert_eq!(
+            m.ingest_observed.load(Ordering::Relaxed),
+            sent,
+            "{label}: every offered observation was accepted"
+        );
+        assert_eq!(m.ingest_shed.load(Ordering::Relaxed), 0, "{label}");
+        assert_eq!(
+            m.ingest_item_folds.load(Ordering::Acquire),
+            created,
+            "{label}: one fold per created item"
+        );
+        assert_eq!(m.ingest_errors.load(Ordering::Relaxed), 0, "{label}");
+        assert_eq!(
+            m.ingest_visibility_us.count(),
+            created,
+            "{label}: one visibility sample per contributing observation"
+        );
+        assert_eq!(
+            m.ingest_sla_breach.load(Ordering::Relaxed),
+            0,
+            "{label}: all folds inside the {}us SLA",
+            soak_cfg().ingest.sla_us
+        );
+        assert_eq!(c.ingest_pending(), 0, "{label}");
+        // the busiest raters see ~40 observations, well under the
+        // 64-entry history cap: nothing may have been evicted
+        assert_eq!(m.ingest_evicted.load(Ordering::Relaxed), 0, "{label}");
+        assert!(
+            m.ingest_user_folds.load(Ordering::Relaxed) > 0,
+            "{label}: the live-item stream must fold user factors"
+        );
+    }
+
+    // a cached response from before a fold must never be served after
+    // it: force the sequence deterministically
+    let probe = fix::user(K, 79);
+    let before = on.submit(probe.clone(), 5).unwrap();
+    assert!(on.observe(3, expected as u32, 2.0).unwrap());
+    quiesce(&on, created + 1, "cache-on (late fold)");
+    assert!(off.observe(3, expected as u32, 2.0).unwrap());
+    quiesce(&off, created + 1, "cache-off (late fold)");
+    let after_on = on.submit(probe.clone(), 5).unwrap();
+    let after_off = off.submit(probe, 5).unwrap();
+    assert_eq!(after_on.total_items, expected + 1);
+    assert_eq!(
+        key(&after_on),
+        key(&after_off),
+        "the post-fold response must reflect the fold, not the cache"
+    );
+    assert!(after_on.version > before.version, "fold bumps the version");
+
+    // clean shutdown: stop_threads stops ingest first; nothing left to
+    // drain, so the counters above are final
+    on.shutdown();
+    off.shutdown();
+}

@@ -127,7 +127,9 @@ fn learned_factors_pipeline_end_to_end() {
     };
     let mut rng = Rng::seeded(11);
     let ratings = synth.generate(&mut rng);
-    let model = AlsTrainer { k: 8, ..Default::default() }.train(&ratings, 5, 11);
+    let model = AlsTrainer { k: 8, ..Default::default() }
+        .train(&ratings, 5, 11)
+        .unwrap();
 
     let mapper = Mapper::from_config(SchemaConfig::TernaryParseTree, 8, 1.2);
     let retriever = Retriever::build(mapper, model.item_factors.clone()).unwrap();
